@@ -1,0 +1,22 @@
+//! Sweep generation temperature vs achieved compression ratio (ablation).
+use llmzip::compress::{Compressor, LlmCompressor, LlmCompressorConfig};
+use llmzip::lm::ExecutorKind;
+use llmzip::runtime::ArtifactStore;
+use llmzip::sampling::DatasetFactory;
+use llmzip::textgen::Domain;
+
+fn main() -> llmzip::Result<()> {
+    let store = ArtifactStore::open(None)?;
+    let factory = DatasetFactory::from_store(&store, "medium")?;
+    let comp = LlmCompressor::open(&store, LlmCompressorConfig {
+        model: "medium".into(), chunk_tokens: 256, stream_bytes: 4096,
+        executor: ExecutorKind::PjrtForward })?;
+    println!("{:<6} {:>8} {:>12}", "TEMP", "RATIO", "bits/byte");
+    for temp in [1.0, 0.8, 0.6, 0.5, 0.4, 0.3] {
+        let data = factory.generate_dataset(Domain::Wiki, 16*1024, temp, 11)?;
+        let z = comp.compress(&data)?;
+        let r = data.len() as f64 / z.len() as f64;
+        println!("{:<6} {:>7.2}x {:>11.3}", temp, r, 8.0 / r);
+    }
+    Ok(())
+}

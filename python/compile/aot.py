@@ -1,0 +1,172 @@
+"""AOT pipeline: train the model family (if weights are missing) and lower
+the serving functions to HLO *text* artifacts for the rust runtime.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs:
+  artifacts/weights/<model>.lmz
+  artifacts/hlo/<model>__forward_b{B}_s{S}.hlo.txt
+  artifacts/hlo/<model>__step_b{B}_s{S}.hlo.txt
+  artifacts/hlo/<model>__generate_b{B}_p{P}_n{N}.hlo.txt
+  artifacts/hlo/medium__forward_pallas_b1_s{S}.hlo.txt   (kernel parity)
+  artifacts/manifest.txt
+
+Usage: python -m compile.aot [--corpus DIR] [--out DIR] [--models a,b,...]
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, train, weights
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_forward(cfg, batch, seq, impl):
+    spec = model.param_spec(cfg)
+
+    def fn(*args):
+        flat, tokens = args[:-1], args[-1]
+        params = model.unflatten_params(cfg, flat)
+        return (model.forward_logits(cfg, params, tokens, impl=impl),)
+
+    shapes = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in spec]
+    shapes.append(jax.ShapeDtypeStruct((batch, seq), jnp.int32))
+    return jax.jit(fn).lower(*shapes)
+
+
+def lower_step(cfg, batch, seq):
+    spec = model.param_spec(cfg)
+
+    def fn(*args):
+        flat, kv, tok, pos = args[:-3], args[-3], args[-2], args[-1]
+        params = model.unflatten_params(cfg, flat)
+        logits, kv2 = model.decode_step(cfg, params, kv, tok, pos)
+        # Single flat output: the PJRT wrapper in the published xla crate
+        # cannot fetch multi-element tuple buffers (CHECK shape.IsArray()).
+        # Layout: [logits.flatten() | kv2.flatten()].
+        return (jnp.concatenate([logits.reshape(-1), kv2.reshape(-1)]),)
+
+    shapes = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in spec]
+    shapes.append(jax.ShapeDtypeStruct((cfg.n_layers, 2, batch, seq, cfg.d_model), jnp.float32))
+    shapes.append(jax.ShapeDtypeStruct((batch,), jnp.int32))
+    shapes.append(jax.ShapeDtypeStruct((), jnp.int32))
+    return jax.jit(fn).lower(*shapes)
+
+
+def lower_generate(cfg, batch, prompt_len, n_tokens):
+    spec = model.param_spec(cfg)
+
+    def fn(*args):
+        flat, prompt, seed, temp = args[:-3], args[-3], args[-2], args[-1]
+        params = model.unflatten_params(cfg, flat)
+        return (model.generate(cfg, params, prompt, seed, temp, n_tokens),)
+
+    shapes = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in spec]
+    shapes.append(jax.ShapeDtypeStruct((batch, prompt_len), jnp.int32))
+    shapes.append(jax.ShapeDtypeStruct((), jnp.int32))
+    shapes.append(jax.ShapeDtypeStruct((), jnp.float32))
+    return jax.jit(fn).lower(*shapes)
+
+
+def train_all(corpus_dir: str, weights_dir: str, only: set[str] | None):
+    """Train bases first, then fine-tunes (which init from their base)."""
+    os.makedirs(weights_dir, exist_ok=True)
+    order = sorted(configs.MODELS.values(), key=lambda c: (c.base_of is not None, c.name))
+    trained = {}
+    for cfg in order:
+        if only and cfg.name not in only:
+            continue
+        path = os.path.join(weights_dir, f"{cfg.name}.lmz")
+        if os.path.exists(path):
+            print(f"[aot] weights exist for {cfg.name}, skipping train")
+            continue
+        if cfg.base_of is None:
+            print(f"[aot] training {cfg.name} ({configs.param_count(cfg)} params, "
+                  f"{cfg.train_steps} steps)")
+            params, _ = train.train(cfg, corpus_dir, cfg.train_steps, seed=0)
+        else:
+            base_path = os.path.join(weights_dir, f"{cfg.base_of}.lmz")
+            base = {k: jnp.asarray(v) for k, v in weights.load(base_path).items()}
+            print(f"[aot] fine-tuning {cfg.name} from {cfg.base_of} "
+                  f"({cfg.finetune_steps} steps, corpus={cfg.corpus})")
+            params, _ = train.train(cfg, corpus_dir, cfg.finetune_steps, init=base, seed=1)
+        weights.save(path, cfg, params)
+        trained[cfg.name] = params
+        print(f"[aot] saved {path}")
+    return trained
+
+
+def emit_hlo(out_dir: str, only: set[str] | None):
+    hlo_dir = os.path.join(out_dir, "hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    manifest = []
+    s = configs.MAX_CONTEXT
+    fb, sb = configs.FORWARD_BATCH, configs.STEP_BATCH
+    gb, gp, gn = configs.GEN_BATCH, configs.GEN_PROMPT, configs.GEN_TOKENS
+    for name, cfg in sorted(configs.MODELS.items()):
+        if only and name not in only:
+            continue
+        jobs = [
+            (f"{name}__forward_b{fb}_s{s}", lambda: lower_forward(cfg, fb, s, "jnp"),
+             f"forward {name} batch={fb} seq={s} impl=jnp"),
+            (f"{name}__step_b{sb}_s{s}", lambda: lower_step(cfg, sb, s),
+             f"step {name} batch={sb} seq={s}"),
+            (f"{name}__generate_b{gb}_p{gp}_n{gn}", lambda: lower_generate(cfg, gb, gp, gn),
+             f"generate {name} batch={gb} prompt={gp} tokens={gn}"),
+        ]
+        if name == "medium":
+            jobs.append((f"{name}__forward_pallas_b1_s{s}",
+                         lambda: lower_forward(cfg, 1, s, "pallas"),
+                         f"forward_pallas {name} batch=1 seq={s} impl=pallas"))
+        for stem, make, desc in jobs:
+            path = os.path.join(hlo_dir, f"{stem}.hlo.txt")
+            if not os.path.exists(path):
+                print(f"[aot] lowering {stem}")
+                text = to_hlo_text(make())
+                with open(path, "w") as f:
+                    f.write(text)
+            manifest.append(f"{stem}.hlo.txt {desc}")
+    # Param-order manifest so the rust loader can sanity-check shapes.
+    for name, cfg in sorted(configs.MODELS.items()):
+        if only and name not in only:
+            continue
+        for pname, shape in model.param_spec(cfg):
+            dims = "x".join(str(d) for d in shape)
+            manifest.append(f"param {name} {pname} {dims}")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"[aot] manifest with {len(manifest)} entries")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--corpus", default="../corpus")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="")
+    args = ap.parse_args()
+    only = set(args.models.split(",")) if args.models else None
+    if not os.path.isdir(args.corpus):
+        sys.exit(f"corpus dir {args.corpus} missing — run `make corpus` first")
+    train_all(args.corpus, os.path.join(args.out, "weights"), only)
+    emit_hlo(args.out, only)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

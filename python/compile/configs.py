@@ -1,0 +1,74 @@
+"""Model registry — the family standing in for the paper's 14 LLMs
+(DESIGN.md §6). MUST stay in lockstep with `rust/src/lm/registry.rs`.
+
+All models share: byte vocab (272), ALiBi positions (no positional
+parameters -> context-length agnostic), pre-RMSNorm blocks, GELU MLP with
+4x expansion, weight-tied output head. Sizes are scaled for the single-core
+CPU testbed; the *ratios* between tiers mirror the paper's 1B..14B ladder.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    # training recipe
+    base_of: str | None = None     # fine-tuned from this base model
+    corpus: str = "mixed"          # mixed | qa_mix | math | code
+    train_steps: int = 2600
+    finetune_steps: int = 800
+    simulates: str = ""
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+
+# Max context length (chunk size ceiling). Matches rust lm::MAX_CONTEXT.
+MAX_CONTEXT = 256
+# Training window (ALiBi extrapolates to MAX_CONTEXT at inference).
+TRAIN_CONTEXT = 128
+
+MODELS: dict[str, ModelConfig] = {
+    m.name: m
+    for m in [
+        ModelConfig("nano", 32, 1, 2, simulates="OpenELM-1.1B / AMD-OLMo-1B tier"),
+        ModelConfig("tiny", 48, 2, 2, simulates="Llama-3.2-1B"),
+        ModelConfig("tiny-instruct", 48, 2, 2, base_of="tiny", corpus="qa_mix",
+                    simulates="Llama-3.2-1B-Instruct"),
+        ModelConfig("small", 64, 2, 4, simulates="Llama-3.2-3B"),
+        ModelConfig("small-instruct", 64, 2, 4, base_of="small", corpus="qa_mix",
+                    simulates="Llama-3.2-3B-Instruct"),
+        ModelConfig("small-math", 64, 2, 4, base_of="small", corpus="math",
+                    simulates="Qwen2.5-Math-1.5B / Rho-Math-1B"),
+        ModelConfig("small-code", 64, 2, 4, base_of="small", corpus="code",
+                    simulates="Qwen2.5-Coder-1.5B / DeepSeek-Coder-1.3B"),
+        ModelConfig("medium", 96, 3, 4, simulates="Llama-3.1-8B (default)"),
+        ModelConfig("teacher", 112, 3, 4, simulates="the data-generating LLMs (GPT-3.5/4, Mixtral)"),
+        ModelConfig("medium-instruct", 96, 3, 4, base_of="medium", corpus="qa_mix",
+                    simulates="Llama-3.1-8B-Instruct"),
+        ModelConfig("large", 128, 4, 4, simulates="Qwen2.5-14B(-Instruct-1M)"),
+    ]
+}
+
+# Lowered artifact batch shapes (rust pads lanes to these).
+FORWARD_BATCH = 8
+STEP_BATCH = 32
+GEN_BATCH = 16
+GEN_PROMPT = 16
+GEN_TOKENS = 240  # generated per call (prompt + generated <= MAX_CONTEXT)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    d = cfg.d_model
+    per_block = 4 * d * d + 2 * d * (4 * d) + 2 * d  # attn + mlp + 2 norms
+    return 272 * d + cfg.n_layers * per_block + d  # embed + blocks + final norm

@@ -1,0 +1,46 @@
+"""L2 perf analysis: static statistics of the lowered HLO artifacts.
+
+Reports per artifact: instruction count, fusion count, dot/convolution
+count, transfer-sized parameters and output bytes — the knobs that matter
+for a CPU/TPU serving path (EXPERIMENTS.md §Perf L2).
+
+Usage: python -m compile.hlo_stats [--hlo ../artifacts/hlo]
+"""
+
+import argparse
+import os
+import re
+
+
+def stats(path: str) -> dict:
+    text = open(path).read()
+    n_instr = len(re.findall(r"^\s+\S+ = ", text, re.M))
+    n_fusion = len(re.findall(r"fusion\(", text))
+    n_dot = len(re.findall(r"= f32\[[^\]]*\] dot\(", text)) + len(
+        re.findall(r"\bdot\(", text))
+    n_while = len(re.findall(r"\bwhile\(", text))
+    n_params = len(re.findall(r"^\s+\S+ = [^=]*parameter\(", text, re.M))
+    return {
+        "instructions": n_instr,
+        "fusions": n_fusion,
+        "dots": n_dot // 2,  # pattern overlap correction
+        "whiles": n_while,
+        "parameters": n_params,
+        "kib": len(text) // 1024,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hlo", default="../artifacts/hlo")
+    args = ap.parse_args()
+    files = sorted(f for f in os.listdir(args.hlo) if f.endswith(".hlo.txt"))
+    print(f"{'ARTIFACT':<44} {'instr':>6} {'fus':>5} {'dot':>5} {'while':>6} {'KiB':>6}")
+    for f in files:
+        s = stats(os.path.join(args.hlo, f))
+        print(f"{f:<44} {s['instructions']:>6} {s['fusions']:>5} {s['dots']:>5} "
+              f"{s['whiles']:>6} {s['kib']:>6}")
+
+
+if __name__ == "__main__":
+    main()

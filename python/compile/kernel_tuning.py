@@ -1,0 +1,37 @@
+"""L1 perf analysis: static VMEM footprint and MXU utilization across
+candidate attention block shapes (interpret mode gives CPU wallclock only,
+which is not a TPU proxy — DESIGN.md §8 — so the tuning signal is
+structural).
+
+Usage: python -m compile.kernel_tuning
+"""
+
+from .configs import MAX_CONTEXT, MODELS
+from .kernels.attention import mxu_utilization, vmem_bytes
+
+
+def main() -> None:
+    print("Attention block tuning (S = 256)")
+    print(f"{'CONFIG':<22} {'dh':>4} {'VMEM KiB':>9} {'MXU util':>9} {'passes/q-block':>15}")
+    for name in ["small", "medium", "large"]:
+        cfg = MODELS[name]
+        dh = cfg.d_head
+        for bq, bk in [(32, 32), (64, 64), (128, 64), (64, 128), (128, 128), (256, 64)]:
+            if MAX_CONTEXT % bq or MAX_CONTEXT % bk:
+                continue
+            v = vmem_bytes(bq, bk, dh, MAX_CONTEXT)
+            u = mxu_utilization(bq, bk, dh)
+            passes = MAX_CONTEXT // bk
+            print(f"{name+f' bq={bq} bk={bk}':<22} {dh:>4} {v/1024:>9.1f} {u:>9.3f} {passes:>15}")
+    print(
+        "\nChosen default: bq=bk=128 (perf pass L1-1; was 64x64) — the"
+        "\nQK^T tile fills the MXU's 128x128 systolic face, doubling the"
+        "\nestimated utilization at every model size, while the per-program"
+        "\nVMEM footprint stays ~160 KiB, far below the 16 MiB/core budget."
+        "\nUtilization remains bounded by dh (the contraction dim underfills"
+        "\nthe array for dh <= 32) — the roofline for these head sizes."
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""L1 Pallas kernel: causal flash attention with ALiBi.
+
+Hardware adaptation (DESIGN.md §7): the paper's workloads run HF
+transformers on CUDA; the TPU-shaped rethink tiles Q into `(BLOCK_Q, Dh)`
+VMEM blocks and streams K/V in `(BLOCK_K, Dh)` blocks with the online
+softmax (flash) recurrence, so the SxS score matrix never materializes.
+The matmuls are `(BLOCK_Q, Dh) x (Dh, BLOCK_K)` — MXU-systolic-array
+shaped. Grid = (batch*heads, S / BLOCK_Q).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; on a real TPU the same kernel lowers natively (compile-only
+target). VMEM/MXU estimates: see `vmem_bytes` / `mxu_utilization` below and
+EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Perf pass L1-1 (EXPERIMENTS.md §Perf): 128x128 blocks double the
+# estimated MXU utilization vs 64x64 at identical arithmetic, and the
+# per-program VMEM footprint stays ~160 KiB << 16 MiB/core.
+BLOCK_Q = 128
+BLOCK_K = 128
+
+NEG_INF = float("-inf")
+
+
+def _attn_kernel(slope_ref, q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
+                 seq_len: int):
+    """One (batch*head, q-block) program: online-softmax over K blocks."""
+    qb = pl.program_id(1)
+    q = q_ref[...]  # [block_q, dh]
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=jnp.float32))
+    slope = slope_ref[0]
+
+    q_pos = qb * block_q + jax.lax.iota(jnp.int32, block_q)  # [block_q]
+
+    m_i = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)   # running max
+    l_i = jnp.zeros((block_q,), dtype=jnp.float32)           # running denom
+    acc = jnp.zeros((block_q, dh), dtype=jnp.float32)        # running numer
+
+    num_kb = seq_len // block_k
+
+    def body(kb, carry):
+        m_i, l_i, acc = carry
+        k = pl.load(k_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        k_pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        s = q @ k.T * scale  # [block_q, block_k] — the MXU matmul
+        dist = q_pos[:, None] - k_pos[None, :]
+        s = s - slope * dist.astype(jnp.float32)
+        causal = k_pos[None, :] <= q_pos[:, None]
+        s = jnp.where(causal, s, NEG_INF)
+        # online softmax update
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        # alpha rescales the old accumulator; exp(-inf - -inf) guarded to 0
+        alpha = jnp.where(m_i == NEG_INF, 0.0, jnp.exp(m_i - m_new))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(causal, p, 0.0)
+        l_new = alpha * l_i + jnp.sum(p, axis=-1)
+        acc_new = alpha[:, None] * acc + p @ v
+        return m_new, l_new, acc_new
+
+    # Only K blocks overlapping positions <= this Q block's last row are
+    # ever unmasked: ceil((qb+1)*block_q / block_k) of them.
+    kb_needed = ((qb + 1) * block_q + block_k - 1) // block_k
+    m_i, l_i, acc = jax.lax.fori_loop(0, jnp.minimum(kb_needed, num_kb), body,
+                                      (m_i, l_i, acc))
+    o_ref[...] = acc / l_i[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def attention(q, k, v, slopes, *, block_q: int = BLOCK_Q, block_k: int = BLOCK_K):
+    """Pallas causal+ALiBi attention. q,k,v: [B, H, S, Dh]; slopes: [H]."""
+    b, h, s, dh = q.shape
+    # Fit block sizes to the sequence (tests sweep S values the defaults
+    # don't divide): largest divisor of S not exceeding the requested block.
+    def fit(block: int) -> int:
+        b = min(block, s)
+        while s % b:
+            b -= 1
+        return b
+
+    block_q = fit(block_q)
+    block_k = fit(block_k)
+    qf = q.reshape(b * h, s, dh)
+    kf = k.reshape(b * h, s, dh)
+    vf = v.reshape(b * h, s, dh)
+    slopes_bh = jnp.tile(slopes, b)  # [B*H]
+
+    kernel = functools.partial(_attn_kernel, block_q=block_q, block_k=block_k, seq_len=s)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, s // block_q),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bh, qb: (bh,)),                    # slope
+            pl.BlockSpec((None, block_q, dh), lambda bh, qb: (bh, qb, 0)),  # q
+            pl.BlockSpec((None, s, dh), lambda bh, qb: (bh, 0, 0)),      # k (streamed)
+            pl.BlockSpec((None, s, dh), lambda bh, qb: (bh, 0, 0)),      # v (streamed)
+        ],
+        out_specs=pl.BlockSpec((None, block_q, dh), lambda bh, qb: (bh, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dh), jnp.float32),
+        interpret=True,
+    )(slopes_bh, qf, kf, vf)
+    return out.reshape(b, h, s, dh)
+
+
+def vmem_bytes(block_q: int, block_k: int, dh: int, seq_len: int) -> int:
+    """Static VMEM footprint estimate for one program (f32)."""
+    q = block_q * dh * 4
+    kv = 2 * seq_len * dh * 4          # K/V panels resident per program
+    acc = block_q * dh * 4 + 2 * block_q * 4
+    scores = block_q * block_k * 4
+    return q + kv + acc + scores
+
+
+def mxu_utilization(block_q: int, block_k: int, dh: int) -> float:
+    """Fraction of a 128x128 MXU pass doing useful MACs for the QK^T tile."""
+    useful = block_q * block_k * dh
+    passes_m = -(-block_q // 128) * -(-block_k // 128) * -(-dh // 128)
+    return useful / (passes_m * 128 * 128 * 128)

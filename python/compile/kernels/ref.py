@@ -1,0 +1,46 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the kernels are tested against (pytest +
+hypothesis sweeps in python/tests/), and the fast lowering path used for
+training and the default rust-served artifacts (DESIGN.md §9: on CPU the
+interpret-mode Pallas HLO is loopy; the jnp path lowers to fused dense ops
+with identical numerics, which the tests enforce).
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+def alibi_slopes(n_heads: int) -> jnp.ndarray:
+    """ALiBi head slopes: 2^(-8i/H) for i in 1..H (Press et al.)."""
+    return jnp.asarray([2.0 ** (-8.0 * (i + 1) / n_heads) for i in range(n_heads)],
+                       dtype=jnp.float32)
+
+
+def attention_ref(q, k, v, slopes):
+    """Causal multi-head attention with ALiBi bias.
+
+    q, k, v: [B, H, S, Dh]; slopes: [H]. Returns [B, H, S, Dh].
+    Masked positions contribute exactly 0 to the softmax (required for the
+    bit-exact prefix-replay decompression property — see compress/llm.rs).
+    """
+    b, h, s, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    # ALiBi: penalize distance, per-head slope.
+    bias = -slopes[None, :, None, None] * (qpos - kpos)[None, None, :, :].astype(q.dtype)
+    causal = (kpos <= qpos)[None, None, :, :]
+    scores = jnp.where(causal, scores + bias, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    w = e / jnp.sum(e, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v)
+
+
+def rmsnorm_ref(x, gain, eps: float = 1e-6):
+    """RMSNorm over the last axis: x * gain / rms(x)."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(ms + eps)) * gain

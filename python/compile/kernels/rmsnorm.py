@@ -1,0 +1,40 @@
+"""L1 Pallas kernel: fused RMSNorm.
+
+Row-blocked over the token axis: each program normalizes a `(BLOCK_N, D)`
+VMEM tile in one pass (square, mean, rsqrt, scale — all fused; no HBM
+round-trip for the mean). interpret=True on CPU, Mosaic on real TPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 64
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...]  # [block_n, d]
+    g = g_ref[...]  # [d]
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = x * (1.0 / jnp.sqrt(ms + eps)) * g[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "eps"))
+def rmsnorm(x, gain, *, block_n: int = BLOCK_N, eps: float = 1e-6):
+    """Fused RMSNorm. x: [N, D] (N % block_n == 0), gain: [D]."""
+    n, d = x.shape
+    assert n % block_n == 0, (n, block_n)
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(x, gain)

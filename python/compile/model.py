@@ -1,0 +1,197 @@
+"""L2: the byte-level decoder-only transformer in JAX.
+
+Architecture (mirrored exactly by `rust/src/lm/model.rs`):
+  * token embedding [V, D]; ALiBi positions (no positional parameters)
+  * n_layers pre-RMSNorm blocks: MHA (causal+ALiBi) then GELU MLP (4x)
+  * final RMSNorm; weight-tied output head (logits = h @ E^T)
+
+Two implementations of the two fused hot-spots, selected by `impl`:
+  * "pallas" — the L1 kernels (`kernels/attention.py`, `kernels/rmsnorm.py`)
+  * "jnp"    — the pure-jnp oracles (`kernels/ref.py`)
+pytest enforces allclose between them; aot.py lowers both variants.
+
+Exported entry points (all lowered to HLO text by aot.py):
+  * forward_logits(params, tokens[B,S]) -> logits[B,S,V]   (compression)
+  * decode_step(params, kv, tok[B], pos) -> (logits[B,V], kv')  (decode)
+  * generate(params, prompt[B,P], seed, temp) -> tokens[B,N]    (datasets)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .kernels import attention as attn_pallas
+from .kernels import ref as kref
+from .kernels import rmsnorm as rms_pallas
+from .vocab import VOCAB_SIZE
+
+
+# ---------------------------------------------------------------------------
+# parameters
+
+def param_spec(cfg: configs.ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list — THE canonical flattening order shared
+    with the rust weights loader (sorted lexicographically by name)."""
+    d, ff = cfg.d_model, cfg.d_ff
+    spec = [("embed", (VOCAB_SIZE, d)), ("final_norm", (d,))]
+    for i in range(cfg.n_layers):
+        p = f"layer{i:02d}."
+        spec += [
+            (p + "attn_norm", (d,)),
+            (p + "mlp_norm", (d,)),
+            (p + "wq", (d, d)),
+            (p + "wk", (d, d)),
+            (p + "wv", (d, d)),
+            (p + "wo", (d, d)),
+            (p + "w1", (d, ff)),
+            (p + "w2", (ff, d)),
+        ]
+    return sorted(spec, key=lambda kv: kv[0])
+
+
+def init_params(cfg: configs.ModelConfig, seed: int = 0) -> dict[str, jnp.ndarray]:
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name == "embed":
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in)
+    return params
+
+
+def flatten_params(cfg: configs.ModelConfig, params: dict) -> list[jnp.ndarray]:
+    return [params[name] for name, _ in param_spec(cfg)]
+
+
+def unflatten_params(cfg: configs.ModelConfig, flat) -> dict:
+    return {name: x for (name, _), x in zip(param_spec(cfg), flat)}
+
+
+# ---------------------------------------------------------------------------
+# forward
+
+def _rmsnorm(x, gain, impl: str):
+    if impl == "pallas":
+        shape = x.shape
+        return rms_pallas.rmsnorm(x.reshape(-1, shape[-1]), gain).reshape(shape)
+    return kref.rmsnorm_ref(x, gain)
+
+
+def _attention(q, k, v, slopes, impl: str):
+    if impl == "pallas":
+        return attn_pallas.attention(q, k, v, slopes)
+    return kref.attention_ref(q, k, v, slopes)
+
+
+def forward_logits(cfg: configs.ModelConfig, params: dict, tokens, impl: str = "jnp"):
+    """tokens: int32 [B, S] -> logits f32 [B, S, V].
+
+    Position t's logits depend ONLY on tokens[:, :t+1] (strict causality in
+    attention; everything else is position-local). The rust decompressor
+    relies on this for bit-exact prefix replay.
+    """
+    b, s = tokens.shape
+    d, h = cfg.d_model, cfg.n_heads
+    dh = cfg.d_head
+    slopes = kref.alibi_slopes(h)
+    x = params["embed"][tokens]  # [B, S, D]
+    for i in range(cfg.n_layers):
+        p = f"layer{i:02d}."
+        hnorm = _rmsnorm(x, params[p + "attn_norm"], impl)
+        q = (hnorm @ params[p + "wq"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        k = (hnorm @ params[p + "wk"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        v = (hnorm @ params[p + "wv"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        o = _attention(q, k, v, slopes, impl)
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+        x = x + o @ params[p + "wo"]
+        hnorm = _rmsnorm(x, params[p + "mlp_norm"], impl)
+        x = x + jax.nn.gelu(hnorm @ params[p + "w1"], approximate=True) @ params[p + "w2"]
+    x = _rmsnorm(x, params["final_norm"], impl)
+    return x @ params["embed"].T  # [B, S, V]
+
+
+# ---------------------------------------------------------------------------
+# incremental decode (KV cache)
+
+def init_kv(cfg: configs.ModelConfig, batch: int, max_len: int):
+    return jnp.zeros((cfg.n_layers, 2, batch, max_len, cfg.d_model), jnp.float32)
+
+
+def decode_step(cfg: configs.ModelConfig, params: dict, kv, tok, pos):
+    """One autoregressive step.
+
+    kv: f32 [L, 2, B, S, D]; tok: int32 [B]; pos: int32 scalar (0-based).
+    Returns (logits [B, V], kv'). Attention reads cache positions <= pos.
+    """
+    l, _, b, s, d = kv.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    slopes = kref.alibi_slopes(h)
+    x = params["embed"][tok]  # [B, D]
+    positions = jnp.arange(s)
+    for i in range(cfg.n_layers):
+        p = f"layer{i:02d}."
+        hn = kref.rmsnorm_ref(x, params[p + "attn_norm"])
+        q = hn @ params[p + "wq"]          # [B, D]
+        knew = hn @ params[p + "wk"]
+        vnew = hn @ params[p + "wv"]
+        kv = kv.at[i, 0, :, pos, :].set(knew)
+        kv = kv.at[i, 1, :, pos, :].set(vnew)
+        kcache = kv[i, 0].reshape(b, s, h, dh)  # [B, S, H, Dh]
+        vcache = kv[i, 1].reshape(b, s, h, dh)
+        qh = q.reshape(b, h, dh)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+        scores = jnp.einsum("bhd,bshd->bhs", qh, kcache) * scale
+        bias = -slopes[None, :, None] * (pos - positions)[None, None, :].astype(jnp.float32)
+        valid = (positions <= pos)[None, None, :]
+        scores = jnp.where(valid, scores + bias, kref.NEG_INF)
+        m = jnp.max(scores, axis=-1, keepdims=True)
+        e = jnp.exp(scores - m)
+        w = e / jnp.sum(e, axis=-1, keepdims=True)
+        o = jnp.einsum("bhs,bshd->bhd", w, vcache).reshape(b, d)
+        x = x + o @ params[p + "wo"]
+        hn = kref.rmsnorm_ref(x, params[p + "mlp_norm"])
+        x = x + jax.nn.gelu(hn @ params[p + "w1"], approximate=True) @ params[p + "w2"]
+    x = kref.rmsnorm_ref(x, params["final_norm"])
+    return x @ params["embed"].T, kv
+
+
+# ---------------------------------------------------------------------------
+# in-graph generation (dataset factory)
+
+def generate(cfg: configs.ModelConfig, params: dict, prompt, seed, temp,
+             n_tokens: int):
+    """Sample `n_tokens` continuations for each prompt row, fully in-graph.
+
+    prompt: int32 [B, P]; seed: int32 scalar; temp: f32 scalar.
+    Returns int32 [B, n_tokens]. Sampling = softmax(logits / temp) via
+    Gumbel-max; only byte tokens (0..255) are sampled (specials masked).
+    """
+    b, p = prompt.shape
+    s = p + n_tokens
+    kv = init_kv(cfg, b, s)
+    key = jax.random.PRNGKey(seed)
+
+    byte_mask = jnp.where(jnp.arange(VOCAB_SIZE) < 256, 0.0, kref.NEG_INF)
+
+    def step(carry, t):
+        kv, last_tok = carry
+        # During the prompt phase feed the prompt token, else the sample.
+        tok = jnp.where(t < p, prompt[:, jnp.minimum(t, p - 1)], last_tok)
+        logits, kv = decode_step(cfg, params, kv, tok, t)
+        g_key = jax.random.fold_in(key, t)
+        gumbel = jax.random.gumbel(g_key, (b, VOCAB_SIZE), jnp.float32)
+        scaled = logits / jnp.maximum(temp, 1e-4) + byte_mask
+        sample = jnp.argmax(scaled + gumbel, axis=-1).astype(jnp.int32)
+        return (kv, sample), sample
+
+    (_, _), samples = jax.lax.scan(step, (kv, prompt[:, 0]), jnp.arange(s))
+    # samples[t] is the token sampled AFTER seeing position t; the generated
+    # stream is samples[p-1 : s-1] (continuations of the prompt).
+    return samples.transpose(1, 0)[:, p - 1 : s - 1]

@@ -1,0 +1,121 @@
+"""Build-time training of the LM family on the procedural corpus.
+
+Runs ONCE inside `make artifacts` (never on the request path). Hand-rolled
+Adam (no optax in this environment), deterministic batching from a seeded
+numpy generator, jnp kernel implementation for speed (pytest separately
+enforces pallas == jnp numerics).
+"""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import configs, model
+from .vocab import BOS, domain_tag
+
+BATCH = 16
+TAG_PROB = 0.5  # fraction of sequences that carry a domain-tag prefix
+
+# Corpora per recipe (see configs.ModelConfig.corpus).
+RECIPE_FILES = {
+    "mixed": ["wiki", "article", "code", "math", "clinical", "web", "science", "novel"],
+    # Instruction tuning: QA pairs plus the two QA-structured domains
+    # (paper §5.7.1: instruct models gain on question-answer data).
+    "qa_mix": ["qa", "math", "science"],
+    "math": ["math"],
+    "code": ["code"],
+}
+
+
+def load_corpus(corpus_dir: str, recipe: str) -> dict[str, np.ndarray]:
+    out = {}
+    for name in RECIPE_FILES[recipe]:
+        path = os.path.join(corpus_dir, f"{name}.txt")
+        with open(path, "rb") as f:
+            out[name] = np.frombuffer(f.read(), dtype=np.uint8)
+    return out
+
+
+def make_batch(rng: np.random.Generator, corpus: dict[str, np.ndarray], t: int):
+    """Sample a batch of (input, target) windows of length `t` tokens."""
+    names = list(corpus)
+    inputs = np.zeros((BATCH, t), dtype=np.int32)
+    targets = np.zeros((BATCH, t), dtype=np.int32)
+    for i in range(BATCH):
+        name = names[rng.integers(len(names))]
+        data = corpus[name]
+        use_tag = name in ("wiki", "article", "code", "math", "clinical", "web",
+                           "science", "novel") and rng.random() < TAG_PROB
+        n_text = t - (1 if use_tag else 0)  # sequence = [BOS, (TAG), bytes...]
+        start = int(rng.integers(0, len(data) - n_text - 1))
+        window = data[start : start + n_text + 1].astype(np.int32)
+        seq = [BOS] + ([domain_tag(name)] if use_tag else []) + list(window)
+        seq = np.asarray(seq[: t + 1], dtype=np.int32)
+        inputs[i] = seq[:-1]
+        targets[i] = seq[1:]
+    return inputs, targets
+
+
+def loss_fn(cfg, params, inputs, targets):
+    logits = model.forward_logits(cfg, params, inputs, impl="jnp")
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.98, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+    params = jax.tree.map(
+        lambda p, m, v: p - lr * (m * mhat_scale) / (jnp.sqrt(v * vhat_scale) + eps),
+        params, m, v)
+    return params, {"m": m, "v": v, "t": t}
+
+
+def lr_schedule(step: int, total: int, peak: float = 3e-3, warmup: int = 30) -> float:
+    if step < warmup:
+        return peak * (step + 1) / warmup
+    frac = (step - warmup) / max(1, total - warmup)
+    return float(peak * (0.1 + 0.9 * 0.5 * (1 + np.cos(np.pi * frac))))
+
+
+def train(cfg: configs.ModelConfig, corpus_dir: str, steps: int,
+          init: dict | None = None, seed: int = 0, log_every: int = 100):
+    """Train (or fine-tune, when `init` given) and return params."""
+    corpus = load_corpus(corpus_dir, cfg.corpus)
+    rng = np.random.default_rng(seed + hash(cfg.name) % (1 << 16))
+    params = init if init is not None else model.init_params(cfg, seed)
+    opt = adam_init(params)
+    t = configs.TRAIN_CONTEXT
+
+    @jax.jit
+    def step_fn(params, opt, inputs, targets, lr):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, inputs, targets))(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    t0 = time.time()
+    losses = []
+    for step in range(steps):
+        inputs, targets = make_batch(rng, corpus, t)
+        lr = lr_schedule(step, steps)
+        params, opt, loss = step_fn(params, opt, jnp.asarray(inputs), jnp.asarray(targets),
+                                    jnp.float32(lr))
+        losses.append(float(loss))
+        if step % log_every == 0 or step == steps - 1:
+            recent = float(np.mean(losses[-20:]))
+            bpb = recent / np.log(2)
+            print(f"  [{cfg.name}] step {step:4d}/{steps} loss {recent:.3f} "
+                  f"({bpb:.2f} bits/byte) {time.time()-t0:.0f}s", flush=True)
+    return params, losses

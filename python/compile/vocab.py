@@ -1,0 +1,26 @@
+"""Byte-level LM vocabulary — MUST stay in lockstep with
+`rust/src/tokenizer/vocab.rs` (the Rust side owns the same constants).
+
+Layout:
+  0..=255    raw bytes
+  256        PAD (fills fixed-shape batches; never coded)
+  257        BOS (chunk start)
+  258        EOS (generation stop)
+  259..=271  domain tags (generation conditioning)
+"""
+
+VOCAB_SIZE = 272
+PAD = 256
+BOS = 257
+EOS = 258
+DOMAIN_TAG_BASE = 259
+NUM_DOMAIN_TAGS = 13
+
+# Domain order matches rust `textgen::Domain::index()`.
+DOMAINS = [
+    "wiki", "article", "code", "math", "clinical", "web", "science", "novel", "tpch",
+]
+
+
+def domain_tag(domain: str) -> int:
+    return DOMAIN_TAG_BASE + DOMAINS.index(domain)

@@ -1,0 +1,52 @@
+"""Weights serialization (.lmz) — mirrored by `rust/src/runtime/weights.rs`.
+
+Layout (little-endian):
+  magic   u32  "LMZW" (0x575A4D4C)
+  version u16
+  count   u16  number of tensors
+  per tensor, in `model.param_spec` order (sorted by name):
+    name_len u8, name bytes (ascii)
+    ndim     u8, dims u32 x ndim
+    data     f32 x prod(dims)
+"""
+
+import struct
+
+import numpy as np
+
+from . import configs, model
+
+MAGIC = 0x575A4D4C
+VERSION = 1
+
+
+def save(path: str, cfg: configs.ModelConfig, params: dict) -> None:
+    spec = model.param_spec(cfg)
+    with open(path, "wb") as f:
+        f.write(struct.pack("<IHH", MAGIC, VERSION, len(spec)))
+        for name, shape in spec:
+            arr = np.asarray(params[name], dtype=np.float32)
+            assert arr.shape == shape, (name, arr.shape, shape)
+            nb = name.encode("ascii")
+            f.write(struct.pack("<B", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", arr.ndim))
+            for dim in arr.shape:
+                f.write(struct.pack("<I", dim))
+            f.write(arr.tobytes(order="C"))
+
+
+def load(path: str) -> dict[str, np.ndarray]:
+    params = {}
+    with open(path, "rb") as f:
+        magic, version, count = struct.unpack("<IHH", f.read(8))
+        assert magic == MAGIC and version == VERSION, (magic, version)
+        for _ in range(count):
+            (nlen,) = struct.unpack("<B", f.read(1))
+            name = f.read(nlen).decode("ascii")
+            (ndim,) = struct.unpack("<B", f.read(1))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(4 * n), dtype="<f4").reshape(dims)
+            params[name] = data.copy()
+    return params

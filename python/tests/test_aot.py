@@ -1,0 +1,60 @@
+"""AOT lowering tests: the HLO text artifacts parse, mention the right
+shapes, and the vocab constants stay in lockstep with the rust side."""
+
+import os
+import re
+
+import pytest
+
+from compile import aot, configs, vocab
+
+
+class TestVocabLockstep:
+    def test_constants_match_rust(self):
+        rust = open(os.path.join(os.path.dirname(__file__), "..", "..",
+                                 "rust", "src", "tokenizer", "vocab.rs")).read()
+        assert f"VOCAB_SIZE: usize = {vocab.VOCAB_SIZE}" in rust
+        assert f"PAD: u32 = {vocab.PAD}" in rust
+        assert f"BOS: u32 = {vocab.BOS}" in rust
+        assert f"EOS: u32 = {vocab.EOS}" in rust
+        assert f"DOMAIN_TAG_BASE: u32 = {vocab.DOMAIN_TAG_BASE}" in rust
+
+    def test_registry_matches_rust(self):
+        rust = open(os.path.join(os.path.dirname(__file__), "..", "..",
+                                 "rust", "src", "lm", "config.rs")).read()
+        for name, cfg in configs.MODELS.items():
+            pat = (rf'name: "{re.escape(name)}", d_model: {cfg.d_model}, '
+                   rf'n_layers: {cfg.n_layers}, n_heads: {cfg.n_heads}')
+            assert re.search(pat, rust), f"rust registry missing/mismatched: {name}"
+
+
+class TestLowering:
+    def test_forward_hlo_text_parses(self):
+        cfg = configs.MODELS["nano"]
+        text = aot.to_hlo_text(aot.lower_forward(cfg, 2, 32, "jnp"))
+        assert text.startswith("HloModule")
+        # logits output shape appears
+        assert f"f32[2,32,{vocab.VOCAB_SIZE}]" in text
+
+    def test_step_hlo_single_flat_output(self):
+        cfg = configs.MODELS["nano"]
+        text = aot.to_hlo_text(aot.lower_step(cfg, 4, 32))
+        assert text.startswith("HloModule")
+        flat = 4 * vocab.VOCAB_SIZE + cfg.n_layers * 2 * 4 * 32 * cfg.d_model
+        assert f"f32[{flat}]" in text, "step must emit one flat [logits|kv] array"
+
+    def test_generate_hlo_output_shape(self):
+        cfg = configs.MODELS["nano"]
+        text = aot.to_hlo_text(aot.lower_generate(cfg, 2, 4, 8))
+        assert "s32[2,8]" in text
+
+    @pytest.mark.skipif(not os.path.isdir(os.path.join(os.path.dirname(__file__), "..", "..",
+                                                       "artifacts", "hlo")),
+                        reason="artifacts not built")
+    def test_emitted_artifacts_exist_per_model(self):
+        hlo = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "hlo")
+        files = os.listdir(hlo)
+        for name in configs.MODELS:
+            assert any(f.startswith(f"{name}__forward_b") for f in files), name
+            assert any(f.startswith(f"{name}__step_b") for f in files), name
+            assert any(f.startswith(f"{name}__generate_b") for f in files), name

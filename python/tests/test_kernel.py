@@ -1,0 +1,104 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle — the CORE correctness
+signal for the kernels, swept over shapes/dtypes with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention, mxu_utilization, vmem_bytes
+from compile.kernels.ref import alibi_slopes, attention_ref, rmsnorm_ref
+from compile.kernels.rmsnorm import rmsnorm
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestAttention:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        h=st.sampled_from([1, 2, 4]),
+        s=st.sampled_from([64, 128, 192]),
+        dh=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref_swept(self, b, h, s, dh, seed):
+        q = rand(seed, (b, h, s, dh))
+        k = rand(seed + 1, (b, h, s, dh))
+        v = rand(seed + 2, (b, h, s, dh))
+        slopes = alibi_slopes(h)
+        out = attention(q, k, v, slopes)
+        ref = attention_ref(q, k, v, slopes)
+        np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5)
+
+    def test_block_shapes_equivalent(self):
+        q, k, v = (rand(i, (1, 2, 128, 16)) for i in range(3))
+        slopes = alibi_slopes(2)
+        ref = attention_ref(q, k, v, slopes)
+        for bq, bk in [(32, 32), (64, 64), (128, 64), (64, 128), (128, 128)]:
+            out = attention(q, k, v, slopes, block_q=bq, block_k=bk)
+            np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5, err_msg=f"{bq}x{bk}")
+
+    def test_causality(self):
+        """Output at position t must not depend on inputs after t."""
+        q, k, v = (rand(i + 10, (1, 1, 64, 8)) for i in range(3))
+        slopes = alibi_slopes(1)
+        out1 = attention(q, k, v, slopes)
+        k2 = k.at[:, :, 40:, :].set(99.0)
+        v2 = v.at[:, :, 40:, :].set(-99.0)
+        out2 = attention(q, k2, v2, slopes)
+        np.testing.assert_array_equal(np.asarray(out1[:, :, :40]), np.asarray(out2[:, :, :40]))
+
+    def test_alibi_bias_decays_attention(self):
+        """With identical K rows, ALiBi must favor recent positions."""
+        s = 64
+        q = jnp.ones((1, 1, s, 8), jnp.float32)
+        k = jnp.ones((1, 1, s, 8), jnp.float32)
+        # v encodes position index
+        v = jnp.arange(s, dtype=jnp.float32)[None, None, :, None] * jnp.ones((1, 1, s, 8))
+        slopes = jnp.asarray([0.5], jnp.float32)
+        out = attention(q, k, v, slopes)
+        # At the last position, attention mass should tilt to recent j,
+        # so expected value > uniform average (31.5).
+        assert float(out[0, 0, -1, 0]) > (s - 1) / 2
+
+    def test_first_position_attends_only_itself(self):
+        q, k, v = (rand(i + 20, (1, 1, 64, 8)) for i in range(3))
+        out = attention(q, k, v, alibi_slopes(1))
+        np.testing.assert_allclose(out[0, 0, 0], v[0, 0, 0], rtol=1e-6, atol=1e-6)
+
+
+class TestRmsnorm:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        n=st.sampled_from([64, 128, 256]),
+        d=st.sampled_from([16, 48, 96, 129]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref_swept(self, n, d, seed):
+        x = rand(seed, (n, d))
+        g = 1.0 + 0.1 * rand(seed + 1, (d,))
+        out = rmsnorm(x, g)
+        ref = rmsnorm_ref(x, g)
+        np.testing.assert_allclose(out, ref, rtol=2e-6, atol=2e-6)
+
+    def test_unit_rms_output(self):
+        x = 3.0 * rand(5, (64, 32))
+        out = rmsnorm(x, jnp.ones((32,)))
+        rms = jnp.sqrt(jnp.mean(jnp.square(out), axis=-1))
+        np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+class TestKernelAnalysis:
+    def test_vmem_fits_tpu_budget(self):
+        """Default block spec must fit a TPU core's ~16 MiB VMEM."""
+        assert vmem_bytes(64, 64, 64, 256) < 16 * 1024 * 1024
+
+    def test_mxu_utilization_estimates(self):
+        # 128x128x128 tile = a full MXU pass.
+        assert mxu_utilization(128, 128, 128) == pytest.approx(1.0)
+        # Small-head tiles underfill the systolic array.
+        assert mxu_utilization(64, 64, 16) < 0.1

@@ -1,0 +1,119 @@
+"""L2 model tests: shapes, causality, pallas/jnp parity, decode_step
+consistency, generation, and the bit-exact prefix property the rust
+decompressor depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import configs, model
+from compile.vocab import BOS, PAD, VOCAB_SIZE
+
+
+CFG = configs.MODELS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, 0)
+
+
+def tokens(b, s, seed=0):
+    return jax.random.randint(jax.random.PRNGKey(seed), (b, s), 0, 256, jnp.int32)
+
+
+class TestForward:
+    def test_shapes(self, params):
+        for b, s in [(1, 32), (2, 64), (4, 128)]:
+            logits = model.forward_logits(CFG, params, tokens(b, s), impl="jnp")
+            assert logits.shape == (b, s, VOCAB_SIZE)
+            assert bool(jnp.isfinite(logits).all())
+
+    def test_pallas_matches_jnp(self, params):
+        t = tokens(2, 64, 3)
+        a = model.forward_logits(CFG, params, t, impl="jnp")
+        b = model.forward_logits(CFG, params, t, impl="pallas")
+        np.testing.assert_allclose(a, b, rtol=5e-5, atol=5e-5)
+
+    def test_prefix_property_bit_exact(self, params):
+        """Logits at position t are BITWISE identical regardless of suffix
+        tokens — the property prefix-replay decompression relies on."""
+        t1 = tokens(2, 64, 4)
+        t2 = t1.at[:, 32:].set(PAD)
+        f = jax.jit(lambda p, t: model.forward_logits(CFG, p, t, impl="jnp"))
+        a = np.asarray(f(params, t1))
+        b = np.asarray(f(params, t2))
+        np.testing.assert_array_equal(a[:, :32], b[:, :32])
+
+    def test_batch_lanes_independent(self, params):
+        """Lane 0's logits don't change when other lanes change."""
+        t1 = tokens(4, 32, 5)
+        t2 = t1.at[1:].set(7)
+        f = jax.jit(lambda p, t: model.forward_logits(CFG, p, t, impl="jnp"))
+        a = np.asarray(f(params, t1))
+        b = np.asarray(f(params, t2))
+        np.testing.assert_array_equal(a[0], b[0])
+
+    @settings(max_examples=6, deadline=None)
+    @given(s=st.sampled_from([16, 48, 96]), seed=st.integers(0, 1000))
+    def test_swept_shapes_finite(self, params, s, seed):
+        logits = model.forward_logits(CFG, params, tokens(1, s, seed), impl="jnp")
+        assert bool(jnp.isfinite(logits).all())
+
+
+class TestDecodeStep:
+    def test_matches_forward(self, params):
+        b, s = 2, 48
+        t = tokens(b, s, 6)
+        full = model.forward_logits(CFG, params, t, impl="jnp")
+        kv = model.init_kv(CFG, b, s)
+        step = jax.jit(lambda p, kv, tok, pos: model.decode_step(CFG, p, kv, tok, pos))
+        for pos in range(s):
+            logits, kv = step(params, kv, t[:, pos], pos)
+            np.testing.assert_allclose(logits, full[:, pos], rtol=5e-4, atol=5e-4)
+
+    def test_kv_positions_beyond_pos_ignored(self, params):
+        b, s = 1, 16
+        kv = model.init_kv(CFG, b, s)
+        # Poison the tail of the cache: must not affect step at pos 0.
+        kv_poisoned = kv.at[:, :, :, 8:, :].set(1e9)
+        tok = jnp.asarray([65], jnp.int32)
+        a, _ = model.decode_step(CFG, params, kv, tok, 0)
+        b_, _ = model.decode_step(CFG, params, kv_poisoned, tok, 0)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+class TestGenerate:
+    def test_deterministic_given_seed(self, params):
+        prompt = jnp.full((2, 4), BOS, jnp.int32)
+        g = jax.jit(lambda p, pr, seed: model.generate(CFG, p, pr, seed, jnp.float32(0.8), 24))
+        a = g(params, prompt, 1)
+        b = g(params, prompt, 1)
+        c = g(params, prompt, 2)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+    def test_only_byte_tokens_sampled(self, params):
+        prompt = jnp.full((2, 4), BOS, jnp.int32)
+        out = model.generate(CFG, params, prompt, 3, jnp.float32(1.2), 48)
+        assert out.shape == (2, 48)
+        assert int(out.min()) >= 0 and int(out.max()) < 256
+
+
+class TestParams:
+    def test_spec_sorted_and_counts(self):
+        for name, cfg in configs.MODELS.items():
+            spec = model.param_spec(cfg)
+            names = [n for n, _ in spec]
+            assert names == sorted(names), name
+            total = sum(int(np.prod(s)) for _, s in spec)
+            assert total == configs.param_count(cfg), name
+
+    def test_flatten_roundtrip(self, params):
+        flat = model.flatten_params(CFG, params)
+        back = model.unflatten_params(CFG, flat)
+        assert set(back) == set(params)
+        for k in params:
+            np.testing.assert_array_equal(np.asarray(params[k]), np.asarray(back[k]))

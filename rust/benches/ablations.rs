@@ -1,0 +1,92 @@
+//! Ablation benches for the design decisions DESIGN.md calls out:
+//!  A1. AC-stream granularity (flush/table overhead amortization)
+//!  A2. CDF quantization precision vs coding efficiency
+//!  A3. LZ77 lazy parsing vs greedy (dictionary baselines' parse choice)
+//!  A4. Context-mixing model count (nncp-sim vs trace-sim ladder)
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::section;
+use llmzip::baselines::cm::{CmConfig, ContextMixing};
+use llmzip::compress::{Compressor, LlmCompressor};
+use llmzip::lm::config::by_name;
+use llmzip::lm::weights::Weights;
+
+fn main() {
+    // A1: stream granularity with the native engine (no artifacts needed).
+    section("A1: AC-stream granularity (native engine, 16 KiB wiki)");
+    let cfg = by_name("small").unwrap();
+    let data = llmzip::experiments::human_text(llmzip::textgen::Domain::Wiki, 16 * 1024);
+    println!("{:<14} {:>8} {:>14}", "STREAM", "RATIO", "bytes/stream");
+    for stream in [256usize, 512, 1024, 2048, 4096, 8192] {
+        let comp = LlmCompressor::from_weights(cfg, weights(), 256, 4)
+            .unwrap()
+            .with_stream_bytes(stream)
+            .unwrap();
+        let z = comp.compress(&data).unwrap();
+        let n_streams = data.len().div_ceil(stream);
+        println!(
+            "{:<14} {:>7.3}x {:>14.1}",
+            stream,
+            data.len() as f64 / z.len() as f64,
+            (z.len() as f64) / n_streams as f64 - 0.0,
+        );
+    }
+
+    // A2 is structural: quantization reserves 1/65536 per symbol; measure
+    // the bound directly.
+    section("A2: CDF quantization loss bound");
+    let spare_frac = 256.0 / 65536.0;
+    println!(
+        "reserved mass {:.4} -> worst-case overhead {:.4} bits/byte on a p=0.99 stream",
+        spare_frac,
+        -(1.0f64 - spare_frac).log2()
+    );
+
+    // A3: lazy vs greedy parse.
+    section("A3: LZ77 parse quality (200 KiB mixed text)");
+    let text = llmzip::textgen::quick_sample(200 * 1024, 3);
+    let tokens = llmzip::baselines::lz77::tokenize(&text);
+    let st = llmzip::baselines::lz77::parse_stats(&tokens);
+    println!(
+        "lazy parse: {} literals, {} matches, {:.1}% match coverage",
+        st.literals,
+        st.matches,
+        100.0 * st.match_bytes as f64 / text.len() as f64
+    );
+    let gz = llmzip::baselines::GzipLike::new();
+    let z = gz.compress(&text).unwrap();
+    println!("gzip-like ratio {:.2}x", text.len() as f64 / z.len() as f64);
+
+    // A4: CM model-count ladder.
+    section("A4: context-mixing model ladder (64 KiB mixed text)");
+    let small = &text[..64 * 1024];
+    for (name, orders, bits) in [
+        ("orders 0-1", &[0usize, 1][..], 16u32),
+        ("orders 0-2 (trace-sim)", &[0, 1, 2][..], 16),
+        ("orders 0-4", &[0, 1, 2, 3, 4][..], 20),
+        ("orders 0-4+6 (nncp-sim)", &[0, 1, 2, 3, 4, 6][..], 20),
+    ] {
+        // leak: benches are one-shot processes; a 'static str is simplest
+        let static_name: &'static str = Box::leak(name.to_string().into_boxed_str());
+        let static_orders: &'static [usize] = Box::leak(orders.to_vec().into_boxed_slice());
+        let cm = ContextMixing::new(CmConfig {
+            name: static_name,
+            orders: static_orders,
+            table_bits: bits,
+            lr: 6,
+        });
+        let z = cm.compress(small).unwrap();
+        println!("{:<26} {:.3}x", name, small.len() as f64 / z.len() as f64);
+    }
+}
+
+fn weights() -> Weights {
+    // Prefer trained weights when artifacts exist; random otherwise.
+    let cfg = by_name("small").unwrap();
+    match llmzip::runtime::ArtifactStore::open(None).and_then(|s| s.weights(cfg)) {
+        Ok(w) => w,
+        Err(_) => Weights::random(cfg, 5),
+    }
+}

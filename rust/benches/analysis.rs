@@ -1,0 +1,53 @@
+//! Analysis-toolkit benchmarks + Fig 2 regeneration: n-gram statistics,
+//! entropy measures, BPE training throughput.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, section};
+use llmzip::analysis;
+use llmzip::experiments::{self, DatasetCache};
+use llmzip::runtime::ArtifactStore;
+use llmzip::tokenizer::bpe::Bpe;
+
+fn main() {
+    let n = 256 * 1024;
+    let data = llmzip::textgen::quick_sample(n, 9);
+    let text = String::from_utf8(data.clone()).unwrap();
+
+    section("analysis primitives (256 KiB text)");
+    bench("ngram top-10 share (1..4-grams)", 2.0, || {
+        std::hint::black_box(analysis::top_k_share(&text, 10));
+    })
+    .print_throughput(n);
+    bench("char entropy/byte", 2.0, || {
+        std::hint::black_box(analysis::char_entropy_per_byte(&text));
+    })
+    .print_throughput(n);
+    bench("word entropy/byte", 2.0, || {
+        std::hint::black_box(analysis::word_entropy_per_byte(&text));
+    })
+    .print_throughput(n);
+    bench("mutual information", 2.0, || {
+        std::hint::black_box(analysis::mutual_information(&text));
+    })
+    .print_throughput(n);
+    bench("BPE train 256 merges (64 KiB)", 3.0, || {
+        std::hint::black_box(Bpe::train(&data[..64 * 1024], 256));
+    })
+    .print();
+
+    // Fig 2 regeneration (needs artifacts + datasets).
+    match ArtifactStore::open(None) {
+        Ok(store) => {
+            let mut cache = DatasetCache::new(store, "data", 32 * 1024);
+            match experiments::fig2(&mut cache, "medium") {
+                Ok((h, rows)) => {
+                    experiments::print_table("Fig 2: top-10 n-gram coverage", &h, &rows)
+                }
+                Err(e) => println!("SKIP fig2: {e:#}"),
+            }
+        }
+        Err(e) => println!("SKIP fig2: {e:#}"),
+    }
+}

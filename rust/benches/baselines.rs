@@ -1,0 +1,36 @@
+//! Baseline-compressor benchmarks: compress/decompress throughput and ratio
+//! for all nine Table 5 baselines on mixed procedural text.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, section};
+use llmzip::compress::registry::all_baselines;
+
+fn main() {
+    let n = 256 * 1024;
+    let data = llmzip::textgen::quick_sample(n, 7);
+    section(&format!("baselines on {} of mixed text", llmzip::util::human_bytes(n as u64)));
+    println!(
+        "{:<12} {:>8} {:>14} {:>14}",
+        "METHOD", "RATIO", "COMP MiB/s", "DECOMP MiB/s"
+    );
+    for c in all_baselines() {
+        let mut z = Vec::new();
+        let enc = bench(&format!("{} compress", c.name()), 1.5, || {
+            z = c.compress(&data).unwrap();
+        });
+        let mut back = Vec::new();
+        let dec = bench(&format!("{} decompress", c.name()), 1.5, || {
+            back = c.decompress(&z).unwrap();
+        });
+        assert_eq!(back, data);
+        println!(
+            "{:<12} {:>7.2}x {:>13.2} {:>13.2}",
+            c.name(),
+            data.len() as f64 / z.len() as f64,
+            n as f64 / (1 << 20) as f64 / enc.mean_s,
+            n as f64 / (1 << 20) as f64 / dec.mean_s,
+        );
+    }
+}

@@ -1,0 +1,90 @@
+//! Coordinator benchmarks: dynamic-batcher overhead, end-to-end server
+//! throughput/latency with the native engine (no artifacts required), and
+//! batch-occupancy behaviour under concurrency.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, section};
+use llmzip::compress::LlmCompressor;
+use llmzip::coordinator::{BatchPolicy, DynamicBatcher, Server, ServerConfig, WorkItem, WorkKind};
+use llmzip::lm::config::by_name;
+use llmzip::lm::weights::Weights;
+use llmzip::util::stats::percentile;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    section("dynamic batcher (pure queueing)");
+    bench("push+drain 10k items, 8 lanes", 2.0, || {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            lanes: 8,
+            max_wait: Duration::from_millis(1),
+        });
+        let now = Instant::now();
+        for i in 0..10_000u64 {
+            b.push(WorkItem {
+                request_id: i,
+                chunk_index: 0,
+                kind: WorkKind::Compress,
+                data: Vec::new(),
+                record: None,
+                enqueued: now,
+            });
+        }
+        while b.next_batch(now + Duration::from_secs(1)).is_some() {}
+    })
+    .print();
+
+    section("server end-to-end (native engine, nano model)");
+    let server = Arc::new(
+        Server::start(
+            || {
+                let cfg = by_name("nano")?;
+                LlmCompressor::from_weights(cfg, Weights::random(cfg, 3), 128, 8)
+            },
+            ServerConfig {
+                chunk_tokens: 128,
+                policy: BatchPolicy { lanes: 8, max_wait: Duration::from_millis(4) },
+            },
+        )
+        .expect("server"),
+    );
+    let n_clients = 8;
+    let payload = llmzip::textgen::quick_sample(2048, 1);
+    let t0 = Instant::now();
+    let mut lat: Vec<f64> = Vec::new();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|_| {
+            let srv = server.clone();
+            let data = payload.clone();
+            std::thread::spawn(move || {
+                let mut l = Vec::new();
+                for _ in 0..4 {
+                    let t = Instant::now();
+                    let z = srv.compress(&data).unwrap();
+                    let back = srv.decompress(&z).unwrap();
+                    assert_eq!(back, data);
+                    l.push(t.elapsed().as_secs_f64() * 1e3);
+                }
+                l
+            })
+        })
+        .collect();
+    for h in handles {
+        lat.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total = payload.len() * n_clients * 4 * 2;
+    println!(
+        "{} roundtrips, {:.2}s wall, {:.1} KiB/s, latency p50/p90 {:.0}/{:.0} ms",
+        n_clients * 4,
+        wall,
+        total as f64 / 1024.0 / wall,
+        percentile(&mut lat, 0.5),
+        percentile(&mut lat, 0.9),
+    );
+    println!("occupancy mean {:.2}  batches {}", server.metrics.mean_occupancy(),
+        server.metrics.batches.load(Ordering::Relaxed));
+}

@@ -1,0 +1,129 @@
+//! Entropy-coder microbenchmarks: throughput of the range coder, binary
+//! coder, Huffman and FSE stages (the L3 hot path underneath every
+//! compressor, including the paper's).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, section};
+use llmzip::entropy::fse::{self, FseTable};
+use llmzip::entropy::huffman::{HuffDecoder, HuffEncoder};
+use llmzip::entropy::range::{RangeDecoder, RangeEncoder};
+use llmzip::entropy::{BinDecoder, BinEncoder, BitModel, BitReader, BitWriter};
+use llmzip::util::Pcg64;
+
+const N: usize = 1 << 20;
+
+fn main() {
+    let data = llmzip::textgen::quick_sample(N, 5);
+
+    section("range coder (order-0 static model)");
+    let mut counts = [0u64; 256];
+    for &b in &data {
+        counts[b as usize] += 1;
+    }
+    let freqs = llmzip::entropy::arith::quantize_counts(&counts, 1 << 16);
+    let mut cums = [0u32; 257];
+    for i in 0..256 {
+        cums[i + 1] = cums[i] + freqs[i];
+    }
+    let mut encoded = Vec::new();
+    bench("range encode 1 MiB", 2.0, || {
+        let mut enc = RangeEncoder::new();
+        for &b in &data {
+            let s = b as usize;
+            enc.encode(cums[s], freqs[s], 1 << 16);
+        }
+        encoded = enc.finish();
+    })
+    .print_throughput(N);
+    bench("range decode 1 MiB", 2.0, || {
+        let mut dec = RangeDecoder::new(&encoded);
+        for _ in 0..N {
+            let f = dec.decode_freq(1 << 16);
+            let sym = cums.partition_point(|&c| c <= f) - 1;
+            dec.decode_update(cums[sym], freqs[sym]);
+        }
+    })
+    .print_throughput(N);
+
+    section("binary coder (adaptive bit model)");
+    let mut bin_encoded = Vec::new();
+    bench("binary encode 1 MiB (8 bits/byte)", 2.0, || {
+        let mut enc = BinEncoder::new();
+        let mut models = vec![BitModel::default(); 256];
+        for &b in &data {
+            llmzip::entropy::binary::encode_byte_tree(&mut enc, &mut models, b);
+        }
+        bin_encoded = enc.finish();
+    })
+    .print_throughput(N);
+    bench("binary decode 1 MiB", 2.0, || {
+        let mut dec = BinDecoder::new(&bin_encoded);
+        let mut models = vec![BitModel::default(); 256];
+        for _ in 0..N {
+            llmzip::entropy::binary::decode_byte_tree(&mut dec, &mut models);
+        }
+    })
+    .print_throughput(N);
+
+    section("huffman");
+    let mut freqs32 = vec![0u32; 256];
+    for &b in &data {
+        freqs32[b as usize] += 1;
+    }
+    let enc = HuffEncoder::from_freqs(&freqs32, 15);
+    let mut huff_bits = Vec::new();
+    bench("huffman encode 1 MiB", 2.0, || {
+        let mut w = BitWriter::new();
+        for &b in &data {
+            enc.encode(&mut w, b as usize);
+        }
+        huff_bits = w.finish();
+    })
+    .print_throughput(N);
+    let dec = HuffDecoder::from_lengths(enc.lengths()).unwrap();
+    bench("huffman decode 1 MiB", 2.0, || {
+        let mut r = BitReader::new(&huff_bits);
+        for _ in 0..N {
+            dec.decode(&mut r).unwrap();
+        }
+    })
+    .print_throughput(N);
+
+    section("FSE / tANS");
+    let counts64: Vec<u64> = counts.to_vec();
+    let norm = fse::normalize_freqs(&counts64, 12);
+    let table = FseTable::new(&norm, 12);
+    let symbols: Vec<usize> = data.iter().map(|&b| b as usize).collect();
+    let mut fse_out = (0u32, Vec::new());
+    bench("fse encode 1 MiB", 2.0, || {
+        fse_out = fse::encode_all(&table, &symbols);
+    })
+    .print_throughput(N);
+    bench("fse decode 1 MiB", 2.0, || {
+        let _ = fse::decode_all(&table, fse_out.0, &fse_out.1, symbols.len());
+    })
+    .print_throughput(N);
+
+    section("CDF quantization (LLM coder inner loop)");
+    let mut rng = Pcg64::seeded(1);
+    // Flat profile (worst case) and peaked profile (what a trained model
+    // actually emits: a handful of candidates, the rest far below max).
+    let flat: Vec<f32> = (0..272).map(|_| (rng.gen_f64() * 8.0 - 4.0) as f32).collect();
+    let peaked: Vec<f32> = (0..272)
+        .map(|i| if i % 37 == 0 { 5.0 } else { -20.0 + (rng.gen_f64() * 4.0) as f32 })
+        .collect();
+    bench("logits_to_cdf x 4096 (flat)", 1.0, || {
+        for _ in 0..4096 {
+            std::hint::black_box(llmzip::compress::llm::logits_to_cdf(&flat));
+        }
+    })
+    .print();
+    bench("logits_to_cdf x 4096 (peaked)", 1.0, || {
+        for _ in 0..4096 {
+            std::hint::black_box(llmzip::compress::llm::logits_to_cdf(&peaked));
+        }
+    })
+    .print();
+}

@@ -1,0 +1,69 @@
+//! Minimal benchmark harness (criterion is not in this offline crate set):
+//! warms up, runs timed iterations, reports mean/stddev/min and derived
+//! throughput. Used by every bench target via `#[path] mod harness;`.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10.3} ms/iter  (±{:>6.3} min {:.3}, n={})",
+            self.name,
+            self.mean_s * 1e3,
+            self.stddev_s * 1e3,
+            self.min_s * 1e3,
+            self.iters
+        );
+    }
+
+    pub fn print_throughput(&self, bytes: usize) {
+        let mibs = bytes as f64 / (1 << 20) as f64 / self.mean_s;
+        println!(
+            "{:<44} {:>10.3} ms/iter  {:>9.2} MiB/s  (n={})",
+            self.name,
+            self.mean_s * 1e3,
+            mibs,
+            self.iters
+        );
+    }
+}
+
+/// Time `f` adaptively: ~`budget_s` seconds of measurement after 1 warmup.
+pub fn bench<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
+    // Warmup + estimate.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_s / once).ceil() as usize).clamp(1, 10_000);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+        / samples.len().max(1) as f64;
+    BenchResult {
+        name: name.to_string(),
+        mean_s: mean,
+        stddev_s: var.sqrt(),
+        min_s: samples.iter().copied().fold(f64::INFINITY, f64::min),
+        iters,
+    }
+}
+
+/// Section header.
+pub fn section(title: &str) {
+    println!("\n===== {title} =====");
+}

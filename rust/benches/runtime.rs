@@ -1,0 +1,103 @@
+//! PJRT runtime benchmarks (require `make artifacts`): forward-call
+//! latency, step-call latency, in-graph generation throughput, LLM
+//! compressor throughput per executor, plus the §5.4 chunk sweep and the
+//! Figs 5-9 regenerations.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, section};
+use llmzip::compress::{Compressor, LlmCompressor, LlmCompressorConfig};
+use llmzip::experiments::{self, DatasetCache};
+use llmzip::lm::config::{self, by_name};
+use llmzip::lm::ExecutorKind;
+use llmzip::runtime::{ArtifactStore, PjrtForwardExecutor, PjrtGenerator, PjrtStepExecutor};
+use llmzip::lm::LmExecutor;
+
+fn main() {
+    let store = match ArtifactStore::open(None) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("SKIP runtime bench: {e:#}");
+            return;
+        }
+    };
+    let cfg = by_name("medium").unwrap();
+
+    section("PJRT call latency (medium)");
+    let fwd = PjrtForwardExecutor::from_store(&store, cfg).expect("forward");
+    let tokens = vec![65i32; config::FORWARD_BATCH * config::MAX_CONTEXT];
+    bench("forward [8,256] (one chunk batch)", 3.0, || {
+        std::hint::black_box(fwd.forward_raw(&tokens).unwrap());
+    })
+    .print_throughput(config::FORWARD_BATCH * config::MAX_CONTEXT);
+    let mut step = PjrtStepExecutor::from_store(&store, cfg).expect("step");
+    let toks = vec![65u32; config::STEP_BATCH];
+    bench("decode_step [32 lanes]", 3.0, || {
+        step.reset();
+        std::hint::black_box(step.step(&toks).unwrap());
+    })
+    .print();
+
+    section("in-graph generation (dataset factory)");
+    let generator = PjrtGenerator::from_store(&store, cfg).expect("generator");
+    let prompts: Vec<Vec<u32>> = (0..generator.batch)
+        .map(|_| vec![257u32; generator.prompt_len])
+        .collect();
+    let out_bytes = generator.batch * generator.n_tokens;
+    bench("generate [16 x 240 tokens]", 5.0, || {
+        std::hint::black_box(generator.generate(&prompts, 1, 0.7).unwrap());
+    })
+    .print_throughput(out_bytes);
+
+    section("LLM compressor throughput per executor (16 KiB, medium)");
+    let data = llmzip::experiments::human_text(llmzip::textgen::Domain::Wiki, 16 * 1024);
+    for exec in [ExecutorKind::PjrtForward, ExecutorKind::PjrtStep, ExecutorKind::Native] {
+        let comp = LlmCompressor::open(
+            &store,
+            LlmCompressorConfig {
+                model: "medium".into(),
+                chunk_tokens: 256,
+                stream_bytes: 4096,
+                executor: exec,
+            },
+        )
+        .expect("compressor");
+        let mut z = Vec::new();
+        let enc = bench(&format!("{exec:?} compress 16 KiB"), 4.0, || {
+            z = comp.compress(&data).unwrap();
+        });
+        enc.print_throughput(data.len());
+        // Decompress once (the slow path for PjrtForward is the point).
+        let t = std::time::Instant::now();
+        let back = comp.decompress(&z).unwrap();
+        assert_eq!(back, data);
+        println!(
+            "{:<44} {:>10.3} ms  ({:.2} KiB/s)",
+            format!("{exec:?} decompress 16 KiB (single run)"),
+            t.elapsed().as_secs_f64() * 1e3,
+            data.len() as f64 / 1024.0 / t.elapsed().as_secs_f64()
+        );
+    }
+
+    let fig_bytes = std::env::var("LLMZIP_BENCH_BYTES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32 * 1024);
+    section(&format!("figure regenerations ({} datasets)",
+        llmzip::util::human_bytes(fig_bytes as u64)));
+    let mut cache = DatasetCache::new(store, "data", fig_bytes);
+    for (name, table) in [
+        ("Fig 5", experiments::fig5(&mut cache, 256)),
+        ("Fig 6", experiments::fig6(&mut cache, 256)),
+        ("Fig 7", experiments::fig7(&mut cache, "medium", 256)),
+        ("Fig 8", experiments::fig8(&mut cache, 256)),
+        ("Fig 9", experiments::fig9(&mut cache, "medium")),
+        ("Chunk sweep (§5.4)", experiments::chunk_sweep(&mut cache, llmzip::textgen::Domain::Wiki)),
+    ] {
+        match table {
+            Ok((h, rows)) => experiments::print_table(name, &h, &rows),
+            Err(e) => println!("SKIP {name}: {e:#}"),
+        }
+    }
+}

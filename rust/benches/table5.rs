@@ -1,0 +1,37 @@
+//! End-to-end regeneration of the paper's Table 5 (all 9 baselines + Ours
+//! on all 8 LLM-generated datasets) plus Tables 2/3. Requires `make
+//! artifacts` + generated datasets (created on demand, cached in data/).
+
+#[path = "harness.rs"]
+mod harness;
+
+use llmzip::experiments::{self, DatasetCache};
+use llmzip::runtime::ArtifactStore;
+
+fn main() {
+    let store = match ArtifactStore::open(None) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("SKIP table5 bench: {e:#}");
+            return;
+        }
+    };
+    let bytes = std::env::var("LLMZIP_BENCH_BYTES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32 * 1024);
+    let mut cache = DatasetCache::new(store, "data", bytes);
+    let t0 = std::time::Instant::now();
+
+    let (h, rows) = experiments::table2(&mut cache, "medium").expect("table2");
+    experiments::print_table("Table 2: entropy & mutual information", &h, &rows);
+
+    let (h, rows) = experiments::table3(&mut cache, "medium").expect("table3");
+    experiments::print_table("Table 3: traditional & neural compressors", &h, &rows);
+
+    let (h, rows) = experiments::table5(&mut cache, "medium", 256).expect("table5");
+    experiments::print_table("Table 5: all methods x all datasets", &h, &rows);
+
+    println!("\n(total {:.1}s on {} per dataset)", t0.elapsed().as_secs_f64(),
+        llmzip::util::human_bytes(bytes as u64));
+}

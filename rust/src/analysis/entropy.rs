@@ -1,0 +1,223 @@
+//! Entropy-per-byte under three tokenizations and consecutive-word mutual
+//! information (paper Table 2: Char-E, BP-E, W-E, Mutual Info).
+//!
+//! `H_byte = H_token / L_avg` where `H_token` is the Shannon entropy of the
+//! token unigram distribution and `L_avg` the frequency-weighted mean token
+//! byte length (paper §3.2).
+
+use crate::tokenizer::{bpe::Bpe, words};
+use std::collections::HashMap;
+
+/// Shannon entropy (bits) of a count table.
+fn entropy_from_counts<I: IntoIterator<Item = u64>>(counts: I) -> (f64, u64) {
+    let counts: Vec<u64> = counts.into_iter().collect();
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return (0.0, 0);
+    }
+    let t = total as f64;
+    let h = counts
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / t;
+            -p * p.log2()
+        })
+        .sum();
+    (h, total)
+}
+
+/// Generic entropy-per-byte over (token -> (count, byte_len)).
+fn entropy_per_byte(table: &HashMap<String, u64>) -> f64 {
+    let (h_token, total) = entropy_from_counts(table.values().copied());
+    if total == 0 {
+        return 0.0;
+    }
+    let weighted_len: f64 =
+        table.iter().map(|(t, &c)| t.len() as f64 * c as f64).sum::<f64>() / total as f64;
+    if weighted_len == 0.0 {
+        0.0
+    } else {
+        h_token / weighted_len
+    }
+}
+
+/// Char-E: entropy per byte under character tokenization.
+pub fn char_entropy_per_byte(text: &str) -> f64 {
+    let mut table: HashMap<String, u64> = HashMap::new();
+    for c in text.chars() {
+        *table.entry(c.to_string()).or_insert(0) += 1;
+    }
+    entropy_per_byte(&table)
+}
+
+/// W-E: entropy per byte under word tokenization.
+pub fn word_entropy_per_byte(text: &str) -> f64 {
+    let mut table: HashMap<String, u64> = HashMap::new();
+    for w in words::words(text) {
+        *table.entry(w.to_string()).or_insert(0) += 1;
+    }
+    entropy_per_byte(&table)
+}
+
+/// BP-E: entropy per byte under a BPE tokenization trained on the text
+/// itself (`n_merges` merges; the paper does not fix a vocabulary, so we
+/// train in-corpus like subword analyses usually do).
+pub fn subword_entropy_per_byte(text: &str, n_merges: usize) -> f64 {
+    let bytes = text.as_bytes();
+    // Train on a bounded prefix to keep the O(n·merges) trainer fast.
+    let train_slice = &bytes[..bytes.len().min(200_000)];
+    let bpe = Bpe::train(train_slice, n_merges);
+    let tokens = bpe.encode(bytes);
+    let mut counts: HashMap<u32, u64> = HashMap::new();
+    for &t in &tokens {
+        *counts.entry(t).or_insert(0) += 1;
+    }
+    let (h_token, total) = entropy_from_counts(counts.values().copied());
+    if total == 0 {
+        return 0.0;
+    }
+    let weighted_len: f64 = counts
+        .iter()
+        .map(|(&t, &c)| bpe.expansion(t).len() as f64 * c as f64)
+        .sum::<f64>()
+        / total as f64;
+    h_token / weighted_len
+}
+
+/// Mutual information between consecutive words (paper §3.2):
+/// `MI = Σ p(w1,w2) log2( p(w1,w2) / (p(w1) p(w2)) )`.
+pub fn mutual_information(text: &str) -> f64 {
+    let ws: Vec<String> = words::words(text).iter().map(|w| w.to_lowercase()).collect();
+    if ws.len() < 2 {
+        return 0.0;
+    }
+    let mut uni: HashMap<&str, u64> = HashMap::new();
+    let mut bi: HashMap<(&str, &str), u64> = HashMap::new();
+    for w in ws.windows(2) {
+        *uni.entry(&w[0]).or_insert(0) += 1;
+        *bi.entry((&w[0], &w[1])).or_insert(0) += 1;
+    }
+    // Unigram marginal of the second position.
+    let mut uni2: HashMap<&str, u64> = HashMap::new();
+    for w in ws.windows(2) {
+        *uni2.entry(&w[1]).or_insert(0) += 1;
+    }
+    let n = (ws.len() - 1) as f64;
+    let mut mi = 0.0;
+    for (&(a, b), &c) in &bi {
+        let p_ab = c as f64 / n;
+        let p_a = uni[a] as f64 / n;
+        let p_b = uni2[b] as f64 / n;
+        mi += p_ab * (p_ab / (p_a * p_b)).log2();
+    }
+    mi
+}
+
+/// Bundle of the Table 2 metrics for one dataset.
+#[derive(Clone, Copy, Debug)]
+pub struct EntropyReport {
+    pub char_e: f64,
+    pub bpe_e: f64,
+    pub word_e: f64,
+    pub mutual_info: f64,
+}
+
+impl EntropyReport {
+    pub fn measure(text: &str) -> Self {
+        EntropyReport {
+            char_e: char_entropy_per_byte(text),
+            bpe_e: subword_entropy_per_byte(text, 512),
+            word_e: word_entropy_per_byte(text),
+            mutual_info: mutual_information(text),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_bytes_have_8_bits_per_byte() {
+        let text: String = (0..4096).map(|i| (b'A' + (i % 26) as u8) as char).collect();
+        // 26 equiprobable chars -> H = log2(26) ≈ 4.70 bits/char = bits/byte.
+        let h = char_entropy_per_byte(&text);
+        assert!((h - 26f64.log2()).abs() < 0.01, "h={h}");
+    }
+
+    #[test]
+    fn repeated_char_zero_entropy() {
+        let text = "aaaaaaaaaa";
+        assert!(char_entropy_per_byte(text) < 1e-9);
+        assert!(word_entropy_per_byte(text) < 1e-9);
+    }
+
+    #[test]
+    fn word_entropy_below_char_entropy_per_byte_on_text() {
+        // Longer tokens amortize entropy over more bytes.
+        let text = String::from_utf8(crate::textgen::generate(
+            crate::textgen::Domain::Wiki,
+            60_000,
+            3,
+        ))
+        .unwrap();
+        let c = char_entropy_per_byte(&text);
+        let w = word_entropy_per_byte(&text);
+        assert!(w < c, "W-E {w} should be < Char-E {c}");
+    }
+
+    #[test]
+    fn bpe_entropy_between_char_and_word() {
+        let text = String::from_utf8(crate::textgen::generate(
+            crate::textgen::Domain::Novel,
+            60_000,
+            4,
+        ))
+        .unwrap();
+        let c = char_entropy_per_byte(&text);
+        let b = subword_entropy_per_byte(&text, 256);
+        assert!(b < c * 1.05, "BP-E {b} vs Char-E {c}");
+    }
+
+    #[test]
+    fn mi_zero_for_independent_words() {
+        // Random word soup: MI near 0 (small positive bias from sampling).
+        let mut rng = crate::util::Pcg64::seeded(1);
+        let words = ["alpha", "beta", "gamma", "delta", "epsilon", "zeta"];
+        let text: String = (0..30_000)
+            .map(|_| rng.choose(&words))
+            .collect::<Vec<_>>()
+            .join(" ");
+        let mi = mutual_information(&text);
+        assert!(mi < 0.05, "mi={mi}");
+    }
+
+    #[test]
+    fn mi_high_for_deterministic_pairs() {
+        // "a b a b ..." -> knowing w_i determines w_{i+1}: MI = H(W) = 1 bit.
+        let text = "ping pong ".repeat(5000);
+        let mi = mutual_information(&text);
+        assert!((mi - 1.0).abs() < 0.01, "mi={mi}");
+    }
+
+    #[test]
+    fn structured_text_has_higher_mi_than_tpch() {
+        // The Table 2 ordering: natural text MI >> TPC-H comment MI.
+        let wiki = String::from_utf8(crate::textgen::generate(
+            crate::textgen::Domain::Wiki,
+            80_000,
+            6,
+        ))
+        .unwrap();
+        let tpch = String::from_utf8(crate::textgen::generate(
+            crate::textgen::Domain::Tpch,
+            80_000,
+            6,
+        ))
+        .unwrap();
+        let mi_wiki = mutual_information(&wiki);
+        let mi_tpch = mutual_information(&tpch);
+        assert!(mi_wiki > mi_tpch, "wiki MI {mi_wiki} vs tpch MI {mi_tpch}");
+    }
+}

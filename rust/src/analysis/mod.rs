@@ -1,0 +1,10 @@
+//! Compressibility analysis toolkit — reproduces the paper's §3:
+//! n-gram redundancy (Fig 2), tokenization-level entropy per byte and
+//! consecutive-word mutual information (Table 2).
+
+pub mod entropy;
+pub mod ngram;
+
+pub use entropy::{char_entropy_per_byte, subword_entropy_per_byte, word_entropy_per_byte,
+    mutual_information, EntropyReport};
+pub use ngram::{top_k_share, NgramStats};

@@ -1,0 +1,235 @@
+//! `gzip`-shaped dictionary compressor: LZ77 + canonical Huffman.
+//!
+//! Structurally DEFLATE: a literal/length alphabet and a distance alphabet,
+//! log-bucketed length/distance slots with raw extra bits, Huffman tables
+//! shipped as packed code lengths. (The container is ours, not RFC 1951 —
+//! the paper only needs the algorithmic family, not gzip interop.)
+
+use crate::baselines::lz77::{self, Token, MIN_MATCH};
+use crate::compress::Compressor;
+use crate::entropy::huffman::{pack_lengths, unpack_lengths, HuffDecoder, HuffEncoder};
+use crate::entropy::{BitReader, BitWriter};
+use crate::Result;
+
+/// Log-bucketed slot coding shared by lengths and distances:
+/// values `< 16` get their own slot; above that, 4 slots per octave with
+/// `log2(v) - 2` raw extra bits.
+#[inline]
+pub fn value_to_slot(v: u32) -> (u32, u32, u32) {
+    if v < 16 {
+        (v, 0, 0)
+    } else {
+        let b = crate::util::floor_log2(v);
+        let extra_bits = b - 2;
+        let slot = 16 + 4 * (b - 4) + ((v >> extra_bits) & 3);
+        let extra_val = v & ((1 << extra_bits) - 1);
+        (slot, extra_bits, extra_val)
+    }
+}
+
+/// Inverse of [`value_to_slot`]: `(base, extra_bits)`.
+#[inline]
+pub fn slot_to_base(slot: u32) -> (u32, u32) {
+    if slot < 16 {
+        (slot, 0)
+    } else {
+        let b = 4 + (slot - 16) / 4;
+        let m = (slot - 16) % 4;
+        let extra_bits = b - 2;
+        ((4 + m) << extra_bits, extra_bits)
+    }
+}
+
+/// Number of slots needed for values up to 2^17 (covers WINDOW and MAX_MATCH).
+pub const NUM_SLOTS: usize = 16 + 4 * 14;
+
+/// Literal/length alphabet: 256 literals + NUM_SLOTS length slots.
+const LITLEN_SYMS: usize = 256 + NUM_SLOTS;
+
+pub struct GzipLike;
+
+impl GzipLike {
+    pub fn new() -> Self {
+        GzipLike
+    }
+}
+
+impl Default for GzipLike {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Compressor for GzipLike {
+    fn name(&self) -> &str {
+        "gzip"
+    }
+
+    fn compress(&self, data: &[u8]) -> Result<Vec<u8>> {
+        let tokens = lz77::tokenize(data);
+        // Frequency pass.
+        let mut litlen_freq = vec![0u32; LITLEN_SYMS];
+        let mut dist_freq = vec![0u32; NUM_SLOTS];
+        for t in &tokens {
+            match *t {
+                Token::Literal(b) => litlen_freq[b as usize] += 1,
+                Token::Match { len, dist } => {
+                    let (ls, _, _) = value_to_slot(len - MIN_MATCH as u32);
+                    litlen_freq[256 + ls as usize] += 1;
+                    let (ds, _, _) = value_to_slot(dist - 1);
+                    dist_freq[ds as usize] += 1;
+                }
+            }
+        }
+        // Guarantee non-empty alphabets so the decoder tables always build.
+        if litlen_freq.iter().all(|&f| f == 0) {
+            litlen_freq[0] = 1;
+        }
+        if dist_freq.iter().all(|&f| f == 0) {
+            dist_freq[0] = 1;
+        }
+        let litlen = HuffEncoder::from_freqs(&litlen_freq, 15);
+        let dist = HuffEncoder::from_freqs(&dist_freq, 15);
+
+        let mut out = Vec::new();
+        out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        out.extend_from_slice(&(tokens.len() as u64).to_le_bytes());
+        out.extend_from_slice(&pack_lengths(litlen.lengths()));
+        out.extend_from_slice(&pack_lengths(dist.lengths()));
+
+        let mut w = BitWriter::new();
+        for t in &tokens {
+            match *t {
+                Token::Literal(b) => litlen.encode(&mut w, b as usize),
+                Token::Match { len, dist: d } => {
+                    let (ls, lbits, lval) = value_to_slot(len - MIN_MATCH as u32);
+                    litlen.encode(&mut w, 256 + ls as usize);
+                    w.write_bits(lval as u64, lbits);
+                    let (ds, dbits, dval) = value_to_slot(d - 1);
+                    dist.encode(&mut w, ds as usize);
+                    w.write_bits(dval as u64, dbits);
+                }
+            }
+        }
+        out.extend_from_slice(&w.finish());
+        Ok(out)
+    }
+
+    fn decompress(&self, data: &[u8]) -> Result<Vec<u8>> {
+        let litlen_hdr = LITLEN_SYMS.div_ceil(2);
+        let dist_hdr = NUM_SLOTS.div_ceil(2);
+        let hdr = 16 + litlen_hdr + dist_hdr;
+        if data.len() < hdr {
+            anyhow::bail!("truncated gzip-like stream");
+        }
+        let orig_len = crate::util::read_u64_le(data, 0) as usize;
+        let n_tokens = crate::util::read_u64_le(data, 8) as usize;
+        let litlen_lens = unpack_lengths(&data[16..16 + litlen_hdr], LITLEN_SYMS);
+        let dist_lens = unpack_lengths(&data[16 + litlen_hdr..16 + litlen_hdr + dist_hdr], NUM_SLOTS);
+        let litlen = HuffDecoder::from_lengths(&litlen_lens)?;
+        let dist = HuffDecoder::from_lengths(&dist_lens)?;
+
+        let mut r = BitReader::new(&data[hdr..]);
+        let mut out: Vec<u8> = Vec::with_capacity(orig_len);
+        for _ in 0..n_tokens {
+            let sym = litlen.decode(&mut r)? as usize;
+            if sym < 256 {
+                out.push(sym as u8);
+            } else {
+                let (base, ebits) = slot_to_base((sym - 256) as u32);
+                let len = (base + r.read_bits(ebits) as u32) as usize + MIN_MATCH;
+                let dsym = dist.decode(&mut r)? as u32;
+                let (dbase, dbits) = slot_to_base(dsym);
+                let d = (dbase + r.read_bits(dbits) as u32) as usize + 1;
+                if d == 0 || d > out.len() {
+                    anyhow::bail!("invalid distance {d}");
+                }
+                let start = out.len() - d;
+                for i in 0..len {
+                    let b = out[start + i];
+                    out.push(b);
+                }
+            }
+        }
+        if out.len() != orig_len {
+            anyhow::bail!("gzip-like length mismatch: {} vs {}", out.len(), orig_len);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::test_corpus;
+
+    fn roundtrip(data: &[u8]) -> usize {
+        let c = GzipLike::new();
+        let z = c.compress(data).unwrap();
+        assert_eq!(c.decompress(&z).unwrap(), data);
+        z.len()
+    }
+
+    #[test]
+    fn slot_coding_bijective() {
+        for v in 0..200_000u32 {
+            let (slot, ebits, eval) = value_to_slot(v);
+            let (base, ebits2) = slot_to_base(slot);
+            assert_eq!(ebits, ebits2);
+            assert_eq!(base + eval, v, "v={v}");
+            assert!((slot as usize) < NUM_SLOTS, "v={v} slot={slot}");
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(roundtrip(b"") < 400);
+    }
+
+    #[test]
+    fn tiny_inputs() {
+        roundtrip(b"a");
+        roundtrip(b"ab");
+        roundtrip(b"hello");
+    }
+
+    #[test]
+    fn textish_compresses() {
+        let data = test_corpus::textish(100_000, 1);
+        let z = roundtrip(&data);
+        let ratio = data.len() as f64 / z as f64;
+        assert!(ratio > 2.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn repetitive_compresses_hard() {
+        let data = test_corpus::repetitive(100_000);
+        let z = roundtrip(&data);
+        assert!((data.len() as f64 / z as f64) > 50.0);
+    }
+
+    #[test]
+    fn random_does_not_explode() {
+        let data = test_corpus::random(50_000, 2);
+        let z = roundtrip(&data);
+        // At most ~2% expansion + header.
+        assert!(z < data.len() + data.len() / 50 + 600, "z={z}");
+    }
+
+    #[test]
+    fn all_byte_values() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn corrupt_stream_rejected() {
+        let c = GzipLike::new();
+        assert!(c.decompress(&[0u8; 4]).is_err());
+        let mut z = c.compress(&test_corpus::textish(5000, 3)).unwrap();
+        // Truncate payload: decoder must error (length mismatch or bad code),
+        // not panic.
+        z.truncate(z.len() / 2);
+        assert!(c.decompress(&z).is_err());
+    }
+}

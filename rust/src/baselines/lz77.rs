@@ -1,0 +1,280 @@
+//! Shared LZ77 match-finding engine.
+//!
+//! Hash-chain match finder over a sliding window, with one-step lazy
+//! matching — the same structure as zlib's `deflate_slow`. The three
+//! dictionary baselines (`gzip_like`, `zstd_lite`, `lzma_lite`) consume the
+//! token stream this produces and differ only in how they entropy-code it.
+
+/// Minimum match length worth emitting.
+pub const MIN_MATCH: usize = 4;
+/// Maximum match length (fits the length-code alphabets of all serializers).
+pub const MAX_MATCH: usize = 1 << 16;
+/// Sliding window (maximum match distance).
+pub const WINDOW: usize = 1 << 16;
+
+const HASH_BITS: u32 = 16;
+const HASH_SIZE: usize = 1 << HASH_BITS;
+/// Maximum chain positions examined per match attempt.
+const MAX_CHAIN: usize = 96;
+
+/// An LZ77 token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Token {
+    Literal(u8),
+    /// `dist` in `[1, WINDOW]`, `len` in `[MIN_MATCH, MAX_MATCH]`.
+    Match { len: u32, dist: u32 },
+}
+
+#[inline]
+fn hash4(data: &[u8], pos: usize) -> usize {
+    let v = u32::from_le_bytes([data[pos], data[pos + 1], data[pos + 2], data[pos + 3]]);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+/// Hash-chain match finder.
+struct MatchFinder {
+    head: Vec<i64>,
+    prev: Vec<i64>,
+}
+
+impl MatchFinder {
+    fn new() -> Self {
+        MatchFinder { head: vec![-1; HASH_SIZE], prev: vec![-1; WINDOW] }
+    }
+
+    #[inline]
+    fn insert(&mut self, data: &[u8], pos: usize) {
+        if pos + MIN_MATCH > data.len() {
+            return;
+        }
+        let h = hash4(data, pos);
+        self.prev[pos % WINDOW] = self.head[h];
+        self.head[h] = pos as i64;
+    }
+
+    /// Best `(len, dist)` match at `pos`, or `None`.
+    fn find(&self, data: &[u8], pos: usize) -> Option<(usize, usize)> {
+        if pos + MIN_MATCH > data.len() {
+            return None;
+        }
+        let max_len = (data.len() - pos).min(MAX_MATCH);
+        let mut best_len = MIN_MATCH - 1;
+        let mut best_dist = 0usize;
+        let mut cand = self.head[hash4(data, pos)];
+        let mut chain = MAX_CHAIN;
+        while cand >= 0 && chain > 0 {
+            let c = cand as usize;
+            if pos - c > WINDOW {
+                break;
+            }
+            // Cheap reject: compare the byte one past the current best.
+            if c + best_len < data.len()
+                && pos + best_len < data.len()
+                && data[c + best_len] == data[pos + best_len]
+            {
+                let mut len = 0usize;
+                while len < max_len && data[c + len] == data[pos + len] {
+                    len += 1;
+                }
+                if len > best_len {
+                    best_len = len;
+                    best_dist = pos - c;
+                    if len >= max_len {
+                        break;
+                    }
+                }
+            }
+            cand = self.prev[c % WINDOW];
+            chain -= 1;
+        }
+        if best_len >= MIN_MATCH {
+            Some((best_len, best_dist))
+        } else {
+            None
+        }
+    }
+}
+
+/// Tokenize `data` with greedy + one-step-lazy parsing.
+pub fn tokenize(data: &[u8]) -> Vec<Token> {
+    let mut tokens = Vec::with_capacity(data.len() / 4 + 8);
+    let mut mf = MatchFinder::new();
+    let mut pos = 0usize;
+    while pos < data.len() {
+        let here = mf.find(data, pos);
+        match here {
+            None => {
+                tokens.push(Token::Literal(data[pos]));
+                mf.insert(data, pos);
+                pos += 1;
+            }
+            Some((len, dist)) => {
+                // Lazy: if the next position has a strictly longer match,
+                // emit a literal instead and take the better match next turn.
+                mf.insert(data, pos);
+                let take_lazy = if pos + 1 < data.len() {
+                    match mf.find(data, pos + 1) {
+                        Some((nlen, _)) => nlen > len + 1,
+                        None => false,
+                    }
+                } else {
+                    false
+                };
+                if take_lazy {
+                    tokens.push(Token::Literal(data[pos]));
+                    pos += 1;
+                } else {
+                    tokens.push(Token::Match { len: len as u32, dist: dist as u32 });
+                    for p in pos + 1..pos + len {
+                        mf.insert(data, p);
+                    }
+                    pos += len;
+                }
+            }
+        }
+    }
+    tokens
+}
+
+/// Reconstruct bytes from a token stream (the decoder side's core loop).
+pub fn detokenize(tokens: &[Token]) -> crate::Result<Vec<u8>> {
+    let mut out: Vec<u8> = Vec::new();
+    for t in tokens {
+        match *t {
+            Token::Literal(b) => out.push(b),
+            Token::Match { len, dist } => {
+                let dist = dist as usize;
+                let len = len as usize;
+                if dist == 0 || dist > out.len() {
+                    anyhow::bail!("invalid match distance {dist} at output length {}", out.len());
+                }
+                let start = out.len() - dist;
+                // Overlapping copies are the norm (dist < len == RLE).
+                for i in 0..len {
+                    let b = out[start + i];
+                    out.push(b);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Useful stats for benchmarks / ablations.
+pub struct ParseStats {
+    pub literals: usize,
+    pub matches: usize,
+    pub match_bytes: usize,
+}
+
+pub fn parse_stats(tokens: &[Token]) -> ParseStats {
+    let mut s = ParseStats { literals: 0, matches: 0, match_bytes: 0 };
+    for t in tokens {
+        match t {
+            Token::Literal(_) => s.literals += 1,
+            Token::Match { len, .. } => {
+                s.matches += 1;
+                s.match_bytes += *len as usize;
+            }
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::test_corpus;
+
+    fn roundtrip(data: &[u8]) -> Vec<Token> {
+        let tokens = tokenize(data);
+        assert_eq!(detokenize(&tokens).unwrap(), data);
+        tokens
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        roundtrip(b"");
+        roundtrip(b"a");
+        roundtrip(b"ab");
+        roundtrip(b"abc");
+        roundtrip(b"abcd");
+    }
+
+    #[test]
+    fn repetitive_input_produces_matches() {
+        let data = test_corpus::repetitive(10_000);
+        let tokens = roundtrip(&data);
+        let stats = parse_stats(&tokens);
+        assert!(stats.matches > 0);
+        assert!(stats.match_bytes as f64 > data.len() as f64 * 0.95);
+        // Token stream should be tiny relative to input.
+        assert!(tokens.len() < 100, "{} tokens", tokens.len());
+    }
+
+    #[test]
+    fn overlapping_match_rle() {
+        // "aaaa..." forces dist=1 overlapping copies.
+        let data = vec![b'a'; 5000];
+        let tokens = roundtrip(&data);
+        assert!(tokens.len() <= 3, "{:?}", &tokens[..tokens.len().min(5)]);
+    }
+
+    #[test]
+    fn textish_roundtrip_and_gain() {
+        let data = test_corpus::textish(50_000, 1);
+        let tokens = roundtrip(&data);
+        let stats = parse_stats(&tokens);
+        assert!(stats.matches > 100);
+        assert!(stats.match_bytes > stats.literals);
+    }
+
+    #[test]
+    fn random_input_mostly_literals() {
+        let data = test_corpus::random(20_000, 2);
+        let tokens = roundtrip(&data);
+        let stats = parse_stats(&tokens);
+        assert!(stats.literals as f64 > data.len() as f64 * 0.98);
+    }
+
+    #[test]
+    fn long_range_match_within_window() {
+        let mut data = test_corpus::random(1000, 3);
+        let tail = data.clone();
+        data.extend_from_slice(&vec![b' '; 1000]);
+        data.extend_from_slice(&tail); // repeat 2000 bytes back
+        let tokens = roundtrip(&data);
+        let stats = parse_stats(&tokens);
+        assert!(stats.match_bytes >= 900, "match_bytes={}", stats.match_bytes);
+    }
+
+    #[test]
+    fn match_beyond_window_not_found() {
+        // Two identical random blocks separated by > WINDOW of random data:
+        // matches must respect the window bound (correctness of decode relies
+        // on dist <= out.len(), checked by roundtrip).
+        let block = test_corpus::random(500, 4);
+        let mut data = block.clone();
+        data.extend(test_corpus::random(WINDOW + 100, 5));
+        data.extend_from_slice(&block);
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn detokenize_rejects_bad_distance() {
+        let bad = vec![Token::Literal(b'a'), Token::Match { len: 4, dist: 9 }];
+        assert!(detokenize(&bad).is_err());
+    }
+
+    #[test]
+    fn max_match_cap_respected() {
+        let data = vec![b'x'; MAX_MATCH * 3];
+        let tokens = tokenize(&data);
+        for t in &tokens {
+            if let Token::Match { len, .. } = t {
+                assert!(*len as usize <= MAX_MATCH);
+            }
+        }
+        assert_eq!(detokenize(&tokens).unwrap(), data);
+    }
+}

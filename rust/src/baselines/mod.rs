@@ -1,0 +1,70 @@
+//! The nine baseline compressors of the paper's evaluation (Table 5).
+//!
+//! | Paper baseline | Implementation here | Family |
+//! |---|---|---|
+//! | Huffman      | [`entropy_coders::HuffmanOrder0`]  | entropy |
+//! | Arithmetic   | [`entropy_coders::ArithmeticOrder0`] | entropy |
+//! | FSE          | [`entropy_coders::FseOrder0`]      | entropy |
+//! | Gzip         | [`gzip_like::GzipLike`] (LZ77 + canonical Huffman) | dictionary |
+//! | LZMA         | [`lzma_lite::LzmaLite`] (LZ77 + context-modelled range coder) | dictionary |
+//! | Zstd-22      | [`zstd_lite::ZstdLite`] (LZ77 + FSE) | dictionary |
+//! | NNCP         | [`cm::ContextMixing`] (`nncp-sim`: 5-model logistic mixing) | neural-sim |
+//! | TRACE        | [`cm::ContextMixing`] (`trace-sim`: slim 3-model variant) | neural-sim |
+//! | PAC          | [`ppm::Ppm`] (`pac-sim`: order-3 PPM, escape method C) | neural-sim |
+//!
+//! The NN-based compressors of the paper (NNCP = online transformer,
+//! TRACE = slim transformer, PAC = MLP order model) cannot be reproduced
+//! verbatim without their GPU training loops; per DESIGN.md §2 they are
+//! substituted with adaptive statistical coders from the same
+//! "learned, adaptive, stronger-than-LZ" class, which land in the same
+//! compression band (5–12× on our corpora) and therefore preserve the
+//! paper's comparison shape.
+
+pub mod cm;
+pub mod entropy_coders;
+pub mod gzip_like;
+pub mod lz77;
+pub mod lzma_lite;
+pub mod ppm;
+pub mod zstd_lite;
+
+pub use cm::ContextMixing;
+pub use entropy_coders::{ArithmeticOrder0, FseOrder0, HuffmanOrder0};
+pub use gzip_like::GzipLike;
+pub use lzma_lite::LzmaLite;
+pub use ppm::Ppm;
+pub use zstd_lite::ZstdLite;
+
+#[cfg(test)]
+pub(crate) mod test_corpus {
+    use crate::util::Pcg64;
+
+    /// English-ish text with word repetition — exercises literals + matches.
+    pub fn textish(n: usize, seed: u64) -> Vec<u8> {
+        let words = [
+            "the", "compression", "of", "language", "model", "generated", "text", "is", "a",
+            "systems", "problem", "entropy", "token", "prediction", "arithmetic", "coding",
+        ];
+        let mut rng = Pcg64::seeded(seed);
+        let mut out = Vec::with_capacity(n + 16);
+        while out.len() < n {
+            out.extend_from_slice(rng.choose(&words).as_bytes());
+            out.push(if rng.gen_bool(0.1) { b'.' } else { b' ' });
+        }
+        out.truncate(n);
+        out
+    }
+
+    /// Highly repetitive input — exercises long matches.
+    pub fn repetitive(n: usize) -> Vec<u8> {
+        b"abcabcabcd".iter().copied().cycle().take(n).collect()
+    }
+
+    /// Incompressible input.
+    pub fn random(n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Pcg64::seeded(seed);
+        let mut v = vec![0u8; n];
+        rng.fill_bytes(&mut v);
+        v
+    }
+}

@@ -1,0 +1,360 @@
+//! PPM (Prediction by Partial Matching), escape method C, with exclusions.
+//!
+//! Stands in for the paper's **PAC** baseline (an MLP "order model" + entropy
+//! coder): PPM is the classical adaptive order-k context model and lands in
+//! the same compression band on text. Contexts of order `k..=0` are tried in
+//! turn; a miss is coded as an *escape* whose frequency equals the number of
+//! distinct symbols seen in the context (method C), with already-tried
+//! symbols excluded from lower-order totals. A final order(-1) level codes
+//! over the 256-symbol uniform alphabet.
+
+use crate::compress::Compressor;
+use crate::entropy::range::{RangeDecoder, RangeEncoder};
+use crate::Result;
+use std::collections::HashMap;
+
+/// Per-context statistics: sparse symbol counts.
+#[derive(Default, Clone)]
+struct Ctx {
+    /// (symbol, count), insertion-ordered; linear scans are fine because
+    /// text contexts rarely hold more than a few dozen symbols.
+    syms: Vec<(u8, u32)>,
+    total: u32,
+}
+
+const MAX_CTX_TOTAL: u32 = 1 << 14;
+const INC: u32 = 4;
+
+impl Ctx {
+    #[inline]
+    fn find(&self, sym: u8) -> Option<usize> {
+        self.syms.iter().position(|&(s, _)| s == sym)
+    }
+
+    fn add(&mut self, sym: u8) {
+        match self.find(sym) {
+            Some(i) => {
+                self.syms[i].1 += INC;
+                self.total += INC;
+            }
+            None => {
+                self.syms.push((sym, INC));
+                self.total += INC;
+            }
+        }
+        if self.total >= MAX_CTX_TOTAL {
+            self.rescale();
+        }
+    }
+
+    fn rescale(&mut self) {
+        self.total = 0;
+        self.syms.retain_mut(|(_, c)| {
+            *c >>= 1;
+            *c > 0
+        });
+        for &(_, c) in &self.syms {
+            self.total += c;
+        }
+    }
+
+    /// Escape frequency (method C): number of distinct symbols.
+    #[inline]
+    fn escape(&self) -> u32 {
+        self.syms.len() as u32
+    }
+}
+
+/// The shared model state; encode and decode walk it identically.
+struct PpmModel {
+    order: usize,
+    /// Context tables per order: key = last-k bytes packed into u64.
+    tables: Vec<HashMap<u64, Ctx>>,
+}
+
+impl PpmModel {
+    fn new(order: usize) -> Self {
+        assert!(order <= 8);
+        PpmModel { order, tables: (0..=order).map(|_| HashMap::new()).collect() }
+    }
+
+    #[inline]
+    fn key(history: &[u8], k: usize) -> u64 {
+        let mut key = 0u64;
+        for &b in &history[history.len() - k..] {
+            key = (key << 8) | b as u64;
+        }
+        // Tag with the order so order-0's single context is distinct.
+        key | ((k as u64) << 56)
+    }
+
+    fn update(&mut self, history: &[u8], sym: u8) {
+        for k in 0..=self.order.min(history.len()) {
+            let key = Self::key(history, k);
+            self.tables[k].entry(key).or_default().add(sym);
+        }
+    }
+}
+
+/// Encode one symbol; returns after coding (possibly several escapes).
+fn encode_symbol(model: &PpmModel, enc: &mut RangeEncoder, history: &[u8], sym: u8) {
+    let mut excluded = [false; 256];
+    let top = model.order.min(history.len());
+    for k in (0..=top).rev() {
+        let key = PpmModel::key(history, k);
+        let Some(ctx) = model.tables[k].get(&key) else { continue };
+        if ctx.syms.is_empty() {
+            continue;
+        }
+        // Build the effective table under exclusions.
+        let mut total = 0u32;
+        let mut cum_sym = None;
+        let mut freq_sym = 0u32;
+        let mut any = false;
+        for &(s, c) in &ctx.syms {
+            if excluded[s as usize] {
+                continue;
+            }
+            any = true;
+            if s == sym {
+                cum_sym = Some(total);
+                freq_sym = c;
+            }
+            total += c;
+        }
+        if !any {
+            continue; // everything excluded; this level carries no information
+        }
+        let esc = ctx.escape();
+        let grand = total + esc;
+        match cum_sym {
+            Some(cum) => {
+                enc.encode(cum, freq_sym, grand);
+                return;
+            }
+            None => {
+                // escape occupies [total, total+esc)
+                enc.encode(total, esc, grand);
+                for &(s, _) in &ctx.syms {
+                    excluded[s as usize] = true;
+                }
+            }
+        }
+    }
+    // order(-1): uniform over non-excluded bytes.
+    let mut cum = 0u32;
+    let mut total = 0u32;
+    let mut cum_sym = 0u32;
+    for b in 0..256usize {
+        if excluded[b] {
+            continue;
+        }
+        if b == sym as usize {
+            cum_sym = cum;
+        }
+        cum += 1;
+        total += 1;
+    }
+    enc.encode(cum_sym, 1, total);
+}
+
+/// Mirror of [`encode_symbol`].
+fn decode_symbol(model: &PpmModel, dec: &mut RangeDecoder, history: &[u8]) -> u8 {
+    let mut excluded = [false; 256];
+    let top = model.order.min(history.len());
+    for k in (0..=top).rev() {
+        let key = PpmModel::key(history, k);
+        let Some(ctx) = model.tables[k].get(&key) else { continue };
+        if ctx.syms.is_empty() {
+            continue;
+        }
+        let mut total = 0u32;
+        let mut any = false;
+        for &(s, c) in &ctx.syms {
+            if excluded[s as usize] {
+                continue;
+            }
+            any = true;
+            total += c;
+        }
+        if !any {
+            continue;
+        }
+        let esc = ctx.escape();
+        let grand = total + esc;
+        let target = dec.decode_freq(grand);
+        if target >= total {
+            dec.decode_update(total, esc);
+            for &(s, _) in &ctx.syms {
+                excluded[s as usize] = true;
+            }
+            continue;
+        }
+        let mut cum = 0u32;
+        for &(s, c) in &ctx.syms {
+            if excluded[s as usize] {
+                continue;
+            }
+            if target < cum + c {
+                dec.decode_update(cum, c);
+                return s;
+            }
+            cum += c;
+        }
+        unreachable!("target {target} below total {total} but no symbol matched");
+    }
+    let total = (0..256).filter(|&b| !excluded[b]).count() as u32;
+    let target = dec.decode_freq(total);
+    let mut cum = 0u32;
+    for b in 0..256usize {
+        if excluded[b] {
+            continue;
+        }
+        if target == cum {
+            dec.decode_update(cum, 1);
+            return b as u8;
+        }
+        cum += 1;
+    }
+    unreachable!("uniform level must always decode")
+}
+
+/// PPM compressor (the `pac-sim` baseline).
+pub struct Ppm {
+    order: usize,
+    name: String,
+}
+
+impl Ppm {
+    pub fn new(order: usize) -> Self {
+        Ppm { order, name: "pac".to_string() }
+    }
+
+    pub fn with_name(order: usize, name: &str) -> Self {
+        Ppm { order, name: name.to_string() }
+    }
+}
+
+impl Default for Ppm {
+    fn default() -> Self {
+        Self::new(3)
+    }
+}
+
+impl Compressor for Ppm {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn compress(&self, data: &[u8]) -> Result<Vec<u8>> {
+        let mut model = PpmModel::new(self.order);
+        let mut enc = RangeEncoder::new();
+        for (i, &b) in data.iter().enumerate() {
+            let history = &data[..i];
+            encode_symbol(&model, &mut enc, history, b);
+            model.update(history, b);
+        }
+        let mut out = Vec::with_capacity(data.len() / 3 + 16);
+        out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        out.extend_from_slice(&enc.finish());
+        Ok(out)
+    }
+
+    fn decompress(&self, data: &[u8]) -> Result<Vec<u8>> {
+        if data.len() < 8 {
+            anyhow::bail!("truncated ppm stream");
+        }
+        let n = crate::util::read_u64_le(data, 0) as usize;
+        let mut model = PpmModel::new(self.order);
+        let mut dec = RangeDecoder::new(&data[8..]);
+        let mut out: Vec<u8> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let sym = {
+                let history = &out[..];
+                decode_symbol(&model, &mut dec, history)
+            };
+            // `update` needs history without the new symbol: compute first.
+            model.update(&out, sym);
+            out.push(sym);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::test_corpus;
+
+    fn roundtrip(data: &[u8], order: usize) -> usize {
+        let c = Ppm::new(order);
+        let z = c.compress(data).unwrap();
+        assert_eq!(c.decompress(&z).unwrap(), data);
+        z.len()
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        for order in [0, 1, 3] {
+            roundtrip(b"", order);
+            roundtrip(b"a", order);
+            roundtrip(b"ab", order);
+            roundtrip(b"aaaa", order);
+        }
+    }
+
+    #[test]
+    fn textish_all_orders() {
+        let data = test_corpus::textish(20_000, 1);
+        let mut sizes = Vec::new();
+        for order in [0, 1, 2, 3] {
+            sizes.push(roundtrip(&data, order));
+        }
+        // Higher order should monotonically help on wordy text.
+        assert!(sizes[3] < sizes[1], "order3 {} vs order1 {}", sizes[3], sizes[1]);
+        assert!(sizes[1] < sizes[0], "order1 {} vs order0 {}", sizes[1], sizes[0]);
+    }
+
+    #[test]
+    fn beats_dictionary_methods_on_text() {
+        use crate::baselines::gzip_like::GzipLike;
+        let data = test_corpus::textish(50_000, 2);
+        let p = roundtrip(&data, 3);
+        let g = GzipLike::new().compress(&data).unwrap().len();
+        assert!(p < g, "ppm {p} should beat gzip-like {g} on text");
+    }
+
+    #[test]
+    fn repetitive_input() {
+        let data = test_corpus::repetitive(20_000);
+        let z = roundtrip(&data, 3);
+        assert!((data.len() as f64 / z as f64) > 20.0);
+    }
+
+    #[test]
+    fn random_input_bounded_overhead() {
+        let data = test_corpus::random(20_000, 3);
+        let z = roundtrip(&data, 3);
+        // PPM pays escape costs on incompressible data; stay within ~30%.
+        assert!(z < data.len() + data.len() * 3 / 10 + 64, "z={z}");
+    }
+
+    #[test]
+    fn all_bytes_roundtrip() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
+        roundtrip(&data, 2);
+    }
+
+    #[test]
+    fn rescale_path() {
+        // Enough repetition of a small alphabet to trigger context rescaling.
+        let data: Vec<u8> = b"ab".iter().copied().cycle().take(40_000).collect();
+        roundtrip(&data, 1);
+    }
+
+    #[test]
+    fn truncated_stream_rejected() {
+        let c = Ppm::default();
+        assert!(c.decompress(&[1, 2]).is_err());
+    }
+}

@@ -1,0 +1,97 @@
+//! Minimal `--flag value` argument parser (no CLI crates in this offline
+//! environment). Flags are `--name value` pairs; `--name` alone is a boolean.
+
+use llmzip::Result;
+use std::collections::HashMap;
+
+/// Parsed arguments: flag -> value ("" for bare booleans).
+pub struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(args: &[String]) -> Result<Args> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let Some(name) = a.strip_prefix("--") else {
+                anyhow::bail!("unexpected positional argument '{a}'");
+            };
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), String::new());
+                i += 1;
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn required(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow::anyhow!("missing required flag --{name}"))
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects a number")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_pairs_and_bools() {
+        let a = Args::parse(&sv(&["--out", "dir", "--force", "--n", "42"])).unwrap();
+        assert_eq!(a.get("out"), Some("dir"));
+        assert!(a.has("force"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 42);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(&sv(&["oops"])).is_err());
+    }
+
+    #[test]
+    fn required_flag_errors() {
+        let a = Args::parse(&sv(&[])).unwrap();
+        assert!(a.required("model").is_err());
+    }
+}

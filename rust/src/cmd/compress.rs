@@ -1,0 +1,78 @@
+//! `compress` / `decompress` / `ratio` — file-level LLM compression.
+
+use crate::cli::Args;
+use llmzip::compress::{Compressor, LlmCompressor, LlmCompressorConfig};
+use llmzip::lm::ExecutorKind;
+use llmzip::runtime::ArtifactStore;
+use llmzip::Result;
+use std::time::Instant;
+
+pub(crate) fn executor_from_str(s: &str) -> Result<ExecutorKind> {
+    Ok(match s {
+        "pjrt" | "forward" | "pjrt-forward" => ExecutorKind::PjrtForward,
+        "step" | "pjrt-step" => ExecutorKind::PjrtStep,
+        "native" => ExecutorKind::Native,
+        other => anyhow::bail!("unknown executor '{other}' (pjrt|step|native)"),
+    })
+}
+
+pub(crate) fn open_compressor(args: &Args) -> Result<LlmCompressor> {
+    let store = ArtifactStore::open(args.get("artifacts"))?;
+    let chunk = args.usize_or("chunk", 256)?;
+    let cfg = LlmCompressorConfig {
+        model: args.str_or("model", "medium"),
+        chunk_tokens: chunk,
+        stream_bytes: args.usize_or("stream", 4096.max(chunk))?,
+        executor: executor_from_str(&args.str_or("executor", "pjrt"))?,
+    };
+    LlmCompressor::open(&store, cfg)
+}
+
+pub fn compress(args: &[String]) -> Result<()> {
+    let args = Args::parse(args)?;
+    let input = std::fs::read(args.required("in")?)?;
+    let comp = open_compressor(&args)?;
+    let t0 = Instant::now();
+    let z = comp.compress(&input)?;
+    let dt = t0.elapsed();
+    std::fs::write(args.required("out")?, &z)?;
+    println!(
+        "{} -> {} bytes (ratio {:.2}x) in {:.2}s ({:.1} KiB/s, model={}, chunk={}, executor={:?})",
+        input.len(),
+        z.len(),
+        input.len() as f64 / z.len() as f64,
+        dt.as_secs_f64(),
+        input.len() as f64 / 1024.0 / dt.as_secs_f64(),
+        comp.model_config().name,
+        comp.chunk_tokens(),
+        comp.executor_kind(),
+    );
+    Ok(())
+}
+
+pub fn decompress(args: &[String]) -> Result<()> {
+    let args = Args::parse(args)?;
+    let input = std::fs::read(args.required("in")?)?;
+    let comp = open_compressor(&args)?;
+    let t0 = Instant::now();
+    let data = comp.decompress(&input)?;
+    let dt = t0.elapsed();
+    std::fs::write(args.required("out")?, &data)?;
+    println!(
+        "{} -> {} bytes (verified CRC) in {:.2}s ({:.1} KiB/s)",
+        input.len(),
+        data.len(),
+        dt.as_secs_f64(),
+        data.len() as f64 / 1024.0 / dt.as_secs_f64(),
+    );
+    Ok(())
+}
+
+pub fn ratio(args: &[String]) -> Result<()> {
+    let args = Args::parse(args)?;
+    let input = std::fs::read(args.required("in")?)?;
+    let comp = open_compressor(&args)?;
+    let z = comp.compress(&input)?;
+    println!("{:.3}", input.len() as f64 / z.len() as f64);
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! `gen-corpus` / `gen-data` — build the training corpora (procedural
+//! "human" text) and the LLM-generated evaluation datasets.
+
+use crate::cli::Args;
+use llmzip::textgen::{self, Domain};
+use llmzip::Result;
+use std::fs;
+use std::path::Path;
+
+/// Write the procedural corpora used to train the LMs:
+/// one file per domain plus a QA corpus for instruction tuning.
+pub fn gen_corpus(args: &[String]) -> Result<()> {
+    let args = Args::parse(args)?;
+    let out = args.str_or("out", "corpus");
+    let bytes = args.usize_or("bytes", 1 << 20)?;
+    let seed = args.u64_or("seed", 1)?;
+    fs::create_dir_all(&out)?;
+    for d in Domain::EVAL {
+        let data = textgen::generate(d, bytes, seed);
+        let path = Path::new(&out).join(format!("{}.txt", d.name()));
+        fs::write(&path, &data)?;
+        println!("wrote {} ({} bytes)", path.display(), data.len());
+    }
+    // TPC-H comments (Table 2) and QA corpus (instruction tuning).
+    let tpch = textgen::generate(Domain::Tpch, bytes / 4, seed);
+    fs::write(Path::new(&out).join("tpch.txt"), &tpch)?;
+    let qa = textgen::generate_qa(bytes, seed + 7);
+    fs::write(Path::new(&out).join("qa.txt"), &qa)?;
+    // Human-register movie reviews (Fig 9).
+    let mut rng = llmzip::util::Pcg64::new(seed, 77);
+    let mut imdb = Vec::new();
+    while imdb.len() < bytes / 2 {
+        imdb.extend_from_slice(textgen::web::imdb_style(&mut rng).as_bytes());
+        imdb.push(b'\n');
+    }
+    fs::write(Path::new(&out).join("imdb.txt"), &imdb)?;
+    println!("corpus complete in {out}/");
+    Ok(())
+}
+
+/// Sample the LLM-generated datasets from a trained model (requires
+/// artifacts; see `llmzip::sampling`).
+pub fn gen_data(args: &[String]) -> Result<()> {
+    let args = Args::parse(args)?;
+    let out = args.str_or("out", "data");
+    let bytes = args.usize_or("bytes", 256 * 1024)?;
+    let model = args.str_or("model", "medium");
+    fs::create_dir_all(&out)?;
+    let store = llmzip::runtime::ArtifactStore::open(args.get("artifacts"))?;
+    for d in Domain::EVAL {
+        let data = llmzip::experiments::llm_dataset(&store, &out, &model, d, bytes)?;
+        println!("dataset {}_{} ready ({} bytes)", model, d.name(), data.len());
+    }
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Experiment subcommands — thin wrappers over `llmzip::experiments`.
+
+use crate::cli::Args;
+use llmzip::analysis::{self, EntropyReport};
+use llmzip::experiments::{self, DatasetCache};
+use llmzip::runtime::ArtifactStore;
+use llmzip::textgen::Domain;
+use llmzip::Result;
+
+fn cache_from(args: &Args, default_bytes: usize) -> Result<DatasetCache> {
+    let store = ArtifactStore::open(args.get("artifacts"))?;
+    let bytes = args.usize_or("bytes", default_bytes)?;
+    Ok(DatasetCache::new(store, &args.str_or("data", "data"), bytes))
+}
+
+pub fn analyze(args: &[String]) -> Result<()> {
+    let args = Args::parse(args)?;
+    let data = std::fs::read(args.required("in")?)?;
+    let text = String::from_utf8_lossy(&data).into_owned();
+    let r = EntropyReport::measure(&text);
+    println!("bytes            {}", data.len());
+    println!("char entropy     {:.3} bits/byte", r.char_e);
+    println!("bpe entropy      {:.3} bits/byte", r.bpe_e);
+    println!("word entropy     {:.3} bits/byte", r.word_e);
+    println!("mutual info      {:.3} bits", r.mutual_info);
+    let shares = analysis::top_k_share(&text, 10);
+    for (i, sh) in shares.iter().enumerate() {
+        println!("top-10 {}-gram    {:.2}%", i + 1, sh * 100.0);
+    }
+    Ok(())
+}
+
+macro_rules! experiment {
+    ($fn_name:ident, $bytes:expr, $title:expr, $body:expr) => {
+        pub fn $fn_name(args: &[String]) -> Result<()> {
+            let args = Args::parse(args)?;
+            let mut cache = cache_from(&args, $bytes)?;
+            let model = args.str_or("model", "medium");
+            let chunk = args.usize_or("chunk", 256)?;
+            let _ = (&model, chunk);
+            #[allow(clippy::redundant_closure_call)]
+            let (header, rows) = ($body)(&mut cache, &model, chunk)?;
+            experiments::print_table($title, &header, &rows);
+            Ok(())
+        }
+    };
+}
+
+experiment!(table2, 64 * 1024, "Table 2: entropy & mutual information",
+    |c: &mut DatasetCache, m: &str, _k: usize| experiments::table2(c, m));
+experiment!(table3, 64 * 1024, "Table 3: traditional & neural compressors",
+    |c: &mut DatasetCache, m: &str, _k: usize| experiments::table3(c, m));
+experiment!(table5, 64 * 1024, "Table 5: compression ratios, all methods x all datasets",
+    |c: &mut DatasetCache, m: &str, k: usize| experiments::table5(c, m, k));
+experiment!(fig2, 64 * 1024, "Fig 2: top-10 n-gram coverage",
+    |c: &mut DatasetCache, m: &str, _k: usize| experiments::fig2(c, m));
+experiment!(fig5, 32 * 1024, "Fig 5: base vs instruction-tuned across sizes",
+    |c: &mut DatasetCache, _m: &str, k: usize| experiments::fig5(c, k));
+experiment!(fig6, 32 * 1024, "Fig 6: model scale vs ratio",
+    |c: &mut DatasetCache, _m: &str, k: usize| experiments::fig6(c, k));
+experiment!(fig7, 64 * 1024, "Fig 7: dataset scale vs ratio",
+    |c: &mut DatasetCache, m: &str, k: usize| experiments::fig7(c, m, k));
+experiment!(fig8, 32 * 1024, "Fig 8: domain-specialist models",
+    |c: &mut DatasetCache, _m: &str, k: usize| experiments::fig8(c, k));
+experiment!(fig9, 32 * 1024, "Fig 9: human vs LLM-generated, by chunk size",
+    |c: &mut DatasetCache, m: &str, _k: usize| experiments::fig9(c, m));
+
+pub fn chunk_sweep(args: &[String]) -> Result<()> {
+    let args = Args::parse(args)?;
+    let mut cache = cache_from(&args, 32 * 1024)?;
+    let domain = Domain::from_name(&args.str_or("domain", "wiki"))?;
+    let (header, rows) = experiments::chunk_sweep(&mut cache, domain)?;
+    experiments::print_table("Chunk-size sweep (§5.4)", &header, &rows);
+    Ok(())
+}

@@ -1,0 +1,7 @@
+//! CLI subcommand implementations.
+
+pub mod compress;
+pub mod data;
+pub mod experiments;
+pub mod models;
+pub mod serve;

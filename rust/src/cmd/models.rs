@@ -1,0 +1,27 @@
+//! `models` — list registered model variants and artifact availability.
+
+use llmzip::lm::config::MODELS;
+use llmzip::runtime::ArtifactStore;
+use llmzip::Result;
+
+pub fn list(_args: &[String]) -> Result<()> {
+    let store = ArtifactStore::open(None).ok();
+    println!(
+        "{:<18} {:>7} {:>7} {:>6} {:>9}  {:<10} {}",
+        "NAME", "D_MODEL", "LAYERS", "HEADS", "PARAMS", "ARTIFACTS", "SIMULATES"
+    );
+    for m in &MODELS {
+        let have = store.as_ref().map(|s| s.has_model(m.name)).unwrap_or(false);
+        println!(
+            "{:<18} {:>7} {:>7} {:>6} {:>8}K  {:<10} {}",
+            m.name,
+            m.d_model,
+            m.n_layers,
+            m.n_heads,
+            m.param_count() / 1000,
+            if have { "yes" } else { "missing" },
+            m.simulates,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! `serve` — the batched compression service over TCP.
+//!
+//! Wire protocol (little-endian):
+//!   request:  op u8 (1=compress, 2=decompress) | len u32 | payload
+//!   response: status u8 (0=ok, 1=error)        | len u32 | payload/message
+//! Connections are persistent; each request blocks until its response.
+
+use crate::cli::Args;
+use llmzip::compress::{LlmCompressor, LlmCompressorConfig};
+use llmzip::coordinator::{BatchPolicy, Server, ServerConfig};
+use llmzip::Result;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+pub fn serve(args: &[String]) -> Result<()> {
+    let args = Args::parse(args)?;
+    let model = args.str_or("model", "medium");
+    let chunk = args.usize_or("chunk", 256)?;
+    let port = args.usize_or("port", 7878)?;
+    let max_wait_ms = args.u64_or("max-wait-ms", 20)?;
+    let executor = super::compress::executor_from_str(&args.str_or("executor", "pjrt"))?;
+    let artifacts = args.get("artifacts").map(str::to_string);
+
+    let server = Server::start(
+        move || {
+            let store = llmzip::runtime::ArtifactStore::open(artifacts.as_deref())?;
+            LlmCompressor::open(
+                &store,
+                LlmCompressorConfig {
+                    model,
+                    chunk_tokens: chunk,
+                    stream_bytes: 4096.max(chunk),
+                    executor,
+                },
+            )
+        },
+        ServerConfig {
+            chunk_tokens: chunk,
+            policy: BatchPolicy {
+                lanes: 8,
+                max_wait: Duration::from_millis(max_wait_ms),
+            },
+        },
+    )?;
+    let server = Arc::new(server);
+
+    let listener = TcpListener::bind(("127.0.0.1", port as u16))?;
+    println!("llmzip serving on 127.0.0.1:{port} (chunk={chunk})");
+    loop {
+        let (stream, peer) = listener.accept()?;
+        let srv = server.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle_conn(stream, &srv) {
+                eprintln!("connection {peer}: {e:#}");
+            }
+        });
+    }
+}
+
+/// Serve one persistent connection.
+pub fn handle_conn(mut stream: TcpStream, server: &Server) -> Result<()> {
+    loop {
+        let mut hdr = [0u8; 5];
+        match stream.read_exact(&mut hdr) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(()),
+            Err(e) => return Err(e.into()),
+        }
+        let op = hdr[0];
+        let len = u32::from_le_bytes(hdr[1..5].try_into().unwrap()) as usize;
+        if len > 256 << 20 {
+            anyhow::bail!("request too large: {len}");
+        }
+        let mut payload = vec![0u8; len];
+        stream.read_exact(&mut payload)?;
+        let result = match op {
+            1 => server.compress(&payload),
+            2 => server.decompress(&payload),
+            other => Err(anyhow::anyhow!("unknown op {other}")),
+        };
+        match result {
+            Ok(data) => {
+                stream.write_all(&[0u8])?;
+                stream.write_all(&(data.len() as u32).to_le_bytes())?;
+                stream.write_all(&data)?;
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                stream.write_all(&[1u8])?;
+                stream.write_all(&(msg.len() as u32).to_le_bytes())?;
+                stream.write_all(msg.as_bytes())?;
+            }
+        }
+        stream.flush()?;
+    }
+}
+
+/// Minimal client used by examples and tests.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        Ok(Client { stream: TcpStream::connect(addr)? })
+    }
+
+    fn call(&mut self, op: u8, payload: &[u8]) -> Result<Vec<u8>> {
+        self.stream.write_all(&[op])?;
+        self.stream.write_all(&(payload.len() as u32).to_le_bytes())?;
+        self.stream.write_all(payload)?;
+        self.stream.flush()?;
+        let mut hdr = [0u8; 5];
+        self.stream.read_exact(&mut hdr)?;
+        let len = u32::from_le_bytes(hdr[1..5].try_into().unwrap()) as usize;
+        let mut data = vec![0u8; len];
+        self.stream.read_exact(&mut data)?;
+        if hdr[0] != 0 {
+            anyhow::bail!("server error: {}", String::from_utf8_lossy(&data));
+        }
+        Ok(data)
+    }
+
+    pub fn compress(&mut self, data: &[u8]) -> Result<Vec<u8>> {
+        self.call(1, data)
+    }
+
+    pub fn decompress(&mut self, data: &[u8]) -> Result<Vec<u8>> {
+        self.call(2, data)
+    }
+}

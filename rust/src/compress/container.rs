@@ -1,0 +1,236 @@
+//! Self-describing container for LLM-compressed payloads.
+//!
+//! The LLM compressor works in fixed-size chunks (paper §5.4); the container
+//! records everything decompression needs: which model, which chunk size,
+//! per-chunk compressed extents, the original length and a CRC-32 of the
+//! original bytes, verified on every decode (lossless-ness is checked, not
+//! assumed).
+//!
+//! Layout (all little-endian):
+//! ```text
+//! magic        u32   "LZP1"
+//! version      u16
+//! flags        u16
+//! orig_len     u64
+//! orig_crc32   u32
+//! chunk_tokens u32   tokens per chunk (context reset boundary)
+//! model_name   u8 len + bytes
+//! n_chunks     u32
+//! chunk table  n_chunks * { comp_len u32, n_tokens u32 }
+//! payload      concatenated chunk payloads
+//! ```
+
+use crate::util::{crc32, read_u32_le, read_u64_le};
+use crate::Result;
+
+/// Container magic: "LZP1".
+pub const CONTAINER_MAGIC: u32 = 0x3150_5A4C;
+pub const CONTAINER_VERSION: u16 = 1;
+
+/// Per-chunk entry in the table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkRecord {
+    /// Compressed byte length of this chunk's payload.
+    pub comp_len: u32,
+    /// Number of tokens (bytes, for the byte-level model) in the chunk.
+    pub n_tokens: u32,
+}
+
+/// Parsed/bundled container.
+#[derive(Clone, Debug)]
+pub struct Container {
+    pub orig_len: u64,
+    pub orig_crc32: u32,
+    pub chunk_tokens: u32,
+    pub model_name: String,
+    pub chunks: Vec<ChunkRecord>,
+    pub payload: Vec<u8>,
+}
+
+impl Container {
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.payload.len() + 64 + self.chunks.len() * 8);
+        out.extend_from_slice(&CONTAINER_MAGIC.to_le_bytes());
+        out.extend_from_slice(&CONTAINER_VERSION.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes());
+        out.extend_from_slice(&self.orig_len.to_le_bytes());
+        out.extend_from_slice(&self.orig_crc32.to_le_bytes());
+        out.extend_from_slice(&self.chunk_tokens.to_le_bytes());
+        let name = self.model_name.as_bytes();
+        assert!(name.len() <= 255);
+        out.push(name.len() as u8);
+        out.extend_from_slice(name);
+        out.extend_from_slice(&(self.chunks.len() as u32).to_le_bytes());
+        for c in &self.chunks {
+            out.extend_from_slice(&c.comp_len.to_le_bytes());
+            out.extend_from_slice(&c.n_tokens.to_le_bytes());
+        }
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Parse from bytes, validating structure (but not the CRC — that is
+    /// checked against the *decompressed* output by the caller).
+    pub fn from_bytes(data: &[u8]) -> Result<Self> {
+        if data.len() < 27 {
+            anyhow::bail!("container too short");
+        }
+        if read_u32_le(data, 0) != CONTAINER_MAGIC {
+            anyhow::bail!("bad container magic");
+        }
+        let version = u16::from_le_bytes([data[4], data[5]]);
+        if version != CONTAINER_VERSION {
+            anyhow::bail!("unsupported container version {version}");
+        }
+        let orig_len = read_u64_le(data, 8);
+        let orig_crc32 = read_u32_le(data, 16);
+        let chunk_tokens = read_u32_le(data, 20);
+        let name_len = data[24] as usize;
+        let mut pos = 25;
+        if data.len() < pos + name_len + 4 {
+            anyhow::bail!("truncated container header");
+        }
+        let model_name = String::from_utf8(data[pos..pos + name_len].to_vec())
+            .map_err(|_| anyhow::anyhow!("model name is not UTF-8"))?;
+        pos += name_len;
+        let n_chunks = read_u32_le(data, pos) as usize;
+        pos += 4;
+        if data.len() < pos + n_chunks * 8 {
+            anyhow::bail!("truncated chunk table");
+        }
+        let mut chunks = Vec::with_capacity(n_chunks);
+        let mut total_comp = 0u64;
+        let mut total_tokens = 0u64;
+        for i in 0..n_chunks {
+            let comp_len = read_u32_le(data, pos + i * 8);
+            let n_tokens = read_u32_le(data, pos + i * 8 + 4);
+            total_comp += comp_len as u64;
+            total_tokens += n_tokens as u64;
+            chunks.push(ChunkRecord { comp_len, n_tokens });
+        }
+        pos += n_chunks * 8;
+        if data.len() as u64 != pos as u64 + total_comp {
+            anyhow::bail!(
+                "container payload size mismatch: have {}, expect {}",
+                data.len() - pos,
+                total_comp
+            );
+        }
+        if total_tokens != orig_len {
+            anyhow::bail!("chunk token sum {total_tokens} != original length {orig_len}");
+        }
+        Ok(Container {
+            orig_len,
+            orig_crc32,
+            chunk_tokens,
+            model_name,
+            chunks,
+            payload: data[pos..].to_vec(),
+        })
+    }
+
+    /// Iterate `(record, payload_slice)` pairs.
+    pub fn iter_chunks(&self) -> impl Iterator<Item = (ChunkRecord, &[u8])> {
+        let mut offset = 0usize;
+        self.chunks.iter().map(move |&rec| {
+            let s = &self.payload[offset..offset + rec.comp_len as usize];
+            offset += rec.comp_len as usize;
+            (rec, s)
+        })
+    }
+
+    /// Verify a decompressed buffer against the recorded length + CRC.
+    pub fn verify(&self, decompressed: &[u8]) -> Result<()> {
+        if decompressed.len() as u64 != self.orig_len {
+            anyhow::bail!("decompressed length {} != recorded {}", decompressed.len(), self.orig_len);
+        }
+        let crc = crc32(decompressed);
+        if crc != self.orig_crc32 {
+            anyhow::bail!("CRC mismatch: {crc:#010x} != {:#010x}", self.orig_crc32);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Container {
+        Container {
+            orig_len: 1000,
+            orig_crc32: 0xDEADBEEF,
+            chunk_tokens: 256,
+            model_name: "medium".to_string(),
+            chunks: vec![
+                ChunkRecord { comp_len: 3, n_tokens: 256 },
+                ChunkRecord { comp_len: 4, n_tokens: 256 },
+                ChunkRecord { comp_len: 2, n_tokens: 256 },
+                ChunkRecord { comp_len: 1, n_tokens: 232 },
+            ],
+            payload: vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = sample();
+        let bytes = c.to_bytes();
+        let d = Container::from_bytes(&bytes).unwrap();
+        assert_eq!(d.orig_len, c.orig_len);
+        assert_eq!(d.orig_crc32, c.orig_crc32);
+        assert_eq!(d.chunk_tokens, c.chunk_tokens);
+        assert_eq!(d.model_name, c.model_name);
+        assert_eq!(d.chunks, c.chunks);
+        assert_eq!(d.payload, c.payload);
+    }
+
+    #[test]
+    fn iter_chunks_slices_payload() {
+        let c = sample();
+        let parts: Vec<Vec<u8>> = c.iter_chunks().map(|(_, s)| s.to_vec()).collect();
+        assert_eq!(parts, vec![vec![1, 2, 3], vec![4, 5, 6, 7], vec![8, 9], vec![10]]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = sample().to_bytes();
+        bytes[0] ^= 0xFF;
+        assert!(Container::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let bytes = sample().to_bytes();
+        for cut in [5, 20, 26, bytes.len() - 1] {
+            assert!(Container::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn token_sum_must_match_orig_len() {
+        let mut c = sample();
+        c.chunks[0].n_tokens += 1;
+        let bytes = c.to_bytes();
+        assert!(Container::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn verify_checks_crc_and_len() {
+        let data = b"some original data".to_vec();
+        let c = Container {
+            orig_len: data.len() as u64,
+            orig_crc32: crate::util::crc32(&data),
+            chunk_tokens: 16,
+            model_name: "m".into(),
+            chunks: vec![ChunkRecord { comp_len: 0, n_tokens: data.len() as u32 }],
+            payload: vec![],
+        };
+        assert!(c.verify(&data).is_ok());
+        assert!(c.verify(b"some original dat").is_err());
+        let mut bad = data.clone();
+        bad[0] ^= 1;
+        assert!(c.verify(&bad).is_err());
+    }
+}

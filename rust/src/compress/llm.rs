@@ -1,0 +1,562 @@
+//! The paper's contribution: LLM next-token prediction + arithmetic coding.
+//!
+//! Pipeline (paper §4): split the text into chunks of `chunk_tokens` bytes;
+//! for every position obtain `P(x_t | x_<t)` from the LM; quantize each
+//! distribution to a 16-bit cumulative table; drive the range coder with it.
+//! Decompression replays the same model autoregressively, decoding each
+//! byte from the bitstream before feeding it back.
+//!
+//! Bit-exactness contract: encode and decode MUST see identical logits at
+//! every position. This holds because (a) both sides run the same engine
+//! kind (recorded in the container and enforced on decode), (b) the model
+//! is strictly causal so logits at position `t` never depend on later
+//! tokens, and (c) quantization is a deterministic function of the f32
+//! logits (same code on both sides).
+
+use crate::compress::container::{ChunkRecord, Container};
+use crate::compress::Compressor;
+use crate::entropy::range::{RangeDecoder, RangeEncoder};
+use crate::lm::config::{self, LmConfig};
+use crate::lm::executor::{ExecutorKind, LmExecutor};
+use crate::lm::native::NativeExecutor;
+use crate::lm::weights::Weights;
+use crate::runtime::{ArtifactStore, PjrtForwardExecutor, PjrtStepExecutor};
+use crate::tokenizer::vocab::{BOS, PAD};
+use crate::util::crc32;
+use crate::Result;
+use std::cell::RefCell;
+
+const VOCAB: usize = config::VOCAB;
+/// Quantization total for the token CDF (fits the range coder's MAX_TOTAL).
+pub const CDF_TOTAL: u32 = 1 << 16;
+
+/// Softmax over the 256 byte symbols only (specials are never coded),
+/// then deterministic quantization to a cumulative table summing CDF_TOTAL.
+/// Returns `cums[257]` with `cums[256] == CDF_TOTAL`.
+pub fn logits_to_cdf(logits: &[f32]) -> [u32; 257] {
+    debug_assert!(logits.len() >= 256);
+    let bytes = &logits[..256];
+    let mut max = f32::NEG_INFINITY;
+    for &x in bytes {
+        max = max.max(x);
+    }
+    // Perf (EXPERIMENTS.md §Perf L3-1): symbols more than 12 nats below the
+    // max would quantize to the 1-count floor anyway; skipping their exp()
+    // halves-to-quarters the per-position cost. Deterministic: encoder and
+    // decoder run this exact code on identical logits.
+    let mut exps = [0.0f32; 256];
+    let mut sum = 0.0f32;
+    for (i, &x) in bytes.iter().enumerate() {
+        let d = x - max;
+        if d >= -12.0 {
+            let e = d.exp();
+            exps[i] = e;
+            sum += e;
+        }
+    }
+    let spare = 256u32;
+    let budget = (CDF_TOTAL - spare) as f32;
+    let inv = 1.0 / sum;
+    let mut freqs = [0u32; 256];
+    let mut assigned = 0u32;
+    let mut argmax = 0usize;
+    for i in 0..256 {
+        let f = (exps[i] * inv * budget) as u32 + 1;
+        freqs[i] = f;
+        assigned += f;
+        if freqs[i] > freqs[argmax] {
+            argmax = i;
+        }
+    }
+    // Deterministic leftover assignment to the most probable symbol.
+    freqs[argmax] += CDF_TOTAL - assigned;
+    let mut cums = [0u32; 257];
+    for i in 0..256 {
+        cums[i + 1] = cums[i] + freqs[i];
+    }
+    debug_assert_eq!(cums[256], CDF_TOTAL);
+    cums
+}
+
+/// Execution engine selector.
+pub enum Engine {
+    Native(NativeExecutor),
+    Forward(PjrtForwardExecutor),
+    Step(PjrtStepExecutor),
+}
+
+impl Engine {
+    fn kind(&self) -> ExecutorKind {
+        match self {
+            Engine::Native(_) => ExecutorKind::Native,
+            Engine::Forward(_) => ExecutorKind::PjrtForward,
+            Engine::Step(_) => ExecutorKind::PjrtStep,
+        }
+    }
+
+    fn lanes(&self) -> usize {
+        match self {
+            Engine::Native(e) => e.lanes(),
+            Engine::Forward(e) => e.lanes(),
+            Engine::Step(e) => e.lanes(),
+        }
+    }
+
+    fn reset(&mut self) {
+        match self {
+            Engine::Native(e) => e.reset(),
+            Engine::Forward(e) => e.reset(),
+            Engine::Step(e) => e.reset(),
+        }
+    }
+
+    fn step(&mut self, toks: &[u32]) -> Result<Vec<f32>> {
+        match self {
+            Engine::Native(e) => e.step(toks),
+            Engine::Forward(e) => e.step(toks),
+            Engine::Step(e) => e.step(toks),
+        }
+    }
+
+    /// Bulk logits for encode: lane inputs (BOS + bytes), logits for the
+    /// first `n_positions` positions per lane. Falls back to stepping for
+    /// engines without a bulk path.
+    fn encode_logits(&mut self, lanes: &[Vec<u32>], n_positions: usize) -> Result<Vec<f32>> {
+        match self {
+            Engine::Forward(e) => e.encode_logits(lanes, n_positions),
+            _ => {
+                self.reset();
+                let n_lanes = self.lanes();
+                debug_assert!(lanes.len() <= n_lanes);
+                let mut out = vec![0.0f32; lanes.len() * n_positions * VOCAB];
+                for t in 0..n_positions {
+                    let toks: Vec<u32> = (0..n_lanes)
+                        .map(|l| {
+                            lanes.get(l).and_then(|lane| lane.get(t)).copied().unwrap_or(PAD)
+                        })
+                        .collect();
+                    let logits = self.step(&toks)?;
+                    for (l, _) in lanes.iter().enumerate() {
+                        let src = &logits[l * VOCAB..(l + 1) * VOCAB];
+                        let dst = (l * n_positions + t) * VOCAB;
+                        out[dst..dst + VOCAB].copy_from_slice(src);
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+/// Configuration for [`LlmCompressor`].
+#[derive(Clone, Debug)]
+pub struct LlmCompressorConfig {
+    pub model: String,
+    /// Context window: the model's context resets every `chunk_tokens`
+    /// bytes (the paper's §5.4 "chunk size").
+    pub chunk_tokens: usize,
+    /// Arithmetic-coder stream granularity: one independent range-coded
+    /// payload (and one decode lane) per `stream_bytes` of input. Larger
+    /// streams amortize the coder flush + chunk-table overhead (~9 bytes
+    /// per stream); smaller streams give finer-grained parallel decode.
+    pub stream_bytes: usize,
+    pub executor: ExecutorKind,
+}
+
+impl Default for LlmCompressorConfig {
+    fn default() -> Self {
+        LlmCompressorConfig {
+            model: "medium".into(),
+            chunk_tokens: config::MAX_CONTEXT,
+            stream_bytes: 4 * 1024,
+            executor: ExecutorKind::PjrtForward,
+        }
+    }
+}
+
+/// The LLM-based compressor ("Ours" in Table 5).
+pub struct LlmCompressor {
+    cfg: LlmCompressorConfig,
+    model_cfg: &'static LmConfig,
+    engine: RefCell<Engine>,
+}
+
+impl LlmCompressor {
+    /// Open from an artifact store (PJRT engines) or weights (native).
+    pub fn open(store: &ArtifactStore, cfg: LlmCompressorConfig) -> Result<LlmCompressor> {
+        let model_cfg = config::by_name(&cfg.model)?;
+        if cfg.chunk_tokens == 0 || cfg.chunk_tokens > config::MAX_CONTEXT {
+            anyhow::bail!("chunk_tokens must be in 1..={}", config::MAX_CONTEXT);
+        }
+        if cfg.stream_bytes < cfg.chunk_tokens {
+            anyhow::bail!("stream_bytes must be >= chunk_tokens");
+        }
+        let engine = match cfg.executor {
+            ExecutorKind::PjrtForward => {
+                Engine::Forward(PjrtForwardExecutor::from_store(store, model_cfg)?)
+            }
+            ExecutorKind::PjrtStep => {
+                Engine::Step(PjrtStepExecutor::from_store(store, model_cfg)?)
+            }
+            ExecutorKind::Native => {
+                let weights = store.weights(model_cfg)?;
+                Engine::Native(NativeExecutor::new(model_cfg, weights, 4))
+            }
+        };
+        Ok(LlmCompressor { cfg, model_cfg, engine: RefCell::new(engine) })
+    }
+
+    /// Build directly from weights with the native engine (no artifacts/PJRT
+    /// required — used by tests and the fallback path).
+    pub fn from_weights(
+        model_cfg: &'static LmConfig,
+        weights: Weights,
+        chunk_tokens: usize,
+        lanes: usize,
+    ) -> Result<LlmCompressor> {
+        if chunk_tokens == 0 || chunk_tokens > config::MAX_CONTEXT {
+            anyhow::bail!("chunk_tokens must be in 1..={}", config::MAX_CONTEXT);
+        }
+        Ok(LlmCompressor {
+            cfg: LlmCompressorConfig {
+                model: model_cfg.name.into(),
+                chunk_tokens,
+                stream_bytes: 4 * chunk_tokens,
+                executor: ExecutorKind::Native,
+            },
+            model_cfg,
+            engine: RefCell::new(Engine::Native(NativeExecutor::new(
+                model_cfg, weights, lanes,
+            ))),
+        })
+    }
+
+    /// Override the arithmetic-coder stream granularity.
+    pub fn with_stream_bytes(mut self, stream_bytes: usize) -> Result<LlmCompressor> {
+        if stream_bytes < self.cfg.chunk_tokens {
+            anyhow::bail!("stream_bytes must be >= chunk_tokens");
+        }
+        self.cfg.stream_bytes = stream_bytes;
+        Ok(self)
+    }
+
+    pub fn stream_bytes(&self) -> usize {
+        self.cfg.stream_bytes
+    }
+
+    pub fn chunk_tokens(&self) -> usize {
+        self.cfg.chunk_tokens
+    }
+
+    /// Engine lane count — the coordinator's maximum batch width.
+    pub fn lanes(&self) -> usize {
+        self.engine.borrow_mut().lanes()
+    }
+
+    /// Executor kind tag recorded in containers produced by this compressor.
+    pub fn executor_kind(&self) -> ExecutorKind {
+        self.engine.borrow_mut().kind()
+    }
+
+    /// Model+executor tag string stored in containers.
+    pub fn container_tag(&self) -> String {
+        format!("{}:{}", self.cfg.model, self.executor_kind().as_flag())
+    }
+
+    /// Compress one batch of chunks (`chunks.len() <= lanes()`); returns a
+    /// payload per chunk. Public for the coordinator's cross-request
+    /// batching.
+    pub fn compress_chunks(&self, chunks: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+        let mut engine = self.engine.borrow_mut();
+        if chunks.len() > engine.lanes() {
+            anyhow::bail!("{} chunks > {} lanes", chunks.len(), engine.lanes());
+        }
+        self.compress_batch(&mut engine, chunks)
+    }
+
+    /// Decompress one batch of chunks (mirror of [`Self::compress_chunks`]).
+    pub fn decompress_chunks(
+        &self,
+        chunk_tokens: usize,
+        records: &[ChunkRecord],
+        payloads: &[&[u8]],
+    ) -> Result<Vec<Vec<u8>>> {
+        let mut engine = self.engine.borrow_mut();
+        if records.len() > engine.lanes() {
+            anyhow::bail!("{} chunks > {} lanes", records.len(), engine.lanes());
+        }
+        if chunk_tokens == 0 || chunk_tokens > config::MAX_CONTEXT {
+            anyhow::bail!("container chunk_tokens {chunk_tokens} out of range");
+        }
+        self.decompress_batch(&mut engine, chunk_tokens, records, payloads)
+    }
+
+    pub fn model_config(&self) -> &'static LmConfig {
+        self.model_cfg
+    }
+
+    /// Compress one batch of streams (one engine lane per stream). Each
+    /// stream is split into context windows of `chunk_tokens` bytes (the
+    /// model context resets per window) but all windows of a stream share
+    /// its range coder, amortizing the flush overhead.
+    fn compress_batch(&self, engine: &mut Engine, streams: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+        let ct = self.cfg.chunk_tokens;
+        let max_len = streams.iter().map(|s| s.len()).max().unwrap_or(0);
+        let n_windows = max_len.div_ceil(ct);
+        let mut encoders: Vec<RangeEncoder> =
+            streams.iter().map(|_| RangeEncoder::new()).collect();
+        for w in 0..n_windows {
+            // Lane input: BOS + window bytes except the last (position t
+            // codes byte t, so the final byte is never fed on encode).
+            let windows: Vec<&[u8]> = streams
+                .iter()
+                .map(|s| {
+                    let lo = (w * ct).min(s.len());
+                    let hi = ((w + 1) * ct).min(s.len());
+                    &s[lo..hi]
+                })
+                .collect();
+            let lanes: Vec<Vec<u32>> = windows
+                .iter()
+                .map(|win| {
+                    let mut lane = Vec::with_capacity(win.len());
+                    if !win.is_empty() {
+                        lane.push(BOS);
+                        lane.extend(win[..win.len() - 1].iter().map(|&b| b as u32));
+                    }
+                    lane
+                })
+                .collect();
+            let n_positions = windows.iter().map(|w| w.len()).max().unwrap_or(0);
+            if n_positions == 0 {
+                break;
+            }
+            let logits = engine.encode_logits(&lanes, n_positions)?;
+            for (l, win) in windows.iter().enumerate() {
+                let enc = &mut encoders[l];
+                for (t, &byte) in win.iter().enumerate() {
+                    let base = (l * n_positions + t) * VOCAB;
+                    let cdf = logits_to_cdf(&logits[base..base + VOCAB]);
+                    let s = byte as usize;
+                    enc.encode(cdf[s], cdf[s + 1] - cdf[s], CDF_TOTAL);
+                }
+            }
+        }
+        Ok(encoders.into_iter().map(|e| e.finish()).collect())
+    }
+
+    /// Decompress one batch of streams (lockstep lanes, context reset every
+    /// `chunk_tokens` bytes — the mirror of [`Self::compress_batch`]).
+    fn decompress_batch(
+        &self,
+        engine: &mut Engine,
+        ct: usize,
+        records: &[ChunkRecord],
+        payloads: &[&[u8]],
+    ) -> Result<Vec<Vec<u8>>> {
+        let n_lanes = engine.lanes();
+        debug_assert!(records.len() <= n_lanes);
+        let mut decoders: Vec<RangeDecoder> =
+            payloads.iter().map(|p| RangeDecoder::new(p)).collect();
+        let mut outputs: Vec<Vec<u8>> =
+            records.iter().map(|r| Vec::with_capacity(r.n_tokens as usize)).collect();
+        let n_max = records.iter().map(|r| r.n_tokens as usize).max().unwrap_or(0);
+        let n_windows = n_max.div_ceil(ct);
+        for w in 0..n_windows {
+            engine.reset();
+            let w_lo = w * ct;
+            let w_hi = (w + 1) * ct;
+            let win_max = n_max.min(w_hi) - w_lo;
+            // Feed BOS at the window start, then each decoded byte; lanes
+            // whose stream is exhausted feed PAD.
+            let mut next_feed: Vec<u32> = vec![BOS; n_lanes];
+            for t in 0..win_max {
+                let logits = engine.step(&next_feed)?;
+                for (l, rec) in records.iter().enumerate() {
+                    if w_lo + t >= rec.n_tokens as usize {
+                        next_feed[l] = PAD;
+                        continue;
+                    }
+                    let cdf = logits_to_cdf(&logits[l * VOCAB..(l + 1) * VOCAB]);
+                    let target = decoders[l].decode_freq(CDF_TOTAL);
+                    let sym = cdf.partition_point(|&c| c <= target) - 1;
+                    decoders[l].decode_update(cdf[sym], cdf[sym + 1] - cdf[sym]);
+                    outputs[l].push(sym as u8);
+                    next_feed[l] = sym as u32;
+                }
+                for lane in records.len()..n_lanes {
+                    next_feed[lane] = PAD;
+                }
+            }
+        }
+        Ok(outputs)
+    }
+}
+
+impl Compressor for LlmCompressor {
+    fn name(&self) -> &str {
+        "llm"
+    }
+
+    fn compress(&self, data: &[u8]) -> Result<Vec<u8>> {
+        let mut engine = self.engine.borrow_mut();
+        let chunks: Vec<&[u8]> = data.chunks(self.cfg.stream_bytes).collect();
+        let mut records = Vec::with_capacity(chunks.len());
+        let mut payload = Vec::new();
+        let lanes = engine.lanes();
+        for group in chunks.chunks(lanes) {
+            let compressed = self.compress_batch(&mut engine, group)?;
+            for (chunk, comp) in group.iter().zip(compressed) {
+                records.push(ChunkRecord {
+                    comp_len: comp.len() as u32,
+                    n_tokens: chunk.len() as u32,
+                });
+                payload.extend(comp);
+            }
+        }
+        let container = Container {
+            orig_len: data.len() as u64,
+            orig_crc32: crc32(data),
+            chunk_tokens: self.cfg.chunk_tokens as u32,
+            model_name: format!("{}:{}", self.cfg.model, engine.kind().as_flag()),
+            chunks: records,
+            payload,
+        };
+        Ok(container.to_bytes())
+    }
+
+    fn decompress(&self, data: &[u8]) -> Result<Vec<u8>> {
+        let container = Container::from_bytes(data)?;
+        let (model_name, exec_flag) = container
+            .model_name
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("container missing executor tag"))?;
+        let flag: u16 = exec_flag.parse()?;
+        let recorded = ExecutorKind::from_flag(flag)?;
+        let mut engine = self.engine.borrow_mut();
+        if model_name != self.cfg.model {
+            anyhow::bail!(
+                "container was compressed with model '{model_name}', this compressor uses '{}'",
+                self.cfg.model
+            );
+        }
+        if !recorded.compatible(engine.kind()) {
+            anyhow::bail!(
+                "container needs executor {recorded:?}, engine is {:?} (streams are only \
+                 bit-identical within one executor kind)",
+                engine.kind()
+            );
+        }
+        let ct = container.chunk_tokens as usize;
+        if ct == 0 || ct > config::MAX_CONTEXT {
+            anyhow::bail!("container chunk_tokens {ct} out of range");
+        }
+        let lanes = engine.lanes();
+        let all: Vec<(ChunkRecord, &[u8])> = container.iter_chunks().collect();
+        let mut out = Vec::with_capacity(container.orig_len as usize);
+        for group in all.chunks(lanes) {
+            let records: Vec<ChunkRecord> = group.iter().map(|(r, _)| *r).collect();
+            let payloads: Vec<&[u8]> = group.iter().map(|(_, p)| *p).collect();
+            let decoded = self.decompress_batch(&mut engine, ct, &records, &payloads)?;
+            for d in decoded {
+                out.extend(d);
+            }
+        }
+        container.verify(&out)?;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lm::config::by_name;
+
+    fn native_compressor(chunk: usize) -> LlmCompressor {
+        let cfg = by_name("nano").unwrap();
+        LlmCompressor::from_weights(cfg, Weights::random(cfg, 7), chunk, 2).unwrap()
+    }
+
+    #[test]
+    fn cdf_is_valid_and_deterministic() {
+        let mut rng = crate::util::Pcg64::seeded(1);
+        for _ in 0..50 {
+            let logits: Vec<f32> =
+                (0..VOCAB).map(|_| (rng.gen_f64() * 10.0 - 5.0) as f32).collect();
+            let a = logits_to_cdf(&logits);
+            let b = logits_to_cdf(&logits);
+            assert_eq!(a, b);
+            assert_eq!(a[0], 0);
+            assert_eq!(a[256], CDF_TOTAL);
+            for w in a.windows(2) {
+                assert!(w[1] > w[0], "every byte must have freq >= 1");
+            }
+        }
+    }
+
+    #[test]
+    fn cdf_tracks_probabilities() {
+        let mut logits = vec![0.0f32; VOCAB];
+        logits[65] = 10.0;
+        let cdf = logits_to_cdf(&logits);
+        let freq_a = cdf[66] - cdf[65];
+        assert!(freq_a > CDF_TOTAL * 9 / 10, "dominant symbol gets most mass: {freq_a}");
+    }
+
+    #[test]
+    fn roundtrip_with_native_engine() {
+        let c = native_compressor(32);
+        for data in [
+            b"".to_vec(),
+            b"a".to_vec(),
+            b"hello world".to_vec(),
+            crate::textgen::quick_sample(500, 3),
+        ] {
+            let z = c.compress(&data).unwrap();
+            assert_eq!(c.decompress(&z).unwrap(), data, "len {}", data.len());
+        }
+    }
+
+    #[test]
+    fn roundtrip_multi_batch_chunks() {
+        // 5 chunks across 2 lanes -> 3 lane batches, uneven tail.
+        let c = native_compressor(16);
+        let data = crate::textgen::quick_sample(75, 4);
+        let z = c.compress(&data).unwrap();
+        assert_eq!(c.decompress(&z).unwrap(), data);
+    }
+
+    #[test]
+    fn wrong_model_or_executor_rejected() {
+        let c = native_compressor(32);
+        let data = b"some test data".to_vec();
+        let mut z = c.compress(&data).unwrap();
+        // Flip the recorded executor flag: native(0) -> pjrt-step(1).
+        let mut cont = Container::from_bytes(&z).unwrap();
+        cont.model_name = "nano:1".into();
+        z = cont.to_bytes();
+        let err = c.decompress(&z).unwrap_err().to_string();
+        assert!(err.contains("executor"), "{err}");
+        let mut cont = Container::from_bytes(&c.compress(&data).unwrap()).unwrap();
+        cont.model_name = "tiny:0".into();
+        assert!(c.decompress(&cont.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn corrupted_payload_fails_crc() {
+        let c = native_compressor(32);
+        let data = crate::textgen::quick_sample(200, 5);
+        let z = c.compress(&data).unwrap();
+        let mut cont = Container::from_bytes(&z).unwrap();
+        let n = cont.payload.len();
+        cont.payload[n / 2] ^= 0x40;
+        assert!(c.decompress(&cont.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn chunk_bounds_validated() {
+        let cfg = by_name("nano").unwrap();
+        assert!(LlmCompressor::from_weights(cfg, Weights::random(cfg, 8), 0, 1).is_err());
+        assert!(LlmCompressor::from_weights(cfg, Weights::random(cfg, 8), 10_000, 1).is_err());
+    }
+}

@@ -1,0 +1,62 @@
+//! Core compression API.
+//!
+//! [`Compressor`] is the interface every method in the paper's Table 5
+//! implements — the three entropy coders, the three dictionary coders, the
+//! three neural-simulation coders (see [`crate::baselines`]) and the paper's
+//! contribution, [`LlmCompressor`].
+
+pub mod container;
+pub mod llm;
+pub mod registry;
+
+pub use container::{ChunkRecord, Container, CONTAINER_MAGIC};
+pub use llm::{LlmCompressor, LlmCompressorConfig};
+pub use registry::{baseline_by_name, all_baseline_names};
+
+use crate::Result;
+
+/// A lossless byte-stream compressor.
+///
+/// NOTE: not `Send`/`Sync` — the PJRT-backed implementation wraps
+/// thread-affine FFI handles. The coordinator owns its compressor inside a
+/// single worker thread; cross-thread access goes through channels.
+pub trait Compressor {
+    /// Short stable identifier (used by the CLI and benches), e.g. `"gzip"`.
+    fn name(&self) -> &str;
+
+    /// Compress `data` into a self-describing buffer.
+    fn compress(&self, data: &[u8]) -> Result<Vec<u8>>;
+
+    /// Invert [`Self::compress`]. Must reproduce `data` exactly.
+    fn decompress(&self, data: &[u8]) -> Result<Vec<u8>>;
+
+    /// Convenience: compression ratio on `data` (original / compressed).
+    fn ratio(&self, data: &[u8]) -> Result<f64> {
+        let c = self.compress(data)?;
+        Ok(data.len() as f64 / c.len().max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Identity;
+    impl Compressor for Identity {
+        fn name(&self) -> &str {
+            "identity"
+        }
+        fn compress(&self, data: &[u8]) -> Result<Vec<u8>> {
+            Ok(data.to_vec())
+        }
+        fn decompress(&self, data: &[u8]) -> Result<Vec<u8>> {
+            Ok(data.to_vec())
+        }
+    }
+
+    #[test]
+    fn ratio_default_impl() {
+        let c = Identity;
+        assert!((c.ratio(&[0u8; 100]).unwrap() - 1.0).abs() < 1e-12);
+    }
+}

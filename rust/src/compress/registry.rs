@@ -1,0 +1,62 @@
+//! Name-indexed registry of the nine baseline compressors — the rows of the
+//! paper's Table 5 minus "Ours" (which needs a model and lives in
+//! [`super::llm`]).
+
+use crate::baselines::{
+    ArithmeticOrder0, ContextMixing, FseOrder0, GzipLike, HuffmanOrder0, LzmaLite, Ppm, ZstdLite,
+};
+use crate::compress::Compressor;
+use crate::Result;
+
+/// Stable baseline order used by tables and benches (matches Table 5 rows).
+pub const BASELINE_NAMES: [&str; 9] =
+    ["huffman", "arithmetic", "fse", "gzip", "lzma", "zstd", "nncp", "trace", "pac"];
+
+/// All baseline names in table order.
+pub fn all_baseline_names() -> &'static [&'static str] {
+    &BASELINE_NAMES
+}
+
+/// Instantiate a baseline by name.
+pub fn baseline_by_name(name: &str) -> Result<Box<dyn Compressor>> {
+    Ok(match name {
+        "huffman" => Box::new(HuffmanOrder0),
+        "arithmetic" => Box::new(ArithmeticOrder0),
+        "fse" => Box::new(FseOrder0),
+        "gzip" => Box::new(GzipLike::new()),
+        "lzma" => Box::new(LzmaLite::new()),
+        "zstd" => Box::new(ZstdLite::new()),
+        "nncp" => Box::new(ContextMixing::nncp_sim()),
+        "trace" => Box::new(ContextMixing::trace_sim()),
+        "pac" => Box::new(Ppm::new(3)),
+        other => anyhow::bail!("unknown baseline '{other}'"),
+    })
+}
+
+/// Instantiate every baseline in table order.
+pub fn all_baselines() -> Vec<Box<dyn Compressor>> {
+    BASELINE_NAMES.iter().map(|n| baseline_by_name(n).unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_complete_and_names_match() {
+        for name in BASELINE_NAMES {
+            let c = baseline_by_name(name).unwrap();
+            assert_eq!(c.name(), name);
+        }
+        assert!(baseline_by_name("nope").is_err());
+    }
+
+    #[test]
+    fn every_baseline_roundtrips_shared_corpus() {
+        let data = crate::textgen::quick_sample(8_000, 42);
+        for c in all_baselines() {
+            let z = c.compress(&data).unwrap();
+            assert_eq!(c.decompress(&z).unwrap(), data, "{}", c.name());
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! Chunk-level dynamic batcher.
+//!
+//! Work items (one per chunk) accumulate in a queue; a batch is released
+//! when either `lanes` items are waiting (full batch) or the oldest item
+//! has waited `max_wait` (deadline flush). This is the standard
+//! continuous-batching admission policy of LLM serving systems, applied to
+//! compression chunks.
+
+use crate::compress::container::ChunkRecord;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// What kind of engine pass a work item needs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkKind {
+    Compress,
+    Decompress,
+}
+
+/// One chunk of one request.
+#[derive(Clone, Debug)]
+pub struct WorkItem {
+    pub request_id: u64,
+    pub chunk_index: u32,
+    pub kind: WorkKind,
+    /// Compress: raw bytes. Decompress: compressed payload.
+    pub data: Vec<u8>,
+    /// Decompress only: the chunk record (token count).
+    pub record: Option<ChunkRecord>,
+    pub enqueued: Instant,
+}
+
+/// Admission policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Engine lane count (maximum batch size).
+    pub lanes: usize,
+    /// Deadline: flush a partial batch once the oldest item is this old.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { lanes: 8, max_wait: Duration::from_millis(20) }
+    }
+}
+
+/// The batcher: two queues (compress/decompress passes cannot share an
+/// engine batch), FIFO within each.
+pub struct DynamicBatcher {
+    policy: BatchPolicy,
+    compress_q: VecDeque<WorkItem>,
+    decompress_q: VecDeque<WorkItem>,
+}
+
+impl DynamicBatcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        DynamicBatcher { policy, compress_q: VecDeque::new(), decompress_q: VecDeque::new() }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    pub fn push(&mut self, item: WorkItem) {
+        match item.kind {
+            WorkKind::Compress => self.compress_q.push_back(item),
+            WorkKind::Decompress => self.decompress_q.push_back(item),
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.compress_q.len() + self.decompress_q.len()
+    }
+
+    /// Pop the next batch if the policy releases one at time `now`.
+    /// Longest-waiting queue wins ties so neither op starves.
+    pub fn next_batch(&mut self, now: Instant) -> Option<(WorkKind, Vec<WorkItem>)> {
+        let ready = |q: &VecDeque<WorkItem>, lanes: usize, max_wait: Duration| -> bool {
+            q.len() >= lanes
+                || q.front().is_some_and(|i| now.duration_since(i.enqueued) >= max_wait)
+        };
+        let c_ready = ready(&self.compress_q, self.policy.lanes, self.policy.max_wait);
+        let d_ready = ready(&self.decompress_q, self.policy.lanes, self.policy.max_wait);
+        let pick_compress = match (c_ready, d_ready) {
+            (false, false) => return None,
+            (true, false) => true,
+            (false, true) => false,
+            (true, true) => {
+                let c_age = self.compress_q.front().map(|i| i.enqueued);
+                let d_age = self.decompress_q.front().map(|i| i.enqueued);
+                c_age <= d_age
+            }
+        };
+        let (q, kind) = if pick_compress {
+            (&mut self.compress_q, WorkKind::Compress)
+        } else {
+            (&mut self.decompress_q, WorkKind::Decompress)
+        };
+        let n = q.len().min(self.policy.lanes);
+        Some((kind, q.drain(..n).collect()))
+    }
+
+    /// Earliest deadline among queued items (for the worker's sleep).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        let c = self.compress_q.front().map(|i| i.enqueued + self.policy.max_wait);
+        let d = self.decompress_q.front().map(|i| i.enqueued + self.policy.max_wait);
+        match (c, d) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(id: u64, kind: WorkKind, at: Instant) -> WorkItem {
+        WorkItem {
+            request_id: id,
+            chunk_index: 0,
+            kind,
+            data: vec![1, 2, 3],
+            record: None,
+            enqueued: at,
+        }
+    }
+
+    #[test]
+    fn full_batch_releases_immediately() {
+        let mut b = DynamicBatcher::new(BatchPolicy { lanes: 3, max_wait: Duration::from_secs(10) });
+        let now = Instant::now();
+        for i in 0..3 {
+            b.push(item(i, WorkKind::Compress, now));
+        }
+        let (kind, batch) = b.next_batch(now).expect("full batch");
+        assert_eq!(kind, WorkKind::Compress);
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn partial_batch_waits_for_deadline() {
+        let mut b =
+            DynamicBatcher::new(BatchPolicy { lanes: 4, max_wait: Duration::from_millis(50) });
+        let t0 = Instant::now();
+        b.push(item(1, WorkKind::Compress, t0));
+        assert!(b.next_batch(t0).is_none(), "too early");
+        let later = t0 + Duration::from_millis(51);
+        let (_, batch) = b.next_batch(later).expect("deadline flush");
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn kinds_never_mix() {
+        let mut b = DynamicBatcher::new(BatchPolicy { lanes: 2, max_wait: Duration::ZERO });
+        let now = Instant::now();
+        b.push(item(1, WorkKind::Compress, now));
+        b.push(item(2, WorkKind::Decompress, now));
+        let (k1, b1) = b.next_batch(now + Duration::from_millis(1)).unwrap();
+        let (k2, b2) = b.next_batch(now + Duration::from_millis(1)).unwrap();
+        assert_ne!(k1, k2);
+        assert_eq!(b1.len(), 1);
+        assert_eq!(b2.len(), 1);
+    }
+
+    #[test]
+    fn oldest_queue_wins() {
+        let mut b = DynamicBatcher::new(BatchPolicy { lanes: 8, max_wait: Duration::ZERO });
+        let t0 = Instant::now();
+        b.push(item(1, WorkKind::Decompress, t0));
+        b.push(item(2, WorkKind::Compress, t0 + Duration::from_millis(5)));
+        let (kind, _) = b.next_batch(t0 + Duration::from_millis(10)).unwrap();
+        assert_eq!(kind, WorkKind::Decompress, "older item first");
+    }
+
+    #[test]
+    fn fifo_within_queue_and_lane_cap() {
+        let mut b = DynamicBatcher::new(BatchPolicy { lanes: 2, max_wait: Duration::ZERO });
+        let now = Instant::now();
+        for i in 0..5 {
+            b.push(item(i, WorkKind::Compress, now));
+        }
+        let (_, batch) = b.next_batch(now).unwrap();
+        assert_eq!(batch.iter().map(|i| i.request_id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.pending(), 3);
+    }
+
+    #[test]
+    fn randomized_never_exceeds_lanes_and_preserves_order() {
+        // Hand-rolled property test: any arrival pattern yields batches that
+        // respect the lane cap and per-request FIFO order.
+        let mut rng = crate::util::Pcg64::seeded(42);
+        for _ in 0..50 {
+            let lanes = 1 + rng.gen_index(8);
+            let mut b = DynamicBatcher::new(BatchPolicy {
+                lanes,
+                max_wait: Duration::from_millis(rng.gen_range(5) ),
+            });
+            let t0 = Instant::now();
+            let n = rng.gen_index(40);
+            for i in 0..n {
+                let kind =
+                    if rng.gen_bool(0.5) { WorkKind::Compress } else { WorkKind::Decompress };
+                let mut it = item(1, kind, t0 + Duration::from_micros(i as u64));
+                it.chunk_index = i as u32;
+                b.push(it);
+            }
+            let mut seen_c = Vec::new();
+            let mut seen_d = Vec::new();
+            let late = t0 + Duration::from_secs(1);
+            while let Some((kind, batch)) = b.next_batch(late) {
+                assert!(batch.len() <= lanes);
+                for it in batch {
+                    match kind {
+                        WorkKind::Compress => seen_c.push(it.chunk_index),
+                        WorkKind::Decompress => seen_d.push(it.chunk_index),
+                    }
+                }
+            }
+            assert!(seen_c.windows(2).all(|w| w[0] < w[1]), "compress FIFO");
+            assert!(seen_d.windows(2).all(|w| w[0] < w[1]), "decompress FIFO");
+            assert_eq!(b.pending(), 0);
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Service metrics: counters + latency/occupancy summaries.
+
+use crate::util::stats::Summary;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub chunks: AtomicU64,
+    pub batches: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+    pub errors: AtomicU64,
+    latency_ms: Mutex<Summary>,
+    occupancy: Mutex<Summary>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self, bytes_in: usize, bytes_out: usize, latency: Duration) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.bytes_in.fetch_add(bytes_in as u64, Ordering::Relaxed);
+        self.bytes_out.fetch_add(bytes_out as u64, Ordering::Relaxed);
+        self.latency_ms.lock().unwrap().add(latency.as_secs_f64() * 1e3);
+    }
+
+    pub fn record_batch(&self, items: usize, lanes: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.chunks.fetch_add(items as u64, Ordering::Relaxed);
+        self.occupancy.lock().unwrap().add(items as f64 / lanes as f64);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Human-readable snapshot.
+    pub fn report(&self) -> String {
+        let lat = self.latency_ms.lock().unwrap();
+        let occ = self.occupancy.lock().unwrap();
+        format!(
+            "requests={} chunks={} batches={} bytes_in={} bytes_out={} errors={} \
+             latency_ms[mean={:.2} max={:.2}] batch_occupancy[mean={:.2}]",
+            self.requests.load(Ordering::Relaxed),
+            self.chunks.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.bytes_in.load(Ordering::Relaxed),
+            self.bytes_out.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            lat.mean(),
+            lat.max(),
+            occ.mean(),
+        )
+    }
+
+    pub fn mean_occupancy(&self) -> f64 {
+        self.occupancy.lock().unwrap().mean()
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        self.latency_ms.lock().unwrap().mean()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_request(100, 10, Duration::from_millis(5));
+        m.record_request(200, 20, Duration::from_millis(15));
+        m.record_batch(6, 8);
+        m.record_batch(8, 8);
+        assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(m.bytes_in.load(Ordering::Relaxed), 300);
+        assert!((m.mean_occupancy() - 0.875).abs() < 1e-12);
+        assert!((m.mean_latency_ms() - 10.0).abs() < 1e-9);
+        let r = m.report();
+        assert!(r.contains("requests=2"));
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 coordinator: the batched compression service.
+//!
+//! vLLM-router-shaped: requests are split into chunk work items, items from
+//! *concurrent requests* are packed into shared `[lanes]`-wide engine
+//! batches by the [`batcher::DynamicBatcher`] (flush on full-or-deadline),
+//! one worker thread owns the engine (the GPU-analog), and the
+//! [`router`] reassembles per-request results in order. Metrics cover
+//! throughput, batch occupancy and per-request latency.
+//!
+//! No tokio in this environment: the coordinator is built on std threads +
+//! mpsc channels, which is exactly the right weight for a single-device
+//! executor anyway (one worker saturates the one CPU).
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+
+pub use batcher::{BatchPolicy, DynamicBatcher, WorkItem, WorkKind};
+pub use metrics::Metrics;
+pub use router::{Server, ServerConfig};

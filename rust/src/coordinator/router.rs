@@ -1,0 +1,437 @@
+//! Request router: intake, chunking, cross-request batching, reassembly.
+//!
+//! One worker thread owns the engine (via [`LlmCompressor`]); client
+//! threads submit requests through a channel and block on a per-request
+//! response channel. Chunks from concurrent requests share engine batches.
+
+use crate::compress::container::{ChunkRecord, Container};
+use crate::compress::llm::LlmCompressor;
+use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher, WorkItem, WorkKind};
+use crate::coordinator::metrics::Metrics;
+use crate::util::crc32;
+use crate::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub chunk_tokens: usize,
+    pub policy: BatchPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { chunk_tokens: 256, policy: BatchPolicy::default() }
+    }
+}
+
+enum Op {
+    Compress(Vec<u8>),
+    Decompress(Vec<u8>),
+}
+
+struct Request {
+    id: u64,
+    op: Op,
+    respond: SyncSender<Result<Vec<u8>>>,
+    started: Instant,
+}
+
+/// Per-request reassembly state.
+struct Pending {
+    respond: SyncSender<Result<Vec<u8>>>,
+    started: Instant,
+    kind: WorkKind,
+    /// Results by chunk index (compress: payloads; decompress: raw bytes).
+    results: Vec<Option<Vec<u8>>>,
+    remaining: usize,
+    /// Compress: original lengths per chunk + source crc/len for container.
+    chunk_sizes: Vec<u32>,
+    orig_len: u64,
+    orig_crc: u32,
+    container_chunk_tokens: u32,
+    bytes_in: usize,
+}
+
+/// The compression service.
+pub struct Server {
+    tx: SyncSender<Request>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the worker thread. The compressor is built INSIDE the worker by
+    /// `factory` because PJRT handles are thread-affine (`!Send`); the
+    /// factory itself only captures plain data.
+    pub fn start<F>(factory: F, config: ServerConfig) -> Result<Server>
+    where
+        F: FnOnce() -> Result<LlmCompressor> + Send + 'static,
+    {
+        let (tx, rx) = sync_channel::<Request>(256);
+        let metrics = Arc::new(Metrics::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let m = metrics.clone();
+        let sd = shutdown.clone();
+        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+        let worker = std::thread::Builder::new()
+            .name("llmzip-worker".into())
+            .spawn(move || {
+                let compressor = match factory() {
+                    Ok(c) => {
+                        let _ = ready_tx.send(Ok(()));
+                        c
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                worker_loop(compressor, config, rx, m, sd)
+            })
+            .expect("spawning worker");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("worker died during startup"))??;
+        Ok(Server { tx, next_id: AtomicU64::new(1), metrics, shutdown, worker: Some(worker) })
+    }
+
+    fn submit(&self, op: Op) -> Result<Vec<u8>> {
+        let (rtx, rrx) = sync_channel(1);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Request { id, op, respond: rtx, started: Instant::now() })
+            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        rrx.recv().map_err(|_| anyhow::anyhow!("server dropped the request"))?
+    }
+
+    /// Compress `data`, returning a container (blocks until done).
+    pub fn compress(&self, data: &[u8]) -> Result<Vec<u8>> {
+        self.submit(Op::Compress(data.to_vec()))
+    }
+
+    /// Decompress a container (blocks until done).
+    pub fn decompress(&self, container: &[u8]) -> Result<Vec<u8>> {
+        self.submit(Op::Decompress(container.to_vec()))
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    compressor: LlmCompressor,
+    config: ServerConfig,
+    rx: Receiver<Request>,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let lanes = compressor.lanes();
+    // Requests are split at the compressor's stream granularity; the
+    // model-context chunk size is recorded in each container.
+    let split = Split {
+        stream_bytes: compressor.stream_bytes(),
+        chunk_tokens: compressor.chunk_tokens() as u32,
+    };
+    let mut batcher = DynamicBatcher::new(BatchPolicy { lanes, ..config.policy });
+    let mut pending: HashMap<u64, Pending> = HashMap::new();
+    loop {
+        if shutdown.load(Ordering::SeqCst) && pending.is_empty() && batcher.pending() == 0 {
+            return;
+        }
+        // Intake: wait until the next deadline (or a short poll interval).
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(10));
+        match rx.recv_timeout(timeout) {
+            Ok(req) => admit(req, split, &mut batcher, &mut pending),
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                if pending.is_empty() && batcher.pending() == 0 {
+                    return;
+                }
+            }
+        }
+        // Drain without blocking to fill batches.
+        while batcher.pending() < lanes {
+            match rx.try_recv() {
+                Ok(req) => admit(req, split, &mut batcher, &mut pending),
+                Err(_) => break,
+            }
+        }
+        // Execute released batches.
+        while let Some((kind, items)) = batcher.next_batch(Instant::now()) {
+            metrics.record_batch(items.len(), lanes);
+            run_batch(&compressor, kind, items, &mut pending, &metrics, &config);
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+struct Split {
+    stream_bytes: usize,
+    chunk_tokens: u32,
+}
+
+fn admit(
+    req: Request,
+    split: Split,
+    batcher: &mut DynamicBatcher,
+    pending: &mut HashMap<u64, Pending>,
+) {
+    let now = Instant::now();
+    match req.op {
+        Op::Compress(data) => {
+            let chunks: Vec<&[u8]> = data.chunks(split.stream_bytes).collect();
+            let n = chunks.len().max(1);
+            let entry = Pending {
+                respond: req.respond,
+                started: req.started,
+                kind: WorkKind::Compress,
+                results: vec![None; n],
+                remaining: n,
+                chunk_sizes: chunks.iter().map(|c| c.len() as u32).collect(),
+                orig_len: data.len() as u64,
+                orig_crc: crc32(&data),
+                container_chunk_tokens: split.chunk_tokens,
+                bytes_in: data.len(),
+            };
+            if data.is_empty() {
+                // Zero-chunk request: answer immediately with an empty container.
+                let container = Container {
+                    orig_len: 0,
+                    orig_crc32: entry.orig_crc,
+                    chunk_tokens: entry.container_chunk_tokens,
+                    model_name: String::new(), // filled by finish(); placeholder
+                    chunks: vec![],
+                    payload: vec![],
+                };
+                let _ = entry.respond.send(Ok(container.to_bytes()));
+                return;
+            }
+            pending.insert(req.id, entry);
+            for (i, chunk) in chunks.iter().enumerate() {
+                batcher.push(WorkItem {
+                    request_id: req.id,
+                    chunk_index: i as u32,
+                    kind: WorkKind::Compress,
+                    data: chunk.to_vec(),
+                    record: None,
+                    enqueued: now,
+                });
+            }
+        }
+        Op::Decompress(bytes) => match Container::from_bytes(&bytes) {
+            Err(e) => {
+                let _ = req.respond.send(Err(e));
+            }
+            Ok(container) => {
+                let items: Vec<(ChunkRecord, Vec<u8>)> =
+                    container.iter_chunks().map(|(r, p)| (r, p.to_vec())).collect();
+                let n = items.len().max(1);
+                let entry = Pending {
+                    respond: req.respond,
+                    started: req.started,
+                    kind: WorkKind::Decompress,
+                    results: vec![None; n],
+                    remaining: items.len(),
+                    chunk_sizes: vec![],
+                    orig_len: container.orig_len,
+                    orig_crc: container.orig_crc32,
+                    container_chunk_tokens: container.chunk_tokens,
+                    bytes_in: bytes.len(),
+                };
+                if items.is_empty() {
+                    let _ = entry.respond.send(Ok(Vec::new()));
+                    return;
+                }
+                pending.insert(req.id, entry);
+                for (i, (rec, payload)) in items.into_iter().enumerate() {
+                    batcher.push(WorkItem {
+                        request_id: req.id,
+                        chunk_index: i as u32,
+                        kind: WorkKind::Decompress,
+                        data: payload,
+                        record: Some(rec),
+                        enqueued: now,
+                    });
+                }
+            }
+        },
+    }
+}
+
+fn run_batch(
+    compressor: &LlmCompressor,
+    kind: WorkKind,
+    items: Vec<WorkItem>,
+    pending: &mut HashMap<u64, Pending>,
+    metrics: &Metrics,
+    config: &ServerConfig,
+) {
+    let result = match kind {
+        WorkKind::Compress => {
+            let chunks: Vec<&[u8]> = items.iter().map(|i| i.data.as_slice()).collect();
+            compressor.compress_chunks(&chunks)
+        }
+        WorkKind::Decompress => {
+            let records: Vec<ChunkRecord> =
+                items.iter().map(|i| i.record.expect("decode item has record")).collect();
+            let payloads: Vec<&[u8]> = items.iter().map(|i| i.data.as_slice()).collect();
+            // All items in a decompress batch share the worker's configured
+            // context window (the server decodes its own containers).
+            compressor.decompress_chunks(compressor.chunk_tokens(), &records, &payloads)
+        }
+    };
+    match result {
+        Err(e) => {
+            // Fail every request that had a chunk in this batch.
+            metrics.record_error();
+            let msg = format!("batch failed: {e:#}");
+            for item in items {
+                if let Some(p) = pending.remove(&item.request_id) {
+                    let _ = p.respond.send(Err(anyhow::anyhow!(msg.clone())));
+                }
+            }
+        }
+        Ok(outputs) => {
+            for (item, out) in items.into_iter().zip(outputs) {
+                let Some(p) = pending.get_mut(&item.request_id) else { continue };
+                p.results[item.chunk_index as usize] = Some(out);
+                p.remaining -= 1;
+                if p.remaining == 0 {
+                    let p = pending.remove(&item.request_id).unwrap();
+                    finish(compressor, p, metrics, config);
+                }
+            }
+        }
+    }
+}
+
+fn finish(compressor: &LlmCompressor, p: Pending, metrics: &Metrics, _config: &ServerConfig) {
+    let response: Result<Vec<u8>> = match p.kind {
+        WorkKind::Compress => {
+            let mut records = Vec::with_capacity(p.results.len());
+            let mut payload = Vec::new();
+            for (i, r) in p.results.iter().enumerate() {
+                let bytes = r.as_ref().expect("all chunks done");
+                records.push(ChunkRecord {
+                    comp_len: bytes.len() as u32,
+                    n_tokens: p.chunk_sizes[i],
+                });
+                payload.extend_from_slice(bytes);
+            }
+            Ok(Container {
+                orig_len: p.orig_len,
+                orig_crc32: p.orig_crc,
+                chunk_tokens: p.container_chunk_tokens,
+                model_name: compressor.container_tag(),
+                chunks: records,
+                payload,
+            }
+            .to_bytes())
+        }
+        WorkKind::Decompress => {
+            let mut out = Vec::with_capacity(p.orig_len as usize);
+            for r in &p.results {
+                out.extend_from_slice(r.as_ref().expect("all chunks done"));
+            }
+            if out.len() as u64 != p.orig_len || crc32(&out) != p.orig_crc {
+                Err(anyhow::anyhow!("decompressed output failed CRC/length verification"))
+            } else {
+                Ok(out)
+            }
+        }
+    };
+    let out_len = response.as_ref().map(|v| v.len()).unwrap_or(0);
+    metrics.record_request(p.bytes_in, out_len, p.started.elapsed());
+    let _ = p.respond.send(response);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lm::config::by_name;
+    use crate::lm::weights::Weights;
+
+    fn test_server(chunk: usize, lanes: usize) -> Server {
+        Server::start(
+            move || {
+                let cfg = by_name("nano").unwrap();
+                LlmCompressor::from_weights(cfg, Weights::random(cfg, 21), chunk, lanes)
+            },
+            ServerConfig {
+                chunk_tokens: chunk,
+                policy: BatchPolicy { lanes, max_wait: Duration::from_millis(5) },
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip_through_server() {
+        let server = test_server(32, 2);
+        let data = crate::textgen::quick_sample(300, 9);
+        let z = server.compress(&data).unwrap();
+        let back = server.decompress(&z).unwrap();
+        assert_eq!(back, data);
+        assert!(server.metrics.requests.load(Ordering::Relaxed) >= 2);
+    }
+
+    #[test]
+    fn empty_request() {
+        let server = test_server(32, 2);
+        let z = server.compress(b"").unwrap();
+        assert_eq!(server.decompress(&z).unwrap(), b"");
+    }
+
+    #[test]
+    fn concurrent_requests_share_batches() {
+        let server = Arc::new(test_server(16, 4));
+        let mut handles = Vec::new();
+        for i in 0..6 {
+            let s = server.clone();
+            handles.push(std::thread::spawn(move || {
+                let data = crate::textgen::quick_sample(120 + i * 13, i as u64);
+                let z = s.compress(&data).unwrap();
+                let back = s.decompress(&z).unwrap();
+                assert_eq!(back, data);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Cross-request batching should produce fewer batches than chunks.
+        let batches = server.metrics.batches.load(Ordering::Relaxed);
+        let chunks = server.metrics.chunks.load(Ordering::Relaxed);
+        assert!(batches < chunks, "batches {batches} chunks {chunks}");
+    }
+
+    #[test]
+    fn corrupt_container_rejected() {
+        let server = test_server(32, 2);
+        assert!(server.decompress(&[1, 2, 3]).is_err());
+        let data = crate::textgen::quick_sample(400, 1);
+        let mut z = server.compress(&data).unwrap();
+        // Corrupt mid-payload (the tail bytes of a range-coded stream can be
+        // flush slack, so flip bits well inside the payload).
+        let n = z.len();
+        for i in [n / 2, n / 2 + 1, 3 * n / 4] {
+            z[i] ^= 0x55;
+        }
+        assert!(server.decompress(&z).is_err());
+    }
+}

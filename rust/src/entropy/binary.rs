@@ -1,0 +1,291 @@
+//! Adaptive binary arithmetic coder and 12-bit probability bit models.
+//!
+//! The context-mixing baselines (`nncp-sim`, `trace-sim`) and LZMA-lite code
+//! one *bit* at a time against an adaptive probability. The coder here is a
+//! binary specialization of the range coder in [`super::range`]: same carry
+//! handling, but the split point is `range * p` instead of a cumulative
+//! table walk.
+
+/// Probability precision: probabilities live in `[1, 4095]` out of 4096.
+pub const PROB_BITS: u32 = 12;
+pub const PROB_ONE: u16 = 1 << PROB_BITS;
+
+/// Adaptive probability of the next bit being 1, with shift-update.
+#[derive(Clone, Copy, Debug)]
+pub struct BitModel {
+    /// P(bit = 1) in 1/4096 units.
+    p: u16,
+    /// Adaptation rate: larger shift = slower adaptation.
+    shift: u8,
+}
+
+impl Default for BitModel {
+    fn default() -> Self {
+        BitModel::new(5)
+    }
+}
+
+impl BitModel {
+    pub fn new(shift: u8) -> Self {
+        BitModel { p: PROB_ONE / 2, shift }
+    }
+
+    #[inline]
+    pub fn prob(&self) -> u16 {
+        self.p
+    }
+
+    /// Update toward the observed bit.
+    #[inline]
+    pub fn update(&mut self, bit: u8) {
+        if bit != 0 {
+            self.p += (PROB_ONE - self.p) >> self.shift;
+        } else {
+            self.p -= self.p >> self.shift;
+        }
+        // Keep probabilities strictly inside (0, 1) so both branches stay
+        // codable.
+        self.p = self.p.clamp(1, PROB_ONE - 1);
+    }
+}
+
+const TOP: u32 = 1 << 24;
+
+/// Binary arithmetic encoder.
+pub struct BinEncoder {
+    low: u64,
+    range: u32,
+    cache: u8,
+    cache_size: u64,
+    out: Vec<u8>,
+}
+
+impl Default for BinEncoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BinEncoder {
+    pub fn new() -> Self {
+        BinEncoder { low: 0, range: u32::MAX, cache: 0, cache_size: 1, out: Vec::new() }
+    }
+
+    #[inline]
+    fn shift_low(&mut self) {
+        if self.low < 0xFF00_0000 || self.low > 0xFFFF_FFFF {
+            let carry = (self.low >> 32) as u8;
+            self.out.push(self.cache.wrapping_add(carry));
+            for _ in 1..self.cache_size {
+                self.out.push(0xFFu8.wrapping_add(carry));
+            }
+            self.cache = (self.low >> 24) as u8;
+            self.cache_size = 0;
+        }
+        self.cache_size += 1;
+        self.low = (self.low << 8) & 0xFFFF_FFFF;
+    }
+
+    /// Encode `bit` with probability `p1/4096` of being 1.
+    #[inline]
+    pub fn encode(&mut self, bit: u8, p1: u16) {
+        debug_assert!(p1 >= 1 && p1 < PROB_ONE);
+        let bound = (self.range >> PROB_BITS) * p1 as u32;
+        if bit != 0 {
+            self.range = bound;
+        } else {
+            self.low += bound as u64;
+            self.range -= bound;
+        }
+        while self.range < TOP {
+            self.shift_low();
+            self.range <<= 8;
+        }
+    }
+
+    /// Encode a bit and adapt the model.
+    #[inline]
+    pub fn encode_update(&mut self, bit: u8, model: &mut BitModel) {
+        self.encode(bit, model.prob());
+        model.update(bit);
+    }
+
+    pub fn finish(mut self) -> Vec<u8> {
+        for _ in 0..5 {
+            self.shift_low();
+        }
+        self.out
+    }
+
+    pub fn len(&self) -> usize {
+        self.out.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.out.is_empty()
+    }
+}
+
+/// Binary arithmetic decoder.
+pub struct BinDecoder<'a> {
+    code: u32,
+    range: u32,
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BinDecoder<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        let mut d = BinDecoder { code: 0, range: u32::MAX, data, pos: 1 };
+        for _ in 0..4 {
+            d.code = (d.code << 8) | d.next_byte() as u32;
+        }
+        d
+    }
+
+    #[inline]
+    fn next_byte(&mut self) -> u8 {
+        let b = if self.pos < self.data.len() { self.data[self.pos] } else { 0 };
+        self.pos += 1;
+        b
+    }
+
+    /// Decode a bit coded with probability `p1/4096`.
+    #[inline]
+    pub fn decode(&mut self, p1: u16) -> u8 {
+        let bound = (self.range >> PROB_BITS) * p1 as u32;
+        let bit = if self.code < bound {
+            self.range = bound;
+            1
+        } else {
+            self.code -= bound;
+            self.range -= bound;
+            0
+        };
+        while self.range < TOP {
+            self.code = (self.code << 8) | self.next_byte() as u32;
+            self.range <<= 8;
+        }
+        bit
+    }
+
+    /// Decode a bit and adapt the model (mirror of `encode_update`).
+    #[inline]
+    pub fn decode_update(&mut self, model: &mut BitModel) -> u8 {
+        let bit = self.decode(model.prob());
+        model.update(bit);
+        bit
+    }
+}
+
+/// Encode a byte through an adaptive 256-leaf bit tree (8 decisions).
+/// `models` must hold 256 entries; index 0 is unused, node `i` has children
+/// `2i` and `2i+1`. A shared helper for LZMA-lite literals and lengths.
+#[inline]
+pub fn encode_byte_tree(enc: &mut BinEncoder, models: &mut [BitModel], byte: u8) {
+    debug_assert!(models.len() >= 256);
+    let mut node = 1usize;
+    for i in (0..8).rev() {
+        let bit = (byte >> i) & 1;
+        enc.encode_update(bit, &mut models[node]);
+        node = (node << 1) | bit as usize;
+    }
+}
+
+/// Decode a byte written by [`encode_byte_tree`].
+#[inline]
+pub fn decode_byte_tree(dec: &mut BinDecoder, models: &mut [BitModel]) -> u8 {
+    debug_assert!(models.len() >= 256);
+    let mut node = 1usize;
+    for _ in 0..8 {
+        let bit = dec.decode_update(&mut models[node]);
+        node = (node << 1) | bit as usize;
+    }
+    (node & 0xFF) as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn fixed_prob_roundtrip() {
+        let mut rng = Pcg64::seeded(1);
+        let bits: Vec<u8> = (0..20_000).map(|_| rng.gen_bool(0.3) as u8).collect();
+        let mut enc = BinEncoder::new();
+        for &b in &bits {
+            enc.encode(b, 1228); // ~0.3 * 4096
+        }
+        let buf = enc.finish();
+        let mut dec = BinDecoder::new(&buf);
+        for &b in &bits {
+            assert_eq!(dec.decode(1228), b);
+        }
+        // Entropy(0.3) ~ 0.881 bits; allow 5% coder overhead.
+        assert!(buf.len() as f64 <= 20_000.0 * 0.881 / 8.0 * 1.05 + 16.0);
+    }
+
+    #[test]
+    fn adaptive_roundtrip() {
+        let mut rng = Pcg64::seeded(2);
+        let bits: Vec<u8> = (0..20_000).map(|_| rng.gen_bool(0.05) as u8).collect();
+        let mut enc = BinEncoder::new();
+        let mut m = BitModel::default();
+        for &b in &bits {
+            enc.encode_update(b, &mut m);
+        }
+        let buf = enc.finish();
+        let mut dec = BinDecoder::new(&buf);
+        let mut m = BitModel::default();
+        for &b in &bits {
+            assert_eq!(dec.decode_update(&mut m), b);
+        }
+        // Adaptive model should approach H(0.05) ~ 0.286 bits/bit.
+        assert!(buf.len() < 20_000 / 8 / 2, "len {}", buf.len());
+    }
+
+    #[test]
+    fn model_stays_in_open_interval() {
+        let mut m = BitModel::new(4);
+        for _ in 0..10_000 {
+            m.update(1);
+        }
+        assert!(m.prob() >= 1 && m.prob() < PROB_ONE);
+        for _ in 0..10_000 {
+            m.update(0);
+        }
+        assert!(m.prob() >= 1 && m.prob() < PROB_ONE);
+    }
+
+    #[test]
+    fn byte_tree_roundtrip() {
+        let mut rng = Pcg64::seeded(3);
+        let bytes: Vec<u8> = (0..5000).map(|_| (rng.gen_index(64) + 32) as u8).collect();
+        let mut enc = BinEncoder::new();
+        let mut models = vec![BitModel::default(); 256];
+        for &b in &bytes {
+            encode_byte_tree(&mut enc, &mut models, b);
+        }
+        let buf = enc.finish();
+        let mut dec = BinDecoder::new(&buf);
+        let mut models = vec![BitModel::default(); 256];
+        for &b in &bytes {
+            assert_eq!(decode_byte_tree(&mut dec, &mut models), b);
+        }
+        // Adaptive tree should beat raw storage on a 64-symbol alphabet.
+        assert!(buf.len() < 5000, "len {}", buf.len());
+    }
+
+    #[test]
+    fn alternating_bits_cost_about_one_bit_each() {
+        let mut enc = BinEncoder::new();
+        let mut m = BitModel::default();
+        for i in 0..8000u32 {
+            enc.encode_update((i & 1) as u8, &mut m);
+        }
+        let buf = enc.finish();
+        let per_bit = buf.len() as f64 * 8.0 / 8000.0;
+        assert!((0.9..1.2).contains(&per_bit), "{per_bit} bits/bit");
+    }
+}

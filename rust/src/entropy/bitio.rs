@@ -1,0 +1,168 @@
+//! MSB-first bit-granular I/O over byte buffers.
+//!
+//! Used by the Huffman and FSE coders. Bits are packed most-significant
+//! first within each byte so that multi-bit values written with
+//! [`BitWriter::write_bits`] read back with [`BitReader::read_bits`]
+//! independently of how they were chunked.
+
+/// Accumulating bit writer.
+#[derive(Default)]
+pub struct BitWriter {
+    out: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append the low `n` bits of `value` (MSB of the field first). `n <= 57`.
+    #[inline]
+    pub fn write_bits(&mut self, value: u64, n: u32) {
+        debug_assert!(n <= 57);
+        let mask = if n == 0 { 0 } else { u64::MAX >> (64 - n) };
+        debug_assert!(value <= mask || n == 0);
+        self.acc = (self.acc << n) | (value & mask);
+        self.nbits += n;
+        while self.nbits >= 8 {
+            self.nbits -= 8;
+            self.out.push((self.acc >> self.nbits) as u8);
+        }
+    }
+
+    /// Append a single bit.
+    #[inline]
+    pub fn write_bit(&mut self, bit: bool) {
+        self.write_bits(bit as u64, 1);
+    }
+
+    /// Number of bits written so far.
+    pub fn bit_len(&self) -> u64 {
+        self.out.len() as u64 * 8 + self.nbits as u64
+    }
+
+    /// Flush (zero-padding the final partial byte) and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            let pad = 8 - self.nbits;
+            self.out.push(((self.acc << pad) & 0xFF) as u8);
+            self.nbits = 0;
+        }
+        self.out
+    }
+}
+
+/// Bit reader over a byte slice; reads in the same MSB-first order.
+pub struct BitReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        BitReader { data, pos: 0, acc: 0, nbits: 0 }
+    }
+
+    /// Read `n` bits (MSB of the field first). Returns 0 bits past the end
+    /// (callers track logical lengths themselves).
+    #[inline]
+    pub fn read_bits(&mut self, n: u32) -> u64 {
+        debug_assert!(n <= 57);
+        while self.nbits < n {
+            let byte = if self.pos < self.data.len() { self.data[self.pos] } else { 0 };
+            self.pos += 1;
+            self.acc = (self.acc << 8) | byte as u64;
+            self.nbits += 8;
+        }
+        self.nbits -= n;
+        let v = (self.acc >> self.nbits) & if n == 0 { 0 } else { (1u64 << n) - 1 };
+        v
+    }
+
+    /// Read one bit.
+    #[inline]
+    pub fn read_bit(&mut self) -> bool {
+        self.read_bits(1) != 0
+    }
+
+    /// True once every real input byte has been consumed into the accumulator.
+    pub fn exhausted(&self) -> bool {
+        self.pos >= self.data.len() && self.nbits == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn roundtrip_single_bits() {
+        let mut w = BitWriter::new();
+        let pattern = [true, false, true, true, false, false, true, false, true, true, true];
+        for &b in &pattern {
+            w.write_bit(b);
+        }
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        for &b in &pattern {
+            assert_eq!(r.read_bit(), b);
+        }
+    }
+
+    #[test]
+    fn roundtrip_mixed_widths() {
+        let mut rng = Pcg64::seeded(100);
+        let fields: Vec<(u64, u32)> = (0..5000)
+            .map(|_| {
+                let n = 1 + rng.gen_index(32) as u32;
+                let v = rng.next_u64() & ((1u64 << n) - 1);
+                (v, n)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &(v, n) in &fields {
+            w.write_bits(v, n);
+        }
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        for &(v, n) in &fields {
+            assert_eq!(r.read_bits(n), v, "width {n}");
+        }
+    }
+
+    #[test]
+    fn zero_width_write_is_noop() {
+        let mut w = BitWriter::new();
+        w.write_bits(0, 0);
+        w.write_bits(0b101, 3);
+        w.write_bits(0, 0);
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.read_bits(0), 0);
+        assert_eq!(r.read_bits(3), 0b101);
+    }
+
+    #[test]
+    fn bit_len_counts() {
+        let mut w = BitWriter::new();
+        w.write_bits(0x3, 2);
+        assert_eq!(w.bit_len(), 2);
+        w.write_bits(0xFFF, 12);
+        assert_eq!(w.bit_len(), 14);
+        let buf = w.finish();
+        assert_eq!(buf.len(), 2); // 14 bits -> 2 bytes
+    }
+
+    #[test]
+    fn byte_alignment_msb_first() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b1010_1010, 8);
+        let buf = w.finish();
+        assert_eq!(buf, vec![0b1010_1010]);
+    }
+}

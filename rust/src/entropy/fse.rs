@@ -1,0 +1,356 @@
+//! Finite State Entropy — tabled asymmetric numeral systems (tANS).
+//!
+//! This is the paper's "FSE" baseline and the entropy stage of the
+//! Zstd-shaped `zstd_lite` baseline. Standard construction: frequencies are
+//! normalized to `1 << table_log`, spread across the state table with the
+//! golden-ratio step, encoding walks states backwards emitting variable bit
+//! counts, decoding walks forwards.
+
+use crate::entropy::{BitReader, BitWriter};
+use crate::util::floor_log2;
+use crate::Result;
+
+/// Default table log (4096 states) — Zstd's default for literals.
+pub const DEFAULT_TABLE_LOG: u32 = 12;
+
+/// Normalize raw counts so they sum to `1 << table_log`, keeping every
+/// present symbol at frequency >= 1.
+pub fn normalize_freqs(counts: &[u64], table_log: u32) -> Vec<u32> {
+    let table_size = 1u64 << table_log;
+    let total: u64 = counts.iter().sum();
+    assert!(total > 0, "cannot normalize an empty distribution");
+    let mut norm = vec![0u32; counts.len()];
+    let mut assigned: u64 = 0;
+    let mut max_idx = 0;
+    for (i, &c) in counts.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        let mut f = (c as u128 * table_size as u128 / total as u128) as u64;
+        if f == 0 {
+            f = 1;
+        }
+        norm[i] = f as u32;
+        assigned += f;
+        if counts[i] > counts[max_idx] || norm[max_idx] == 0 {
+            max_idx = i;
+        }
+    }
+    // Fix rounding drift on the most frequent symbol.
+    if assigned != table_size {
+        let diff = table_size as i64 - assigned as i64;
+        let adjusted = norm[max_idx] as i64 + diff;
+        assert!(adjusted >= 1, "normalization underflow: distribution too flat for table_log");
+        norm[max_idx] = adjusted as u32;
+    }
+    debug_assert_eq!(norm.iter().map(|&x| x as u64).sum::<u64>(), table_size);
+    norm
+}
+
+/// Spread symbols over the state table (Yann Collet's step function).
+fn spread_symbols(norm: &[u32], table_log: u32) -> Vec<u16> {
+    let table_size = 1usize << table_log;
+    let step = (table_size >> 1) + (table_size >> 3) + 3;
+    let mask = table_size - 1;
+    let mut table = vec![0u16; table_size];
+    let mut pos = 0usize;
+    for (sym, &f) in norm.iter().enumerate() {
+        for _ in 0..f {
+            table[pos] = sym as u16;
+            pos = (pos + step) & mask;
+        }
+    }
+    debug_assert_eq!(pos, 0);
+    table
+}
+
+#[derive(Clone, Copy)]
+struct DecodeEntry {
+    symbol: u16,
+    nb_bits: u8,
+    base: u32, // (x << nb_bits) - table_size
+}
+
+/// A built FSE table for one alphabet (encode + decode directions).
+pub struct FseTable {
+    table_log: u32,
+    norm: Vec<u32>,
+    decode: Vec<DecodeEntry>,
+    /// encode_state[sym][x - norm[sym]] = next state (in [TS, 2TS)).
+    encode: Vec<Vec<u32>>,
+}
+
+impl FseTable {
+    /// Build from normalized frequencies (must sum to `1 << table_log`).
+    pub fn new(norm: &[u32], table_log: u32) -> Self {
+        let table_size = 1u32 << table_log;
+        debug_assert_eq!(norm.iter().sum::<u32>(), table_size);
+        let spread = spread_symbols(norm, table_log);
+        let mut next: Vec<u32> = norm.to_vec();
+        let mut decode = vec![DecodeEntry { symbol: 0, nb_bits: 0, base: 0 }; table_size as usize];
+        let mut encode: Vec<Vec<u32>> =
+            norm.iter().map(|&f| vec![0u32; f as usize]).collect();
+        for (i, &s) in spread.iter().enumerate() {
+            let s = s as usize;
+            let x = next[s];
+            next[s] += 1;
+            let nb_bits = (table_log - floor_log2(x)) as u8;
+            decode[i] = DecodeEntry {
+                symbol: s as u16,
+                nb_bits,
+                base: (x << nb_bits) - table_size,
+            };
+            // State value for the encoder: i + table_size in [TS, 2TS).
+            encode[s][(x - norm[s]) as usize] = i as u32 + table_size;
+        }
+        FseTable { table_log, norm: norm.to_vec(), decode, encode }
+    }
+
+    pub fn table_log(&self) -> u32 {
+        self.table_log
+    }
+
+    pub fn norm(&self) -> &[u32] {
+        &self.norm
+    }
+}
+
+/// Streaming FSE encoder. Symbols MUST be fed in **reverse** order; the
+/// emitted bit-chunks are buffered and written first-symbol-first so the
+/// decoder can stream forwards.
+pub struct FseEncoder<'t> {
+    table: &'t FseTable,
+    state: u32,
+    /// (value, nb_bits) chunks, pushed in reverse symbol order.
+    chunks: Vec<(u32, u8)>,
+    primed: bool,
+}
+
+impl<'t> FseEncoder<'t> {
+    pub fn new(table: &'t FseTable) -> Self {
+        FseEncoder { table, state: 0, chunks: Vec::new(), primed: false }
+    }
+
+    /// Feed the next symbol **from the back of the message**.
+    pub fn push_reverse(&mut self, sym: usize) {
+        let f = self.table.norm[sym];
+        debug_assert!(f > 0, "symbol {sym} not in table");
+        if !self.primed {
+            // Initialize the state to the first (=last-decoded... i.e. the
+            // final) occurrence slot for this symbol: any valid state works;
+            // use the canonical x = f slot.
+            self.state = self.table.encode[sym][0];
+            self.primed = true;
+            return;
+        }
+        let table_size = 1u32 << self.table.table_log;
+        let mut x = self.state;
+        let mut nb = 0u8;
+        while x >= 2 * f {
+            nb += 1;
+            x >>= 1;
+        }
+        debug_assert!(x >= f && x < 2 * f);
+        self.chunks.push((self.state & ((1 << nb) - 1).max(0), nb));
+        let _ = table_size;
+        self.state = self.table.encode[sym][(x - f) as usize];
+    }
+
+    /// Finish: returns (initial_decoder_state, bitstream bytes).
+    pub fn finish(self) -> (u32, Vec<u8>) {
+        let mut w = BitWriter::new();
+        // Chunks were pushed last-symbol-first; decoder consumes
+        // first-symbol-first, so write them in reverse push order.
+        for &(v, nb) in self.chunks.iter().rev() {
+            w.write_bits(v as u64, nb as u32);
+        }
+        (self.state, w.finish())
+    }
+}
+
+/// Streaming FSE decoder (forward order).
+pub struct FseDecoder<'t, 'a> {
+    table: &'t FseTable,
+    state: u32,
+    reader: BitReader<'a>,
+}
+
+impl<'t, 'a> FseDecoder<'t, 'a> {
+    pub fn new(table: &'t FseTable, initial_state: u32, data: &'a [u8]) -> Self {
+        FseDecoder { table, state: initial_state, reader: BitReader::new(data) }
+    }
+
+    /// Decode the next symbol.
+    pub fn next(&mut self) -> usize {
+        let table_size = 1u32 << self.table.table_log;
+        let entry = self.table.decode[(self.state - table_size) as usize];
+        let bits = self.reader.read_bits(entry.nb_bits as u32) as u32;
+        self.state = entry.base + table_size + bits;
+        entry.symbol as usize
+    }
+}
+
+/// One-shot helper: FSE-encode a symbol slice with a prebuilt table.
+/// Returns `(initial_state, payload)`.
+pub fn encode_all(table: &FseTable, symbols: &[usize]) -> (u32, Vec<u8>) {
+    let mut enc = FseEncoder::new(table);
+    for &s in symbols.iter().rev() {
+        enc.push_reverse(s);
+    }
+    enc.finish()
+}
+
+/// One-shot helper: decode `n` symbols.
+pub fn decode_all(table: &FseTable, initial_state: u32, payload: &[u8], n: usize) -> Vec<usize> {
+    let mut dec = FseDecoder::new(table, initial_state, payload);
+    (0..n).map(|_| dec.next()).collect()
+}
+
+/// Serialize normalized frequencies compactly (u16 little-endian each).
+pub fn pack_norm(norm: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(norm.len() * 2);
+    for &f in norm {
+        debug_assert!(f < (1 << 16));
+        out.extend_from_slice(&(f as u16).to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`pack_norm`].
+pub fn unpack_norm(data: &[u8], n: usize, table_log: u32) -> Result<Vec<u32>> {
+    if data.len() < n * 2 {
+        anyhow::bail!("truncated FSE header");
+    }
+    let norm: Vec<u32> =
+        (0..n).map(|i| u16::from_le_bytes([data[i * 2], data[i * 2 + 1]]) as u32).collect();
+    if norm.iter().sum::<u32>() != 1 << table_log {
+        anyhow::bail!("corrupt FSE frequency table");
+    }
+    Ok(norm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn sample(freq_weights: &[f64], n: usize, seed: u64) -> Vec<usize> {
+        let mut rng = Pcg64::seeded(seed);
+        (0..n).map(|_| rng.choose_weighted(freq_weights)).collect()
+    }
+
+    fn roundtrip(symbols: &[usize], alphabet: usize, table_log: u32) -> usize {
+        let mut counts = vec![0u64; alphabet];
+        for &s in symbols {
+            counts[s] += 1;
+        }
+        let norm = normalize_freqs(&counts, table_log);
+        let table = FseTable::new(&norm, table_log);
+        let (state, payload) = encode_all(&table, symbols);
+        let decoded = decode_all(&table, state, &payload, symbols.len());
+        assert_eq!(decoded, symbols);
+        payload.len()
+    }
+
+    #[test]
+    fn roundtrip_uniform() {
+        let syms = sample(&[1.0; 16], 8000, 1);
+        let bytes = roundtrip(&syms, 16, 10);
+        // 4 bits/symbol ideal.
+        assert!((bytes as f64) < 8000.0 * 4.0 / 8.0 * 1.05);
+    }
+
+    #[test]
+    fn roundtrip_skewed() {
+        let mut w = vec![1.0; 64];
+        w[0] = 1000.0;
+        let syms = sample(&w, 20_000, 2);
+        let bytes = roundtrip(&syms, 64, 12);
+        // Entropy of this mixture is ~0.68 bits/sym; stay within 5%.
+        assert!((bytes as f64) < 20_000.0 * 0.68 / 8.0 * 1.05 + 16.0, "bytes {bytes}");
+    }
+
+    #[test]
+    fn roundtrip_binary_alphabet() {
+        let syms = sample(&[0.95, 0.05], 10_000, 3);
+        roundtrip(&syms, 2, 9);
+    }
+
+    #[test]
+    fn roundtrip_single_symbol() {
+        let syms = vec![5usize; 1000];
+        let mut counts = vec![0u64; 8];
+        counts[5] = 1000;
+        let norm = normalize_freqs(&counts, 6);
+        let table = FseTable::new(&norm, 6);
+        let (state, payload) = encode_all(&table, &syms);
+        let decoded = decode_all(&table, state, &payload, syms.len());
+        assert_eq!(decoded, syms);
+        // Degenerate distribution costs ~0 bits per symbol.
+        assert!(payload.len() <= 2);
+    }
+
+    #[test]
+    fn roundtrip_all_bytes() {
+        let mut rng = Pcg64::seeded(4);
+        let syms: Vec<usize> = (0..30_000)
+            .map(|_| if rng.gen_bool(0.7) { rng.gen_index(16) + 90 } else { rng.gen_index(256) })
+            .collect();
+        roundtrip(&syms, 256, 12);
+    }
+
+    #[test]
+    fn normalize_sums_to_table_size() {
+        let mut rng = Pcg64::seeded(5);
+        for _ in 0..50 {
+            let counts: Vec<u64> = (0..100).map(|_| rng.gen_range(1000)).collect();
+            if counts.iter().sum::<u64>() == 0 {
+                continue;
+            }
+            let norm = normalize_freqs(&counts, 12);
+            assert_eq!(norm.iter().sum::<u32>(), 1 << 12);
+            for (i, &c) in counts.iter().enumerate() {
+                assert_eq!(c > 0, norm[i] > 0, "presence must be preserved");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_norm_roundtrip() {
+        let counts = vec![3u64, 0, 10, 1, 1, 500];
+        let norm = normalize_freqs(&counts, 10);
+        let packed = pack_norm(&norm);
+        let restored = unpack_norm(&packed, norm.len(), 10).unwrap();
+        assert_eq!(restored, norm);
+    }
+
+    #[test]
+    fn unpack_rejects_bad_sum() {
+        let bad = pack_norm(&[1, 2, 3]);
+        assert!(unpack_norm(&bad, 3, 10).is_err());
+    }
+
+    #[test]
+    fn compression_close_to_entropy() {
+        // Geometric-ish distribution; measured bits/sym should be within 3%
+        // of Shannon entropy (FSE is near-optimal).
+        let w: Vec<f64> = (0..32).map(|i| 0.7f64.powi(i)).collect();
+        let syms = sample(&w, 50_000, 6);
+        let mut counts = vec![0u64; 32];
+        for &s in &syms {
+            counts[s] += 1;
+        }
+        let total: f64 = syms.len() as f64;
+        let entropy: f64 = counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / total;
+                -p * p.log2()
+            })
+            .sum();
+        let bytes = roundtrip(&syms, 32, 12);
+        let bits_per_sym = bytes as f64 * 8.0 / total;
+        assert!(bits_per_sym < entropy * 1.03 + 0.02, "{bits_per_sym} vs H={entropy}");
+    }
+}

@@ -1,0 +1,26 @@
+//! Entropy-coding substrate.
+//!
+//! Everything the paper's baselines and the LLM compressor need to turn
+//! probability models into bits:
+//!
+//! * [`bitio`] — MSB-first bit reader/writer.
+//! * [`range`] — byte-oriented carry-propagating range coder (LZMA-style),
+//!   the backend for the LLM arithmetic coder, PPM and LZMA-lite.
+//! * [`binary`] — adaptive binary arithmetic coder + 12-bit bit models,
+//!   the backend for the context-mixing coders.
+//! * [`huffman`] — canonical, length-limited Huffman coding.
+//! * [`fse`] — tabled asymmetric numeral system (tANS), i.e. Finite State
+//!   Entropy, Zstd's entropy stage.
+//! * [`arith`] — order-0 static & adaptive arithmetic coders over bytes
+//!   (the paper's "Arithmetic" baseline).
+
+pub mod arith;
+pub mod binary;
+pub mod bitio;
+pub mod fse;
+pub mod huffman;
+pub mod range;
+
+pub use binary::{BinDecoder, BinEncoder, BitModel};
+pub use bitio::{BitReader, BitWriter};
+pub use range::{RangeDecoder, RangeEncoder};

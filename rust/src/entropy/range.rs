@@ -1,0 +1,317 @@
+//! Byte-oriented range coder with carry propagation (LZMA lineage).
+//!
+//! This is the entropy backend of the paper's contribution: the LLM
+//! compressor quantizes each next-token distribution to a cumulative
+//! frequency table and feeds `(cum, freq, total)` triples to this coder.
+//! It is also used by the PPM baseline and LZMA-lite.
+//!
+//! Invariants: `total <= 1 << 22` (so `range / total` never underflows the
+//! 24-bit renormalization threshold) and `freq >= 1` for every encodable
+//! symbol.
+
+/// Renormalization threshold — top 8 bits flushed when range drops below it.
+const TOP: u32 = 1 << 24;
+
+/// Maximum supported cumulative total.
+pub const MAX_TOTAL: u32 = 1 << 22;
+
+/// Range encoder writing to an internal buffer.
+pub struct RangeEncoder {
+    low: u64,
+    range: u32,
+    cache: u8,
+    cache_size: u64,
+    out: Vec<u8>,
+}
+
+impl Default for RangeEncoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RangeEncoder {
+    pub fn new() -> Self {
+        RangeEncoder { low: 0, range: u32::MAX, cache: 0, cache_size: 1, out: Vec::new() }
+    }
+
+    #[inline]
+    fn shift_low(&mut self) {
+        if self.low < 0xFF00_0000 || self.low > 0xFFFF_FFFF {
+            let carry = (self.low >> 32) as u8;
+            self.out.push(self.cache.wrapping_add(carry));
+            for _ in 1..self.cache_size {
+                self.out.push(0xFFu8.wrapping_add(carry));
+            }
+            self.cache = (self.low >> 24) as u8;
+            self.cache_size = 0;
+        }
+        self.cache_size += 1;
+        self.low = (self.low << 8) & 0xFFFF_FFFF;
+    }
+
+    /// Encode a symbol occupying `[cum, cum+freq)` out of `total`.
+    #[inline]
+    pub fn encode(&mut self, cum: u32, freq: u32, total: u32) {
+        debug_assert!(freq > 0, "zero-frequency symbol");
+        debug_assert!(cum + freq <= total);
+        debug_assert!(total <= MAX_TOTAL);
+        let r = self.range / total;
+        self.low += r as u64 * cum as u64;
+        self.range = r * freq;
+        while self.range < TOP {
+            self.shift_low();
+            self.range <<= 8;
+        }
+    }
+
+    /// Encode `n` raw bits (uniform distribution), MSB first. `n <= 30`.
+    #[inline]
+    pub fn encode_direct_bits(&mut self, value: u32, n: u32) {
+        debug_assert!(n <= 30);
+        for i in (0..n).rev() {
+            let bit = (value >> i) & 1;
+            self.range >>= 1;
+            self.low += self.range as u64 * bit as u64;
+            while self.range < TOP {
+                self.shift_low();
+                self.range <<= 8;
+            }
+        }
+    }
+
+    /// Flush and return the encoded bytes.
+    pub fn finish(mut self) -> Vec<u8> {
+        for _ in 0..5 {
+            self.shift_low();
+        }
+        self.out
+    }
+
+    /// Bytes emitted so far (an underestimate until `finish`).
+    pub fn len(&self) -> usize {
+        self.out.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.out.is_empty()
+    }
+}
+
+/// Range decoder over an encoded byte slice.
+pub struct RangeDecoder<'a> {
+    code: u32,
+    range: u32,
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> RangeDecoder<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        // First byte emitted by the encoder is the initial (zero) cache.
+        let mut d = RangeDecoder { code: 0, range: u32::MAX, data, pos: 1 };
+        for _ in 0..4 {
+            d.code = (d.code << 8) | d.next_byte() as u32;
+        }
+        d
+    }
+
+    #[inline]
+    fn next_byte(&mut self) -> u8 {
+        let b = if self.pos < self.data.len() { self.data[self.pos] } else { 0 };
+        self.pos += 1;
+        b
+    }
+
+    /// First decode phase: return a value in `[0, total)`; the caller maps it
+    /// to a symbol via its cumulative table then calls [`Self::decode_update`].
+    #[inline]
+    pub fn decode_freq(&mut self, total: u32) -> u32 {
+        debug_assert!(total <= MAX_TOTAL);
+        self.range /= total;
+        (self.code / self.range).min(total - 1)
+    }
+
+    /// Second decode phase: commit the symbol `[cum, cum+freq)`.
+    #[inline]
+    pub fn decode_update(&mut self, cum: u32, freq: u32) {
+        self.code -= cum * self.range;
+        self.range *= freq;
+        while self.range < TOP {
+            self.code = (self.code << 8) | self.next_byte() as u32;
+            self.range <<= 8;
+        }
+    }
+
+    /// Decode `n` raw bits written by [`RangeEncoder::encode_direct_bits`].
+    #[inline]
+    pub fn decode_direct_bits(&mut self, n: u32) -> u32 {
+        let mut value = 0u32;
+        for _ in 0..n {
+            self.range >>= 1;
+            let bit = if self.code >= self.range {
+                self.code -= self.range;
+                1
+            } else {
+                0
+            };
+            value = (value << 1) | bit;
+            while self.range < TOP {
+                self.code = (self.code << 8) | self.next_byte() as u32;
+                self.range <<= 8;
+            }
+        }
+        value
+    }
+
+    /// Bytes consumed so far.
+    pub fn consumed(&self) -> usize {
+        self.pos.min(self.data.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    /// Encode/decode a symbol stream against a fixed frequency table.
+    fn roundtrip_with_freqs(symbols: &[usize], freqs: &[u32]) {
+        let total: u32 = freqs.iter().sum();
+        let mut cums = vec![0u32; freqs.len() + 1];
+        for i in 0..freqs.len() {
+            cums[i + 1] = cums[i] + freqs[i];
+        }
+        let mut enc = RangeEncoder::new();
+        for &s in symbols {
+            enc.encode(cums[s], freqs[s], total);
+        }
+        let buf = enc.finish();
+        let mut dec = RangeDecoder::new(&buf);
+        for &s in symbols {
+            let f = dec.decode_freq(total);
+            let sym = cums.partition_point(|&c| c <= f) - 1;
+            assert_eq!(sym, s);
+            dec.decode_update(cums[sym], freqs[sym]);
+        }
+    }
+
+    #[test]
+    fn roundtrip_uniform() {
+        let mut rng = Pcg64::seeded(1);
+        let freqs = vec![1u32; 256];
+        let syms: Vec<usize> = (0..10_000).map(|_| rng.gen_index(256)).collect();
+        roundtrip_with_freqs(&syms, &freqs);
+    }
+
+    #[test]
+    fn roundtrip_skewed() {
+        let mut rng = Pcg64::seeded(2);
+        let freqs: Vec<u32> = (0..16).map(|i| 1 << i).collect(); // heavy skew
+        let total: u32 = freqs.iter().sum();
+        let syms: Vec<usize> = (0..10_000)
+            .map(|_| {
+                let mut t = rng.gen_range(total as u64) as u32;
+                for (i, &f) in freqs.iter().enumerate() {
+                    if t < f {
+                        return i;
+                    }
+                    t -= f;
+                }
+                freqs.len() - 1
+            })
+            .collect();
+        roundtrip_with_freqs(&syms, &freqs);
+    }
+
+    #[test]
+    fn roundtrip_large_total() {
+        // 16-bit quantized CDF like the LLM coder uses.
+        let mut rng = Pcg64::seeded(3);
+        let mut freqs = vec![1u32; 300];
+        freqs[7] = 60_000; // one dominant token
+        let syms: Vec<usize> =
+            (0..5_000).map(|_| if rng.gen_bool(0.9) { 7 } else { rng.gen_index(300) }).collect();
+        roundtrip_with_freqs(&syms, &freqs);
+    }
+
+    #[test]
+    fn skewed_stream_is_small() {
+        // A 99%-probable symbol should code well under 1 bit each.
+        let freqs = vec![990u32, 10];
+        let syms = vec![0usize; 10_000];
+        let total: u32 = freqs.iter().sum();
+        let mut enc = RangeEncoder::new();
+        for &s in &syms {
+            enc.encode(if s == 0 { 0 } else { 990 }, freqs[s], total);
+        }
+        let buf = enc.finish();
+        // Entropy is ~0.0145 bits/symbol => ~18 bytes + overhead.
+        assert!(buf.len() < 60, "len {}", buf.len());
+    }
+
+    #[test]
+    fn direct_bits_roundtrip() {
+        let mut rng = Pcg64::seeded(4);
+        let values: Vec<(u32, u32)> = (0..2000)
+            .map(|_| {
+                let n = 1 + rng.gen_index(24) as u32;
+                (rng.next_u32() & ((1 << n) - 1), n)
+            })
+            .collect();
+        let mut enc = RangeEncoder::new();
+        for &(v, n) in &values {
+            enc.encode_direct_bits(v, n);
+        }
+        let buf = enc.finish();
+        let mut dec = RangeDecoder::new(&buf);
+        for &(v, n) in &values {
+            assert_eq!(dec.decode_direct_bits(n), v);
+        }
+    }
+
+    #[test]
+    fn mixed_symbols_and_direct_bits() {
+        let mut rng = Pcg64::seeded(5);
+        let freqs = [5u32, 10, 1, 100];
+        let cums = [0u32, 5, 15, 16];
+        let total = 116;
+        let ops: Vec<(bool, u32)> = (0..4000)
+            .map(|_| {
+                if rng.gen_bool(0.5) {
+                    (true, rng.gen_index(4) as u32)
+                } else {
+                    (false, rng.next_u32() & 0xFFF)
+                }
+            })
+            .collect();
+        let mut enc = RangeEncoder::new();
+        for &(is_sym, v) in &ops {
+            if is_sym {
+                enc.encode(cums[v as usize], freqs[v as usize], total);
+            } else {
+                enc.encode_direct_bits(v, 12);
+            }
+        }
+        let buf = enc.finish();
+        let mut dec = RangeDecoder::new(&buf);
+        for &(is_sym, v) in &ops {
+            if is_sym {
+                let f = dec.decode_freq(total);
+                let sym = (0..4).find(|&s| f < cums[s] + freqs[s]).unwrap();
+                assert_eq!(sym as u32, v);
+                dec.decode_update(cums[sym], freqs[sym]);
+            } else {
+                assert_eq!(dec.decode_direct_bits(12), v);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_stream() {
+        let enc = RangeEncoder::new();
+        let buf = enc.finish();
+        assert_eq!(buf.len(), 5);
+        let _ = RangeDecoder::new(&buf); // must not panic
+    }
+}

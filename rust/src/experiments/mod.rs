@@ -1,0 +1,34 @@
+//! Experiment drivers that regenerate every table and figure of the paper's
+//! evaluation (§5). Shared by the CLI (`llmzip table5` etc.) and the bench
+//! harness. Results are returned structurally and printed as aligned
+//! tables; EXPERIMENTS.md records paper-vs-measured for each.
+
+pub mod datasets;
+pub mod tables;
+
+pub use datasets::{human_text, llm_dataset, DatasetCache, GENERATOR_MODEL};
+pub use tables::*;
+
+/// Print an aligned table: header row + data rows.
+pub fn print_table(title: &str, header: &[String], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        let mut line = String::new();
+        for i in 0..ncol {
+            let cell = cells.get(i).map(String::as_str).unwrap_or("");
+            line.push_str(&format!("{:<width$}  ", cell, width = widths[i]));
+        }
+        println!("{}", line.trim_end());
+    };
+    fmt_row(header);
+    for row in rows {
+        fmt_row(row);
+    }
+}

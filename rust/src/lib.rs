@@ -1,0 +1,36 @@
+//! # llmzip — lossless compression of LLM-generated text via next-token prediction
+//!
+//! Reproduction of *"Lossless Compression of Large Language Model-Generated
+//! Text via Next-Token Prediction"* (Mao, Pirk, Xue — CS.LG 2025) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1** — Pallas kernels (build-time Python, `python/compile/kernels/`)
+//! * **L2** — JAX byte-level transformer (build-time Python, lowered to HLO
+//!   text artifacts under `artifacts/`)
+//! * **L3** — this crate: the request-path coordinator, PJRT runtime,
+//!   arithmetic coder, all nine baseline compressors, the procedural corpus
+//!   generators, the dataset factory and the analysis toolkit.
+//!
+//! The public entry points are [`compress::Compressor`] (the trait every
+//! compressor in the paper's Table 5 implements), [`compress::LlmCompressor`]
+//! (the paper's contribution), and [`coordinator::Server`] (the batched
+//! compression service).
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record of every table and figure.
+
+pub mod analysis;
+pub mod baselines;
+pub mod compress;
+pub mod coordinator;
+pub mod entropy;
+pub mod experiments;
+pub mod lm;
+pub mod runtime;
+pub mod sampling;
+pub mod textgen;
+pub mod tokenizer;
+pub mod util;
+
+/// Crate-wide result type (thin alias over `anyhow`).
+pub type Result<T> = anyhow::Result<T>;

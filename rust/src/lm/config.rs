@@ -1,0 +1,165 @@
+//! Model registry — MUST mirror `python/compile/configs.py` (the AOT side
+//! owns training; this side owns serving). A mismatch is caught at weights
+//! load time via shape checks against the manifest.
+
+use crate::Result;
+
+/// Vocabulary size (256 bytes + specials; see `tokenizer::vocab`).
+pub const VOCAB: usize = 272;
+/// Maximum context length = maximum chunk size (paper §5.4 sweeps up to 256).
+pub const MAX_CONTEXT: usize = 256;
+
+/// Batch shapes the HLO artifacts were lowered with
+/// (`python/compile/configs.py`).
+pub const FORWARD_BATCH: usize = 8;
+pub const STEP_BATCH: usize = 32;
+pub const GEN_BATCH: usize = 16;
+pub const GEN_PROMPT: usize = 16;
+pub const GEN_TOKENS: usize = 240;
+
+/// One model variant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LmConfig {
+    pub name: &'static str,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// Which paper model this tier stands in for (DESIGN.md §6).
+    pub simulates: &'static str,
+}
+
+impl LmConfig {
+    pub const fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub const fn d_ff(&self) -> usize {
+        4 * self.d_model
+    }
+
+    /// Total parameter count (embed + blocks + final norm).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let per_block = 4 * d * d + 2 * d * (4 * d) + 2 * d;
+        VOCAB * d + self.n_layers * per_block + d
+    }
+
+    /// ALiBi slope for head `h` (2^(-8(h+1)/H)).
+    pub fn alibi_slope(&self, head: usize) -> f32 {
+        (2.0f32).powf(-8.0 * (head as f32 + 1.0) / self.n_heads as f32)
+    }
+}
+
+/// All registered models, in registry order (matches DESIGN.md §6 table).
+pub const MODELS: [LmConfig; 11] = [
+    LmConfig { name: "nano", d_model: 32, n_layers: 1, n_heads: 2,
+               simulates: "OpenELM-1.1B / AMD-OLMo-1B tier" },
+    LmConfig { name: "tiny", d_model: 48, n_layers: 2, n_heads: 2,
+               simulates: "Llama-3.2-1B" },
+    LmConfig { name: "tiny-instruct", d_model: 48, n_layers: 2, n_heads: 2,
+               simulates: "Llama-3.2-1B-Instruct" },
+    LmConfig { name: "small", d_model: 64, n_layers: 2, n_heads: 4,
+               simulates: "Llama-3.2-3B" },
+    LmConfig { name: "small-instruct", d_model: 64, n_layers: 2, n_heads: 4,
+               simulates: "Llama-3.2-3B-Instruct" },
+    LmConfig { name: "small-math", d_model: 64, n_layers: 2, n_heads: 4,
+               simulates: "Qwen2.5-Math-1.5B / Rho-Math-1B" },
+    LmConfig { name: "small-code", d_model: 64, n_layers: 2, n_heads: 4,
+               simulates: "Qwen2.5-Coder-1.5B / DeepSeek-Coder-1.3B" },
+    LmConfig { name: "medium", d_model: 96, n_layers: 3, n_heads: 4,
+               simulates: "Llama-3.1-8B (default)" },
+    LmConfig { name: "teacher", d_model: 112, n_layers: 3, n_heads: 4,
+               simulates: "the data-generating LLMs (GPT-3.5/4, Mixtral)" },
+    LmConfig { name: "medium-instruct", d_model: 96, n_layers: 3, n_heads: 4,
+               simulates: "Llama-3.1-8B-Instruct" },
+    LmConfig { name: "large", d_model: 128, n_layers: 4, n_heads: 4,
+               simulates: "Qwen2.5-14B(-Instruct-1M)" },
+];
+
+/// Look a model up by name.
+pub fn by_name(name: &str) -> Result<&'static LmConfig> {
+    MODELS
+        .iter()
+        .find(|m| m.name == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{name}' (see `llmzip models`)"))
+}
+
+/// The canonical parameter order: (name, shape) sorted by name — identical
+/// to `python/compile/model.py::param_spec`.
+pub fn param_spec(cfg: &LmConfig) -> Vec<(String, Vec<usize>)> {
+    let d = cfg.d_model;
+    let ff = cfg.d_ff();
+    let mut spec: Vec<(String, Vec<usize>)> =
+        vec![("embed".into(), vec![VOCAB, d]), ("final_norm".into(), vec![d])];
+    for i in 0..cfg.n_layers {
+        let p = format!("layer{i:02}.");
+        spec.push((format!("{p}attn_norm"), vec![d]));
+        spec.push((format!("{p}mlp_norm"), vec![d]));
+        spec.push((format!("{p}wq"), vec![d, d]));
+        spec.push((format!("{p}wk"), vec![d, d]));
+        spec.push((format!("{p}wv"), vec![d, d]));
+        spec.push((format!("{p}wo"), vec![d, d]));
+        spec.push((format!("{p}w1"), vec![d, ff]));
+        spec.push((format!("{p}w2"), vec![ff, d]));
+    }
+    spec.sort_by(|a, b| a.0.cmp(&b.0));
+    spec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_lookup() {
+        assert_eq!(by_name("medium").unwrap().d_model, 96);
+        assert!(by_name("gpt5").is_err());
+    }
+
+    #[test]
+    fn param_counts_scale_with_tier() {
+        let sizes: Vec<usize> = ["nano", "tiny", "small", "medium", "large"]
+            .iter()
+            .map(|n| by_name(n).unwrap().param_count())
+            .collect();
+        for w in sizes.windows(2) {
+            assert!(w[1] > w[0], "{sizes:?} must be increasing");
+        }
+    }
+
+    #[test]
+    fn spec_is_sorted_and_complete() {
+        let cfg = by_name("medium").unwrap();
+        let spec = param_spec(cfg);
+        let mut names: Vec<&str> = spec.iter().map(|(n, _)| n.as_str()).collect();
+        let sorted = {
+            let mut s = names.clone();
+            s.sort();
+            s
+        };
+        assert_eq!(names, sorted);
+        assert!(names.contains(&"embed"));
+        assert!(names.contains(&"layer02.w2"));
+        names.dedup();
+        assert_eq!(names.len(), spec.len(), "no duplicate names");
+        let total: usize = spec.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        assert_eq!(total, cfg.param_count());
+    }
+
+    #[test]
+    fn alibi_slopes_decay() {
+        let cfg = by_name("small").unwrap();
+        let s: Vec<f32> = (0..4).map(|h| cfg.alibi_slope(h)).collect();
+        assert!((s[0] - 0.25).abs() < 1e-6);
+        for w in s.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+    }
+
+    #[test]
+    fn heads_divide_dims() {
+        for m in &MODELS {
+            assert_eq!(m.d_model % m.n_heads, 0, "{}", m.name);
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! The executor abstraction the compressor and coordinator program against.
+//!
+//! An executor owns `lanes()` independent autoregressive streams. Each
+//! [`LmExecutor::step`] feeds one token per lane and returns each lane's
+//! next-token logits. Both compression and decompression drive the SAME
+//! executor interface, which guarantees the probability streams match
+//! bit-for-bit (the container records the executor kind to prevent
+//! cross-executor decode).
+//!
+//! Implementations:
+//! * [`crate::lm::NativeExecutor`] — pure rust, per-token.
+//! * [`crate::runtime::PjrtStepExecutor`] — the lowered `decode_step` HLO.
+//! * [`crate::runtime::PjrtForwardExecutor`] — batched `forward` HLO with
+//!   prefix replay (fast compression path; see `compress/llm.rs`).
+
+use crate::lm::config::LmConfig;
+use crate::Result;
+
+/// Which engine produced/consumes a probability stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutorKind {
+    Native,
+    PjrtStep,
+    PjrtForward,
+}
+
+impl ExecutorKind {
+    pub fn as_flag(self) -> u16 {
+        match self {
+            ExecutorKind::Native => 0,
+            ExecutorKind::PjrtStep => 1,
+            ExecutorKind::PjrtForward => 2,
+        }
+    }
+
+    pub fn from_flag(flag: u16) -> Result<Self> {
+        Ok(match flag {
+            0 => ExecutorKind::Native,
+            1 => ExecutorKind::PjrtStep,
+            2 => ExecutorKind::PjrtForward,
+            other => anyhow::bail!("unknown executor flag {other}"),
+        })
+    }
+
+    /// Two kinds are stream-compatible iff their logits are bit-identical.
+    /// PjrtStep and PjrtForward run different HLO reductions — NOT compatible.
+    pub fn compatible(self, other: ExecutorKind) -> bool {
+        self == other
+    }
+}
+
+/// A batch of autoregressive LM streams.
+pub trait LmExecutor {
+    fn config(&self) -> &'static LmConfig;
+    fn kind(&self) -> ExecutorKind;
+
+    /// Number of parallel lanes.
+    fn lanes(&self) -> usize;
+
+    /// Reset every lane to position 0 (start of a new chunk batch).
+    fn reset(&mut self);
+
+    /// Feed one token per lane; returns logits `[lanes * VOCAB]` row-major.
+    fn step(&mut self, tokens: &[u32]) -> Result<Vec<f32>>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn executor_flags_roundtrip() {
+        for k in [ExecutorKind::Native, ExecutorKind::PjrtStep, ExecutorKind::PjrtForward] {
+            assert_eq!(ExecutorKind::from_flag(k.as_flag()).unwrap(), k);
+        }
+        assert!(ExecutorKind::from_flag(99).is_err());
+    }
+
+    #[test]
+    fn compatibility_is_identity() {
+        assert!(ExecutorKind::Native.compatible(ExecutorKind::Native));
+        assert!(!ExecutorKind::PjrtStep.compatible(ExecutorKind::PjrtForward));
+    }
+}

@@ -1,0 +1,21 @@
+//! The language-model layer on the rust side.
+//!
+//! * [`config`] — the model registry (must mirror `python/compile/configs.py`).
+//! * [`weights`] — typed parameter bundle loaded from `.lmz` files.
+//! * [`native`] — a from-scratch rust implementation of the exact same
+//!   transformer (matmuls and all). It serves three purposes: a
+//!   cross-check on the PJRT numerics, a fallback executor that works
+//!   without artifacts, and the reference for unit tests.
+//! * [`executor`] — the [`executor::LmExecutor`] trait the compressor and
+//!   coordinator program against, with the native implementation here and
+//!   the PJRT implementation in [`crate::runtime`].
+
+pub mod config;
+pub mod executor;
+pub mod native;
+pub mod weights;
+
+pub use config::{LmConfig, MAX_CONTEXT, VOCAB};
+pub use executor::{ExecutorKind, LmExecutor};
+pub use native::NativeExecutor;
+pub use weights::Weights;

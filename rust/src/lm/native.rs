@@ -1,0 +1,326 @@
+//! Native rust implementation of the transformer — the same architecture as
+//! `python/compile/model.py`, computed with a per-token KV-cache state
+//! machine.
+//!
+//! Crucially, *compression and decompression share this exact code path*
+//! (one `advance` per token), so the probability streams on both sides are
+//! bit-identical by construction. Numerics agree with the PJRT/XLA
+//! executor to ~1e-4 (different reduction orders), which is why containers
+//! record which executor produced them.
+
+use crate::lm::config::{LmConfig, MAX_CONTEXT, VOCAB};
+use crate::lm::weights::Weights;
+use crate::Result;
+
+/// GELU (tanh approximation — matches `jax.nn.gelu(approximate=True)`).
+#[inline]
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// y += x @ w, with x: [d_in], w: [d_in, d_out] row-major.
+#[inline]
+fn matvec_acc(x: &[f32], w: &[f32], y: &mut [f32]) {
+    let d_out = y.len();
+    debug_assert_eq!(x.len() * d_out, w.len());
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * d_out..(i + 1) * d_out];
+        for j in 0..d_out {
+            y[j] += xi * row[j];
+        }
+    }
+}
+
+fn matvec(x: &[f32], w: &[f32], d_out: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; d_out];
+    matvec_acc(x, w, &mut y);
+    y
+}
+
+fn rmsnorm(x: &[f32], gain: &[f32]) -> Vec<f32> {
+    let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + 1e-6).sqrt();
+    x.iter().zip(gain).map(|(v, g)| v * inv * g).collect()
+}
+
+/// Per-lane incremental state: the KV cache and the current position.
+pub struct LaneState {
+    /// [layer][kind(k=0,v=1)][pos * d_model ..]
+    kv: Vec<f32>,
+    pos: usize,
+    n_layers: usize,
+    d_model: usize,
+    max_len: usize,
+}
+
+impl LaneState {
+    pub fn new(cfg: &LmConfig, max_len: usize) -> Self {
+        assert!(max_len <= MAX_CONTEXT);
+        LaneState {
+            kv: vec![0.0; cfg.n_layers * 2 * max_len * cfg.d_model],
+            pos: 0,
+            n_layers: cfg.n_layers,
+            d_model: cfg.d_model,
+            max_len,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.pos = 0;
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    #[inline]
+    fn kv_slice(&self, layer: usize, kind: usize, pos: usize) -> std::ops::Range<usize> {
+        let base = ((layer * 2 + kind) * self.max_len + pos) * self.d_model;
+        base..base + self.d_model
+    }
+}
+
+/// The model: config + weights, plus precomputed ALiBi slopes.
+pub struct NativeModel {
+    pub cfg: &'static LmConfig,
+    weights: Weights,
+    slopes: Vec<f32>,
+}
+
+impl NativeModel {
+    pub fn new(cfg: &'static LmConfig, weights: Weights) -> Self {
+        let slopes = (0..cfg.n_heads).map(|h| cfg.alibi_slope(h)).collect();
+        NativeModel { cfg, weights, slopes }
+    }
+
+    /// Feed one token; returns the next-token logits `[VOCAB]` and advances
+    /// the lane state. This single routine backs compression, decompression
+    /// and generation — bit-exact across all of them by construction.
+    pub fn advance(&self, st: &mut LaneState, token: u32) -> Result<Vec<f32>> {
+        if st.pos >= st.max_len {
+            anyhow::bail!("lane overflow: pos {} >= max {}", st.pos, st.max_len);
+        }
+        let d = self.cfg.d_model;
+        let h = self.cfg.n_heads;
+        let dh = self.cfg.d_head();
+        let pos = st.pos;
+        let embed = &self.weights.get("embed").data;
+        let mut x: Vec<f32> = embed[token as usize * d..(token as usize + 1) * d].to_vec();
+
+        for layer in 0..self.cfg.n_layers {
+            let p = format!("layer{layer:02}.");
+            let hn = rmsnorm(&x, &self.weights.get(&format!("{p}attn_norm")).data);
+            let q = matvec(&hn, &self.weights.get(&format!("{p}wq")).data, d);
+            let k = matvec(&hn, &self.weights.get(&format!("{p}wk")).data, d);
+            let v = matvec(&hn, &self.weights.get(&format!("{p}wv")).data, d);
+            let kr = st.kv_slice(layer, 0, pos);
+            st.kv[kr].copy_from_slice(&k);
+            let vr = st.kv_slice(layer, 1, pos);
+            st.kv[vr].copy_from_slice(&v);
+
+            // Attention per head over cache positions 0..=pos with ALiBi.
+            let scale = 1.0 / (dh as f32).sqrt();
+            let mut attn_out = vec![0.0f32; d];
+            for head in 0..h {
+                let slope = self.slopes[head];
+                let qh = &q[head * dh..(head + 1) * dh];
+                // scores
+                let mut scores = Vec::with_capacity(pos + 1);
+                let mut max_s = f32::NEG_INFINITY;
+                for j in 0..=pos {
+                    let kj = &st.kv[st.kv_slice(layer, 0, j)][head * dh..(head + 1) * dh];
+                    let mut dot = 0.0f32;
+                    for i in 0..dh {
+                        dot += qh[i] * kj[i];
+                    }
+                    let s = dot * scale - slope * (pos - j) as f32;
+                    max_s = max_s.max(s);
+                    scores.push(s);
+                }
+                let mut denom = 0.0f32;
+                for s in scores.iter_mut() {
+                    *s = (*s - max_s).exp();
+                    denom += *s;
+                }
+                let inv = 1.0 / denom;
+                let out = &mut attn_out[head * dh..(head + 1) * dh];
+                for (j, &w) in scores.iter().enumerate() {
+                    let vj = &st.kv[st.kv_slice(layer, 1, j)][head * dh..(head + 1) * dh];
+                    let wj = w * inv;
+                    for i in 0..dh {
+                        out[i] += wj * vj[i];
+                    }
+                }
+            }
+            matvec_acc(&attn_out, &self.weights.get(&format!("{p}wo")).data, &mut x);
+
+            let hn = rmsnorm(&x, &self.weights.get(&format!("{p}mlp_norm")).data);
+            let mut ff = matvec(&hn, &self.weights.get(&format!("{p}w1")).data, self.cfg.d_ff());
+            for v in ff.iter_mut() {
+                *v = gelu(*v);
+            }
+            matvec_acc(&ff, &self.weights.get(&format!("{p}w2")).data, &mut x);
+        }
+
+        let xn = rmsnorm(&x, &self.weights.get("final_norm").data);
+        // Weight-tied head: logits[v] = dot(xn, embed[v]).
+        let mut logits = vec![0.0f32; VOCAB];
+        for (v, lo) in logits.iter_mut().enumerate() {
+            let row = &embed[v * d..(v + 1) * d];
+            let mut dot = 0.0f32;
+            for i in 0..d {
+                dot += xn[i] * row[i];
+            }
+            *lo = dot;
+        }
+        st.pos += 1;
+        Ok(logits)
+    }
+}
+
+/// Native executor: a [`NativeModel`] plus a pool of lanes.
+pub struct NativeExecutor {
+    model: NativeModel,
+    lanes: Vec<LaneState>,
+}
+
+impl NativeExecutor {
+    pub fn new(cfg: &'static LmConfig, weights: Weights, n_lanes: usize) -> Self {
+        let model = NativeModel::new(cfg, weights);
+        let lanes = (0..n_lanes).map(|_| LaneState::new(cfg, MAX_CONTEXT)).collect();
+        NativeExecutor { model, lanes }
+    }
+
+    pub fn model(&self) -> &NativeModel {
+        &self.model
+    }
+}
+
+impl crate::lm::executor::LmExecutor for NativeExecutor {
+    fn config(&self) -> &'static LmConfig {
+        self.model.cfg
+    }
+
+    fn kind(&self) -> crate::lm::executor::ExecutorKind {
+        crate::lm::executor::ExecutorKind::Native
+    }
+
+    fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    fn reset(&mut self) {
+        for l in self.lanes.iter_mut() {
+            l.reset();
+        }
+    }
+
+    fn step(&mut self, tokens: &[u32]) -> Result<Vec<f32>> {
+        if tokens.len() != self.lanes.len() {
+            anyhow::bail!("step expects {} lane tokens, got {}", self.lanes.len(), tokens.len());
+        }
+        let mut out = Vec::with_capacity(self.lanes.len() * VOCAB);
+        for (lane, &tok) in self.lanes.iter_mut().zip(tokens) {
+            out.extend(self.model.advance(lane, tok)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lm::config::by_name;
+    use crate::lm::executor::LmExecutor;
+    use crate::tokenizer::vocab::BOS;
+
+    fn softmax(logits: &[f32]) -> Vec<f32> {
+        let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let e: Vec<f32> = logits.iter().map(|&x| (x - m).exp()).collect();
+        let s: f32 = e.iter().sum();
+        e.into_iter().map(|x| x / s).collect()
+    }
+
+    #[test]
+    fn advance_is_deterministic_and_replayable() {
+        let cfg = by_name("nano").unwrap();
+        let model = NativeModel::new(cfg, Weights::random(cfg, 1));
+        let tokens = [BOS, 72, 101, 108, 108, 111];
+        let mut st1 = LaneState::new(cfg, 16);
+        let run1: Vec<Vec<f32>> =
+            tokens.iter().map(|&t| model.advance(&mut st1, t).unwrap()).collect();
+        let mut st2 = LaneState::new(cfg, 16);
+        let run2: Vec<Vec<f32>> =
+            tokens.iter().map(|&t| model.advance(&mut st2, t).unwrap()).collect();
+        assert_eq!(run1, run2, "bit-exact replay");
+    }
+
+    #[test]
+    fn logits_are_finite_and_distribution_valid() {
+        let cfg = by_name("tiny").unwrap();
+        let model = NativeModel::new(cfg, Weights::random(cfg, 2));
+        let mut st = LaneState::new(cfg, 32);
+        for &t in &[BOS, 10, 200, 65, 0, 255] {
+            let logits = model.advance(&mut st, t).unwrap();
+            assert_eq!(logits.len(), VOCAB);
+            assert!(logits.iter().all(|x| x.is_finite()));
+            let p = softmax(&logits);
+            let sum: f32 = p.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn prefix_property_holds() {
+        // Logits after feeding prefix P are identical regardless of what
+        // would come later (trivially true for the incremental formulation,
+        // but this guards against accidental lookahead bugs).
+        let cfg = by_name("nano").unwrap();
+        let model = NativeModel::new(cfg, Weights::random(cfg, 3));
+        let mut a = LaneState::new(cfg, 16);
+        let la = model.advance(&mut a, BOS).unwrap();
+        let mut b = LaneState::new(cfg, 16);
+        let lb = model.advance(&mut b, BOS).unwrap();
+        model.advance(&mut b, 42).unwrap();
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn lane_overflow_rejected() {
+        let cfg = by_name("nano").unwrap();
+        let model = NativeModel::new(cfg, Weights::random(cfg, 4));
+        let mut st = LaneState::new(cfg, 4);
+        for _ in 0..4 {
+            model.advance(&mut st, 65).unwrap();
+        }
+        assert!(model.advance(&mut st, 65).is_err());
+    }
+
+    #[test]
+    fn executor_steps_all_lanes() {
+        let cfg = by_name("nano").unwrap();
+        let mut ex = NativeExecutor::new(cfg, Weights::random(cfg, 5), 3);
+        let out = ex.step(&[BOS, BOS, BOS]).unwrap();
+        assert_eq!(out.len(), 3 * VOCAB);
+        // Same token in every lane from fresh state -> identical logits.
+        assert_eq!(out[..VOCAB], out[VOCAB..2 * VOCAB]);
+        assert!(ex.step(&[1, 2]).is_err());
+    }
+
+    #[test]
+    fn context_changes_prediction() {
+        let cfg = by_name("tiny").unwrap();
+        let model = NativeModel::new(cfg, Weights::random(cfg, 6));
+        let mut a = LaneState::new(cfg, 8);
+        model.advance(&mut a, BOS).unwrap();
+        let la = model.advance(&mut a, 65).unwrap();
+        let mut b = LaneState::new(cfg, 8);
+        model.advance(&mut b, BOS).unwrap();
+        let lb = model.advance(&mut b, 90).unwrap();
+        assert_ne!(la, lb, "different contexts must give different logits");
+    }
+}

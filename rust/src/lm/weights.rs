@@ -1,0 +1,191 @@
+//! `.lmz` weights loader — mirror of `python/compile/weights.py`.
+
+use crate::lm::config::{param_spec, LmConfig};
+use crate::util::{read_u32_le};
+use crate::Result;
+use std::collections::HashMap;
+
+pub const WEIGHTS_MAGIC: u32 = 0x575A_4D4C; // "LMZW"
+pub const WEIGHTS_VERSION: u16 = 1;
+
+/// A named tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// A full parameter bundle for one model, in canonical spec order.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub tensors: Vec<Tensor>,
+    index: HashMap<String, usize>,
+}
+
+impl Weights {
+    /// Parse from bytes and validate against the model's parameter spec.
+    pub fn from_bytes(data: &[u8], cfg: &LmConfig) -> Result<Weights> {
+        if data.len() < 8 {
+            anyhow::bail!("weights file too short");
+        }
+        if read_u32_le(data, 0) != WEIGHTS_MAGIC {
+            anyhow::bail!("bad weights magic");
+        }
+        let version = u16::from_le_bytes([data[4], data[5]]);
+        if version != WEIGHTS_VERSION {
+            anyhow::bail!("unsupported weights version {version}");
+        }
+        let count = u16::from_le_bytes([data[6], data[7]]) as usize;
+        let mut pos = 8usize;
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            if pos >= data.len() {
+                anyhow::bail!("truncated weights file");
+            }
+            let nlen = data[pos] as usize;
+            pos += 1;
+            let name = String::from_utf8(data[pos..pos + nlen].to_vec())?;
+            pos += nlen;
+            let ndim = data[pos] as usize;
+            pos += 1;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32_le(data, pos) as usize);
+                pos += 4;
+            }
+            let n: usize = shape.iter().product();
+            if pos + n * 4 > data.len() {
+                anyhow::bail!("truncated tensor data for '{name}'");
+            }
+            let mut values = Vec::with_capacity(n);
+            for i in 0..n {
+                values.push(f32::from_le_bytes(data[pos + i * 4..pos + i * 4 + 4].try_into()?));
+            }
+            pos += n * 4;
+            tensors.push(Tensor { name, shape, data: values });
+        }
+        // Validate against the canonical spec (order, names, shapes).
+        let spec = param_spec(cfg);
+        if spec.len() != tensors.len() {
+            anyhow::bail!("weights tensor count {} != spec {}", tensors.len(), spec.len());
+        }
+        for ((name, shape), t) in spec.iter().zip(&tensors) {
+            if *name != t.name {
+                anyhow::bail!("tensor order mismatch: '{}' vs expected '{name}'", t.name);
+            }
+            if *shape != t.shape {
+                anyhow::bail!("tensor '{}' shape {:?} != expected {:?}", t.name, t.shape, shape);
+            }
+        }
+        let index = tensors.iter().enumerate().map(|(i, t)| (t.name.clone(), i)).collect();
+        Ok(Weights { tensors, index })
+    }
+
+    pub fn load(path: &std::path::Path, cfg: &LmConfig) -> Result<Weights> {
+        let data = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading weights {}: {e}", path.display()))?;
+        Self::from_bytes(&data, cfg)
+    }
+
+    /// Tensor by name (panics on unknown name — internal use after validate).
+    pub fn get(&self, name: &str) -> &Tensor {
+        &self.tensors[self.index[name]]
+    }
+
+    /// Serialize back to `.lmz` bytes (round-trip support + test fixtures).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&WEIGHTS_MAGIC.to_le_bytes());
+        out.extend_from_slice(&WEIGHTS_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.tensors.len() as u16).to_le_bytes());
+        for t in &self.tensors {
+            out.push(t.name.len() as u8);
+            out.extend_from_slice(t.name.as_bytes());
+            out.push(t.shape.len() as u8);
+            for &d in &t.shape {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &v in &t.data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Deterministically-random weights for tests (no trained artifacts
+    /// needed): same init family as python's `init_params`.
+    pub fn random(cfg: &LmConfig, seed: u64) -> Weights {
+        let mut rng = crate::util::Pcg64::seeded(seed);
+        let mut tensors = Vec::new();
+        for (name, shape) in param_spec(cfg) {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = if name.ends_with("norm") {
+                vec![1.0; n]
+            } else {
+                let scale = if name == "embed" {
+                    0.02
+                } else {
+                    1.0 / (shape[0] as f32).sqrt()
+                };
+                (0..n)
+                    .map(|_| {
+                        // Box-Muller normal.
+                        let u1 = rng.gen_f64().max(1e-12);
+                        let u2 = rng.gen_f64();
+                        let z = (-2.0 * u1.ln()).sqrt()
+                            * (2.0 * std::f64::consts::PI * u2).cos();
+                        (z as f32) * scale
+                    })
+                    .collect()
+            };
+            tensors.push(Tensor { name, shape, data });
+        }
+        let index = tensors.iter().enumerate().map(|(i, t)| (t.name.clone(), i)).collect();
+        Weights { tensors, index }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lm::config::by_name;
+
+    #[test]
+    fn random_weights_match_spec() {
+        let cfg = by_name("tiny").unwrap();
+        let w = Weights::random(cfg, 1);
+        assert_eq!(w.tensors.len(), param_spec(cfg).len());
+        assert_eq!(w.get("embed").shape, vec![crate::lm::VOCAB, cfg.d_model]);
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let cfg = by_name("nano").unwrap();
+        let w = Weights::random(cfg, 2);
+        let bytes = w.to_bytes();
+        let w2 = Weights::from_bytes(&bytes, cfg).unwrap();
+        for (a, b) in w.tensors.iter().zip(&w2.tensors) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn wrong_model_rejected() {
+        let nano = by_name("nano").unwrap();
+        let tiny = by_name("tiny").unwrap();
+        let bytes = Weights::random(nano, 3).to_bytes();
+        assert!(Weights::from_bytes(&bytes, tiny).is_err());
+    }
+
+    #[test]
+    fn corrupt_rejected() {
+        let cfg = by_name("nano").unwrap();
+        let mut bytes = Weights::random(cfg, 4).to_bytes();
+        bytes[0] ^= 0xFF;
+        assert!(Weights::from_bytes(&bytes, cfg).is_err());
+        assert!(Weights::from_bytes(&[1, 2, 3], cfg).is_err());
+    }
+}

@@ -1,0 +1,85 @@
+//! `llmzip` — CLI for the LLM-compression reproduction.
+//!
+//! Subcommands are grouped by purpose:
+//! * data:       `gen-corpus`, `gen-data`
+//! * compression:`compress`, `decompress`, `ratio`
+//! * service:    `serve`
+//! * experiments:`table2`, `table3`, `table5`, `fig2`, `fig5`, `fig6`,
+//!               `fig7`, `fig8`, `fig9`, `chunk-sweep`
+//! * misc:       `models`, `analyze`
+//!
+//! The dependency set of this environment has no CLI crate; arguments are
+//! parsed by the tiny hand-rolled [`cli`] module.
+
+use llmzip::Result;
+
+mod cli;
+mod cmd;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "gen-corpus" => cmd::data::gen_corpus(rest),
+        "gen-data" => cmd::data::gen_data(rest),
+        "compress" => cmd::compress::compress(rest),
+        "decompress" => cmd::compress::decompress(rest),
+        "ratio" => cmd::compress::ratio(rest),
+        "serve" => cmd::serve::serve(rest),
+        "models" => cmd::models::list(rest),
+        "analyze" => cmd::experiments::analyze(rest),
+        "table2" => cmd::experiments::table2(rest),
+        "table3" => cmd::experiments::table3(rest),
+        "table5" => cmd::experiments::table5(rest),
+        "fig2" => cmd::experiments::fig2(rest),
+        "fig5" => cmd::experiments::fig5(rest),
+        "fig6" => cmd::experiments::fig6(rest),
+        "fig7" => cmd::experiments::fig7(rest),
+        "fig8" => cmd::experiments::fig8(rest),
+        "fig9" => cmd::experiments::fig9(rest),
+        "chunk-sweep" => cmd::experiments::chunk_sweep(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}' (try `llmzip help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "llmzip — lossless compression of LLM-generated text via next-token prediction
+
+USAGE: llmzip <COMMAND> [OPTIONS]
+
+DATA
+  gen-corpus  --out DIR [--bytes N] [--seed N]     write the procedural training corpora
+  gen-data    --out DIR [--bytes N] [--model M]    sample the LLM-generated datasets
+
+COMPRESSION
+  compress    --model M --in FILE --out FILE [--chunk N] [--executor pjrt|native]
+  decompress  --model M --in FILE --out FILE [--executor pjrt|native]
+  ratio       --model M --in FILE [--chunk N]      report the compression ratio
+
+SERVICE
+  serve       --model M [--port P] [--batch B]     batched compression server
+
+EXPERIMENTS (regenerate the paper's tables and figures)
+  table2 | table3 | table5 | fig2 | fig5 | fig6 | fig7 | fig8 | fig9 | chunk-sweep
+  analyze     --in FILE                            n-gram + entropy report for a file
+
+MISC
+  models                                           list registered model variants"
+    );
+}

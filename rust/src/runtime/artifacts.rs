@@ -1,0 +1,130 @@
+//! Artifact store: locate, validate and lazily compile the AOT outputs.
+
+use crate::lm::config::{self, LmConfig};
+use crate::lm::weights::Weights;
+use crate::Result;
+
+use std::path::{Path, PathBuf};
+
+/// Handle to an `artifacts/` directory.
+pub struct ArtifactStore {
+    root: PathBuf,
+    client: xla::PjRtClient,
+}
+
+impl ArtifactStore {
+    /// Open the store at `root` (or `$LLMZIP_ARTIFACTS`, or `./artifacts`).
+    pub fn open(root: Option<&str>) -> Result<ArtifactStore> {
+        let root = match root {
+            Some(r) => PathBuf::from(r),
+            None => std::env::var("LLMZIP_ARTIFACTS")
+                .map(PathBuf::from)
+                .unwrap_or_else(|_| PathBuf::from("artifacts")),
+        };
+        if !root.is_dir() {
+            anyhow::bail!(
+                "artifacts directory {} not found — run `make artifacts` first",
+                root.display()
+            );
+        }
+        Ok(ArtifactStore { root, client: super::shared_client()? })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Does this store have artifacts for `model`?
+    pub fn has_model(&self, model: &str) -> bool {
+        self.root.join("weights").join(format!("{model}.lmz")).exists()
+    }
+
+    /// Load and validate the weights for a model.
+    pub fn weights(&self, cfg: &LmConfig) -> Result<Weights> {
+        let path = self.root.join("weights").join(format!("{}.lmz", cfg.name));
+        Weights::load(&path, cfg)
+    }
+
+    /// Compile an HLO-text artifact.
+    pub fn compile(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.root.join("hlo").join(file);
+        if !path.exists() {
+            anyhow::bail!("HLO artifact {} missing — run `make artifacts`", path.display());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(|e| anyhow::anyhow!("compiling {file}: {e}"))
+    }
+
+    /// Upload a model's parameters to device buffers, in canonical order.
+    pub fn param_buffers(&self, cfg: &LmConfig, weights: &Weights) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut bufs = Vec::with_capacity(weights.tensors.len());
+        for t in &weights.tensors {
+            bufs.push(
+                self.client
+                    .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+                    .map_err(|e| anyhow::anyhow!("uploading {}: {e}", t.name))?,
+            );
+        }
+        let _ = cfg;
+        Ok(bufs)
+    }
+
+    /// Standard artifact file names.
+    pub fn forward_file(cfg: &LmConfig) -> String {
+        format!(
+            "{}__forward_b{}_s{}.hlo.txt",
+            cfg.name,
+            config::FORWARD_BATCH,
+            config::MAX_CONTEXT
+        )
+    }
+
+    pub fn step_file(cfg: &LmConfig) -> String {
+        format!("{}__step_b{}_s{}.hlo.txt", cfg.name, config::STEP_BATCH, config::MAX_CONTEXT)
+    }
+
+    pub fn generate_file(cfg: &LmConfig) -> String {
+        format!(
+            "{}__generate_b{}_p{}_n{}.hlo.txt",
+            cfg.name,
+            config::GEN_BATCH,
+            config::GEN_PROMPT,
+            config::GEN_TOKENS
+        )
+    }
+
+    pub fn forward_pallas_file(cfg: &LmConfig) -> String {
+        format!("{}__forward_pallas_b1_s{}.hlo.txt", cfg.name, config::MAX_CONTEXT)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_dir_is_reported() {
+        let err = match ArtifactStore::open(Some("/nonexistent/path")) {
+            Err(e) => e,
+            Ok(_) => panic!("must fail"),
+        };
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn artifact_names_are_stable() {
+        let cfg = config::by_name("medium").unwrap();
+        assert_eq!(ArtifactStore::forward_file(cfg), "medium__forward_b8_s256.hlo.txt");
+        assert_eq!(ArtifactStore::step_file(cfg), "medium__step_b32_s256.hlo.txt");
+        assert_eq!(
+            ArtifactStore::generate_file(cfg),
+            "medium__generate_b16_p16_n240.hlo.txt"
+        );
+    }
+}

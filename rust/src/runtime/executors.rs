@@ -1,0 +1,306 @@
+//! PJRT-backed executors.
+//!
+//! * [`PjrtForwardExecutor`] — wraps the lowered `forward_logits` HLO.
+//!   Encoding gets all positions' logits in ONE device call per chunk
+//!   batch; decoding replays the same executable on the growing prefix,
+//!   which is bit-exact with the encode pass because position `t`'s logits
+//!   depend only on tokens `<= t` (strict causal masking, position-local
+//!   everything else — property tested in python and in
+//!   `rust/tests/runtime_parity.rs`).
+//! * [`PjrtStepExecutor`] — wraps the lowered `decode_step` HLO (KV cache
+//!   threaded through each call). Symmetric cost for encode/decode.
+//! * [`PjrtGenerator`] — wraps the lowered in-graph sampling loop, used by
+//!   the dataset factory.
+
+use crate::lm::config::{self, LmConfig};
+use crate::lm::executor::{ExecutorKind, LmExecutor};
+use crate::runtime::ArtifactStore;
+use crate::tokenizer::vocab::PAD;
+use crate::Result;
+
+const VOCAB: usize = config::VOCAB;
+
+/// Upload a typed host array as a device buffer. (Not the literal route:
+/// `Literal::create_from_shape_and_untyped_data` + `buffer_from_host_literal`
+/// mis-sizes some shapes in xla_extension 0.5.1.)
+fn upload_i32(client: &xla::PjRtClient, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+    client
+        .buffer_from_host_buffer::<i32>(data, dims, None)
+        .map_err(|e| anyhow::anyhow!("uploading i32 {dims:?}: {e}"))
+}
+
+fn upload_f32(client: &xla::PjRtClient, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+    client
+        .buffer_from_host_buffer::<f32>(data, dims, None)
+        .map_err(|e| anyhow::anyhow!("uploading f32 {dims:?}: {e}"))
+}
+
+/// Forward-replay executor (see module docs).
+pub struct PjrtForwardExecutor {
+    cfg: &'static LmConfig,
+    exe: xla::PjRtLoadedExecutable,
+    params: Vec<xla::PjRtBuffer>,
+    batch: usize,
+    seq: usize,
+    /// Tokens fed so far per lane (decode-side prefix replay).
+    fed: Vec<Vec<u32>>,
+}
+
+impl PjrtForwardExecutor {
+    pub fn from_store(store: &ArtifactStore, cfg: &'static LmConfig) -> Result<Self> {
+        let weights = store.weights(cfg)?;
+        let exe = store.compile(&ArtifactStore::forward_file(cfg))?;
+        let params = store.param_buffers(cfg, &weights)?;
+        Ok(PjrtForwardExecutor {
+            cfg,
+            exe,
+            params,
+            batch: config::FORWARD_BATCH,
+            seq: config::MAX_CONTEXT,
+            fed: vec![Vec::new(); config::FORWARD_BATCH],
+        })
+    }
+
+    /// One raw forward pass. `tokens` is `[batch * seq]` row-major.
+    /// Returns logits `[batch * seq * VOCAB]`.
+    pub fn forward_raw(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        debug_assert_eq!(tokens.len(), self.batch * self.seq);
+        let tok_buf = upload_i32(self.exe.client(), tokens, &[self.batch, self.seq])?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        args.push(&tok_buf);
+        let result = self.exe.execute_b(&args).map_err(|e| anyhow::anyhow!("forward: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching logits: {e}"))?;
+        let out = lit.to_tuple1().map_err(|e| anyhow::anyhow!("untupling: {e}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("logits to_vec: {e}"))
+    }
+
+    /// Bulk encode path: feed each lane's full input (BOS + chunk bytes,
+    /// `<= seq` long) and return logits for the first `n_positions` of every
+    /// lane: `[lanes * n_positions * VOCAB]`.
+    pub fn encode_logits(&self, lanes: &[Vec<u32>], n_positions: usize) -> Result<Vec<f32>> {
+        if lanes.len() > self.batch {
+            anyhow::bail!("{} lanes > batch {}", lanes.len(), self.batch);
+        }
+        let mut tokens = vec![PAD as i32; self.batch * self.seq];
+        for (l, lane) in lanes.iter().enumerate() {
+            if lane.len() > self.seq {
+                anyhow::bail!("lane {} length {} > seq {}", l, lane.len(), self.seq);
+            }
+            for (t, &tok) in lane.iter().enumerate() {
+                tokens[l * self.seq + t] = tok as i32;
+            }
+        }
+        let logits = self.forward_raw(&tokens)?;
+        let mut out = Vec::with_capacity(lanes.len() * n_positions * VOCAB);
+        for l in 0..lanes.len() {
+            let base = l * self.seq * VOCAB;
+            out.extend_from_slice(&logits[base..base + n_positions * VOCAB]);
+        }
+        Ok(out)
+    }
+}
+
+impl LmExecutor for PjrtForwardExecutor {
+    fn config(&self) -> &'static LmConfig {
+        self.cfg
+    }
+
+    fn kind(&self) -> ExecutorKind {
+        ExecutorKind::PjrtForward
+    }
+
+    fn lanes(&self) -> usize {
+        self.batch
+    }
+
+    fn reset(&mut self) {
+        for f in self.fed.iter_mut() {
+            f.clear();
+        }
+    }
+
+    /// Decode-side step: append one token per lane, replay the forward pass
+    /// on the padded prefix, return the logits at the newest position.
+    fn step(&mut self, toks: &[u32]) -> Result<Vec<f32>> {
+        if toks.len() != self.batch {
+            anyhow::bail!("step expects {} tokens, got {}", self.batch, toks.len());
+        }
+        let mut tokens = vec![PAD as i32; self.batch * self.seq];
+        for (l, &tok) in toks.iter().enumerate() {
+            self.fed[l].push(tok);
+            if self.fed[l].len() > self.seq {
+                anyhow::bail!("lane {l} overflow");
+            }
+            for (t, &ft) in self.fed[l].iter().enumerate() {
+                tokens[l * self.seq + t] = ft as i32;
+            }
+        }
+        let pos = self.fed[0].len() - 1;
+        let logits = self.forward_raw(&tokens)?;
+        let mut out = Vec::with_capacity(self.batch * VOCAB);
+        for l in 0..self.batch {
+            let base = (l * self.seq + pos) * VOCAB;
+            out.extend_from_slice(&logits[base..base + VOCAB]);
+        }
+        Ok(out)
+    }
+}
+
+/// KV-cache step executor (see module docs).
+pub struct PjrtStepExecutor {
+    cfg: &'static LmConfig,
+    exe: xla::PjRtLoadedExecutable,
+    params: Vec<xla::PjRtBuffer>,
+    batch: usize,
+    seq: usize,
+    /// Current KV cache (device buffer), threaded through steps.
+    kv: xla::PjRtBuffer,
+    pos: usize,
+}
+
+impl PjrtStepExecutor {
+    pub fn from_store(store: &ArtifactStore, cfg: &'static LmConfig) -> Result<Self> {
+        let weights = store.weights(cfg)?;
+        let exe = store.compile(&ArtifactStore::step_file(cfg))?;
+        let params = store.param_buffers(cfg, &weights)?;
+        let batch = config::STEP_BATCH;
+        let seq = config::MAX_CONTEXT;
+        let kv_elems = cfg.n_layers * 2 * batch * seq * cfg.d_model;
+        let kv = store
+            .client()
+            .buffer_from_host_buffer::<f32>(
+                &vec![0.0f32; kv_elems],
+                &[cfg.n_layers, 2, batch, seq, cfg.d_model],
+                None,
+            )
+            .map_err(|e| anyhow::anyhow!("allocating kv: {e}"))?;
+        Ok(PjrtStepExecutor { cfg, exe, params, batch, seq, kv, pos: 0 })
+    }
+}
+
+impl LmExecutor for PjrtStepExecutor {
+    fn config(&self) -> &'static LmConfig {
+        self.cfg
+    }
+
+    fn kind(&self) -> ExecutorKind {
+        ExecutorKind::PjrtStep
+    }
+
+    fn lanes(&self) -> usize {
+        self.batch
+    }
+
+    fn reset(&mut self) {
+        // Positions > pos are never read (causal mask), so the stale cache
+        // contents are harmless; only the cursor resets.
+        self.pos = 0;
+    }
+
+    fn step(&mut self, toks: &[u32]) -> Result<Vec<f32>> {
+        if toks.len() != self.batch {
+            anyhow::bail!("step expects {} tokens, got {}", self.batch, toks.len());
+        }
+        if self.pos >= self.seq {
+            anyhow::bail!("step executor overflow at pos {}", self.pos);
+        }
+        let toks_i32: Vec<i32> = toks.iter().map(|&t| t as i32).collect();
+        let client = self.exe.client();
+        let tok_buf = upload_i32(client, &toks_i32, &[self.batch])?;
+        let pos_buf = upload_i32(client, &[self.pos as i32], &[])?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        args.push(&self.kv);
+        args.push(&tok_buf);
+        args.push(&pos_buf);
+        let result = self.exe.execute_b(&args).map_err(|e| anyhow::anyhow!("step: {e}"))?;
+        // The step artifact returns ONE flat f32 array: [logits | kv'] (the
+        // published xla crate cannot fetch multi-element tuple buffers).
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching step outputs: {e}"))?;
+        let out = lit.to_tuple1().map_err(|e| anyhow::anyhow!("untupling step: {e}"))?;
+        let flat = out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("step to_vec: {e}"))?;
+        let n_logits = self.batch * VOCAB;
+        let kv_elems = self.cfg.n_layers * 2 * self.batch * self.seq * self.cfg.d_model;
+        if flat.len() != n_logits + kv_elems {
+            anyhow::bail!("step output size {} != logits {} + kv {}", flat.len(), n_logits, kv_elems);
+        }
+        let logits = flat[..n_logits].to_vec();
+        // Re-upload the new KV cache for the next step (host round-trip;
+        // see EXPERIMENTS.md §Perf for the buffer-donation optimization).
+        self.kv = client
+            .buffer_from_host_buffer::<f32>(
+                &flat[n_logits..],
+                &[self.cfg.n_layers, 2, self.batch, self.seq, self.cfg.d_model],
+                None,
+            )
+            .map_err(|e| anyhow::anyhow!("kv re-upload: {e}"))?;
+        self.pos += 1;
+        Ok(logits)
+    }
+}
+
+/// In-graph sampling (dataset factory).
+pub struct PjrtGenerator {
+    cfg: &'static LmConfig,
+    exe: xla::PjRtLoadedExecutable,
+    params: Vec<xla::PjRtBuffer>,
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub n_tokens: usize,
+}
+
+impl PjrtGenerator {
+    pub fn from_store(store: &ArtifactStore, cfg: &'static LmConfig) -> Result<Self> {
+        let weights = store.weights(cfg)?;
+        let exe = store.compile(&ArtifactStore::generate_file(cfg))?;
+        let params = store.param_buffers(cfg, &weights)?;
+        Ok(PjrtGenerator {
+            cfg,
+            exe,
+            params,
+            batch: config::GEN_BATCH,
+            prompt_len: config::GEN_PROMPT,
+            n_tokens: config::GEN_TOKENS,
+        })
+    }
+
+    pub fn config(&self) -> &'static LmConfig {
+        self.cfg
+    }
+
+    /// Sample continuations. `prompts` is `[batch][prompt_len]` tokens.
+    /// Returns `[batch][n_tokens]`.
+    pub fn generate(&self, prompts: &[Vec<u32>], seed: i32, temp: f32) -> Result<Vec<Vec<u32>>> {
+        if prompts.len() != self.batch {
+            anyhow::bail!("generator expects {} prompts, got {}", self.batch, prompts.len());
+        }
+        let mut toks = Vec::with_capacity(self.batch * self.prompt_len);
+        for p in prompts {
+            if p.len() != self.prompt_len {
+                anyhow::bail!("prompt length {} != {}", p.len(), self.prompt_len);
+            }
+            toks.extend(p.iter().map(|&t| t as i32));
+        }
+        let client = self.exe.client();
+        let prompt_buf = upload_i32(client, &toks, &[self.batch, self.prompt_len])?;
+        let seed_buf = upload_i32(client, &[seed], &[])?;
+        let temp_buf = upload_f32(client, &[temp], &[])?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        args.push(&prompt_buf);
+        args.push(&seed_buf);
+        args.push(&temp_buf);
+        let result = self.exe.execute_b(&args).map_err(|e| anyhow::anyhow!("generate: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching samples: {e}"))?;
+        let out = lit.to_tuple1().map_err(|e| anyhow::anyhow!("untupling: {e}"))?;
+        let flat = out.to_vec::<i32>().map_err(|e| anyhow::anyhow!("samples to_vec: {e}"))?;
+        Ok(flat
+            .chunks(self.n_tokens)
+            .map(|row| row.iter().map(|&t| t as u32).collect())
+            .collect())
+    }
+}

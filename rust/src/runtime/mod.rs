@@ -1,0 +1,45 @@
+//! PJRT runtime: load the AOT artifacts (HLO text + weights) and expose
+//! them as [`crate::lm::LmExecutor`]s.
+//!
+//! Python never runs here — `artifacts/` is the only interface between the
+//! build path and this request path:
+//!
+//! ```text
+//! artifacts/weights/<model>.lmz                 trained parameters
+//! artifacts/hlo/<model>__forward_b8_s256.hlo.txt
+//! artifacts/hlo/<model>__step_b32_s256.hlo.txt
+//! artifacts/hlo/<model>__generate_b16_p16_n240.hlo.txt
+//! artifacts/manifest.txt
+//! ```
+//!
+//! HLO *text* is the interchange format (jax>=0.5 protos carry 64-bit ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids).
+
+pub mod artifacts;
+pub mod executors;
+
+pub use artifacts::ArtifactStore;
+pub use executors::{PjrtForwardExecutor, PjrtGenerator, PjrtStepExecutor};
+
+use crate::Result;
+
+thread_local! {
+    // PJRT handles are thread-affine (the xla crate wraps them in Rc), so
+    // the client cache is per-thread. In practice exactly one worker thread
+    // talks to PJRT.
+    static CLIENT: std::cell::RefCell<Option<xla::PjRtClient>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// Per-thread PJRT CPU client (creating several is wasteful and noisy).
+pub fn shared_client() -> Result<xla::PjRtClient> {
+    CLIENT.with(|c| {
+        let mut c = c.borrow_mut();
+        if c.is_none() {
+            *c = Some(
+                xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?,
+            );
+        }
+        Ok(c.clone().unwrap())
+    })
+}

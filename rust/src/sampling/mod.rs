@@ -1,0 +1,224 @@
+//! Dataset factory: produce the *LLM-generated* evaluation datasets by
+//! temperature-sampling the trained LMs (paper §5.1.1 — every eval dataset
+//! in the paper is itself LLM output; here the text is genuinely produced
+//! by next-token sampling, which is exactly the property the paper's
+//! compression result rests on).
+//!
+//! Two samplers:
+//! * [`DatasetFactory`] — the lowered in-graph `generate` HLO (default;
+//!   the whole sampling loop runs inside XLA, one call per block).
+//! * [`NativeSampler`] — pure-rust Gumbel sampling over the native model
+//!   (fallback; also used by tests so they need no artifacts).
+
+use crate::lm::config::{self, LmConfig};
+use crate::lm::native::{LaneState, NativeModel};
+use crate::lm::weights::Weights;
+use crate::runtime::{ArtifactStore, PjrtGenerator};
+use crate::textgen::Domain;
+use crate::tokenizer::vocab::{Vocab, BOS};
+use crate::util::Pcg64;
+use crate::Result;
+
+/// Build the BOS+domain-tag+primer prompt rows for a domain.
+fn domain_prompts(domain: Domain, n: usize, prompt_len: usize) -> Vec<Vec<u32>> {
+    let tag = Vocab.domain_tag(domain.index());
+    // A few real corpus bytes prime the sampler into the domain's register.
+    let primer = crate::textgen::generate(domain, 64, 999);
+    (0..n)
+        .map(|i| {
+            let mut p = vec![BOS, tag];
+            let off = (i * 7) % 32;
+            p.extend(primer[off..off + prompt_len - 2].iter().map(|&b| b as u32));
+            p
+        })
+        .collect()
+}
+
+/// Keep only byte tokens and newline-terminate blocks (decode safety).
+fn tokens_to_bytes(rows: &[Vec<u32>]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for row in rows {
+        for &t in row {
+            if t < 256 {
+                out.push(t as u8);
+            }
+        }
+        out.push(b'\n');
+    }
+    out
+}
+
+/// PJRT-backed dataset factory.
+pub struct DatasetFactory {
+    generator: PjrtGenerator,
+}
+
+impl DatasetFactory {
+    /// Open for a model using the default artifact store location.
+    pub fn open(model: &str) -> Result<DatasetFactory> {
+        let store = ArtifactStore::open(None)?;
+        Self::from_store(&store, model)
+    }
+
+    pub fn from_store(store: &ArtifactStore, model: &str) -> Result<DatasetFactory> {
+        let cfg = config::by_name(model)?;
+        Ok(DatasetFactory { generator: PjrtGenerator::from_store(store, cfg)? })
+    }
+
+    pub fn config(&self) -> &'static LmConfig {
+        self.generator.config()
+    }
+
+    /// Generate at least `min_bytes` of domain-conditioned samples.
+    pub fn generate_dataset(
+        &self,
+        domain: Domain,
+        min_bytes: usize,
+        temp: f64,
+        seed: u64,
+    ) -> Result<Vec<u8>> {
+        let b = self.generator.batch;
+        let p = self.generator.prompt_len;
+        let mut out = Vec::with_capacity(min_bytes + 4096);
+        let mut call = 0u32;
+        while out.len() < min_bytes {
+            let prompts = domain_prompts(domain, b, p);
+            let call_seed = (seed as i32)
+                .wrapping_mul(2654435761u32 as i32)
+                .wrapping_add(call as i32)
+                .wrapping_add(domain.index() as i32 * 7919);
+            let rows = self.generator.generate(&prompts, call_seed, temp as f32)?;
+            out.extend(tokens_to_bytes(&rows));
+            call += 1;
+        }
+        out.truncate(min_bytes);
+        Ok(out)
+    }
+}
+
+/// Native (no-PJRT) sampler over [`NativeModel`].
+pub struct NativeSampler {
+    model: NativeModel,
+}
+
+impl NativeSampler {
+    pub fn new(cfg: &'static LmConfig, weights: Weights) -> Self {
+        NativeSampler { model: NativeModel::new(cfg, weights) }
+    }
+
+    /// Sample `n_tokens` bytes continuing `prompt` (Gumbel-max over
+    /// temperature-scaled byte logits).
+    pub fn sample(&self, prompt: &[u32], n_tokens: usize, temp: f64, seed: u64) -> Result<Vec<u8>> {
+        let mut rng = Pcg64::new(seed, 31);
+        let mut lane = LaneState::new(self.model.cfg, config::MAX_CONTEXT);
+        let mut out = Vec::with_capacity(n_tokens);
+        let mut logits = vec![0.0f32; config::VOCAB];
+        for (i, &t) in prompt.iter().enumerate() {
+            let l = self.model.advance(&mut lane, t)?;
+            if i == prompt.len() - 1 {
+                logits = l;
+            }
+        }
+        for _ in 0..n_tokens {
+            if lane.pos() >= config::MAX_CONTEXT {
+                break;
+            }
+            let inv_t = 1.0 / temp.max(1e-4) as f32;
+            let mut best = 0usize;
+            let mut best_v = f32::NEG_INFINITY;
+            for (s, &lo) in logits.iter().take(256).enumerate() {
+                let u = rng.gen_f64().max(1e-12);
+                let gumbel = -(-(u.ln())).ln();
+                let v = lo * inv_t + gumbel as f32;
+                if v > best_v {
+                    best_v = v;
+                    best = s;
+                }
+            }
+            out.push(best as u8);
+            logits = self.model.advance(&mut lane, best as u32)?;
+        }
+        Ok(out)
+    }
+
+    /// Dataset-shaped output: repeated blocks until `min_bytes`.
+    pub fn generate_dataset(
+        &self,
+        domain: Domain,
+        min_bytes: usize,
+        temp: f64,
+        seed: u64,
+    ) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(min_bytes + 1024);
+        let mut block = 0u64;
+        while out.len() < min_bytes {
+            let prompts = domain_prompts(domain, 1, config::GEN_PROMPT);
+            let bytes = self.sample(
+                &prompts[0],
+                config::GEN_TOKENS,
+                temp,
+                seed.wrapping_mul(0x9E37_79B9).wrapping_add(block),
+            )?;
+            out.extend(bytes);
+            out.push(b'\n');
+            block += 1;
+        }
+        out.truncate(min_bytes);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lm::config::by_name;
+
+    #[test]
+    fn prompts_are_domain_tagged() {
+        let p = domain_prompts(Domain::Math, 4, 16);
+        assert_eq!(p.len(), 4);
+        for row in &p {
+            assert_eq!(row.len(), 16);
+            assert_eq!(row[0], BOS);
+            assert_eq!(row[1], Vocab.domain_tag(Domain::Math.index()));
+        }
+        // Different rows use different primer offsets.
+        assert_ne!(p[0], p[1]);
+    }
+
+    #[test]
+    fn tokens_to_bytes_filters_specials() {
+        let rows = vec![vec![72u32, 105, 300, 257, 33]];
+        assert_eq!(tokens_to_bytes(&rows), b"Hi!\n");
+    }
+
+    #[test]
+    fn native_sampler_is_deterministic() {
+        let cfg = by_name("nano").unwrap();
+        let s = NativeSampler::new(cfg, Weights::random(cfg, 11));
+        let a = s.sample(&[BOS], 40, 0.8, 5).unwrap();
+        let b = s.sample(&[BOS], 40, 0.8, 5).unwrap();
+        let c = s.sample(&[BOS], 40, 0.8, 6).unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.len(), 40);
+    }
+
+    #[test]
+    fn low_temperature_reduces_diversity() {
+        let cfg = by_name("nano").unwrap();
+        let s = NativeSampler::new(cfg, Weights::random(cfg, 12));
+        let hot = s.sample(&[BOS], 200, 1.5, 1).unwrap();
+        let cold = s.sample(&[BOS], 200, 0.05, 1).unwrap();
+        let distinct = |v: &[u8]| v.iter().collect::<std::collections::HashSet<_>>().len();
+        assert!(distinct(&cold) <= distinct(&hot), "cold {} hot {}", distinct(&cold), distinct(&hot));
+    }
+
+    #[test]
+    fn native_dataset_shape() {
+        let cfg = by_name("nano").unwrap();
+        let s = NativeSampler::new(cfg, Weights::random(cfg, 13));
+        let d = s.generate_dataset(Domain::Wiki, 600, 0.9, 3).unwrap();
+        assert_eq!(d.len(), 600);
+    }
+}

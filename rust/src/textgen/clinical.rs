@@ -1,0 +1,80 @@
+//! Synthetic clinical discharge notes (the paper's Clinical dataset is
+//! Asclepius-style GPT-3.5 notes in a Note–Question–Answer layout).
+
+use super::lexicon::PERSON_NAMES;
+use crate::util::Pcg64;
+
+const CONDITIONS: &[&str] = &[
+    "community-acquired pneumonia", "acute cholecystitis", "atrial fibrillation",
+    "type 2 diabetes mellitus", "chronic obstructive pulmonary disease", "iron deficiency anemia",
+    "acute appendicitis", "congestive heart failure", "urinary tract infection",
+    "deep vein thrombosis",
+];
+
+const MEDICATIONS: &[&str] = &[
+    "amoxicillin", "metformin", "lisinopril", "atorvastatin", "warfarin", "furosemide",
+    "omeprazole", "prednisone", "azithromycin", "apixaban",
+];
+
+const PROCEDURES: &[&str] = &[
+    "laparoscopic cholecystectomy", "chest radiography", "echocardiography", "colonoscopy",
+    "CT of the abdomen", "pulmonary function testing", "cardiac catheterization",
+];
+
+const FINDINGS: &[&str] = &[
+    "stable vital signs", "mild leukocytosis", "elevated inflammatory markers",
+    "improved oxygen saturation", "resolution of symptoms", "no acute distress",
+    "normal sinus rhythm", "adequate pain control",
+];
+
+/// One Note–Question–Answer clinical document.
+pub fn document(rng: &mut Pcg64) -> String {
+    let age = 22 + rng.gen_range(70);
+    let sex = if rng.gen_bool(0.5) { "male" } else { "female" };
+    let cond = rng.choose(CONDITIONS);
+    let med = rng.choose(MEDICATIONS);
+    let proc_ = rng.choose(PROCEDURES);
+    let finding = rng.choose(FINDINGS);
+    let days = 2 + rng.gen_range(12);
+    let dr = rng.choose(PERSON_NAMES);
+    let mut doc = format!(
+        "Clinical Note: The patient is a {age}-year-old {sex} admitted with {cond}. \
+         On admission the patient underwent {proc_}, which demonstrated {finding}. \
+         Treatment with {med} was initiated under the care of Dr. {dr}. "
+    );
+    doc.push_str(&format!(
+        "The hospital course was uncomplicated and the patient was discharged after {days} days \
+         with {finding2}.\n",
+        finding2 = rng.choose(FINDINGS),
+    ));
+    doc.push_str(&format!(
+        "Question: What was the indication for {med} in this patient?\n\
+         Answer: The patient was treated with {med} for {cond}, with follow-up showing {finding3}.",
+        finding3 = rng.choose(FINDINGS),
+    ));
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn note_question_answer_layout() {
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..20 {
+            let d = document(&mut rng);
+            assert!(d.starts_with("Clinical Note:"));
+            assert!(d.contains("\nQuestion:"));
+            assert!(d.contains("\nAnswer:"));
+        }
+    }
+
+    #[test]
+    fn mentions_condition_and_medication() {
+        let mut rng = Pcg64::seeded(2);
+        let d = document(&mut rng);
+        assert!(CONDITIONS.iter().any(|c| d.contains(c)));
+        assert!(MEDICATIONS.iter().any(|m| d.contains(m)));
+    }
+}

@@ -1,0 +1,112 @@
+//! Code-generation dataset: programming problems with solutions in a
+//! Python-like and a C-like surface syntax (the paper's Code dataset was
+//! produced by Mixtral across Python/JS/TS/C++/C).
+
+use crate::util::Pcg64;
+
+const FUNC_VERBS: &[&str] = &[
+    "compute", "find", "count", "sum", "filter", "merge", "sort", "reverse", "parse", "encode",
+    "validate", "normalize", "transform", "scan",
+];
+
+const FUNC_OBJECTS: &[&str] = &[
+    "items", "values", "tokens", "records", "nodes", "pairs", "digits", "entries", "scores",
+    "elements", "buckets", "segments",
+];
+
+const VAR_NAMES: &[&str] = &["acc", "result", "total", "buf", "out", "tmp", "count", "idx"];
+
+fn func_name(rng: &mut Pcg64) -> String {
+    format!("{}_{}", rng.choose(FUNC_VERBS), rng.choose(FUNC_OBJECTS))
+}
+
+fn python_function(rng: &mut Pcg64) -> String {
+    let name = func_name(rng);
+    let arg = rng.choose(FUNC_OBJECTS);
+    let var = rng.choose(VAR_NAMES);
+    let op = rng.choose(&["+", "*", "-"]);
+    let cond = rng.choose(&["% 2 == 0", "> 0", "!= 0", "< limit"]);
+    let mut f = format!("def {name}({arg}, limit={}):\n", 1 + rng.gen_range(100));
+    f.push_str(&format!("    \"\"\"{} the {} in the input list.\"\"\"\n",
+        super::lexicon::capitalize(rng.choose(FUNC_VERBS)), arg));
+    f.push_str(&format!("    {var} = {}\n", rng.gen_index(2)));
+    f.push_str(&format!("    for x in {arg}:\n"));
+    f.push_str(&format!("        if x {cond}:\n"));
+    f.push_str(&format!("            {var} = {var} {op} x\n"));
+    f.push_str(&format!("    return {var}\n"));
+    f
+}
+
+fn c_function(rng: &mut Pcg64) -> String {
+    let name = func_name(rng);
+    let var = rng.choose(VAR_NAMES);
+    let op = rng.choose(&["+", "*", "^"]);
+    let cond = rng.choose(&["% 2 == 0", "> threshold", "!= 0"]);
+    let mut f = format!("int {name}(const int *data, int n, int threshold) {{\n");
+    f.push_str(&format!("    int {var} = {};\n", rng.gen_index(2)));
+    f.push_str("    for (int i = 0; i < n; i++) {\n");
+    f.push_str(&format!("        if (data[i] {cond}) {{\n"));
+    f.push_str(&format!("            {var} = {var} {op} data[i];\n"));
+    f.push_str("        }\n    }\n");
+    f.push_str(&format!("    return {var};\n}}\n"));
+    f
+}
+
+/// One problem + solution document.
+pub fn document(rng: &mut Pcg64) -> String {
+    let verb = rng.choose(FUNC_VERBS);
+    let obj = rng.choose(FUNC_OBJECTS);
+    let lang_is_python = rng.gen_bool(0.6);
+    let mut doc = format!(
+        "Problem: Write a function to {verb} the {obj} of a list, \
+         handling the empty case and negative inputs.\n\nSolution ({lang}):\n```\n",
+        lang = if lang_is_python { "python" } else { "c" },
+    );
+    let n_funcs = 1 + rng.gen_index(2);
+    for _ in 0..n_funcs {
+        doc.push_str(&if lang_is_python { python_function(rng) } else { c_function(rng) });
+        doc.push('\n');
+    }
+    doc.push_str("```\n");
+    if rng.gen_bool(0.6) {
+        doc.push_str(&format!(
+            "Explanation: the function iterates once over the input, so it runs in O(n) \
+             time and O(1) space. {}\n",
+            super::lexicon::sentence(rng, FUNC_OBJECTS, &["iterative", "linear", "constant"]),
+        ));
+    }
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn documents_contain_code_fences() {
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..20 {
+            let d = document(&mut rng);
+            assert!(d.contains("```"));
+            assert!(d.contains("Problem:"));
+        }
+    }
+
+    #[test]
+    fn python_function_shape() {
+        let mut rng = Pcg64::seeded(2);
+        let f = python_function(&mut rng);
+        assert!(f.starts_with("def "));
+        assert!(f.contains("return"));
+        assert!(f.contains("for x in"));
+    }
+
+    #[test]
+    fn c_function_shape() {
+        let mut rng = Pcg64::seeded(3);
+        let f = c_function(&mut rng);
+        assert!(f.starts_with("int "));
+        assert!(f.contains("for (int i"));
+        assert!(f.trim_end().ends_with('}'));
+    }
+}

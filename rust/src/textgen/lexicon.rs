@@ -1,0 +1,173 @@
+//! Shared word banks and sentence-building helpers for the corpus
+//! generators. Kept in one place so domains share a base vocabulary (as
+//! natural language domains do) while layering their own jargon on top.
+
+use crate::util::Pcg64;
+
+pub const DETERMINERS: &[&str] = &["the", "a", "this", "that", "each", "its"];
+
+pub const COMMON_NOUNS: &[&str] = &[
+    "system", "method", "result", "process", "structure", "model", "analysis", "approach",
+    "region", "period", "development", "history", "population", "theory", "value", "effect",
+    "study", "group", "form", "part", "work", "field", "role", "change", "state", "case",
+];
+
+pub const COMMON_VERBS: &[&str] = &[
+    "is", "was", "remains", "became", "includes", "provides", "shows", "describes", "represents",
+    "contains", "supports", "follows", "requires", "produces", "defines", "forms",
+];
+
+pub const COMMON_ADJS: &[&str] = &[
+    "important", "significant", "notable", "common", "early", "modern", "large", "small",
+    "central", "major", "primary", "complex", "simple", "general", "specific", "recent",
+    "traditional", "distinct", "widespread", "fundamental",
+];
+
+pub const PLACE_NAMES: &[&str] = &[
+    "Avaria", "Brenthal", "Corvann", "Dresmore", "Elvast", "Fenwick", "Galdoria", "Harnmouth",
+    "Iskarel", "Jorvik", "Kestwell", "Lorvane", "Mersenne", "Northgate", "Ostmark", "Pellwater",
+];
+
+pub const PERSON_NAMES: &[&str] = &[
+    "Aldren", "Bessemer", "Caldwell", "Derring", "Ellsworth", "Farrow", "Greaves", "Holloway",
+    "Ingram", "Jessop", "Kirkwood", "Lambert", "Merriweather", "Norwood", "Ormsby", "Pemberton",
+];
+
+pub const FIRST_NAMES: &[&str] = &[
+    "Alice", "Benjamin", "Clara", "Daniel", "Eleanor", "Frederick", "Grace", "Henry", "Isabel",
+    "James", "Katherine", "Louis", "Margaret", "Nathaniel", "Olivia", "Peter",
+];
+
+pub const TRANSITIONS: &[&str] = &[
+    "However,", "Moreover,", "In addition,", "As a result,", "Consequently,", "In contrast,",
+    "Furthermore,", "Nevertheless,", "In particular,", "For example,",
+];
+
+/// Capitalize the first ASCII letter of a string.
+pub fn capitalize(s: &str) -> String {
+    let mut c = s.chars();
+    match c.next() {
+        Some(f) => f.to_ascii_uppercase().to_string() + c.as_str(),
+        None => String::new(),
+    }
+}
+
+/// A generic subject-verb-object sentence from mixed banks.
+pub fn sentence(rng: &mut Pcg64, extra_nouns: &[&str], extra_adjs: &[&str]) -> String {
+    let noun = |rng: &mut Pcg64| -> &str {
+        if !extra_nouns.is_empty() && rng.gen_bool(0.55) {
+            rng.choose(extra_nouns)
+        } else {
+            rng.choose(COMMON_NOUNS)
+        }
+    };
+    let adj = |rng: &mut Pcg64| -> &str {
+        if !extra_adjs.is_empty() && rng.gen_bool(0.5) {
+            rng.choose(extra_adjs)
+        } else {
+            rng.choose(COMMON_ADJS)
+        }
+    };
+    let mut s = String::new();
+    if rng.gen_bool(0.18) {
+        s.push_str(rng.choose(TRANSITIONS));
+        s.push(' ');
+    }
+    s.push_str(&capitalize(rng.choose(DETERMINERS)));
+    s.push(' ');
+    if rng.gen_bool(0.6) {
+        s.push_str(adj(rng));
+        s.push(' ');
+    }
+    s.push_str(noun(rng));
+    s.push(' ');
+    s.push_str(rng.choose(COMMON_VERBS));
+    s.push(' ');
+    s.push_str(rng.choose(DETERMINERS));
+    s.push(' ');
+    if rng.gen_bool(0.45) {
+        s.push_str(adj(rng));
+        s.push(' ');
+    }
+    s.push_str(noun(rng));
+    match rng.gen_index(10) {
+        0..=6 => s.push('.'),
+        7 | 8 => {
+            s.push_str(" of ");
+            s.push_str(rng.choose(DETERMINERS));
+            s.push(' ');
+            s.push_str(noun(rng));
+            s.push('.');
+        }
+        _ => {
+            s.push_str(", which ");
+            s.push_str(rng.choose(COMMON_VERBS));
+            s.push(' ');
+            s.push_str(rng.choose(DETERMINERS));
+            s.push(' ');
+            s.push_str(noun(rng));
+            s.push('.');
+        }
+    }
+    s
+}
+
+/// A paragraph of `n` sentences.
+pub fn paragraph(rng: &mut Pcg64, n: usize, extra_nouns: &[&str], extra_adjs: &[&str]) -> String {
+    let mut p = String::new();
+    for i in 0..n {
+        if i > 0 {
+            p.push(' ');
+        }
+        p.push_str(&sentence(rng, extra_nouns, extra_adjs));
+    }
+    p
+}
+
+/// A random 4-digit year in [1650, 2024].
+pub fn year(rng: &mut Pcg64) -> u32 {
+    1650 + rng.gen_range(375) as u32
+}
+
+/// A small integer rendered in decimal.
+pub fn small_int(rng: &mut Pcg64, max: u64) -> u64 {
+    1 + rng.gen_range(max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sentences_end_with_period() {
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..200 {
+            let s = sentence(&mut rng, &["token"], &["lossless"]);
+            assert!(s.ends_with('.'), "{s}");
+            assert!(s.chars().next().unwrap().is_ascii_uppercase(), "{s}");
+        }
+    }
+
+    #[test]
+    fn paragraph_has_n_periods_at_least() {
+        let mut rng = Pcg64::seeded(2);
+        let p = paragraph(&mut rng, 5, &[], &[]);
+        assert!(p.matches('.').count() >= 5);
+    }
+
+    #[test]
+    fn capitalize_handles_edge_cases() {
+        assert_eq!(capitalize(""), "");
+        assert_eq!(capitalize("abc"), "Abc");
+        assert_eq!(capitalize("Abc"), "Abc");
+    }
+
+    #[test]
+    fn year_in_range() {
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..100 {
+            let y = year(&mut rng);
+            assert!((1650..=2024).contains(&y));
+        }
+    }
+}

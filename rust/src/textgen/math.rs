@@ -1,0 +1,130 @@
+//! Grade-school math word problems with worked solutions (the paper's
+//! Math dataset is Orca-Math-style GPT-4-generated word problems).
+//! Problems are arithmetically *consistent*: the stated answer is computed,
+//! so the text carries real structure for a model to learn.
+
+use super::lexicon::FIRST_NAMES;
+use crate::util::Pcg64;
+
+const ITEMS: &[&str] = &[
+    "apples", "pencils", "marbles", "stickers", "books", "coins", "cookies", "cards", "shells",
+    "stamps", "buttons", "beads",
+];
+
+/// One word problem + chain-of-thought solution.
+pub fn document(rng: &mut Pcg64) -> String {
+    match rng.gen_index(3) {
+        0 => buy_sell(rng),
+        1 => share_equally(rng),
+        _ => rate_time(rng),
+    }
+}
+
+fn buy_sell(rng: &mut Pcg64) -> String {
+    let name = rng.choose(FIRST_NAMES);
+    let item = rng.choose(ITEMS);
+    let start = 10 + rng.gen_range(90);
+    let bought = 1 + rng.gen_range(40);
+    let given = 1 + rng.gen_range(start.min(40));
+    let total = start + bought - given;
+    format!(
+        "Question: {name} has {start} {item}. {name} buys {bought} more {item} and then \
+         gives away {given}. How many {item} does {name} have now?\n\
+         Solution: Start with {start} {item}. After buying {bought} more, {name} has \
+         {start} + {bought} = {sum} {item}. After giving away {given}, the total is \
+         {sum} - {given} = {total}. The answer is {total}.",
+        sum = start + bought,
+    )
+}
+
+fn share_equally(rng: &mut Pcg64) -> String {
+    let name = rng.choose(FIRST_NAMES);
+    let friend = rng.choose(FIRST_NAMES);
+    let item = rng.choose(ITEMS);
+    let groups = 2 + rng.gen_range(8);
+    let per = 2 + rng.gen_range(20);
+    let total = groups * per;
+    format!(
+        "Question: {name} and {friend} collected {total} {item} and shared them equally \
+         among {groups} boxes. How many {item} are in each box?\n\
+         Solution: Dividing {total} {item} into {groups} equal boxes gives \
+         {total} / {groups} = {per} {item} per box. The answer is {per}.",
+    )
+}
+
+fn rate_time(rng: &mut Pcg64) -> String {
+    let name = rng.choose(FIRST_NAMES);
+    let rate = 2 + rng.gen_range(18);
+    let hours = 2 + rng.gen_range(10);
+    let total = rate * hours;
+    format!(
+        "Question: A machine operated by {name} produces {rate} parts per hour. \
+         How many parts does it produce in {hours} hours?\n\
+         Solution: The machine produces {rate} parts each hour for {hours} hours, so the \
+         total is {rate} * {hours} = {total} parts. The answer is {total}.",
+    )
+}
+
+/// QA-formatted variant for the instruction corpus.
+pub fn qa(rng: &mut Pcg64) -> (String, String) {
+    let doc = document(rng);
+    let (q, s) = doc.split_once("\nSolution: ").expect("document format");
+    (q.trim_start_matches("Question: ").to_string(), s.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Extract "The answer is N." and recompute from the question text.
+    #[test]
+    fn answers_are_arithmetically_consistent() {
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..100 {
+            let d = document(&mut rng);
+            assert!(d.contains("The answer is "), "{d}");
+            // All equations of the form "a + b = c", "a - b = c", etc. hold.
+            for part in d.split(". ") {
+                check_equations(part);
+            }
+        }
+    }
+
+    fn check_equations(text: &str) {
+        // crude parser for "x OP y = z"
+        let words: Vec<&str> = text.split_whitespace().collect();
+        for w in words.windows(5) {
+            let (Ok(a), op, Ok(b), eq, Ok(c)) = (
+                w[0].parse::<i64>(),
+                w[1],
+                w[2].parse::<i64>(),
+                w[3],
+                w[4].trim_end_matches(['.', ',']).parse::<i64>(),
+            ) else {
+                continue;
+            };
+            if eq != "=" {
+                continue;
+            }
+            let got = match op {
+                "+" => a + b,
+                "-" => a - b,
+                "*" => a * b,
+                "/" => {
+                    assert_eq!(a % b, 0, "{text}");
+                    a / b
+                }
+                _ => continue,
+            };
+            assert_eq!(got, c, "bad equation in: {text}");
+        }
+    }
+
+    #[test]
+    fn qa_splits_cleanly() {
+        let mut rng = Pcg64::seeded(2);
+        let (q, a) = qa(&mut rng);
+        assert!(q.ends_with('?'));
+        assert!(a.contains("The answer is"));
+    }
+}

@@ -1,0 +1,222 @@
+//! Procedural text-corpus generators.
+//!
+//! These play the role of the paper's *human-generated* sources: the text
+//! the LMs are pre-trained on, and the "human" side of the Fig 9
+//! human-vs-LLM comparison. Each domain is a grammar/template generator
+//! over curated word banks, seeded by the deterministic [`crate::util::Pcg64`]
+//! so every corpus is reproducible bit-for-bit.
+//!
+//! Domains mirror the paper's eight evaluation datasets (§5.1.1):
+//! wiki, article, code, math, clinical, web (movie reviews), science,
+//! novel — plus the TPC-H `comment` field generator used by Table 2 and an
+//! instruction/QA formatter used to build the "instruction tuning" corpus.
+
+pub mod clinical;
+pub mod code;
+pub mod lexicon;
+pub mod math;
+pub mod novel;
+pub mod science;
+pub mod tpch;
+pub mod web;
+pub mod wiki;
+
+use crate::util::Pcg64;
+
+/// The eight evaluation domains of the paper plus TPC-H.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Domain {
+    Wiki,
+    Article,
+    Code,
+    Math,
+    Clinical,
+    Web,
+    Science,
+    Novel,
+    Tpch,
+}
+
+impl Domain {
+    /// The paper's eight evaluation datasets, in Table 5 column order.
+    pub const EVAL: [Domain; 8] = [
+        Domain::Wiki,
+        Domain::Code,
+        Domain::Math,
+        Domain::Clinical,
+        Domain::Web,
+        Domain::Science,
+        Domain::Novel,
+        Domain::Article,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Domain::Wiki => "wiki",
+            Domain::Article => "article",
+            Domain::Code => "code",
+            Domain::Math => "math",
+            Domain::Clinical => "clinical",
+            Domain::Web => "web",
+            Domain::Science => "science",
+            Domain::Novel => "novel",
+            Domain::Tpch => "tpch",
+        }
+    }
+
+    pub fn from_name(name: &str) -> crate::Result<Domain> {
+        Ok(match name {
+            "wiki" => Domain::Wiki,
+            "article" => Domain::Article,
+            "code" => Domain::Code,
+            "math" => Domain::Math,
+            "clinical" => Domain::Clinical,
+            "web" => Domain::Web,
+            "science" => Domain::Science,
+            "novel" => Domain::Novel,
+            "tpch" => Domain::Tpch,
+            other => anyhow::bail!("unknown domain '{other}'"),
+        })
+    }
+
+    /// Stable index used for the LM's domain-tag tokens.
+    pub fn index(&self) -> usize {
+        match self {
+            Domain::Wiki => 0,
+            Domain::Article => 1,
+            Domain::Code => 2,
+            Domain::Math => 3,
+            Domain::Clinical => 4,
+            Domain::Web => 5,
+            Domain::Science => 6,
+            Domain::Novel => 7,
+            Domain::Tpch => 8,
+        }
+    }
+}
+
+/// Generate at least `min_bytes` of domain text (cut at a document
+/// boundary, so output may slightly exceed `min_bytes`).
+pub fn generate(domain: Domain, min_bytes: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Pcg64::new(seed, domain.index() as u64 + 100);
+    let mut out = Vec::with_capacity(min_bytes + 1024);
+    while out.len() < min_bytes {
+        let doc = match domain {
+            Domain::Wiki => wiki::document(&mut rng),
+            Domain::Article => wiki::abstract_doc(&mut rng),
+            Domain::Code => code::document(&mut rng),
+            Domain::Math => math::document(&mut rng),
+            Domain::Clinical => clinical::document(&mut rng),
+            Domain::Web => web::document(&mut rng),
+            Domain::Science => science::document(&mut rng),
+            Domain::Novel => novel::document(&mut rng),
+            Domain::Tpch => tpch::comment(&mut rng),
+        };
+        out.extend_from_slice(doc.as_bytes());
+        out.push(b'\n');
+    }
+    out
+}
+
+/// Generate an instruction-tuning style QA document (used to fine-tune the
+/// `-instruct` model variants and as QA-structured eval data).
+pub fn generate_qa(min_bytes: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Pcg64::new(seed, 50);
+    let mut out = Vec::with_capacity(min_bytes + 1024);
+    while out.len() < min_bytes {
+        let (q, a) = match rng.gen_index(3) {
+            0 => math::qa(&mut rng),
+            1 => science::qa(&mut rng),
+            _ => wiki::qa(&mut rng),
+        };
+        out.extend_from_slice(b"Q: ");
+        out.extend_from_slice(q.as_bytes());
+        out.extend_from_slice(b"\nA: ");
+        out.extend_from_slice(a.as_bytes());
+        out.extend_from_slice(b"\n\n");
+    }
+    out
+}
+
+/// A small mixed-domain sample for unit tests.
+pub fn quick_sample(min_bytes: usize, seed: u64) -> Vec<u8> {
+    let mut out = Vec::new();
+    let per = min_bytes / 3 + 1;
+    out.extend(generate(Domain::Wiki, per, seed));
+    out.extend(generate(Domain::Code, per, seed + 1));
+    out.extend(generate(Domain::Math, per, seed + 2));
+    out.truncate(min_bytes);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_domains_generate() {
+        for d in Domain::EVAL.iter().chain([&Domain::Tpch]) {
+            let text = generate(*d, 4000, 7);
+            assert!(text.len() >= 4000, "{}", d.name());
+            assert!(text.is_ascii(), "{} must be ASCII", d.name());
+            // Should be text, not binary: high printable fraction.
+            let printable =
+                text.iter().filter(|&&b| (0x20..0x7F).contains(&b) || b == b'\n').count();
+            assert!(printable as f64 / text.len() as f64 > 0.999, "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        for d in [Domain::Wiki, Domain::Code, Domain::Tpch] {
+            assert_eq!(generate(d, 2000, 3), generate(d, 2000, 3));
+            assert_ne!(generate(d, 2000, 3), generate(d, 2000, 4));
+        }
+    }
+
+    #[test]
+    fn domains_are_distinct() {
+        let a = generate(Domain::Wiki, 2000, 1);
+        let b = generate(Domain::Code, 2000, 1);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn qa_format() {
+        let text = generate_qa(3000, 5);
+        let s = String::from_utf8(text).unwrap();
+        assert!(s.contains("Q: "));
+        assert!(s.contains("\nA: "));
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for d in Domain::EVAL.iter().chain([&Domain::Tpch]) {
+            assert_eq!(Domain::from_name(d.name()).unwrap(), *d);
+        }
+        assert!(Domain::from_name("bogus").is_err());
+    }
+
+    #[test]
+    fn char_entropy_is_text_like() {
+        // The paper's Table 2 reports ~4.3-4.7 bits/char for natural text;
+        // our generators should land in a text-like band (3.5-5.2).
+        for d in [Domain::Wiki, Domain::Novel, Domain::Clinical] {
+            let text = generate(d, 60_000, 11);
+            let mut counts = [0u64; 256];
+            for &b in &text {
+                counts[b as usize] += 1;
+            }
+            let total = text.len() as f64;
+            let h: f64 = counts
+                .iter()
+                .filter(|&&c| c > 0)
+                .map(|&c| {
+                    let p = c as f64 / total;
+                    -p * p.log2()
+                })
+                .sum();
+            assert!((3.5..5.2).contains(&h), "{}: H={h}", d.name());
+        }
+    }
+}

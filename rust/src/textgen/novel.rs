@@ -1,0 +1,86 @@
+//! Long-form narrative travel prose (the paper's Novel dataset is a
+//! LongWriter-generated travel book).
+
+use super::lexicon::{capitalize, FIRST_NAMES, PLACE_NAMES};
+use crate::util::Pcg64;
+
+const SCENES: &[&str] = &[
+    "the old harbor", "a crowded market", "the northern quarter", "a quiet courtyard",
+    "the railway station", "an abandoned lighthouse", "the riverside promenade",
+    "a hillside vineyard", "the cathedral square", "a roadside inn",
+];
+
+const WEATHER: &[&str] = &[
+    "under a thin morning fog", "in the amber light of late afternoon", "as rain gathered inland",
+    "beneath a sky the color of slate", "while gulls argued overhead", "in the still heat of noon",
+];
+
+const ACTIONS: &[&str] = &[
+    "lingered over coffee", "traded stories with a fisherman", "sketched the rooflines",
+    "followed the sound of bells", "bargained for dried figs", "read the old inscriptions",
+    "watched the ferries cross", "walked until the streets narrowed",
+];
+
+const REFLECTIONS: &[&str] = &[
+    "Travel, I have come to believe, is mostly the art of paying attention.",
+    "Every city keeps one honest street, if you walk far enough to find it.",
+    "The guidebooks are wrong about distances and right about nothing else.",
+    "A place reveals itself slowly, and only to the unhurried.",
+    "Maps flatten what memory insists on keeping steep.",
+];
+
+/// One chapter fragment.
+pub fn document(rng: &mut Pcg64) -> String {
+    let place = rng.choose(PLACE_NAMES);
+    let companion = rng.choose(FIRST_NAMES);
+    let mut doc = format!(
+        "Chapter {n}. We reached {place} {weather}, and made at once for {scene}. ",
+        n = 1 + rng.gen_range(40),
+        weather = rng.choose(WEATHER),
+        scene = rng.choose(SCENES),
+    );
+    for _ in 0..2 + rng.gen_index(4) {
+        match rng.gen_index(3) {
+            0 => doc.push_str(&format!(
+                "{companion} {action} {weather}. ",
+                action = rng.choose(ACTIONS),
+                weather = rng.choose(WEATHER),
+            )),
+            1 => doc.push_str(&format!(
+                "We {action}, then crossed toward {scene}. ",
+                action = rng.choose(ACTIONS),
+                scene = rng.choose(SCENES),
+            )),
+            _ => doc.push_str(&format!(
+                "{} ",
+                capitalize(rng.choose(REFLECTIONS)),
+            )),
+        }
+    }
+    doc.push_str(rng.choose(REFLECTIONS));
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chapter_structure() {
+        let mut rng = Pcg64::seeded(1);
+        let d = document(&mut rng);
+        assert!(d.starts_with("Chapter "));
+        assert!(d.len() > 120);
+    }
+
+    #[test]
+    fn narrative_vocabulary_present() {
+        let mut rng = Pcg64::seeded(2);
+        let mut all = String::new();
+        for _ in 0..30 {
+            all.push_str(&document(&mut rng));
+        }
+        assert!(SCENES.iter().filter(|s| all.contains(*s)).count() >= 5);
+        assert!(REFLECTIONS.iter().filter(|s| all.contains(*s)).count() >= 3);
+    }
+}

@@ -1,0 +1,118 @@
+//! Physics problem–solution pairs (the paper's Science dataset is
+//! CAMEL-physics: GPT-4 problem/solution pairs over 25 physics topics).
+//! Numeric answers are computed so the text is internally consistent.
+
+use crate::util::Pcg64;
+
+const TOPICS: &[&str] = &[
+    "kinematics", "dynamics", "thermodynamics", "electrostatics", "optics", "fluid mechanics",
+    "rotational motion", "simple harmonic motion", "wave propagation", "circuits",
+];
+
+/// One problem–solution document.
+pub fn document(rng: &mut Pcg64) -> String {
+    let topic = rng.choose(TOPICS);
+    let (problem, solution) = match rng.gen_index(3) {
+        0 => velocity(rng),
+        1 => ohms_law(rng),
+        _ => kinetic_energy(rng),
+    };
+    format!("Topic: {topic}\nProblem: {problem}\nSolution: {solution}")
+}
+
+fn velocity(rng: &mut Pcg64) -> (String, String) {
+    let d = 10 * (1 + rng.gen_range(50));
+    let t = 1 + rng.gen_range(20);
+    let v = d as f64 / t as f64;
+    (
+        format!(
+            "A vehicle travels {d} meters in {t} seconds at constant speed. \
+             What is its velocity?"
+        ),
+        format!(
+            "Velocity is distance divided by time: v = d / t = {d} / {t} = {v:.2} m/s. \
+             Therefore the velocity is {v:.2} m/s."
+        ),
+    )
+}
+
+fn ohms_law(rng: &mut Pcg64) -> (String, String) {
+    let r = 2 + rng.gen_range(98);
+    let i = 1 + rng.gen_range(12);
+    let v = r * i;
+    (
+        format!(
+            "A resistor of {r} ohms carries a current of {i} amperes. \
+             What is the voltage across the resistor?"
+        ),
+        format!(
+            "By Ohm's law, V = I * R = {i} * {r} = {v} volts. \
+             Therefore the voltage across the resistor is {v} V."
+        ),
+    )
+}
+
+fn kinetic_energy(rng: &mut Pcg64) -> (String, String) {
+    let m = 1 + rng.gen_range(40);
+    let v = 2 * (1 + rng.gen_range(15));
+    let ke = m * v * v / 2;
+    (
+        format!(
+            "An object of mass {m} kilograms moves at {v} meters per second. \
+             What is its kinetic energy?"
+        ),
+        format!(
+            "Kinetic energy is KE = (1/2) m v^2 = 0.5 * {m} * {v}^2 = {ke} joules. \
+             Therefore the kinetic energy is {ke} J."
+        ),
+    )
+}
+
+/// QA pair for the instruction corpus.
+pub fn qa(rng: &mut Pcg64) -> (String, String) {
+    let doc = document(rng);
+    let p = doc.split("\nProblem: ").nth(1).unwrap();
+    let (q, s) = p.split_once("\nSolution: ").unwrap();
+    (q.to_string(), s.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn document_layout() {
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..20 {
+            let d = document(&mut rng);
+            assert!(d.starts_with("Topic: "));
+            assert!(d.contains("\nProblem: "));
+            assert!(d.contains("\nSolution: "));
+        }
+    }
+
+    #[test]
+    fn ohms_law_consistent() {
+        let mut rng = Pcg64::seeded(2);
+        for _ in 0..50 {
+            let (_, s) = ohms_law(&mut rng);
+            // "V = I * R = i * r = v volts"
+            let nums: Vec<i64> = s
+                .split(|c: char| !c.is_ascii_digit())
+                .filter(|t| !t.is_empty())
+                .map(|t| t.parse().unwrap())
+                .collect();
+            // nums = [i, r, v, v]
+            assert_eq!(nums[0] * nums[1], nums[2]);
+            assert_eq!(nums[2], nums[3]);
+        }
+    }
+
+    #[test]
+    fn qa_extraction() {
+        let mut rng = Pcg64::seeded(3);
+        let (q, a) = qa(&mut rng);
+        assert!(q.ends_with('?'));
+        assert!(a.contains("Therefore"));
+    }
+}

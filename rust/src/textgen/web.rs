@@ -1,0 +1,124 @@
+//! Movie-review web content (the paper's Web dataset: ChatGPT-written movie
+//! critiques mimicking human reviews; the human counterpart in Fig 9 is
+//! imdb). One generator, two registers: `document` (polished, LLM-ish) and
+//! `imdb_style` (colloquial, typo-prone "human" reviews for Fig 9).
+
+use super::lexicon::{FIRST_NAMES, PERSON_NAMES};
+use crate::util::Pcg64;
+
+const GENRES: &[&str] = &[
+    "thriller", "drama", "comedy", "science fiction epic", "heist film", "romance",
+    "documentary", "western", "mystery", "animated feature",
+];
+
+const ASPECTS: &[&str] = &[
+    "the cinematography", "the pacing", "the screenplay", "the ensemble cast", "the score",
+    "the production design", "the editing", "the dialogue", "the third act", "the direction",
+];
+
+const PRAISE: &[&str] = &[
+    "is nothing short of remarkable", "carries the film effortlessly", "rewards patient viewers",
+    "elevates familiar material", "strikes a confident balance", "deserves genuine applause",
+];
+
+const CRITIQUE: &[&str] = &[
+    "never quite finds its rhythm", "buckles under its own ambition", "feels curiously inert",
+    "tests the audience's patience", "settles for easy answers", "drifts in the second hour",
+];
+
+const TITLES_A: &[&str] =
+    &["The Last", "A Quiet", "Midnight", "The Glass", "Echoes of", "Beyond the", "The Paper"];
+const TITLES_B: &[&str] =
+    &["Harbor", "Orchard", "Signal", "Divide", "Horizon", "Labyrinth", "Reckoning", "Garden"];
+
+fn title(rng: &mut Pcg64) -> String {
+    format!("{} {}", rng.choose(TITLES_A), rng.choose(TITLES_B))
+}
+
+/// Polished critic review (the LLM-register Web dataset).
+pub fn document(rng: &mut Pcg64) -> String {
+    let t = title(rng);
+    let genre = rng.choose(GENRES);
+    let director = rng.choose(PERSON_NAMES);
+    let stars = 1 + rng.gen_range(5);
+    let mut doc = format!(
+        "Review: \"{t}\" ({y}) -- {stars}/5 stars.\n\
+         {director}'s new {genre} opens with a sequence that announces its intentions clearly. ",
+        y = 1985 + rng.gen_range(40),
+    );
+    for _ in 0..2 + rng.gen_index(3) {
+        let aspect = rng.choose(ASPECTS);
+        let verdict =
+            if stars >= 3 { rng.choose(PRAISE) } else { rng.choose(CRITIQUE) };
+        doc.push_str(&format!("As for {aspect}, it {verdict}. "));
+    }
+    doc.push_str(&format!(
+        "In the end, \"{t}\" {verdict}, and audiences seeking a {genre} will find \
+         {closing}.",
+        verdict = if stars >= 3 { rng.choose(PRAISE) } else { rng.choose(CRITIQUE) },
+        closing = if stars >= 3 { "plenty to admire" } else { "little to hold onto" },
+    ));
+    doc
+}
+
+const COLLOQUIAL: &[&str] = &[
+    "honestly", "not gonna lie", "imo", "tbh", "no spoilers but", "ok so", "look,",
+];
+
+const HUMAN_VERDICTS: &[&str] = &[
+    "i loved it", "kinda dragged", "totally worth it", "meh", "blew me away",
+    "save your money", "best thing i've seen all year", "i wanted to like it",
+];
+
+/// Colloquial imdb-style review (the "human" register for Fig 9).
+pub fn imdb_style(rng: &mut Pcg64) -> String {
+    let t = title(rng);
+    let name = rng.choose(FIRST_NAMES);
+    let mut doc = format!(
+        "{lead} watched \"{t}\" last {day} and {verdict}. ",
+        lead = super::lexicon::capitalize(rng.choose(COLLOQUIAL)),
+        day = rng.choose(&["night", "weekend", "tuesday", "week"]),
+        verdict = rng.choose(HUMAN_VERDICTS),
+    );
+    for _ in 0..1 + rng.gen_index(3) {
+        doc.push_str(&format!(
+            "{c} {aspect} {v}... {verdict2}. ",
+            c = rng.choose(COLLOQUIAL),
+            aspect = rng.choose(ASPECTS),
+            v = rng.choose(&["was something else", "did NOT work for me", "was fine i guess",
+                "deserves an oscar", "was all over the place"]),
+            verdict2 = rng.choose(HUMAN_VERDICTS),
+        ));
+    }
+    doc.push_str(&format!("{}/10 from me ({name})", 1 + rng.gen_range(10)));
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn review_structure() {
+        let mut rng = Pcg64::seeded(1);
+        let d = document(&mut rng);
+        assert!(d.starts_with("Review: \""));
+        assert!(d.contains("/5 stars"));
+    }
+
+    #[test]
+    fn imdb_register_differs() {
+        let mut rng = Pcg64::seeded(2);
+        let d = imdb_style(&mut rng);
+        assert!(d.contains("/10 from me"));
+        // Register check: colloquial markers appear.
+        assert!(COLLOQUIAL.iter().any(|c| d.to_lowercase().contains(c)));
+    }
+
+    #[test]
+    fn registers_produce_different_text() {
+        let mut a = Pcg64::seeded(3);
+        let mut b = Pcg64::seeded(3);
+        assert_ne!(document(&mut a), imdb_style(&mut b));
+    }
+}

@@ -1,0 +1,122 @@
+//! Wikipedia-style introductions (the paper's Wiki dataset) and scientific
+//! abstracts (the Article dataset), plus encyclopedic QA pairs.
+
+use super::lexicon::{self, capitalize, paragraph, year, PERSON_NAMES, PLACE_NAMES};
+use crate::util::Pcg64;
+
+const TOPICS: &[&str] = &[
+    "settlement", "river", "mountain range", "cathedral", "university", "railway", "festival",
+    "dynasty", "observatory", "harbor", "province", "museum", "bridge", "monastery", "canal",
+];
+
+const WIKI_NOUNS: &[&str] = &[
+    "territory", "census", "district", "municipality", "heritage", "architecture", "trade",
+    "settlement", "expansion", "restoration", "administration", "jurisdiction",
+];
+
+const WIKI_ADJS: &[&str] = &[
+    "historic", "medieval", "industrial", "coastal", "rural", "urban", "agricultural",
+    "administrative", "cultural", "regional",
+];
+
+/// One Wikipedia-style introduction.
+pub fn document(rng: &mut Pcg64) -> String {
+    let place = rng.choose(PLACE_NAMES);
+    let topic = rng.choose(TOPICS);
+    let founded = year(rng);
+    let pop = 1000 + rng.gen_range(900_000);
+    let mut doc = format!(
+        "{place} is a {adj} {topic} in the {region} region, first recorded in {founded}. ",
+        adj = rng.choose(WIKI_ADJS),
+        region = rng.choose(PLACE_NAMES),
+    );
+    doc.push_str(&format!(
+        "As of the most recent census, the population of {place} was approximately {pop}. "
+    ));
+    let n_sent = 2 + rng.gen_index(3);
+    doc.push_str(&paragraph(rng, n_sent, WIKI_NOUNS, WIKI_ADJS));
+    if rng.gen_bool(0.5) {
+        doc.push_str(&format!(
+            " The {topic} was studied by {person} in {y}.",
+            person = rng.choose(PERSON_NAMES),
+            y = year(rng).max(founded),
+        ));
+    }
+    doc
+}
+
+const FIELDS: &[&str] = &[
+    "machine learning", "data management", "distributed systems", "computer architecture",
+    "information retrieval", "signal processing", "computational biology", "program analysis",
+];
+
+const METHOD_NOUNS: &[&str] = &[
+    "framework", "benchmark", "algorithm", "pipeline", "dataset", "evaluation", "prototype",
+    "compression", "throughput", "latency", "baseline", "workload",
+];
+
+const METHOD_ADJS: &[&str] = &[
+    "scalable", "efficient", "novel", "robust", "lightweight", "end-to-end", "adaptive",
+    "lossless", "parallel", "state-of-the-art",
+];
+
+/// One scientific-abstract-style document (the Article dataset).
+pub fn abstract_doc(rng: &mut Pcg64) -> String {
+    let field = rng.choose(FIELDS);
+    let gain = 2 + rng.gen_range(30);
+    let mut doc = format!(
+        "Abstract. We present a {adj} {noun} for {field}. ",
+        adj = rng.choose(METHOD_ADJS),
+        noun = rng.choose(METHOD_NOUNS),
+    );
+    let n_sent = 2 + rng.gen_index(3);
+    doc.push_str(&paragraph(rng, n_sent, METHOD_NOUNS, METHOD_ADJS));
+    doc.push_str(&format!(
+        " Experiments on {n} workloads show a {gain}x improvement over the {adj} baseline.",
+        n = 3 + rng.gen_index(9),
+        adj = rng.choose(METHOD_ADJS),
+    ));
+    doc
+}
+
+/// An encyclopedic QA pair for the instruction corpus.
+pub fn qa(rng: &mut Pcg64) -> (String, String) {
+    let place = rng.choose(PLACE_NAMES);
+    let topic = rng.choose(TOPICS);
+    let founded = year(rng);
+    let q = format!("When was the {topic} of {place} first recorded?");
+    let a = format!(
+        "The {topic} of {place} was first recorded in {founded}. {rest}",
+        rest = lexicon::sentence(rng, WIKI_NOUNS, WIKI_ADJS)
+    );
+    (capitalize(&q), a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wiki_document_structure() {
+        let mut rng = Pcg64::seeded(1);
+        let d = document(&mut rng);
+        assert!(d.contains("population"));
+        assert!(d.len() > 150);
+    }
+
+    #[test]
+    fn abstract_has_headline_metric() {
+        let mut rng = Pcg64::seeded(2);
+        let d = abstract_doc(&mut rng);
+        assert!(d.starts_with("Abstract."));
+        assert!(d.contains("x improvement"));
+    }
+
+    #[test]
+    fn qa_pair_nonempty() {
+        let mut rng = Pcg64::seeded(3);
+        let (q, a) = qa(&mut rng);
+        assert!(q.ends_with('?'));
+        assert!(!a.is_empty());
+    }
+}

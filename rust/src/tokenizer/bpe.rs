@@ -1,0 +1,176 @@
+//! Byte-pair encoding: trainer, encoder, decoder.
+//!
+//! Used by the analysis toolkit to reproduce the paper's Table 2 "BP-E"
+//! (entropy per byte under subword tokenization). Classic Sennrich-style
+//! BPE over bytes: repeatedly merge the most frequent adjacent pair.
+
+use std::collections::HashMap;
+
+/// A trained BPE model: 256 byte tokens + learned merges.
+#[derive(Clone, Debug)]
+pub struct Bpe {
+    /// Merge rules in training order: (left, right) -> new token id.
+    merges: Vec<(u32, u32)>,
+    /// Rank lookup: (left, right) -> merge index.
+    ranks: HashMap<(u32, u32), usize>,
+    /// Token id -> byte expansion.
+    expansions: Vec<Vec<u8>>,
+}
+
+impl Bpe {
+    /// Train `n_merges` merges on `corpus`.
+    pub fn train(corpus: &[u8], n_merges: usize) -> Self {
+        let mut expansions: Vec<Vec<u8>> = (0..256u32).map(|b| vec![b as u8]).collect();
+        let mut merges = Vec::with_capacity(n_merges);
+        let mut ranks = HashMap::new();
+        // Work on the token sequence directly (fine for analysis-scale data).
+        let mut seq: Vec<u32> = corpus.iter().map(|&b| b as u32).collect();
+        for _ in 0..n_merges {
+            // Count adjacent pairs.
+            let mut counts: HashMap<(u32, u32), u64> = HashMap::new();
+            for w in seq.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            // Most frequent pair, ties broken deterministically.
+            let Some((&pair, &count)) =
+                counts.iter().max_by_key(|(&(a, b), &c)| (c, std::cmp::Reverse((a, b))))
+            else {
+                break;
+            };
+            if count < 2 {
+                break;
+            }
+            let new_id = expansions.len() as u32;
+            let mut exp = expansions[pair.0 as usize].clone();
+            exp.extend_from_slice(&expansions[pair.1 as usize]);
+            expansions.push(exp);
+            ranks.insert(pair, merges.len());
+            merges.push(pair);
+            // Apply the merge to the working sequence.
+            let mut out = Vec::with_capacity(seq.len());
+            let mut i = 0;
+            while i < seq.len() {
+                if i + 1 < seq.len() && (seq[i], seq[i + 1]) == pair {
+                    out.push(new_id);
+                    i += 2;
+                } else {
+                    out.push(seq[i]);
+                    i += 1;
+                }
+            }
+            seq = out;
+        }
+        Bpe { merges, ranks, expansions }
+    }
+
+    /// Vocabulary size (256 + number of merges).
+    pub fn vocab_size(&self) -> usize {
+        self.expansions.len()
+    }
+
+    pub fn num_merges(&self) -> usize {
+        self.merges.len()
+    }
+
+    /// Byte expansion of a token.
+    pub fn expansion(&self, token: u32) -> &[u8] {
+        &self.expansions[token as usize]
+    }
+
+    /// Encode bytes by applying merges in rank order (lowest rank first),
+    /// the standard greedy BPE encode.
+    pub fn encode(&self, data: &[u8]) -> Vec<u32> {
+        let mut seq: Vec<u32> = data.iter().map(|&b| b as u32).collect();
+        loop {
+            // Find the lowest-rank applicable pair.
+            let mut best: Option<(usize, usize)> = None; // (rank, pos)
+            for i in 0..seq.len().saturating_sub(1) {
+                if let Some(&rank) = self.ranks.get(&(seq[i], seq[i + 1])) {
+                    if best.map_or(true, |(r, _)| rank < r) {
+                        best = Some((rank, i));
+                    }
+                }
+            }
+            let Some((rank, _)) = best else { break };
+            let pair = self.merges[rank];
+            let new_id = 256 + rank as u32;
+            let mut out = Vec::with_capacity(seq.len());
+            let mut i = 0;
+            while i < seq.len() {
+                if i + 1 < seq.len() && (seq[i], seq[i + 1]) == pair {
+                    out.push(new_id);
+                    i += 2;
+                } else {
+                    out.push(seq[i]);
+                    i += 1;
+                }
+            }
+            seq = out;
+        }
+        seq
+    }
+
+    /// Decode tokens back to bytes.
+    pub fn decode(&self, tokens: &[u32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for &t in tokens {
+            out.extend_from_slice(self.expansion(t));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::test_corpus;
+
+    #[test]
+    fn roundtrip_lossless() {
+        let corpus = test_corpus::textish(20_000, 1);
+        let bpe = Bpe::train(&corpus, 200);
+        for data in [&corpus[..1000], b"unseen bytes \xff\x00!", b""] {
+            let toks = bpe.encode(data);
+            assert_eq!(bpe.decode(&toks), data);
+        }
+    }
+
+    #[test]
+    fn merges_reduce_token_count() {
+        let corpus = test_corpus::textish(20_000, 2);
+        let bpe = Bpe::train(&corpus, 300);
+        let toks = bpe.encode(&corpus);
+        // Wordy text with 16 distinct words should compress well below 60%.
+        assert!(toks.len() < corpus.len() * 6 / 10, "{} tokens", toks.len());
+        assert!(bpe.vocab_size() > 256);
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let corpus = test_corpus::textish(5_000, 3);
+        let a = Bpe::train(&corpus, 50);
+        let b = Bpe::train(&corpus, 50);
+        assert_eq!(a.merges, b.merges);
+    }
+
+    #[test]
+    fn no_merges_on_random_data() {
+        // All pairs unique-ish: counts < 2 stops training early.
+        let data: Vec<u8> = (0..255u8).collect();
+        let bpe = Bpe::train(&data, 100);
+        assert_eq!(bpe.num_merges(), 0);
+        assert_eq!(bpe.encode(&data), data.iter().map(|&b| b as u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn expansion_concatenation_invariant() {
+        let corpus = b"the cat sat on the mat the cat sat on the mat".repeat(50);
+        let bpe = Bpe::train(&corpus, 100);
+        for t in 256..bpe.vocab_size() as u32 {
+            let (l, r) = bpe.merges[(t - 256) as usize];
+            let mut expect = bpe.expansion(l).to_vec();
+            expect.extend_from_slice(bpe.expansion(r));
+            assert_eq!(bpe.expansion(t), &expect[..]);
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Tokenizers.
+//!
+//! * [`vocab`] — the byte-level LM vocabulary shared with the Python side
+//!   (256 raw bytes + special/domain tokens). This is the *model's*
+//!   tokenizer; byte-level tokenization makes losslessness trivial (no
+//!   out-of-vocabulary text exists).
+//! * [`bpe`] — a byte-pair-encoding trainer/encoder/decoder used by the
+//!   analysis toolkit for the paper's Table 2 "BP-E" entropy column.
+//! * [`words`] — word/char segmentation used for W-E entropy and the
+//!   mutual-information metric.
+
+pub mod bpe;
+pub mod vocab;
+pub mod words;
+
+pub use bpe::Bpe;
+pub use vocab::{Vocab, BOS, DOMAIN_TAG_BASE, EOS, PAD, VOCAB_SIZE};

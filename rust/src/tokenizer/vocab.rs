@@ -1,0 +1,91 @@
+//! The byte-level LM vocabulary — MUST stay in lockstep with
+//! `python/compile/vocab.py` (the Python side asserts the same constants).
+//!
+//! Layout:
+//! * `0..=255`   — raw bytes
+//! * `256`       — PAD (never coded; fills fixed-shape batches)
+//! * `257`       — BOS (chunk start)
+//! * `258`       — EOS (generation stop)
+//! * `259..=271` — domain tags (conditioning prefix for dataset generation)
+
+/// Total vocabulary size (rounded to a multiple of 16 for MXU-friendly
+/// projection shapes).
+pub const VOCAB_SIZE: usize = 272;
+pub const PAD: u32 = 256;
+pub const BOS: u32 = 257;
+pub const EOS: u32 = 258;
+/// First domain-tag token id; domain `d` maps to `DOMAIN_TAG_BASE + d`.
+pub const DOMAIN_TAG_BASE: u32 = 259;
+/// Number of domain tags reserved.
+pub const NUM_DOMAIN_TAGS: usize = 13;
+
+/// Byte-level tokenizer for the LM.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Vocab;
+
+impl Vocab {
+    /// Encode raw bytes to token ids (identity + widen).
+    pub fn encode(&self, data: &[u8]) -> Vec<u32> {
+        data.iter().map(|&b| b as u32).collect()
+    }
+
+    /// Decode token ids back to bytes. Non-byte tokens are rejected — a
+    /// lossless decode must never synthesize specials.
+    pub fn decode(&self, tokens: &[u32]) -> crate::Result<Vec<u8>> {
+        tokens
+            .iter()
+            .map(|&t| {
+                if t < 256 {
+                    Ok(t as u8)
+                } else {
+                    anyhow::bail!("non-byte token {t} in decode stream")
+                }
+            })
+            .collect()
+    }
+
+    /// The domain-tag token for a domain index.
+    pub fn domain_tag(&self, domain: usize) -> u32 {
+        assert!(domain < NUM_DOMAIN_TAGS);
+        DOMAIN_TAG_BASE + domain as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_constants() {
+        assert_eq!(VOCAB_SIZE, 272);
+        assert_eq!(PAD, 256);
+        assert_eq!(BOS, 257);
+        assert_eq!(EOS, 258);
+        assert!(DOMAIN_TAG_BASE as usize + NUM_DOMAIN_TAGS <= VOCAB_SIZE);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let v = Vocab;
+        let data: Vec<u8> = (0..=255).collect();
+        let toks = v.encode(&data);
+        assert_eq!(v.decode(&toks).unwrap(), data);
+    }
+
+    #[test]
+    fn specials_rejected_in_decode() {
+        let v = Vocab;
+        assert!(v.decode(&[65, PAD]).is_err());
+        assert!(v.decode(&[BOS]).is_err());
+    }
+
+    #[test]
+    fn domain_tags_in_range() {
+        let v = Vocab;
+        for d in 0..NUM_DOMAIN_TAGS {
+            let t = v.domain_tag(d);
+            assert!((t as usize) < VOCAB_SIZE);
+            assert!(t >= DOMAIN_TAG_BASE);
+        }
+    }
+}

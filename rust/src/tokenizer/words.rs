@@ -1,0 +1,73 @@
+//! Word and character segmentation for the analysis metrics (Table 2's
+//! Char-E / W-E columns and the mutual-information measure, Fig 2's n-grams).
+
+/// Split text into word tokens: maximal runs of alphanumerics; punctuation
+/// characters are their own tokens; whitespace separates.
+pub fn words(text: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let bytes = text.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        if c.is_ascii_whitespace() {
+            i += 1;
+        } else if c.is_ascii_alphanumeric() || c == '_' {
+            let start = i;
+            while i < bytes.len() && ((bytes[i] as char).is_ascii_alphanumeric() || bytes[i] == b'_')
+            {
+                i += 1;
+            }
+            out.push(&text[start..i]);
+        } else {
+            // Punctuation / other: single-byte token (ASCII-safe corpora).
+            let start = i;
+            // Step over a full UTF-8 scalar to stay on char boundaries.
+            let ch_len = text[start..].chars().next().map(|c| c.len_utf8()).unwrap_or(1);
+            i += ch_len;
+            out.push(&text[start..i]);
+        }
+    }
+    out
+}
+
+/// Character tokens (unicode scalars).
+pub fn chars(text: &str) -> Vec<char> {
+    text.chars().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_words_and_punct() {
+        let toks = words("The cat, the mat.");
+        assert_eq!(toks, vec!["The", "cat", ",", "the", "mat", "."]);
+    }
+
+    #[test]
+    fn handles_numbers_and_underscores() {
+        let toks = words("x_1 = 42 + foo_bar");
+        assert_eq!(toks, vec!["x_1", "=", "42", "+", "foo_bar"]);
+    }
+
+    #[test]
+    fn empty_and_whitespace() {
+        assert!(words("").is_empty());
+        assert!(words("   \n\t ").is_empty());
+    }
+
+    #[test]
+    fn utf8_punctuation_safe() {
+        let toks = words("café — test");
+        // 'é' is non-ascii-alphanumeric: becomes its own token; the point is
+        // no panic on char boundaries.
+        assert!(toks.contains(&"caf"));
+        assert!(toks.contains(&"test"));
+    }
+
+    #[test]
+    fn chars_counts_scalars() {
+        assert_eq!(chars("abé").len(), 3);
+    }
+}

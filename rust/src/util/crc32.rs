@@ -1,0 +1,81 @@
+//! CRC-32 (IEEE 802.3 polynomial, reflected) — used by the compression
+//! container format to verify lossless round-trips at decode time.
+
+/// Lazily-built 8-entry-per-byte slicing table.
+fn table() -> &'static [[u32; 256]; 8] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<Box<[[u32; 256]; 8]>> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = Box::new([[0u32; 256]; 8]);
+        for i in 0..256u32 {
+            let mut crc = i;
+            for _ in 0..8 {
+                crc = if crc & 1 != 0 { (crc >> 1) ^ 0xEDB8_8320 } else { crc >> 1 };
+            }
+            t[0][i as usize] = crc;
+        }
+        for i in 0..256usize {
+            for j in 1..8usize {
+                let prev = t[j - 1][i];
+                t[j][i] = (prev >> 8) ^ t[0][(prev & 0xFF) as usize];
+            }
+        }
+        t
+    })
+}
+
+/// Compute the CRC-32 of `data` (slicing-by-8).
+pub fn crc32(data: &[u8]) -> u32 {
+    let t = table();
+    let mut crc = !0u32;
+    let mut chunks = data.chunks_exact(8);
+    for c in &mut chunks {
+        let lo = u32::from_le_bytes(c[0..4].try_into().unwrap()) ^ crc;
+        let hi = u32::from_le_bytes(c[4..8].try_into().unwrap());
+        crc = t[7][(lo & 0xFF) as usize]
+            ^ t[6][((lo >> 8) & 0xFF) as usize]
+            ^ t[5][((lo >> 16) & 0xFF) as usize]
+            ^ t[4][(lo >> 24) as usize]
+            ^ t[3][(hi & 0xFF) as usize]
+            ^ t[2][((hi >> 8) & 0xFF) as usize]
+            ^ t[1][((hi >> 16) & 0xFF) as usize]
+            ^ t[0][(hi >> 24) as usize];
+    }
+    for &b in chunks.remainder() {
+        crc = (crc >> 8) ^ t[0][((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard CRC-32 test vectors.
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn incremental_vs_slice_boundaries() {
+        // Exercise the chunks_exact remainder path at every offset.
+        let data: Vec<u8> = (0..64u8).collect();
+        for len in 0..data.len() {
+            let reference = {
+                // bit-at-a-time reference implementation
+                let mut crc = !0u32;
+                for &b in &data[..len] {
+                    crc ^= b as u32;
+                    for _ in 0..8 {
+                        crc = if crc & 1 != 0 { (crc >> 1) ^ 0xEDB8_8320 } else { crc >> 1 };
+                    }
+                }
+                !crc
+            };
+            assert_eq!(crc32(&data[..len]), reference, "len={len}");
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! Shared utilities: deterministic RNG, CRC32, byte helpers, simple stats.
+
+pub mod crc32;
+pub mod rng;
+pub mod stats;
+
+pub use crc32::crc32;
+pub use rng::Pcg64;
+
+/// Integer log2 (floor). `msb(1) == 0`, `msb(255) == 7`.
+#[inline]
+pub fn floor_log2(x: u32) -> u32 {
+    debug_assert!(x > 0);
+    31 - x.leading_zeros()
+}
+
+/// Read a little-endian u32 from `buf[pos..pos+4]`.
+#[inline]
+pub fn read_u32_le(buf: &[u8], pos: usize) -> u32 {
+    u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap())
+}
+
+/// Read a little-endian u64 from `buf[pos..pos+8]`.
+#[inline]
+pub fn read_u64_le(buf: &[u8], pos: usize) -> u64 {
+    u64::from_le_bytes(buf[pos..pos + 8].try_into().unwrap())
+}
+
+/// Human-readable byte size, e.g. `1.50 MiB`.
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", n, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floor_log2_basics() {
+        assert_eq!(floor_log2(1), 0);
+        assert_eq!(floor_log2(2), 1);
+        assert_eq!(floor_log2(3), 1);
+        assert_eq!(floor_log2(4), 2);
+        assert_eq!(floor_log2(255), 7);
+        assert_eq!(floor_log2(256), 8);
+        assert_eq!(floor_log2(u32::MAX), 31);
+    }
+
+    #[test]
+    fn human_bytes_format() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(1536), "1.50 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn read_le_roundtrip() {
+        let buf = 0xDEADBEEFu32.to_le_bytes();
+        assert_eq!(read_u32_le(&buf, 0), 0xDEADBEEF);
+        let buf = 0x0123_4567_89AB_CDEFu64.to_le_bytes();
+        assert_eq!(read_u64_le(&buf, 0), 0x0123_4567_89AB_CDEF);
+    }
+}

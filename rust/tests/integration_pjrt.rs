@@ -1,0 +1,234 @@
+//! Integration tests over the PJRT runtime + real artifacts.
+//!
+//! These need `make artifacts`; they skip (with a message) when the
+//! artifacts directory is missing so `cargo test` stays green on a fresh
+//! checkout.
+
+use llmzip::compress::{Compressor, LlmCompressor, LlmCompressorConfig};
+use llmzip::lm::config::{self, by_name};
+use llmzip::lm::executor::LmExecutor;
+use llmzip::lm::native::{LaneState, NativeModel};
+use llmzip::lm::ExecutorKind;
+use llmzip::runtime::{ArtifactStore, PjrtForwardExecutor};
+use llmzip::tokenizer::vocab::BOS;
+
+fn store() -> Option<ArtifactStore> {
+    match ArtifactStore::open(None) {
+        Ok(s) if s.has_model("medium") => Some(s),
+        _ => {
+            eprintln!("SKIP: artifacts not built");
+            None
+        }
+    }
+}
+
+fn softmax_256(logits: &[f32]) -> Vec<f32> {
+    let m = logits[..256].iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let e: Vec<f32> = logits[..256].iter().map(|&x| (x - m).exp()).collect();
+    let s: f32 = e.iter().sum();
+    e.into_iter().map(|x| x / s).collect()
+}
+
+#[test]
+fn pjrt_forward_matches_native_model() {
+    let Some(store) = store() else { return };
+    let cfg = by_name("medium").unwrap();
+    let fwd = PjrtForwardExecutor::from_store(&store, cfg).unwrap();
+    let text = llmzip::experiments::human_text(llmzip::textgen::Domain::Wiki, 100);
+    let mut lane = vec![BOS];
+    lane.extend(text[..60].iter().map(|&b| b as u32));
+    let lanes = vec![lane.clone()];
+    let logits = fwd.encode_logits(&lanes, lane.len()).unwrap();
+
+    let native = NativeModel::new(cfg, store.weights(cfg).unwrap());
+    let mut st = LaneState::new(cfg, 256);
+    for (t, &tok) in lane.iter().enumerate() {
+        let nat = native.advance(&mut st, tok).unwrap();
+        let pj = &logits[t * config::VOCAB..(t + 1) * config::VOCAB];
+        // Different reduction orders: compare probabilities, not bits.
+        let (pn, pp) = (softmax_256(&nat), softmax_256(pj));
+        for (a, b) in pn.iter().zip(&pp) {
+            assert!((a - b).abs() < 2e-3, "prob divergence at pos {t}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn pallas_artifact_matches_jnp_artifact() {
+    let Some(store) = store() else { return };
+    let cfg = by_name("medium").unwrap();
+    // The pallas variant was lowered with batch=1; compare single-lane
+    // logits against the jnp-lowered forward artifact.
+    let exe = store.compile(&ArtifactStore::forward_pallas_file(cfg)).unwrap();
+    let weights = store.weights(cfg).unwrap();
+    let params = store.param_buffers(cfg, &weights).unwrap();
+    let s = config::MAX_CONTEXT;
+    let text = llmzip::experiments::human_text(llmzip::textgen::Domain::Novel, s);
+    let mut tokens: Vec<i32> = vec![BOS as i32];
+    tokens.extend(text[..s - 1].iter().map(|&b| b as i32));
+    let tok_buf = store.client().buffer_from_host_buffer::<i32>(&tokens, &[1, s], None).unwrap();
+    let mut args: Vec<&xla::PjRtBuffer> = params.iter().collect();
+    args.push(&tok_buf);
+    let res = exe.execute_b(&args).unwrap();
+    let pallas_logits =
+        res[0][0].to_literal_sync().unwrap().to_tuple1().unwrap().to_vec::<f32>().unwrap();
+
+    let fwd = PjrtForwardExecutor::from_store(&store, cfg).unwrap();
+    let lane: Vec<u32> = tokens.iter().map(|&t| t as u32).collect();
+    let jnp_logits = fwd.encode_logits(&[lane], s).unwrap();
+
+    let mut max_err = 0f32;
+    for (a, b) in pallas_logits.iter().zip(&jnp_logits) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 2e-3, "pallas vs jnp artifact max err {max_err}");
+}
+
+#[test]
+fn forward_prefix_replay_is_bit_exact() {
+    // The decompression correctness property: running the forward artifact
+    // on a prefix + padding gives bitwise the same logits at prefix
+    // positions as running it on the full input.
+    let Some(store) = store() else { return };
+    let cfg = by_name("small").unwrap();
+    let fwd = PjrtForwardExecutor::from_store(&store, cfg).unwrap();
+    let text = llmzip::experiments::human_text(llmzip::textgen::Domain::Code, 300);
+    let mut full = vec![BOS];
+    full.extend(text[..200].iter().map(|&b| b as u32));
+    let full_logits = fwd.encode_logits(&[full.clone()], full.len()).unwrap();
+    let prefix: Vec<u32> = full[..97].to_vec();
+    let prefix_logits = fwd.encode_logits(&[prefix.clone()], prefix.len()).unwrap();
+    assert_eq!(
+        &full_logits[..prefix.len() * config::VOCAB],
+        &prefix_logits[..],
+        "prefix logits must be bitwise identical"
+    );
+}
+
+#[test]
+fn cross_executor_roundtrips() {
+    let Some(store) = store() else { return };
+    let data = llmzip::experiments::human_text(llmzip::textgen::Domain::Clinical, 3000);
+    for exec in [ExecutorKind::PjrtForward, ExecutorKind::PjrtStep, ExecutorKind::Native] {
+        let comp = LlmCompressor::open(
+            &store,
+            LlmCompressorConfig {
+                model: "small".into(),
+                chunk_tokens: 128,
+                stream_bytes: 1024,
+                executor: exec,
+            },
+        )
+        .unwrap();
+        let z = comp.compress(&data).unwrap();
+        let back = comp.decompress(&z).unwrap();
+        assert_eq!(back, data, "{exec:?}");
+    }
+}
+
+#[test]
+fn executor_mismatch_rejected() {
+    let Some(store) = store() else { return };
+    let data = llmzip::experiments::human_text(llmzip::textgen::Domain::Web, 600);
+    let mk = |exec| {
+        LlmCompressor::open(
+            &store,
+            LlmCompressorConfig {
+                model: "small".into(),
+                chunk_tokens: 128,
+                stream_bytes: 1024,
+                executor: exec,
+            },
+        )
+        .unwrap()
+    };
+    let fwd = mk(ExecutorKind::PjrtForward);
+    let step = mk(ExecutorKind::PjrtStep);
+    let z = fwd.compress(&data).unwrap();
+    let err = step.decompress(&z).unwrap_err().to_string();
+    assert!(err.contains("executor"), "{err}");
+    // And the matching executor decodes fine.
+    assert_eq!(fwd.decompress(&z).unwrap(), data);
+}
+
+#[test]
+fn step_and_forward_engines_agree_on_cost() {
+    // The KV-cache step path and the batched forward path run different
+    // HLO, so they are not bit-identical — but their probability streams
+    // must be numerically close: compressed sizes within 2%.
+    let Some(store) = store() else { return };
+    let data = llmzip::experiments::human_text(llmzip::textgen::Domain::Novel, 4096);
+    let sizes: Vec<usize> = [ExecutorKind::PjrtForward, ExecutorKind::PjrtStep]
+        .into_iter()
+        .map(|exec| {
+            let comp = LlmCompressor::open(
+                &store,
+                LlmCompressorConfig {
+                    model: "small".into(),
+                    chunk_tokens: 256,
+                    stream_bytes: 4096,
+                    executor: exec,
+                },
+            )
+            .unwrap();
+            comp.compress(&data).unwrap().len()
+        })
+        .collect();
+    let (a, b) = (sizes[0] as f64, sizes[1] as f64);
+    assert!((a - b).abs() / a < 0.02, "forward {a} vs step {b}");
+}
+
+#[test]
+fn compression_is_deterministic() {
+    let Some(store) = store() else { return };
+    let data = llmzip::experiments::human_text(llmzip::textgen::Domain::Math, 2000);
+    let comp = LlmCompressor::open(
+        &store,
+        LlmCompressorConfig {
+            model: "small".into(),
+            chunk_tokens: 256,
+            stream_bytes: 2048,
+            executor: ExecutorKind::PjrtForward,
+        },
+    )
+    .unwrap();
+    let a = comp.compress(&data).unwrap();
+    let b = comp.compress(&data).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn generator_is_deterministic_and_byte_clean() {
+    let Some(store) = store() else { return };
+    let f = llmzip::sampling::DatasetFactory::from_store(&store, "small").unwrap();
+    let a = f.generate_dataset(llmzip::textgen::Domain::Science, 4000, 0.7, 9).unwrap();
+    let b = f.generate_dataset(llmzip::textgen::Domain::Science, 4000, 0.7, 9).unwrap();
+    assert_eq!(a, b);
+    assert!(a.iter().all(|&b| b == b'\n' || (0x00..0x80).contains(&b)));
+}
+
+#[test]
+fn llm_beats_gzip_on_own_output() {
+    // The paper's headline, end to end: model-generated text compresses far
+    // better under the model than under gzip.
+    let Some(store) = store() else { return };
+    let f = llmzip::sampling::DatasetFactory::from_store(&store, "medium").unwrap();
+    let data = f.generate_dataset(llmzip::textgen::Domain::Wiki, 16 * 1024, 0.7, 4).unwrap();
+    let llm = LlmCompressor::open(
+        &store,
+        LlmCompressorConfig {
+            model: "medium".into(),
+            chunk_tokens: 256,
+            stream_bytes: 4096,
+            executor: ExecutorKind::PjrtForward,
+        },
+    )
+    .unwrap();
+    let llm_ratio = data.len() as f64 / llm.compress(&data).unwrap().len() as f64;
+    let gzip = llmzip::compress::baseline_by_name("gzip").unwrap();
+    let gzip_ratio = data.len() as f64 / gzip.compress(&data).unwrap().len() as f64;
+    assert!(
+        llm_ratio > 1.5 * gzip_ratio,
+        "llm {llm_ratio:.2}x must clearly beat gzip {gzip_ratio:.2}x"
+    );
+}

@@ -1,0 +1,80 @@
+//! Integration tests for the coordinator service (native engine — no
+//! artifacts needed) including the TCP wire protocol.
+
+use llmzip::compress::LlmCompressor;
+use llmzip::coordinator::{BatchPolicy, Server, ServerConfig};
+use llmzip::lm::config::by_name;
+use llmzip::lm::weights::Weights;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn native_server(lanes: usize) -> Server {
+    Server::start(
+        move || {
+            let cfg = by_name("nano")?;
+            LlmCompressor::from_weights(cfg, Weights::random(cfg, 99), 64, lanes)
+        },
+        ServerConfig {
+            chunk_tokens: 64,
+            policy: BatchPolicy { lanes, max_wait: Duration::from_millis(3) },
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn many_concurrent_clients_roundtrip() {
+    let server = Arc::new(native_server(4));
+    let handles: Vec<_> = (0..10)
+        .map(|i| {
+            let srv = server.clone();
+            std::thread::spawn(move || {
+                let data = llmzip::textgen::quick_sample(700 + i * 37, i as u64);
+                for _ in 0..2 {
+                    let z = srv.compress(&data).unwrap();
+                    assert_eq!(srv.decompress(&z).unwrap(), data);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = &server.metrics;
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0);
+    assert!(m.mean_occupancy() > 0.25, "batching should pack lanes");
+}
+
+#[test]
+fn mixed_sizes_including_edge_cases() {
+    let server = native_server(2);
+    for n in [0usize, 1, 63, 64, 65, 128, 1000] {
+        let data = llmzip::textgen::quick_sample(n, n as u64);
+        let z = server.compress(&data).unwrap();
+        assert_eq!(server.decompress(&z).unwrap(), data, "n={n}");
+    }
+}
+
+#[test]
+fn failure_injection_bad_containers() {
+    let server = native_server(2);
+    // Garbage, truncations, and a valid container decoded twice.
+    assert!(server.decompress(b"not a container").is_err());
+    let data = llmzip::textgen::quick_sample(500, 3);
+    let z = server.compress(&data).unwrap();
+    assert!(server.decompress(&z[..z.len() / 2]).is_err());
+    assert_eq!(server.decompress(&z).unwrap(), data);
+    assert_eq!(server.decompress(&z).unwrap(), data, "decode is repeatable");
+}
+
+#[test]
+fn server_survives_errors_and_keeps_serving() {
+    let server = native_server(2);
+    for _ in 0..3 {
+        let _ = server.decompress(&[0xFF; 40]);
+    }
+    let data = llmzip::textgen::quick_sample(300, 5);
+    let z = server.compress(&data).unwrap();
+    assert_eq!(server.decompress(&z).unwrap(), data);
+}
