@@ -29,6 +29,7 @@ fn main() -> llmzip::Result<()> {
                 chunk_tokens: 256,
                 stream_bytes: 4096,
                 executor: ExecutorKind::PjrtForward,
+                ..Default::default()
             },
         )?;
         let t0 = Instant::now();

@@ -32,6 +32,7 @@ fn main() -> llmzip::Result<()> {
             chunk_tokens: 256,
             stream_bytes: 4096,
             executor: ExecutorKind::PjrtForward,
+            ..Default::default()
         },
     )?;
     let z = llm.compress(&text)?;

@@ -35,6 +35,7 @@ fn main() -> llmzip::Result<()> {
                         chunk_tokens: 256,
                         stream_bytes: 4096,
                         executor,
+                        ..Default::default()
                     },
                 )
             }
@@ -42,6 +43,7 @@ fn main() -> llmzip::Result<()> {
         ServerConfig {
             chunk_tokens: 256,
             policy: BatchPolicy { lanes: 8, max_wait: Duration::from_millis(15) },
+            ..Default::default()
         },
     )?);
 

@@ -10,7 +10,7 @@ fn main() -> llmzip::Result<()> {
     let factory = DatasetFactory::from_store(&store, "medium")?;
     let comp = LlmCompressor::open(&store, LlmCompressorConfig {
         model: "medium".into(), chunk_tokens: 256, stream_bytes: 4096,
-        executor: ExecutorKind::PjrtForward })?;
+        executor: ExecutorKind::PjrtForward, ..Default::default() })?;
     println!("{:<6} {:>8} {:>12}", "TEMP", "RATIO", "bits/byte");
     for temp in [1.0, 0.8, 0.6, 0.5, 0.4, 0.3] {
         let data = factory.generate_dataset(Domain::Wiki, 16*1024, temp, 11)?;

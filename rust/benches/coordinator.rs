@@ -47,6 +47,7 @@ fn main() {
             ServerConfig {
                 chunk_tokens: 128,
                 policy: BatchPolicy { lanes: 8, max_wait: Duration::from_millis(4) },
+                ..Default::default()
             },
         )
         .expect("server"),

@@ -1,7 +1,18 @@
-//! PJRT runtime benchmarks (require `make artifacts`): forward-call
-//! latency, step-call latency, in-graph generation throughput, LLM
-//! compressor throughput per executor, plus the §5.4 chunk sweep and the
-//! Figs 5-9 regenerations.
+//! Runtime benchmarks.
+//!
+//! Two tiers:
+//!
+//! 1. **Native engine (always runs, no artifacts needed)** — tokens/sec of
+//!    the batched resolved-plan engine vs. the frozen seed implementation
+//!    (`llmzip::lm::reference`), single-threaded and multi-threaded, plus
+//!    the bulk-encode path, per model size. Results are written as
+//!    machine-readable JSON to `BENCH_runtime.json` (override the path
+//!    with `LLMZIP_BENCH_JSON`) so the bench trajectory is diffable across
+//!    PRs.
+//! 2. **PJRT runtime (requires `make artifacts`)** — forward/step call
+//!    latency, in-graph generation, compressor throughput per executor,
+//!    and the figure regenerations. Skipped with a message when artifacts
+//!    (or the real xla crate) are absent.
 
 #[path = "harness.rs"]
 mod harness;
@@ -9,16 +20,171 @@ mod harness;
 use harness::{bench, section};
 use llmzip::compress::{Compressor, LlmCompressor, LlmCompressorConfig};
 use llmzip::experiments::{self, DatasetCache};
-use llmzip::lm::config::{self, by_name};
+use llmzip::lm::config::{self, by_name, VOCAB};
+use llmzip::lm::executor::LmExecutor;
+use llmzip::lm::native::NativeExecutor;
+use llmzip::lm::reference::{ReferenceLane, ReferenceModel};
+use llmzip::lm::weights::Weights;
 use llmzip::lm::ExecutorKind;
 use llmzip::runtime::{ArtifactStore, PjrtForwardExecutor, PjrtGenerator, PjrtStepExecutor};
-use llmzip::lm::LmExecutor;
+use llmzip::tokenizer::vocab::BOS;
+use std::time::Instant;
 
-fn main() {
+/// Engine lanes for the native comparison (the PJRT forward batch width).
+const LANES: usize = 8;
+/// Positions per window (context resets per window, like the compressor).
+const WINDOW: usize = 64;
+/// Measurement budget per data point, seconds.
+const BUDGET_S: f64 = 1.0;
+
+struct NativeRow {
+    model: &'static str,
+    reference_tps: f64,
+    batched_1t_tps: f64,
+    batched_mt_tps: f64,
+    mt_threads: usize,
+    bulk_encode_tps: f64,
+}
+
+/// Run `step` (one full window = `LANES * WINDOW` tokens) repeatedly for
+/// ~`BUDGET_S` seconds after a warmup pass; returns tokens/sec.
+fn measure_tps<F: FnMut()>(mut step: F) -> f64 {
+    step(); // warmup
+    let t0 = Instant::now();
+    let mut iters = 0usize;
+    while t0.elapsed().as_secs_f64() < BUDGET_S {
+        step();
+        iters += 1;
+    }
+    (iters * LANES * WINDOW) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn native_engine_benches() -> Vec<NativeRow> {
+    let mt_threads =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(LANES);
+    section(&format!(
+        "native engine tokens/sec ({LANES} lanes, {WINDOW}-token windows, mt={mt_threads} threads)"
+    ));
+    println!(
+        "{:<10} {:>14} {:>14} {:>14} {:>14} {:>9} {:>9}",
+        "MODEL", "seed t/s", "batched-1t", "batched-mt", "bulk t/s", "x1t", "xmt"
+    );
+    let mut rows = Vec::new();
+    for name in ["nano", "small", "medium", "large"] {
+        let cfg = by_name(name).unwrap();
+        let weights = Weights::random(cfg, 17);
+        let toks: Vec<u32> = std::iter::once(BOS)
+            .chain((0..WINDOW - 1).map(|i| ((i * 31 + 7) % 256) as u32))
+            .collect();
+
+        // Seed baseline: string-keyed lookups, per-token allocations,
+        // serial lanes — exactly what the pre-refactor executor ran.
+        let reference = ReferenceModel::new(cfg, weights.clone());
+        let mut ref_lanes: Vec<ReferenceLane> =
+            (0..LANES).map(|_| ReferenceLane::new(cfg, WINDOW)).collect();
+        let reference_tps = measure_tps(|| {
+            for l in ref_lanes.iter_mut() {
+                l.reset();
+            }
+            for &t in &toks {
+                for lane in ref_lanes.iter_mut() {
+                    std::hint::black_box(reference.advance(lane, t).unwrap());
+                }
+            }
+        });
+
+        // Batched resolved-plan engine, single thread.
+        let mut row = vec![0u32; LANES];
+        let mut out = vec![0.0f32; LANES * VOCAB];
+        let mut ex1 = NativeExecutor::new(cfg, weights.clone(), LANES);
+        let batched_1t_tps = measure_tps(|| {
+            ex1.reset();
+            for &t in &toks {
+                row.fill(t);
+                ex1.step_into(&row, &mut out).unwrap();
+            }
+        });
+
+        // Batched engine, lanes partitioned across threads.
+        let mut exm = NativeExecutor::new(cfg, weights.clone(), LANES).with_threads(mt_threads);
+        let batched_mt_tps = measure_tps(|| {
+            exm.reset();
+            for &t in &toks {
+                row.fill(t);
+                exm.step_into(&row, &mut out).unwrap();
+            }
+        });
+
+        // Bulk-encode path (the compressor's encode-side entry point).
+        let lane_inputs: Vec<Vec<u32>> = (0..LANES).map(|_| toks.clone()).collect();
+        let mut exb = NativeExecutor::new(cfg, weights, LANES).with_threads(mt_threads);
+        let bulk_encode_tps = measure_tps(|| {
+            std::hint::black_box(exb.encode_logits(&lane_inputs, WINDOW).unwrap());
+        });
+
+        println!(
+            "{:<10} {:>14.0} {:>14.0} {:>14.0} {:>14.0} {:>8.2}x {:>8.2}x",
+            name,
+            reference_tps,
+            batched_1t_tps,
+            batched_mt_tps,
+            bulk_encode_tps,
+            batched_1t_tps / reference_tps,
+            batched_mt_tps / reference_tps,
+        );
+        rows.push(NativeRow {
+            model: name,
+            reference_tps,
+            batched_1t_tps,
+            batched_mt_tps,
+            mt_threads,
+            bulk_encode_tps,
+        });
+    }
+    rows
+}
+
+/// Hand-rolled JSON (no serde in this offline crate set).
+fn write_bench_json(rows: &[NativeRow]) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"runtime\",\n");
+    s.push_str("  \"schema\": 1,\n");
+    s.push_str(&format!("  \"lanes\": {LANES},\n"));
+    s.push_str(&format!("  \"window\": {WINDOW},\n"));
+    s.push_str("  \"unit\": \"tokens_per_sec\",\n");
+    s.push_str("  \"models\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"model\": \"{}\", \"reference_step_tps\": {:.1}, \
+             \"batched_step_tps_1t\": {:.1}, \"batched_step_tps_mt\": {:.1}, \
+             \"mt_threads\": {}, \"bulk_encode_tps\": {:.1}, \
+             \"speedup_1t\": {:.3}, \"speedup_mt\": {:.3}}}{}\n",
+            r.model,
+            r.reference_tps,
+            r.batched_1t_tps,
+            r.batched_mt_tps,
+            r.mt_threads,
+            r.bulk_encode_tps,
+            r.reference_tps.max(1e-9).recip() * r.batched_1t_tps,
+            r.reference_tps.max(1e-9).recip() * r.batched_mt_tps,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    let path =
+        std::env::var("LLMZIP_BENCH_JSON").unwrap_or_else(|_| "BENCH_runtime.json".to_string());
+    match std::fs::write(&path, &s) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\nWARN could not write {path}: {e}"),
+    }
+}
+
+fn pjrt_benches() {
     let store = match ArtifactStore::open(None) {
         Ok(s) => s,
         Err(e) => {
-            println!("SKIP runtime bench: {e:#}");
+            println!("\nSKIP PJRT runtime bench: {e:#}");
             return;
         }
     };
@@ -60,6 +226,7 @@ fn main() {
                 chunk_tokens: 256,
                 stream_bytes: 4096,
                 executor: exec,
+                ..Default::default()
             },
         )
         .expect("compressor");
@@ -100,4 +267,10 @@ fn main() {
             Err(e) => println!("SKIP {name}: {e:#}"),
         }
     }
+}
+
+fn main() {
+    let rows = native_engine_benches();
+    write_bench_json(&rows);
+    pjrt_benches();
 }

@@ -24,6 +24,8 @@ pub(crate) fn open_compressor(args: &Args) -> Result<LlmCompressor> {
         chunk_tokens: chunk,
         stream_bytes: args.usize_or("stream", 4096.max(chunk))?,
         executor: executor_from_str(&args.str_or("executor", "pjrt"))?,
+        lanes: args.usize_or("lanes", 8)?,
+        threads: args.usize_or("threads", super::default_threads())?,
     };
     LlmCompressor::open(&store, cfg)
 }

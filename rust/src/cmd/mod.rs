@@ -5,3 +5,8 @@ pub mod data;
 pub mod experiments;
 pub mod models;
 pub mod serve;
+
+/// Default native-engine worker threads: all the machine offers.
+pub(crate) fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}

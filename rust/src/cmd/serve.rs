@@ -22,6 +22,10 @@ pub fn serve(args: &[String]) -> Result<()> {
     let max_wait_ms = args.u64_or("max-wait-ms", 20)?;
     let executor = super::compress::executor_from_str(&args.str_or("executor", "pjrt"))?;
     let artifacts = args.get("artifacts").map(str::to_string);
+    // Engine width/parallelism knobs (native engine; PJRT engines take the
+    // batch their HLO was lowered with). Threads default to the machine.
+    let lanes = args.usize_or("lanes", 8)?;
+    let threads = args.usize_or("threads", super::default_threads())?;
 
     let server = Server::start(
         move || {
@@ -33,13 +37,17 @@ pub fn serve(args: &[String]) -> Result<()> {
                     chunk_tokens: chunk,
                     stream_bytes: 4096.max(chunk),
                     executor,
+                    lanes,
+                    threads,
                 },
             )
         },
         ServerConfig {
             chunk_tokens: chunk,
+            lanes,
+            threads,
             policy: BatchPolicy {
-                lanes: 8,
+                lanes,
                 max_wait: Duration::from_millis(max_wait_ms),
             },
         },
@@ -47,7 +55,7 @@ pub fn serve(args: &[String]) -> Result<()> {
     let server = Arc::new(server);
 
     let listener = TcpListener::bind(("127.0.0.1", port as u16))?;
-    println!("llmzip serving on 127.0.0.1:{port} (chunk={chunk})");
+    println!("llmzip serving on 127.0.0.1:{port} (chunk={chunk}, lanes={lanes}, threads={threads})");
     loop {
         let (stream, peer) = listener.accept()?;
         let srv = server.clone();

@@ -6,12 +6,30 @@
 //! Decompression replays the same model autoregressively, decoding each
 //! byte from the bitstream before feeding it back.
 //!
+//! ## Engine dispatch
+//!
+//! [`LlmCompressor`] holds a `Box<dyn LmExecutor>` — there is no per-engine
+//! dispatch in this module. The bulk encode path
+//! ([`LmExecutor::encode_logits`]) and the stepping decode path
+//! ([`LmExecutor::step_into`]) are both trait methods: PJRT-forward
+//! overrides the former with its one-call batched HLO, the native engine
+//! overrides the latter with its zero-allocation batched scratch-arena
+//! step, and everything else inherits the defaults. The native engine is
+//! additionally opened with `head_rows = CODED_BYTES`: only byte symbols
+//! 0..256 ever feed [`logits_to_cdf`], so special-token logit rows are
+//! skipped (bit-identical on the coded region).
+//!
+//! The steady-state decode loop performs zero heap allocations per token:
+//! one logits buffer is allocated per batch and refilled by `step_into`.
+//!
 //! Bit-exactness contract: encode and decode MUST see identical logits at
 //! every position. This holds because (a) both sides run the same engine
 //! kind (recorded in the container and enforced on decode), (b) the model
 //! is strictly causal so logits at position `t` never depend on later
 //! tokens, and (c) quantization is a deterministic function of the f32
-//! logits (same code on both sides).
+//! logits (same code on both sides). `tests/golden_logits.rs` further pins
+//! the native engine to the frozen seed implementation bit-for-bit, so
+//! containers produced before the batched-engine refactor still decode.
 
 use crate::compress::container::{ChunkRecord, Container};
 use crate::compress::Compressor;
@@ -78,76 +96,6 @@ pub fn logits_to_cdf(logits: &[f32]) -> [u32; 257] {
     cums
 }
 
-/// Execution engine selector.
-pub enum Engine {
-    Native(NativeExecutor),
-    Forward(PjrtForwardExecutor),
-    Step(PjrtStepExecutor),
-}
-
-impl Engine {
-    fn kind(&self) -> ExecutorKind {
-        match self {
-            Engine::Native(_) => ExecutorKind::Native,
-            Engine::Forward(_) => ExecutorKind::PjrtForward,
-            Engine::Step(_) => ExecutorKind::PjrtStep,
-        }
-    }
-
-    fn lanes(&self) -> usize {
-        match self {
-            Engine::Native(e) => e.lanes(),
-            Engine::Forward(e) => e.lanes(),
-            Engine::Step(e) => e.lanes(),
-        }
-    }
-
-    fn reset(&mut self) {
-        match self {
-            Engine::Native(e) => e.reset(),
-            Engine::Forward(e) => e.reset(),
-            Engine::Step(e) => e.reset(),
-        }
-    }
-
-    fn step(&mut self, toks: &[u32]) -> Result<Vec<f32>> {
-        match self {
-            Engine::Native(e) => e.step(toks),
-            Engine::Forward(e) => e.step(toks),
-            Engine::Step(e) => e.step(toks),
-        }
-    }
-
-    /// Bulk logits for encode: lane inputs (BOS + bytes), logits for the
-    /// first `n_positions` positions per lane. Falls back to stepping for
-    /// engines without a bulk path.
-    fn encode_logits(&mut self, lanes: &[Vec<u32>], n_positions: usize) -> Result<Vec<f32>> {
-        match self {
-            Engine::Forward(e) => e.encode_logits(lanes, n_positions),
-            _ => {
-                self.reset();
-                let n_lanes = self.lanes();
-                debug_assert!(lanes.len() <= n_lanes);
-                let mut out = vec![0.0f32; lanes.len() * n_positions * VOCAB];
-                for t in 0..n_positions {
-                    let toks: Vec<u32> = (0..n_lanes)
-                        .map(|l| {
-                            lanes.get(l).and_then(|lane| lane.get(t)).copied().unwrap_or(PAD)
-                        })
-                        .collect();
-                    let logits = self.step(&toks)?;
-                    for (l, _) in lanes.iter().enumerate() {
-                        let src = &logits[l * VOCAB..(l + 1) * VOCAB];
-                        let dst = (l * n_positions + t) * VOCAB;
-                        out[dst..dst + VOCAB].copy_from_slice(src);
-                    }
-                }
-                Ok(out)
-            }
-        }
-    }
-}
-
 /// Configuration for [`LlmCompressor`].
 #[derive(Clone, Debug)]
 pub struct LlmCompressorConfig {
@@ -161,6 +109,12 @@ pub struct LlmCompressorConfig {
     /// per stream); smaller streams give finer-grained parallel decode.
     pub stream_bytes: usize,
     pub executor: ExecutorKind,
+    /// Native engine lane count (batch width). PJRT engines use the batch
+    /// their HLO artifact was lowered with and ignore this.
+    pub lanes: usize,
+    /// Native engine worker threads; lanes are partitioned across threads
+    /// per step (bit-exact for any value). PJRT engines ignore this.
+    pub threads: usize,
 }
 
 impl Default for LlmCompressorConfig {
@@ -170,6 +124,8 @@ impl Default for LlmCompressorConfig {
             chunk_tokens: config::MAX_CONTEXT,
             stream_bytes: 4 * 1024,
             executor: ExecutorKind::PjrtForward,
+            lanes: 8,
+            threads: 1,
         }
     }
 }
@@ -178,7 +134,7 @@ impl Default for LlmCompressorConfig {
 pub struct LlmCompressor {
     cfg: LlmCompressorConfig,
     model_cfg: &'static LmConfig,
-    engine: RefCell<Engine>,
+    engine: RefCell<Box<dyn LmExecutor>>,
 }
 
 impl LlmCompressor {
@@ -191,16 +147,18 @@ impl LlmCompressor {
         if cfg.stream_bytes < cfg.chunk_tokens {
             anyhow::bail!("stream_bytes must be >= chunk_tokens");
         }
-        let engine = match cfg.executor {
+        let engine: Box<dyn LmExecutor> = match cfg.executor {
             ExecutorKind::PjrtForward => {
-                Engine::Forward(PjrtForwardExecutor::from_store(store, model_cfg)?)
+                Box::new(PjrtForwardExecutor::from_store(store, model_cfg)?)
             }
-            ExecutorKind::PjrtStep => {
-                Engine::Step(PjrtStepExecutor::from_store(store, model_cfg)?)
-            }
+            ExecutorKind::PjrtStep => Box::new(PjrtStepExecutor::from_store(store, model_cfg)?),
             ExecutorKind::Native => {
                 let weights = store.weights(model_cfg)?;
-                Engine::Native(NativeExecutor::new(model_cfg, weights, 4))
+                Box::new(
+                    NativeExecutor::new(model_cfg, weights, cfg.lanes.max(1))
+                        .with_threads(cfg.threads.max(1))
+                        .with_head_rows(config::CODED_BYTES),
+                )
             }
         };
         Ok(LlmCompressor { cfg, model_cfg, engine: RefCell::new(engine) })
@@ -223,11 +181,14 @@ impl LlmCompressor {
                 chunk_tokens,
                 stream_bytes: 4 * chunk_tokens,
                 executor: ExecutorKind::Native,
+                lanes,
+                threads: 1,
             },
             model_cfg,
-            engine: RefCell::new(Engine::Native(NativeExecutor::new(
-                model_cfg, weights, lanes,
-            ))),
+            engine: RefCell::new(Box::new(
+                NativeExecutor::new(model_cfg, weights, lanes)
+                    .with_head_rows(config::CODED_BYTES),
+            )),
         })
     }
 
@@ -250,12 +211,12 @@ impl LlmCompressor {
 
     /// Engine lane count — the coordinator's maximum batch width.
     pub fn lanes(&self) -> usize {
-        self.engine.borrow_mut().lanes()
+        self.engine.borrow().lanes()
     }
 
     /// Executor kind tag recorded in containers produced by this compressor.
     pub fn executor_kind(&self) -> ExecutorKind {
-        self.engine.borrow_mut().kind()
+        self.engine.borrow().kind()
     }
 
     /// Model+executor tag string stored in containers.
@@ -271,7 +232,7 @@ impl LlmCompressor {
         if chunks.len() > engine.lanes() {
             anyhow::bail!("{} chunks > {} lanes", chunks.len(), engine.lanes());
         }
-        self.compress_batch(&mut engine, chunks)
+        self.compress_batch(&mut **engine, chunks)
     }
 
     /// Decompress one batch of chunks (mirror of [`Self::compress_chunks`]).
@@ -288,7 +249,7 @@ impl LlmCompressor {
         if chunk_tokens == 0 || chunk_tokens > config::MAX_CONTEXT {
             anyhow::bail!("container chunk_tokens {chunk_tokens} out of range");
         }
-        self.decompress_batch(&mut engine, chunk_tokens, records, payloads)
+        self.decompress_batch(&mut **engine, chunk_tokens, records, payloads)
     }
 
     pub fn model_config(&self) -> &'static LmConfig {
@@ -299,7 +260,11 @@ impl LlmCompressor {
     /// stream is split into context windows of `chunk_tokens` bytes (the
     /// model context resets per window) but all windows of a stream share
     /// its range coder, amortizing the flush overhead.
-    fn compress_batch(&self, engine: &mut Engine, streams: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+    fn compress_batch(
+        &self,
+        engine: &mut dyn LmExecutor,
+        streams: &[&[u8]],
+    ) -> Result<Vec<Vec<u8>>> {
         let ct = self.cfg.chunk_tokens;
         let max_len = streams.iter().map(|s| s.len()).max().unwrap_or(0);
         let n_windows = max_len.div_ceil(ct);
@@ -347,9 +312,11 @@ impl LlmCompressor {
 
     /// Decompress one batch of streams (lockstep lanes, context reset every
     /// `chunk_tokens` bytes — the mirror of [`Self::compress_batch`]).
+    /// Steady state allocates nothing per token: the logits buffer is
+    /// reused across every position via [`LmExecutor::step_into`].
     fn decompress_batch(
         &self,
-        engine: &mut Engine,
+        engine: &mut dyn LmExecutor,
         ct: usize,
         records: &[ChunkRecord],
         payloads: &[&[u8]],
@@ -362,6 +329,8 @@ impl LlmCompressor {
             records.iter().map(|r| Vec::with_capacity(r.n_tokens as usize)).collect();
         let n_max = records.iter().map(|r| r.n_tokens as usize).max().unwrap_or(0);
         let n_windows = n_max.div_ceil(ct);
+        let mut logits = vec![0.0f32; n_lanes * VOCAB];
+        let mut next_feed: Vec<u32> = vec![BOS; n_lanes];
         for w in 0..n_windows {
             engine.reset();
             let w_lo = w * ct;
@@ -369,9 +338,9 @@ impl LlmCompressor {
             let win_max = n_max.min(w_hi) - w_lo;
             // Feed BOS at the window start, then each decoded byte; lanes
             // whose stream is exhausted feed PAD.
-            let mut next_feed: Vec<u32> = vec![BOS; n_lanes];
+            next_feed.fill(BOS);
             for t in 0..win_max {
-                let logits = engine.step(&next_feed)?;
+                engine.step_into(&next_feed, &mut logits)?;
                 for (l, rec) in records.iter().enumerate() {
                     if w_lo + t >= rec.n_tokens as usize {
                         next_feed[l] = PAD;
@@ -405,7 +374,7 @@ impl Compressor for LlmCompressor {
         let mut payload = Vec::new();
         let lanes = engine.lanes();
         for group in chunks.chunks(lanes) {
-            let compressed = self.compress_batch(&mut engine, group)?;
+            let compressed = self.compress_batch(&mut **engine, group)?;
             for (chunk, comp) in group.iter().zip(compressed) {
                 records.push(ChunkRecord {
                     comp_len: comp.len() as u32,
@@ -457,7 +426,7 @@ impl Compressor for LlmCompressor {
         for group in all.chunks(lanes) {
             let records: Vec<ChunkRecord> = group.iter().map(|(r, _)| *r).collect();
             let payloads: Vec<&[u8]> = group.iter().map(|(_, p)| *p).collect();
-            let decoded = self.decompress_batch(&mut engine, ct, &records, &payloads)?;
+            let decoded = self.decompress_batch(&mut **engine, ct, &records, &payloads)?;
             for d in decoded {
                 out.extend(d);
             }
@@ -524,6 +493,43 @@ mod tests {
         let data = crate::textgen::quick_sample(75, 4);
         let z = c.compress(&data).unwrap();
         assert_eq!(c.decompress(&z).unwrap(), data);
+    }
+
+    /// Compressor with an explicitly threaded native engine (mirrors the
+    /// `open` construction path, which tests cannot reach without PJRT
+    /// artifacts).
+    fn threaded_compressor(chunk: usize, lanes: usize, threads: usize) -> LlmCompressor {
+        let cfg = by_name("nano").unwrap();
+        LlmCompressor {
+            cfg: LlmCompressorConfig {
+                model: cfg.name.into(),
+                chunk_tokens: chunk,
+                stream_bytes: 4 * chunk,
+                executor: ExecutorKind::Native,
+                lanes,
+                threads,
+            },
+            model_cfg: cfg,
+            engine: RefCell::new(Box::new(
+                NativeExecutor::new(cfg, Weights::random(cfg, 7), lanes)
+                    .with_threads(threads)
+                    .with_head_rows(config::CODED_BYTES),
+            )),
+        }
+    }
+
+    #[test]
+    fn threaded_native_engine_produces_identical_containers() {
+        // threads is a pure execution knob: containers are bit-identical
+        // and cross-decodable for any thread count.
+        let data = crate::textgen::quick_sample(300, 6);
+        let single = native_compressor(32);
+        let threaded = threaded_compressor(32, 2, 2);
+        let z1 = single.compress(&data).unwrap();
+        let z2 = threaded.compress(&data).unwrap();
+        assert_eq!(z1, z2, "containers must not depend on the thread count");
+        assert_eq!(threaded.decompress(&z1).unwrap(), data);
+        assert_eq!(single.decompress(&z2).unwrap(), data);
     }
 
     #[test]

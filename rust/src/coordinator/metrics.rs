@@ -12,9 +12,13 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub bytes_in: AtomicU64,
     pub bytes_out: AtomicU64,
+    /// Total tokens pushed through the engine (compress + decompress).
+    pub tokens: AtomicU64,
     pub errors: AtomicU64,
     latency_ms: Mutex<Summary>,
     occupancy: Mutex<Summary>,
+    /// Per-batch engine throughput samples (tokens/second).
+    tokens_per_sec: Mutex<Summary>,
 }
 
 impl Metrics {
@@ -29,10 +33,20 @@ impl Metrics {
         self.latency_ms.lock().unwrap().add(latency.as_secs_f64() * 1e3);
     }
 
+    /// Per-batch fill: how many of the engine's lanes this batch used.
     pub fn record_batch(&self, items: usize, lanes: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.chunks.fetch_add(items as u64, Ordering::Relaxed);
         self.occupancy.lock().unwrap().add(items as f64 / lanes as f64);
+    }
+
+    /// Engine-pass throughput: `tokens` processed in `elapsed` wall time.
+    pub fn record_engine(&self, tokens: usize, elapsed: Duration) {
+        self.tokens.fetch_add(tokens as u64, Ordering::Relaxed);
+        let secs = elapsed.as_secs_f64();
+        if tokens > 0 && secs > 0.0 {
+            self.tokens_per_sec.lock().unwrap().add(tokens as f64 / secs);
+        }
     }
 
     pub fn record_error(&self) {
@@ -43,18 +57,24 @@ impl Metrics {
     pub fn report(&self) -> String {
         let lat = self.latency_ms.lock().unwrap();
         let occ = self.occupancy.lock().unwrap();
+        let tps = self.tokens_per_sec.lock().unwrap();
         format!(
-            "requests={} chunks={} batches={} bytes_in={} bytes_out={} errors={} \
-             latency_ms[mean={:.2} max={:.2}] batch_occupancy[mean={:.2}]",
+            "requests={} chunks={} batches={} bytes_in={} bytes_out={} tokens={} errors={} \
+             latency_ms[mean={:.2} max={:.2}] batch_fill[mean={:.2}] \
+             engine_tok_per_s[mean={:.0} max={:.0}]",
             self.requests.load(Ordering::Relaxed),
             self.chunks.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.bytes_in.load(Ordering::Relaxed),
             self.bytes_out.load(Ordering::Relaxed),
+            self.tokens.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
             lat.mean(),
             lat.max(),
             occ.mean(),
+            tps.mean(),
+            // max() is NEG_INFINITY on an empty summary; mean() is 0.
+            if tps.count() == 0 { 0.0 } else { tps.max() },
         )
     }
 
@@ -64,6 +84,11 @@ impl Metrics {
 
     pub fn mean_latency_ms(&self) -> f64 {
         self.latency_ms.lock().unwrap().mean()
+    }
+
+    /// Mean per-batch engine throughput (tokens/second; 0 before any batch).
+    pub fn mean_tokens_per_sec(&self) -> f64 {
+        self.tokens_per_sec.lock().unwrap().mean()
     }
 }
 
@@ -84,5 +109,20 @@ mod tests {
         assert!((m.mean_latency_ms() - 10.0).abs() < 1e-9);
         let r = m.report();
         assert!(r.contains("requests=2"));
+    }
+
+    #[test]
+    fn engine_throughput_tracks_tokens() {
+        let m = Metrics::new();
+        assert_eq!(m.mean_tokens_per_sec(), 0.0);
+        m.record_engine(1000, Duration::from_millis(500));
+        m.record_engine(1000, Duration::from_millis(250));
+        assert_eq!(m.tokens.load(Ordering::Relaxed), 2000);
+        // Mean of 2000 t/s and 4000 t/s.
+        assert!((m.mean_tokens_per_sec() - 3000.0).abs() < 1.0);
+        // Zero-token or zero-duration passes don't poison the summary.
+        m.record_engine(0, Duration::from_millis(10));
+        assert!((m.mean_tokens_per_sec() - 3000.0).abs() < 1.0);
+        assert!(m.report().contains("tokens=2000"));
     }
 }

@@ -20,12 +20,21 @@ use std::time::{Duration, Instant};
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub chunk_tokens: usize,
+    /// Batch-width cap: limit engine batches to this many lanes
+    /// (`0` = use the engine's full lane count). The effective width is
+    /// always `min(lanes, engine lanes)`.
+    pub lanes: usize,
+    /// Native-engine worker threads. The worker cannot rebuild the engine
+    /// (the factory owns construction), so this is the value `cmd/serve`
+    /// wires into `LlmCompressorConfig::threads`; it is recorded here so
+    /// the whole lane/thread configuration travels through one struct.
+    pub threads: usize,
     pub policy: BatchPolicy,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { chunk_tokens: 256, policy: BatchPolicy::default() }
+        ServerConfig { chunk_tokens: 256, lanes: 0, threads: 0, policy: BatchPolicy::default() }
     }
 }
 
@@ -138,7 +147,8 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
 ) {
-    let lanes = compressor.lanes();
+    let engine_lanes = compressor.lanes();
+    let lanes = if config.lanes > 0 { config.lanes.min(engine_lanes) } else { engine_lanes };
     // Requests are split at the compressor's stream granularity; the
     // model-context chunk size is recorded in each container.
     let split = Split {
@@ -282,6 +292,15 @@ fn run_batch(
     metrics: &Metrics,
     config: &ServerConfig,
 ) {
+    // Engine throughput: every byte is one model token, on both passes.
+    let batch_tokens: usize = match kind {
+        WorkKind::Compress => items.iter().map(|i| i.data.len()).sum(),
+        WorkKind::Decompress => items
+            .iter()
+            .map(|i| i.record.map(|r| r.n_tokens as usize).unwrap_or(0))
+            .sum(),
+    };
+    let engine_t0 = Instant::now();
     let result = match kind {
         WorkKind::Compress => {
             let chunks: Vec<&[u8]> = items.iter().map(|i| i.data.as_slice()).collect();
@@ -296,6 +315,9 @@ fn run_batch(
             compressor.decompress_chunks(compressor.chunk_tokens(), &records, &payloads)
         }
     };
+    if result.is_ok() {
+        metrics.record_engine(batch_tokens, engine_t0.elapsed());
+    }
     match result {
         Err(e) => {
             // Fail every request that had a chunk in this batch.
@@ -376,6 +398,7 @@ mod tests {
             ServerConfig {
                 chunk_tokens: chunk,
                 policy: BatchPolicy { lanes, max_wait: Duration::from_millis(5) },
+                ..Default::default()
             },
         )
         .unwrap()
@@ -389,6 +412,34 @@ mod tests {
         let back = server.decompress(&z).unwrap();
         assert_eq!(back, data);
         assert!(server.metrics.requests.load(Ordering::Relaxed) >= 2);
+        // Engine throughput is recorded per batch: every input byte is one
+        // token on the compress pass and again on the decompress pass.
+        assert_eq!(server.metrics.tokens.load(Ordering::Relaxed), 2 * data.len() as u64);
+        assert!(server.metrics.mean_tokens_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn lane_cap_limits_batch_width() {
+        // Engine has 4 lanes but the server is configured to fill at most 2.
+        let server = Server::start(
+            move || {
+                let cfg = by_name("nano").unwrap();
+                LlmCompressor::from_weights(cfg, Weights::random(cfg, 22), 16, 4)
+            },
+            ServerConfig {
+                chunk_tokens: 16,
+                lanes: 2,
+                policy: BatchPolicy { lanes: 8, max_wait: Duration::from_millis(2) },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // 6 chunks (stream granularity 64 bytes) -> at least 3 batches.
+        let data = crate::textgen::quick_sample(6 * 64, 10);
+        let z = server.compress(&data).unwrap();
+        assert_eq!(server.decompress(&z).unwrap(), data);
+        let batches = server.metrics.batches.load(Ordering::Relaxed);
+        assert!(batches >= 3, "cap 2 lanes over 6 chunks needs >= 3 batches, got {batches}");
     }
 
     #[test]

@@ -29,6 +29,7 @@ pub fn open_llm(cache: &DatasetCache, model: &str, chunk: usize) -> Result<LlmCo
             chunk_tokens: chunk,
             stream_bytes: 4096.max(chunk),
             executor: ExecutorKind::PjrtForward,
+            ..Default::default()
         },
     )
 }

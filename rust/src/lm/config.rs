@@ -6,6 +6,11 @@ use crate::Result;
 
 /// Vocabulary size (256 bytes + specials; see `tokenizer::vocab`).
 pub const VOCAB: usize = 272;
+/// Rows of the weight-tied output head that are ever range-coded: only the
+/// 256 raw byte symbols feed `logits_to_cdf`. The compressor's native
+/// engine restricts the head matvec to these rows (specials are fed as
+/// inputs but never predicted), which is bit-identical on the coded region.
+pub const CODED_BYTES: usize = 256;
 /// Maximum context length = maximum chunk size (paper §5.4 sweeps up to 256).
 pub const MAX_CONTEXT: usize = 256;
 

@@ -2,18 +2,25 @@
 //!
 //! An executor owns `lanes()` independent autoregressive streams. Each
 //! [`LmExecutor::step`] feeds one token per lane and returns each lane's
-//! next-token logits. Both compression and decompression drive the SAME
-//! executor interface, which guarantees the probability streams match
-//! bit-for-bit (the container records the executor kind to prevent
-//! cross-executor decode).
+//! next-token logits ([`LmExecutor::step_into`] is the allocation-free
+//! variant the hot loops use). [`LmExecutor::encode_logits`] is the bulk
+//! encode path: lane inputs in, logits for every position out — engines
+//! with a one-shot batched forward (PJRT forward) override it; everyone
+//! else inherits the default stepping fallback, so the compressor contains
+//! no per-engine dispatch at all (it holds a `Box<dyn LmExecutor>`).
+//!
+//! Both compression and decompression drive the SAME executor interface,
+//! which guarantees the probability streams match bit-for-bit (the
+//! container records the executor kind to prevent cross-executor decode).
 //!
 //! Implementations:
-//! * [`crate::lm::NativeExecutor`] — pure rust, per-token.
+//! * [`crate::lm::NativeExecutor`] — pure rust, batched + multithreaded.
 //! * [`crate::runtime::PjrtStepExecutor`] — the lowered `decode_step` HLO.
 //! * [`crate::runtime::PjrtForwardExecutor`] — batched `forward` HLO with
 //!   prefix replay (fast compression path; see `compress/llm.rs`).
 
-use crate::lm::config::LmConfig;
+use crate::lm::config::{LmConfig, VOCAB};
+use crate::tokenizer::vocab::PAD;
 use crate::Result;
 
 /// Which engine produced/consumes a probability stream.
@@ -62,11 +69,56 @@ pub trait LmExecutor {
 
     /// Feed one token per lane; returns logits `[lanes * VOCAB]` row-major.
     fn step(&mut self, tokens: &[u32]) -> Result<Vec<f32>>;
+
+    /// Like [`Self::step`] but writes into a caller-owned buffer of
+    /// `lanes * VOCAB`. Engines with preallocated scratch (the native one)
+    /// override this to make steady-state stepping allocation-free; the
+    /// default delegates to [`Self::step`].
+    fn step_into(&mut self, tokens: &[u32], out: &mut [f32]) -> Result<()> {
+        let logits = self.step(tokens)?;
+        if out.len() != logits.len() {
+            anyhow::bail!("step_into expects out buffer of {}, got {}", logits.len(), out.len());
+        }
+        out.copy_from_slice(&logits);
+        Ok(())
+    }
+
+    /// Bulk logits for encode: lane inputs (BOS + chunk bytes), logits for
+    /// the first `n_positions` positions per lane, `[lanes_in * n_positions
+    /// * VOCAB]` row-major. The default resets the executor and steps
+    /// position by position (padding absent lanes/positions with PAD);
+    /// engines with a one-shot batched forward override it.
+    fn encode_logits(&mut self, lanes: &[Vec<u32>], n_positions: usize) -> Result<Vec<f32>> {
+        self.reset();
+        let n_lanes = self.lanes();
+        if lanes.len() > n_lanes {
+            anyhow::bail!("{} chunk lanes > {} engine lanes", lanes.len(), n_lanes);
+        }
+        let mut out = vec![0.0f32; lanes.len() * n_positions * VOCAB];
+        let mut step_logits = vec![0.0f32; n_lanes * VOCAB];
+        let mut toks = vec![PAD; n_lanes];
+        for t in 0..n_positions {
+            for (l, tok) in toks.iter_mut().enumerate() {
+                *tok = lanes.get(l).and_then(|lane| lane.get(t)).copied().unwrap_or(PAD);
+            }
+            self.step_into(&toks, &mut step_logits)?;
+            for l in 0..lanes.len() {
+                let src = &step_logits[l * VOCAB..(l + 1) * VOCAB];
+                let dst = (l * n_positions + t) * VOCAB;
+                out[dst..dst + VOCAB].copy_from_slice(src);
+            }
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::lm::config::by_name;
+    use crate::lm::native::NativeExecutor;
+    use crate::lm::weights::Weights;
+    use crate::tokenizer::vocab::BOS;
 
     #[test]
     fn executor_flags_roundtrip() {
@@ -80,5 +132,35 @@ mod tests {
     fn compatibility_is_identity() {
         assert!(ExecutorKind::Native.compatible(ExecutorKind::Native));
         assert!(!ExecutorKind::PjrtStep.compatible(ExecutorKind::PjrtForward));
+    }
+
+    #[test]
+    fn default_encode_logits_matches_manual_stepping() {
+        let cfg = by_name("nano").unwrap();
+        let w = Weights::random(cfg, 20);
+        let mut ex = NativeExecutor::new(cfg, w.clone(), 2);
+        let lanes = vec![vec![BOS, 72, 101], vec![BOS, 104]];
+        let bulk = ex.encode_logits(&lanes, 3).unwrap();
+        assert_eq!(bulk.len(), 2 * 3 * VOCAB);
+
+        // Manual replay with the same padding convention.
+        let mut ex2 = NativeExecutor::new(cfg, w, 2);
+        for t in 0..3usize {
+            let toks: Vec<u32> = (0..2)
+                .map(|l| lanes[l].get(t).copied().unwrap_or(PAD))
+                .collect();
+            let logits = ex2.step(&toks).unwrap();
+            for l in 0..2 {
+                assert_eq!(
+                    logits[l * VOCAB..(l + 1) * VOCAB],
+                    bulk[(l * 3 + t) * VOCAB..(l * 3 + t + 1) * VOCAB],
+                    "lane {l} pos {t}"
+                );
+            }
+        }
+
+        // Over-wide chunk batches are rejected.
+        let three = vec![vec![BOS], vec![BOS], vec![BOS]];
+        assert!(ex.encode_logits(&three, 1).is_err());
     }
 }

@@ -1,21 +1,36 @@
 //! The language-model layer on the rust side.
 //!
 //! * [`config`] — the model registry (must mirror `python/compile/configs.py`).
-//! * [`weights`] — typed parameter bundle loaded from `.lmz` files.
+//! * [`weights`] — typed parameter bundle loaded from `.lmz` files, plus
+//!   the [`weights::ResolvedPlan`] that resolves every string-keyed tensor
+//!   to a direct index once at model load.
 //! * [`native`] — a from-scratch rust implementation of the exact same
-//!   transformer (matmuls and all). It serves three purposes: a
-//!   cross-check on the PJRT numerics, a fallback executor that works
-//!   without artifacts, and the reference for unit tests.
+//!   transformer. The engine is batched and allocation-free in steady
+//!   state: [`native::NativeModel::advance_batch`] pushes all lanes
+//!   through each layer together using a preallocated [`native::Scratch`]
+//!   arena, and [`native::NativeExecutor`] can partition lanes across OS
+//!   threads (bit-exact for any lane batching or thread count). It serves
+//!   three purposes: a cross-check on the PJRT numerics, a fallback
+//!   executor that works without artifacts, and the reference for unit
+//!   tests.
+//! * [`reference`] — the **frozen seed implementation** (string-keyed
+//!   lookups, per-token allocations). Never optimized; golden tests assert
+//!   the modern engine reproduces it bit for bit, and the runtime bench
+//!   reports the speedup against it.
 //! * [`executor`] — the [`executor::LmExecutor`] trait the compressor and
-//!   coordinator program against, with the native implementation here and
-//!   the PJRT implementation in [`crate::runtime`].
+//!   coordinator program against: per-lane stepping ([`executor::LmExecutor::step`] /
+//!   allocation-free [`executor::LmExecutor::step_into`]) plus the bulk
+//!   [`executor::LmExecutor::encode_logits`] encode path with a default
+//!   stepping fallback. The native implementation lives here; the PJRT
+//!   implementations in [`crate::runtime`].
 
 pub mod config;
 pub mod executor;
 pub mod native;
+pub mod reference;
 pub mod weights;
 
-pub use config::{LmConfig, MAX_CONTEXT, VOCAB};
+pub use config::{LmConfig, CODED_BYTES, MAX_CONTEXT, VOCAB};
 pub use executor::{ExecutorKind, LmExecutor};
-pub use native::NativeExecutor;
-pub use weights::Weights;
+pub use native::{NativeExecutor, Scratch};
+pub use weights::{ResolvedPlan, Weights};

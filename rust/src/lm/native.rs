@@ -3,13 +3,31 @@
 //! machine.
 //!
 //! Crucially, *compression and decompression share this exact code path*
-//! (one `advance` per token), so the probability streams on both sides are
-//! bit-identical by construction. Numerics agree with the PJRT/XLA
-//! executor to ~1e-4 (different reduction orders), which is why containers
-//! record which executor produced them.
+//! (one batched step per token position), so the probability streams on
+//! both sides are bit-identical by construction. Numerics agree with the
+//! PJRT/XLA executor to ~1e-4 (different reduction orders), which is why
+//! containers record which executor produced them.
+//!
+//! ## Execution architecture (resolved-plan refactor)
+//!
+//! * **[`crate::lm::weights::ResolvedPlan`]** — every weight tensor is
+//!   resolved from its string key to a direct index once at model load;
+//!   the hot path never formats, hashes or looks up a name.
+//! * **[`Scratch`]** — a preallocated arena holding every intermediate
+//!   buffer (residual stream, norms, q/k/v, attention scores, FF, output
+//!   head). Steady-state stepping performs **zero heap allocations**.
+//! * **[`NativeModel::advance_batch`]** — processes all lanes through each
+//!   layer together, so every weight row is streamed from memory once per
+//!   step instead of once per lane. Per-lane accumulation order is
+//!   unchanged, so logits are bit-identical to the single-lane path (and
+//!   to the frozen seed implementation in [`crate::lm::reference`], which
+//!   `tests/golden_logits.rs` asserts).
+//! * **[`NativeExecutor`]** — owns the lane pool plus one `Scratch` per
+//!   worker thread; `threads > 1` partitions lanes across
+//!   `std::thread::scope` threads (bit-exact: lanes are independent).
 
 use crate::lm::config::{LmConfig, MAX_CONTEXT, VOCAB};
-use crate::lm::weights::Weights;
+use crate::lm::weights::{ResolvedPlan, Weights};
 use crate::Result;
 
 /// GELU (tanh approximation — matches `jax.nn.gelu(approximate=True)`).
@@ -19,32 +37,42 @@ fn gelu(x: f32) -> f32 {
     0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
 }
 
-/// y += x @ w, with x: [d_in], w: [d_in, d_out] row-major.
+/// Batched matvec-accumulate: `ys[l] += xs[l] @ w` for every lane `l`.
+/// `xs: [n, d_in]`, `w: [d_in, d_out]` row-major, `ys: [n, d_out]`.
+///
+/// Each row of `w` is read once per step and applied to all lanes (the
+/// cache-locality win of batching); per output element the accumulation
+/// runs over `i` in ascending order, exactly like the seed per-lane
+/// matvec, so results are bit-identical.
 #[inline]
-fn matvec_acc(x: &[f32], w: &[f32], y: &mut [f32]) {
-    let d_out = y.len();
-    debug_assert_eq!(x.len() * d_out, w.len());
-    for (i, &xi) in x.iter().enumerate() {
-        if xi == 0.0 {
-            continue;
-        }
+fn matmul_acc(n: usize, d_in: usize, d_out: usize, xs: &[f32], w: &[f32], ys: &mut [f32]) {
+    debug_assert_eq!(xs.len(), n * d_in);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(ys.len(), n * d_out);
+    for i in 0..d_in {
         let row = &w[i * d_out..(i + 1) * d_out];
-        for j in 0..d_out {
-            y[j] += xi * row[j];
+        for l in 0..n {
+            let xi = xs[l * d_in + i];
+            if xi == 0.0 {
+                continue;
+            }
+            let y = &mut ys[l * d_out..(l + 1) * d_out];
+            for (yj, &rj) in y.iter_mut().zip(row) {
+                *yj += xi * rj;
+            }
         }
     }
 }
 
-fn matvec(x: &[f32], w: &[f32], d_out: usize) -> Vec<f32> {
-    let mut y = vec![0.0f32; d_out];
-    matvec_acc(x, w, &mut y);
-    y
-}
-
-fn rmsnorm(x: &[f32], gain: &[f32]) -> Vec<f32> {
+/// RMS-norm `x` with `gain` into `out` (no allocation; same reduction
+/// order as the seed implementation).
+#[inline]
+fn rmsnorm_into(x: &[f32], gain: &[f32], out: &mut [f32]) {
     let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
     let inv = 1.0 / (ms + 1e-6).sqrt();
-    x.iter().zip(gain).map(|(v, g)| v * inv * g).collect()
+    for ((o, &v), &g) in out.iter_mut().zip(x).zip(gain) {
+        *o = v * inv * g;
+    }
 }
 
 /// Per-lane incremental state: the KV cache and the current position.
@@ -84,115 +112,290 @@ impl LaneState {
     }
 }
 
-/// The model: config + weights, plus precomputed ALiBi slopes.
+/// Preallocated working memory for [`NativeModel::advance_batch`], sized
+/// once for up to `cap` lanes. Holding one of these per executor (or per
+/// worker thread) is what makes steady-state stepping allocation-free.
+pub struct Scratch {
+    cap: usize,
+    /// [cap * d_model] residual stream.
+    x: Vec<f32>,
+    /// [cap * d_model] rmsnorm output (attn-norm, mlp-norm, final-norm).
+    hn: Vec<f32>,
+    /// [cap * d_model] each.
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// [cap * d_model] attention output before the wo projection.
+    attn: Vec<f32>,
+    /// [cap * MAX_CONTEXT] per-lane attention scores.
+    scores: Vec<f32>,
+    /// [cap * d_ff] feed-forward hidden.
+    ff: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new(cfg: &LmConfig, cap: usize) -> Scratch {
+        let d = cfg.d_model;
+        Scratch {
+            cap,
+            x: vec![0.0; cap * d],
+            hn: vec![0.0; cap * d],
+            q: vec![0.0; cap * d],
+            k: vec![0.0; cap * d],
+            v: vec![0.0; cap * d],
+            attn: vec![0.0; cap * d],
+            scores: vec![0.0; cap * MAX_CONTEXT],
+            ff: vec![0.0; cap * cfg.d_ff()],
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+/// The model: config + weights + resolved plan, plus precomputed ALiBi
+/// slopes.
 pub struct NativeModel {
     pub cfg: &'static LmConfig,
     weights: Weights,
+    plan: ResolvedPlan,
     slopes: Vec<f32>,
 }
 
 impl NativeModel {
     pub fn new(cfg: &'static LmConfig, weights: Weights) -> Self {
+        let plan = ResolvedPlan::build(&weights, cfg)
+            .expect("weights were validated against param_spec at load");
         let slopes = (0..cfg.n_heads).map(|h| cfg.alibi_slope(h)).collect();
-        NativeModel { cfg, weights, slopes }
+        NativeModel { cfg, weights, plan, slopes }
     }
 
-    /// Feed one token; returns the next-token logits `[VOCAB]` and advances
-    /// the lane state. This single routine backs compression, decompression
-    /// and generation — bit-exact across all of them by construction.
-    pub fn advance(&self, st: &mut LaneState, token: u32) -> Result<Vec<f32>> {
-        if st.pos >= st.max_len {
-            anyhow::bail!("lane overflow: pos {} >= max {}", st.pos, st.max_len);
+    /// Feed one token per lane; writes each lane's next-token logits into
+    /// `out` (`[lanes.len() * VOCAB]` row-major) and advances every lane.
+    ///
+    /// `head_rows` restricts the weight-tied output head to the first
+    /// `head_rows` logit rows (the rest are zeroed): the compressor passes
+    /// [`crate::lm::config::CODED_BYTES`] because special tokens are never
+    /// range-coded; everything else passes [`VOCAB`]. Values in the
+    /// computed rows are bit-identical either way.
+    ///
+    /// This single routine backs compression, decompression and generation
+    /// — bit-exact across all of them (and across lane batchings and
+    /// thread counts) by construction.
+    pub fn advance_batch(
+        &self,
+        lanes: &mut [LaneState],
+        tokens: &[u32],
+        scratch: &mut Scratch,
+        out: &mut [f32],
+        head_rows: usize,
+    ) -> Result<()> {
+        let n = lanes.len();
+        if tokens.len() != n {
+            anyhow::bail!("advance_batch: {} lanes but {} tokens", n, tokens.len());
+        }
+        if n > scratch.cap {
+            anyhow::bail!("advance_batch: {} lanes exceed scratch capacity {}", n, scratch.cap);
+        }
+        if out.len() != n * VOCAB {
+            anyhow::bail!("advance_batch: out buffer {} != {}", out.len(), n * VOCAB);
+        }
+        if head_rows == 0 || head_rows > VOCAB {
+            anyhow::bail!("advance_batch: head_rows {head_rows} out of range 1..={VOCAB}");
         }
         let d = self.cfg.d_model;
         let h = self.cfg.n_heads;
         let dh = self.cfg.d_head();
-        let pos = st.pos;
-        let embed = &self.weights.get("embed").data;
-        let mut x: Vec<f32> = embed[token as usize * d..(token as usize + 1) * d].to_vec();
+        let ffd = self.cfg.d_ff();
+        let embed = self.weights.data(self.plan.embed);
 
-        for layer in 0..self.cfg.n_layers {
-            let p = format!("layer{layer:02}.");
-            let hn = rmsnorm(&x, &self.weights.get(&format!("{p}attn_norm")).data);
-            let q = matvec(&hn, &self.weights.get(&format!("{p}wq")).data, d);
-            let k = matvec(&hn, &self.weights.get(&format!("{p}wk")).data, d);
-            let v = matvec(&hn, &self.weights.get(&format!("{p}wv")).data, d);
-            let kr = st.kv_slice(layer, 0, pos);
-            st.kv[kr].copy_from_slice(&k);
-            let vr = st.kv_slice(layer, 1, pos);
-            st.kv[vr].copy_from_slice(&v);
+        // Token embeddings into the residual stream.
+        for (l, (lane, &tok)) in lanes.iter_mut().zip(tokens.iter()).enumerate() {
+            if lane.pos >= lane.max_len {
+                anyhow::bail!("lane {l} overflow: pos {} >= max {}", lane.pos, lane.max_len);
+            }
+            let t = tok as usize;
+            if t >= VOCAB {
+                anyhow::bail!("lane {l}: token {tok} outside vocabulary");
+            }
+            scratch.x[l * d..(l + 1) * d].copy_from_slice(&embed[t * d..(t + 1) * d]);
+        }
 
-            // Attention per head over cache positions 0..=pos with ALiBi.
-            let scale = 1.0 / (dh as f32).sqrt();
-            let mut attn_out = vec![0.0f32; d];
-            for head in 0..h {
-                let slope = self.slopes[head];
-                let qh = &q[head * dh..(head + 1) * dh];
-                // scores
-                let mut scores = Vec::with_capacity(pos + 1);
-                let mut max_s = f32::NEG_INFINITY;
-                for j in 0..=pos {
-                    let kj = &st.kv[st.kv_slice(layer, 0, j)][head * dh..(head + 1) * dh];
-                    let mut dot = 0.0f32;
-                    for i in 0..dh {
-                        dot += qh[i] * kj[i];
+        let scale = 1.0 / (dh as f32).sqrt();
+        for (layer, lp) in self.plan.layers.iter().enumerate() {
+            let attn_norm = self.weights.data(lp.attn_norm);
+            let mlp_norm = self.weights.data(lp.mlp_norm);
+            let wq = self.weights.data(lp.wq);
+            let wk = self.weights.data(lp.wk);
+            let wv = self.weights.data(lp.wv);
+            let wo = self.weights.data(lp.wo);
+            let w1 = self.weights.data(lp.w1);
+            let w2 = self.weights.data(lp.w2);
+
+            for l in 0..n {
+                rmsnorm_into(
+                    &scratch.x[l * d..(l + 1) * d],
+                    attn_norm,
+                    &mut scratch.hn[l * d..(l + 1) * d],
+                );
+            }
+            scratch.q[..n * d].fill(0.0);
+            scratch.k[..n * d].fill(0.0);
+            scratch.v[..n * d].fill(0.0);
+            matmul_acc(n, d, d, &scratch.hn[..n * d], wq, &mut scratch.q[..n * d]);
+            matmul_acc(n, d, d, &scratch.hn[..n * d], wk, &mut scratch.k[..n * d]);
+            matmul_acc(n, d, d, &scratch.hn[..n * d], wv, &mut scratch.v[..n * d]);
+
+            // Append k/v to each lane's cache at its current position.
+            for (l, lane) in lanes.iter_mut().enumerate() {
+                let pos = lane.pos;
+                let kr = lane.kv_slice(layer, 0, pos);
+                lane.kv[kr].copy_from_slice(&scratch.k[l * d..(l + 1) * d]);
+                let vr = lane.kv_slice(layer, 1, pos);
+                lane.kv[vr].copy_from_slice(&scratch.v[l * d..(l + 1) * d]);
+            }
+
+            // Attention per lane per head over cache positions 0..=pos
+            // with ALiBi.
+            scratch.attn[..n * d].fill(0.0);
+            for (l, lane) in lanes.iter().enumerate() {
+                let pos = lane.pos;
+                let q_lane = &scratch.q[l * d..(l + 1) * d];
+                let attn_out = &mut scratch.attn[l * d..(l + 1) * d];
+                let scores =
+                    &mut scratch.scores[l * MAX_CONTEXT..l * MAX_CONTEXT + pos + 1];
+                for head in 0..h {
+                    let slope = self.slopes[head];
+                    let qh = &q_lane[head * dh..(head + 1) * dh];
+                    let mut max_s = f32::NEG_INFINITY;
+                    for (j, sj) in scores.iter_mut().enumerate() {
+                        let kj =
+                            &lane.kv[lane.kv_slice(layer, 0, j)][head * dh..(head + 1) * dh];
+                        let mut dot = 0.0f32;
+                        for i in 0..dh {
+                            dot += qh[i] * kj[i];
+                        }
+                        let s = dot * scale - slope * (pos - j) as f32;
+                        max_s = max_s.max(s);
+                        *sj = s;
                     }
-                    let s = dot * scale - slope * (pos - j) as f32;
-                    max_s = max_s.max(s);
-                    scores.push(s);
-                }
-                let mut denom = 0.0f32;
-                for s in scores.iter_mut() {
-                    *s = (*s - max_s).exp();
-                    denom += *s;
-                }
-                let inv = 1.0 / denom;
-                let out = &mut attn_out[head * dh..(head + 1) * dh];
-                for (j, &w) in scores.iter().enumerate() {
-                    let vj = &st.kv[st.kv_slice(layer, 1, j)][head * dh..(head + 1) * dh];
-                    let wj = w * inv;
-                    for i in 0..dh {
-                        out[i] += wj * vj[i];
+                    let mut denom = 0.0f32;
+                    for s in scores.iter_mut() {
+                        *s = (*s - max_s).exp();
+                        denom += *s;
+                    }
+                    let inv = 1.0 / denom;
+                    let out_h = &mut attn_out[head * dh..(head + 1) * dh];
+                    for (j, &w) in scores.iter().enumerate() {
+                        let vj =
+                            &lane.kv[lane.kv_slice(layer, 1, j)][head * dh..(head + 1) * dh];
+                        let wj = w * inv;
+                        for i in 0..dh {
+                            out_h[i] += wj * vj[i];
+                        }
                     }
                 }
             }
-            matvec_acc(&attn_out, &self.weights.get(&format!("{p}wo")).data, &mut x);
+            matmul_acc(n, d, d, &scratch.attn[..n * d], wo, &mut scratch.x[..n * d]);
 
-            let hn = rmsnorm(&x, &self.weights.get(&format!("{p}mlp_norm")).data);
-            let mut ff = matvec(&hn, &self.weights.get(&format!("{p}w1")).data, self.cfg.d_ff());
-            for v in ff.iter_mut() {
+            for l in 0..n {
+                rmsnorm_into(
+                    &scratch.x[l * d..(l + 1) * d],
+                    mlp_norm,
+                    &mut scratch.hn[l * d..(l + 1) * d],
+                );
+            }
+            scratch.ff[..n * ffd].fill(0.0);
+            matmul_acc(n, d, ffd, &scratch.hn[..n * d], w1, &mut scratch.ff[..n * ffd]);
+            for v in scratch.ff[..n * ffd].iter_mut() {
                 *v = gelu(*v);
             }
-            matvec_acc(&ff, &self.weights.get(&format!("{p}w2")).data, &mut x);
+            matmul_acc(n, ffd, d, &scratch.ff[..n * ffd], w2, &mut scratch.x[..n * d]);
         }
 
-        let xn = rmsnorm(&x, &self.weights.get("final_norm").data);
-        // Weight-tied head: logits[v] = dot(xn, embed[v]).
-        let mut logits = vec![0.0f32; VOCAB];
-        for (v, lo) in logits.iter_mut().enumerate() {
-            let row = &embed[v * d..(v + 1) * d];
-            let mut dot = 0.0f32;
-            for i in 0..d {
-                dot += xn[i] * row[i];
-            }
-            *lo = dot;
+        // Final norm + weight-tied head (logits[v] = dot(xn, embed[v])).
+        let final_norm = self.weights.data(self.plan.final_norm);
+        for l in 0..n {
+            rmsnorm_into(
+                &scratch.x[l * d..(l + 1) * d],
+                final_norm,
+                &mut scratch.hn[l * d..(l + 1) * d],
+            );
         }
-        st.pos += 1;
-        Ok(logits)
+        for l in 0..n {
+            let xn = &scratch.hn[l * d..(l + 1) * d];
+            let out_l = &mut out[l * VOCAB..(l + 1) * VOCAB];
+            for (v, lo) in out_l.iter_mut().take(head_rows).enumerate() {
+                let row = &embed[v * d..(v + 1) * d];
+                let mut dot = 0.0f32;
+                for i in 0..d {
+                    dot += xn[i] * row[i];
+                }
+                *lo = dot;
+            }
+            for lo in out_l.iter_mut().skip(head_rows) {
+                *lo = 0.0;
+            }
+        }
+        for lane in lanes.iter_mut() {
+            lane.pos += 1;
+        }
+        Ok(())
+    }
+
+    /// Single-lane convenience wrapper over [`Self::advance_batch`]
+    /// (allocates a one-lane scratch per call — samplers and tests only;
+    /// the hot paths hold a persistent [`Scratch`]).
+    pub fn advance(&self, st: &mut LaneState, token: u32) -> Result<Vec<f32>> {
+        let mut scratch = Scratch::new(self.cfg, 1);
+        let mut out = vec![0.0f32; VOCAB];
+        self.advance_batch(std::slice::from_mut(st), &[token], &mut scratch, &mut out, VOCAB)?;
+        Ok(out)
     }
 }
 
-/// Native executor: a [`NativeModel`] plus a pool of lanes.
+/// Native executor: a [`NativeModel`], a pool of lanes, and one [`Scratch`]
+/// arena per worker thread.
 pub struct NativeExecutor {
     model: NativeModel,
     lanes: Vec<LaneState>,
+    scratches: Vec<Scratch>,
+    threads: usize,
+    head_rows: usize,
 }
 
 impl NativeExecutor {
     pub fn new(cfg: &'static LmConfig, weights: Weights, n_lanes: usize) -> Self {
         let model = NativeModel::new(cfg, weights);
         let lanes = (0..n_lanes).map(|_| LaneState::new(cfg, MAX_CONTEXT)).collect();
-        NativeExecutor { model, lanes }
+        let scratches = vec![Scratch::new(cfg, n_lanes)];
+        NativeExecutor { model, lanes, scratches, threads: 1, head_rows: VOCAB }
+    }
+
+    /// Partition lanes across `threads` OS threads per step
+    /// (`std::thread::scope`). Bit-exact for any thread count: lanes are
+    /// computed independently, each thread owns a disjoint lane range and
+    /// its own scratch arena. Clamped to `1..=lanes`.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        let t = threads.clamp(1, self.lanes.len().max(1));
+        self.threads = t;
+        // One full-capacity scratch per thread (any lane partition fits).
+        self.scratches =
+            (0..t).map(|_| Scratch::new(self.model.cfg, self.lanes.len().max(1))).collect();
+        self
+    }
+
+    /// Restrict the output head to the first `rows` logit rows (the rest
+    /// are zeroed). The compressor passes
+    /// [`crate::lm::config::CODED_BYTES`]; default is the full [`VOCAB`].
+    pub fn with_head_rows(mut self, rows: usize) -> Self {
+        self.head_rows = rows.clamp(1, VOCAB);
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     pub fn model(&self) -> &NativeModel {
@@ -220,21 +423,76 @@ impl crate::lm::executor::LmExecutor for NativeExecutor {
     }
 
     fn step(&mut self, tokens: &[u32]) -> Result<Vec<f32>> {
-        if tokens.len() != self.lanes.len() {
-            anyhow::bail!("step expects {} lane tokens, got {}", self.lanes.len(), tokens.len());
-        }
-        let mut out = Vec::with_capacity(self.lanes.len() * VOCAB);
-        for (lane, &tok) in self.lanes.iter_mut().zip(tokens) {
-            out.extend(self.model.advance(lane, tok)?);
-        }
+        let mut out = vec![0.0f32; self.lanes.len() * VOCAB];
+        self.step_into(tokens, &mut out)?;
         Ok(out)
+    }
+
+    /// Zero-allocation step: all intermediates live in the preallocated
+    /// scratch arenas, the logits land in the caller's buffer.
+    ///
+    /// Threading is work-gated: `std::thread::scope` spawns OS threads per
+    /// step (tens of microseconds), so lanes are only partitioned when each
+    /// thread gets enough matvec work to amortize that. Small models
+    /// (nano/tiny) therefore run single-threaded even with `threads > 1`
+    /// — decode stays fast per byte either way. (A persistent worker pool
+    /// would remove the gate; see ROADMAP open items.)
+    fn step_into(&mut self, tokens: &[u32], out: &mut [f32]) -> Result<()> {
+        let n = self.lanes.len();
+        if tokens.len() != n {
+            anyhow::bail!("step expects {} lane tokens, got {}", n, tokens.len());
+        }
+        if out.len() != n * VOCAB {
+            anyhow::bail!("step expects out buffer of {}, got {}", n * VOCAB, out.len());
+        }
+        // ~mul-adds per thread needed to amortize a spawn+join cycle.
+        const WORK_PER_THREAD: usize = 768 * 1024;
+        let d = self.model.cfg.d_model;
+        let per_lane_work = self.model.cfg.n_layers * 12 * d * d + VOCAB * d;
+        let useful = ((n * per_lane_work) / WORK_PER_THREAD).max(1);
+        let threads = self
+            .threads
+            .min(useful)
+            .min(self.scratches.len())
+            .min(n.max(1))
+            .max(1);
+        if threads == 1 {
+            return self.model.advance_batch(
+                &mut self.lanes,
+                tokens,
+                &mut self.scratches[0],
+                out,
+                self.head_rows,
+            );
+        }
+        let per = n.div_ceil(threads);
+        let model = &self.model;
+        let head_rows = self.head_rows;
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(threads);
+            for (((lanes_c, toks_c), out_c), scratch) in self
+                .lanes
+                .chunks_mut(per)
+                .zip(tokens.chunks(per))
+                .zip(out.chunks_mut(per * VOCAB))
+                .zip(self.scratches.iter_mut())
+            {
+                handles.push(
+                    s.spawn(move || model.advance_batch(lanes_c, toks_c, scratch, out_c, head_rows)),
+                );
+            }
+            for h in handles {
+                h.join().map_err(|_| anyhow::anyhow!("engine worker thread panicked"))??;
+            }
+            Ok(())
+        })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::lm::config::by_name;
+    use crate::lm::config::{by_name, CODED_BYTES};
     use crate::lm::executor::LmExecutor;
     use crate::tokenizer::vocab::BOS;
 
@@ -322,5 +580,90 @@ mod tests {
         model.advance(&mut b, BOS).unwrap();
         let lb = model.advance(&mut b, 90).unwrap();
         assert_ne!(la, lb, "different contexts must give different logits");
+    }
+
+    #[test]
+    fn batch_matches_single_lane_bit_for_bit() {
+        // The batched path restructures the loops (lanes through each layer
+        // together) but must reproduce the single-lane path exactly.
+        let cfg = by_name("small").unwrap();
+        let w = Weights::random(cfg, 7);
+        let model = NativeModel::new(cfg, w);
+        let seqs: [&[u32]; 3] = [&[BOS, 72, 101, 108], &[BOS, 10, 200, 65], &[BOS, 0, 255, 90]];
+        // Serial: one lane at a time via advance().
+        let mut serial = Vec::new();
+        for seq in &seqs {
+            let mut st = LaneState::new(cfg, 16);
+            let mut per_step = Vec::new();
+            for &t in *seq {
+                per_step.push(model.advance(&mut st, t).unwrap());
+            }
+            serial.push(per_step);
+        }
+        // Batched: all three lanes per step.
+        let mut lanes: Vec<LaneState> = (0..3).map(|_| LaneState::new(cfg, 16)).collect();
+        let mut scratch = Scratch::new(cfg, 3);
+        let mut out = vec![0.0f32; 3 * VOCAB];
+        for t in 0..seqs[0].len() {
+            let toks: Vec<u32> = seqs.iter().map(|s| s[t]).collect();
+            model.advance_batch(&mut lanes, &toks, &mut scratch, &mut out, VOCAB).unwrap();
+            for l in 0..3 {
+                assert_eq!(
+                    out[l * VOCAB..(l + 1) * VOCAB],
+                    serial[l][t][..],
+                    "lane {l} step {t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_step_matches_single_thread() {
+        // medium x 8 lanes clears the work gate, so this genuinely runs the
+        // thread::scope partitioned path (tiny models are gated to 1 thread
+        // because spawn/join would dominate their per-step work).
+        let cfg = by_name("medium").unwrap();
+        let w = Weights::random(cfg, 8);
+        let mut one = NativeExecutor::new(cfg, w.clone(), 8);
+        let mut two = NativeExecutor::new(cfg, w, 8).with_threads(2);
+        assert_eq!(two.threads(), 2);
+        for step in 0..3u32 {
+            let toks: Vec<u32> = (0..8).map(|l| (40 + l * 13 + step) % 256).collect();
+            let a = one.step(&toks).unwrap();
+            let b = two.step(&toks).unwrap();
+            assert_eq!(a, b, "step {step}");
+        }
+    }
+
+    #[test]
+    fn head_rows_matches_full_head_on_coded_bytes() {
+        let cfg = by_name("nano").unwrap();
+        let w = Weights::random(cfg, 9);
+        let mut full = NativeExecutor::new(cfg, w.clone(), 2);
+        let mut coded = NativeExecutor::new(cfg, w, 2).with_head_rows(CODED_BYTES);
+        let toks = [BOS, 65];
+        let a = full.step(&toks).unwrap();
+        let b = coded.step(&toks).unwrap();
+        for l in 0..2 {
+            assert_eq!(
+                a[l * VOCAB..l * VOCAB + CODED_BYTES],
+                b[l * VOCAB..l * VOCAB + CODED_BYTES],
+                "coded region must be bit-identical"
+            );
+            assert!(b[l * VOCAB + CODED_BYTES..(l + 1) * VOCAB].iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn step_into_is_exact_and_validates_buffer() {
+        let cfg = by_name("nano").unwrap();
+        let mut ex = NativeExecutor::new(cfg, Weights::random(cfg, 10), 2);
+        let mut buf = vec![0.0f32; 2 * VOCAB];
+        ex.step_into(&[BOS, BOS], &mut buf).unwrap();
+        ex.reset();
+        let via_step = ex.step(&[BOS, BOS]).unwrap();
+        assert_eq!(buf, via_step);
+        let mut short = vec![0.0f32; VOCAB];
+        assert!(ex.step_into(&[BOS, BOS], &mut short).is_err());
     }
 }

@@ -1,0 +1,210 @@
+//! Frozen pre-refactor ("seed") implementation of the native transformer.
+//!
+//! This module is the **golden reference** for the resolved-plan/batched
+//! engine in [`crate::lm::native`]:
+//!
+//! * `tests/golden_logits.rs` asserts that [`crate::lm::native::NativeModel::advance_batch`]
+//!   reproduces [`ReferenceModel::advance`] **bit for bit** on every model
+//!   tier, which is what guarantees containers compressed by the seed code
+//!   still decompress under the refactored engine.
+//! * `benches/runtime.rs` reports the batched engine's tokens/sec speedup
+//!   over this baseline in `BENCH_runtime.json`.
+//!
+//! DO NOT OPTIMIZE OR "CLEAN UP" THIS FILE — its entire value is that it
+//! never changes. The string-keyed weight lookups and per-token heap
+//! allocations are intentional: they are exactly what the refactor removed,
+//! and exactly what the seed binary executed.
+
+use crate::lm::config::{LmConfig, MAX_CONTEXT, VOCAB};
+use crate::lm::weights::Weights;
+use crate::Result;
+
+/// GELU (tanh approximation) — identical constant and expression to the
+/// seed (and to `lm::native::gelu`).
+#[inline]
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// y += x @ w, with x: [d_in], w: [d_in, d_out] row-major.
+#[inline]
+fn matvec_acc(x: &[f32], w: &[f32], y: &mut [f32]) {
+    let d_out = y.len();
+    debug_assert_eq!(x.len() * d_out, w.len());
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * d_out..(i + 1) * d_out];
+        for j in 0..d_out {
+            y[j] += xi * row[j];
+        }
+    }
+}
+
+fn matvec(x: &[f32], w: &[f32], d_out: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; d_out];
+    matvec_acc(x, w, &mut y);
+    y
+}
+
+fn rmsnorm(x: &[f32], gain: &[f32]) -> Vec<f32> {
+    let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + 1e-6).sqrt();
+    x.iter().zip(gain).map(|(v, g)| v * inv * g).collect()
+}
+
+/// Seed `LaneState`: the KV cache and the current position.
+pub struct ReferenceLane {
+    /// [layer][kind(k=0,v=1)][pos * d_model ..]
+    kv: Vec<f32>,
+    pos: usize,
+    d_model: usize,
+    max_len: usize,
+}
+
+impl ReferenceLane {
+    pub fn new(cfg: &LmConfig, max_len: usize) -> Self {
+        assert!(max_len <= MAX_CONTEXT);
+        ReferenceLane {
+            kv: vec![0.0; cfg.n_layers * 2 * max_len * cfg.d_model],
+            pos: 0,
+            d_model: cfg.d_model,
+            max_len,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.pos = 0;
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    #[inline]
+    fn kv_slice(&self, layer: usize, kind: usize, pos: usize) -> std::ops::Range<usize> {
+        let base = ((layer * 2 + kind) * self.max_len + pos) * self.d_model;
+        base..base + self.d_model
+    }
+}
+
+/// Seed `NativeModel`: config + string-keyed weights + ALiBi slopes.
+pub struct ReferenceModel {
+    pub cfg: &'static LmConfig,
+    weights: Weights,
+    slopes: Vec<f32>,
+}
+
+impl ReferenceModel {
+    pub fn new(cfg: &'static LmConfig, weights: Weights) -> Self {
+        let slopes = (0..cfg.n_heads).map(|h| cfg.alibi_slope(h)).collect();
+        ReferenceModel { cfg, weights, slopes }
+    }
+
+    /// The seed `advance`, verbatim: one token in, `[VOCAB]` logits out,
+    /// with a `format!`-keyed HashMap lookup per weight tensor and fresh
+    /// `Vec` allocations for every intermediate.
+    pub fn advance(&self, st: &mut ReferenceLane, token: u32) -> Result<Vec<f32>> {
+        if st.pos >= st.max_len {
+            anyhow::bail!("lane overflow: pos {} >= max {}", st.pos, st.max_len);
+        }
+        let d = self.cfg.d_model;
+        let h = self.cfg.n_heads;
+        let dh = self.cfg.d_head();
+        let pos = st.pos;
+        let embed = &self.weights.get("embed").data;
+        let mut x: Vec<f32> = embed[token as usize * d..(token as usize + 1) * d].to_vec();
+
+        for layer in 0..self.cfg.n_layers {
+            let p = format!("layer{layer:02}.");
+            let hn = rmsnorm(&x, &self.weights.get(&format!("{p}attn_norm")).data);
+            let q = matvec(&hn, &self.weights.get(&format!("{p}wq")).data, d);
+            let k = matvec(&hn, &self.weights.get(&format!("{p}wk")).data, d);
+            let v = matvec(&hn, &self.weights.get(&format!("{p}wv")).data, d);
+            let kr = st.kv_slice(layer, 0, pos);
+            st.kv[kr].copy_from_slice(&k);
+            let vr = st.kv_slice(layer, 1, pos);
+            st.kv[vr].copy_from_slice(&v);
+
+            // Attention per head over cache positions 0..=pos with ALiBi.
+            let scale = 1.0 / (dh as f32).sqrt();
+            let mut attn_out = vec![0.0f32; d];
+            for head in 0..h {
+                let slope = self.slopes[head];
+                let qh = &q[head * dh..(head + 1) * dh];
+                // scores
+                let mut scores = Vec::with_capacity(pos + 1);
+                let mut max_s = f32::NEG_INFINITY;
+                for j in 0..=pos {
+                    let kj = &st.kv[st.kv_slice(layer, 0, j)][head * dh..(head + 1) * dh];
+                    let mut dot = 0.0f32;
+                    for i in 0..dh {
+                        dot += qh[i] * kj[i];
+                    }
+                    let s = dot * scale - slope * (pos - j) as f32;
+                    max_s = max_s.max(s);
+                    scores.push(s);
+                }
+                let mut denom = 0.0f32;
+                for s in scores.iter_mut() {
+                    *s = (*s - max_s).exp();
+                    denom += *s;
+                }
+                let inv = 1.0 / denom;
+                let out = &mut attn_out[head * dh..(head + 1) * dh];
+                for (j, &w) in scores.iter().enumerate() {
+                    let vj = &st.kv[st.kv_slice(layer, 1, j)][head * dh..(head + 1) * dh];
+                    let wj = w * inv;
+                    for i in 0..dh {
+                        out[i] += wj * vj[i];
+                    }
+                }
+            }
+            matvec_acc(&attn_out, &self.weights.get(&format!("{p}wo")).data, &mut x);
+
+            let hn = rmsnorm(&x, &self.weights.get(&format!("{p}mlp_norm")).data);
+            let mut ff = matvec(&hn, &self.weights.get(&format!("{p}w1")).data, self.cfg.d_ff());
+            for v in ff.iter_mut() {
+                *v = gelu(*v);
+            }
+            matvec_acc(&ff, &self.weights.get(&format!("{p}w2")).data, &mut x);
+        }
+
+        let xn = rmsnorm(&x, &self.weights.get("final_norm").data);
+        // Weight-tied head: logits[v] = dot(xn, embed[v]).
+        let mut logits = vec![0.0f32; VOCAB];
+        for (v, lo) in logits.iter_mut().enumerate() {
+            let row = &embed[v * d..(v + 1) * d];
+            let mut dot = 0.0f32;
+            for i in 0..d {
+                dot += xn[i] * row[i];
+            }
+            *lo = dot;
+        }
+        st.pos += 1;
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lm::config::by_name;
+    use crate::tokenizer::vocab::BOS;
+
+    #[test]
+    fn reference_is_deterministic() {
+        let cfg = by_name("nano").unwrap();
+        let model = ReferenceModel::new(cfg, Weights::random(cfg, 1));
+        let mut a = ReferenceLane::new(cfg, 8);
+        let mut b = ReferenceLane::new(cfg, 8);
+        for &t in &[BOS, 72, 101] {
+            assert_eq!(model.advance(&mut a, t).unwrap(), model.advance(&mut b, t).unwrap());
+        }
+        assert_eq!(a.pos(), 3);
+        a.reset();
+        assert_eq!(a.pos(), 0);
+    }
+}

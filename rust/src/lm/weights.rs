@@ -1,7 +1,15 @@
-//! `.lmz` weights loader — mirror of `python/compile/weights.py`.
+//! `.lmz` weights loader — mirror of `python/compile/weights.py` — plus the
+//! [`ResolvedPlan`] that turns the string-keyed tensor bundle into direct
+//! indices for the forward pass.
+//!
+//! The hot path contract: `Weights::get(name)` (format! + hash + map
+//! lookup) exists for loaders, tools and the frozen reference
+//! implementation only. The engine resolves every tensor ONCE at model
+//! load into a [`ResolvedPlan`] and thereafter reaches weight data through
+//! [`Weights::data`] — a bare slice index.
 
 use crate::lm::config::{param_spec, LmConfig};
-use crate::util::{read_u32_le};
+use crate::util::read_u32_le;
 use crate::Result;
 use std::collections::HashMap;
 
@@ -89,8 +97,26 @@ impl Weights {
     }
 
     /// Tensor by name (panics on unknown name — internal use after validate).
+    /// Cold paths only; the engine goes through [`ResolvedPlan`] +
+    /// [`Weights::data`] instead.
     pub fn get(&self, name: &str) -> &Tensor {
         &self.tensors[self.index[name]]
+    }
+
+    /// Tensor index by name (used once per model load by
+    /// [`ResolvedPlan::build`]).
+    pub fn tensor_index(&self, name: &str) -> Result<usize> {
+        self.index
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("weights have no tensor named '{name}'"))
+    }
+
+    /// Raw data of the tensor at a resolved index — the engine's only
+    /// weight accessor (no strings, no hashing, no map).
+    #[inline]
+    pub fn data(&self, idx: usize) -> &[f32] {
+        &self.tensors[idx].data
     }
 
     /// Serialize back to `.lmz` bytes (round-trip support + test fixtures).
@@ -146,6 +172,58 @@ impl Weights {
     }
 }
 
+/// Direct tensor indices for one transformer layer — no string keys.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerPlan {
+    pub attn_norm: usize,
+    pub mlp_norm: usize,
+    pub wq: usize,
+    pub wk: usize,
+    pub wv: usize,
+    pub wo: usize,
+    pub w1: usize,
+    pub w2: usize,
+}
+
+/// Resolved-weight execution plan: every tensor the forward pass touches,
+/// resolved from string keys to `tensors[...]` indices once at model load.
+/// `NativeModel::advance_batch` performs zero string formatting, hashing or
+/// map lookups per token — it walks this plan and indexes
+/// [`Weights::data`] directly.
+#[derive(Clone, Debug)]
+pub struct ResolvedPlan {
+    pub embed: usize,
+    pub final_norm: usize,
+    pub layers: Vec<LayerPlan>,
+}
+
+impl ResolvedPlan {
+    /// Resolve against a validated weight bundle. Shape errors cannot occur
+    /// here (the bundle was checked against `param_spec` at load), but a
+    /// missing name is still reported rather than panicking.
+    pub fn build(weights: &Weights, cfg: &LmConfig) -> Result<ResolvedPlan> {
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let p = format!("layer{i:02}.");
+            layers.push(LayerPlan {
+                attn_norm: weights.tensor_index(&format!("{p}attn_norm"))?,
+                mlp_norm: weights.tensor_index(&format!("{p}mlp_norm"))?,
+                wq: weights.tensor_index(&format!("{p}wq"))?,
+                wk: weights.tensor_index(&format!("{p}wk"))?,
+                wv: weights.tensor_index(&format!("{p}wv"))?,
+                wo: weights.tensor_index(&format!("{p}wo"))?,
+                w1: weights.tensor_index(&format!("{p}w1"))?,
+                w2: weights.tensor_index(&format!("{p}w2"))?,
+            });
+        }
+        Ok(ResolvedPlan {
+            embed: weights.tensor_index("embed")?,
+            final_norm: weights.tensor_index("final_norm")?,
+            layers,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,6 +256,22 @@ mod tests {
         let tiny = by_name("tiny").unwrap();
         let bytes = Weights::random(nano, 3).to_bytes();
         assert!(Weights::from_bytes(&bytes, tiny).is_err());
+    }
+
+    #[test]
+    fn resolved_plan_matches_string_lookups() {
+        let cfg = by_name("medium").unwrap();
+        let w = Weights::random(cfg, 5);
+        let plan = ResolvedPlan::build(&w, cfg).unwrap();
+        assert_eq!(plan.layers.len(), cfg.n_layers);
+        assert_eq!(w.data(plan.embed), &w.get("embed").data[..]);
+        assert_eq!(w.data(plan.final_norm), &w.get("final_norm").data[..]);
+        for (i, lp) in plan.layers.iter().enumerate() {
+            let p = format!("layer{i:02}.");
+            assert_eq!(w.data(lp.wq), &w.get(&format!("{p}wq")).data[..]);
+            assert_eq!(w.data(lp.w2), &w.get(&format!("{p}w2")).data[..]);
+            assert_eq!(w.data(lp.attn_norm), &w.get(&format!("{p}attn_norm")).data[..]);
+        }
     }
 
     #[test]

@@ -7,9 +7,14 @@ use crate::Result;
 use std::path::{Path, PathBuf};
 
 /// Handle to an `artifacts/` directory.
+///
+/// The PJRT client is created LAZILY, on the first operation that actually
+/// needs a device (compile / buffer upload): opening a store and loading
+/// `.lmz` weights must keep working in builds where PJRT is unavailable
+/// (the vendored `xla` stub), so the native executor can still be fed from
+/// `artifacts/weights/` with no device runtime present.
 pub struct ArtifactStore {
     root: PathBuf,
-    client: xla::PjRtClient,
 }
 
 impl ArtifactStore {
@@ -27,15 +32,17 @@ impl ArtifactStore {
                 root.display()
             );
         }
-        Ok(ArtifactStore { root, client: super::shared_client()? })
+        Ok(ArtifactStore { root })
     }
 
     pub fn root(&self) -> &Path {
         &self.root
     }
 
-    pub fn client(&self) -> &xla::PjRtClient {
-        &self.client
+    /// The per-thread PJRT client (cheap handle clone, created on first
+    /// use). Errors in PJRT-less builds — only device paths call this.
+    pub fn client(&self) -> Result<xla::PjRtClient> {
+        super::shared_client()
     }
 
     /// Does this store have artifacts for `model`?
@@ -58,15 +65,16 @@ impl ArtifactStore {
         let proto = xla::HloModuleProto::from_text_file(&path)
             .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        self.client.compile(&comp).map_err(|e| anyhow::anyhow!("compiling {file}: {e}"))
+        self.client()?.compile(&comp).map_err(|e| anyhow::anyhow!("compiling {file}: {e}"))
     }
 
     /// Upload a model's parameters to device buffers, in canonical order.
     pub fn param_buffers(&self, cfg: &LmConfig, weights: &Weights) -> Result<Vec<xla::PjRtBuffer>> {
+        let client = self.client()?;
         let mut bufs = Vec::with_capacity(weights.tensors.len());
         for t in &weights.tensors {
             bufs.push(
-                self.client
+                client
                     .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
                     .map_err(|e| anyhow::anyhow!("uploading {}: {e}", t.name))?,
             );

@@ -78,7 +78,10 @@ impl PjrtForwardExecutor {
 
     /// Bulk encode path: feed each lane's full input (BOS + chunk bytes,
     /// `<= seq` long) and return logits for the first `n_positions` of every
-    /// lane: `[lanes * n_positions * VOCAB]`.
+    /// lane: `[lanes * n_positions * VOCAB]`. Exposed inherently (tests and
+    /// tools call it on `&self`); [`LmExecutor::encode_logits`] delegates
+    /// here, overriding the trait's stepping fallback with this one-call
+    /// batched forward.
     pub fn encode_logits(&self, lanes: &[Vec<u32>], n_positions: usize) -> Result<Vec<f32>> {
         if lanes.len() > self.batch {
             anyhow::bail!("{} lanes > batch {}", lanes.len(), self.batch);
@@ -146,6 +149,12 @@ impl LmExecutor for PjrtForwardExecutor {
         }
         Ok(out)
     }
+
+    /// Encode-side bulk path: one device call for all positions (the whole
+    /// point of this executor) instead of the trait's stepping fallback.
+    fn encode_logits(&mut self, lanes: &[Vec<u32>], n_positions: usize) -> Result<Vec<f32>> {
+        PjrtForwardExecutor::encode_logits(self, lanes, n_positions)
+    }
 }
 
 /// KV-cache step executor (see module docs).
@@ -169,7 +178,7 @@ impl PjrtStepExecutor {
         let seq = config::MAX_CONTEXT;
         let kv_elems = cfg.n_layers * 2 * batch * seq * cfg.d_model;
         let kv = store
-            .client()
+            .client()?
             .buffer_from_host_buffer::<f32>(
                 &vec![0.0f32; kv_elems],
                 &[cfg.n_layers, 2, batch, seq, cfg.d_model],

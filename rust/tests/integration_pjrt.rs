@@ -66,7 +66,8 @@ fn pallas_artifact_matches_jnp_artifact() {
     let text = llmzip::experiments::human_text(llmzip::textgen::Domain::Novel, s);
     let mut tokens: Vec<i32> = vec![BOS as i32];
     tokens.extend(text[..s - 1].iter().map(|&b| b as i32));
-    let tok_buf = store.client().buffer_from_host_buffer::<i32>(&tokens, &[1, s], None).unwrap();
+    let tok_buf =
+        store.client().unwrap().buffer_from_host_buffer::<i32>(&tokens, &[1, s], None).unwrap();
     let mut args: Vec<&xla::PjRtBuffer> = params.iter().collect();
     args.push(&tok_buf);
     let res = exe.execute_b(&args).unwrap();
@@ -117,6 +118,7 @@ fn cross_executor_roundtrips() {
                 chunk_tokens: 128,
                 stream_bytes: 1024,
                 executor: exec,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -138,6 +140,7 @@ fn executor_mismatch_rejected() {
                 chunk_tokens: 128,
                 stream_bytes: 1024,
                 executor: exec,
+                ..Default::default()
             },
         )
         .unwrap()
@@ -168,6 +171,7 @@ fn step_and_forward_engines_agree_on_cost() {
                     chunk_tokens: 256,
                     stream_bytes: 4096,
                     executor: exec,
+                    ..Default::default()
                 },
             )
             .unwrap();
@@ -189,6 +193,7 @@ fn compression_is_deterministic() {
             chunk_tokens: 256,
             stream_bytes: 2048,
             executor: ExecutorKind::PjrtForward,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -221,6 +226,7 @@ fn llm_beats_gzip_on_own_output() {
             chunk_tokens: 256,
             stream_bytes: 4096,
             executor: ExecutorKind::PjrtForward,
+            ..Default::default()
         },
     )
     .unwrap();

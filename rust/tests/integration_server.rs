@@ -18,6 +18,7 @@ fn native_server(lanes: usize) -> Server {
         ServerConfig {
             chunk_tokens: 64,
             policy: BatchPolicy { lanes, max_wait: Duration::from_millis(3) },
+            ..Default::default()
         },
     )
     .unwrap()

@@ -1,0 +1,129 @@
+//! Offline shim for the `anyhow` crate.
+//!
+//! This build environment has no crates.io access, so the subset of the
+//! real `anyhow` API that llmzip uses is reimplemented here: [`Error`],
+//! [`Result`], [`anyhow!`] and [`bail!`], plus the blanket
+//! `From<E: std::error::Error>` conversion that makes `?` work on any
+//! standard error type. Like the real crate, [`Error`] deliberately does
+//! NOT implement `std::error::Error` — that is what keeps the blanket
+//! `From` impl coherent with `impl<T> From<T> for T`.
+//!
+//! Differences from the real crate: no backtraces, no source chains and no
+//! `Context` trait (llmzip does not use them). Messages are captured
+//! eagerly as strings, which is exactly what llmzip's error paths do
+//! anyway. Replacing this shim with the real `anyhow` is a one-line change
+//! in `rust/Cargo.toml`.
+
+use std::fmt;
+
+/// A string-backed error value, compatible with `anyhow::Error` for every
+/// operation llmzip performs (`Display`, `{:#}`, `Debug`, `to_string`).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build from an eagerly formatted message (used by [`anyhow!`]).
+    pub fn from_string(msg: String) -> Error {
+        Error { msg }
+    }
+
+    /// Build from any displayable value (used by the single-expression
+    /// [`anyhow!`] form).
+    pub fn from_display<T: fmt::Display>(value: T) -> Error {
+        Error { msg: value.to_string() }
+    }
+
+    /// `anyhow::Error::msg` compatibility constructor.
+    pub fn msg<T: fmt::Display>(value: T) -> Error {
+        Error::from_display(value)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` on real anyhow prints the whole cause chain; this shim has
+        // no chain, so plain and alternate formats coincide.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result` — the error type defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::from_string(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::from_display(&$err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::from_string(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        let r: Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "disk on fire"));
+        r?;
+        Ok(())
+    }
+
+    fn bails(x: usize) -> Result<usize> {
+        if x == 0 {
+            bail!("x must be nonzero, got {x}");
+        }
+        Ok(x)
+    }
+
+    #[test]
+    fn formats_and_conversions() {
+        let e = anyhow!("plain {} message {}", 1, "two");
+        assert_eq!(e.to_string(), "plain 1 message two");
+        let n = 7;
+        let e = anyhow!("captured {n}");
+        assert_eq!(format!("{e:#}"), "captured 7");
+        let s = String::from("already a string");
+        let e = anyhow!(s);
+        assert_eq!(e.to_string(), "already a string");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        assert_eq!(bails(3).unwrap(), 3);
+        assert!(bails(0).unwrap_err().to_string().contains("nonzero"));
+    }
+}
