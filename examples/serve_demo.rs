@@ -10,6 +10,7 @@
 
 use llmzip::compress::{LlmCompressor, LlmCompressorConfig};
 use llmzip::coordinator::{BatchPolicy, Server, ServerConfig};
+use llmzip::lm::weights::Weights;
 use llmzip::lm::ExecutorKind;
 use llmzip::util::stats::percentile;
 use std::sync::{Arc, Mutex};
@@ -19,29 +20,37 @@ fn main() -> llmzip::Result<()> {
     let native = std::env::args().any(|a| a == "native");
     let executor = if native { ExecutorKind::Native } else { ExecutorKind::PjrtForward };
     let model = "medium";
-    println!("starting server (model={model}, executor={executor:?})...");
+    // Native path runs two engine replicas off ONE shared copy of the
+    // weights (loaded here, cloned as an Arc into each worker).
+    let replicas = if native { 2 } else { 1 };
+    let shared: Option<Arc<Weights>> = if native {
+        let cfg = llmzip::lm::config::by_name(model)?;
+        let store = llmzip::runtime::ArtifactStore::open(None)?;
+        Some(Arc::new(store.weights(cfg)?))
+    } else {
+        None
+    };
+    println!("starting server (model={model}, executor={executor:?}, replicas={replicas})...");
     let server = Arc::new(Server::start(
         move || {
-            if native {
+            let comp_cfg = LlmCompressorConfig {
+                model: model.into(),
+                chunk_tokens: 256,
+                stream_bytes: 4096,
+                executor,
+                ..Default::default()
+            };
+            if let Some(weights) = &shared {
                 let cfg = llmzip::lm::config::by_name(model)?;
-                let store = llmzip::runtime::ArtifactStore::open(None)?;
-                LlmCompressor::from_weights(cfg, store.weights(cfg)?, 256, 8)
+                LlmCompressor::from_shared(cfg, weights.clone(), comp_cfg)
             } else {
                 let store = llmzip::runtime::ArtifactStore::open(None)?;
-                LlmCompressor::open(
-                    &store,
-                    LlmCompressorConfig {
-                        model: model.into(),
-                        chunk_tokens: 256,
-                        stream_bytes: 4096,
-                        executor,
-                        ..Default::default()
-                    },
-                )
+                LlmCompressor::open(&store, comp_cfg)
             }
         },
         ServerConfig {
             chunk_tokens: 256,
+            replicas,
             policy: BatchPolicy { lanes: 8, max_wait: Duration::from_millis(15) },
             ..Default::default()
         },

@@ -7,7 +7,9 @@ mod harness;
 
 use harness::{bench, section};
 use llmzip::compress::LlmCompressor;
-use llmzip::coordinator::{BatchPolicy, DynamicBatcher, Server, ServerConfig, WorkItem, WorkKind};
+use llmzip::coordinator::{
+    BatchPolicy, DynamicBatcher, Priority, Server, ServerConfig, WorkItem, WorkKind,
+};
 use llmzip::lm::config::by_name;
 use llmzip::lm::weights::Weights;
 use llmzip::util::stats::percentile;
@@ -28,6 +30,7 @@ fn main() {
                 request_id: i,
                 chunk_index: 0,
                 kind: WorkKind::Compress,
+                priority: if i % 4 == 0 { Priority::Interactive } else { Priority::Bulk },
                 data: Vec::new(),
                 record: None,
                 enqueued: now,

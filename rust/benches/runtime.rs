@@ -1,24 +1,31 @@
 //! Runtime benchmarks.
 //!
-//! Two tiers:
+//! Three tiers:
 //!
 //! 1. **Native engine (always runs, no artifacts needed)** — tokens/sec of
 //!    the batched resolved-plan engine vs. the frozen seed implementation
-//!    (`llmzip::lm::reference`), single-threaded and multi-threaded, plus
-//!    the bulk-encode path, per model size. Results are written as
-//!    machine-readable JSON to `BENCH_runtime.json` (override the path
-//!    with `LLMZIP_BENCH_JSON`) so the bench trajectory is diffable across
-//!    PRs.
-//! 2. **PJRT runtime (requires `make artifacts`)** — forward/step call
+//!    (`llmzip::lm::reference`), single-threaded and multi-threaded (the
+//!    persistent worker pool), plus the bulk-encode path, per model size.
+//! 2. **Coordinator replica scaling (always runs)** — end-to-end server
+//!    tokens/sec with 1 vs N engine replicas sharing one `Arc<Weights>`,
+//!    under concurrent client load.
+//! 3. **PJRT runtime (requires `make artifacts`)** — forward/step call
 //!    latency, in-graph generation, compressor throughput per executor,
 //!    and the figure regenerations. Skipped with a message when artifacts
 //!    (or the real xla crate) are absent.
+//!
+//! Results are written as machine-readable JSON to `BENCH_runtime.json`
+//! (override the path with `LLMZIP_BENCH_JSON`) so the bench trajectory is
+//! diffable across PRs. Set `LLMZIP_BENCH_SMOKE=1` (CI does) to shrink
+//! budgets and model coverage to a seconds-long smoke run that still
+//! exercises every measured path and emits the full JSON schema.
 
 #[path = "harness.rs"]
 mod harness;
 
 use harness::{bench, section};
 use llmzip::compress::{Compressor, LlmCompressor, LlmCompressorConfig};
+use llmzip::coordinator::{BatchPolicy, Server, ServerConfig};
 use llmzip::experiments::{self, DatasetCache};
 use llmzip::lm::config::{self, by_name, VOCAB};
 use llmzip::lm::executor::LmExecutor;
@@ -28,14 +35,27 @@ use llmzip::lm::weights::Weights;
 use llmzip::lm::ExecutorKind;
 use llmzip::runtime::{ArtifactStore, PjrtForwardExecutor, PjrtGenerator, PjrtStepExecutor};
 use llmzip::tokenizer::vocab::BOS;
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Engine lanes for the native comparison (the PJRT forward batch width).
 const LANES: usize = 8;
 /// Positions per window (context resets per window, like the compressor).
 const WINDOW: usize = 64;
+
+/// CI smoke mode: tiny budgets, reduced model coverage, same JSON schema.
+fn smoke() -> bool {
+    std::env::var("LLMZIP_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
 /// Measurement budget per data point, seconds.
-const BUDGET_S: f64 = 1.0;
+fn budget_s() -> f64 {
+    if smoke() {
+        0.05
+    } else {
+        1.0
+    }
+}
 
 struct NativeRow {
     model: &'static str,
@@ -47,12 +67,13 @@ struct NativeRow {
 }
 
 /// Run `step` (one full window = `LANES * WINDOW` tokens) repeatedly for
-/// ~`BUDGET_S` seconds after a warmup pass; returns tokens/sec.
+/// ~`budget_s()` seconds after a warmup pass; returns tokens/sec.
 fn measure_tps<F: FnMut()>(mut step: F) -> f64 {
     step(); // warmup
+    let budget = budget_s();
     let t0 = Instant::now();
     let mut iters = 0usize;
-    while t0.elapsed().as_secs_f64() < BUDGET_S {
+    while t0.elapsed().as_secs_f64() < budget {
         step();
         iters += 1;
     }
@@ -70,7 +91,9 @@ fn native_engine_benches() -> Vec<NativeRow> {
         "MODEL", "seed t/s", "batched-1t", "batched-mt", "bulk t/s", "x1t", "xmt"
     );
     let mut rows = Vec::new();
-    for name in ["nano", "small", "medium", "large"] {
+    let models: &[&'static str] =
+        if smoke() { &["nano", "small"] } else { &["nano", "small", "medium", "large"] };
+    for &name in models {
         let cfg = by_name(name).unwrap();
         let weights = Weights::random(cfg, 17);
         let toks: Vec<u32> = std::iter::once(BOS)
@@ -144,8 +167,95 @@ fn native_engine_benches() -> Vec<NativeRow> {
     rows
 }
 
+struct ReplicaPoint {
+    replicas: usize,
+    tokens_per_sec: f64,
+    decompress_p99_ms: f64,
+}
+
+/// End-to-end coordinator throughput at 1 vs N engine replicas, all
+/// replicas sharing ONE `Arc<Weights>`. Concurrent clients keep every
+/// replica busy; tokens/sec counts both passes (compress + decompress),
+/// exactly like `Metrics::record_engine`.
+fn replica_scaling_bench() -> Vec<ReplicaPoint> {
+    let cfg = by_name("nano").unwrap();
+    let weights = Arc::new(Weights::random(cfg, 17));
+    let n_clients = 8usize;
+    let reqs_per_client = if smoke() { 1usize } else { 4 };
+    let payload_bytes = if smoke() { 1024usize } else { 4096 };
+    let replica_counts: &[usize] = if smoke() { &[1, 2] } else { &[1, 2, 4] };
+    section(&format!(
+        "coordinator replica scaling (nano, shared weights, {n_clients} clients)"
+    ));
+    let mut points = Vec::new();
+    for &replicas in replica_counts {
+        let w = weights.clone();
+        let server = Arc::new(
+            Server::start(
+                move || {
+                    LlmCompressor::from_shared(
+                        by_name("nano").unwrap(),
+                        w.clone(),
+                        LlmCompressorConfig {
+                            model: "nano".into(),
+                            chunk_tokens: 128,
+                            stream_bytes: 512,
+                            executor: ExecutorKind::Native,
+                            lanes: 4,
+                            threads: 1,
+                        },
+                    )
+                },
+                ServerConfig {
+                    chunk_tokens: 128,
+                    replicas,
+                    policy: BatchPolicy { lanes: 4, max_wait: Duration::from_millis(2) },
+                    ..Default::default()
+                },
+            )
+            .expect("replica server"),
+        );
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..n_clients)
+            .map(|c| {
+                let srv = server.clone();
+                std::thread::spawn(move || {
+                    let data = llmzip::textgen::quick_sample(payload_bytes, c as u64);
+                    for _ in 0..reqs_per_client {
+                        let z = srv.compress(&data).unwrap();
+                        assert_eq!(srv.decompress(&z).unwrap(), data);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        // Both passes touch every byte once.
+        let total_tokens = 2 * payload_bytes * n_clients * reqs_per_client;
+        let tps = total_tokens as f64 / wall;
+        let p99 = server
+            .metrics
+            .latency_percentile_ms(llmzip::coordinator::WorkKind::Decompress, 0.99);
+        println!(
+            "replicas={replicas:<2} {tps:>12.0} tok/s  decompress_p99={p99:>8.1} ms  \
+             (wall {wall:.2}s)"
+        );
+        points.push(ReplicaPoint { replicas, tokens_per_sec: tps, decompress_p99_ms: p99 });
+    }
+    if let (Some(one), Some(last)) = (points.first(), points.last()) {
+        println!(
+            "scaling: {:.2}x at {} replicas",
+            last.tokens_per_sec / one.tokens_per_sec.max(1e-9),
+            last.replicas
+        );
+    }
+    points
+}
+
 /// Hand-rolled JSON (no serde in this offline crate set).
-fn write_bench_json(rows: &[NativeRow]) {
+fn write_bench_json(rows: &[NativeRow], replica_points: &[ReplicaPoint]) {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"runtime\",\n");
@@ -171,7 +281,21 @@ fn write_bench_json(rows: &[NativeRow]) {
             if i + 1 < rows.len() { "," } else { "" },
         ));
     }
-    s.push_str("  ]\n}\n");
+    s.push_str("  ],\n");
+    s.push_str("  \"replica_scaling\": {\n");
+    s.push_str("    \"model\": \"nano\", \"clients\": 8, \"unit\": \"tokens_per_sec\",\n");
+    s.push_str("    \"points\": [\n");
+    for (i, p) in replica_points.iter().enumerate() {
+        s.push_str(&format!(
+            "      {{\"replicas\": {}, \"tokens_per_sec\": {:.1}, \
+             \"decompress_p99_ms\": {:.3}}}{}\n",
+            p.replicas,
+            p.tokens_per_sec,
+            p.decompress_p99_ms,
+            if i + 1 < replica_points.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("    ]\n  }\n}\n");
     let path =
         std::env::var("LLMZIP_BENCH_JSON").unwrap_or_else(|_| "BENCH_runtime.json".to_string());
     match std::fs::write(&path, &s) {
@@ -271,6 +395,11 @@ fn pjrt_benches() {
 
 fn main() {
     let rows = native_engine_benches();
-    write_bench_json(&rows);
+    let replica_points = replica_scaling_bench();
+    write_bench_json(&rows, &replica_points);
+    if smoke() {
+        println!("\nSKIP PJRT runtime bench: smoke mode");
+        return;
+    }
     pjrt_benches();
 }

@@ -8,6 +8,7 @@
 use crate::cli::Args;
 use llmzip::compress::{LlmCompressor, LlmCompressorConfig};
 use llmzip::coordinator::{BatchPolicy, Server, ServerConfig};
+use llmzip::lm::ExecutorKind;
 use llmzip::Result;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -26,26 +27,41 @@ pub fn serve(args: &[String]) -> Result<()> {
     // batch their HLO was lowered with). Threads default to the machine.
     let lanes = args.usize_or("lanes", 8)?;
     let threads = args.usize_or("threads", super::default_threads())?;
+    // Engine replicas: parallel engine workers in the coordinator. Native
+    // replicas share one Arc<Weights> (loaded once, below); PJRT replicas
+    // each open their own thread-affine handles.
+    let replicas = args.usize_or("replicas", 1)?;
 
-    let server = Server::start(
-        move || {
+    let comp_cfg = LlmCompressorConfig {
+        model: model.clone(),
+        chunk_tokens: chunk,
+        stream_bytes: 4096.max(chunk),
+        executor,
+        lanes,
+        threads,
+    };
+    let factory: Box<dyn Fn() -> Result<LlmCompressor> + Send + Sync> =
+        if executor == ExecutorKind::Native {
+            // Load the weights ONCE; every replica clones the Arc.
+            let model_cfg = llmzip::lm::config::by_name(&model)?;
             let store = llmzip::runtime::ArtifactStore::open(artifacts.as_deref())?;
-            LlmCompressor::open(
-                &store,
-                LlmCompressorConfig {
-                    model,
-                    chunk_tokens: chunk,
-                    stream_bytes: 4096.max(chunk),
-                    executor,
-                    lanes,
-                    threads,
-                },
-            )
-        },
+            let weights = Arc::new(store.weights(model_cfg)?);
+            Box::new(move || {
+                LlmCompressor::from_shared(model_cfg, weights.clone(), comp_cfg.clone())
+            })
+        } else {
+            Box::new(move || {
+                let store = llmzip::runtime::ArtifactStore::open(artifacts.as_deref())?;
+                LlmCompressor::open(&store, comp_cfg.clone())
+            })
+        };
+    let server = Server::start(
+        factory,
         ServerConfig {
             chunk_tokens: chunk,
             lanes,
             threads,
+            replicas,
             policy: BatchPolicy {
                 lanes,
                 max_wait: Duration::from_millis(max_wait_ms),
@@ -55,7 +71,10 @@ pub fn serve(args: &[String]) -> Result<()> {
     let server = Arc::new(server);
 
     let listener = TcpListener::bind(("127.0.0.1", port as u16))?;
-    println!("llmzip serving on 127.0.0.1:{port} (chunk={chunk}, lanes={lanes}, threads={threads})");
+    println!(
+        "llmzip serving on 127.0.0.1:{port} \
+         (chunk={chunk}, lanes={lanes}, threads={threads}, replicas={replicas})"
+    );
     loop {
         let (stream, peer) = listener.accept()?;
         let srv = server.clone();

@@ -43,6 +43,7 @@ use crate::tokenizer::vocab::{BOS, PAD};
 use crate::util::crc32;
 use crate::Result;
 use std::cell::RefCell;
+use std::sync::Arc;
 
 const VOCAB: usize = config::VOCAB;
 /// Quantization total for the token CDF (fits the range coder's MAX_TOTAL).
@@ -112,8 +113,9 @@ pub struct LlmCompressorConfig {
     /// Native engine lane count (batch width). PJRT engines use the batch
     /// their HLO artifact was lowered with and ignore this.
     pub lanes: usize,
-    /// Native engine worker threads; lanes are partitioned across threads
-    /// per step (bit-exact for any value). PJRT engines ignore this.
+    /// Native engine worker threads; lanes are partitioned across a
+    /// persistent worker pool (bit-exact for any value). PJRT engines
+    /// ignore this.
     pub threads: usize,
 }
 
@@ -152,23 +154,51 @@ impl LlmCompressor {
                 Box::new(PjrtForwardExecutor::from_store(store, model_cfg)?)
             }
             ExecutorKind::PjrtStep => Box::new(PjrtStepExecutor::from_store(store, model_cfg)?),
+            // One construction path for native engines: the store path is
+            // just the replica path with a freshly loaded bundle, so the
+            // head-rows/threads/validation logic cannot drift between them.
             ExecutorKind::Native => {
                 let weights = store.weights(model_cfg)?;
-                Box::new(
-                    NativeExecutor::new(model_cfg, weights, cfg.lanes.max(1))
-                        .with_threads(cfg.threads.max(1))
-                        .with_head_rows(config::CODED_BYTES),
-                )
+                return Self::from_shared(model_cfg, Arc::new(weights), cfg);
             }
         };
         Ok(LlmCompressor { cfg, model_cfg, engine: RefCell::new(engine) })
     }
 
+    /// Build a native-engine compressor from an explicit config and an
+    /// already-shared weight bundle — the coordinator's replica path:
+    /// every replica clones the same `Arc<Weights>`, so N replicas cost
+    /// one copy of the tensors plus per-replica KV/scratch memory.
+    pub fn from_shared(
+        model_cfg: &'static LmConfig,
+        weights: Arc<Weights>,
+        cfg: LlmCompressorConfig,
+    ) -> Result<LlmCompressor> {
+        if cfg.executor != ExecutorKind::Native {
+            anyhow::bail!("from_shared builds native engines only, got {:?}", cfg.executor);
+        }
+        if cfg.chunk_tokens == 0 || cfg.chunk_tokens > config::MAX_CONTEXT {
+            anyhow::bail!("chunk_tokens must be in 1..={}", config::MAX_CONTEXT);
+        }
+        if cfg.stream_bytes < cfg.chunk_tokens {
+            anyhow::bail!("stream_bytes must be >= chunk_tokens");
+        }
+        // The tag recorded in containers must name the engine actually
+        // built, whatever the caller left in `cfg.model`.
+        let mut cfg = cfg;
+        cfg.model = model_cfg.name.into();
+        let engine = NativeExecutor::new(model_cfg, weights, cfg.lanes.max(1))
+            .with_threads(cfg.threads.max(1))
+            .with_head_rows(config::CODED_BYTES);
+        Ok(LlmCompressor { cfg, model_cfg, engine: RefCell::new(Box::new(engine)) })
+    }
+
     /// Build directly from weights with the native engine (no artifacts/PJRT
-    /// required — used by tests and the fallback path).
+    /// required — used by tests and the fallback path). Accepts an owned
+    /// `Weights` or an `Arc<Weights>` shared with other replicas.
     pub fn from_weights(
         model_cfg: &'static LmConfig,
-        weights: Weights,
+        weights: impl Into<Arc<Weights>>,
         chunk_tokens: usize,
         lanes: usize,
     ) -> Result<LlmCompressor> {
@@ -530,6 +560,34 @@ mod tests {
         assert_eq!(z1, z2, "containers must not depend on the thread count");
         assert_eq!(threaded.decompress(&z1).unwrap(), data);
         assert_eq!(single.decompress(&z2).unwrap(), data);
+    }
+
+    #[test]
+    fn shared_weight_replicas_emit_identical_containers() {
+        // Two replicas over ONE Arc<Weights> (the coordinator's replica
+        // path) and an owned-weights compressor all produce the same bytes
+        // and cross-decode.
+        let cfg = by_name("nano").unwrap();
+        let shared = Arc::new(Weights::random(cfg, 7));
+        let replica_cfg = LlmCompressorConfig {
+            model: cfg.name.into(),
+            chunk_tokens: 32,
+            stream_bytes: 128,
+            executor: ExecutorKind::Native,
+            lanes: 2,
+            threads: 2,
+        };
+        let a = LlmCompressor::from_shared(cfg, shared.clone(), replica_cfg.clone()).unwrap();
+        let b = LlmCompressor::from_shared(cfg, shared.clone(), replica_cfg).unwrap();
+        let owned = native_compressor(32);
+        let data = crate::textgen::quick_sample(300, 8);
+        let za = a.compress(&data).unwrap();
+        assert_eq!(za, b.compress(&data).unwrap());
+        assert_eq!(za, owned.compress(&data).unwrap());
+        assert_eq!(b.decompress(&za).unwrap(), data);
+        // PJRT configs are rejected: sharing host weights cannot build one.
+        let pjrt = LlmCompressorConfig { executor: ExecutorKind::PjrtStep, ..Default::default() };
+        assert!(LlmCompressor::from_shared(cfg, shared, pjrt).is_err());
     }
 
     #[test]

@@ -1,20 +1,42 @@
-//! Chunk-level dynamic batcher.
+//! Chunk-level dynamic batcher with priority-aware admission.
 //!
-//! Work items (one per chunk) accumulate in a queue; a batch is released
-//! when either `lanes` items are waiting (full batch) or the oldest item
-//! has waited `max_wait` (deadline flush). This is the standard
-//! continuous-batching admission policy of LLM serving systems, applied to
-//! compression chunks.
+//! Work items (one per chunk) accumulate in per-kind queues; a batch is
+//! released when either `lanes` items are waiting (full batch) or the
+//! oldest item has waited `max_wait` (deadline flush). This is the
+//! standard continuous-batching admission policy of LLM serving systems,
+//! applied to compression chunks, with two scheduling refinements:
+//!
+//! * **Decompress fast lane** — when both kinds have a releasable batch,
+//!   decompress wins: interactive reads never sit behind bulk compress
+//!   jobs (the queues cannot share an engine pass anyway). A starvation
+//!   bound keeps the lane from being absolute: once compress's oldest
+//!   item has waited [`DynamicBatcher::starvation_bound`], compress goes
+//!   first regardless, so sustained decompress load cannot block
+//!   compress forever.
+//! * **Per-item priority** — within a kind, [`Priority::Interactive`]
+//!   items drain ahead of [`Priority::Bulk`] items, FIFO inside each
+//!   class, so a latency-sensitive compress request can overtake a bulk
+//!   ingest job without a separate queueing tier.
 
 use crate::compress::container::ChunkRecord;
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 /// What kind of engine pass a work item needs.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum WorkKind {
     Compress,
     Decompress,
+}
+
+/// Scheduling class of a work item within its kind queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// Latency-sensitive: drains ahead of every queued [`Priority::Bulk`]
+    /// item of the same kind. Decompress requests default to this.
+    Interactive,
+    /// Throughput work: compress requests default to this.
+    Bulk,
 }
 
 /// One chunk of one request.
@@ -23,6 +45,7 @@ pub struct WorkItem {
     pub request_id: u64,
     pub chunk_index: u32,
     pub kind: WorkKind,
+    pub priority: Priority,
     /// Compress: raw bytes. Decompress: compressed payload.
     pub data: Vec<u8>,
     /// Decompress only: the chunk record (token count).
@@ -45,17 +68,69 @@ impl Default for BatchPolicy {
     }
 }
 
-/// The batcher: two queues (compress/decompress passes cannot share an
-/// engine batch), FIFO within each.
+/// One kind's queue: two FIFO classes, interactive drained first.
+#[derive(Default)]
+struct KindQueue {
+    interactive: VecDeque<WorkItem>,
+    bulk: VecDeque<WorkItem>,
+}
+
+impl KindQueue {
+    fn len(&self) -> usize {
+        self.interactive.len() + self.bulk.len()
+    }
+
+    /// Enqueue time of the oldest item across both classes.
+    fn oldest(&self) -> Option<Instant> {
+        match (self.interactive.front(), self.bulk.front()) {
+            (Some(a), Some(b)) => Some(a.enqueued.min(b.enqueued)),
+            (a, b) => a.or(b).map(|i| i.enqueued),
+        }
+    }
+
+    fn push(&mut self, item: WorkItem) {
+        match item.priority {
+            Priority::Interactive => self.interactive.push_back(item),
+            Priority::Bulk => self.bulk.push_back(item),
+        }
+    }
+
+    /// Pop up to `n` items, interactive class first — unless bulk's oldest
+    /// item has aged past `starve_after`, in which case bulk drains first
+    /// this batch so a sustained interactive flood cannot starve it.
+    fn pop_batch(&mut self, n: usize, now: Instant, starve_after: Duration) -> Vec<WorkItem> {
+        let bulk_starving = self
+            .bulk
+            .front()
+            .is_some_and(|i| now.duration_since(i.enqueued) >= starve_after);
+        let (first, second) = if bulk_starving {
+            (&mut self.bulk, &mut self.interactive)
+        } else {
+            (&mut self.interactive, &mut self.bulk)
+        };
+        let hi = first.len().min(n);
+        let mut batch: Vec<WorkItem> = first.drain(..hi).collect();
+        let lo = second.len().min(n - hi);
+        batch.extend(second.drain(..lo));
+        batch
+    }
+}
+
+/// The batcher: two kind queues (compress/decompress passes cannot share
+/// an engine batch), each split into interactive/bulk priority classes.
 pub struct DynamicBatcher {
     policy: BatchPolicy,
-    compress_q: VecDeque<WorkItem>,
-    decompress_q: VecDeque<WorkItem>,
+    compress_q: KindQueue,
+    decompress_q: KindQueue,
 }
 
 impl DynamicBatcher {
     pub fn new(policy: BatchPolicy) -> Self {
-        DynamicBatcher { policy, compress_q: VecDeque::new(), decompress_q: VecDeque::new() }
+        DynamicBatcher {
+            policy,
+            compress_q: KindQueue::default(),
+            decompress_q: KindQueue::default(),
+        }
     }
 
     pub fn policy(&self) -> BatchPolicy {
@@ -64,8 +139,8 @@ impl DynamicBatcher {
 
     pub fn push(&mut self, item: WorkItem) {
         match item.kind {
-            WorkKind::Compress => self.compress_q.push_back(item),
-            WorkKind::Decompress => self.decompress_q.push_back(item),
+            WorkKind::Compress => self.compress_q.push(item),
+            WorkKind::Decompress => self.decompress_q.push(item),
         }
     }
 
@@ -73,38 +148,42 @@ impl DynamicBatcher {
         self.compress_q.len() + self.decompress_q.len()
     }
 
-    /// Pop the next batch if the policy releases one at time `now`.
-    /// Longest-waiting queue wins ties so neither op starves.
-    pub fn next_batch(&mut self, now: Instant) -> Option<(WorkKind, Vec<WorkItem>)> {
-        let ready = |q: &VecDeque<WorkItem>, lanes: usize, max_wait: Duration| -> bool {
-            q.len() >= lanes
-                || q.front().is_some_and(|i| now.duration_since(i.enqueued) >= max_wait)
-        };
-        let c_ready = ready(&self.compress_q, self.policy.lanes, self.policy.max_wait);
-        let d_ready = ready(&self.decompress_q, self.policy.lanes, self.policy.max_wait);
-        let pick_compress = match (c_ready, d_ready) {
-            (false, false) => return None,
-            (true, false) => true,
-            (false, true) => false,
-            (true, true) => {
-                let c_age = self.compress_q.front().map(|i| i.enqueued);
-                let d_age = self.decompress_q.front().map(|i| i.enqueued);
-                c_age <= d_age
-            }
-        };
-        let (q, kind) = if pick_compress {
-            (&mut self.compress_q, WorkKind::Compress)
-        } else {
-            (&mut self.decompress_q, WorkKind::Decompress)
-        };
-        let n = q.len().min(self.policy.lanes);
-        Some((kind, q.drain(..n).collect()))
+    /// How long a compress item may wait before it overrides the
+    /// decompress fast lane (anti-starvation bound).
+    pub fn starvation_bound(&self) -> Duration {
+        (self.policy.max_wait * 8).max(Duration::from_millis(50))
     }
 
-    /// Earliest deadline among queued items (for the worker's sleep).
+    /// Pop the next batch if the policy releases one at time `now`. The
+    /// decompress queue is the fast lane: when both kinds are releasable,
+    /// decompress goes first — unless compress's oldest item has aged
+    /// past [`Self::starvation_bound`], which forces a compress batch so
+    /// sustained decompress load cannot starve compress indefinitely.
+    pub fn next_batch(&mut self, now: Instant) -> Option<(WorkKind, Vec<WorkItem>)> {
+        let (lanes, max_wait) = (self.policy.lanes, self.policy.max_wait);
+        let ready = |q: &KindQueue| -> bool {
+            q.len() >= lanes || q.oldest().is_some_and(|t| now.duration_since(t) >= max_wait)
+        };
+        let starve_after = self.starvation_bound();
+        let compress_starving =
+            self.compress_q.oldest().is_some_and(|t| now.duration_since(t) >= starve_after);
+        let (q, kind) = if ready(&self.decompress_q) && !compress_starving {
+            (&mut self.decompress_q, WorkKind::Decompress)
+        } else if ready(&self.compress_q) {
+            (&mut self.compress_q, WorkKind::Compress)
+        } else if ready(&self.decompress_q) {
+            (&mut self.decompress_q, WorkKind::Decompress)
+        } else {
+            return None;
+        };
+        let n = q.len().min(lanes);
+        Some((kind, q.pop_batch(n, now, starve_after)))
+    }
+
+    /// Earliest deadline among queued items (for the scheduler's sleep).
     pub fn next_deadline(&self) -> Option<Instant> {
-        let c = self.compress_q.front().map(|i| i.enqueued + self.policy.max_wait);
-        let d = self.decompress_q.front().map(|i| i.enqueued + self.policy.max_wait);
+        let c = self.compress_q.oldest().map(|t| t + self.policy.max_wait);
+        let d = self.decompress_q.oldest().map(|t| t + self.policy.max_wait);
         match (c, d) {
             (Some(a), Some(b)) => Some(a.min(b)),
             (a, b) => a.or(b),
@@ -121,6 +200,7 @@ mod tests {
             request_id: id,
             chunk_index: 0,
             kind,
+            priority: Priority::Bulk,
             data: vec![1, 2, 3],
             record: None,
             enqueued: at,
@@ -166,13 +246,64 @@ mod tests {
     }
 
     #[test]
-    fn oldest_queue_wins() {
+    fn decompress_fast_lane_wins_even_when_younger() {
         let mut b = DynamicBatcher::new(BatchPolicy { lanes: 8, max_wait: Duration::ZERO });
         let t0 = Instant::now();
-        b.push(item(1, WorkKind::Decompress, t0));
-        b.push(item(2, WorkKind::Compress, t0 + Duration::from_millis(5)));
+        b.push(item(1, WorkKind::Compress, t0));
+        b.push(item(2, WorkKind::Decompress, t0 + Duration::from_millis(5)));
         let (kind, _) = b.next_batch(t0 + Duration::from_millis(10)).unwrap();
-        assert_eq!(kind, WorkKind::Decompress, "older item first");
+        assert_eq!(kind, WorkKind::Decompress, "decompress is the fast lane");
+        let (kind, _) = b.next_batch(t0 + Duration::from_millis(10)).unwrap();
+        assert_eq!(kind, WorkKind::Compress);
+    }
+
+    #[test]
+    fn starving_compress_overrides_fast_lane() {
+        // Decompress arrives continuously, but once compress's oldest item
+        // ages past the starvation bound it must be scheduled anyway.
+        let mut b = DynamicBatcher::new(BatchPolicy { lanes: 8, max_wait: Duration::ZERO });
+        let t0 = Instant::now();
+        b.push(item(1, WorkKind::Compress, t0));
+        b.push(item(2, WorkKind::Decompress, t0 + Duration::from_millis(1)));
+        let starved = t0 + b.starvation_bound() + Duration::from_millis(1);
+        let (kind, _) = b.next_batch(starved).unwrap();
+        assert_eq!(kind, WorkKind::Compress, "aged compress beats the fast lane");
+        let (kind, _) = b.next_batch(starved).unwrap();
+        assert_eq!(kind, WorkKind::Decompress);
+    }
+
+    #[test]
+    fn interactive_overtakes_bulk_within_kind() {
+        let mut b = DynamicBatcher::new(BatchPolicy { lanes: 2, max_wait: Duration::ZERO });
+        let t0 = Instant::now();
+        for i in 0..3 {
+            b.push(item(i, WorkKind::Compress, t0));
+        }
+        let mut hot = item(9, WorkKind::Compress, t0 + Duration::from_millis(1));
+        hot.priority = Priority::Interactive;
+        b.push(hot);
+        let (_, batch) = b.next_batch(t0 + Duration::from_millis(2)).unwrap();
+        // Interactive item jumps the three queued bulk items.
+        assert_eq!(batch.iter().map(|i| i.request_id).collect::<Vec<_>>(), vec![9, 0]);
+        let (_, batch) = b.next_batch(t0 + Duration::from_millis(2)).unwrap();
+        assert_eq!(batch.iter().map(|i| i.request_id).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn starving_bulk_overrides_interactive_class() {
+        // A bulk item older than the starvation bound drains before fresh
+        // interactive arrivals of the same kind.
+        let mut b = DynamicBatcher::new(BatchPolicy { lanes: 1, max_wait: Duration::ZERO });
+        let t0 = Instant::now();
+        b.push(item(1, WorkKind::Compress, t0));
+        let starved = t0 + b.starvation_bound() + Duration::from_millis(1);
+        let mut hot = item(9, WorkKind::Compress, starved);
+        hot.priority = Priority::Interactive;
+        b.push(hot);
+        let (_, batch) = b.next_batch(starved).unwrap();
+        assert_eq!(batch[0].request_id, 1, "aged bulk item goes first");
+        let (_, batch) = b.next_batch(starved).unwrap();
+        assert_eq!(batch[0].request_id, 9);
     }
 
     #[test]
@@ -190,7 +321,7 @@ mod tests {
     #[test]
     fn randomized_never_exceeds_lanes_and_preserves_order() {
         // Hand-rolled property test: any arrival pattern yields batches that
-        // respect the lane cap and per-request FIFO order.
+        // respect the lane cap and per-class FIFO order.
         let mut rng = crate::util::Pcg64::seeded(42);
         for _ in 0..50 {
             let lanes = 1 + rng.gen_index(8);
@@ -205,22 +336,26 @@ mod tests {
                     if rng.gen_bool(0.5) { WorkKind::Compress } else { WorkKind::Decompress };
                 let mut it = item(1, kind, t0 + Duration::from_micros(i as u64));
                 it.chunk_index = i as u32;
+                if rng.gen_bool(0.3) {
+                    it.priority = Priority::Interactive;
+                }
                 b.push(it);
             }
-            let mut seen_c = Vec::new();
-            let mut seen_d = Vec::new();
+            let mut seen: std::collections::HashMap<(WorkKind, Priority), Vec<u32>> =
+                std::collections::HashMap::new();
             let late = t0 + Duration::from_secs(1);
+            let mut popped = 0usize;
             while let Some((kind, batch)) = b.next_batch(late) {
                 assert!(batch.len() <= lanes);
+                popped += batch.len();
                 for it in batch {
-                    match kind {
-                        WorkKind::Compress => seen_c.push(it.chunk_index),
-                        WorkKind::Decompress => seen_d.push(it.chunk_index),
-                    }
+                    seen.entry((kind, it.priority)).or_default().push(it.chunk_index);
                 }
             }
-            assert!(seen_c.windows(2).all(|w| w[0] < w[1]), "compress FIFO");
-            assert!(seen_d.windows(2).all(|w| w[0] < w[1]), "decompress FIFO");
+            for order in seen.values() {
+                assert!(order.windows(2).all(|w| w[0] < w[1]), "FIFO within kind+class");
+            }
+            assert_eq!(popped, n);
             assert_eq!(b.pending(), 0);
         }
     }

@@ -1,9 +1,62 @@
-//! Service metrics: counters + latency/occupancy summaries.
+//! Service metrics: counters, latency/occupancy summaries, per-op latency
+//! percentiles (p50/p99) and per-engine-worker occupancy/queue-depth.
 
-use crate::util::stats::Summary;
+use crate::coordinator::batcher::WorkKind;
+use crate::util::stats::{percentile, Summary};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// Cap on retained latency samples (bounds memory on long-lived servers;
+/// ~800 KiB per op kind at the cap).
+const MAX_LATENCY_SAMPLES: usize = 100_000;
+
+/// Bounded latency sample store: a ring once the cap is reached, so
+/// percentiles always reflect the most recent `MAX_LATENCY_SAMPLES`
+/// requests instead of freezing on warmup-era samples.
+#[derive(Default)]
+struct LatencyStore {
+    samples: Vec<f64>,
+    /// Total samples ever recorded (also the ring write cursor).
+    total: u64,
+}
+
+impl LatencyStore {
+    fn push(&mut self, ms: f64) {
+        if self.samples.len() < MAX_LATENCY_SAMPLES {
+            self.samples.push(ms);
+        } else {
+            self.samples[(self.total % MAX_LATENCY_SAMPLES as u64) as usize] = ms;
+        }
+        self.total += 1;
+    }
+}
+
+/// Counters and summaries for ONE engine worker of the replica pool.
+#[derive(Default)]
+pub struct WorkerMetrics {
+    /// Batches dispatched to this worker.
+    pub batches: AtomicU64,
+    /// Work items (chunks) across those batches.
+    pub items: AtomicU64,
+    /// Tokens this worker pushed through its engine replica.
+    pub tokens: AtomicU64,
+    /// Scheduler backlog (queued items) observed at each dispatch to this
+    /// worker — a persistently high mean means the pool is undersized.
+    queue_depth: Mutex<Summary>,
+    /// Lane-fill fraction of this worker's batches.
+    fill: Mutex<Summary>,
+}
+
+impl WorkerMetrics {
+    pub fn mean_queue_depth(&self) -> f64 {
+        self.queue_depth.lock().unwrap().mean()
+    }
+
+    pub fn mean_fill(&self) -> f64 {
+        self.fill.lock().unwrap().mean()
+    }
+}
 
 #[derive(Default)]
 pub struct Metrics {
@@ -12,18 +65,31 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub bytes_in: AtomicU64,
     pub bytes_out: AtomicU64,
-    /// Total tokens pushed through the engine (compress + decompress).
+    /// Total tokens pushed through the engines (compress + decompress).
     pub tokens: AtomicU64,
     pub errors: AtomicU64,
     latency_ms: Mutex<Summary>,
     occupancy: Mutex<Summary>,
     /// Per-batch engine throughput samples (tokens/second).
     tokens_per_sec: Mutex<Summary>,
+    /// Recent per-request latency samples (ms) by op, for percentiles.
+    compress_lat_ms: Mutex<LatencyStore>,
+    decompress_lat_ms: Mutex<LatencyStore>,
+    /// One slot per engine worker (replica); empty on bare `new()`.
+    pub workers: Vec<WorkerMetrics>,
 }
 
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Metrics for a server with `n` engine workers.
+    pub fn with_workers(n: usize) -> Self {
+        Metrics {
+            workers: (0..n).map(|_| WorkerMetrics::default()).collect(),
+            ..Default::default()
+        }
     }
 
     pub fn record_request(&self, bytes_in: usize, bytes_out: usize, latency: Duration) {
@@ -33,11 +99,66 @@ impl Metrics {
         self.latency_ms.lock().unwrap().add(latency.as_secs_f64() * 1e3);
     }
 
+    /// Request completion with its op kind: updates the aggregate counters
+    /// AND the per-op latency histogram behind the p50/p99 accessors.
+    pub fn record_request_op(
+        &self,
+        kind: WorkKind,
+        bytes_in: usize,
+        bytes_out: usize,
+        latency: Duration,
+    ) {
+        self.record_request(bytes_in, bytes_out, latency);
+        self.latency_store(kind).lock().unwrap().push(latency.as_secs_f64() * 1e3);
+    }
+
+    fn latency_store(&self, kind: WorkKind) -> &Mutex<LatencyStore> {
+        match kind {
+            WorkKind::Compress => &self.compress_lat_ms,
+            WorkKind::Decompress => &self.decompress_lat_ms,
+        }
+    }
+
+    /// Latency percentile in ms for one op kind over the most recent
+    /// samples (`q` in [0, 1]; 0 before any request of that kind
+    /// completed).
+    pub fn latency_percentile_ms(&self, kind: WorkKind, q: f64) -> f64 {
+        let mut samples = self.latency_store(kind).lock().unwrap().samples.clone();
+        percentile(&mut samples, q)
+    }
+
+    /// (p50, p99) in ms for one op kind from a single snapshot — one
+    /// clone + sort serves both quantiles (`report()` uses this so it
+    /// doesn't churn the sample window four times).
+    pub fn latency_p50_p99_ms(&self, kind: WorkKind) -> (f64, f64) {
+        let mut samples = self.latency_store(kind).lock().unwrap().samples.clone();
+        let p50 = percentile(&mut samples, 0.5);
+        // Already sorted by the first call; the second sort is a no-op pass.
+        (p50, percentile(&mut samples, 0.99))
+    }
+
+    /// Completed-request count for one op kind (total ever, not capped).
+    pub fn latency_samples(&self, kind: WorkKind) -> usize {
+        self.latency_store(kind).lock().unwrap().total as usize
+    }
+
     /// Per-batch fill: how many of the engine's lanes this batch used.
     pub fn record_batch(&self, items: usize, lanes: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.chunks.fetch_add(items as u64, Ordering::Relaxed);
         self.occupancy.lock().unwrap().add(items as f64 / lanes as f64);
+    }
+
+    /// A batch of `items` was handed to engine worker `worker` while
+    /// `depth` items were still queued in the scheduler.
+    pub fn record_dispatch(&self, worker: usize, items: usize, lanes: usize, depth: usize) {
+        self.record_batch(items, lanes);
+        if let Some(w) = self.workers.get(worker) {
+            w.batches.fetch_add(1, Ordering::Relaxed);
+            w.items.fetch_add(items as u64, Ordering::Relaxed);
+            w.queue_depth.lock().unwrap().add(depth as f64);
+            w.fill.lock().unwrap().add(items as f64 / lanes.max(1) as f64);
+        }
     }
 
     /// Engine-pass throughput: `tokens` processed in `elapsed` wall time.
@@ -49,19 +170,30 @@ impl Metrics {
         }
     }
 
+    /// [`Self::record_engine`] attributed to one engine worker.
+    pub fn record_engine_worker(&self, worker: usize, tokens: usize, elapsed: Duration) {
+        self.record_engine(tokens, elapsed);
+        if let Some(w) = self.workers.get(worker) {
+            w.tokens.fetch_add(tokens as u64, Ordering::Relaxed);
+        }
+    }
+
     pub fn record_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Human-readable snapshot.
     pub fn report(&self) -> String {
+        let (c_p50, c_p99) = self.latency_p50_p99_ms(WorkKind::Compress);
+        let (d_p50, d_p99) = self.latency_p50_p99_ms(WorkKind::Decompress);
         let lat = self.latency_ms.lock().unwrap();
         let occ = self.occupancy.lock().unwrap();
         let tps = self.tokens_per_sec.lock().unwrap();
-        format!(
+        let mut s = format!(
             "requests={} chunks={} batches={} bytes_in={} bytes_out={} tokens={} errors={} \
              latency_ms[mean={:.2} max={:.2}] batch_fill[mean={:.2}] \
-             engine_tok_per_s[mean={:.0} max={:.0}]",
+             engine_tok_per_s[mean={:.0} max={:.0}] \
+             compress_ms[p50={:.2} p99={:.2}] decompress_ms[p50={:.2} p99={:.2}]",
             self.requests.load(Ordering::Relaxed),
             self.chunks.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -75,7 +207,23 @@ impl Metrics {
             tps.mean(),
             // max() is NEG_INFINITY on an empty summary; mean() is 0.
             if tps.count() == 0 { 0.0 } else { tps.max() },
-        )
+            c_p50,
+            c_p99,
+            d_p50,
+            d_p99,
+        );
+        for (i, w) in self.workers.iter().enumerate() {
+            s.push_str(&format!(
+                " worker{}[batches={} items={} tokens={} fill={:.2} qdepth={:.1}]",
+                i,
+                w.batches.load(Ordering::Relaxed),
+                w.items.load(Ordering::Relaxed),
+                w.tokens.load(Ordering::Relaxed),
+                w.mean_fill(),
+                w.mean_queue_depth(),
+            ));
+        }
+        s
     }
 
     pub fn mean_occupancy(&self) -> f64 {
@@ -124,5 +272,63 @@ mod tests {
         m.record_engine(0, Duration::from_millis(10));
         assert!((m.mean_tokens_per_sec() - 3000.0).abs() < 1.0);
         assert!(m.report().contains("tokens=2000"));
+    }
+
+    #[test]
+    fn per_op_latency_percentiles() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_percentile_ms(WorkKind::Decompress, 0.99), 0.0);
+        for i in 1..=100u64 {
+            m.record_request_op(WorkKind::Decompress, 10, 10, Duration::from_millis(i));
+        }
+        m.record_request_op(WorkKind::Compress, 10, 10, Duration::from_millis(500));
+        assert_eq!(m.latency_samples(WorkKind::Decompress), 100);
+        let p50 = m.latency_percentile_ms(WorkKind::Decompress, 0.5);
+        let p99 = m.latency_percentile_ms(WorkKind::Decompress, 0.99);
+        assert!((p50 - 50.5).abs() < 1e-6, "{p50}");
+        assert!((p99 - 99.01).abs() < 1e-6, "{p99}");
+        // Single-snapshot accessor agrees with the per-quantile one.
+        assert_eq!(m.latency_p50_p99_ms(WorkKind::Decompress), (p50, p99));
+        // Kinds are independent histograms.
+        assert!((m.latency_percentile_ms(WorkKind::Compress, 0.5) - 500.0).abs() < 1e-6);
+        // The aggregate request counter sees both.
+        assert_eq!(m.requests.load(Ordering::Relaxed), 101);
+    }
+
+    #[test]
+    fn latency_ring_keeps_recent_samples() {
+        // Past the cap, old samples are overwritten (percentiles track the
+        // recent window) and the total keeps counting.
+        let mut s = LatencyStore::default();
+        for _ in 0..MAX_LATENCY_SAMPLES {
+            s.push(1.0);
+        }
+        for _ in 0..MAX_LATENCY_SAMPLES {
+            s.push(9.0);
+        }
+        assert_eq!(s.total as usize, 2 * MAX_LATENCY_SAMPLES);
+        assert_eq!(s.samples.len(), MAX_LATENCY_SAMPLES);
+        assert!(s.samples.iter().all(|&x| x == 9.0), "window fully refreshed");
+    }
+
+    #[test]
+    fn per_worker_attribution() {
+        let m = Metrics::with_workers(2);
+        m.record_dispatch(0, 4, 8, 12);
+        m.record_dispatch(1, 8, 8, 0);
+        m.record_dispatch(1, 2, 8, 3);
+        m.record_engine_worker(0, 400, Duration::from_millis(10));
+        m.record_engine_worker(1, 600, Duration::from_millis(10));
+        assert_eq!(m.workers[0].batches.load(Ordering::Relaxed), 1);
+        assert_eq!(m.workers[1].batches.load(Ordering::Relaxed), 2);
+        assert_eq!(m.workers[0].tokens.load(Ordering::Relaxed), 400);
+        assert_eq!(m.tokens.load(Ordering::Relaxed), 1000);
+        assert!((m.workers[1].mean_fill() - 0.625).abs() < 1e-12);
+        assert!((m.workers[0].mean_queue_depth() - 12.0).abs() < 1e-12);
+        assert_eq!(m.batches.load(Ordering::Relaxed), 3);
+        // Out-of-range worker ids are ignored, not panicking.
+        m.record_dispatch(9, 1, 8, 0);
+        assert_eq!(m.batches.load(Ordering::Relaxed), 4);
+        assert!(m.report().contains("worker1[batches=2"));
     }
 }

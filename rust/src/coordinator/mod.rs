@@ -1,20 +1,24 @@
-//! L3 coordinator: the batched compression service.
+//! L3 coordinator: the batched compression service over an engine-replica
+//! pool.
 //!
-//! vLLM-router-shaped: requests are split into chunk work items, items from
-//! *concurrent requests* are packed into shared `[lanes]`-wide engine
-//! batches by the [`batcher::DynamicBatcher`] (flush on full-or-deadline),
-//! one worker thread owns the engine (the GPU-analog), and the
-//! [`router`] reassembles per-request results in order. Metrics cover
-//! throughput, batch occupancy and per-request latency.
+//! vLLM-router-shaped: requests are split into chunk work items, items
+//! from *concurrent requests* are packed into shared `[lanes]`-wide engine
+//! batches by the [`batcher::DynamicBatcher`] (flush on full-or-deadline,
+//! decompress fast lane, per-item [`batcher::Priority`]), a scheduler
+//! thread dispatches released batches onto `replicas` persistent engine
+//! workers (each owning a full compressor; native replicas share ONE
+//! `Arc<Weights>`), and the [`router`] reassembles per-request results in
+//! order. Metrics cover throughput, batch occupancy, per-op latency
+//! percentiles (p50/p99) and per-worker queue depth/fill.
 //!
 //! No tokio in this environment: the coordinator is built on std threads +
-//! mpsc channels, which is exactly the right weight for a single-device
-//! executor anyway (one worker saturates the one CPU).
+//! mpsc channels — one scheduler plus one OS thread per engine replica,
+//! which is exactly the right weight for CPU-bound engines.
 
 pub mod batcher;
 pub mod metrics;
 pub mod router;
 
-pub use batcher::{BatchPolicy, DynamicBatcher, WorkItem, WorkKind};
-pub use metrics::Metrics;
+pub use batcher::{BatchPolicy, DynamicBatcher, Priority, WorkItem, WorkKind};
+pub use metrics::{Metrics, WorkerMetrics};
 pub use router::{Server, ServerConfig};

@@ -1,12 +1,32 @@
-//! Request router: intake, chunking, cross-request batching, reassembly.
+//! Request router: intake, chunking, priority scheduling across an
+//! engine-replica pool, and reassembly.
 //!
-//! One worker thread owns the engine (via [`LlmCompressor`]); client
-//! threads submit requests through a channel and block on a per-request
-//! response channel. Chunks from concurrent requests share engine batches.
+//! Architecture (replica-pool refactor):
+//!
+//! * **Clients** submit requests through a channel and block on a
+//!   per-request response channel.
+//! * **One scheduler thread** (`llmzip-sched`) owns intake, the
+//!   [`DynamicBatcher`] (decompress fast lane + per-item priorities),
+//!   per-request reassembly state, and worker dispatch. It never touches
+//!   an engine.
+//! * **`replicas` engine workers** (`llmzip-engine-N`), each owning a full
+//!   [`LlmCompressor`] built *inside its own thread* by the shared factory
+//!   (PJRT handles are thread-affine). Native replicas built from one
+//!   `Arc<Weights>` share a single copy of the tensors. Workers receive at
+//!   most one batch at a time and report completions back on the
+//!   scheduler's own channel, so scheduling stays single-threaded and
+//!   race-free.
+//!
+//! Chunks from concurrent requests share engine batches, and independent
+//! batches run on different replicas in parallel. Containers are
+//! bit-identical for ANY `{replicas, threads, lanes}` configuration:
+//! every chunk is encoded in its own lane with its own range coder, so
+//! batch packing, dispatch order and replica choice cannot leak into the
+//! payload bytes (asserted by `tests/integration_server.rs`).
 
 use crate::compress::container::{ChunkRecord, Container};
 use crate::compress::llm::LlmCompressor;
-use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher, WorkItem, WorkKind};
+use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher, Priority, WorkItem, WorkKind};
 use crate::coordinator::metrics::Metrics;
 use crate::util::crc32;
 use crate::Result;
@@ -24,17 +44,28 @@ pub struct ServerConfig {
     /// (`0` = use the engine's full lane count). The effective width is
     /// always `min(lanes, engine lanes)`.
     pub lanes: usize,
-    /// Native-engine worker threads. The worker cannot rebuild the engine
-    /// (the factory owns construction), so this is the value `cmd/serve`
-    /// wires into `LlmCompressorConfig::threads`; it is recorded here so
-    /// the whole lane/thread configuration travels through one struct.
+    /// Native-engine worker threads per replica. The scheduler cannot
+    /// rebuild engines (the factory owns construction), so this is the
+    /// value `cmd/serve` wires into `LlmCompressorConfig::threads`; it is
+    /// recorded here so the whole replica/lane/thread configuration
+    /// travels through one struct. Total step threads = replicas x this.
     pub threads: usize,
+    /// Engine replicas: parallel engine workers, each running a full
+    /// compressor built by the factory (`0` behaves as `1`). Native
+    /// replicas share one `Arc<Weights>` when the factory clones one.
+    pub replicas: usize,
     pub policy: BatchPolicy,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { chunk_tokens: 256, lanes: 0, threads: 0, policy: BatchPolicy::default() }
+        ServerConfig {
+            chunk_tokens: 256,
+            lanes: 0,
+            threads: 0,
+            replicas: 1,
+            policy: BatchPolicy::default(),
+        }
     }
 }
 
@@ -46,8 +77,44 @@ enum Op {
 struct Request {
     id: u64,
     op: Op,
+    priority: Priority,
     respond: SyncSender<Result<Vec<u8>>>,
     started: Instant,
+}
+
+/// Everything the scheduler hears about: client intake and worker
+/// completions share one channel, so a single `recv` drives both.
+enum ToScheduler {
+    Request(Request),
+    Done(BatchDone),
+}
+
+/// One batch handed to an engine worker.
+struct EngineJob {
+    kind: WorkKind,
+    items: Vec<WorkItem>,
+    /// Context window for decompress batches (the server decodes its own
+    /// containers, so this is the worker's configured `chunk_tokens`).
+    chunk_tokens: usize,
+}
+
+/// A worker's completion report.
+struct BatchDone {
+    worker: usize,
+    items: Vec<WorkItem>,
+    result: Result<Vec<Vec<u8>>>,
+}
+
+/// What the scheduler needs to know about the (identical) replicas,
+/// reported by the first worker to finish construction.
+#[derive(Clone)]
+struct EngineInfo {
+    lanes: usize,
+    stream_bytes: usize,
+    chunk_tokens: usize,
+    /// `model:executor_flag` tag stamped into every produced container —
+    /// including empty ones, which never reach a worker.
+    tag: String,
 }
 
 /// Per-request reassembly state.
@@ -68,124 +135,314 @@ struct Pending {
 
 /// The compression service.
 pub struct Server {
-    tx: SyncSender<Request>,
+    tx: SyncSender<ToScheduler>,
     next_id: AtomicU64,
     pub metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    scheduler: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Start the worker thread. The compressor is built INSIDE the worker by
-    /// `factory` because PJRT handles are thread-affine (`!Send`); the
-    /// factory itself only captures plain data.
+    /// Start the scheduler and its engine-worker pool. Each replica's
+    /// compressor is built INSIDE its worker thread by `factory` because
+    /// PJRT handles are thread-affine (`!Send`); the factory itself only
+    /// captures plain data (clone an `Arc<Weights>` into it to make native
+    /// replicas share tensors).
     pub fn start<F>(factory: F, config: ServerConfig) -> Result<Server>
     where
-        F: FnOnce() -> Result<LlmCompressor> + Send + 'static,
+        F: Fn() -> Result<LlmCompressor> + Send + Sync + 'static,
     {
-        let (tx, rx) = sync_channel::<Request>(256);
-        let metrics = Arc::new(Metrics::new());
+        let replicas = config.replicas.max(1);
+        let (tx, rx) = sync_channel::<ToScheduler>(256 + 4 * replicas);
+        let metrics = Arc::new(Metrics::with_workers(replicas));
         let shutdown = Arc::new(AtomicBool::new(false));
+        let factory = Arc::new(factory);
         let m = metrics.clone();
         let sd = shutdown.clone();
+        let worker_tx = tx.clone();
         let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
-        let worker = std::thread::Builder::new()
-            .name("llmzip-worker".into())
-            .spawn(move || {
-                let compressor = match factory() {
-                    Ok(c) => {
-                        let _ = ready_tx.send(Ok(()));
-                        c
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                worker_loop(compressor, config, rx, m, sd)
-            })
-            .expect("spawning worker");
+        let scheduler = std::thread::Builder::new()
+            .name("llmzip-sched".into())
+            .spawn(move || scheduler_main(factory, config, rx, worker_tx, m, sd, ready_tx))
+            .expect("spawning scheduler");
         ready_rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("worker died during startup"))??;
-        Ok(Server { tx, next_id: AtomicU64::new(1), metrics, shutdown, worker: Some(worker) })
+            .map_err(|_| anyhow::anyhow!("scheduler died during startup"))??;
+        Ok(Server { tx, next_id: AtomicU64::new(1), metrics, shutdown, scheduler: Some(scheduler) })
     }
 
-    fn submit(&self, op: Op) -> Result<Vec<u8>> {
+    fn submit(&self, op: Op, priority: Priority) -> Result<Vec<u8>> {
         let (rtx, rrx) = sync_channel(1);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.tx
-            .send(Request { id, op, respond: rtx, started: Instant::now() })
+            .send(ToScheduler::Request(Request {
+                id,
+                op,
+                priority,
+                respond: rtx,
+                started: Instant::now(),
+            }))
             .map_err(|_| anyhow::anyhow!("server is shut down"))?;
         rrx.recv().map_err(|_| anyhow::anyhow!("server dropped the request"))?
     }
 
-    /// Compress `data`, returning a container (blocks until done).
+    /// Compress `data`, returning a container (blocks until done). Bulk
+    /// priority: queued decompress work and interactive compressions go
+    /// first.
     pub fn compress(&self, data: &[u8]) -> Result<Vec<u8>> {
-        self.submit(Op::Compress(data.to_vec()))
+        self.submit(Op::Compress(data.to_vec()), Priority::Bulk)
     }
 
-    /// Decompress a container (blocks until done).
+    /// [`Self::compress`] at interactive priority: overtakes queued bulk
+    /// compress chunks (decompress keeps its own fast lane regardless).
+    pub fn compress_interactive(&self, data: &[u8]) -> Result<Vec<u8>> {
+        self.submit(Op::Compress(data.to_vec()), Priority::Interactive)
+    }
+
+    /// Decompress a container (blocks until done). Always interactive:
+    /// reads ride the fast lane past bulk compress jobs.
     pub fn decompress(&self, container: &[u8]) -> Result<Vec<u8>> {
-        self.submit(Op::Decompress(container.to_vec()))
+        self.submit(Op::Decompress(container.to_vec()), Priority::Interactive)
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        if let Some(s) = self.scheduler.take() {
+            let _ = s.join();
         }
     }
 }
 
-fn worker_loop(
-    compressor: LlmCompressor,
-    config: ServerConfig,
-    rx: Receiver<Request>,
+/// An engine worker: builds its compressor, reports readiness, then runs
+/// one batch at a time until the scheduler drops its job channel.
+fn engine_worker<F>(
+    id: usize,
+    factory: Arc<F>,
+    job_rx: Receiver<EngineJob>,
+    done_tx: SyncSender<ToScheduler>,
+    ready_tx: SyncSender<(usize, Result<EngineInfo>)>,
     metrics: Arc<Metrics>,
-    shutdown: Arc<AtomicBool>,
-) {
-    let engine_lanes = compressor.lanes();
-    let lanes = if config.lanes > 0 { config.lanes.min(engine_lanes) } else { engine_lanes };
-    // Requests are split at the compressor's stream granularity; the
-    // model-context chunk size is recorded in each container.
-    let split = Split {
-        stream_bytes: compressor.stream_bytes(),
-        chunk_tokens: compressor.chunk_tokens() as u32,
-    };
-    let mut batcher = DynamicBatcher::new(BatchPolicy { lanes, ..config.policy });
-    let mut pending: HashMap<u64, Pending> = HashMap::new();
-    loop {
-        if shutdown.load(Ordering::SeqCst) && pending.is_empty() && batcher.pending() == 0 {
+) where
+    F: Fn() -> Result<LlmCompressor> + Send + Sync + 'static,
+{
+    let compressor = match factory() {
+        Ok(c) => {
+            let info = EngineInfo {
+                lanes: c.lanes(),
+                stream_bytes: c.stream_bytes(),
+                chunk_tokens: c.chunk_tokens(),
+                tag: c.container_tag(),
+            };
+            let _ = ready_tx.send((id, Ok(info)));
+            drop(ready_tx);
+            c
+        }
+        Err(e) => {
+            let _ = ready_tx.send((id, Err(e)));
             return;
         }
-        // Intake: wait until the next deadline (or a short poll interval).
-        let timeout = batcher
-            .next_deadline()
-            .map(|d| d.saturating_duration_since(Instant::now()))
-            .unwrap_or(Duration::from_millis(10));
+    };
+    while let Ok(job) = job_rx.recv() {
+        // Engine throughput: every byte is one model token, on both passes.
+        let batch_tokens: usize = match job.kind {
+            WorkKind::Compress => job.items.iter().map(|i| i.data.len()).sum(),
+            WorkKind::Decompress => job
+                .items
+                .iter()
+                .map(|i| i.record.map(|r| r.n_tokens as usize).unwrap_or(0))
+                .sum(),
+        };
+        let t0 = Instant::now();
+        // A panicking batch must not kill the worker (the scheduler would
+        // count the slot busy forever): convert it to a failed batch. The
+        // engine re-resets per batch/window, so its state recovers.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match job.kind {
+            WorkKind::Compress => {
+                let chunks: Vec<&[u8]> = job.items.iter().map(|i| i.data.as_slice()).collect();
+                compressor.compress_chunks(&chunks)
+            }
+            WorkKind::Decompress => {
+                let records: Vec<ChunkRecord> = job
+                    .items
+                    .iter()
+                    .map(|i| i.record.expect("decode item has record"))
+                    .collect();
+                let payloads: Vec<&[u8]> = job.items.iter().map(|i| i.data.as_slice()).collect();
+                compressor.decompress_chunks(job.chunk_tokens, &records, &payloads)
+            }
+        }))
+        .unwrap_or_else(|_| Err(anyhow::anyhow!("engine batch panicked")));
+        if result.is_ok() {
+            metrics.record_engine_worker(id, batch_tokens, t0.elapsed());
+        }
+        let done = BatchDone { worker: id, items: job.items, result };
+        if done_tx.send(ToScheduler::Done(done)).is_err() {
+            return;
+        }
+    }
+}
+
+fn scheduler_main<F>(
+    factory: Arc<F>,
+    config: ServerConfig,
+    rx: Receiver<ToScheduler>,
+    worker_tx: SyncSender<ToScheduler>,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    ready_tx: SyncSender<Result<()>>,
+) where
+    F: Fn() -> Result<LlmCompressor> + Send + Sync + 'static,
+{
+    let replicas = config.replicas.max(1);
+    // Spawn the engine workers; each gets a 1-deep private job channel
+    // (a worker never holds more than one batch) and reports completions
+    // on the scheduler's own intake channel.
+    let (worker_ready_tx, worker_ready_rx) = sync_channel::<(usize, Result<EngineInfo>)>(replicas);
+    let mut job_txs = Vec::with_capacity(replicas);
+    let mut handles = Vec::with_capacity(replicas);
+    for id in 0..replicas {
+        let (job_tx, job_rx) = sync_channel::<EngineJob>(1);
+        let f = factory.clone();
+        let dt = worker_tx.clone();
+        let rt = worker_ready_tx.clone();
+        let m = metrics.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("llmzip-engine-{id}"))
+            .spawn(move || engine_worker(id, f, job_rx, dt, rt, m))
+            .expect("spawning engine worker");
+        job_txs.push(job_tx);
+        handles.push(handle);
+    }
+    drop(worker_ready_tx);
+    drop(worker_tx);
+    // Collect readiness from every replica; any failure aborts startup.
+    let mut info: Option<EngineInfo> = None;
+    let mut startup_err: Option<anyhow::Error> = None;
+    for _ in 0..replicas {
+        match worker_ready_rx.recv() {
+            Ok((_, Ok(i))) => {
+                if info.is_none() {
+                    info = Some(i);
+                }
+            }
+            Ok((_, Err(e))) => {
+                if startup_err.is_none() {
+                    startup_err = Some(e);
+                }
+            }
+            Err(_) => {
+                if startup_err.is_none() {
+                    startup_err = Some(anyhow::anyhow!("engine worker died during startup"));
+                }
+                break;
+            }
+        }
+    }
+    if let Some(e) = startup_err {
+        let _ = ready_tx.send(Err(e));
+        drop(job_txs);
+        for h in handles {
+            let _ = h.join();
+        }
+        return;
+    }
+    let info = info.expect("replicas >= 1 reported ready");
+    let _ = ready_tx.send(Ok(()));
+
+    let lanes = if config.lanes > 0 { config.lanes.min(info.lanes) } else { info.lanes };
+    // Requests are split at the compressor's stream granularity; the
+    // model-context chunk size is recorded in each container.
+    let split = Split { stream_bytes: info.stream_bytes, chunk_tokens: info.chunk_tokens as u32 };
+    let mut batcher = DynamicBatcher::new(BatchPolicy { lanes, ..config.policy });
+    let mut pending: HashMap<u64, Pending> = HashMap::new();
+    // Idle worker ids (stack: lowest id dispatched first at startup) and
+    // retired slots (a worker whose job channel disconnected).
+    let mut idle: Vec<usize> = (0..replicas).rev().collect();
+    let mut dead = 0usize;
+    loop {
+        let busy = replicas - idle.len() - dead;
+        if shutdown.load(Ordering::SeqCst)
+            && pending.is_empty()
+            && batcher.pending() == 0
+            && busy == 0
+        {
+            break;
+        }
+        // Sleep until the next flush deadline (or a short poll interval);
+        // worker completions arrive on this same channel and wake us. With
+        // every replica busy, deadlines can't be acted on anyway — wait on
+        // messages instead of spinning on an expired deadline.
+        let timeout = if idle.is_empty() {
+            Duration::from_millis(50)
+        } else {
+            batcher
+                .next_deadline()
+                .map(|d| d.saturating_duration_since(Instant::now()))
+                .unwrap_or(Duration::from_millis(10))
+        };
         match rx.recv_timeout(timeout) {
-            Ok(req) => admit(req, split, &mut batcher, &mut pending),
+            Ok(msg) => {
+                handle_message(msg, &info, split, &mut batcher, &mut pending, &mut idle, &metrics)
+            }
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => {
-                if pending.is_empty() && batcher.pending() == 0 {
-                    return;
+                if pending.is_empty()
+                    && batcher.pending() == 0
+                    && replicas - idle.len() - dead == 0
+                {
+                    break;
                 }
             }
         }
-        // Drain without blocking to fill batches.
-        while batcher.pending() < lanes {
-            match rx.try_recv() {
-                Ok(req) => admit(req, split, &mut batcher, &mut pending),
-                Err(_) => break,
+        // Drain without blocking to fill batches before dispatching.
+        while let Ok(msg) = rx.try_recv() {
+            handle_message(msg, &info, split, &mut batcher, &mut pending, &mut idle, &metrics);
+        }
+        // Dispatch released batches onto idle replicas.
+        while !idle.is_empty() {
+            let Some((kind, items)) = batcher.next_batch(Instant::now()) else { break };
+            let worker = idle.pop().expect("checked non-empty");
+            metrics.record_dispatch(worker, items.len(), lanes, batcher.pending());
+            let job = EngineJob { kind, items, chunk_tokens: info.chunk_tokens };
+            if let Err(failed) = job_txs[worker].send(job) {
+                // Worker died. Fail the affected requests rather than
+                // wedging them, and retire the slot so shutdown doesn't
+                // wait for a completion that will never come.
+                dead += 1;
+                metrics.record_error();
+                for item in failed.0.items {
+                    if let Some(p) = pending.remove(&item.request_id) {
+                        let _ = p
+                            .respond
+                            .send(Err(anyhow::anyhow!("engine worker {worker} died")));
+                    }
+                }
             }
         }
-        // Execute released batches.
-        while let Some((kind, items)) = batcher.next_batch(Instant::now()) {
-            metrics.record_batch(items.len(), lanes);
-            run_batch(&compressor, kind, items, &mut pending, &metrics, &config);
+    }
+    // Disconnect the workers and wait them out.
+    drop(job_txs);
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
+fn handle_message(
+    msg: ToScheduler,
+    info: &EngineInfo,
+    split: Split,
+    batcher: &mut DynamicBatcher,
+    pending: &mut HashMap<u64, Pending>,
+    idle: &mut Vec<usize>,
+    metrics: &Metrics,
+) {
+    match msg {
+        ToScheduler::Request(req) => admit(req, info, split, batcher, pending, metrics),
+        ToScheduler::Done(done) => {
+            idle.push(done.worker);
+            complete_batch(done, info, pending, metrics);
         }
     }
 }
@@ -198,9 +455,11 @@ struct Split {
 
 fn admit(
     req: Request,
+    info: &EngineInfo,
     split: Split,
     batcher: &mut DynamicBatcher,
     pending: &mut HashMap<u64, Pending>,
+    metrics: &Metrics,
 ) {
     let now = Instant::now();
     match req.op {
@@ -220,15 +479,19 @@ fn admit(
                 bytes_in: data.len(),
             };
             if data.is_empty() {
-                // Zero-chunk request: answer immediately with an empty container.
+                // Zero-chunk request: answer immediately with an empty
+                // container carrying the REAL engine tag — `finish` never
+                // sees this request, and decoding through
+                // `LlmCompressor::decompress` requires the `model:flag` tag.
                 let container = Container {
                     orig_len: 0,
                     orig_crc32: entry.orig_crc,
                     chunk_tokens: entry.container_chunk_tokens,
-                    model_name: String::new(), // filled by finish(); placeholder
+                    model_name: info.tag.clone(),
                     chunks: vec![],
                     payload: vec![],
                 };
+                metrics.record_request_op(WorkKind::Compress, 0, 0, entry.started.elapsed());
                 let _ = entry.respond.send(Ok(container.to_bytes()));
                 return;
             }
@@ -238,6 +501,7 @@ fn admit(
                     request_id: req.id,
                     chunk_index: i as u32,
                     kind: WorkKind::Compress,
+                    priority: req.priority,
                     data: chunk.to_vec(),
                     record: None,
                     enqueued: now,
@@ -249,6 +513,34 @@ fn admit(
                 let _ = req.respond.send(Err(e));
             }
             Ok(container) => {
+                // Legacy exception: pre-fix servers stamped empty containers
+                // with an empty tag; they carry no payload, so decoding them
+                // stays valid on any engine.
+                let legacy_empty = container.model_name.is_empty() && container.chunks.is_empty();
+                if container.model_name != info.tag && !legacy_empty {
+                    let _ = req.respond.send(Err(anyhow::anyhow!(
+                        "container was produced by engine '{}', this server runs '{}'",
+                        container.model_name,
+                        info.tag
+                    )));
+                    return;
+                }
+                // Batches mix chunks from concurrent requests and the
+                // engine decodes a whole batch with ONE context-window
+                // size, so this server can only decode containers written
+                // with its own chunk_tokens. Reject a mismatch up front —
+                // otherwise it would surface as a baffling CRC failure.
+                if container.chunk_tokens as usize != info.chunk_tokens
+                    && !container.chunks.is_empty()
+                {
+                    let _ = req.respond.send(Err(anyhow::anyhow!(
+                        "container was written with chunk_tokens={}, this server decodes with \
+                         chunk_tokens={} — use a matching server or the offline CLI",
+                        container.chunk_tokens,
+                        info.chunk_tokens
+                    )));
+                    return;
+                }
                 let items: Vec<(ChunkRecord, Vec<u8>)> =
                     container.iter_chunks().map(|(r, p)| (r, p.to_vec())).collect();
                 let n = items.len().max(1);
@@ -265,6 +557,12 @@ fn admit(
                     bytes_in: bytes.len(),
                 };
                 if items.is_empty() {
+                    metrics.record_request_op(
+                        WorkKind::Decompress,
+                        entry.bytes_in,
+                        0,
+                        entry.started.elapsed(),
+                    );
                     let _ = entry.respond.send(Ok(Vec::new()));
                     return;
                 }
@@ -274,6 +572,7 @@ fn admit(
                         request_id: req.id,
                         chunk_index: i as u32,
                         kind: WorkKind::Decompress,
+                        priority: req.priority,
                         data: payload,
                         record: Some(rec),
                         enqueued: now,
@@ -284,66 +583,39 @@ fn admit(
     }
 }
 
-fn run_batch(
-    compressor: &LlmCompressor,
-    kind: WorkKind,
-    items: Vec<WorkItem>,
+/// Fold a worker's completed batch back into per-request state.
+fn complete_batch(
+    done: BatchDone,
+    info: &EngineInfo,
     pending: &mut HashMap<u64, Pending>,
     metrics: &Metrics,
-    config: &ServerConfig,
 ) {
-    // Engine throughput: every byte is one model token, on both passes.
-    let batch_tokens: usize = match kind {
-        WorkKind::Compress => items.iter().map(|i| i.data.len()).sum(),
-        WorkKind::Decompress => items
-            .iter()
-            .map(|i| i.record.map(|r| r.n_tokens as usize).unwrap_or(0))
-            .sum(),
-    };
-    let engine_t0 = Instant::now();
-    let result = match kind {
-        WorkKind::Compress => {
-            let chunks: Vec<&[u8]> = items.iter().map(|i| i.data.as_slice()).collect();
-            compressor.compress_chunks(&chunks)
-        }
-        WorkKind::Decompress => {
-            let records: Vec<ChunkRecord> =
-                items.iter().map(|i| i.record.expect("decode item has record")).collect();
-            let payloads: Vec<&[u8]> = items.iter().map(|i| i.data.as_slice()).collect();
-            // All items in a decompress batch share the worker's configured
-            // context window (the server decodes its own containers).
-            compressor.decompress_chunks(compressor.chunk_tokens(), &records, &payloads)
-        }
-    };
-    if result.is_ok() {
-        metrics.record_engine(batch_tokens, engine_t0.elapsed());
-    }
-    match result {
+    match done.result {
         Err(e) => {
             // Fail every request that had a chunk in this batch.
             metrics.record_error();
             let msg = format!("batch failed: {e:#}");
-            for item in items {
+            for item in done.items {
                 if let Some(p) = pending.remove(&item.request_id) {
                     let _ = p.respond.send(Err(anyhow::anyhow!(msg.clone())));
                 }
             }
         }
         Ok(outputs) => {
-            for (item, out) in items.into_iter().zip(outputs) {
+            for (item, out) in done.items.into_iter().zip(outputs) {
                 let Some(p) = pending.get_mut(&item.request_id) else { continue };
                 p.results[item.chunk_index as usize] = Some(out);
                 p.remaining -= 1;
                 if p.remaining == 0 {
                     let p = pending.remove(&item.request_id).unwrap();
-                    finish(compressor, p, metrics, config);
+                    finish(&info.tag, p, metrics);
                 }
             }
         }
     }
 }
 
-fn finish(compressor: &LlmCompressor, p: Pending, metrics: &Metrics, _config: &ServerConfig) {
+fn finish(tag: &str, p: Pending, metrics: &Metrics) {
     let response: Result<Vec<u8>> = match p.kind {
         WorkKind::Compress => {
             let mut records = Vec::with_capacity(p.results.len());
@@ -360,7 +632,7 @@ fn finish(compressor: &LlmCompressor, p: Pending, metrics: &Metrics, _config: &S
                 orig_len: p.orig_len,
                 orig_crc32: p.orig_crc,
                 chunk_tokens: p.container_chunk_tokens,
-                model_name: compressor.container_tag(),
+                model_name: tag.to_string(),
                 chunks: records,
                 payload,
             }
@@ -379,7 +651,7 @@ fn finish(compressor: &LlmCompressor, p: Pending, metrics: &Metrics, _config: &S
         }
     };
     let out_len = response.as_ref().map(|v| v.len()).unwrap_or(0);
-    metrics.record_request(p.bytes_in, out_len, p.started.elapsed());
+    metrics.record_request_op(p.kind, p.bytes_in, out_len, p.started.elapsed());
     let _ = p.respond.send(response);
 }
 
@@ -416,6 +688,10 @@ mod tests {
         // token on the compress pass and again on the decompress pass.
         assert_eq!(server.metrics.tokens.load(Ordering::Relaxed), 2 * data.len() as u64);
         assert!(server.metrics.mean_tokens_per_sec() > 0.0);
+        // Both op latencies landed in the per-op histograms.
+        assert!(server.metrics.latency_samples(WorkKind::Compress) >= 1);
+        assert!(server.metrics.latency_samples(WorkKind::Decompress) >= 1);
+        assert!(server.metrics.latency_percentile_ms(WorkKind::Decompress, 0.99) > 0.0);
     }
 
     #[test]
@@ -443,10 +719,46 @@ mod tests {
     }
 
     #[test]
-    fn empty_request() {
+    fn empty_request_roundtrips_and_carries_engine_tag() {
         let server = test_server(32, 2);
         let z = server.compress(b"").unwrap();
+        // Regression: the empty container must carry the real engine tag
+        // (it used to ship `model_name: ""`, which only the server's own
+        // lenient path could decode).
+        let container = Container::from_bytes(&z).unwrap();
+        assert_eq!(container.model_name, "nano:0");
         assert_eq!(server.decompress(&z).unwrap(), b"");
+    }
+
+    #[test]
+    fn legacy_untagged_empty_container_still_decodes() {
+        // Pre-fix servers emitted empty containers with model_name: "";
+        // they carry no payload, so the new tag check must let them pass.
+        let server = test_server(32, 2);
+        let legacy = Container {
+            orig_len: 0,
+            orig_crc32: crate::util::crc32(b""),
+            chunk_tokens: 32,
+            model_name: String::new(),
+            chunks: vec![],
+            payload: vec![],
+        }
+        .to_bytes();
+        assert_eq!(server.decompress(&legacy).unwrap(), b"");
+    }
+
+    #[test]
+    fn server_empty_container_decodes_through_compressor_path() {
+        // The regression test for the zero-length-compress fix: a
+        // server-produced empty container must decode through
+        // `LlmCompressor::decompress`, which requires the `model:flag` tag.
+        use crate::compress::Compressor;
+        let server = test_server(32, 2);
+        let z = server.compress(b"").unwrap();
+        let cfg = by_name("nano").unwrap();
+        let compressor =
+            LlmCompressor::from_weights(cfg, Weights::random(cfg, 21), 32, 2).unwrap();
+        assert_eq!(compressor.decompress(&z).unwrap(), b"");
     }
 
     #[test]
@@ -484,5 +796,76 @@ mod tests {
             z[i] ^= 0x55;
         }
         assert!(server.decompress(&z).is_err());
+    }
+
+    #[test]
+    fn foreign_engine_container_rejected_early() {
+        let server = test_server(32, 2);
+        let data = crate::textgen::quick_sample(200, 2);
+        let mut container = Container::from_bytes(&server.compress(&data).unwrap()).unwrap();
+        container.model_name = "medium:0".into();
+        let err = server.decompress(&container.to_bytes()).unwrap_err().to_string();
+        assert!(err.contains("produced by engine"), "{err}");
+    }
+
+    #[test]
+    fn mismatched_chunk_tokens_rejected_with_clear_error() {
+        // Same engine, different context window: decoding would produce
+        // garbage + a CRC failure, so the server refuses up front.
+        let server = test_server(32, 2);
+        let data = crate::textgen::quick_sample(200, 3);
+        let mut container = Container::from_bytes(&server.compress(&data).unwrap()).unwrap();
+        container.chunk_tokens = 16;
+        let err = server.decompress(&container.to_bytes()).unwrap_err().to_string();
+        assert!(err.contains("chunk_tokens"), "{err}");
+    }
+
+    #[test]
+    fn replica_pool_serves_and_attributes_work() {
+        let server = Arc::new(Server::start(
+            move || {
+                let cfg = by_name("nano").unwrap();
+                LlmCompressor::from_weights(cfg, Weights::random(cfg, 23), 16, 2)
+            },
+            ServerConfig {
+                chunk_tokens: 16,
+                replicas: 3,
+                policy: BatchPolicy { lanes: 2, max_wait: Duration::from_millis(2) },
+                ..Default::default()
+            },
+        )
+        .unwrap());
+        assert_eq!(server.metrics.workers.len(), 3);
+        let mut handles = Vec::new();
+        for i in 0..6u64 {
+            let s = server.clone();
+            handles.push(std::thread::spawn(move || {
+                let data = crate::textgen::quick_sample(400 + i as usize * 29, i);
+                let z = s.compress(&data).unwrap();
+                assert_eq!(s.decompress(&z).unwrap(), data);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(server.metrics.errors.load(Ordering::Relaxed), 0);
+        let per_worker: Vec<u64> = server
+            .metrics
+            .workers
+            .iter()
+            .map(|w| w.batches.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = per_worker.iter().sum();
+        assert_eq!(total, server.metrics.batches.load(Ordering::Relaxed));
+        assert!(total > 0);
+    }
+
+    #[test]
+    fn failed_factory_fails_startup() {
+        let r = Server::start(
+            || -> Result<LlmCompressor> { anyhow::bail!("no engine for you") },
+            ServerConfig { replicas: 2, ..Default::default() },
+        );
+        assert!(r.is_err());
     }
 }

@@ -14,7 +14,9 @@
 //! container records the executor kind to prevent cross-executor decode).
 //!
 //! Implementations:
-//! * [`crate::lm::NativeExecutor`] — pure rust, batched + multithreaded.
+//! * [`crate::lm::NativeExecutor`] — pure rust, batched, with a persistent
+//!   worker-thread pool (`with_threads`) and `Arc`-shared weights so
+//!   replicas cost no extra tensor memory.
 //! * [`crate::runtime::PjrtStepExecutor`] — the lowered `decode_step` HLO.
 //! * [`crate::runtime::PjrtForwardExecutor`] — batched `forward` HLO with
 //!   prefix replay (fast compression path; see `compress/llm.rs`).

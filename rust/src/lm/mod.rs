@@ -8,8 +8,10 @@
 //!   transformer. The engine is batched and allocation-free in steady
 //!   state: [`native::NativeModel::advance_batch`] pushes all lanes
 //!   through each layer together using a preallocated [`native::Scratch`]
-//!   arena, and [`native::NativeExecutor`] can partition lanes across OS
-//!   threads (bit-exact for any lane batching or thread count). It serves
+//!   arena, and [`native::NativeExecutor`] can partition lanes across a
+//!   persistent pool of OS threads (bit-exact for any lane batching or
+//!   thread count), with weights shared across replicas via
+//!   `Arc<Weights>`. It serves
 //!   three purposes: a cross-check on the PJRT numerics, a fallback
 //!   executor that works without artifacts, and the reference for unit
 //!   tests.

@@ -8,11 +8,13 @@
 //! PJRT/XLA executor to ~1e-4 (different reduction orders), which is why
 //! containers record which executor produced them.
 //!
-//! ## Execution architecture (resolved-plan refactor)
+//! ## Execution architecture (resolved-plan + replica-pool refactor)
 //!
 //! * **[`crate::lm::weights::ResolvedPlan`]** — every weight tensor is
 //!   resolved from its string key to a direct index once at model load;
-//!   the hot path never formats, hashes or looks up a name.
+//!   the hot path never formats, hashes or looks up a name. The plan holds
+//!   the bundle behind an `Arc<Weights>`, so every executor replica and
+//!   every pool thread reads ONE shared copy of the tensors.
 //! * **[`Scratch`]** — a preallocated arena holding every intermediate
 //!   buffer (residual stream, norms, q/k/v, attention scores, FF, output
 //!   head). Steady-state stepping performs **zero heap allocations**.
@@ -22,13 +24,19 @@
 //!   unchanged, so logits are bit-identical to the single-lane path (and
 //!   to the frozen seed implementation in [`crate::lm::reference`], which
 //!   `tests/golden_logits.rs` asserts).
-//! * **[`NativeExecutor`]** — owns the lane pool plus one `Scratch` per
-//!   worker thread; `threads > 1` partitions lanes across
-//!   `std::thread::scope` threads (bit-exact: lanes are independent).
+//! * **[`NativeExecutor`]** — `threads > 1` partitions lanes across a
+//!   **persistent worker pool**: long-lived OS threads, each permanently
+//!   owning a disjoint lane span and its own `Scratch`, woken per step by
+//!   a channel handoff. No `thread::scope` spawn/join anywhere in the
+//!   steady-state step path, so even nano-sized models can profit from
+//!   threads without paying spawn cost per decoded byte. Bit-exact for any
+//!   thread count: lanes are computed independently.
 
 use crate::lm::config::{LmConfig, MAX_CONTEXT, VOCAB};
 use crate::lm::weights::{ResolvedPlan, Weights};
 use crate::Result;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 
 /// GELU (tanh approximation — matches `jax.nn.gelu(approximate=True)`).
 #[inline]
@@ -154,21 +162,27 @@ impl Scratch {
     }
 }
 
-/// The model: config + weights + resolved plan, plus precomputed ALiBi
-/// slopes.
+/// The model: config + resolved plan (which owns the shared weights),
+/// plus precomputed ALiBi slopes.
 pub struct NativeModel {
     pub cfg: &'static LmConfig,
-    weights: Weights,
     plan: ResolvedPlan,
     slopes: Vec<f32>,
 }
 
 impl NativeModel {
-    pub fn new(cfg: &'static LmConfig, weights: Weights) -> Self {
-        let plan = ResolvedPlan::build(&weights, cfg)
+    /// Accepts either an owned `Weights` (wrapped into a fresh `Arc`) or an
+    /// `Arc<Weights>` already shared with other replicas.
+    pub fn new(cfg: &'static LmConfig, weights: impl Into<Arc<Weights>>) -> Self {
+        let plan = ResolvedPlan::build(weights.into(), cfg)
             .expect("weights were validated against param_spec at load");
         let slopes = (0..cfg.n_heads).map(|h| cfg.alibi_slope(h)).collect();
-        NativeModel { cfg, weights, plan, slopes }
+        NativeModel { cfg, plan, slopes }
+    }
+
+    /// The shared weight bundle (replicas clone this `Arc`, not the data).
+    pub fn weights(&self) -> &Arc<Weights> {
+        self.plan.weights()
     }
 
     /// Feed one token per lane; writes each lane's next-token logits into
@@ -208,7 +222,7 @@ impl NativeModel {
         let h = self.cfg.n_heads;
         let dh = self.cfg.d_head();
         let ffd = self.cfg.d_ff();
-        let embed = self.weights.data(self.plan.embed);
+        let embed = self.plan.data(self.plan.embed);
 
         // Token embeddings into the residual stream.
         for (l, (lane, &tok)) in lanes.iter_mut().zip(tokens.iter()).enumerate() {
@@ -224,14 +238,14 @@ impl NativeModel {
 
         let scale = 1.0 / (dh as f32).sqrt();
         for (layer, lp) in self.plan.layers.iter().enumerate() {
-            let attn_norm = self.weights.data(lp.attn_norm);
-            let mlp_norm = self.weights.data(lp.mlp_norm);
-            let wq = self.weights.data(lp.wq);
-            let wk = self.weights.data(lp.wk);
-            let wv = self.weights.data(lp.wv);
-            let wo = self.weights.data(lp.wo);
-            let w1 = self.weights.data(lp.w1);
-            let w2 = self.weights.data(lp.w2);
+            let attn_norm = self.plan.data(lp.attn_norm);
+            let mlp_norm = self.plan.data(lp.mlp_norm);
+            let wq = self.plan.data(lp.wq);
+            let wk = self.plan.data(lp.wk);
+            let wv = self.plan.data(lp.wv);
+            let wo = self.plan.data(lp.wo);
+            let w1 = self.plan.data(lp.w1);
+            let w2 = self.plan.data(lp.w2);
 
             for l in 0..n {
                 rmsnorm_into(
@@ -315,7 +329,7 @@ impl NativeModel {
         }
 
         // Final norm + weight-tied head (logits[v] = dot(xn, embed[v])).
-        let final_norm = self.weights.data(self.plan.final_norm);
+        let final_norm = self.plan.data(self.plan.final_norm);
         for l in 0..n {
             rmsnorm_into(
                 &scratch.x[l * d..(l + 1) * d],
@@ -355,35 +369,147 @@ impl NativeModel {
     }
 }
 
-/// Native executor: a [`NativeModel`], a pool of lanes, and one [`Scratch`]
-/// arena per worker thread.
+/// A raw-pointer wrapper that may cross a channel into a pool worker.
+///
+/// SAFETY contract (upheld by [`NativeExecutor::step_into`]): the executor
+/// sends each worker a disjoint span of the caller's `tokens`/`out`
+/// buffers and then blocks until EVERY signalled worker has replied, so
+/// the pointers never outlive the borrow they were derived from and no two
+/// workers alias a span.
+struct SpanPtr<T>(*const T);
+unsafe impl<T: Send> Send for SpanPtr<T> {}
+struct SpanPtrMut<T>(*mut T);
+unsafe impl<T: Send> Send for SpanPtrMut<T> {}
+
+/// One handoff to a persistent pool worker.
+enum PoolJob {
+    /// Advance this worker's lanes by one token each; `n` is the worker's
+    /// lane count, `tokens`/`out` point at its span of the step buffers.
+    Step { tokens: SpanPtr<u32>, out: SpanPtrMut<f32>, n: usize, head_rows: usize },
+    /// Reset every owned lane to position 0.
+    Reset,
+}
+
+/// A persistent engine worker: permanently owns a disjoint span of lanes
+/// and its own scratch arena; woken per step by a channel send, replies on
+/// its private done channel. Lives until the executor drops its `job_tx`.
+struct PoolWorker {
+    job_tx: Sender<PoolJob>,
+    done_rx: Receiver<Result<()>>,
+    n_lanes: usize,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+fn pool_worker_main(
+    model: Arc<NativeModel>,
+    mut lanes: Vec<LaneState>,
+    mut scratch: Scratch,
+    rx: Receiver<PoolJob>,
+    tx: Sender<Result<()>>,
+) {
+    while let Ok(job) = rx.recv() {
+        let reply = match job {
+            PoolJob::Reset => {
+                for l in lanes.iter_mut() {
+                    l.reset();
+                }
+                Ok(())
+            }
+            PoolJob::Step { tokens, out, n, head_rows } => {
+                if n != lanes.len() {
+                    Err(anyhow::anyhow!("pool worker got {n} tokens for {} lanes", lanes.len()))
+                } else {
+                    // SAFETY: see `SpanPtr` — the executor keeps these
+                    // buffers alive and unaliased until our reply lands.
+                    let toks = unsafe { std::slice::from_raw_parts(tokens.0, n) };
+                    let out = unsafe { std::slice::from_raw_parts_mut(out.0, n * VOCAB) };
+                    model.advance_batch(&mut lanes, toks, &mut scratch, out, head_rows)
+                }
+            }
+        };
+        if tx.send(reply).is_err() {
+            return; // executor is gone
+        }
+    }
+}
+
+/// Native executor: a shared [`NativeModel`] plus either an inline lane
+/// pool (`threads == 1`) or a persistent worker pool (`threads > 1`).
 pub struct NativeExecutor {
-    model: NativeModel,
-    lanes: Vec<LaneState>,
-    scratches: Vec<Scratch>,
+    model: Arc<NativeModel>,
+    n_lanes: usize,
     threads: usize,
     head_rows: usize,
+    /// `threads == 1`: lanes + scratch live inline, no handoff at all.
+    local: Option<(Vec<LaneState>, Scratch)>,
+    /// `threads > 1`: persistent workers own the lanes.
+    workers: Vec<PoolWorker>,
 }
 
 impl NativeExecutor {
-    pub fn new(cfg: &'static LmConfig, weights: Weights, n_lanes: usize) -> Self {
-        let model = NativeModel::new(cfg, weights);
-        let lanes = (0..n_lanes).map(|_| LaneState::new(cfg, MAX_CONTEXT)).collect();
-        let scratches = vec![Scratch::new(cfg, n_lanes)];
-        NativeExecutor { model, lanes, scratches, threads: 1, head_rows: VOCAB }
+    /// Accepts either an owned `Weights` or an `Arc<Weights>` shared with
+    /// other replicas (the coordinator's replica pool passes the latter,
+    /// so N executors cost one copy of the tensors).
+    pub fn new(cfg: &'static LmConfig, weights: impl Into<Arc<Weights>>, n_lanes: usize) -> Self {
+        let model = Arc::new(NativeModel::new(cfg, weights));
+        let local = Some((
+            (0..n_lanes).map(|_| LaneState::new(cfg, MAX_CONTEXT)).collect(),
+            Scratch::new(cfg, n_lanes),
+        ));
+        NativeExecutor { model, n_lanes, threads: 1, head_rows: VOCAB, local, workers: Vec::new() }
     }
 
-    /// Partition lanes across `threads` OS threads per step
-    /// (`std::thread::scope`). Bit-exact for any thread count: lanes are
-    /// computed independently, each thread owns a disjoint lane range and
-    /// its own scratch arena. Clamped to `1..=lanes`.
+    /// Partition lanes across `threads` persistent worker threads (clamped
+    /// to `1..=lanes`). Each worker permanently owns a disjoint lane span
+    /// and its own scratch arena; per step it is woken by a channel send
+    /// instead of a `thread::scope` spawn, so the handoff costs
+    /// microseconds even for nano-sized models. Bit-exact for any thread
+    /// count: lanes are computed independently. Resets all lane state.
     pub fn with_threads(mut self, threads: usize) -> Self {
-        let t = threads.clamp(1, self.lanes.len().max(1));
-        self.threads = t;
-        // One full-capacity scratch per thread (any lane partition fits).
-        self.scratches =
-            (0..t).map(|_| Scratch::new(self.model.cfg, self.lanes.len().max(1))).collect();
+        let t = threads.clamp(1, self.n_lanes.max(1));
+        self.spawn_pool(t);
         self
+    }
+
+    fn spawn_pool(&mut self, t: usize) {
+        self.shutdown_pool();
+        self.threads = t;
+        if t == 1 {
+            self.local = Some((
+                (0..self.n_lanes).map(|_| LaneState::new(self.model.cfg, MAX_CONTEXT)).collect(),
+                Scratch::new(self.model.cfg, self.n_lanes),
+            ));
+            return;
+        }
+        self.local = None;
+        let per = self.n_lanes.div_ceil(t);
+        let mut start = 0usize;
+        while start < self.n_lanes {
+            let n = per.min(self.n_lanes - start);
+            let cfg = self.model.cfg;
+            let lanes: Vec<LaneState> = (0..n).map(|_| LaneState::new(cfg, MAX_CONTEXT)).collect();
+            let scratch = Scratch::new(cfg, n);
+            let model = self.model.clone();
+            let (job_tx, job_rx) = channel();
+            let (done_tx, done_rx) = channel();
+            let handle = std::thread::Builder::new()
+                .name(format!("llmzip-step-{start}"))
+                .spawn(move || pool_worker_main(model, lanes, scratch, job_rx, done_tx))
+                .expect("spawning engine pool worker");
+            self.workers.push(PoolWorker { job_tx, done_rx, n_lanes: n, handle: Some(handle) });
+            start += n;
+        }
+    }
+
+    fn shutdown_pool(&mut self) {
+        for w in self.workers.drain(..) {
+            // Dropping the job sender disconnects the worker's recv loop.
+            drop(w.job_tx);
+            drop(w.done_rx);
+            if let Some(h) = w.handle {
+                let _ = h.join();
+            }
+        }
     }
 
     /// Restrict the output head to the first `rows` logit rows (the rest
@@ -403,6 +529,12 @@ impl NativeExecutor {
     }
 }
 
+impl Drop for NativeExecutor {
+    fn drop(&mut self) {
+        self.shutdown_pool();
+    }
+}
+
 impl crate::lm::executor::LmExecutor for NativeExecutor {
     fn config(&self) -> &'static LmConfig {
         self.model.cfg
@@ -413,79 +545,92 @@ impl crate::lm::executor::LmExecutor for NativeExecutor {
     }
 
     fn lanes(&self) -> usize {
-        self.lanes.len()
+        self.n_lanes
     }
 
     fn reset(&mut self) {
-        for l in self.lanes.iter_mut() {
-            l.reset();
+        if let Some((lanes, _)) = self.local.as_mut() {
+            for l in lanes.iter_mut() {
+                l.reset();
+            }
+            return;
+        }
+        let mut sent = 0usize;
+        for w in &self.workers {
+            if w.job_tx.send(PoolJob::Reset).is_err() {
+                break;
+            }
+            sent += 1;
+        }
+        for w in self.workers.iter().take(sent) {
+            let _ = w.done_rx.recv();
         }
     }
 
     fn step(&mut self, tokens: &[u32]) -> Result<Vec<f32>> {
-        let mut out = vec![0.0f32; self.lanes.len() * VOCAB];
+        let mut out = vec![0.0f32; self.n_lanes * VOCAB];
         self.step_into(tokens, &mut out)?;
         Ok(out)
     }
 
     /// Zero-allocation step: all intermediates live in the preallocated
-    /// scratch arenas, the logits land in the caller's buffer.
-    ///
-    /// Threading is work-gated: `std::thread::scope` spawns OS threads per
-    /// step (tens of microseconds), so lanes are only partitioned when each
-    /// thread gets enough matvec work to amortize that. Small models
-    /// (nano/tiny) therefore run single-threaded even with `threads > 1`
-    /// — decode stays fast per byte either way. (A persistent worker pool
-    /// would remove the gate; see ROADMAP open items.)
+    /// scratch arenas, the logits land in the caller's buffer. With
+    /// `threads > 1` the step is a channel handoff to the persistent
+    /// worker pool — no thread spawn/join anywhere in steady state.
     fn step_into(&mut self, tokens: &[u32], out: &mut [f32]) -> Result<()> {
-        let n = self.lanes.len();
+        let n = self.n_lanes;
         if tokens.len() != n {
             anyhow::bail!("step expects {} lane tokens, got {}", n, tokens.len());
         }
         if out.len() != n * VOCAB {
             anyhow::bail!("step expects out buffer of {}, got {}", n * VOCAB, out.len());
         }
-        // ~mul-adds per thread needed to amortize a spawn+join cycle.
-        const WORK_PER_THREAD: usize = 768 * 1024;
-        let d = self.model.cfg.d_model;
-        let per_lane_work = self.model.cfg.n_layers * 12 * d * d + VOCAB * d;
-        let useful = ((n * per_lane_work) / WORK_PER_THREAD).max(1);
-        let threads = self
-            .threads
-            .min(useful)
-            .min(self.scratches.len())
-            .min(n.max(1))
-            .max(1);
-        if threads == 1 {
-            return self.model.advance_batch(
-                &mut self.lanes,
-                tokens,
-                &mut self.scratches[0],
-                out,
-                self.head_rows,
-            );
+        if let Some((lanes, scratch)) = self.local.as_mut() {
+            return self.model.advance_batch(lanes, tokens, scratch, out, self.head_rows);
         }
-        let per = n.div_ceil(threads);
-        let model = &self.model;
+        // Fan the step out to the pool: each worker gets its disjoint span.
         let head_rows = self.head_rows;
-        std::thread::scope(|s| {
-            let mut handles = Vec::with_capacity(threads);
-            for (((lanes_c, toks_c), out_c), scratch) in self
-                .lanes
-                .chunks_mut(per)
-                .zip(tokens.chunks(per))
-                .zip(out.chunks_mut(per * VOCAB))
-                .zip(self.scratches.iter_mut())
-            {
-                handles.push(
-                    s.spawn(move || model.advance_batch(lanes_c, toks_c, scratch, out_c, head_rows)),
-                );
+        let mut off = 0usize;
+        let mut sent = 0usize;
+        let mut worker_died = false;
+        for w in &self.workers {
+            let job = PoolJob::Step {
+                tokens: SpanPtr(tokens[off..].as_ptr()),
+                out: SpanPtrMut(out[off * VOCAB..].as_mut_ptr()),
+                n: w.n_lanes,
+                head_rows,
+            };
+            if w.job_tx.send(job).is_err() {
+                worker_died = true;
+                break;
             }
-            for h in handles {
-                h.join().map_err(|_| anyhow::anyhow!("engine worker thread panicked"))??;
+            off += w.n_lanes;
+            sent += 1;
+        }
+        // Barrier: collect a reply from every signalled worker before
+        // returning, so no worker retains a pointer into the caller's
+        // buffers (this is what makes the SpanPtr handoff sound).
+        let mut first_err: Option<anyhow::Error> = None;
+        for w in self.workers.iter().take(sent) {
+            match w.done_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    worker_died = true;
+                }
             }
-            Ok(())
-        })
+        }
+        if first_err.is_none() && worker_died {
+            first_err = Some(anyhow::anyhow!("engine pool worker died"));
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
     }
 }
 
@@ -619,9 +764,6 @@ mod tests {
 
     #[test]
     fn threaded_step_matches_single_thread() {
-        // medium x 8 lanes clears the work gate, so this genuinely runs the
-        // thread::scope partitioned path (tiny models are gated to 1 thread
-        // because spawn/join would dominate their per-step work).
         let cfg = by_name("medium").unwrap();
         let w = Weights::random(cfg, 8);
         let mut one = NativeExecutor::new(cfg, w.clone(), 8);
@@ -633,6 +775,66 @@ mod tests {
             let b = two.step(&toks).unwrap();
             assert_eq!(a, b, "step {step}");
         }
+    }
+
+    #[test]
+    fn persistent_pool_bit_exact_for_any_thread_count() {
+        // The pool has no work gate: even a nano model genuinely fans out
+        // to the persistent workers. Every thread count must reproduce the
+        // single-threaded logits exactly, across resets.
+        let cfg = by_name("nano").unwrap();
+        let w = std::sync::Arc::new(Weights::random(cfg, 21));
+        let mut baseline = NativeExecutor::new(cfg, w.clone(), 5);
+        let mut pooled: Vec<NativeExecutor> = [2usize, 3, 5, 8]
+            .iter()
+            .map(|&t| NativeExecutor::new(cfg, w.clone(), 5).with_threads(t))
+            .collect();
+        assert_eq!(pooled[3].threads(), 5, "threads clamp to lane count");
+        for round in 0..2 {
+            baseline.reset();
+            for ex in pooled.iter_mut() {
+                ex.reset();
+            }
+            for step in 0..4u32 {
+                let toks: Vec<u32> = (0..5).map(|l| (l * 41 + step * 7 + round) % 256).collect();
+                let a = baseline.step(&toks).unwrap();
+                for ex in pooled.iter_mut() {
+                    assert_eq!(a, ex.step(&toks).unwrap(), "round {round} step {step}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_replicas_share_one_weight_bundle() {
+        let cfg = by_name("nano").unwrap();
+        let w = std::sync::Arc::new(Weights::random(cfg, 22));
+        let a = NativeExecutor::new(cfg, w.clone(), 2).with_threads(2);
+        let b = NativeExecutor::new(cfg, w.clone(), 2);
+        assert!(std::ptr::eq(
+            a.model().weights().data(0).as_ptr(),
+            b.model().weights().data(0).as_ptr()
+        ));
+        // 1 local + the two executors' models (pool workers share each
+        // executor's Arc<NativeModel>, not a second weights Arc).
+        assert_eq!(std::sync::Arc::strong_count(&w), 3);
+    }
+
+    #[test]
+    fn pool_head_rows_and_validation_still_apply() {
+        let cfg = by_name("nano").unwrap();
+        let w = Weights::random(cfg, 23);
+        let mut full = NativeExecutor::new(cfg, w.clone(), 2);
+        let mut coded = NativeExecutor::new(cfg, w, 2).with_threads(2).with_head_rows(CODED_BYTES);
+        let toks = [BOS, 70];
+        let a = full.step(&toks).unwrap();
+        let b = coded.step(&toks).unwrap();
+        for l in 0..2 {
+            let coded = l * VOCAB..l * VOCAB + CODED_BYTES;
+            assert_eq!(a[coded.clone()], b[coded]);
+            assert!(b[l * VOCAB + CODED_BYTES..(l + 1) * VOCAB].iter().all(|&x| x == 0.0));
+        }
+        assert!(coded.step(&[BOS]).is_err(), "wrong token count rejected by pool path");
     }
 
     #[test]

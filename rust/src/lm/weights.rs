@@ -6,12 +6,18 @@
 //! lookup) exists for loaders, tools and the frozen reference
 //! implementation only. The engine resolves every tensor ONCE at model
 //! load into a [`ResolvedPlan`] and thereafter reaches weight data through
-//! [`Weights::data`] — a bare slice index.
+//! [`ResolvedPlan::data`] — a bare slice index.
+//!
+//! The plan holds the bundle behind an `Arc<Weights>`, so any number of
+//! engine replicas (coordinator workers, pool threads, samplers) share ONE
+//! copy of the tensors: replicating an executor costs KV-cache + scratch
+//! memory only, never a second copy of the model.
 
 use crate::lm::config::{param_spec, LmConfig};
 use crate::util::read_u32_le;
 use crate::Result;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 pub const WEIGHTS_MAGIC: u32 = 0x575A_4D4C; // "LMZW"
 pub const WEIGHTS_VERSION: u16 = 1;
@@ -186,12 +192,16 @@ pub struct LayerPlan {
 }
 
 /// Resolved-weight execution plan: every tensor the forward pass touches,
-/// resolved from string keys to `tensors[...]` indices once at model load.
-/// `NativeModel::advance_batch` performs zero string formatting, hashing or
-/// map lookups per token — it walks this plan and indexes
-/// [`Weights::data`] directly.
+/// resolved from string keys to `tensors[...]` indices once at model load,
+/// plus a shared handle to the bundle itself. `NativeModel::advance_batch`
+/// performs zero string formatting, hashing or map lookups per token — it
+/// walks this plan and indexes [`ResolvedPlan::data`] directly.
+///
+/// Cloning a plan clones the `Arc`, not the tensors: every replica built
+/// from the same bundle reads the same weight memory.
 #[derive(Clone, Debug)]
 pub struct ResolvedPlan {
+    weights: Arc<Weights>,
     pub embed: usize,
     pub final_norm: usize,
     pub layers: Vec<LayerPlan>,
@@ -201,7 +211,7 @@ impl ResolvedPlan {
     /// Resolve against a validated weight bundle. Shape errors cannot occur
     /// here (the bundle was checked against `param_spec` at load), but a
     /// missing name is still reported rather than panicking.
-    pub fn build(weights: &Weights, cfg: &LmConfig) -> Result<ResolvedPlan> {
+    pub fn build(weights: Arc<Weights>, cfg: &LmConfig) -> Result<ResolvedPlan> {
         let mut layers = Vec::with_capacity(cfg.n_layers);
         for i in 0..cfg.n_layers {
             let p = format!("layer{i:02}.");
@@ -216,11 +226,21 @@ impl ResolvedPlan {
                 w2: weights.tensor_index(&format!("{p}w2"))?,
             });
         }
-        Ok(ResolvedPlan {
-            embed: weights.tensor_index("embed")?,
-            final_norm: weights.tensor_index("final_norm")?,
-            layers,
-        })
+        let embed = weights.tensor_index("embed")?;
+        let final_norm = weights.tensor_index("final_norm")?;
+        Ok(ResolvedPlan { weights, embed, final_norm, layers })
+    }
+
+    /// The shared weight bundle this plan indexes into.
+    pub fn weights(&self) -> &Arc<Weights> {
+        &self.weights
+    }
+
+    /// Raw data of the tensor at a resolved index — the engine's only
+    /// weight accessor (no strings, no hashing, no map).
+    #[inline]
+    pub fn data(&self, idx: usize) -> &[f32] {
+        self.weights.data(idx)
     }
 }
 
@@ -261,17 +281,29 @@ mod tests {
     #[test]
     fn resolved_plan_matches_string_lookups() {
         let cfg = by_name("medium").unwrap();
-        let w = Weights::random(cfg, 5);
-        let plan = ResolvedPlan::build(&w, cfg).unwrap();
+        let w = Arc::new(Weights::random(cfg, 5));
+        let plan = ResolvedPlan::build(w.clone(), cfg).unwrap();
         assert_eq!(plan.layers.len(), cfg.n_layers);
-        assert_eq!(w.data(plan.embed), &w.get("embed").data[..]);
-        assert_eq!(w.data(plan.final_norm), &w.get("final_norm").data[..]);
+        assert_eq!(plan.data(plan.embed), &w.get("embed").data[..]);
+        assert_eq!(plan.data(plan.final_norm), &w.get("final_norm").data[..]);
         for (i, lp) in plan.layers.iter().enumerate() {
             let p = format!("layer{i:02}.");
-            assert_eq!(w.data(lp.wq), &w.get(&format!("{p}wq")).data[..]);
-            assert_eq!(w.data(lp.w2), &w.get(&format!("{p}w2")).data[..]);
-            assert_eq!(w.data(lp.attn_norm), &w.get(&format!("{p}attn_norm")).data[..]);
+            assert_eq!(plan.data(lp.wq), &w.get(&format!("{p}wq")).data[..]);
+            assert_eq!(plan.data(lp.w2), &w.get(&format!("{p}w2")).data[..]);
+            assert_eq!(plan.data(lp.attn_norm), &w.get(&format!("{p}attn_norm")).data[..]);
         }
+    }
+
+    #[test]
+    fn resolved_plans_share_one_bundle() {
+        // Two plans built from one Arc alias the same tensor memory: the
+        // replica-pool contract (N executors, one copy of the weights).
+        let cfg = by_name("nano").unwrap();
+        let w = Arc::new(Weights::random(cfg, 6));
+        let a = ResolvedPlan::build(w.clone(), cfg).unwrap();
+        let b = ResolvedPlan::build(w.clone(), cfg).unwrap();
+        assert!(std::ptr::eq(a.data(a.embed).as_ptr(), b.data(b.embed).as_ptr()));
+        assert_eq!(Arc::strong_count(&w), 3);
     }
 
     #[test]

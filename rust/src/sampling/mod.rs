@@ -11,7 +11,7 @@
 //!   (fallback; also used by tests so they need no artifacts).
 
 use crate::lm::config::{self, LmConfig};
-use crate::lm::native::{LaneState, NativeModel};
+use crate::lm::native::{LaneState, NativeModel, Scratch};
 use crate::lm::weights::Weights;
 use crate::runtime::{ArtifactStore, PjrtGenerator};
 use crate::textgen::Domain;
@@ -97,9 +97,20 @@ impl DatasetFactory {
 }
 
 /// Native (no-PJRT) sampler over [`NativeModel`].
+///
+/// Sampling is batched over prompts: [`NativeSampler::sample_batch`] runs
+/// all lanes through [`NativeModel::advance_batch`] with ONE shared
+/// [`Scratch`] arena (the single-lane `advance` wrapper used to allocate a
+/// one-lane scratch per decoded token). Per-lane bytes are bit-identical
+/// to single-lane sampling for a fixed seed: logits are bit-exact across
+/// lane batchings and each lane draws from its own seeded RNG.
 pub struct NativeSampler {
     model: NativeModel,
 }
+
+/// Lanes used by [`NativeSampler::generate_dataset`] (blocks sampled in
+/// parallel; pure execution knob — the output bytes don't depend on it).
+const GEN_LANES: usize = 4;
 
 impl NativeSampler {
     pub fn new(cfg: &'static LmConfig, weights: Weights) -> Self {
@@ -107,41 +118,85 @@ impl NativeSampler {
     }
 
     /// Sample `n_tokens` bytes continuing `prompt` (Gumbel-max over
-    /// temperature-scaled byte logits).
+    /// temperature-scaled byte logits). One-lane wrapper over
+    /// [`Self::sample_batch`].
     pub fn sample(&self, prompt: &[u32], n_tokens: usize, temp: f64, seed: u64) -> Result<Vec<u8>> {
-        let mut rng = Pcg64::new(seed, 31);
-        let mut lane = LaneState::new(self.model.cfg, config::MAX_CONTEXT);
-        let mut out = Vec::with_capacity(n_tokens);
-        let mut logits = vec![0.0f32; config::VOCAB];
-        for (i, &t) in prompt.iter().enumerate() {
-            let l = self.model.advance(&mut lane, t)?;
-            if i == prompt.len() - 1 {
-                logits = l;
-            }
+        let mut out = self.sample_batch(&[prompt.to_vec()], n_tokens, temp, &[seed])?;
+        Ok(out.pop().expect("one lane in, one lane out"))
+    }
+
+    /// Sample one continuation per prompt, all lanes stepped together
+    /// through the batched engine. Prompts must share one length (lanes
+    /// run in lockstep; a padded short lane would see a different context
+    /// and diverge from its single-lane output). Lane `l` draws from its
+    /// own RNG seeded with `seeds[l]`, so each lane's bytes are identical
+    /// to `sample(prompts[l], .., seeds[l])` run alone.
+    pub fn sample_batch(
+        &self,
+        prompts: &[Vec<u32>],
+        n_tokens: usize,
+        temp: f64,
+        seeds: &[u64],
+    ) -> Result<Vec<Vec<u8>>> {
+        let n = prompts.len();
+        if n == 0 {
+            return Ok(Vec::new());
         }
+        if seeds.len() != n {
+            anyhow::bail!("sample_batch: {} prompts but {} seeds", n, seeds.len());
+        }
+        let plen = prompts[0].len();
+        if prompts.iter().any(|p| p.len() != plen) {
+            anyhow::bail!("sample_batch: prompts must share one length (lockstep lanes)");
+        }
+        let cfg = self.model.cfg;
+        let mut rngs: Vec<Pcg64> = seeds.iter().map(|&s| Pcg64::new(s, 31)).collect();
+        let mut lanes: Vec<LaneState> =
+            (0..n).map(|_| LaneState::new(cfg, config::MAX_CONTEXT)).collect();
+        let mut scratch = Scratch::new(cfg, n);
+        let mut logits = vec![0.0f32; n * config::VOCAB];
+        let mut toks = vec![0u32; n];
+        // Prompt replay: one batched step per position; the buffer ends up
+        // holding every lane's logits at its last prompt token.
+        for t in 0..plen {
+            for (tok, p) in toks.iter_mut().zip(prompts) {
+                *tok = p[t];
+            }
+            self.model.advance_batch(&mut lanes, &toks, &mut scratch, &mut logits, config::VOCAB)?;
+        }
+        let mut outs: Vec<Vec<u8>> = (0..n).map(|_| Vec::with_capacity(n_tokens)).collect();
         for _ in 0..n_tokens {
-            if lane.pos() >= config::MAX_CONTEXT {
+            // Lockstep: every lane shares one position counter.
+            if lanes[0].pos() >= config::MAX_CONTEXT {
                 break;
             }
             let inv_t = 1.0 / temp.max(1e-4) as f32;
-            let mut best = 0usize;
-            let mut best_v = f32::NEG_INFINITY;
-            for (s, &lo) in logits.iter().take(256).enumerate() {
-                let u = rng.gen_f64().max(1e-12);
-                let gumbel = -(-(u.ln())).ln();
-                let v = lo * inv_t + gumbel as f32;
-                if v > best_v {
-                    best_v = v;
-                    best = s;
+            for (l, rng) in rngs.iter_mut().enumerate() {
+                let lane_logits = &logits[l * config::VOCAB..(l + 1) * config::VOCAB];
+                let mut best = 0usize;
+                let mut best_v = f32::NEG_INFINITY;
+                for (s, &lo) in lane_logits.iter().take(256).enumerate() {
+                    let u = rng.gen_f64().max(1e-12);
+                    let gumbel = -(-(u.ln())).ln();
+                    let v = lo * inv_t + gumbel as f32;
+                    if v > best_v {
+                        best_v = v;
+                        best = s;
+                    }
                 }
+                outs[l].push(best as u8);
+                toks[l] = best as u32;
             }
-            out.push(best as u8);
-            logits = self.model.advance(&mut lane, best as u32)?;
+            self.model.advance_batch(&mut lanes, &toks, &mut scratch, &mut logits, config::VOCAB)?;
         }
-        Ok(out)
+        Ok(outs)
     }
 
-    /// Dataset-shaped output: repeated blocks until `min_bytes`.
+    /// Dataset-shaped output: repeated blocks until `min_bytes`, sampled
+    /// [`GEN_LANES`] blocks at a time. Identical bytes to the serial
+    /// one-block-at-a-time path for a fixed seed: every block uses the
+    /// same prompt row and the same per-block seed schedule, lanes are
+    /// bit-exact, and the final truncate discards any overshoot.
     pub fn generate_dataset(
         &self,
         domain: Domain,
@@ -151,17 +206,22 @@ impl NativeSampler {
     ) -> Result<Vec<u8>> {
         let mut out = Vec::with_capacity(min_bytes + 1024);
         let mut block = 0u64;
+        let prompt = domain_prompts(domain, 1, config::GEN_PROMPT).pop().expect("one prompt");
         while out.len() < min_bytes {
-            let prompts = domain_prompts(domain, 1, config::GEN_PROMPT);
-            let bytes = self.sample(
-                &prompts[0],
-                config::GEN_TOKENS,
-                temp,
-                seed.wrapping_mul(0x9E37_79B9).wrapping_add(block),
-            )?;
-            out.extend(bytes);
-            out.push(b'\n');
-            block += 1;
+            // Don't fan out further than the remaining byte budget needs
+            // (a block yields <= GEN_TOKENS + 1 bytes); per-block seeds are
+            // indexed by `block`, so the lane count never changes the bytes.
+            let remaining = min_bytes - out.len();
+            let lanes = remaining.div_ceil(config::GEN_TOKENS + 1).clamp(1, GEN_LANES);
+            let prompts: Vec<Vec<u32>> = (0..lanes).map(|_| prompt.clone()).collect();
+            let seeds: Vec<u64> = (0..lanes as u64)
+                .map(|i| seed.wrapping_mul(0x9E37_79B9).wrapping_add(block + i))
+                .collect();
+            for bytes in self.sample_batch(&prompts, config::GEN_TOKENS, temp, &seeds)? {
+                out.extend(bytes);
+                out.push(b'\n');
+            }
+            block += lanes as u64;
         }
         out.truncate(min_bytes);
         Ok(out)
@@ -220,5 +280,54 @@ mod tests {
         let s = NativeSampler::new(cfg, Weights::random(cfg, 13));
         let d = s.generate_dataset(Domain::Wiki, 600, 0.9, 3).unwrap();
         assert_eq!(d.len(), 600);
+    }
+
+    #[test]
+    fn batched_sampling_matches_single_lane_bit_for_bit() {
+        // The batched sampler must reproduce each lane's single-lane bytes
+        // exactly: batching is a pure execution knob, like engine threads.
+        let cfg = by_name("nano").unwrap();
+        let s = NativeSampler::new(cfg, Weights::random(cfg, 14));
+        let p = domain_prompts(Domain::Math, 1, 12).pop().unwrap();
+        let seeds = [7u64, 8, 9];
+        let prompts = vec![p.clone(), p.clone(), p.clone()];
+        let batch = s.sample_batch(&prompts, 25, 0.9, &seeds).unwrap();
+        for (l, &seed) in seeds.iter().enumerate() {
+            assert_eq!(batch[l], s.sample(&p, 25, 0.9, seed).unwrap(), "lane {l} seed {seed}");
+        }
+        // Mismatched prompt lengths are rejected rather than silently
+        // padded (padding would change the short lane's context).
+        let uneven = vec![p.clone(), p[..6].to_vec()];
+        assert!(s.sample_batch(&uneven, 5, 0.9, &[1, 2]).is_err());
+        assert!(s.sample_batch(&prompts, 5, 0.9, &[1, 2]).is_err(), "seed count checked");
+    }
+
+    #[test]
+    fn batched_dataset_matches_serial_block_schedule() {
+        // generate_dataset samples GEN_LANES blocks per engine pass; the
+        // bytes must equal the serial one-block-at-a-time construction.
+        let cfg = by_name("nano").unwrap();
+        let s = NativeSampler::new(cfg, Weights::random(cfg, 15));
+        let (min_bytes, temp, seed) = (500usize, 0.9, 5u64);
+        let got = s.generate_dataset(Domain::Wiki, min_bytes, temp, seed).unwrap();
+        let mut want = Vec::new();
+        let mut block = 0u64;
+        while want.len() < min_bytes {
+            let prompt =
+                domain_prompts(Domain::Wiki, 1, config::GEN_PROMPT).pop().unwrap();
+            let bytes = s
+                .sample(
+                    &prompt,
+                    crate::lm::config::GEN_TOKENS,
+                    temp,
+                    seed.wrapping_mul(0x9E37_79B9).wrapping_add(block),
+                )
+                .unwrap();
+            want.extend(bytes);
+            want.push(b'\n');
+            block += 1;
+        }
+        want.truncate(min_bytes);
+        assert_eq!(got, want);
     }
 }

@@ -1,10 +1,12 @@
 //! Integration tests for the coordinator service (native engine — no
-//! artifacts needed) including the TCP wire protocol.
+//! artifacts needed): the replica pool, priority scheduling, bit-exactness
+//! across pool configurations, and the TCP wire protocol.
 
-use llmzip::compress::LlmCompressor;
-use llmzip::coordinator::{BatchPolicy, Server, ServerConfig};
+use llmzip::compress::{Compressor, LlmCompressor, LlmCompressorConfig};
+use llmzip::coordinator::{BatchPolicy, Server, ServerConfig, WorkKind};
 use llmzip::lm::config::by_name;
 use llmzip::lm::weights::Weights;
+use llmzip::lm::ExecutorKind;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
@@ -18,6 +20,36 @@ fn native_server(lanes: usize) -> Server {
         ServerConfig {
             chunk_tokens: 64,
             policy: BatchPolicy { lanes, max_wait: Duration::from_millis(3) },
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+/// Replica-pool server: `replicas` engine workers sharing ONE
+/// `Arc<Weights>` bundle, each replica's native engine running `threads`
+/// step-pool threads.
+fn replica_server(replicas: usize, threads: usize, weights: Arc<Weights>) -> Server {
+    Server::start(
+        move || {
+            LlmCompressor::from_shared(
+                by_name("nano")?,
+                weights.clone(),
+                LlmCompressorConfig {
+                    model: "nano".into(),
+                    chunk_tokens: 64,
+                    stream_bytes: 256,
+                    executor: ExecutorKind::Native,
+                    lanes: 4,
+                    threads,
+                },
+            )
+        },
+        ServerConfig {
+            chunk_tokens: 64,
+            replicas,
+            threads,
+            policy: BatchPolicy { lanes: 4, max_wait: Duration::from_millis(3) },
             ..Default::default()
         },
     )
@@ -78,4 +110,89 @@ fn server_survives_errors_and_keeps_serving() {
     let data = llmzip::textgen::quick_sample(300, 5);
     let z = server.compress(&data).unwrap();
     assert_eq!(server.decompress(&z).unwrap(), data);
+}
+
+#[test]
+fn multi_replica_concurrent_stress_lossless_with_latency_percentiles() {
+    // >= 8 client threads firing mixed compress/decompress at a 3-replica
+    // pool: every roundtrip must be lossless, no request may error, and
+    // the decompress latency histogram must have recorded a p99.
+    let weights = Arc::new(Weights::random(by_name("nano").unwrap(), 99));
+    let server = Arc::new(replica_server(3, 1, weights));
+    let mut handles = Vec::new();
+    for i in 0..8u64 {
+        let srv = server.clone();
+        handles.push(std::thread::spawn(move || {
+            let data = llmzip::textgen::quick_sample(500 + i as usize * 41, i);
+            for round in 0..3u64 {
+                let z = srv.compress(&data).unwrap();
+                assert_eq!(srv.decompress(&z).unwrap(), data, "client {i} round {round}");
+                if round == 0 {
+                    // Interactive compress rides ahead of queued bulk work.
+                    let zi = srv.compress_interactive(&data).unwrap();
+                    assert_eq!(zi, z, "priority must not change the bytes");
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = &server.metrics;
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0);
+    assert_eq!(m.requests.load(Ordering::Relaxed), 8 * (3 * 2 + 1));
+    assert!(m.latency_samples(WorkKind::Decompress) >= 24);
+    let p50 = m.latency_percentile_ms(WorkKind::Decompress, 0.5);
+    let p99 = m.latency_percentile_ms(WorkKind::Decompress, 0.99);
+    assert!(p50 > 0.0 && p99 >= p50, "p50={p50} p99={p99}");
+    assert!(m.latency_percentile_ms(WorkKind::Compress, 0.99) > 0.0);
+    // Every dispatched batch is attributed to exactly one worker slot.
+    let per_worker: u64 =
+        m.workers.iter().map(|w| w.batches.load(Ordering::Relaxed)).sum();
+    assert_eq!(per_worker, m.batches.load(Ordering::Relaxed));
+}
+
+#[test]
+fn containers_bit_identical_across_replicas_threads_and_direct_path() {
+    // The acceptance bar: containers are byte-identical for ANY
+    // {replicas, threads} server configuration AND identical to the
+    // direct (no-server) compressor path, which tests/golden_logits.rs
+    // pins bit-for-bit to the frozen lm/reference.rs implementation.
+    let cfg = by_name("nano").unwrap();
+    let weights = Arc::new(Weights::random(cfg, 99));
+    // Multi-chunk payload (stream granularity 256 bytes -> 5 chunks).
+    let data = llmzip::textgen::quick_sample(1200, 7);
+    let direct = LlmCompressor::from_weights(cfg, weights.clone(), 64, 4).unwrap();
+    let golden = direct.compress(&data).unwrap();
+    let mut containers = Vec::new();
+    for (replicas, threads) in [(1usize, 1usize), (2, 2), (4, 1)] {
+        let server = replica_server(replicas, threads, weights.clone());
+        let z = server.compress(&data).unwrap();
+        assert_eq!(
+            z, golden,
+            "container bytes diverged at replicas={replicas} threads={threads}"
+        );
+        // Cross-decode: the server decodes the direct container and the
+        // direct compressor decodes the server's.
+        assert_eq!(server.decompress(&golden).unwrap(), data);
+        containers.push(z);
+    }
+    for z in &containers {
+        assert_eq!(direct.decompress(z).unwrap(), data);
+    }
+}
+
+#[test]
+fn server_empty_container_roundtrips_through_compressor() {
+    // Regression (zero-length-compress fix): server-produced empty
+    // containers carry the real `model:flag` tag and decode through
+    // `LlmCompressor::decompress`.
+    let cfg = by_name("nano").unwrap();
+    let weights = Arc::new(Weights::random(cfg, 99));
+    let server = replica_server(2, 1, weights.clone());
+    let z = server.compress(b"").unwrap();
+    let direct = LlmCompressor::from_weights(cfg, weights, 64, 4).unwrap();
+    assert_eq!(direct.container_tag(), "nano:0");
+    assert_eq!(direct.decompress(&z).unwrap(), b"");
+    assert_eq!(server.decompress(&z).unwrap(), b"");
 }
