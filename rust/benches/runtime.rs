@@ -5,7 +5,9 @@
 //! 1. **Native engine (always runs, no artifacts needed)** — tokens/sec of
 //!    the batched resolved-plan engine vs. the frozen seed implementation
 //!    (`llmzip::lm::reference`), single-threaded and multi-threaded (the
-//!    persistent worker pool), plus the bulk-encode path, per model size.
+//!    persistent worker pool), plus the bulk-encode path, per model size —
+//!    and an **f32-vs-int8** section (quantized weight path: tokens/sec +
+//!    resident weight bytes).
 //! 2. **Coordinator replica scaling (always runs)** — end-to-end server
 //!    tokens/sec with 1 vs N engine replicas sharing one `Arc<Weights>`,
 //!    under concurrent client load.
@@ -167,6 +169,72 @@ fn native_engine_benches() -> Vec<NativeRow> {
     rows
 }
 
+struct Int8Row {
+    model: &'static str,
+    f32_tps: f64,
+    int8_tps: f64,
+    f32_weight_bytes: usize,
+    int8_weight_bytes: usize,
+}
+
+/// F32 vs int8-quantized weights on the single-threaded step path (the
+/// memory-bandwidth-bound loop quantization targets), plus the resident
+/// weight bytes each engine streams per step.
+fn int8_engine_benches() -> Vec<Int8Row> {
+    section("int8 quantized weights vs f32 (1 thread, step path)");
+    println!(
+        "{:<10} {:>14} {:>14} {:>8} {:>12} {:>12}",
+        "MODEL", "f32 t/s", "int8 t/s", "x", "f32 bytes", "int8 bytes"
+    );
+    let mut rows = Vec::new();
+    let models: &[&'static str] =
+        if smoke() { &["nano", "small"] } else { &["nano", "small", "medium", "large"] };
+    for &name in models {
+        let cfg = by_name(name).unwrap();
+        let weights = Weights::random(cfg, 17);
+        let quantized = weights.quantize();
+        let (f32_bytes, int8_bytes) = (weights.resident_bytes(), quantized.resident_bytes());
+        let toks: Vec<u32> = std::iter::once(BOS)
+            .chain((0..WINDOW - 1).map(|i| ((i * 31 + 7) % 256) as u32))
+            .collect();
+        let mut row = vec![0u32; LANES];
+        let mut out = vec![0.0f32; LANES * VOCAB];
+        let mut f32_ex = NativeExecutor::new(cfg, weights, LANES);
+        let f32_tps = measure_tps(|| {
+            f32_ex.reset();
+            for &t in &toks {
+                row.fill(t);
+                f32_ex.step_into(&row, &mut out).unwrap();
+            }
+        });
+        let mut int8_ex = NativeExecutor::new(cfg, quantized, LANES);
+        let int8_tps = measure_tps(|| {
+            int8_ex.reset();
+            for &t in &toks {
+                row.fill(t);
+                int8_ex.step_into(&row, &mut out).unwrap();
+            }
+        });
+        println!(
+            "{:<10} {:>14.0} {:>14.0} {:>7.2}x {:>12} {:>12}",
+            name,
+            f32_tps,
+            int8_tps,
+            int8_tps / f32_tps.max(1e-9),
+            f32_bytes,
+            int8_bytes,
+        );
+        rows.push(Int8Row {
+            model: name,
+            f32_tps,
+            int8_tps,
+            f32_weight_bytes: f32_bytes,
+            int8_weight_bytes: int8_bytes,
+        });
+    }
+    rows
+}
+
 struct ReplicaPoint {
     replicas: usize,
     tokens_per_sec: f64,
@@ -203,6 +271,7 @@ fn replica_scaling_bench() -> Vec<ReplicaPoint> {
                             executor: ExecutorKind::Native,
                             lanes: 4,
                             threads: 1,
+                            ..Default::default()
                         },
                     )
                 },
@@ -255,11 +324,11 @@ fn replica_scaling_bench() -> Vec<ReplicaPoint> {
 }
 
 /// Hand-rolled JSON (no serde in this offline crate set).
-fn write_bench_json(rows: &[NativeRow], replica_points: &[ReplicaPoint]) {
+fn write_bench_json(rows: &[NativeRow], int8_rows: &[Int8Row], replica_points: &[ReplicaPoint]) {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"runtime\",\n");
-    s.push_str("  \"schema\": 1,\n");
+    s.push_str("  \"schema\": 2,\n");
     s.push_str(&format!("  \"lanes\": {LANES},\n"));
     s.push_str(&format!("  \"window\": {WINDOW},\n"));
     s.push_str("  \"unit\": \"tokens_per_sec\",\n");
@@ -279,6 +348,21 @@ fn write_bench_json(rows: &[NativeRow], replica_points: &[ReplicaPoint]) {
             r.reference_tps.max(1e-9).recip() * r.batched_1t_tps,
             r.reference_tps.max(1e-9).recip() * r.batched_mt_tps,
             if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"int8\": [\n");
+    for (i, r) in int8_rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"model\": \"{}\", \"f32_step_tps\": {:.1}, \"int8_step_tps\": {:.1}, \
+             \"speedup\": {:.3}, \"f32_weight_bytes\": {}, \"int8_weight_bytes\": {}}}{}\n",
+            r.model,
+            r.f32_tps,
+            r.int8_tps,
+            r.int8_tps / r.f32_tps.max(1e-9),
+            r.f32_weight_bytes,
+            r.int8_weight_bytes,
+            if i + 1 < int8_rows.len() { "," } else { "" },
         ));
     }
     s.push_str("  ],\n");
@@ -395,8 +479,9 @@ fn pjrt_benches() {
 
 fn main() {
     let rows = native_engine_benches();
+    let int8_rows = int8_engine_benches();
     let replica_points = replica_scaling_bench();
-    write_bench_json(&rows, &replica_points);
+    write_bench_json(&rows, &int8_rows, &replica_points);
     if smoke() {
         println!("\nSKIP PJRT runtime bench: smoke mode");
         return;

@@ -2,7 +2,7 @@
 
 use crate::cli::Args;
 use llmzip::compress::{Compressor, LlmCompressor, LlmCompressorConfig};
-use llmzip::lm::ExecutorKind;
+use llmzip::lm::{ExecutorKind, Precision};
 use llmzip::runtime::ArtifactStore;
 use llmzip::Result;
 use std::time::Instant;
@@ -16,6 +16,12 @@ pub(crate) fn executor_from_str(s: &str) -> Result<ExecutorKind> {
     })
 }
 
+/// Shared `--precision {f32,int8}` flag (the weight-bytes contract both
+/// stream ends must agree on; int8 is native-engine only).
+pub(crate) fn precision_arg(args: &Args) -> Result<Precision> {
+    Precision::parse(&args.str_or("precision", "f32"))
+}
+
 pub(crate) fn open_compressor(args: &Args) -> Result<LlmCompressor> {
     let store = ArtifactStore::open(args.get("artifacts"))?;
     let chunk = args.usize_or("chunk", 256)?;
@@ -26,6 +32,7 @@ pub(crate) fn open_compressor(args: &Args) -> Result<LlmCompressor> {
         executor: executor_from_str(&args.str_or("executor", "pjrt"))?,
         lanes: args.usize_or("lanes", 8)?,
         threads: args.usize_or("threads", super::default_threads())?,
+        precision: precision_arg(args)?,
     };
     LlmCompressor::open(&store, cfg)
 }
@@ -39,7 +46,8 @@ pub fn compress(args: &[String]) -> Result<()> {
     let dt = t0.elapsed();
     std::fs::write(args.required("out")?, &z)?;
     println!(
-        "{} -> {} bytes (ratio {:.2}x) in {:.2}s ({:.1} KiB/s, model={}, chunk={}, executor={:?})",
+        "{} -> {} bytes (ratio {:.2}x) in {:.2}s ({:.1} KiB/s, model={}, chunk={}, \
+         executor={:?}, precision={})",
         input.len(),
         z.len(),
         input.len() as f64 / z.len() as f64,
@@ -48,6 +56,7 @@ pub fn compress(args: &[String]) -> Result<()> {
         comp.model_config().name,
         comp.chunk_tokens(),
         comp.executor_kind(),
+        comp.precision().as_str(),
     );
     Ok(())
 }

@@ -1,8 +1,29 @@
-//! `models` — list registered model variants and artifact availability.
+//! `models` — list registered model variants and artifact availability,
+//! plus `.lmz` weight-file tooling:
+//!
+//! * `models quantize` — convert an `.lmz` v1 (f32) file to the v2
+//!   int8-quantized format on disk (deterministic: the output bytes, and
+//!   therefore the fingerprint the serving stack records in containers,
+//!   depend only on the input bytes).
+//! * `models gen` — write a deterministic random-weight `.lmz` fixture
+//!   (the same `Weights::random` family the test suite uses), so CI and
+//!   offline environments can exercise the full compress/serve/quantize
+//!   path without trained artifacts.
 
-use llmzip::lm::config::MODELS;
+use crate::cli::Args;
+use llmzip::lm::config::{by_name, MODELS};
+use llmzip::lm::weights::Weights;
 use llmzip::runtime::ArtifactStore;
+use llmzip::util::human_bytes;
 use llmzip::Result;
+
+pub fn run(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("quantize") => quantize(&args[1..]),
+        Some("gen") => gen(&args[1..]),
+        _ => list(args),
+    }
+}
 
 pub fn list(_args: &[String]) -> Result<()> {
     let store = ArtifactStore::open(None).ok();
@@ -23,5 +44,39 @@ pub fn list(_args: &[String]) -> Result<()> {
             m.simulates,
         );
     }
+    Ok(())
+}
+
+/// `models quantize --model M --in f32.lmz --out q8.lmz`
+fn quantize(args: &[String]) -> Result<()> {
+    let args = Args::parse(args)?;
+    let cfg = by_name(&args.str_or("model", "medium"))?;
+    let input = std::path::Path::new(args.required("in")?);
+    let weights = Weights::load(input, cfg)?;
+    let quantized = weights.quantize();
+    let bytes = quantized.to_bytes();
+    std::fs::write(args.required("out")?, &bytes)?;
+    println!(
+        "{}: {} (f32) -> {} (int8), fingerprint {:08x}",
+        cfg.name,
+        human_bytes(weights.resident_bytes() as u64),
+        human_bytes(quantized.resident_bytes() as u64),
+        quantized.fingerprint(),
+    );
+    Ok(())
+}
+
+/// `models gen --model M --out weights.lmz [--seed N]`
+fn gen(args: &[String]) -> Result<()> {
+    let args = Args::parse(args)?;
+    let cfg = by_name(&args.str_or("model", "nano"))?;
+    let seed = args.u64_or("seed", 17)?;
+    let weights = Weights::random(cfg, seed);
+    std::fs::write(args.required("out")?, weights.to_bytes())?;
+    println!(
+        "{}: wrote {} of deterministic random weights (seed {seed})",
+        cfg.name,
+        human_bytes(weights.resident_bytes() as u64),
+    );
     Ok(())
 }

@@ -8,7 +8,7 @@
 use crate::cli::Args;
 use llmzip::compress::{LlmCompressor, LlmCompressorConfig};
 use llmzip::coordinator::{BatchPolicy, Server, ServerConfig};
-use llmzip::lm::ExecutorKind;
+use llmzip::lm::{ExecutorKind, Precision};
 use llmzip::Result;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -31,6 +31,10 @@ pub fn serve(args: &[String]) -> Result<()> {
     // replicas share one Arc<Weights> (loaded once, below); PJRT replicas
     // each open their own thread-affine handles.
     let replicas = args.usize_or("replicas", 1)?;
+    // Weight precision: with int8, the bundle is quantized ONCE here and
+    // every replica shares the quantized Arc (half the resident weight
+    // bytes, and one fingerprint for the whole pool).
+    let precision = super::compress::precision_arg(&args)?;
 
     let comp_cfg = LlmCompressorConfig {
         model: model.clone(),
@@ -39,17 +43,30 @@ pub fn serve(args: &[String]) -> Result<()> {
         executor,
         lanes,
         threads,
+        precision,
     };
     let factory: Box<dyn Fn() -> Result<LlmCompressor> + Send + Sync> =
         if executor == ExecutorKind::Native {
             // Load the weights ONCE; every replica clones the Arc.
             let model_cfg = llmzip::lm::config::by_name(&model)?;
             let store = llmzip::runtime::ArtifactStore::open(artifacts.as_deref())?;
-            let weights = Arc::new(store.weights(model_cfg)?);
+            let weights = store.weights(model_cfg)?;
+            let weights = match (precision, weights.precision()) {
+                (Precision::Int8, Precision::F32) => weights.quantize(),
+                (Precision::F32, Precision::Int8) => anyhow::bail!(
+                    "weights for '{model}' are int8-quantized on disk; serve them with \
+                     --precision int8"
+                ),
+                _ => weights,
+            };
+            let weights = Arc::new(weights);
             Box::new(move || {
                 LlmCompressor::from_shared(model_cfg, weights.clone(), comp_cfg.clone())
             })
         } else {
+            if precision != Precision::F32 {
+                anyhow::bail!("--precision int8 requires --executor native");
+            }
             Box::new(move || {
                 let store = llmzip::runtime::ArtifactStore::open(artifacts.as_deref())?;
                 LlmCompressor::open(&store, comp_cfg.clone())
@@ -73,7 +90,9 @@ pub fn serve(args: &[String]) -> Result<()> {
     let listener = TcpListener::bind(("127.0.0.1", port as u16))?;
     println!(
         "llmzip serving on 127.0.0.1:{port} \
-         (chunk={chunk}, lanes={lanes}, threads={threads}, replicas={replicas})"
+         (chunk={chunk}, lanes={lanes}, threads={threads}, replicas={replicas}, \
+         precision={})",
+        precision.as_str()
     );
     loop {
         let (stream, peer) = listener.accept()?;

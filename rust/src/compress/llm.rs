@@ -30,6 +30,19 @@
 //! logits (same code on both sides). `tests/golden_logits.rs` further pins
 //! the native engine to the frozen seed implementation bit-for-bit, so
 //! containers produced before the batched-engine refactor still decode.
+//!
+//! ## Precision is part of the contract
+//!
+//! Bit-identical logits also require bit-identical *weights*: an
+//! int8-quantized bundle produces different logits than its f32 source,
+//! so containers record the weight precision and (for quantized bundles)
+//! the bundle's content fingerprint in the tag:
+//! `model:executor_flag[:q8:<fingerprint-hex>]`. Legacy 2-part tags parse
+//! as f32 — every pre-existing container keeps decoding, and f32
+//! compressors keep emitting the 2-part tag so their container bytes are
+//! unchanged. A precision or fingerprint mismatch is rejected up front
+//! with a clear error instead of surfacing as a baffling CRC failure
+//! after decoding garbage.
 
 use crate::compress::container::{ChunkRecord, Container};
 use crate::compress::Compressor;
@@ -37,7 +50,7 @@ use crate::entropy::range::{RangeDecoder, RangeEncoder};
 use crate::lm::config::{self, LmConfig};
 use crate::lm::executor::{ExecutorKind, LmExecutor};
 use crate::lm::native::NativeExecutor;
-use crate::lm::weights::Weights;
+use crate::lm::weights::{Precision, Weights};
 use crate::runtime::{ArtifactStore, PjrtForwardExecutor, PjrtStepExecutor};
 use crate::tokenizer::vocab::{BOS, PAD};
 use crate::util::crc32;
@@ -97,6 +110,59 @@ pub fn logits_to_cdf(logits: &[f32]) -> [u32; 257] {
     cums
 }
 
+/// Parsed container tag: `model:executor_flag` (legacy, f32) or
+/// `model:executor_flag:q8:<fingerprint-hex>` (int8-quantized weights).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ContainerTag<'a> {
+    pub model: &'a str,
+    pub executor: ExecutorKind,
+    pub precision: Precision,
+    /// Weight-bundle fingerprint; `None` for legacy f32 tags.
+    pub fingerprint: Option<u32>,
+}
+
+impl<'a> ContainerTag<'a> {
+    /// Parse a container's `model_name` field. Legacy 2-part tags are f32;
+    /// 4-part tags carry precision + fingerprint.
+    pub fn parse(tag: &'a str) -> Result<ContainerTag<'a>> {
+        let parts: Vec<&str> = tag.split(':').collect();
+        let (model, flag) = match parts.as_slice() {
+            [m, f] | [m, f, _, _] => (*m, *f),
+            _ => anyhow::bail!("container missing executor tag"),
+        };
+        let flag: u16 = flag.parse()?;
+        let executor = ExecutorKind::from_flag(flag)?;
+        let (precision, fingerprint) = match parts.as_slice() {
+            [_, _] => (Precision::F32, None),
+            [_, _, prec, fp] => {
+                if *prec != "q8" {
+                    anyhow::bail!("unknown container precision tag '{prec}'");
+                }
+                let fp = u32::from_str_radix(fp, 16)
+                    .map_err(|_| anyhow::anyhow!("bad weight fingerprint '{fp}'"))?;
+                (Precision::Int8, Some(fp))
+            }
+            _ => unreachable!("matched above"),
+        };
+        Ok(ContainerTag { model, executor, precision, fingerprint })
+    }
+}
+
+/// Render the tag this compressor stamps into containers. F32 bundles use
+/// the legacy 2-part form so f32 container bytes are identical to every
+/// earlier release (golden-pinned); quantized bundles add `q8` + the
+/// bundle fingerprint.
+fn render_tag(model: &str, executor: ExecutorKind, weights: Option<&Weights>) -> String {
+    let flag = executor.as_flag();
+    match weights.map(|w| w.precision()) {
+        None | Some(Precision::F32) => format!("{model}:{flag}"),
+        Some(Precision::Int8) => {
+            let fp = weights.expect("int8 implies weights").fingerprint();
+            format!("{model}:{flag}:q8:{fp:08x}")
+        }
+    }
+}
+
 /// Configuration for [`LlmCompressor`].
 #[derive(Clone, Debug)]
 pub struct LlmCompressorConfig {
@@ -117,6 +183,11 @@ pub struct LlmCompressorConfig {
     /// persistent worker pool (bit-exact for any value). PJRT engines
     /// ignore this.
     pub threads: usize,
+    /// Weight precision contract (native engine only; PJRT is f32). With
+    /// `Int8`, an f32 bundle is quantized deterministically at open, the
+    /// container tag records precision + bundle fingerprint, and decode
+    /// refuses containers whose contract doesn't match.
+    pub precision: Precision,
 }
 
 impl Default for LlmCompressorConfig {
@@ -128,6 +199,7 @@ impl Default for LlmCompressorConfig {
             executor: ExecutorKind::PjrtForward,
             lanes: 8,
             threads: 1,
+            precision: Precision::F32,
         }
     }
 }
@@ -136,6 +208,9 @@ impl Default for LlmCompressorConfig {
 pub struct LlmCompressor {
     cfg: LlmCompressorConfig,
     model_cfg: &'static LmConfig,
+    /// Tag stamped into every produced container (and matched on decode):
+    /// `model:flag` for f32, `model:flag:q8:<fp>` for quantized weights.
+    tag: String,
     engine: RefCell<Box<dyn LmExecutor>>,
 }
 
@@ -150,19 +225,40 @@ impl LlmCompressor {
             anyhow::bail!("stream_bytes must be >= chunk_tokens");
         }
         let engine: Box<dyn LmExecutor> = match cfg.executor {
+            ExecutorKind::PjrtForward | ExecutorKind::PjrtStep
+                if cfg.precision != Precision::F32 =>
+            {
+                anyhow::bail!(
+                    "precision {:?} is supported by the native engine only (PJRT artifacts \
+                     are lowered in f32)",
+                    cfg.precision
+                )
+            }
             ExecutorKind::PjrtForward => {
                 Box::new(PjrtForwardExecutor::from_store(store, model_cfg)?)
             }
             ExecutorKind::PjrtStep => Box::new(PjrtStepExecutor::from_store(store, model_cfg)?),
             // One construction path for native engines: the store path is
-            // just the replica path with a freshly loaded bundle, so the
-            // head-rows/threads/validation logic cannot drift between them.
+            // just the replica path with a freshly loaded bundle (quantized
+            // here if the knob asks for int8), so the head-rows/threads/
+            // precision/validation logic cannot drift between them.
             ExecutorKind::Native => {
                 let weights = store.weights(model_cfg)?;
+                let weights = match (cfg.precision, weights.precision()) {
+                    (Precision::Int8, Precision::F32) => weights.quantize(),
+                    (Precision::F32, Precision::Int8) => anyhow::bail!(
+                        "weights for '{}' are int8-quantized on disk but the compressor asks \
+                         for f32 — quantization is not reversible; use precision int8 or the \
+                         original f32 .lmz",
+                        model_cfg.name
+                    ),
+                    _ => weights,
+                };
                 return Self::from_shared(model_cfg, Arc::new(weights), cfg);
             }
         };
-        Ok(LlmCompressor { cfg, model_cfg, engine: RefCell::new(engine) })
+        let tag = render_tag(&cfg.model, cfg.executor, None);
+        Ok(LlmCompressor { cfg, model_cfg, tag, engine: RefCell::new(engine) })
     }
 
     /// Build a native-engine compressor from an explicit config and an
@@ -183,19 +279,33 @@ impl LlmCompressor {
         if cfg.stream_bytes < cfg.chunk_tokens {
             anyhow::bail!("stream_bytes must be >= chunk_tokens");
         }
+        // The precision knob is a contract, not a hint: a replica factory
+        // handing over a bundle that contradicts it is a config bug, and
+        // silently adopting either side would let the two ends of a stream
+        // disagree about the logits.
+        if cfg.precision != weights.precision() {
+            anyhow::bail!(
+                "compressor config asks for {:?} but the shared weight bundle is {:?}",
+                cfg.precision,
+                weights.precision()
+            );
+        }
         // The tag recorded in containers must name the engine actually
         // built, whatever the caller left in `cfg.model`.
         let mut cfg = cfg;
         cfg.model = model_cfg.name.into();
+        let tag = render_tag(&cfg.model, ExecutorKind::Native, Some(&weights));
         let engine = NativeExecutor::new(model_cfg, weights, cfg.lanes.max(1))
             .with_threads(cfg.threads.max(1))
             .with_head_rows(config::CODED_BYTES);
-        Ok(LlmCompressor { cfg, model_cfg, engine: RefCell::new(Box::new(engine)) })
+        Ok(LlmCompressor { cfg, model_cfg, tag, engine: RefCell::new(Box::new(engine)) })
     }
 
     /// Build directly from weights with the native engine (no artifacts/PJRT
     /// required — used by tests and the fallback path). Accepts an owned
-    /// `Weights` or an `Arc<Weights>` shared with other replicas.
+    /// `Weights` or an `Arc<Weights>` shared with other replicas; the
+    /// precision contract is taken from the bundle itself (pass a
+    /// `Weights::quantize()` bundle to build an int8 compressor).
     pub fn from_weights(
         model_cfg: &'static LmConfig,
         weights: impl Into<Arc<Weights>>,
@@ -205,6 +315,8 @@ impl LlmCompressor {
         if chunk_tokens == 0 || chunk_tokens > config::MAX_CONTEXT {
             anyhow::bail!("chunk_tokens must be in 1..={}", config::MAX_CONTEXT);
         }
+        let weights: Arc<Weights> = weights.into();
+        let tag = render_tag(model_cfg.name, ExecutorKind::Native, Some(&weights));
         Ok(LlmCompressor {
             cfg: LlmCompressorConfig {
                 model: model_cfg.name.into(),
@@ -213,8 +325,10 @@ impl LlmCompressor {
                 executor: ExecutorKind::Native,
                 lanes,
                 threads: 1,
+                precision: weights.precision(),
             },
             model_cfg,
+            tag,
             engine: RefCell::new(Box::new(
                 NativeExecutor::new(model_cfg, weights, lanes)
                     .with_head_rows(config::CODED_BYTES),
@@ -249,9 +363,15 @@ impl LlmCompressor {
         self.engine.borrow().kind()
     }
 
-    /// Model+executor tag string stored in containers.
+    /// Weight precision contract this compressor operates under.
+    pub fn precision(&self) -> Precision {
+        self.cfg.precision
+    }
+
+    /// Model+executor(+precision+fingerprint) tag string stored in
+    /// containers.
     pub fn container_tag(&self) -> String {
-        format!("{}:{}", self.cfg.model, self.executor_kind().as_flag())
+        self.tag.clone()
     }
 
     /// Compress one batch of chunks (`chunks.len() <= lanes()`); returns a
@@ -417,7 +537,7 @@ impl Compressor for LlmCompressor {
             orig_len: data.len() as u64,
             orig_crc32: crc32(data),
             chunk_tokens: self.cfg.chunk_tokens as u32,
-            model_name: format!("{}:{}", self.cfg.model, engine.kind().as_flag()),
+            model_name: self.tag.clone(),
             chunks: records,
             payload,
         };
@@ -426,25 +546,42 @@ impl Compressor for LlmCompressor {
 
     fn decompress(&self, data: &[u8]) -> Result<Vec<u8>> {
         let container = Container::from_bytes(data)?;
-        let (model_name, exec_flag) = container
-            .model_name
-            .split_once(':')
-            .ok_or_else(|| anyhow::anyhow!("container missing executor tag"))?;
-        let flag: u16 = exec_flag.parse()?;
-        let recorded = ExecutorKind::from_flag(flag)?;
+        let recorded = ContainerTag::parse(&container.model_name)?;
         let mut engine = self.engine.borrow_mut();
-        if model_name != self.cfg.model {
+        if recorded.model != self.cfg.model {
             anyhow::bail!(
-                "container was compressed with model '{model_name}', this compressor uses '{}'",
+                "container was compressed with model '{}', this compressor uses '{}'",
+                recorded.model,
                 self.cfg.model
             );
         }
-        if !recorded.compatible(engine.kind()) {
+        if !recorded.executor.compatible(engine.kind()) {
             anyhow::bail!(
-                "container needs executor {recorded:?}, engine is {:?} (streams are only \
+                "container needs executor {:?}, engine is {:?} (streams are only \
                  bit-identical within one executor kind)",
+                recorded.executor,
                 engine.kind()
             );
+        }
+        // Precision + fingerprint are the weight-bytes contract: a
+        // mismatch would decode garbage and die on CRC, so refuse it here
+        // with an actionable error instead.
+        if recorded.precision != self.cfg.precision {
+            anyhow::bail!(
+                "container was compressed with {} weights, this compressor runs {} — both \
+                 ends must hold the same precision (pass the matching --precision)",
+                recorded.precision.as_str(),
+                self.cfg.precision.as_str()
+            );
+        }
+        let own = ContainerTag::parse(&self.tag).expect("compressor tag is well-formed");
+        if let (Some(want), Some(have)) = (recorded.fingerprint, own.fingerprint) {
+            if want != have {
+                anyhow::bail!(
+                    "quantized weight fingerprint mismatch: container {want:08x} vs engine \
+                     {have:08x} — lossless decode requires bit-identical weights on both ends"
+                );
+            }
         }
         let ct = container.chunk_tokens as usize;
         if ct == 0 || ct > config::MAX_CONTEXT {
@@ -530,22 +667,20 @@ mod tests {
     /// artifacts).
     fn threaded_compressor(chunk: usize, lanes: usize, threads: usize) -> LlmCompressor {
         let cfg = by_name("nano").unwrap();
-        LlmCompressor {
-            cfg: LlmCompressorConfig {
+        LlmCompressor::from_shared(
+            cfg,
+            Arc::new(Weights::random(cfg, 7)),
+            LlmCompressorConfig {
                 model: cfg.name.into(),
                 chunk_tokens: chunk,
                 stream_bytes: 4 * chunk,
                 executor: ExecutorKind::Native,
                 lanes,
                 threads,
+                precision: Precision::F32,
             },
-            model_cfg: cfg,
-            engine: RefCell::new(Box::new(
-                NativeExecutor::new(cfg, Weights::random(cfg, 7), lanes)
-                    .with_threads(threads)
-                    .with_head_rows(config::CODED_BYTES),
-            )),
-        }
+        )
+        .unwrap()
     }
 
     #[test]
@@ -576,6 +711,7 @@ mod tests {
             executor: ExecutorKind::Native,
             lanes: 2,
             threads: 2,
+            precision: Precision::F32,
         };
         let a = LlmCompressor::from_shared(cfg, shared.clone(), replica_cfg.clone()).unwrap();
         let b = LlmCompressor::from_shared(cfg, shared.clone(), replica_cfg).unwrap();
@@ -622,5 +758,140 @@ mod tests {
         let cfg = by_name("nano").unwrap();
         assert!(LlmCompressor::from_weights(cfg, Weights::random(cfg, 8), 0, 1).is_err());
         assert!(LlmCompressor::from_weights(cfg, Weights::random(cfg, 8), 10_000, 1).is_err());
+    }
+
+    /// Int8 compressor over the deterministic quantization of seed-7 nano
+    /// weights (the same source bundle `native_compressor` uses in f32).
+    fn int8_compressor(chunk: usize, lanes: usize, threads: usize) -> LlmCompressor {
+        let cfg = by_name("nano").unwrap();
+        let weights = Arc::new(Weights::random(cfg, 7).quantize());
+        LlmCompressor::from_shared(
+            cfg,
+            weights,
+            LlmCompressorConfig {
+                model: cfg.name.into(),
+                chunk_tokens: chunk,
+                stream_bytes: 4 * chunk,
+                executor: ExecutorKind::Native,
+                lanes,
+                threads,
+                precision: Precision::Int8,
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn tag_parse_roundtrip_and_legacy_f32() {
+        let legacy = ContainerTag::parse("nano:0").unwrap();
+        assert_eq!(legacy.model, "nano");
+        assert_eq!(legacy.executor, ExecutorKind::Native);
+        assert_eq!(legacy.precision, Precision::F32);
+        assert_eq!(legacy.fingerprint, None);
+        let q8 = ContainerTag::parse("medium:0:q8:deadbeef").unwrap();
+        assert_eq!(q8.precision, Precision::Int8);
+        assert_eq!(q8.fingerprint, Some(0xDEADBEEF));
+        assert!(ContainerTag::parse("untagged").is_err());
+        assert!(ContainerTag::parse("nano:0:fp16:00000000").is_err());
+        assert!(ContainerTag::parse("nano:0:q8:zzzz").is_err());
+    }
+
+    #[test]
+    fn int8_roundtrip_lossless_on_every_textgen_domain() {
+        // The acceptance bar for the quantized path: precision changes the
+        // probability stream, not the losslessness.
+        let c = int8_compressor(32, 2, 1);
+        assert!(c.container_tag().starts_with("nano:0:q8:"), "{}", c.container_tag());
+        for domain in crate::textgen::Domain::EVAL {
+            let data = crate::textgen::generate(domain, 400, 11);
+            let z = c.compress(&data).unwrap();
+            assert_eq!(c.decompress(&z).unwrap(), data, "{domain:?}");
+        }
+        for data in [b"".to_vec(), b"a".to_vec(), (0u8..=255).collect()] {
+            let z = c.compress(&data).unwrap();
+            assert_eq!(c.decompress(&z).unwrap(), data, "len {}", data.len());
+        }
+    }
+
+    #[test]
+    fn int8_containers_identical_across_threads_and_lanes() {
+        let data = crate::textgen::quick_sample(500, 13);
+        let base = int8_compressor(32, 2, 1);
+        let golden = base.compress(&data).unwrap();
+        for (lanes, threads) in [(1usize, 1usize), (2, 2), (4, 3)] {
+            let c = int8_compressor(32, lanes, threads);
+            assert_eq!(
+                c.compress(&data).unwrap(),
+                golden,
+                "lanes={lanes} threads={threads} must not change the bytes"
+            );
+            assert_eq!(c.decompress(&golden).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn precision_mismatch_rejected_with_clear_error_not_crc() {
+        let data = crate::textgen::quick_sample(200, 14);
+        let f32c = native_compressor(32);
+        let q8c = int8_compressor(32, 2, 1);
+        // Same source weights, opposite precision on the decode side.
+        let z8 = q8c.compress(&data).unwrap();
+        let err = f32c.decompress(&z8).unwrap_err().to_string();
+        assert!(err.contains("precision"), "{err}");
+        assert!(!err.contains("CRC"), "{err}");
+        let zf = f32c.compress(&data).unwrap();
+        let err = q8c.decompress(&zf).unwrap_err().to_string();
+        assert!(err.contains("precision"), "{err}");
+    }
+
+    #[test]
+    fn fingerprint_mismatch_rejected_with_clear_error_not_crc() {
+        let data = crate::textgen::quick_sample(200, 15);
+        let q8c = int8_compressor(32, 2, 1);
+        let mut cont = Container::from_bytes(&q8c.compress(&data).unwrap()).unwrap();
+        let (head, _) = cont.model_name.rsplit_once(':').unwrap();
+        cont.model_name = format!("{head}:0bad0bad");
+        let err = q8c.decompress(&cont.to_bytes()).unwrap_err().to_string();
+        assert!(err.contains("fingerprint"), "{err}");
+        assert!(!err.contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn from_shared_enforces_the_precision_contract() {
+        let cfg = by_name("nano").unwrap();
+        let f32_w = Arc::new(Weights::random(cfg, 7));
+        let cfg8 = LlmCompressorConfig {
+            model: cfg.name.into(),
+            executor: ExecutorKind::Native,
+            precision: Precision::Int8,
+            chunk_tokens: 32,
+            stream_bytes: 128,
+            lanes: 1,
+            threads: 1,
+        };
+        assert!(LlmCompressor::from_shared(cfg, f32_w.clone(), cfg8.clone()).is_err());
+        let q8_w = Arc::new(f32_w.quantize());
+        assert!(LlmCompressor::from_shared(cfg, q8_w.clone(), cfg8).is_ok());
+        let cfg32 = LlmCompressorConfig {
+            model: cfg.name.into(),
+            executor: ExecutorKind::Native,
+            precision: Precision::F32,
+            chunk_tokens: 32,
+            stream_bytes: 128,
+            lanes: 1,
+            threads: 1,
+        };
+        assert!(LlmCompressor::from_shared(cfg, q8_w, cfg32).is_err());
+    }
+
+    #[test]
+    fn int8_ratio_stays_in_the_same_ballpark_as_f32() {
+        // Quantization perturbs the model, not the coder: the compressed
+        // size on model-friendly text must stay within a modest factor of
+        // the f32 size (a badly-broken kernel would blow this up).
+        let data = crate::textgen::quick_sample(2000, 16);
+        let zf = native_compressor(64).compress(&data).unwrap().len() as f64;
+        let z8 = int8_compressor(64, 2, 1).compress(&data).unwrap().len() as f64;
+        assert!(z8 < zf * 1.5, "int8 {z8} bytes vs f32 {zf} bytes");
     }
 }

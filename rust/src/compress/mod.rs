@@ -10,7 +10,7 @@ pub mod llm;
 pub mod registry;
 
 pub use container::{ChunkRecord, Container, CONTAINER_MAGIC};
-pub use llm::{LlmCompressor, LlmCompressorConfig};
+pub use llm::{ContainerTag, LlmCompressor, LlmCompressorConfig};
 pub use registry::{baseline_by_name, all_baseline_names};
 
 use crate::Result;

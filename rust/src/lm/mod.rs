@@ -1,9 +1,12 @@
 //! The language-model layer on the rust side.
 //!
 //! * [`config`] — the model registry (must mirror `python/compile/configs.py`).
-//! * [`weights`] — typed parameter bundle loaded from `.lmz` files, plus
-//!   the [`weights::ResolvedPlan`] that resolves every string-keyed tensor
-//!   to a direct index once at model load.
+//! * [`weights`] — typed parameter bundle loaded from `.lmz` files (v1
+//!   all-f32 or v2 dtype-aware with int8-quantized tensors), plus the
+//!   [`weights::ResolvedPlan`] that resolves every string-keyed tensor to
+//!   a direct index once at model load. [`weights::Precision`] +
+//!   [`weights::Weights::fingerprint`] make the exact weight bytes an
+//!   explicit contract between compressor and decompressor.
 //! * [`native`] — a from-scratch rust implementation of the exact same
 //!   transformer. The engine is batched and allocation-free in steady
 //!   state: [`native::NativeModel::advance_batch`] pushes all lanes
@@ -35,4 +38,4 @@ pub mod weights;
 pub use config::{LmConfig, CODED_BYTES, MAX_CONTEXT, VOCAB};
 pub use executor::{ExecutorKind, LmExecutor};
 pub use native::{NativeExecutor, Scratch};
-pub use weights::{ResolvedPlan, Weights};
+pub use weights::{Precision, ResolvedPlan, TensorData, TensorView, Weights};

@@ -31,9 +31,23 @@
 //!   steady-state step path, so even nano-sized models can profit from
 //!   threads without paying spawn cost per decoded byte. Bit-exact for any
 //!   thread count: lanes are computed independently.
+//!
+//! ## Dtype dispatch (int8 weight path)
+//!
+//! The matmul inner loops dispatch per tensor on
+//! [`crate::lm::weights::TensorView`]: f32 tensors run the original
+//! bit-exact kernels, int8-quantized tensors run [`matmul_acc_i8`] —
+//! per-lane dynamic activation quantization, an i8×i8 dot product with i32
+//! accumulation, and one f32 scale multiply per output element.
+//! Activations, norm gains and the KV cache stay f32. Integer accumulation
+//! is exactly associative, so the int8 path is deterministic and
+//! bit-identical across lane batchings and thread counts by construction
+//! (the lossless-decode requirement); it is *not* bit-equal to the f32
+//! path, which is why containers record the weight precision and
+//! fingerprint (see `compress/llm.rs`).
 
 use crate::lm::config::{LmConfig, MAX_CONTEXT, VOCAB};
-use crate::lm::weights::{ResolvedPlan, Weights};
+use crate::lm::weights::{ResolvedPlan, TensorView, Weights};
 use crate::Result;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -68,6 +82,123 @@ fn matmul_acc(n: usize, d_in: usize, d_out: usize, xs: &[f32], w: &[f32], ys: &m
             for (yj, &rj) in y.iter_mut().zip(row) {
                 *yj += xi * rj;
             }
+        }
+    }
+}
+
+/// Per-lane symmetric quantization of activations to i8: `qx[l,i] =
+/// round(xs[l,i] / sx[l])` with `sx[l] = maxabs(xs[l,:]) / 127`. An
+/// all-zero lane gets `sx = 0` and an all-zero `qx` row (the dot product
+/// is then exactly zero). Deterministic: plain f32 divide + round.
+#[inline]
+fn quantize_lanes(n: usize, d: usize, xs: &[f32], qx: &mut [i8], sx: &mut [f32]) {
+    for l in 0..n {
+        let row = &xs[l * d..(l + 1) * d];
+        let mut maxabs = 0.0f32;
+        for &v in row {
+            maxabs = maxabs.max(v.abs());
+        }
+        let q = &mut qx[l * d..(l + 1) * d];
+        if maxabs == 0.0 {
+            sx[l] = 0.0;
+            q.fill(0);
+            continue;
+        }
+        let scale = maxabs / 127.0;
+        sx[l] = scale;
+        let inv = 1.0 / scale;
+        for (qi, &v) in q.iter_mut().zip(row) {
+            *qi = (v * inv).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+}
+
+/// Int8 batched matvec-accumulate: `ys[l] += xs[l] @ dequant(w)` for every
+/// lane, with `w` stored as i8 `[d_in, d_out]` row-major and one f32 scale
+/// per output column (`w[i,j] ≈ wq[i,j] * ws[j]`).
+///
+/// Activations are quantized per lane on the fly (f32 in, f32 out — only
+/// the dot products are integer), accumulated in i32 (exact for any
+/// summation order: `d_in * 127 * 127` stays far below `i32::MAX`), then
+/// scaled back once per output element. Per-lane work is independent, so
+/// results are bit-identical for any lane batching or thread partition.
+#[inline]
+fn matmul_acc_i8(
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    xs: &[f32],
+    wq: &[i8],
+    ws: &[f32],
+    ys: &mut [f32],
+    quant: &mut QuantScratch,
+) {
+    debug_assert_eq!(xs.len(), n * d_in);
+    quantize_lanes(n, d_in, xs, &mut quant.qx, &mut quant.sx);
+    matmul_acc_i8_prequant(n, d_in, d_out, wq, ws, ys, quant);
+}
+
+/// [`matmul_acc_i8`] with the activation quantization already done:
+/// `quant.qx`/`quant.sx` must hold the current `[n, d_in]` activations.
+/// Split out so consumers of one activation buffer (the q/k/v projections)
+/// quantize it once instead of three times.
+#[inline]
+fn matmul_acc_i8_prequant(
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    wq: &[i8],
+    ws: &[f32],
+    ys: &mut [f32],
+    quant: &mut QuantScratch,
+) {
+    debug_assert_eq!(wq.len(), d_in * d_out);
+    debug_assert_eq!(ws.len(), d_out);
+    debug_assert_eq!(ys.len(), n * d_out);
+    let acc = &mut quant.acc[..n * d_out];
+    acc.fill(0);
+    for i in 0..d_in {
+        let row = &wq[i * d_out..(i + 1) * d_out];
+        for l in 0..n {
+            let q = quant.qx[l * d_in + i] as i32;
+            if q == 0 {
+                continue;
+            }
+            let a = &mut acc[l * d_out..(l + 1) * d_out];
+            for (aj, &rj) in a.iter_mut().zip(row) {
+                *aj += q * rj as i32;
+            }
+        }
+    }
+    for l in 0..n {
+        let s = quant.sx[l];
+        if s == 0.0 {
+            continue;
+        }
+        let y = &mut ys[l * d_out..(l + 1) * d_out];
+        let a = &acc[l * d_out..(l + 1) * d_out];
+        for ((yj, &aj), &wsj) in y.iter_mut().zip(a).zip(ws) {
+            *yj += s * wsj * aj as f32;
+        }
+    }
+}
+
+/// Dtype dispatch for one projection: f32 tensors run the bit-exact
+/// [`matmul_acc`], int8 tensors run [`matmul_acc_i8`].
+#[inline]
+fn matmul_acc_view(
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    xs: &[f32],
+    w: TensorView<'_>,
+    ys: &mut [f32],
+    quant: &mut QuantScratch,
+) {
+    match w {
+        TensorView::F32(w) => matmul_acc(n, d_in, d_out, xs, w, ys),
+        TensorView::I8 { data, scales } => {
+            matmul_acc_i8(n, d_in, d_out, xs, data, scales, ys, quant)
         }
     }
 }
@@ -120,6 +251,18 @@ impl LaneState {
     }
 }
 
+/// Working memory for the int8 kernels: quantized activations, per-lane
+/// activation scales, and the i32 accumulator. Sized for the widest
+/// projection (`d_ff`), reused by every dispatch in a step.
+struct QuantScratch {
+    /// [cap * d_ff] per-lane quantized activations.
+    qx: Vec<i8>,
+    /// [cap] per-lane activation scales.
+    sx: Vec<f32>,
+    /// [cap * d_ff] i32 dot-product accumulators.
+    acc: Vec<i32>,
+}
+
 /// Preallocated working memory for [`NativeModel::advance_batch`], sized
 /// once for up to `cap` lanes. Holding one of these per executor (or per
 /// worker thread) is what makes steady-state stepping allocation-free.
@@ -139,11 +282,14 @@ pub struct Scratch {
     scores: Vec<f32>,
     /// [cap * d_ff] feed-forward hidden.
     ff: Vec<f32>,
+    /// Int8-dispatch working memory (idle on pure-f32 bundles).
+    quant: QuantScratch,
 }
 
 impl Scratch {
     pub fn new(cfg: &LmConfig, cap: usize) -> Scratch {
         let d = cfg.d_model;
+        let wide = cfg.d_ff().max(d);
         Scratch {
             cap,
             x: vec![0.0; cap * d],
@@ -154,6 +300,11 @@ impl Scratch {
             attn: vec![0.0; cap * d],
             scores: vec![0.0; cap * MAX_CONTEXT],
             ff: vec![0.0; cap * cfg.d_ff()],
+            quant: QuantScratch {
+                qx: vec![0; cap * wide],
+                sx: vec![0.0; cap],
+                acc: vec![0; cap * wide],
+            },
         }
     }
 
@@ -222,9 +373,11 @@ impl NativeModel {
         let h = self.cfg.n_heads;
         let dh = self.cfg.d_head();
         let ffd = self.cfg.d_ff();
-        let embed = self.plan.data(self.plan.embed);
+        let embed = self.plan.view(self.plan.embed);
 
-        // Token embeddings into the residual stream.
+        // Token embeddings into the residual stream (int8 embed rows are
+        // dequantized with their per-row scale; everything downstream of
+        // the lookup is f32 either way).
         for (l, (lane, &tok)) in lanes.iter_mut().zip(tokens.iter()).enumerate() {
             if lane.pos >= lane.max_len {
                 anyhow::bail!("lane {l} overflow: pos {} >= max {}", lane.pos, lane.max_len);
@@ -233,19 +386,30 @@ impl NativeModel {
             if t >= VOCAB {
                 anyhow::bail!("lane {l}: token {tok} outside vocabulary");
             }
-            scratch.x[l * d..(l + 1) * d].copy_from_slice(&embed[t * d..(t + 1) * d]);
+            let x = &mut scratch.x[l * d..(l + 1) * d];
+            match embed {
+                TensorView::F32(e) => x.copy_from_slice(&e[t * d..(t + 1) * d]),
+                TensorView::I8 { data, scales } => {
+                    let s = scales[t];
+                    for (xi, &q) in x.iter_mut().zip(&data[t * d..(t + 1) * d]) {
+                        *xi = q as f32 * s;
+                    }
+                }
+            }
         }
 
         let scale = 1.0 / (dh as f32).sqrt();
         for (layer, lp) in self.plan.layers.iter().enumerate() {
+            // Norm gains are always f32 (quantize() leaves 1-D tensors
+            // alone); the projections dispatch per dtype.
             let attn_norm = self.plan.data(lp.attn_norm);
             let mlp_norm = self.plan.data(lp.mlp_norm);
-            let wq = self.plan.data(lp.wq);
-            let wk = self.plan.data(lp.wk);
-            let wv = self.plan.data(lp.wv);
-            let wo = self.plan.data(lp.wo);
-            let w1 = self.plan.data(lp.w1);
-            let w2 = self.plan.data(lp.w2);
+            let wq = self.plan.view(lp.wq);
+            let wk = self.plan.view(lp.wk);
+            let wv = self.plan.view(lp.wv);
+            let wo = self.plan.view(lp.wo);
+            let w1 = self.plan.view(lp.w1);
+            let w2 = self.plan.view(lp.w2);
 
             for l in 0..n {
                 rmsnorm_into(
@@ -257,9 +421,24 @@ impl NativeModel {
             scratch.q[..n * d].fill(0.0);
             scratch.k[..n * d].fill(0.0);
             scratch.v[..n * d].fill(0.0);
-            matmul_acc(n, d, d, &scratch.hn[..n * d], wq, &mut scratch.q[..n * d]);
-            matmul_acc(n, d, d, &scratch.hn[..n * d], wk, &mut scratch.k[..n * d]);
-            matmul_acc(n, d, d, &scratch.hn[..n * d], wv, &mut scratch.v[..n * d]);
+            let hn = &scratch.hn[..n * d];
+            // The three attention projections consume the same activation
+            // buffer: quantize it once and reuse it for every int8 tensor.
+            if [wq, wk, wv].iter().any(|w| matches!(w, TensorView::I8 { .. })) {
+                quantize_lanes(n, d, hn, &mut scratch.quant.qx, &mut scratch.quant.sx);
+            }
+            for (w, ys) in [
+                (wq, &mut scratch.q[..n * d]),
+                (wk, &mut scratch.k[..n * d]),
+                (wv, &mut scratch.v[..n * d]),
+            ] {
+                match w {
+                    TensorView::F32(w) => matmul_acc(n, d, d, hn, w, ys),
+                    TensorView::I8 { data, scales } => {
+                        matmul_acc_i8_prequant(n, d, d, data, scales, ys, &mut scratch.quant)
+                    }
+                }
+            }
 
             // Append k/v to each lane's cache at its current position.
             for (l, lane) in lanes.iter_mut().enumerate() {
@@ -311,7 +490,8 @@ impl NativeModel {
                     }
                 }
             }
-            matmul_acc(n, d, d, &scratch.attn[..n * d], wo, &mut scratch.x[..n * d]);
+            let attn = &scratch.attn[..n * d];
+            matmul_acc_view(n, d, d, attn, wo, &mut scratch.x[..n * d], &mut scratch.quant);
 
             for l in 0..n {
                 rmsnorm_into(
@@ -321,11 +501,13 @@ impl NativeModel {
                 );
             }
             scratch.ff[..n * ffd].fill(0.0);
-            matmul_acc(n, d, ffd, &scratch.hn[..n * d], w1, &mut scratch.ff[..n * ffd]);
+            let hn = &scratch.hn[..n * d];
+            matmul_acc_view(n, d, ffd, hn, w1, &mut scratch.ff[..n * ffd], &mut scratch.quant);
             for v in scratch.ff[..n * ffd].iter_mut() {
                 *v = gelu(*v);
             }
-            matmul_acc(n, ffd, d, &scratch.ff[..n * ffd], w2, &mut scratch.x[..n * d]);
+            let ff = &scratch.ff[..n * ffd];
+            matmul_acc_view(n, ffd, d, ff, w2, &mut scratch.x[..n * d], &mut scratch.quant);
         }
 
         // Final norm + weight-tied head (logits[v] = dot(xn, embed[v])).
@@ -340,13 +522,33 @@ impl NativeModel {
         for l in 0..n {
             let xn = &scratch.hn[l * d..(l + 1) * d];
             let out_l = &mut out[l * VOCAB..(l + 1) * VOCAB];
-            for (v, lo) in out_l.iter_mut().take(head_rows).enumerate() {
-                let row = &embed[v * d..(v + 1) * d];
-                let mut dot = 0.0f32;
-                for i in 0..d {
-                    dot += xn[i] * row[i];
+            match embed {
+                TensorView::F32(e) => {
+                    for (v, lo) in out_l.iter_mut().take(head_rows).enumerate() {
+                        let row = &e[v * d..(v + 1) * d];
+                        let mut dot = 0.0f32;
+                        for i in 0..d {
+                            dot += xn[i] * row[i];
+                        }
+                        *lo = dot;
+                    }
                 }
-                *lo = dot;
+                TensorView::I8 { data, scales } => {
+                    // Weight-tied int8 head: quantize this lane's normed
+                    // state once, then one i32 dot + one scale multiply
+                    // per coded logit row.
+                    quantize_lanes(1, d, xn, &mut scratch.quant.qx, &mut scratch.quant.sx);
+                    let qxn = &scratch.quant.qx[..d];
+                    let sx = scratch.quant.sx[0];
+                    for (v, lo) in out_l.iter_mut().take(head_rows).enumerate() {
+                        let row = &data[v * d..(v + 1) * d];
+                        let mut dot = 0i32;
+                        for i in 0..d {
+                            dot += qxn[i] as i32 * row[i] as i32;
+                        }
+                        *lo = sx * scales[v] * dot as f32;
+                    }
+                }
             }
             for lo in out_l.iter_mut().skip(head_rows) {
                 *lo = 0.0;
@@ -852,6 +1054,79 @@ mod tests {
                 b[l * VOCAB..l * VOCAB + CODED_BYTES],
                 "coded region must be bit-identical"
             );
+            assert!(b[l * VOCAB + CODED_BYTES..(l + 1) * VOCAB].iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn int8_advance_is_deterministic_and_replayable() {
+        let cfg = by_name("small").unwrap();
+        let model = NativeModel::new(cfg, Weights::random(cfg, 31).quantize());
+        let tokens = [BOS, 72, 101, 108, 108, 111];
+        let mut st1 = LaneState::new(cfg, 16);
+        let run1: Vec<Vec<f32>> =
+            tokens.iter().map(|&t| model.advance(&mut st1, t).unwrap()).collect();
+        let mut st2 = LaneState::new(cfg, 16);
+        let run2: Vec<Vec<f32>> =
+            tokens.iter().map(|&t| model.advance(&mut st2, t).unwrap()).collect();
+        assert_eq!(run1, run2, "bit-exact int8 replay");
+        assert!(run1.iter().flatten().all(|x| x.is_finite()));
+        // Int8 logits approximate but don't equal the f32 logits.
+        let f32_model = NativeModel::new(cfg, Weights::random(cfg, 31));
+        let mut st3 = LaneState::new(cfg, 16);
+        let f32_run: Vec<Vec<f32>> =
+            tokens.iter().map(|&t| f32_model.advance(&mut st3, t).unwrap()).collect();
+        assert_ne!(run1, f32_run, "quantization must actually change the numerics");
+    }
+
+    #[test]
+    fn int8_batch_matches_single_lane_bit_for_bit() {
+        // The lossless-decode requirement for the quantized path: lane
+        // batching must be a pure execution knob, exactly like f32.
+        let cfg = by_name("tiny").unwrap();
+        let w = Weights::random(cfg, 32).quantize();
+        let model = NativeModel::new(cfg, w);
+        let seqs: [&[u32]; 3] = [&[BOS, 72, 101, 108], &[BOS, 10, 200, 65], &[BOS, 0, 255, 90]];
+        let mut serial = Vec::new();
+        for seq in &seqs {
+            let mut st = LaneState::new(cfg, 16);
+            let mut per_step = Vec::new();
+            for &t in *seq {
+                per_step.push(model.advance(&mut st, t).unwrap());
+            }
+            serial.push(per_step);
+        }
+        let mut lanes: Vec<LaneState> = (0..3).map(|_| LaneState::new(cfg, 16)).collect();
+        let mut scratch = Scratch::new(cfg, 3);
+        let mut out = vec![0.0f32; 3 * VOCAB];
+        for t in 0..seqs[0].len() {
+            let toks: Vec<u32> = seqs.iter().map(|s| s[t]).collect();
+            model.advance_batch(&mut lanes, &toks, &mut scratch, &mut out, VOCAB).unwrap();
+            for l in 0..3 {
+                assert_eq!(out[l * VOCAB..(l + 1) * VOCAB], serial[l][t][..], "lane {l} step {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_pool_bit_exact_for_any_thread_count_and_head_rows() {
+        let cfg = by_name("nano").unwrap();
+        let w = std::sync::Arc::new(Weights::random(cfg, 33).quantize());
+        let mut baseline = NativeExecutor::new(cfg, w.clone(), 4);
+        let mut pooled = NativeExecutor::new(cfg, w.clone(), 4).with_threads(4);
+        for step in 0..3u32 {
+            let toks: Vec<u32> = (0..4).map(|l| (l * 29 + step * 17 + 3) % 256).collect();
+            assert_eq!(baseline.step(&toks).unwrap(), pooled.step(&toks).unwrap(), "step {step}");
+        }
+        // Coded-only head matches the full head on the coded rows.
+        let mut full = NativeExecutor::new(cfg, w.clone(), 2);
+        let mut coded = NativeExecutor::new(cfg, w, 2).with_head_rows(CODED_BYTES);
+        let toks = [BOS, 70];
+        let a = full.step(&toks).unwrap();
+        let b = coded.step(&toks).unwrap();
+        for l in 0..2 {
+            let coded_range = l * VOCAB..l * VOCAB + CODED_BYTES;
+            assert_eq!(a[coded_range.clone()], b[coded_range]);
             assert!(b[l * VOCAB + CODED_BYTES..(l + 1) * VOCAB].iter().all(|&x| x == 0.0));
         }
     }

@@ -2,11 +2,40 @@
 //! [`ResolvedPlan`] that turns the string-keyed tensor bundle into direct
 //! indices for the forward pass.
 //!
-//! The hot path contract: `Weights::get(name)` (format! + hash + map
-//! lookup) exists for loaders, tools and the frozen reference
+//! ## Dtype-aware weight stack
+//!
+//! Tensor payloads are no longer hardwired `Vec<f32>`: [`TensorData`] is a
+//! per-tensor dtype enum. Two dtypes exist today:
+//!
+//! * `F32` — the trained parameters, bit-exact with the seed format.
+//! * `I8` — symmetric int8 quantization with **per-output-row f32 scales**
+//!   (`w ≈ q * scale[row]`). For the weight-tied `embed` tensor the output
+//!   rows are its leading rows (one scale per vocab entry, shared by the
+//!   embedding lookup and the logit head); for every projection matrix
+//!   `[d_in, d_out]` they are the output columns (one scale per output
+//!   feature). 1-D norm gains always stay f32.
+//!
+//! On disk this is the `.lmz` **v2** format: identical to v1 plus one dtype
+//! byte per tensor (and a scale table for quantized tensors). v1 files
+//! still load (as all-F32) and [`Weights::to_bytes`] round-trips both
+//! versions byte-exactly.
+//!
+//! ## Precision is a contract
+//!
+//! Lossless decoding requires bit-identical logits on the compressor and
+//! decompressor, so the *exact weight bytes* both ends hold are part of the
+//! stream contract — not a serving detail. [`Weights::quantize`] is
+//! deterministic (same f32 bundle in, same int8 bundle out, on any host)
+//! and [`Weights::fingerprint`] hashes the serialized bundle so containers
+//! can record which bytes produced them and decoders can refuse a
+//! mismatch up front instead of failing CRC after decoding garbage.
+//!
+//! The hot path contract is unchanged: `Weights::get(name)` (format! +
+//! hash + map lookup) exists for loaders, tools and the frozen reference
 //! implementation only. The engine resolves every tensor ONCE at model
 //! load into a [`ResolvedPlan`] and thereafter reaches weight data through
-//! [`ResolvedPlan::data`] — a bare slice index.
+//! [`ResolvedPlan::view`] — a bare slice index returning a dtype-tagged
+//! [`TensorView`].
 //!
 //! The plan holds the bundle behind an `Arc<Weights>`, so any number of
 //! engine replicas (coordinator workers, pool threads, samplers) share ONE
@@ -14,20 +43,156 @@
 //! memory only, never a second copy of the model.
 
 use crate::lm::config::{param_spec, LmConfig};
-use crate::util::read_u32_le;
+use crate::util::{crc32, read_u32_le};
 use crate::Result;
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 pub const WEIGHTS_MAGIC: u32 = 0x575A_4D4C; // "LMZW"
-pub const WEIGHTS_VERSION: u16 = 1;
+/// Original all-f32 format (no per-tensor dtype byte).
+pub const WEIGHTS_VERSION_V1: u16 = 1;
+/// Dtype-aware format: one dtype byte per tensor, optional scale table.
+pub const WEIGHTS_VERSION_V2: u16 = 2;
+
+/// On-disk dtype byte values (v2 format).
+const DTYPE_F32: u8 = 0;
+const DTYPE_I8: u8 = 1;
+
+/// Symmetric int8 quantization range (±127; -128 is never emitted so the
+/// grid is symmetric and `-q` is always representable).
+const Q8_MAX: f32 = 127.0;
+
+/// Weight-bundle precision — the contract recorded in container tags.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    Int8,
+}
+
+impl Precision {
+    /// Short tag used in container strings and CLI flags.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Precision> {
+        Ok(match s {
+            "f32" => Precision::F32,
+            "int8" | "i8" | "q8" => Precision::Int8,
+            other => anyhow::bail!("unknown precision '{other}' (f32|int8)"),
+        })
+    }
+}
+
+/// One tensor's payload, tagged by dtype.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    /// Symmetric int8 with per-output-row f32 scales: the dequantized value
+    /// of element `e` in output row `r` is `data[e] as f32 * scales[r]`.
+    I8 { data: Vec<i8>, scales: Vec<f32> },
+}
+
+impl TensorData {
+    /// Element count (independent of dtype).
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I8 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_f32(&self) -> bool {
+        matches!(self, TensorData::F32(_))
+    }
+
+    pub fn precision(&self) -> Precision {
+        match self {
+            TensorData::F32(_) => Precision::F32,
+            TensorData::I8 { .. } => Precision::Int8,
+        }
+    }
+
+    /// The f32 payload, if this tensor is f32.
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            TensorData::F32(v) => Some(v),
+            TensorData::I8 { .. } => None,
+        }
+    }
+
+    /// Borrowed dtype-tagged view (what the engine dispatches on).
+    pub fn view(&self) -> TensorView<'_> {
+        match self {
+            TensorData::F32(v) => TensorView::F32(v),
+            TensorData::I8 { data, scales } => TensorView::I8 { data, scales },
+        }
+    }
+
+    /// Resident bytes of this payload (data + scale table).
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len() * 4,
+            TensorData::I8 { data, scales } => data.len() + scales.len() * 4,
+        }
+    }
+}
+
+/// Legacy f32 access: lets pre-dtype call sites (the frozen
+/// `lm::reference`, tests, tools) keep reading `tensor.data` as an f32
+/// slice. Quantized tensors have no f32 payload — such access is a
+/// programming error and panics with a pointer at the dtype-aware API.
+impl std::ops::Deref for TensorData {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        match self {
+            TensorData::F32(v) => v,
+            TensorData::I8 { .. } => panic!(
+                "f32 access to an int8-quantized tensor — use TensorData::view()/as_f32()"
+            ),
+        }
+    }
+}
+
+/// Borrowed dtype-dispatched view of one tensor's payload.
+#[derive(Clone, Copy, Debug)]
+pub enum TensorView<'a> {
+    F32(&'a [f32]),
+    I8 { data: &'a [i8], scales: &'a [f32] },
+}
 
 /// A named tensor.
 #[derive(Clone, Debug)]
 pub struct Tensor {
     pub name: String,
     pub shape: Vec<usize>,
-    pub data: Vec<f32>,
+    pub data: TensorData,
+}
+
+/// Whether a 2-D tensor's quantization scales run along its leading rows:
+/// the weight-tied `embed` is consumed row-wise (embedding lookup + logit
+/// head), every projection `[d_in, d_out]` column-wise. The single source
+/// of truth for the scale axis — `quantize_2d` (producer) and the loader's
+/// validation (consumer) both derive from it.
+fn scales_along_rows(name: &str) -> bool {
+    name == "embed"
+}
+
+/// Expected scale-table length for a 2-D tensor.
+fn scales_len(name: &str, shape: &[usize]) -> usize {
+    if scales_along_rows(name) {
+        shape[0]
+    } else {
+        shape[1]
+    }
 }
 
 /// A full parameter bundle for one model, in canonical spec order.
@@ -35,10 +200,20 @@ pub struct Tensor {
 pub struct Weights {
     pub tensors: Vec<Tensor>,
     index: HashMap<String, usize>,
+    /// On-disk format version this bundle serializes as (v1 for all-f32
+    /// bundles created before quantization, v2 once any tensor is i8 or
+    /// the bundle was loaded from a v2 file).
+    version: u16,
+    /// Lazily-computed content fingerprint (serializing a bundle to hash
+    /// it is not free, and every replica of a shared `Arc<Weights>` asks
+    /// for the same value). Tensors are treated as frozen after
+    /// construction.
+    fingerprint: OnceLock<u32>,
 }
 
 impl Weights {
     /// Parse from bytes and validate against the model's parameter spec.
+    /// Accepts v1 (all-f32) and v2 (per-tensor dtype) files.
     pub fn from_bytes(data: &[u8], cfg: &LmConfig) -> Result<Weights> {
         if data.len() < 8 {
             anyhow::bail!("weights file too short");
@@ -47,7 +222,7 @@ impl Weights {
             anyhow::bail!("bad weights magic");
         }
         let version = u16::from_le_bytes([data[4], data[5]]);
-        if version != WEIGHTS_VERSION {
+        if version != WEIGHTS_VERSION_V1 && version != WEIGHTS_VERSION_V2 {
             anyhow::bail!("unsupported weights version {version}");
         }
         let count = u16::from_le_bytes([data[6], data[7]]) as usize;
@@ -59,27 +234,68 @@ impl Weights {
             }
             let nlen = data[pos] as usize;
             pos += 1;
+            if pos + nlen + 1 > data.len() {
+                anyhow::bail!("truncated tensor header");
+            }
             let name = String::from_utf8(data[pos..pos + nlen].to_vec())?;
             pos += nlen;
             let ndim = data[pos] as usize;
             pos += 1;
+            if pos + ndim * 4 > data.len() {
+                anyhow::bail!("truncated tensor shape for '{name}'");
+            }
             let mut shape = Vec::with_capacity(ndim);
             for _ in 0..ndim {
                 shape.push(read_u32_le(data, pos) as usize);
                 pos += 4;
             }
             let n: usize = shape.iter().product();
-            if pos + n * 4 > data.len() {
-                anyhow::bail!("truncated tensor data for '{name}'");
-            }
-            let mut values = Vec::with_capacity(n);
-            for i in 0..n {
-                values.push(f32::from_le_bytes(data[pos + i * 4..pos + i * 4 + 4].try_into()?));
-            }
-            pos += n * 4;
-            tensors.push(Tensor { name, shape, data: values });
+            let dtype = if version >= WEIGHTS_VERSION_V2 {
+                if pos >= data.len() {
+                    anyhow::bail!("truncated dtype byte for '{name}'");
+                }
+                let d = data[pos];
+                pos += 1;
+                d
+            } else {
+                DTYPE_F32
+            };
+            let payload = match dtype {
+                DTYPE_F32 => {
+                    if pos + n * 4 > data.len() {
+                        anyhow::bail!("truncated tensor data for '{name}'");
+                    }
+                    let values: Vec<f32> = data[pos..pos + n * 4]
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().expect("chunks_exact(4)")))
+                        .collect();
+                    pos += n * 4;
+                    TensorData::F32(values)
+                }
+                DTYPE_I8 => {
+                    if pos + 4 > data.len() {
+                        anyhow::bail!("truncated scale table for '{name}'");
+                    }
+                    let ns = read_u32_le(data, pos) as usize;
+                    pos += 4;
+                    if pos + ns * 4 + n > data.len() {
+                        anyhow::bail!("truncated tensor data for '{name}'");
+                    }
+                    let scales: Vec<f32> = data[pos..pos + ns * 4]
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().expect("chunks_exact(4)")))
+                        .collect();
+                    pos += ns * 4;
+                    let values: Vec<i8> = data[pos..pos + n].iter().map(|&b| b as i8).collect();
+                    pos += n;
+                    TensorData::I8 { data: values, scales }
+                }
+                other => anyhow::bail!("unknown dtype byte {other} for tensor '{name}'"),
+            };
+            tensors.push(Tensor { name, shape, data: payload });
         }
-        // Validate against the canonical spec (order, names, shapes).
+        // Validate against the canonical spec (order, names, shapes, and
+        // per-dtype invariants).
         let spec = param_spec(cfg);
         if spec.len() != tensors.len() {
             anyhow::bail!("weights tensor count {} != spec {}", tensors.len(), spec.len());
@@ -91,9 +307,22 @@ impl Weights {
             if *shape != t.shape {
                 anyhow::bail!("tensor '{}' shape {:?} != expected {:?}", t.name, t.shape, shape);
             }
+            if let TensorData::I8 { scales, .. } = &t.data {
+                if t.shape.len() != 2 {
+                    anyhow::bail!("tensor '{}' is int8 but not 2-D (norms stay f32)", t.name);
+                }
+                let want = scales_len(&t.name, &t.shape);
+                if scales.len() != want {
+                    anyhow::bail!(
+                        "tensor '{}' has {} scales, expected {want}",
+                        t.name,
+                        scales.len()
+                    );
+                }
+            }
         }
         let index = tensors.iter().enumerate().map(|(i, t)| (t.name.clone(), i)).collect();
-        Ok(Weights { tensors, index })
+        Ok(Weights { tensors, index, version, fingerprint: OnceLock::new() })
     }
 
     pub fn load(path: &std::path::Path, cfg: &LmConfig) -> Result<Weights> {
@@ -104,7 +333,7 @@ impl Weights {
 
     /// Tensor by name (panics on unknown name — internal use after validate).
     /// Cold paths only; the engine goes through [`ResolvedPlan`] +
-    /// [`Weights::data`] instead.
+    /// [`Weights::view`] instead.
     pub fn get(&self, name: &str) -> &Tensor {
         &self.tensors[self.index[name]]
     }
@@ -118,18 +347,64 @@ impl Weights {
             .ok_or_else(|| anyhow::anyhow!("weights have no tensor named '{name}'"))
     }
 
-    /// Raw data of the tensor at a resolved index — the engine's only
-    /// weight accessor (no strings, no hashing, no map).
+    /// Raw f32 data of the tensor at a resolved index. Panics if the tensor
+    /// is quantized — f32-only consumers (norm gains, the frozen reference,
+    /// PJRT upload) are guarded upstream; the dtype-generic engine path
+    /// uses [`Weights::view`].
     #[inline]
     pub fn data(&self, idx: usize) -> &[f32] {
         &self.tensors[idx].data
     }
 
-    /// Serialize back to `.lmz` bytes (round-trip support + test fixtures).
+    /// Dtype-tagged view of the tensor at a resolved index — the engine's
+    /// only weight accessor (no strings, no hashing, no map).
+    #[inline]
+    pub fn view(&self, idx: usize) -> TensorView<'_> {
+        self.tensors[idx].data.view()
+    }
+
+    /// Bundle precision: `Int8` as soon as any tensor is quantized.
+    pub fn precision(&self) -> Precision {
+        if self.tensors.iter().all(|t| t.data.is_f32()) {
+            Precision::F32
+        } else {
+            Precision::Int8
+        }
+    }
+
+    /// Bytes of weight memory an engine streams per step (payloads + scale
+    /// tables; the quantization win the runtime bench reports).
+    pub fn resident_bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.data.resident_bytes()).sum()
+    }
+
+    /// Content fingerprint of the serialized bundle. Compressor and
+    /// decompressor must hold byte-identical weights for lossless decode;
+    /// quantized containers record this value so a mismatch is rejected
+    /// with a clear error instead of surfacing as a CRC failure. Computed
+    /// once per bundle (replicas sharing an `Arc<Weights>` all read the
+    /// cached value).
+    pub fn fingerprint(&self) -> u32 {
+        *self.fingerprint.get_or_init(|| crc32(&self.to_bytes()))
+    }
+
+    /// Serialize to `.lmz` bytes: v1 when the bundle is all-f32 and was not
+    /// loaded from a v2 file (bit-exact with the seed format), v2 otherwise.
+    /// Round-trips both formats byte-exactly through [`Weights::from_bytes`].
     pub fn to_bytes(&self) -> Vec<u8> {
+        // Guard the u16 count field — silently truncating the tensor count
+        // would produce a file that parses to a different (wrong) bundle.
+        assert!(
+            self.tensors.len() <= u16::MAX as usize,
+            "tensor count {} overflows the u16 count field",
+            self.tensors.len()
+        );
+        let v2 = self.version >= WEIGHTS_VERSION_V2
+            || self.tensors.iter().any(|t| !t.data.is_f32());
+        let version = if v2 { WEIGHTS_VERSION_V2 } else { WEIGHTS_VERSION_V1 };
         let mut out = Vec::new();
         out.extend_from_slice(&WEIGHTS_MAGIC.to_le_bytes());
-        out.extend_from_slice(&WEIGHTS_VERSION.to_le_bytes());
+        out.extend_from_slice(&version.to_le_bytes());
         out.extend_from_slice(&(self.tensors.len() as u16).to_le_bytes());
         for t in &self.tensors {
             out.push(t.name.len() as u8);
@@ -138,11 +413,51 @@ impl Weights {
             for &d in &t.shape {
                 out.extend_from_slice(&(d as u32).to_le_bytes());
             }
-            for &v in &t.data {
-                out.extend_from_slice(&v.to_le_bytes());
+            match &t.data {
+                TensorData::F32(values) => {
+                    if v2 {
+                        out.push(DTYPE_F32);
+                    }
+                    for &v in values {
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                TensorData::I8 { data, scales } => {
+                    debug_assert!(v2);
+                    out.push(DTYPE_I8);
+                    out.extend_from_slice(&(scales.len() as u32).to_le_bytes());
+                    for &s in scales {
+                        out.extend_from_slice(&s.to_le_bytes());
+                    }
+                    out.extend(data.iter().map(|&q| q as u8));
+                }
             }
         }
         out
+    }
+
+    /// Deterministic symmetric int8 quantization of every 2-D tensor
+    /// (per-output-row scales; 1-D norm gains stay f32; already-quantized
+    /// tensors pass through unchanged). Pure function of the input bytes —
+    /// the same f32 bundle quantizes to the same int8 bundle on every
+    /// host, which is what lets compressor and decompressor derive the
+    /// shared contract independently from one `.lmz` v1 file.
+    pub fn quantize(&self) -> Weights {
+        let tensors: Vec<Tensor> = self
+            .tensors
+            .iter()
+            .map(|t| {
+                let data = match (&t.data, t.shape.len()) {
+                    (TensorData::F32(values), 2) => {
+                        quantize_2d(&t.name, &t.shape, values)
+                    }
+                    _ => t.data.clone(),
+                };
+                Tensor { name: t.name.clone(), shape: t.shape.clone(), data }
+            })
+            .collect();
+        let index = tensors.iter().enumerate().map(|(i, t)| (t.name.clone(), i)).collect();
+        Weights { tensors, index, version: WEIGHTS_VERSION_V2, fingerprint: OnceLock::new() }
     }
 
     /// Deterministically-random weights for tests (no trained artifacts
@@ -171,11 +486,44 @@ impl Weights {
                     })
                     .collect()
             };
-            tensors.push(Tensor { name, shape, data });
+            tensors.push(Tensor { name, shape, data: TensorData::F32(data) });
         }
         let index = tensors.iter().enumerate().map(|(i, t)| (t.name.clone(), i)).collect();
-        Weights { tensors, index }
+        Weights { tensors, index, version: WEIGHTS_VERSION_V1, fingerprint: OnceLock::new() }
     }
+}
+
+/// Quantize one 2-D f32 tensor to symmetric int8 with per-output-row
+/// scales. `embed` is scaled along its leading rows, projections along
+/// their output columns (see [`scales_len`]).
+fn quantize_2d(name: &str, shape: &[usize], values: &[f32]) -> TensorData {
+    let (rows, cols) = (shape[0], shape[1]);
+    let by_row = scales_along_rows(name);
+    let n_groups = if by_row { rows } else { cols };
+    let mut scales = vec![0.0f32; n_groups];
+    for (g, sg) in scales.iter_mut().enumerate() {
+        let mut maxabs = 0.0f32;
+        if by_row {
+            for &v in &values[g * cols..(g + 1) * cols] {
+                maxabs = maxabs.max(v.abs());
+            }
+        } else {
+            for r in 0..rows {
+                maxabs = maxabs.max(values[r * cols + g].abs());
+            }
+        }
+        // An all-zero group keeps scale 1.0 (quantized values are 0).
+        *sg = if maxabs == 0.0 { 1.0 } else { maxabs / Q8_MAX };
+    }
+    let data: Vec<i8> = values
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            let g = if by_row { i / cols } else { i % cols };
+            (v / scales[g]).round().clamp(-Q8_MAX, Q8_MAX) as i8
+        })
+        .collect();
+    TensorData::I8 { data, scales }
 }
 
 /// Direct tensor indices for one transformer layer — no string keys.
@@ -195,7 +543,9 @@ pub struct LayerPlan {
 /// resolved from string keys to `tensors[...]` indices once at model load,
 /// plus a shared handle to the bundle itself. `NativeModel::advance_batch`
 /// performs zero string formatting, hashing or map lookups per token — it
-/// walks this plan and indexes [`ResolvedPlan::data`] directly.
+/// walks this plan and indexes [`ResolvedPlan::view`] directly (the view
+/// carries the dtype, so per-tensor kernel dispatch is a match on an
+/// already-loaded enum, not a lookup).
 ///
 /// Cloning a plan clones the `Arc`, not the tensors: every replica built
 /// from the same bundle reads the same weight memory.
@@ -236,11 +586,18 @@ impl ResolvedPlan {
         &self.weights
     }
 
-    /// Raw data of the tensor at a resolved index — the engine's only
-    /// weight accessor (no strings, no hashing, no map).
+    /// Raw f32 data of the tensor at a resolved index (norm gains and
+    /// other always-f32 tensors; panics on quantized tensors).
     #[inline]
     pub fn data(&self, idx: usize) -> &[f32] {
         self.weights.data(idx)
+    }
+
+    /// Dtype-tagged view of the tensor at a resolved index — the engine's
+    /// only weight accessor (no strings, no hashing, no map).
+    #[inline]
+    pub fn view(&self, idx: usize) -> TensorView<'_> {
+        self.weights.view(idx)
     }
 }
 
@@ -268,6 +625,68 @@ mod tests {
             assert_eq!(a.shape, b.shape);
             assert_eq!(a.data, b.data);
         }
+        // All-f32 bundles keep serializing as v1, bit-exact with the seed
+        // format (version field at offset 4).
+        assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), WEIGHTS_VERSION_V1);
+        assert_eq!(w2.to_bytes(), bytes, "v1 round-trips byte-exactly");
+    }
+
+    #[test]
+    fn quantized_bytes_roundtrip_as_v2() {
+        let cfg = by_name("nano").unwrap();
+        let q = Weights::random(cfg, 2).quantize();
+        let bytes = q.to_bytes();
+        assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), WEIGHTS_VERSION_V2);
+        let q2 = Weights::from_bytes(&bytes, cfg).unwrap();
+        for (a, b) in q.tensors.iter().zip(&q2.tensors) {
+            assert_eq!(a.data, b.data, "{}", a.name);
+        }
+        assert_eq!(q2.to_bytes(), bytes, "v2 round-trips byte-exactly");
+        assert_eq!(q2.precision(), Precision::Int8);
+    }
+
+    #[test]
+    fn quantize_is_deterministic_and_structured() {
+        let cfg = by_name("tiny").unwrap();
+        let w = Weights::random(cfg, 9);
+        let a = w.quantize();
+        let b = w.quantize();
+        assert_eq!(a.to_bytes(), b.to_bytes(), "same input, same int8 bytes");
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), Weights::random(cfg, 10).quantize().fingerprint());
+        // Quantizing a quantized bundle is a no-op.
+        assert_eq!(a.quantize().to_bytes(), a.to_bytes());
+        for t in &a.tensors {
+            match (&t.data, t.shape.len()) {
+                (TensorData::I8 { scales, .. }, 2) => {
+                    assert_eq!(scales.len(), scales_len(&t.name, &t.shape), "{}", t.name);
+                    assert!(scales.iter().all(|s| *s > 0.0));
+                }
+                (TensorData::F32(_), 1) => {} // norms stay f32
+                other => panic!("{}: unexpected dtype/rank {other:?}", t.name),
+            }
+        }
+        // Quantization ~halves resident weight bytes.
+        let (f, q) = (w.resident_bytes(), a.resident_bytes());
+        assert!(q * 3 < f * 2, "int8 {q} bytes vs f32 {f} bytes");
+    }
+
+    #[test]
+    fn quantize_reconstruction_error_is_bounded() {
+        let cfg = by_name("nano").unwrap();
+        let w = Weights::random(cfg, 3);
+        let q = w.quantize();
+        let (wt, qt) = (w.get("embed"), q.get("embed"));
+        let (TensorData::F32(orig), TensorData::I8 { data, scales }) = (&wt.data, &qt.data)
+        else {
+            panic!("dtypes");
+        };
+        let cols = wt.shape[1];
+        for (i, &v) in orig.iter().enumerate() {
+            let back = data[i] as f32 * scales[i / cols];
+            // Symmetric quantization error is at most half a step.
+            assert!((back - v).abs() <= scales[i / cols] * 0.5 + 1e-7, "elem {i}");
+        }
     }
 
     #[test]
@@ -276,6 +695,8 @@ mod tests {
         let tiny = by_name("tiny").unwrap();
         let bytes = Weights::random(nano, 3).to_bytes();
         assert!(Weights::from_bytes(&bytes, tiny).is_err());
+        assert!(Weights::from_bytes(&Weights::random(nano, 3).quantize().to_bytes(), tiny)
+            .is_err());
     }
 
     #[test]
@@ -313,5 +734,34 @@ mod tests {
         bytes[0] ^= 0xFF;
         assert!(Weights::from_bytes(&bytes, cfg).is_err());
         assert!(Weights::from_bytes(&[1, 2, 3], cfg).is_err());
+        // Truncations of a v2 file are rejected, never panic.
+        let v2 = Weights::random(cfg, 4).quantize().to_bytes();
+        for cut in [9usize, 40, v2.len() / 2, v2.len() - 1] {
+            assert!(Weights::from_bytes(&v2[..cut], cfg).is_err(), "cut={cut}");
+        }
+        // Unknown dtype byte is rejected: corrupt the first tensor's dtype
+        // (offset: 8 header + 1 + len("embed") + 1 + 2 dims * 4).
+        let mut bad = v2.clone();
+        let dt = 8 + 1 + 5 + 1 + 8;
+        assert_eq!(bad[dt], 1, "expected embed's i8 dtype byte");
+        bad[dt] = 7;
+        assert!(Weights::from_bytes(&bad, cfg).is_err());
+    }
+
+    #[test]
+    fn precision_parse_roundtrip() {
+        for p in [Precision::F32, Precision::Int8] {
+            assert_eq!(Precision::parse(p.as_str()).unwrap(), p);
+        }
+        assert_eq!(Precision::parse("q8").unwrap(), Precision::Int8);
+        assert!(Precision::parse("fp16").is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "int8-quantized tensor")]
+    fn legacy_f32_access_to_quantized_tensor_panics() {
+        let cfg = by_name("nano").unwrap();
+        let q = Weights::random(cfg, 5).quantize();
+        let _ = &q.get("embed").data[0];
     }
 }

@@ -37,7 +37,7 @@ fn run(args: &[String]) -> Result<()> {
         "decompress" => cmd::compress::decompress(rest),
         "ratio" => cmd::compress::ratio(rest),
         "serve" => cmd::serve::serve(rest),
-        "models" => cmd::models::list(rest),
+        "models" => cmd::models::run(rest),
         "analyze" => cmd::experiments::analyze(rest),
         "table2" => cmd::experiments::table2(rest),
         "table3" => cmd::experiments::table3(rest),
@@ -69,17 +69,21 @@ DATA
 
 COMPRESSION
   compress    --model M --in FILE --out FILE [--chunk N] [--executor pjrt|native]
-  decompress  --model M --in FILE --out FILE [--executor pjrt|native]
+              [--precision f32|int8]               int8 = quantized native weights
+  decompress  --model M --in FILE --out FILE [--executor pjrt|native] [--precision P]
   ratio       --model M --in FILE [--chunk N]      report the compression ratio
 
 SERVICE
-  serve       --model M [--port P] [--batch B]     batched compression server
+  serve       --model M [--port P] [--replicas N] [--precision f32|int8]
+                                                   batched compression server
 
 EXPERIMENTS (regenerate the paper's tables and figures)
   table2 | table3 | table5 | fig2 | fig5 | fig6 | fig7 | fig8 | fig9 | chunk-sweep
   analyze     --in FILE                            n-gram + entropy report for a file
 
 MISC
-  models                                           list registered model variants"
+  models                                           list registered model variants
+  models quantize --model M --in F32.lmz --out Q8.lmz   convert weights to int8 (.lmz v2)
+  models gen      --model M --out FILE [--seed N]  write deterministic random weights"
     );
 }

@@ -69,13 +69,22 @@ impl ArtifactStore {
     }
 
     /// Upload a model's parameters to device buffers, in canonical order.
+    /// PJRT artifacts are lowered in f32, so quantized bundles are rejected
+    /// here (the native engine is the int8 path).
     pub fn param_buffers(&self, cfg: &LmConfig, weights: &Weights) -> Result<Vec<xla::PjRtBuffer>> {
         let client = self.client()?;
         let mut bufs = Vec::with_capacity(weights.tensors.len());
         for t in &weights.tensors {
+            let data = t.data.as_f32().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "tensor '{}' is int8-quantized; PJRT executors need f32 weights (use the \
+                     native engine for int8)",
+                    t.name
+                )
+            })?;
             bufs.push(
                 client
-                    .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+                    .buffer_from_host_buffer::<f32>(data, &t.shape, None)
                     .map_err(|e| anyhow::anyhow!("uploading {}: {e}", t.name))?,
             );
         }

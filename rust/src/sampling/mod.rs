@@ -126,11 +126,21 @@ impl NativeSampler {
     }
 
     /// Sample one continuation per prompt, all lanes stepped together
-    /// through the batched engine. Prompts must share one length (lanes
-    /// run in lockstep; a padded short lane would see a different context
-    /// and diverge from its single-lane output). Lane `l` draws from its
-    /// own RNG seeded with `seeds[l]`, so each lane's bytes are identical
-    /// to `sample(prompts[l], .., seeds[l])` run alone.
+    /// through the batched engine. Prompts may be **ragged** (any mix of
+    /// lengths ≥ 1): each lane carries its own position offset, so lane
+    /// `l`'s context is exactly `prompts[l]` — never padding. Lane `l`
+    /// draws from its own RNG seeded with `seeds[l]`, so each lane's bytes
+    /// are identical to `sample(prompts[l], .., seeds[l])` run alone.
+    ///
+    /// Mechanics: lanes are sorted by descending prompt length and started
+    /// right-aligned (lane `l` joins the batch at step `max_len - len_l`,
+    /// beginning at KV position 0), so the active set during prompt replay
+    /// is a growing prefix of the sorted order and every lane finishes its
+    /// prompt on the same step. During sampling, lanes that exhaust
+    /// `MAX_CONTEXT` retire longest-first — a shrinking suffix — so every
+    /// engine call still operates on one contiguous lane span. Per-lane
+    /// logits are bit-exact for any batching, which is what makes the
+    /// whole schedule a pure execution detail.
     pub fn sample_batch(
         &self,
         prompts: &[Vec<u32>],
@@ -145,34 +155,56 @@ impl NativeSampler {
         if seeds.len() != n {
             anyhow::bail!("sample_batch: {} prompts but {} seeds", n, seeds.len());
         }
-        let plen = prompts[0].len();
-        if prompts.iter().any(|p| p.len() != plen) {
-            anyhow::bail!("sample_batch: prompts must share one length (lockstep lanes)");
+        if prompts.iter().any(|p| p.is_empty()) {
+            anyhow::bail!("sample_batch: prompts must be non-empty");
         }
+        let max_len = prompts.iter().map(|p| p.len()).max().expect("n > 0");
+        // Sorted lane order, longest prompt first (stable: equal lengths
+        // keep their original order, so the schedule is deterministic).
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(prompts[i].len()));
+
         let cfg = self.model.cfg;
-        let mut rngs: Vec<Pcg64> = seeds.iter().map(|&s| Pcg64::new(s, 31)).collect();
+        let mut rngs: Vec<Pcg64> = order.iter().map(|&i| Pcg64::new(seeds[i], 31)).collect();
         let mut lanes: Vec<LaneState> =
             (0..n).map(|_| LaneState::new(cfg, config::MAX_CONTEXT)).collect();
         let mut scratch = Scratch::new(cfg, n);
         let mut logits = vec![0.0f32; n * config::VOCAB];
         let mut toks = vec![0u32; n];
-        // Prompt replay: one batched step per position; the buffer ends up
-        // holding every lane's logits at its last prompt token.
-        for t in 0..plen {
-            for (tok, p) in toks.iter_mut().zip(prompts) {
-                *tok = p[t];
+        // Prompt replay, right-aligned: at step t the active lanes are the
+        // sorted prefix whose prompts have started (len >= max_len - t).
+        // The buffer ends up holding every lane's logits at its last
+        // prompt token.
+        for t in 0..max_len {
+            let active =
+                order.iter().take_while(|&&i| prompts[i].len() >= max_len - t).count();
+            for (slot, &i) in order[..active].iter().enumerate() {
+                toks[slot] = prompts[i][t - (max_len - prompts[i].len())];
             }
-            self.model.advance_batch(&mut lanes, &toks, &mut scratch, &mut logits, config::VOCAB)?;
+            self.model.advance_batch(
+                &mut lanes[..active],
+                &toks[..active],
+                &mut scratch,
+                &mut logits[..active * config::VOCAB],
+                config::VOCAB,
+            )?;
         }
         let mut outs: Vec<Vec<u8>> = (0..n).map(|_| Vec::with_capacity(n_tokens)).collect();
+        // Sampling: lane (sorted slot) k sits at position prompts[order[k]]
+        // .len() + produced; the longest lanes hit MAX_CONTEXT first, so
+        // retired lanes accumulate at the front of the sorted order.
+        let mut first_live = 0usize;
         for _ in 0..n_tokens {
-            // Lockstep: every lane shares one position counter.
-            if lanes[0].pos() >= config::MAX_CONTEXT {
+            while first_live < n && lanes[first_live].pos() >= config::MAX_CONTEXT {
+                first_live += 1;
+            }
+            if first_live == n {
                 break;
             }
             let inv_t = 1.0 / temp.max(1e-4) as f32;
-            for (l, rng) in rngs.iter_mut().enumerate() {
-                let lane_logits = &logits[l * config::VOCAB..(l + 1) * config::VOCAB];
+            for k in first_live..n {
+                let lane_logits = &logits[k * config::VOCAB..(k + 1) * config::VOCAB];
+                let rng = &mut rngs[k];
                 let mut best = 0usize;
                 let mut best_v = f32::NEG_INFINITY;
                 for (s, &lo) in lane_logits.iter().take(256).enumerate() {
@@ -184,10 +216,16 @@ impl NativeSampler {
                         best = s;
                     }
                 }
-                outs[l].push(best as u8);
-                toks[l] = best as u32;
+                outs[order[k]].push(best as u8);
+                toks[k] = best as u32;
             }
-            self.model.advance_batch(&mut lanes, &toks, &mut scratch, &mut logits, config::VOCAB)?;
+            self.model.advance_batch(
+                &mut lanes[first_live..],
+                &toks[first_live..],
+                &mut scratch,
+                &mut logits[first_live * config::VOCAB..],
+                config::VOCAB,
+            )?;
         }
         Ok(outs)
     }
@@ -295,11 +333,52 @@ mod tests {
         for (l, &seed) in seeds.iter().enumerate() {
             assert_eq!(batch[l], s.sample(&p, 25, 0.9, seed).unwrap(), "lane {l} seed {seed}");
         }
-        // Mismatched prompt lengths are rejected rather than silently
-        // padded (padding would change the short lane's context).
-        let uneven = vec![p.clone(), p[..6].to_vec()];
-        assert!(s.sample_batch(&uneven, 5, 0.9, &[1, 2]).is_err());
         assert!(s.sample_batch(&prompts, 5, 0.9, &[1, 2]).is_err(), "seed count checked");
+        assert!(s.sample_batch(&[vec![]], 5, 0.9, &[1]).is_err(), "empty prompt rejected");
+    }
+
+    #[test]
+    fn ragged_batch_matches_sequential_sampling_bit_for_bit() {
+        // The ROADMAP open item: ragged prompts batch via per-lane
+        // position offsets, and every lane's bytes equal the per-prompt
+        // sequential path exactly (each lane's context is its own prompt,
+        // never padding).
+        let cfg = by_name("nano").unwrap();
+        let s = NativeSampler::new(cfg, Weights::random(cfg, 16));
+        let long = domain_prompts(Domain::Wiki, 1, 14).pop().unwrap();
+        let prompts = vec![
+            long[..5].to_vec(),
+            long.clone(),
+            long[..9].to_vec(),
+            long[..9].iter().rev().copied().collect::<Vec<u32>>(),
+            vec![BOS],
+        ];
+        let seeds = [3u64, 1, 4, 1, 5];
+        let batch = s.sample_batch(&prompts, 30, 0.9, &seeds).unwrap();
+        for (l, (p, &seed)) in prompts.iter().zip(&seeds).enumerate() {
+            let want = s.sample(p, 30, 0.9, seed).unwrap();
+            assert_eq!(batch[l], want, "lane {l} (prompt len {})", p.len());
+            assert_eq!(batch[l].len(), 30);
+        }
+    }
+
+    #[test]
+    fn ragged_lanes_retire_at_context_end_like_sequential() {
+        // A lane whose prompt nearly fills MAX_CONTEXT stops early while
+        // shorter lanes keep producing — byte-identical to running each
+        // prompt alone.
+        let cfg = by_name("nano").unwrap();
+        let s = NativeSampler::new(cfg, Weights::random(cfg, 17));
+        let near_full: Vec<u32> =
+            (0..config::MAX_CONTEXT - 4).map(|i| (i % 256) as u32).collect();
+        let prompts = vec![near_full.clone(), near_full[..20].to_vec()];
+        let seeds = [8u64, 9];
+        let batch = s.sample_batch(&prompts, 10, 0.9, &seeds).unwrap();
+        assert_eq!(batch[0].len(), 4, "long lane retires at MAX_CONTEXT");
+        assert_eq!(batch[1].len(), 10);
+        for (l, (p, &seed)) in prompts.iter().zip(&seeds).enumerate() {
+            assert_eq!(batch[l], s.sample(p, 10, 0.9, seed).unwrap(), "lane {l}");
+        }
     }
 
     #[test]

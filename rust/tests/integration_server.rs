@@ -27,9 +27,11 @@ fn native_server(lanes: usize) -> Server {
 }
 
 /// Replica-pool server: `replicas` engine workers sharing ONE
-/// `Arc<Weights>` bundle, each replica's native engine running `threads`
-/// step-pool threads.
+/// `Arc<Weights>` bundle (f32 or int8-quantized — the compressor's
+/// precision contract is taken from the bundle), each replica's native
+/// engine running `threads` step-pool threads.
 fn replica_server(replicas: usize, threads: usize, weights: Arc<Weights>) -> Server {
+    let precision = weights.precision();
     Server::start(
         move || {
             LlmCompressor::from_shared(
@@ -42,6 +44,7 @@ fn replica_server(replicas: usize, threads: usize, weights: Arc<Weights>) -> Ser
                     executor: ExecutorKind::Native,
                     lanes: 4,
                     threads,
+                    precision,
                 },
             )
         },
@@ -195,4 +198,81 @@ fn server_empty_container_roundtrips_through_compressor() {
     assert_eq!(direct.container_tag(), "nano:0");
     assert_eq!(direct.decompress(&z).unwrap(), b"");
     assert_eq!(server.decompress(&z).unwrap(), b"");
+}
+
+/// The shared int8 bundle every quantized-server test uses: the
+/// deterministic quantization of the same seed-99 nano weights as the f32
+/// tests.
+fn int8_weights() -> Arc<Weights> {
+    Arc::new(Weights::random(by_name("nano").unwrap(), 99).quantize())
+}
+
+#[test]
+fn int8_containers_bit_identical_across_replicas_threads_and_direct_path() {
+    // The int8 acceptance bar mirrors the f32 one: containers are
+    // byte-identical for ANY {replicas, threads} configuration and
+    // identical to the direct compressor path; the int8 path is pinned by
+    // determinism (integer accumulation) rather than a golden reference.
+    let cfg = by_name("nano").unwrap();
+    let weights = int8_weights();
+    let data = llmzip::textgen::quick_sample(1200, 7);
+    let direct = LlmCompressor::from_weights(cfg, weights.clone(), 64, 4).unwrap();
+    assert!(direct.container_tag().starts_with("nano:0:q8:"), "{}", direct.container_tag());
+    let golden = direct.compress(&data).unwrap();
+    for (replicas, threads) in [(1usize, 1usize), (2, 2), (3, 1)] {
+        let server = replica_server(replicas, threads, weights.clone());
+        let z = server.compress(&data).unwrap();
+        assert_eq!(z, golden, "int8 bytes diverged at replicas={replicas} threads={threads}");
+        assert_eq!(server.decompress(&golden).unwrap(), data);
+    }
+    assert_eq!(direct.decompress(&golden).unwrap(), data);
+}
+
+#[test]
+fn int8_server_rejects_foreign_fingerprint_with_clear_error_not_crc() {
+    // A quantized container from DIFFERENT weights must be refused at
+    // admit (tag mismatch names both engines), never decoded into a CRC
+    // failure.
+    let server = replica_server(1, 1, int8_weights());
+    let data = llmzip::textgen::quick_sample(300, 8);
+    let mut container =
+        llmzip::compress::Container::from_bytes(&server.compress(&data).unwrap()).unwrap();
+    assert!(container.model_name.starts_with("nano:0:q8:"));
+    container.model_name = "nano:0:q8:0bad0bad".into();
+    let err = server.decompress(&container.to_bytes()).unwrap_err().to_string();
+    assert!(err.contains("produced by engine"), "{err}");
+    assert!(!err.contains("CRC"), "{err}");
+    // The direct compressor names the fingerprint explicitly.
+    let direct = LlmCompressor::from_weights(
+        by_name("nano").unwrap(),
+        int8_weights(),
+        64,
+        4,
+    )
+    .unwrap();
+    let err = direct.decompress(&container.to_bytes()).unwrap_err().to_string();
+    assert!(err.contains("fingerprint"), "{err}");
+}
+
+#[test]
+fn int8_server_mixed_sizes_and_legacy_empty_exemption() {
+    // Quantized servers serve the same edge cases as f32 ones, and the
+    // legacy `model_name: ""` empty-container exemption is
+    // precision-agnostic (no payload, nothing to mis-decode).
+    let server = replica_server(2, 1, int8_weights());
+    for n in [0usize, 1, 63, 64, 65, 500] {
+        let data = llmzip::textgen::quick_sample(n, n as u64);
+        let z = server.compress(&data).unwrap();
+        assert_eq!(server.decompress(&z).unwrap(), data, "n={n}");
+    }
+    let legacy = llmzip::compress::Container {
+        orig_len: 0,
+        orig_crc32: llmzip::util::crc32(b""),
+        chunk_tokens: 64,
+        model_name: String::new(),
+        chunks: vec![],
+        payload: vec![],
+    }
+    .to_bytes();
+    assert_eq!(server.decompress(&legacy).unwrap(), b"");
 }
