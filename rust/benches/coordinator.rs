@@ -1,25 +1,40 @@
 //! Coordinator benchmarks: dynamic-batcher overhead, end-to-end server
-//! throughput/latency with the native engine (no artifacts required), and
-//! batch-occupancy behaviour under concurrency.
+//! throughput/latency with the native engine (no artifacts required),
+//! batch-occupancy behaviour under concurrency, and the **elastic**
+//! replica pool — steady-state vs bursty load against an autoscaling
+//! server with cross-replica work stealing, recording replicas-over-time
+//! and tokens/sec.
+//!
+//! Results are written as machine-readable JSON to
+//! `BENCH_coordinator.json` (override with `LLMZIP_BENCH_COORD_JSON`) so
+//! the elastic-pool trajectory is diffable across PRs. Set
+//! `LLMZIP_BENCH_SMOKE=1` (CI does) for a seconds-long run that still
+//! exercises every measured path and emits the full JSON schema.
 
 #[path = "harness.rs"]
 mod harness;
 
 use harness::{bench, section};
-use llmzip::compress::LlmCompressor;
+use llmzip::compress::{LlmCompressor, LlmCompressorConfig};
 use llmzip::coordinator::{
     BatchPolicy, DynamicBatcher, Priority, Server, ServerConfig, WorkItem, WorkKind,
 };
 use llmzip::lm::config::by_name;
 use llmzip::lm::weights::Weights;
+use llmzip::lm::{ExecutorKind, StepPool};
 use llmzip::util::stats::percentile;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-fn main() {
+/// CI smoke mode: tiny load, same measured paths, same JSON schema.
+fn smoke() -> bool {
+    std::env::var("LLMZIP_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+fn batcher_bench() {
     section("dynamic batcher (pure queueing)");
-    bench("push+drain 10k items, 8 lanes", 2.0, || {
+    bench("push+drain 10k items, 8 lanes", if smoke() { 0.2 } else { 2.0 }, || {
         let mut b = DynamicBatcher::new(BatchPolicy {
             lanes: 8,
             max_wait: Duration::from_millis(1),
@@ -39,7 +54,9 @@ fn main() {
         while b.next_batch(now + Duration::from_secs(1)).is_some() {}
     })
     .print();
+}
 
+fn server_bench() {
     section("server end-to-end (native engine, nano model)");
     let server = Arc::new(
         Server::start(
@@ -56,7 +73,8 @@ fn main() {
         .expect("server"),
     );
     let n_clients = 8;
-    let payload = llmzip::textgen::quick_sample(2048, 1);
+    let rounds = if smoke() { 1 } else { 4 };
+    let payload = llmzip::textgen::quick_sample(if smoke() { 512 } else { 2048 }, 1);
     let t0 = Instant::now();
     let mut lat: Vec<f64> = Vec::new();
     let handles: Vec<_> = (0..n_clients)
@@ -65,7 +83,7 @@ fn main() {
             let data = payload.clone();
             std::thread::spawn(move || {
                 let mut l = Vec::new();
-                for _ in 0..4 {
+                for _ in 0..rounds {
                     let t = Instant::now();
                     let z = srv.compress(&data).unwrap();
                     let back = srv.decompress(&z).unwrap();
@@ -80,15 +98,221 @@ fn main() {
         lat.extend(h.join().unwrap());
     }
     let wall = t0.elapsed().as_secs_f64();
-    let total = payload.len() * n_clients * 4 * 2;
+    let total = payload.len() * n_clients * rounds * 2;
     println!(
         "{} roundtrips, {:.2}s wall, {:.1} KiB/s, latency p50/p90 {:.0}/{:.0} ms",
-        n_clients * 4,
+        n_clients * rounds,
         wall,
         total as f64 / 1024.0 / wall,
         percentile(&mut lat, 0.5),
         percentile(&mut lat, 0.9),
     );
-    println!("occupancy mean {:.2}  batches {}", server.metrics.mean_occupancy(),
-        server.metrics.batches.load(Ordering::Relaxed));
+    println!(
+        "occupancy mean {:.2}  batches {}",
+        server.metrics.mean_occupancy(),
+        server.metrics.batches.load(Ordering::Relaxed)
+    );
+}
+
+// ---------------------------------------------------------------------
+// Elastic pool: steady vs bursty load against an autoscaling server.
+// ---------------------------------------------------------------------
+
+const ELASTIC_MIN: usize = 1;
+const ELASTIC_MAX: usize = 4;
+
+struct ElasticScenario {
+    name: &'static str,
+    wall_s: f64,
+    tokens_per_sec: f64,
+    scale_ups: u64,
+    scale_downs: u64,
+    /// (elapsed ms, live replicas) sampled ~every 10 ms.
+    replicas_over_time: Vec<(f64, u64)>,
+}
+
+/// Autoscaling server: nano model, shared weights, shared work-stealing
+/// StepPool, fast scaler timings so the bench window sees real churn.
+fn elastic_server() -> Arc<Server> {
+    let cfg = by_name("nano").unwrap();
+    let weights = Arc::new(Weights::random(cfg, 17));
+    let pool = StepPool::new(2);
+    Arc::new(
+        Server::start(
+            move || {
+                LlmCompressor::from_shared_pooled(
+                    by_name("nano")?,
+                    weights.clone(),
+                    LlmCompressorConfig {
+                        model: "nano".into(),
+                        chunk_tokens: 128,
+                        stream_bytes: 512,
+                        executor: ExecutorKind::Native,
+                        lanes: 4,
+                        threads: 1,
+                        ..Default::default()
+                    },
+                    Some(pool.clone()),
+                )
+            },
+            ServerConfig {
+                chunk_tokens: 128,
+                replicas: ELASTIC_MIN,
+                min_replicas: ELASTIC_MIN,
+                max_replicas: ELASTIC_MAX,
+                autoscale: true,
+                autoscale_cooldown: Duration::from_millis(25),
+                autoscale_shrink_after: Duration::from_millis(60),
+                policy: BatchPolicy { lanes: 4, max_wait: Duration::from_millis(2) },
+                ..Default::default()
+            },
+        )
+        .expect("elastic server"),
+    )
+}
+
+/// Drive `load` against a fresh elastic server while a sampler thread
+/// records the replica gauge; `load` returns the bytes it pushed through
+/// one full compress+decompress cycle.
+fn run_elastic<F>(name: &'static str, load: F) -> ElasticScenario
+where
+    F: FnOnce(Arc<Server>) -> usize,
+{
+    let server = elastic_server();
+    let stop = Arc::new(AtomicBool::new(false));
+    let sampler = {
+        let srv = server.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let t0 = Instant::now();
+            let mut samples = Vec::new();
+            while !stop.load(Ordering::Relaxed) {
+                samples.push((
+                    t0.elapsed().as_secs_f64() * 1e3,
+                    srv.metrics.replicas.load(Ordering::Relaxed),
+                ));
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            samples
+        })
+    };
+    let t0 = Instant::now();
+    let bytes = load(server.clone());
+    let wall = t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::Relaxed);
+    let replicas_over_time = sampler.join().unwrap();
+    let m = &server.metrics;
+    let scenario = ElasticScenario {
+        name,
+        wall_s: wall,
+        // Compress + decompress both touch every byte once.
+        tokens_per_sec: (2 * bytes) as f64 / wall,
+        scale_ups: m.scale_ups.load(Ordering::Relaxed),
+        scale_downs: m.scale_downs.load(Ordering::Relaxed),
+        replicas_over_time,
+    };
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0, "elastic bench errored: {}", m.report());
+    let peak = m.replicas_peak.load(Ordering::Relaxed);
+    let low = m.replicas_low.load(Ordering::Relaxed);
+    assert!(low as usize >= ELASTIC_MIN && peak as usize <= ELASTIC_MAX, "{}", m.report());
+    println!(
+        "{name:<8} {:>10.0} tok/s  wall {:.2}s  scale_ups {}  scale_downs {}  replicas [{}..{}]",
+        scenario.tokens_per_sec, wall, scenario.scale_ups, scenario.scale_downs, low, peak
+    );
+    scenario
+}
+
+fn elastic_bench() -> Vec<ElasticScenario> {
+    section(&format!(
+        "elastic replica pool (nano, autoscale {ELASTIC_MIN}..{ELASTIC_MAX}, shared steal pool)"
+    ));
+    let payload_bytes = if smoke() { 768usize } else { 3072 };
+    let rounds = if smoke() { 1usize } else { 3 };
+    // Steady: a constant stream from a fixed client set — the pool should
+    // settle at one level and hold it (the no-flap property under load).
+    let steady = run_elastic("steady", move |server| {
+        let handles: Vec<_> = (0..3u64)
+            .map(|c| {
+                let srv = server.clone();
+                std::thread::spawn(move || {
+                    let data = llmzip::textgen::quick_sample(payload_bytes, c);
+                    let mut bytes = 0usize;
+                    for _ in 0..rounds {
+                        let z = srv.compress(&data).unwrap();
+                        assert_eq!(srv.decompress(&z).unwrap(), data);
+                        bytes += data.len();
+                    }
+                    bytes
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    // Bursty: waves of concurrent clients separated by quiet gaps longer
+    // than shrink_after — the pool should breathe (grow in the wave,
+    // shrink in the gap), visible in replicas_over_time.
+    let bursty = run_elastic("bursty", move |server| {
+        let cycles = if smoke() { 2u64 } else { 3 };
+        let mut total = 0usize;
+        for cycle in 0..cycles {
+            let handles: Vec<_> = (0..6u64)
+                .map(|c| {
+                    let srv = server.clone();
+                    std::thread::spawn(move || {
+                        let data =
+                            llmzip::textgen::quick_sample(payload_bytes, cycle * 10 + c);
+                        let z = srv.compress(&data).unwrap();
+                        assert_eq!(srv.decompress(&z).unwrap(), data);
+                        data.len()
+                    })
+                })
+                .collect();
+            total += handles.into_iter().map(|h| h.join().unwrap()).sum::<usize>();
+            std::thread::sleep(Duration::from_millis(150));
+        }
+        total
+    });
+    vec![steady, bursty]
+}
+
+/// Hand-rolled JSON (no serde in this offline crate set).
+fn write_bench_json(scenarios: &[ElasticScenario]) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"coordinator\",\n");
+    s.push_str("  \"schema\": 1,\n");
+    s.push_str("  \"elastic\": {\n");
+    s.push_str(&format!(
+        "    \"model\": \"nano\", \"min_replicas\": {ELASTIC_MIN}, \
+         \"max_replicas\": {ELASTIC_MAX}, \"unit\": \"tokens_per_sec\",\n"
+    ));
+    s.push_str("    \"scenarios\": [\n");
+    for (i, sc) in scenarios.iter().enumerate() {
+        s.push_str(&format!(
+            "      {{\"name\": \"{}\", \"tokens_per_sec\": {:.1}, \"wall_s\": {:.3}, \
+             \"scale_ups\": {}, \"scale_downs\": {}, \"replicas_over_time\": [",
+            sc.name, sc.tokens_per_sec, sc.wall_s, sc.scale_ups, sc.scale_downs
+        ));
+        for (j, (t_ms, replicas)) in sc.replicas_over_time.iter().enumerate() {
+            s.push_str(&format!(
+                "{}{{\"t_ms\": {t_ms:.0}, \"replicas\": {replicas}}}",
+                if j == 0 { "" } else { ", " }
+            ));
+        }
+        s.push_str(&format!("]}}{}\n", if i + 1 < scenarios.len() { "," } else { "" }));
+    }
+    s.push_str("    ]\n  }\n}\n");
+    let path = std::env::var("LLMZIP_BENCH_COORD_JSON")
+        .unwrap_or_else(|_| "BENCH_coordinator.json".to_string());
+    match std::fs::write(&path, &s) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\nWARN could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    batcher_bench();
+    server_bench();
+    let scenarios = elastic_bench();
+    write_bench_json(&scenarios);
 }

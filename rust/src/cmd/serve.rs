@@ -8,7 +8,7 @@
 use crate::cli::Args;
 use llmzip::compress::{LlmCompressor, LlmCompressorConfig};
 use llmzip::coordinator::{BatchPolicy, Server, ServerConfig};
-use llmzip::lm::{ExecutorKind, Precision};
+use llmzip::lm::{ExecutorKind, Precision, StepPool};
 use llmzip::Result;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -31,6 +31,13 @@ pub fn serve(args: &[String]) -> Result<()> {
     // replicas share one Arc<Weights> (loaded once, below); PJRT replicas
     // each open their own thread-affine handles.
     let replicas = args.usize_or("replicas", 1)?;
+    // Elastic pool: --min-replicas/--max-replicas open an autoscale range
+    // around --replicas (the initial size). Any actual range (or an
+    // explicit --autoscale) turns the metrics-driven scaler on; native
+    // engines only — PJRT pools stay static.
+    let min_replicas = args.usize_or("min-replicas", replicas)?;
+    let max_replicas = args.usize_or("max-replicas", replicas.max(min_replicas))?;
+    let autoscale = min_replicas != max_replicas || args.has("autoscale");
     // Weight precision: with int8, the bundle is quantized ONCE here and
     // every replica shares the quantized Arc (half the resident weight
     // bytes, and one fingerprint for the whole pool).
@@ -60,8 +67,26 @@ pub fn serve(args: &[String]) -> Result<()> {
                 _ => weights,
             };
             let weights = Arc::new(weights);
+            // Cross-replica work stealing: ONE StepPool sized to the whole
+            // thread budget (what N private pools would have spawned), so
+            // replicas — including autoscale-grown ones — fan their lane
+            // spans into a shared injector and idle step threads help busy
+            // siblings. Only engaged when more than one replica can exist
+            // (stealing cannot help a lone replica — it would pay injector
+            // contention for nothing; the private per-replica pool is the
+            // right shape there). --no-steal restores private pools.
+            let pool = if max_replicas > 1 && !args.has("no-steal") {
+                Some(StepPool::new(threads.max(1) * max_replicas))
+            } else {
+                None
+            };
             Box::new(move || {
-                LlmCompressor::from_shared(model_cfg, weights.clone(), comp_cfg.clone())
+                LlmCompressor::from_shared_pooled(
+                    model_cfg,
+                    weights.clone(),
+                    comp_cfg.clone(),
+                    pool.clone(),
+                )
             })
         } else {
             if precision != Precision::F32 {
@@ -79,10 +104,14 @@ pub fn serve(args: &[String]) -> Result<()> {
             lanes,
             threads,
             replicas,
+            min_replicas,
+            max_replicas,
+            autoscale,
             policy: BatchPolicy {
                 lanes,
                 max_wait: Duration::from_millis(max_wait_ms),
             },
+            ..Default::default()
         },
     )?;
     let server = Arc::new(server);
@@ -91,7 +120,8 @@ pub fn serve(args: &[String]) -> Result<()> {
     println!(
         "llmzip serving on 127.0.0.1:{port} \
          (chunk={chunk}, lanes={lanes}, threads={threads}, replicas={replicas}, \
-         precision={})",
+         autoscale={}, precision={})",
+        if autoscale { format!("{min_replicas}..{max_replicas}") } else { "off".into() },
         precision.as_str()
     );
     loop {

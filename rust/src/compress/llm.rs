@@ -49,7 +49,7 @@ use crate::compress::Compressor;
 use crate::entropy::range::{RangeDecoder, RangeEncoder};
 use crate::lm::config::{self, LmConfig};
 use crate::lm::executor::{ExecutorKind, LmExecutor};
-use crate::lm::native::NativeExecutor;
+use crate::lm::native::{NativeExecutor, StepPool};
 use crate::lm::weights::{Precision, Weights};
 use crate::runtime::{ArtifactStore, PjrtForwardExecutor, PjrtStepExecutor};
 use crate::tokenizer::vocab::{BOS, PAD};
@@ -270,6 +270,23 @@ impl LlmCompressor {
         weights: Arc<Weights>,
         cfg: LlmCompressorConfig,
     ) -> Result<LlmCompressor> {
+        Self::from_shared_pooled(model_cfg, weights, cfg, None)
+    }
+
+    /// [`Self::from_shared`] with an optional cross-replica [`StepPool`]:
+    /// the coordinator's elastic replica pool passes ONE shared pool so
+    /// every replica's steps fan lane spans into a common injector and
+    /// idle step threads steal sibling replicas' spans. With a pool,
+    /// `cfg.threads` is ignored (the pool owns the thread budget); without
+    /// one, the engine spawns its private `cfg.threads`-wide pool as
+    /// before. Either way the containers are byte-identical — stealing is
+    /// a pure execution knob (asserted by `tests/stress_elastic.rs`).
+    pub fn from_shared_pooled(
+        model_cfg: &'static LmConfig,
+        weights: Arc<Weights>,
+        cfg: LlmCompressorConfig,
+        pool: Option<Arc<StepPool>>,
+    ) -> Result<LlmCompressor> {
         if cfg.executor != ExecutorKind::Native {
             anyhow::bail!("from_shared builds native engines only, got {:?}", cfg.executor);
         }
@@ -295,9 +312,12 @@ impl LlmCompressor {
         let mut cfg = cfg;
         cfg.model = model_cfg.name.into();
         let tag = render_tag(&cfg.model, ExecutorKind::Native, Some(&weights));
-        let engine = NativeExecutor::new(model_cfg, weights, cfg.lanes.max(1))
-            .with_threads(cfg.threads.max(1))
-            .with_head_rows(config::CODED_BYTES);
+        let base = NativeExecutor::new(model_cfg, weights, cfg.lanes.max(1));
+        let engine = match pool {
+            Some(p) => base.with_shared_pool(p),
+            None => base.with_threads(cfg.threads.max(1)),
+        }
+        .with_head_rows(config::CODED_BYTES);
         Ok(LlmCompressor { cfg, model_cfg, tag, engine: RefCell::new(Box::new(engine)) })
     }
 
@@ -724,6 +744,45 @@ mod tests {
         // PJRT configs are rejected: sharing host weights cannot build one.
         let pjrt = LlmCompressorConfig { executor: ExecutorKind::PjrtStep, ..Default::default() };
         assert!(LlmCompressor::from_shared(cfg, shared, pjrt).is_err());
+    }
+
+    #[test]
+    fn shared_pool_compressors_emit_identical_containers() {
+        // Two replicas fanning steps into ONE work-stealing StepPool (the
+        // elastic coordinator's configuration) produce the same bytes as
+        // the plain single-threaded compressor, and cross-decode.
+        let cfg = by_name("nano").unwrap();
+        let shared = Arc::new(Weights::random(cfg, 7));
+        let pool = StepPool::new(2);
+        let replica_cfg = LlmCompressorConfig {
+            model: cfg.name.into(),
+            chunk_tokens: 32,
+            stream_bytes: 128,
+            executor: ExecutorKind::Native,
+            lanes: 2,
+            threads: 1,
+            precision: Precision::F32,
+        };
+        let a = LlmCompressor::from_shared_pooled(
+            cfg,
+            shared.clone(),
+            replica_cfg.clone(),
+            Some(pool.clone()),
+        )
+        .unwrap();
+        let b =
+            LlmCompressor::from_shared_pooled(cfg, shared.clone(), replica_cfg, Some(pool))
+                .unwrap();
+        let plain = native_compressor(32);
+        let data = crate::textgen::quick_sample(300, 9);
+        let za = a.compress(&data).unwrap();
+        assert_eq!(za, b.compress(&data).unwrap());
+        assert_eq!(za, plain.compress(&data).unwrap(), "stealing must not change the bytes");
+        assert_eq!(b.decompress(&za).unwrap(), data);
+        assert_eq!(plain.decompress(&za).unwrap(), data);
+        // PJRT configs are still rejected on the pooled path.
+        let pjrt = LlmCompressorConfig { executor: ExecutorKind::PjrtStep, ..Default::default() };
+        assert!(LlmCompressor::from_shared_pooled(cfg, shared, pjrt, None).is_err());
     }
 
     #[test]

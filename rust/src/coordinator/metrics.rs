@@ -75,19 +75,35 @@ pub struct Metrics {
     /// Recent per-request latency samples (ms) by op, for percentiles.
     compress_lat_ms: Mutex<LatencyStore>,
     decompress_lat_ms: Mutex<LatencyStore>,
-    /// One slot per engine worker (replica); empty on bare `new()`.
+    /// Live replica gauge (autoscaled pools move this at runtime).
+    pub replicas: AtomicU64,
+    /// Autoscale actions taken (a grow only counts once its worker is up).
+    pub scale_ups: AtomicU64,
+    pub scale_downs: AtomicU64,
+    /// Low/high watermarks of the replica gauge over the server's life —
+    /// the bound the autoscale tests assert. `replicas_low` starts at
+    /// `u64::MAX` ("never set") so a genuine gauge value of 0 — every
+    /// replica dead — is a real watermark, not a sentinel. Construct
+    /// through [`Metrics::new`]/[`Metrics::with_workers`] (a bare
+    /// `Default` leaves the low watermark at 0).
+    pub replicas_low: AtomicU64,
+    pub replicas_peak: AtomicU64,
+    /// One slot per engine worker (replica); empty on bare `new()`. An
+    /// autoscaled server sizes this to `max_replicas` so every worker the
+    /// pool can ever grow has its attribution slot from the start.
     pub workers: Vec<WorkerMetrics>,
 }
 
 impl Metrics {
     pub fn new() -> Self {
-        Self::default()
+        Self::with_workers(0)
     }
 
     /// Metrics for a server with `n` engine workers.
     pub fn with_workers(n: usize) -> Self {
         Metrics {
             workers: (0..n).map(|_| WorkerMetrics::default()).collect(),
+            replicas_low: AtomicU64::new(u64::MAX),
             ..Default::default()
         }
     }
@@ -182,6 +198,26 @@ impl Metrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Update the live-replica gauge (and its low/high watermarks). A
+    /// gauge of 0 — every replica dead — is recorded in the low watermark
+    /// like any other value (it starts at `u64::MAX`, not 0).
+    pub fn set_replicas(&self, n: usize) {
+        let n = n as u64;
+        self.replicas.store(n, Ordering::Relaxed);
+        self.replicas_peak.fetch_max(n, Ordering::Relaxed);
+        self.replicas_low.fetch_min(n, Ordering::Relaxed);
+    }
+
+    /// One autoscale action landed: the pool now serves `now_live` replicas.
+    pub fn record_scale(&self, up: bool, now_live: usize) {
+        if up {
+            self.scale_ups.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.scale_downs.fetch_add(1, Ordering::Relaxed);
+        }
+        self.set_replicas(now_live);
+    }
+
     /// Human-readable snapshot.
     pub fn report(&self) -> String {
         let (c_p50, c_p99) = self.latency_p50_p99_ms(WorkKind::Compress);
@@ -191,6 +227,7 @@ impl Metrics {
         let tps = self.tokens_per_sec.lock().unwrap();
         let mut s = format!(
             "requests={} chunks={} batches={} bytes_in={} bytes_out={} tokens={} errors={} \
+             replicas={} scale_ups={} scale_downs={} \
              latency_ms[mean={:.2} max={:.2}] batch_fill[mean={:.2}] \
              engine_tok_per_s[mean={:.0} max={:.0}] \
              compress_ms[p50={:.2} p99={:.2}] decompress_ms[p50={:.2} p99={:.2}]",
@@ -201,6 +238,9 @@ impl Metrics {
             self.bytes_out.load(Ordering::Relaxed),
             self.tokens.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
+            self.replicas.load(Ordering::Relaxed),
+            self.scale_ups.load(Ordering::Relaxed),
+            self.scale_downs.load(Ordering::Relaxed),
             lat.mean(),
             lat.max(),
             occ.mean(),
@@ -309,6 +349,30 @@ mod tests {
         assert_eq!(s.total as usize, 2 * MAX_LATENCY_SAMPLES);
         assert_eq!(s.samples.len(), MAX_LATENCY_SAMPLES);
         assert!(s.samples.iter().all(|&x| x == 9.0), "window fully refreshed");
+    }
+
+    #[test]
+    fn replica_gauge_tracks_watermarks() {
+        let m = Metrics::with_workers(4);
+        assert_eq!(m.replicas_low.load(Ordering::Relaxed), u64::MAX, "MAX = never set");
+        m.set_replicas(2);
+        m.record_scale(true, 3);
+        m.record_scale(true, 4);
+        m.record_scale(false, 3);
+        m.record_scale(false, 1);
+        assert_eq!(m.replicas.load(Ordering::Relaxed), 1);
+        assert_eq!(m.scale_ups.load(Ordering::Relaxed), 2);
+        assert_eq!(m.scale_downs.load(Ordering::Relaxed), 2);
+        assert_eq!(m.replicas_peak.load(Ordering::Relaxed), 4);
+        assert_eq!(m.replicas_low.load(Ordering::Relaxed), 1);
+        // A genuine all-dead window is a real watermark, not a sentinel:
+        // later recoveries must not erase it.
+        m.set_replicas(0);
+        m.record_scale(true, 1);
+        assert_eq!(m.replicas_low.load(Ordering::Relaxed), 0);
+        let r = m.report();
+        assert!(r.contains("replicas=1"), "{r}");
+        assert!(r.contains("scale_ups=3"), "{r}");
     }
 
     #[test]

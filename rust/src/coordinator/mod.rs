@@ -5,11 +5,17 @@
 //! from *concurrent requests* are packed into shared `[lanes]`-wide engine
 //! batches by the [`batcher::DynamicBatcher`] (flush on full-or-deadline,
 //! decompress fast lane, per-item [`batcher::Priority`]), a scheduler
-//! thread dispatches released batches onto `replicas` persistent engine
+//! thread dispatches released batches onto an **elastic** pool of engine
 //! workers (each owning a full compressor; native replicas share ONE
-//! `Arc<Weights>`), and the [`router`] reassembles per-request results in
-//! order. Metrics cover throughput, batch occupancy, per-op latency
-//! percentiles (p50/p99) and per-worker queue depth/fill.
+//! `Arc<Weights>` and can share one work-stealing
+//! [`crate::lm::native::StepPool`]), and the [`router`] reassembles
+//! per-request results in order. With [`router::ServerConfig::autoscale`]
+//! the scheduler grows and shrinks the worker set between
+//! `min_replicas`/`max_replicas` from its queue-depth (and optional p99)
+//! signals — hysteresis + cooldown, provably invisible in the container
+//! bytes (see `tests/stress_elastic.rs`). Metrics cover throughput, batch
+//! occupancy, per-op latency percentiles (p50/p99), per-worker queue
+//! depth/fill, and the replica gauge + scale-event counters.
 //!
 //! No tokio in this environment: the coordinator is built on std threads +
 //! mpsc channels — one scheduler plus one OS thread per engine replica,

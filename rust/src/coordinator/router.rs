@@ -23,11 +23,36 @@
 //! every chunk is encoded in its own lane with its own range coder, so
 //! batch packing, dispatch order and replica choice cannot leak into the
 //! payload bytes (asserted by `tests/integration_server.rs`).
+//!
+//! ## Elastic replica pool (autoscaling)
+//!
+//! With [`ServerConfig::autoscale`], the worker set is **elastic**: the
+//! scheduler holds `max_replicas` worker *slots* and grows/shrinks the
+//! live set between `min_replicas` and `max_replicas` from the signals it
+//! already records into [`Metrics`] — the scheduler backlog (the same
+//! queue depth attributed per worker at every dispatch) and, optionally,
+//! the compress p99 latency histogram. The [`Autoscaler`] is deliberately
+//! boring: grow only when more than one full batch per live replica is
+//! queued *after* dispatch, shrink only a replica that has been idle with
+//! an empty queue for a sustained window, and never act twice within the
+//! cooldown — wide hysteresis, so constant load cannot flap the pool.
+//! Native replicas are cheap to grow (the factory clones an
+//! `Arc<Weights>`, and with a shared [`crate::lm::native::StepPool`] no
+//! step threads spawn at all); PJRT replicas are thread-affine and static,
+//! so autoscale is disabled for them.
+//!
+//! Scaling events are **provably invisible in the output bytes**: a chunk
+//! is encoded entirely inside one lane of one replica with its own range
+//! coder, and every replica is built by the same factory from the same
+//! weights, so which replica (or how many existed at the time) cannot
+//! reach the payload. `tests/stress_elastic.rs` pins this end-to-end
+//! against the direct single-engine path under forced grow/shrink churn.
 
 use crate::compress::container::{ChunkRecord, Container};
 use crate::compress::llm::LlmCompressor;
 use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher, Priority, WorkItem, WorkKind};
 use crate::coordinator::metrics::Metrics;
+use crate::lm::executor::ExecutorKind;
 use crate::util::crc32;
 use crate::Result;
 use std::collections::HashMap;
@@ -53,7 +78,27 @@ pub struct ServerConfig {
     /// Engine replicas: parallel engine workers, each running a full
     /// compressor built by the factory (`0` behaves as `1`). Native
     /// replicas share one `Arc<Weights>` when the factory clones one.
+    /// With [`Self::autoscale`] this is the INITIAL pool size.
     pub replicas: usize,
+    /// Autoscale floor (`0` = `replicas`). The pool never shrinks below
+    /// this many live replicas.
+    pub min_replicas: usize,
+    /// Autoscale ceiling (`0` = `replicas`). The pool never grows past
+    /// this; it also sizes the per-worker metrics slots.
+    pub max_replicas: usize,
+    /// Grow/shrink the worker pool at runtime from the queue-depth (and
+    /// optional p99) signals. Native engines only — PJRT replicas are
+    /// thread-affine and stay static even with this set.
+    pub autoscale: bool,
+    /// Minimum interval between scaling actions (anti-flap hysteresis).
+    pub autoscale_cooldown: Duration,
+    /// Continuous idle time (empty queue + an idle replica) required
+    /// before a shrink.
+    pub autoscale_shrink_after: Duration,
+    /// Optional secondary grow signal: also grow when the compress p99
+    /// exceeds this many ms while work is queued (`INFINITY` = disabled,
+    /// queue-depth only — the deterministic default the tests pin).
+    pub autoscale_p99_ms: f64,
     pub policy: BatchPolicy,
 }
 
@@ -64,9 +109,26 @@ impl Default for ServerConfig {
             lanes: 0,
             threads: 0,
             replicas: 1,
+            min_replicas: 0,
+            max_replicas: 0,
+            autoscale: false,
+            autoscale_cooldown: Duration::from_millis(1000),
+            autoscale_shrink_after: Duration::from_millis(2000),
+            autoscale_p99_ms: f64::INFINITY,
             policy: BatchPolicy::default(),
         }
     }
+}
+
+/// Effective `(min, initial, max)` pool bounds for a config: the legacy
+/// `replicas` knob is the initial size, `min`/`max` default to it when
+/// left `0`, and the initial size is clamped into `[min, max]`.
+fn pool_bounds(config: &ServerConfig) -> (usize, usize, usize) {
+    let replicas = config.replicas.max(1);
+    let min = if config.min_replicas == 0 { replicas } else { config.min_replicas };
+    let max = if config.max_replicas == 0 { replicas } else { config.max_replicas };
+    let max = max.max(min);
+    (min, replicas.clamp(min, max), max)
 }
 
 enum Op {
@@ -82,11 +144,14 @@ struct Request {
     started: Instant,
 }
 
-/// Everything the scheduler hears about: client intake and worker
-/// completions share one channel, so a single `recv` drives both.
+/// Everything the scheduler hears about: client intake, worker
+/// completions and runtime-grown worker readiness share one channel, so a
+/// single `recv` drives all of them.
 enum ToScheduler {
     Request(Request),
     Done(BatchDone),
+    /// An autoscale-grown worker finished construction (`Ok` = serving).
+    Ready { worker: usize, info: Result<EngineInfo> },
 }
 
 /// One batch handed to an engine worker.
@@ -115,6 +180,9 @@ struct EngineInfo {
     /// `model:executor_flag` tag stamped into every produced container —
     /// including empty ones, which never reach a worker.
     tag: String,
+    /// Executor kind: autoscale only moves native pools (PJRT handles are
+    /// thread-affine and their replicas stay static).
+    kind: ExecutorKind,
 }
 
 /// Per-request reassembly state.
@@ -152,9 +220,21 @@ impl Server {
     where
         F: Fn() -> Result<LlmCompressor> + Send + Sync + 'static,
     {
-        let replicas = config.replicas.max(1);
-        let (tx, rx) = sync_channel::<ToScheduler>(256 + 4 * replicas);
-        let metrics = Arc::new(Metrics::with_workers(replicas));
+        if config.min_replicas > 0
+            && config.max_replicas > 0
+            && config.min_replicas > config.max_replicas
+        {
+            anyhow::bail!(
+                "min_replicas {} > max_replicas {}",
+                config.min_replicas,
+                config.max_replicas
+            );
+        }
+        let (_, _, max_replicas) = pool_bounds(&config);
+        let (tx, rx) = sync_channel::<ToScheduler>(256 + 4 * max_replicas);
+        // One metrics slot per worker the pool can EVER hold, so a grown
+        // replica's attribution works from its first batch.
+        let metrics = Arc::new(Metrics::with_workers(max_replicas));
         let shutdown = Arc::new(AtomicBool::new(false));
         let factory = Arc::new(factory);
         let m = metrics.clone();
@@ -215,6 +295,27 @@ impl Drop for Server {
     }
 }
 
+/// Where a worker reports construction readiness: startup replicas feed
+/// the blocking startup collector, autoscale-grown replicas feed the
+/// scheduler's own intake channel.
+enum ReadySink {
+    Startup(SyncSender<(usize, Result<EngineInfo>)>),
+    Runtime(SyncSender<ToScheduler>),
+}
+
+impl ReadySink {
+    fn send(self, id: usize, info: Result<EngineInfo>) {
+        match self {
+            ReadySink::Startup(tx) => {
+                let _ = tx.send((id, info));
+            }
+            ReadySink::Runtime(tx) => {
+                let _ = tx.send(ToScheduler::Ready { worker: id, info });
+            }
+        }
+    }
+}
+
 /// An engine worker: builds its compressor, reports readiness, then runs
 /// one batch at a time until the scheduler drops its job channel.
 fn engine_worker<F>(
@@ -222,25 +323,29 @@ fn engine_worker<F>(
     factory: Arc<F>,
     job_rx: Receiver<EngineJob>,
     done_tx: SyncSender<ToScheduler>,
-    ready_tx: SyncSender<(usize, Result<EngineInfo>)>,
+    ready: ReadySink,
     metrics: Arc<Metrics>,
 ) where
     F: Fn() -> Result<LlmCompressor> + Send + Sync + 'static,
 {
-    let compressor = match factory() {
+    // A panicking factory must not strand the slot in Starting forever:
+    // contain it and report the grow (or startup) as failed.
+    let built = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| factory()))
+        .unwrap_or_else(|_| Err(anyhow::anyhow!("engine factory panicked")));
+    let compressor = match built {
         Ok(c) => {
             let info = EngineInfo {
                 lanes: c.lanes(),
                 stream_bytes: c.stream_bytes(),
                 chunk_tokens: c.chunk_tokens(),
                 tag: c.container_tag(),
+                kind: c.executor_kind(),
             };
-            let _ = ready_tx.send((id, Ok(info)));
-            drop(ready_tx);
+            ready.send(id, Ok(info));
             c
         }
         Err(e) => {
-            let _ = ready_tx.send((id, Err(e)));
+            ready.send(id, Err(e));
             return;
         }
     };
@@ -284,6 +389,184 @@ fn engine_worker<F>(
     }
 }
 
+/// Lifecycle of one worker slot in the elastic pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SlotState {
+    /// Never started, or a failed grow — free for a future grow.
+    Empty,
+    /// Factory running inside the new worker thread.
+    Starting,
+    /// Ready for a batch.
+    Idle,
+    /// Holds a dispatched batch.
+    Busy,
+    /// Cleanly retired by a shrink (thread exiting or exited).
+    Retired,
+    /// Died unexpectedly (job channel closed under a live dispatch).
+    Dead,
+}
+
+struct Slot {
+    state: SlotState,
+    job_tx: Option<SyncSender<EngineJob>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Slot {
+    fn empty() -> Slot {
+        Slot { state: SlotState::Empty, job_tx: None, handle: None }
+    }
+}
+
+/// Workers currently able to serve (ready or mid-batch).
+fn live_count(slots: &[Slot]) -> usize {
+    slots.iter().filter(|s| matches!(s.state, SlotState::Idle | SlotState::Busy)).count()
+}
+
+fn count_state(slots: &[Slot], st: SlotState) -> usize {
+    slots.iter().filter(|s| s.state == st).count()
+}
+
+/// Spawn one engine worker into slot `id` (state `Starting` until its
+/// readiness report lands). An OS thread-spawn failure is an `Err`, not a
+/// panic — during a runtime grow it must be containable (thread limits are
+/// most likely to bite exactly when the autoscaler reacts to a burst).
+fn spawn_worker<F>(
+    id: usize,
+    factory: &Arc<F>,
+    done_tx: &SyncSender<ToScheduler>,
+    startup: Option<&SyncSender<(usize, Result<EngineInfo>)>>,
+    metrics: &Arc<Metrics>,
+) -> Result<Slot>
+where
+    F: Fn() -> Result<LlmCompressor> + Send + Sync + 'static,
+{
+    let (job_tx, job_rx) = sync_channel::<EngineJob>(1);
+    let ready = match startup {
+        Some(tx) => ReadySink::Startup(tx.clone()),
+        None => ReadySink::Runtime(done_tx.clone()),
+    };
+    let f = factory.clone();
+    let dt = done_tx.clone();
+    let m = metrics.clone();
+    let handle = std::thread::Builder::new()
+        .name(format!("llmzip-engine-{id}"))
+        .spawn(move || engine_worker(id, f, job_rx, dt, ready, m))
+        .map_err(|e| anyhow::anyhow!("spawning engine worker {id}: {e}"))?;
+    Ok(Slot { state: SlotState::Starting, job_tx: Some(job_tx), handle: Some(handle) })
+}
+
+/// What the autoscaler sees at one evaluation point (taken AFTER dispatch,
+/// so `queued` is work no live replica could absorb).
+#[derive(Clone, Copy, Debug)]
+struct PoolSnapshot {
+    /// Idle + busy workers.
+    live: usize,
+    /// Workers mid-construction (count toward capacity, so one burst
+    /// cannot spawn the whole range before the first grow lands).
+    starting: usize,
+    /// Idle workers.
+    idle: usize,
+    /// Items still queued in the batcher.
+    queued: usize,
+    /// Compress p99 ms (only sampled when the p99 signal is enabled).
+    p99_ms: f64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ScaleDecision {
+    Grow,
+    Shrink,
+    Hold,
+}
+
+/// The scaling brain: a pure function of time + pool snapshots, kept free
+/// of thread/channel machinery so its bounds, cooldown and no-flap
+/// properties are unit-testable (see the tests below).
+///
+/// * **Grow** when more than one full batch per unit of capacity is queued
+///   (or the p99 signal trips while work is queued) and capacity < max.
+/// * **Shrink** when the queue has been empty with at least one idle
+///   replica for `shrink_after`, and capacity > min.
+/// * Never act twice within `cooldown`; never leave `[min, max]`.
+///
+/// Grow and shrink thresholds are far apart (backlog > lanes×capacity vs.
+/// queue == 0 sustained), so a constant load level cannot oscillate the
+/// pool.
+struct Autoscaler {
+    min: usize,
+    max: usize,
+    lanes: usize,
+    cooldown: Duration,
+    shrink_after: Duration,
+    p99_grow_ms: f64,
+    last_action: Option<Instant>,
+    idle_since: Option<Instant>,
+}
+
+impl Autoscaler {
+    fn new(min: usize, max: usize, lanes: usize, config: &ServerConfig) -> Autoscaler {
+        Autoscaler {
+            min,
+            max,
+            lanes: lanes.max(1),
+            cooldown: config.autoscale_cooldown,
+            shrink_after: config.autoscale_shrink_after,
+            p99_grow_ms: config.autoscale_p99_ms,
+            last_action: None,
+            idle_since: None,
+        }
+    }
+
+    fn decide(&mut self, now: Instant, s: PoolSnapshot) -> ScaleDecision {
+        let capacity = s.live + s.starting;
+        // Track sustained idleness independently of the cooldown, so
+        // `shrink_after` measures real idle time.
+        if s.queued == 0 && s.idle > 0 && s.starting == 0 {
+            if self.idle_since.is_none() {
+                self.idle_since = Some(now);
+            }
+        } else {
+            self.idle_since = None;
+        }
+        let cooled = match self.last_action {
+            None => true,
+            Some(t) => now.duration_since(t) >= self.cooldown,
+        };
+        if !cooled {
+            return ScaleDecision::Hold;
+        }
+        let backlog = s.queued > self.lanes * capacity.max(1);
+        let slow = s.queued > 0 && s.p99_ms > self.p99_grow_ms;
+        if (backlog || slow) && capacity < self.max {
+            self.last_action = Some(now);
+            self.idle_since = None;
+            return ScaleDecision::Grow;
+        }
+        if capacity > self.min
+            && s.idle > 0
+            && self.idle_since.is_some_and(|t| now.duration_since(t) >= self.shrink_after)
+        {
+            self.last_action = Some(now);
+            self.idle_since = None;
+            return ScaleDecision::Shrink;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+/// Mutable scheduler state threaded through message handling.
+struct SchedState {
+    batcher: DynamicBatcher,
+    pending: HashMap<u64, Pending>,
+    slots: Vec<Slot>,
+    /// Idle slot ids (stack: most recently freed dispatched first).
+    idle: Vec<usize>,
+    /// Handles of retired/replaced workers, joined at shutdown so a slow
+    /// engine teardown never stalls scheduling.
+    graveyard: Vec<std::thread::JoinHandle<()>>,
+}
+
 fn scheduler_main<F>(
     factory: Arc<F>,
     config: ServerConfig,
@@ -295,39 +578,43 @@ fn scheduler_main<F>(
 ) where
     F: Fn() -> Result<LlmCompressor> + Send + Sync + 'static,
 {
-    let replicas = config.replicas.max(1);
-    // Spawn the engine workers; each gets a 1-deep private job channel
+    let (min_replicas, initial, max_replicas) = pool_bounds(&config);
+    // Spawn the initial workers; each gets a 1-deep private job channel
     // (a worker never holds more than one batch) and reports completions
-    // on the scheduler's own intake channel.
-    let (worker_ready_tx, worker_ready_rx) = sync_channel::<(usize, Result<EngineInfo>)>(replicas);
-    let mut job_txs = Vec::with_capacity(replicas);
-    let mut handles = Vec::with_capacity(replicas);
-    for id in 0..replicas {
-        let (job_tx, job_rx) = sync_channel::<EngineJob>(1);
-        let f = factory.clone();
-        let dt = worker_tx.clone();
-        let rt = worker_ready_tx.clone();
-        let m = metrics.clone();
-        let handle = std::thread::Builder::new()
-            .name(format!("llmzip-engine-{id}"))
-            .spawn(move || engine_worker(id, f, job_rx, dt, rt, m))
-            .expect("spawning engine worker");
-        job_txs.push(job_tx);
-        handles.push(handle);
-    }
-    drop(worker_ready_tx);
-    drop(worker_tx);
-    // Collect readiness from every replica; any failure aborts startup.
-    let mut info: Option<EngineInfo> = None;
+    // on the scheduler's own intake channel. The remaining slots up to
+    // `max_replicas` stay empty until the autoscaler grows into them.
+    let (worker_ready_tx, worker_ready_rx) = sync_channel::<(usize, Result<EngineInfo>)>(initial);
+    let mut slots: Vec<Slot> = Vec::with_capacity(max_replicas);
     let mut startup_err: Option<anyhow::Error> = None;
-    for _ in 0..replicas {
+    for id in 0..initial {
+        match spawn_worker(id, &factory, &worker_tx, Some(&worker_ready_tx), &metrics) {
+            Ok(slot) => slots.push(slot),
+            Err(e) => {
+                slots.push(Slot::empty());
+                if startup_err.is_none() {
+                    startup_err = Some(e);
+                }
+            }
+        }
+    }
+    for _ in initial..max_replicas {
+        slots.push(Slot::empty());
+    }
+    let spawned = count_state(&slots, SlotState::Starting);
+    drop(worker_ready_tx);
+    // Collect readiness from every startup replica that spawned; any
+    // failure aborts startup.
+    let mut info: Option<EngineInfo> = None;
+    for _ in 0..spawned {
         match worker_ready_rx.recv() {
-            Ok((_, Ok(i))) => {
+            Ok((id, Ok(i))) => {
+                slots[id].state = SlotState::Idle;
                 if info.is_none() {
                     info = Some(i);
                 }
             }
-            Ok((_, Err(e))) => {
+            Ok((id, Err(e))) => {
+                slots[id].state = SlotState::Empty;
                 if startup_err.is_none() {
                     startup_err = Some(e);
                 }
@@ -342,31 +629,45 @@ fn scheduler_main<F>(
     }
     if let Some(e) = startup_err {
         let _ = ready_tx.send(Err(e));
-        drop(job_txs);
-        for h in handles {
-            let _ = h.join();
+        for s in slots.iter_mut() {
+            s.job_tx = None;
+        }
+        drop(rx);
+        for s in slots.iter_mut() {
+            if let Some(h) = s.handle.take() {
+                let _ = h.join();
+            }
         }
         return;
     }
-    let info = info.expect("replicas >= 1 reported ready");
+    let info = info.expect("initial replicas >= 1 reported ready");
     let _ = ready_tx.send(Ok(()));
 
     let lanes = if config.lanes > 0 { config.lanes.min(info.lanes) } else { info.lanes };
     // Requests are split at the compressor's stream granularity; the
     // model-context chunk size is recorded in each container.
     let split = Split { stream_bytes: info.stream_bytes, chunk_tokens: info.chunk_tokens as u32 };
-    let mut batcher = DynamicBatcher::new(BatchPolicy { lanes, ..config.policy });
-    let mut pending: HashMap<u64, Pending> = HashMap::new();
-    // Idle worker ids (stack: lowest id dispatched first at startup) and
-    // retired slots (a worker whose job channel disconnected).
-    let mut idle: Vec<usize> = (0..replicas).rev().collect();
-    let mut dead = 0usize;
+    let autoscale_on = config.autoscale && info.kind == ExecutorKind::Native;
+    if config.autoscale && !autoscale_on {
+        eprintln!("llmzip-sched: autoscale disabled — PJRT replicas are static");
+    }
+    let mut scaler = Autoscaler::new(min_replicas, max_replicas, lanes, &config);
+    let mut st = SchedState {
+        batcher: DynamicBatcher::new(BatchPolicy { lanes, ..config.policy }),
+        pending: HashMap::new(),
+        slots,
+        idle: (0..initial).rev().collect(),
+        graveyard: Vec::new(),
+    };
+    metrics.set_replicas(initial);
     loop {
-        let busy = replicas - idle.len() - dead;
+        let busy = count_state(&st.slots, SlotState::Busy);
+        let starting = count_state(&st.slots, SlotState::Starting);
         if shutdown.load(Ordering::SeqCst)
-            && pending.is_empty()
-            && batcher.pending() == 0
+            && st.pending.is_empty()
+            && st.batcher.pending() == 0
             && busy == 0
+            && starting == 0
         {
             break;
         }
@@ -374,46 +675,53 @@ fn scheduler_main<F>(
         // worker completions arrive on this same channel and wake us. With
         // every replica busy, deadlines can't be acted on anyway — wait on
         // messages instead of spinning on an expired deadline.
-        let timeout = if idle.is_empty() {
+        let timeout = if st.idle.is_empty() {
             Duration::from_millis(50)
         } else {
-            batcher
+            st.batcher
                 .next_deadline()
                 .map(|d| d.saturating_duration_since(Instant::now()))
                 .unwrap_or(Duration::from_millis(10))
         };
         match rx.recv_timeout(timeout) {
-            Ok(msg) => {
-                handle_message(msg, &info, split, &mut batcher, &mut pending, &mut idle, &metrics)
-            }
+            Ok(msg) => handle_message(msg, &info, split, &mut st, &metrics),
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => {
-                if pending.is_empty()
-                    && batcher.pending() == 0
-                    && replicas - idle.len() - dead == 0
-                {
-                    break;
-                }
+                // Unreachable in practice: the scheduler holds its own
+                // clone of the intake sender (`worker_tx`, used to spawn
+                // grown workers), so this channel cannot disconnect while
+                // the loop runs. Shutdown is driven by the flag above.
             }
         }
         // Drain without blocking to fill batches before dispatching.
         while let Ok(msg) = rx.try_recv() {
-            handle_message(msg, &info, split, &mut batcher, &mut pending, &mut idle, &metrics);
+            handle_message(msg, &info, split, &mut st, &metrics);
         }
         // Dispatch released batches onto idle replicas.
-        while !idle.is_empty() {
-            let Some((kind, items)) = batcher.next_batch(Instant::now()) else { break };
-            let worker = idle.pop().expect("checked non-empty");
-            metrics.record_dispatch(worker, items.len(), lanes, batcher.pending());
+        while !st.idle.is_empty() {
+            let Some((kind, items)) = st.batcher.next_batch(Instant::now()) else { break };
+            let worker = st.idle.pop().expect("checked non-empty");
+            metrics.record_dispatch(worker, items.len(), lanes, st.batcher.pending());
+            st.slots[worker].state = SlotState::Busy;
             let job = EngineJob { kind, items, chunk_tokens: info.chunk_tokens };
-            if let Err(failed) = job_txs[worker].send(job) {
+            let sent = st.slots[worker]
+                .job_tx
+                .as_ref()
+                .expect("idle slot has a job channel")
+                .send(job);
+            if let Err(failed) = sent {
                 // Worker died. Fail the affected requests rather than
-                // wedging them, and retire the slot so shutdown doesn't
-                // wait for a completion that will never come.
-                dead += 1;
+                // wedging them, and free the slot so the autoscaler can
+                // respawn into it instead of shutdown waiting forever.
+                st.slots[worker].state = SlotState::Dead;
+                st.slots[worker].job_tx = None;
+                if let Some(h) = st.slots[worker].handle.take() {
+                    st.graveyard.push(h);
+                }
                 metrics.record_error();
+                metrics.set_replicas(live_count(&st.slots));
                 for item in failed.0.items {
-                    if let Some(p) = pending.remove(&item.request_id) {
+                    if let Some(p) = st.pending.remove(&item.request_id) {
                         let _ = p
                             .respond
                             .send(Err(anyhow::anyhow!("engine worker {worker} died")));
@@ -421,10 +729,81 @@ fn scheduler_main<F>(
                 }
             }
         }
+        // Elastic pool: evaluate AFTER dispatch, so the queue depth the
+        // scaler sees is work no live replica could absorb. Skip entirely
+        // during shutdown — draining is not load.
+        if autoscale_on && !shutdown.load(Ordering::SeqCst) {
+            let snap = PoolSnapshot {
+                live: live_count(&st.slots),
+                starting: count_state(&st.slots, SlotState::Starting),
+                idle: st.idle.len(),
+                queued: st.batcher.pending(),
+                p99_ms: if scaler.p99_grow_ms.is_finite() {
+                    metrics.latency_percentile_ms(WorkKind::Compress, 0.99)
+                } else {
+                    0.0
+                },
+            };
+            match scaler.decide(Instant::now(), snap) {
+                ScaleDecision::Hold => {}
+                ScaleDecision::Grow => {
+                    if let Some(id) = st
+                        .slots
+                        .iter()
+                        .position(|s| {
+                            matches!(
+                                s.state,
+                                SlotState::Empty | SlotState::Retired | SlotState::Dead
+                            )
+                        })
+                    {
+                        if let Some(h) = st.slots[id].handle.take() {
+                            st.graveyard.push(h);
+                        }
+                        match spawn_worker(id, &factory, &worker_tx, None, &metrics) {
+                            Ok(slot) => st.slots[id] = slot,
+                            Err(e) => {
+                                // Thread limit hit mid-burst: contain it
+                                // exactly like a failed factory — the slot
+                                // stays free and a later evaluation
+                                // retries after the cooldown.
+                                st.slots[id] = Slot::empty();
+                                metrics.record_error();
+                                eprintln!("llmzip-sched: {e:#}");
+                            }
+                        }
+                    }
+                }
+                ScaleDecision::Shrink => {
+                    // Retire the highest idle id: drop its channel and let
+                    // the worker drain out. Only idle workers shrink, so
+                    // queued work never strands.
+                    if let Some(pos) =
+                        (0..st.idle.len()).max_by_key(|&p| st.idle[p])
+                    {
+                        let id = st.idle.swap_remove(pos);
+                        st.slots[id].state = SlotState::Retired;
+                        st.slots[id].job_tx = None;
+                        if let Some(h) = st.slots[id].handle.take() {
+                            st.graveyard.push(h);
+                        }
+                        metrics.record_scale(false, live_count(&st.slots));
+                    }
+                }
+            }
+        }
     }
     // Disconnect the workers and wait them out.
-    drop(job_txs);
-    for h in handles {
+    for s in st.slots.iter_mut() {
+        s.job_tx = None;
+    }
+    drop(rx);
+    for s in st.slots.iter_mut() {
+        if let Some(h) = s.handle.take() {
+            let _ = h.join();
+        }
+    }
+    for h in st.graveyard {
         let _ = h.join();
     }
 }
@@ -433,16 +812,48 @@ fn handle_message(
     msg: ToScheduler,
     info: &EngineInfo,
     split: Split,
-    batcher: &mut DynamicBatcher,
-    pending: &mut HashMap<u64, Pending>,
-    idle: &mut Vec<usize>,
+    st: &mut SchedState,
     metrics: &Metrics,
 ) {
     match msg {
-        ToScheduler::Request(req) => admit(req, info, split, batcher, pending, metrics),
+        ToScheduler::Request(req) => {
+            admit(req, info, split, &mut st.batcher, &mut st.pending, metrics)
+        }
         ToScheduler::Done(done) => {
-            idle.push(done.worker);
-            complete_batch(done, info, pending, metrics);
+            st.slots[done.worker].state = SlotState::Idle;
+            st.idle.push(done.worker);
+            complete_batch(done, info, &mut st.pending, metrics);
+        }
+        ToScheduler::Ready { worker, info: Ok(grown) } => {
+            // Bit-identity guard: a grown replica must be indistinguishable
+            // from the startup ones. A differing tag or window would mean a
+            // nondeterministic factory — refuse the replica entirely
+            // rather than let two engines disagree about the bytes.
+            if grown.tag != info.tag
+                || grown.chunk_tokens != info.chunk_tokens
+                || grown.stream_bytes != info.stream_bytes
+            {
+                st.slots[worker].state = SlotState::Retired;
+                st.slots[worker].job_tx = None;
+                metrics.record_error();
+                eprintln!(
+                    "llmzip-sched: grown worker {worker} reported engine '{}' != pool '{}' — \
+                     refused",
+                    grown.tag, info.tag
+                );
+            } else {
+                st.slots[worker].state = SlotState::Idle;
+                st.idle.push(worker);
+                metrics.record_scale(true, live_count(&st.slots));
+            }
+        }
+        ToScheduler::Ready { worker, info: Err(e) } => {
+            // The grow failed (factory error or panic): free the slot so a
+            // later evaluation can retry, and surface the error.
+            st.slots[worker].state = SlotState::Empty;
+            st.slots[worker].job_tx = None;
+            metrics.record_error();
+            eprintln!("llmzip-sched: growing engine worker {worker} failed: {e:#}");
         }
     }
 }
@@ -867,5 +1278,330 @@ mod tests {
             ServerConfig { replicas: 2, ..Default::default() },
         );
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn panicking_factory_fails_startup_cleanly() {
+        // The catch_unwind around the factory converts a construction
+        // panic into a startup error instead of a wedged scheduler.
+        let r = Server::start(
+            || -> Result<LlmCompressor> { panic!("factory exploded") },
+            ServerConfig { replicas: 2, ..Default::default() },
+        );
+        assert!(r.unwrap_err().to_string().contains("panicked"));
+    }
+
+    #[test]
+    fn min_above_max_rejected() {
+        let r = Server::start(
+            move || {
+                let cfg = by_name("nano").unwrap();
+                LlmCompressor::from_weights(cfg, Weights::random(cfg, 21), 32, 2)
+            },
+            ServerConfig { min_replicas: 3, max_replicas: 2, autoscale: true, ..Default::default() },
+        );
+        assert!(r.unwrap_err().to_string().contains("min_replicas"));
+    }
+
+    #[test]
+    fn pool_bounds_defaults_and_clamping() {
+        let mut c = ServerConfig { replicas: 3, ..Default::default() };
+        assert_eq!(pool_bounds(&c), (3, 3, 3), "min/max default to replicas");
+        c.min_replicas = 1;
+        c.max_replicas = 5;
+        assert_eq!(pool_bounds(&c), (1, 3, 5));
+        c.replicas = 9;
+        assert_eq!(pool_bounds(&c), (1, 5, 5), "initial clamps into [min, max]");
+        c.replicas = 0;
+        assert_eq!(pool_bounds(&c), (1, 1, 5), "replicas 0 behaves as 1");
+    }
+
+    fn test_scaler(min: usize, max: usize, lanes: usize) -> Autoscaler {
+        Autoscaler::new(
+            min,
+            max,
+            lanes,
+            &ServerConfig {
+                autoscale_cooldown: Duration::from_millis(100),
+                autoscale_shrink_after: Duration::from_millis(300),
+                ..Default::default()
+            },
+        )
+    }
+
+    fn snap(live: usize, idle: usize, queued: usize) -> PoolSnapshot {
+        PoolSnapshot { live, starting: 0, idle, queued, p99_ms: 0.0 }
+    }
+
+    #[test]
+    fn autoscaler_grows_on_backlog_within_cooldown_and_max() {
+        let mut a = test_scaler(1, 3, 4);
+        let t0 = Instant::now();
+        // Backlog over one full batch per replica -> grow.
+        assert_eq!(a.decide(t0, snap(1, 0, 9)), ScaleDecision::Grow);
+        // Cooldown gates the next action even with the signal still hot.
+        assert_eq!(a.decide(t0 + Duration::from_millis(50), snap(2, 0, 20)), ScaleDecision::Hold);
+        assert_eq!(a.decide(t0 + Duration::from_millis(150), snap(2, 0, 20)), ScaleDecision::Grow);
+        // At max, backlog can no longer grow the pool.
+        assert_eq!(a.decide(t0 + Duration::from_millis(300), snap(3, 0, 99)), ScaleDecision::Hold);
+        // Mid-construction workers count toward capacity: one burst must
+        // not spawn the whole range at once.
+        let mut b = test_scaler(1, 4, 4);
+        assert_eq!(b.decide(t0, snap(1, 0, 9)), ScaleDecision::Grow);
+        let busy_building =
+            PoolSnapshot { live: 1, starting: 1, idle: 0, queued: 7, p99_ms: 0.0 };
+        assert_eq!(
+            b.decide(t0 + Duration::from_millis(150), busy_building),
+            ScaleDecision::Hold,
+            "queued 7 <= lanes 4 * capacity 2 (the Starting worker counts)"
+        );
+    }
+
+    #[test]
+    fn autoscaler_shrinks_only_after_sustained_idle_above_min() {
+        let mut a = test_scaler(1, 3, 4);
+        let t0 = Instant::now();
+        // Idle but not yet sustained: hold.
+        assert_eq!(a.decide(t0, snap(2, 1, 0)), ScaleDecision::Hold);
+        assert_eq!(a.decide(t0 + Duration::from_millis(200), snap(2, 1, 0)), ScaleDecision::Hold);
+        // Past shrink_after: shrink.
+        assert_eq!(a.decide(t0 + Duration::from_millis(320), snap(2, 1, 0)), ScaleDecision::Shrink);
+        // A queued item resets the idle clock.
+        let t1 = t0 + Duration::from_millis(500);
+        assert_eq!(a.decide(t1, snap(1, 1, 2)), ScaleDecision::Hold);
+        assert_eq!(
+            a.decide(t1 + Duration::from_millis(400), snap(1, 1, 0)),
+            ScaleDecision::Hold,
+            "idle restarted at the first idle observation"
+        );
+        // At min, sustained idleness never shrinks.
+        let mut b = test_scaler(2, 3, 4);
+        for ms in [0u64, 400, 800, 1200] {
+            assert_eq!(b.decide(t0 + Duration::from_millis(ms), snap(2, 2, 0)), ScaleDecision::Hold);
+        }
+    }
+
+    #[test]
+    fn autoscaler_p99_signal_grows_only_with_queued_work() {
+        let mut a = Autoscaler::new(
+            1,
+            3,
+            4,
+            &ServerConfig {
+                autoscale_cooldown: Duration::from_millis(100),
+                autoscale_p99_ms: 50.0,
+                ..Default::default()
+            },
+        );
+        let t0 = Instant::now();
+        let slow_idle = PoolSnapshot { live: 1, starting: 0, idle: 1, queued: 0, p99_ms: 400.0 };
+        assert_eq!(a.decide(t0, slow_idle), ScaleDecision::Hold, "p99 alone is history, not load");
+        let slow_busy = PoolSnapshot { live: 1, starting: 0, idle: 0, queued: 2, p99_ms: 400.0 };
+        assert_eq!(a.decide(t0, slow_busy), ScaleDecision::Grow);
+    }
+
+    #[test]
+    fn autoscaler_never_flaps_under_constant_load() {
+        // Property: for ANY constant load level, the pool moves monotonely
+        // to an equilibrium and then holds — grow and shrink never
+        // alternate without the load changing.
+        let t0 = Instant::now();
+        for queued in [0usize, 1, 3, 4, 5, 8, 12, 40] {
+            let mut a = test_scaler(1, 4, 4);
+            let mut live = 2usize;
+            let mut dirs: Vec<ScaleDecision> = Vec::new();
+            for tick in 0..400u64 {
+                let now = t0 + Duration::from_millis(tick * 10);
+                let idle = if queued == 0 { live } else { 0 };
+                match a.decide(now, snap(live, idle, queued)) {
+                    ScaleDecision::Hold => {}
+                    d @ ScaleDecision::Grow => {
+                        live += 1;
+                        dirs.push(d);
+                    }
+                    d @ ScaleDecision::Shrink => {
+                        live -= 1;
+                        dirs.push(d);
+                    }
+                }
+                assert!((1..=4).contains(&live), "queued={queued} live={live}");
+            }
+            assert!(
+                dirs.windows(2).all(|w| w[0] == w[1]),
+                "queued={queued}: direction flip under constant load: {dirs:?}"
+            );
+            // And the tail of the run is quiescent.
+            let mut a2 = test_scaler(1, 4, 4);
+            let idle = if queued == 0 { live } else { 0 };
+            for tick in 400..420u64 {
+                let now = t0 + Duration::from_millis(tick * 10);
+                assert_eq!(a2.decide(now, snap(live, idle, queued)), ScaleDecision::Hold);
+            }
+        }
+    }
+
+    #[test]
+    fn autoscaler_bounded_and_cooled_under_random_load() {
+        // Property: for ANY load sequence, capacity stays within
+        // [min, max] and actions are never closer than the cooldown.
+        let mut rng = crate::util::Pcg64::seeded(4242);
+        let t0 = Instant::now();
+        for _ in 0..30 {
+            let min = 1 + rng.gen_index(2);
+            let max = min + rng.gen_index(4);
+            let lanes = 1 + rng.gen_index(8);
+            let mut a = test_scaler(min, max, lanes);
+            let mut live = min + rng.gen_index(max - min + 1);
+            let mut now = t0;
+            let mut last_action: Option<Instant> = None;
+            for _ in 0..300 {
+                now += Duration::from_millis(rng.gen_range(40) + 1);
+                let queued = if rng.gen_bool(0.4) { 0 } else { rng.gen_index(60) };
+                let idle = if queued == 0 { rng.gen_index(live + 1) } else { 0 };
+                let d = a.decide(now, snap(live, idle, queued));
+                if d != ScaleDecision::Hold {
+                    if let Some(t) = last_action {
+                        assert!(
+                            now.duration_since(t) >= Duration::from_millis(100),
+                            "action inside cooldown"
+                        );
+                    }
+                    last_action = Some(now);
+                }
+                match d {
+                    ScaleDecision::Grow => live += 1,
+                    ScaleDecision::Shrink => live -= 1,
+                    ScaleDecision::Hold => {}
+                }
+                assert!(live >= min && live <= max, "live {live} outside [{min}, {max}]");
+            }
+        }
+    }
+
+    /// An elastic test server: nano model, aggressive autoscale timings so
+    /// grow/shrink both happen inside a test run.
+    fn elastic_server(min: usize, max: usize) -> Server {
+        Server::start(
+            move || {
+                let cfg = by_name("nano").unwrap();
+                LlmCompressor::from_weights(cfg, Weights::random(cfg, 21), 32, 2)
+            },
+            ServerConfig {
+                chunk_tokens: 32,
+                replicas: min,
+                min_replicas: min,
+                max_replicas: max,
+                autoscale: true,
+                autoscale_cooldown: Duration::from_millis(15),
+                autoscale_shrink_after: Duration::from_millis(30),
+                policy: BatchPolicy { lanes: 2, max_wait: Duration::from_millis(2) },
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn elastic_pool_grows_under_burst_then_shrinks_idle() {
+        let server = Arc::new(elastic_server(1, 3));
+        assert_eq!(server.metrics.workers.len(), 3, "metrics sized to max_replicas");
+        assert_eq!(server.metrics.replicas.load(Ordering::Relaxed), 1);
+        // Burst: concurrent multi-chunk bulk requests build a backlog the
+        // single replica cannot absorb -> the pool must grow.
+        let mut handles = Vec::new();
+        for i in 0..6u64 {
+            let s = server.clone();
+            handles.push(std::thread::spawn(move || {
+                // 128-byte streams -> ~8 chunks per request.
+                let data = crate::textgen::quick_sample(1000 + i as usize * 17, i);
+                for _ in 0..3 {
+                    let z = s.compress(&data).unwrap();
+                    assert_eq!(s.decompress(&z).unwrap(), data);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(
+            server.metrics.scale_ups.load(Ordering::Relaxed) >= 1,
+            "burst load must grow the pool: {}",
+            server.metrics.report()
+        );
+        // Quiet: a sustained idle window must shrink back toward min.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while server.metrics.scale_downs.load(Ordering::Relaxed) == 0 {
+            assert!(Instant::now() < deadline, "no shrink: {}", server.metrics.report());
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        // Bounds held for the whole run.
+        assert!(server.metrics.replicas_peak.load(Ordering::Relaxed) <= 3);
+        assert!(server.metrics.replicas_low.load(Ordering::Relaxed) >= 1);
+        assert_eq!(server.metrics.errors.load(Ordering::Relaxed), 0);
+        // Still serving after the churn.
+        let data = crate::textgen::quick_sample(300, 77);
+        let z = server.compress(&data).unwrap();
+        assert_eq!(server.decompress(&z).unwrap(), data);
+    }
+
+    #[test]
+    fn failed_and_panicking_grows_are_contained() {
+        // The first build (startup) succeeds; the first grow fails with an
+        // error; every later grow panics. The pool must keep serving at
+        // its current size through all of it.
+        let builds = Arc::new(AtomicU64::new(0));
+        let b = builds.clone();
+        let server = Arc::new(
+            Server::start(
+                move || {
+                    let n = b.fetch_add(1, Ordering::SeqCst);
+                    if n == 1 {
+                        anyhow::bail!("grow refused");
+                    }
+                    if n >= 2 {
+                        panic!("grow exploded");
+                    }
+                    let cfg = by_name("nano").unwrap();
+                    LlmCompressor::from_weights(cfg, Weights::random(cfg, 21), 32, 2)
+                },
+                ServerConfig {
+                    chunk_tokens: 32,
+                    replicas: 1,
+                    min_replicas: 1,
+                    max_replicas: 3,
+                    autoscale: true,
+                    autoscale_cooldown: Duration::from_millis(10),
+                    autoscale_shrink_after: Duration::from_millis(30),
+                    policy: BatchPolicy { lanes: 2, max_wait: Duration::from_millis(2) },
+                    ..Default::default()
+                },
+            )
+            .unwrap(),
+        );
+        // Load until at least two failed grows were RECORDED (the bailed
+        // one and a panicked one — both surface as scheduler errors).
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let data = crate::textgen::quick_sample(1200, 5);
+        while server.metrics.errors.load(Ordering::Relaxed) < 2 {
+            assert!(Instant::now() < deadline, "grows never attempted");
+            let mut handles = Vec::new();
+            for _ in 0..4 {
+                let s = server.clone();
+                let d = data.clone();
+                handles.push(std::thread::spawn(move || {
+                    let z = s.compress(&d).unwrap();
+                    assert_eq!(s.decompress(&z).unwrap(), d);
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        }
+        assert!(builds.load(Ordering::SeqCst) >= 3, "startup + two grow attempts");
+        assert_eq!(server.metrics.scale_ups.load(Ordering::Relaxed), 0);
+        assert_eq!(server.metrics.replicas.load(Ordering::Relaxed), 1, "pool held at one");
+        // And the survivor still serves.
+        let z = server.compress(&data).unwrap();
+        assert_eq!(server.decompress(&z).unwrap(), data);
     }
 }

@@ -37,5 +37,5 @@ pub mod weights;
 
 pub use config::{LmConfig, CODED_BYTES, MAX_CONTEXT, VOCAB};
 pub use executor::{ExecutorKind, LmExecutor};
-pub use native::{NativeExecutor, Scratch};
+pub use native::{NativeExecutor, Scratch, StepPool};
 pub use weights::{Precision, ResolvedPlan, TensorData, TensorView, Weights};

@@ -31,6 +31,19 @@
 //!   steady-state step path, so even nano-sized models can profit from
 //!   threads without paying spawn cost per decoded byte. Bit-exact for any
 //!   thread count: lanes are computed independently.
+//! * **[`StepPool`] (cross-replica work stealing)** — instead of a private
+//!   pool, any number of executors can share ONE [`StepPool`] via
+//!   [`NativeExecutor::with_shared_pool`]. A step then fans its disjoint
+//!   lane spans into the pool's injector queue; the pool's threads AND the
+//!   stepping caller itself pop *whole spans* — their own or a sibling
+//!   replica's — until the step's barrier drains. When one replica's batch
+//!   underfills the machine, the other replicas' idle step threads pick up
+//!   its spans, so the thread budget follows the load instead of the
+//!   replica it was spawned for. Lane spans stay disjoint and every lane's
+//!   accumulation order is unchanged, so logits remain bit-identical to
+//!   the single-threaded path for ANY pool size, replica count, or
+//!   stealing schedule (asserted by the tests below and by
+//!   `tests/stress_elastic.rs` end-to-end).
 //!
 //! ## Dtype dispatch (int8 weight path)
 //!
@@ -49,8 +62,11 @@
 use crate::lm::config::{LmConfig, MAX_CONTEXT, VOCAB};
 use crate::lm::weights::{ResolvedPlan, TensorView, Weights};
 use crate::Result;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 /// GELU (tanh approximation — matches `jax.nn.gelu(approximate=True)`).
 #[inline]
@@ -635,17 +651,192 @@ fn pool_worker_main(
     }
 }
 
+/// One lane span of one executor's step, queued into a shared [`StepPool`].
+///
+/// Carries everything needed to advance the span: the model handle, raw
+/// pointers into the owning executor's lane/token/logit buffers, and the
+/// step's completion barrier. SAFETY: same contract as [`SpanPtr`] — the
+/// owning executor blocks until the barrier drains, so the pointers never
+/// outlive their borrows and no two tasks alias a span.
+struct StealTask {
+    model: Arc<NativeModel>,
+    lanes: SpanPtrMut<LaneState>,
+    tokens: SpanPtr<u32>,
+    out: SpanPtrMut<f32>,
+    n: usize,
+    head_rows: usize,
+    done: Arc<StepBarrier>,
+}
+
+/// Completion barrier for one fanned-out step: counts outstanding span
+/// tasks and keeps the first error.
+struct StepBarrier {
+    /// (remaining tasks, first error).
+    state: Mutex<(usize, Option<anyhow::Error>)>,
+    done: Condvar,
+}
+
+impl StepBarrier {
+    fn new(n_tasks: usize) -> Arc<StepBarrier> {
+        Arc::new(StepBarrier { state: Mutex::new((n_tasks, None)), done: Condvar::new() })
+    }
+
+    fn complete(&self, result: Result<()>) {
+        let mut s = self.state.lock().unwrap();
+        s.0 -= 1;
+        if let Err(e) = result {
+            if s.1.is_none() {
+                s.1 = Some(e);
+            }
+        }
+        if s.0 == 0 {
+            self.done.notify_all();
+        }
+    }
+}
+
+/// Run one span task with a scratch arena that is already known to match
+/// its model config and capacity. A panicking span must not kill a shared
+/// pool thread (it would wedge EVERY replica's barrier), so it is contained
+/// and reported as a failed step.
+fn run_steal_task(task: StealTask, scratch: &mut Scratch) {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        // SAFETY: see `StealTask` — the owning executor keeps these
+        // buffers alive and unaliased until our `complete` lands.
+        let lanes = unsafe { std::slice::from_raw_parts_mut(task.lanes.0, task.n) };
+        let toks = unsafe { std::slice::from_raw_parts(task.tokens.0, task.n) };
+        let out = unsafe { std::slice::from_raw_parts_mut(task.out.0, task.n * VOCAB) };
+        task.model.advance_batch(lanes, toks, scratch, out, task.head_rows)
+    }))
+    .unwrap_or_else(|_| Err(anyhow::anyhow!("shared-pool step span panicked")));
+    task.done.complete(result);
+}
+
+/// The shared injector: span tasks from every attached executor, drained
+/// by the pool threads and by stepping callers.
+struct StealShared {
+    queue: Mutex<VecDeque<StealTask>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A work-stealing step pool shared by any number of [`NativeExecutor`]
+/// replicas (attach with [`NativeExecutor::with_shared_pool`]).
+///
+/// `threads` long-lived OS threads service one global injector queue of
+/// lane-span tasks. Replicas are expected to be homogeneous (same
+/// [`LmConfig`]); a heterogeneous pool still computes correctly but
+/// re-allocates per-thread scratch when configs alternate. A zero-thread
+/// pool is valid: every step is then executed entirely by its caller
+/// (useful for tests and as the degenerate sizing).
+pub struct StepPool {
+    shared: Arc<StealShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl StepPool {
+    /// Spawn a pool with `threads` stealing worker threads.
+    pub fn new(threads: usize) -> Arc<StepPool> {
+        let shared = Arc::new(StealShared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..threads)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("llmzip-steal-{i}"))
+                    .spawn(move || steal_worker_main(sh))
+                    .expect("spawning steal worker")
+            })
+            .collect();
+        Arc::new(StepPool { shared, handles })
+    }
+
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    fn push_tasks(&self, tasks: Vec<StealTask>) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.extend(tasks);
+        drop(q);
+        self.shared.available.notify_all();
+    }
+
+    fn try_pop(&self) -> Option<StealTask> {
+        self.shared.queue.lock().unwrap().pop_front()
+    }
+
+    /// Re-queue a task the popper cannot run (wrong config / too wide for
+    /// its scratch); it goes to the BACK so the queue keeps rotating.
+    fn push_back(&self, task: StealTask) {
+        self.shared.queue.lock().unwrap().push_back(task);
+        self.shared.available.notify_all();
+    }
+}
+
+impl Drop for StepPool {
+    fn drop(&mut self) {
+        // Executors hold this pool behind an Arc, so by the time Drop runs
+        // no step can be in flight: the queue is empty of live tasks.
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A pool thread: block on the injector, run spans from ANY attached
+/// executor. One cached scratch arena, rebuilt only when a span needs a
+/// different model config or a wider capacity (steady state with
+/// homogeneous replicas allocates nothing).
+fn steal_worker_main(shared: Arc<StealShared>) {
+    let mut scratch: Option<(usize, Scratch)> = None;
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        let cfg = task.model.cfg;
+        let key = cfg as *const LmConfig as usize;
+        let rebuild = match &scratch {
+            Some((k, s)) => *k != key || s.capacity() < task.n,
+            None => true,
+        };
+        if rebuild {
+            scratch = Some((key, Scratch::new(cfg, task.n)));
+        }
+        let (_, s) = scratch.as_mut().expect("scratch just ensured");
+        run_steal_task(task, s);
+    }
+}
+
 /// Native executor: a shared [`NativeModel`] plus either an inline lane
-/// pool (`threads == 1`) or a persistent worker pool (`threads > 1`).
+/// pool (`threads == 1`), a persistent worker pool (`threads > 1`), or a
+/// cross-replica shared [`StepPool`] (`with_shared_pool`).
 pub struct NativeExecutor {
     model: Arc<NativeModel>,
     n_lanes: usize,
     threads: usize,
     head_rows: usize,
-    /// `threads == 1`: lanes + scratch live inline, no handoff at all.
+    /// `threads == 1` or shared-pool mode: lanes + scratch live inline.
     local: Option<(Vec<LaneState>, Scratch)>,
-    /// `threads > 1`: persistent workers own the lanes.
+    /// `threads > 1` (private pool): persistent workers own the lanes.
     workers: Vec<PoolWorker>,
+    /// Shared-pool mode: steps fan lane spans into this injector instead
+    /// of a private pool (lanes stay inline; siblings steal spans).
+    steal_pool: Option<Arc<StepPool>>,
 }
 
 impl NativeExecutor {
@@ -658,7 +849,15 @@ impl NativeExecutor {
             (0..n_lanes).map(|_| LaneState::new(cfg, MAX_CONTEXT)).collect(),
             Scratch::new(cfg, n_lanes),
         ));
-        NativeExecutor { model, n_lanes, threads: 1, head_rows: VOCAB, local, workers: Vec::new() }
+        NativeExecutor {
+            model,
+            n_lanes,
+            threads: 1,
+            head_rows: VOCAB,
+            local,
+            workers: Vec::new(),
+            steal_pool: None,
+        }
     }
 
     /// Partition lanes across `threads` persistent worker threads (clamped
@@ -668,9 +867,31 @@ impl NativeExecutor {
     /// microseconds even for nano-sized models. Bit-exact for any thread
     /// count: lanes are computed independently. Resets all lane state.
     pub fn with_threads(mut self, threads: usize) -> Self {
+        // Exclusive with `with_shared_pool`: the later call wins.
+        self.steal_pool = None;
         let t = threads.clamp(1, self.n_lanes.max(1));
         self.spawn_pool(t);
         self
+    }
+
+    /// Route this executor's steps through a cross-replica [`StepPool`]
+    /// instead of a private worker pool: each step fans disjoint lane
+    /// spans into the pool's injector, and the pool's threads plus this
+    /// caller drain them (stealing sibling replicas' spans while waiting).
+    /// Lanes stay owned by this executor, so replicas attach and detach
+    /// without thread churn — which is what makes autoscale-grown replicas
+    /// cheap. Bit-exact for any pool size (including zero threads, where
+    /// the caller computes everything). Resets all lane state.
+    pub fn with_shared_pool(mut self, pool: Arc<StepPool>) -> Self {
+        // Tear down any private pool and bring lanes back inline.
+        self.spawn_pool(1);
+        self.steal_pool = Some(pool);
+        self
+    }
+
+    /// The shared step pool this executor is attached to, if any.
+    pub fn shared_pool(&self) -> Option<&Arc<StepPool>> {
+        self.steal_pool.as_ref()
     }
 
     fn spawn_pool(&mut self, t: usize) {
@@ -729,6 +950,85 @@ impl NativeExecutor {
     pub fn model(&self) -> &NativeModel {
         &self.model
     }
+
+    /// Shared-pool step: fan this step's disjoint lane spans into the
+    /// injector, then help drain the queue — running our spans or a
+    /// sibling replica's — until our barrier completes. Correctness never
+    /// depends on the pool threads: with all of them busy elsewhere (or a
+    /// zero-thread pool), this loop executes every span itself.
+    fn step_into_shared(&mut self, pool: &StepPool, tokens: &[u32], out: &mut [f32]) -> Result<()> {
+        let n = self.n_lanes;
+        if n == 0 {
+            return Ok(());
+        }
+        let model = self.model.clone();
+        let head_rows = self.head_rows;
+        let (lanes, scratch) = self.local.as_mut().expect("shared-pool mode keeps lanes inline");
+        // Span granularity: enough spans for every pool thread plus this
+        // caller, so ONE busy replica can spread across the whole pool.
+        let spans = (pool.threads() + 1).min(n);
+        let per = n.div_ceil(spans);
+        let n_tasks = n.div_ceil(per);
+        let barrier = StepBarrier::new(n_tasks);
+        let lanes_ptr = lanes.as_mut_ptr();
+        let mut tasks = Vec::with_capacity(n_tasks);
+        let mut start = 0usize;
+        while start < n {
+            let len = per.min(n - start);
+            // SAFETY: spans are disjoint and this method does not return
+            // until the barrier drains (see `StealTask`).
+            tasks.push(StealTask {
+                model: model.clone(),
+                lanes: SpanPtrMut(unsafe { lanes_ptr.add(start) }),
+                tokens: SpanPtr(tokens[start..].as_ptr()),
+                out: SpanPtrMut(out[start * VOCAB..].as_mut_ptr()),
+                n: len,
+                head_rows,
+                done: barrier.clone(),
+            });
+            start += len;
+        }
+        pool.push_tasks(tasks);
+        let own_cfg = model.cfg as *const LmConfig;
+        loop {
+            let mut ran = false;
+            // Help drain the queue — but ONLY while our own step is still
+            // outstanding. Once the barrier is down we return immediately
+            // instead of adopting an unbounded stream of sibling spans
+            // (that would delay this replica's completion report under
+            // sustained load).
+            while barrier.state.lock().unwrap().0 > 0 {
+                let Some(task) = pool.try_pop() else { break };
+                if std::ptr::eq(task.model.cfg as *const LmConfig, own_cfg)
+                    && task.n <= scratch.capacity()
+                {
+                    run_steal_task(task, scratch);
+                    ran = true;
+                } else {
+                    // A span our scratch can't serve (heterogeneous pool):
+                    // rotate it to the back for a matching runner.
+                    pool.push_back(task);
+                    break;
+                }
+            }
+            let state = barrier.state.lock().unwrap();
+            if state.0 == 0 {
+                break;
+            }
+            if !ran {
+                // Our remaining spans are in flight on pool threads (or
+                // queued behind a span we can't run): sleep on the
+                // barrier, with a timeout so re-queued spans get
+                // re-checked.
+                let _ = barrier.done.wait_timeout(state, Duration::from_micros(200)).unwrap();
+            }
+        }
+        let mut state = barrier.state.lock().unwrap();
+        match state.1.take() {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
 }
 
 impl Drop for NativeExecutor {
@@ -786,6 +1086,9 @@ impl crate::lm::executor::LmExecutor for NativeExecutor {
         }
         if out.len() != n * VOCAB {
             anyhow::bail!("step expects out buffer of {}, got {}", n * VOCAB, out.len());
+        }
+        if let Some(pool) = self.steal_pool.clone() {
+            return self.step_into_shared(&pool, tokens, out);
         }
         if let Some((lanes, scratch)) = self.local.as_mut() {
             return self.model.advance_batch(lanes, tokens, scratch, out, self.head_rows);
@@ -1128,6 +1431,119 @@ mod tests {
             let coded_range = l * VOCAB..l * VOCAB + CODED_BYTES;
             assert_eq!(a[coded_range.clone()], b[coded_range]);
             assert!(b[l * VOCAB + CODED_BYTES..(l + 1) * VOCAB].iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn shared_pool_bit_exact_for_any_pool_size() {
+        // Work stealing is a pure execution knob: an executor attached to
+        // a StepPool of ANY size (including zero threads, where the caller
+        // computes every span itself) must reproduce the single-threaded
+        // logits exactly, across resets.
+        let cfg = by_name("nano").unwrap();
+        let w = std::sync::Arc::new(Weights::random(cfg, 41));
+        let mut baseline = NativeExecutor::new(cfg, w.clone(), 5);
+        let pools: Vec<std::sync::Arc<StepPool>> =
+            [0usize, 1, 3].iter().map(|&t| StepPool::new(t)).collect();
+        let mut pooled: Vec<NativeExecutor> = pools
+            .iter()
+            .map(|p| NativeExecutor::new(cfg, w.clone(), 5).with_shared_pool(p.clone()))
+            .collect();
+        assert!(pooled[0].shared_pool().is_some());
+        for round in 0..2 {
+            baseline.reset();
+            for ex in pooled.iter_mut() {
+                ex.reset();
+            }
+            for step in 0..4u32 {
+                let toks: Vec<u32> = (0..5).map(|l| (l * 37 + step * 11 + round) % 256).collect();
+                let a = baseline.step(&toks).unwrap();
+                for (i, ex) in pooled.iter_mut().enumerate() {
+                    assert_eq!(a, ex.step(&toks).unwrap(), "pool {i} round {round} step {step}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shared_pool_two_replicas_stepping_concurrently_stay_bit_exact() {
+        // Two replicas share ONE pool and step at the same time from two
+        // threads — spans interleave through the injector (and each caller
+        // may steal the other's spans), yet both must match the
+        // single-threaded reference exactly.
+        let cfg = by_name("nano").unwrap();
+        let w = std::sync::Arc::new(Weights::random(cfg, 42));
+        // Reference logits per step, computed single-threaded.
+        let mut reference = NativeExecutor::new(cfg, w.clone(), 4);
+        let toks_at = |step: u32| -> Vec<u32> { (0..4).map(|l| (l * 53 + step * 19) % 256).collect() };
+        let expected: Vec<Vec<f32>> = (0..6u32)
+            .map(|s| {
+                if s == 3 {
+                    reference.reset();
+                }
+                reference.step(&toks_at(s)).unwrap()
+            })
+            .collect();
+        let pool = StepPool::new(2);
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let mut ex =
+                    NativeExecutor::new(cfg, w.clone(), 4).with_shared_pool(pool.clone());
+                let expected = expected.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..3 {
+                        ex.reset();
+                        for (s, want) in expected.iter().enumerate() {
+                            let s = s as u32;
+                            if s == 3 {
+                                ex.reset();
+                            }
+                            assert_eq!(&ex.step(&toks_at(s)).unwrap(), want, "step {s}");
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn shared_pool_propagates_errors_and_recovers() {
+        let cfg = by_name("nano").unwrap();
+        let pool = StepPool::new(1);
+        let mut ex =
+            NativeExecutor::new(cfg, Weights::random(cfg, 43), 2).with_shared_pool(pool);
+        // Wrong token count is rejected before any fan-out.
+        assert!(ex.step(&[BOS]).is_err());
+        // An invalid token fails the step through the barrier...
+        assert!(ex.step(&[BOS, 9999]).is_err());
+        // ...and the executor keeps serving after a reset.
+        ex.reset();
+        let a = ex.step(&[BOS, 70]).unwrap();
+        let mut single = NativeExecutor::new(cfg, Weights::random(cfg, 43), 2);
+        assert_eq!(a, single.step(&[BOS, 70]).unwrap());
+    }
+
+    #[test]
+    fn shared_pool_int8_and_head_rows_stay_bit_exact() {
+        let cfg = by_name("nano").unwrap();
+        let w = std::sync::Arc::new(Weights::random(cfg, 44).quantize());
+        let pool = StepPool::new(2);
+        let mut full = NativeExecutor::new(cfg, w.clone(), 3);
+        let mut coded = NativeExecutor::new(cfg, w, 3)
+            .with_shared_pool(pool)
+            .with_head_rows(CODED_BYTES);
+        for step in 0..3u32 {
+            let toks: Vec<u32> = (0..3).map(|l| (l * 61 + step * 23 + 1) % 256).collect();
+            let a = full.step(&toks).unwrap();
+            let b = coded.step(&toks).unwrap();
+            for l in 0..3 {
+                let r = l * VOCAB..l * VOCAB + CODED_BYTES;
+                assert_eq!(a[r.clone()], b[r], "step {step} lane {l}");
+                assert!(b[l * VOCAB + CODED_BYTES..(l + 1) * VOCAB].iter().all(|&x| x == 0.0));
+            }
         }
     }
 

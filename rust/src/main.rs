@@ -74,8 +74,9 @@ COMPRESSION
   ratio       --model M --in FILE [--chunk N]      report the compression ratio
 
 SERVICE
-  serve       --model M [--port P] [--replicas N] [--precision f32|int8]
-                                                   batched compression server
+  serve       --model M [--port P] [--replicas N] [--min-replicas A --max-replicas B]
+              [--precision f32|int8] [--no-steal]  batched compression server
+                                                   (a min/max range autoscales the pool)
 
 EXPERIMENTS (regenerate the paper's tables and figures)
   table2 | table3 | table5 | fig2 | fig5 | fig6 | fig7 | fig8 | fig9 | chunk-sweep

@@ -1,8 +1,15 @@
 //! Hand-rolled property/fuzz tests: every baseline must round-trip every
 //! input family at every size, and reject mutated containers rather than
-//! return wrong data silently.
+//! return wrong data silently. Plus a seeded property suite over the
+//! structured parsers — [`llmzip::compress::ContainerTag`] and the `.lmz`
+//! v1/v2 weight format — where arbitrary truncations, flipped dtype bytes
+//! and corrupt scale tables must yield clear errors: never a panic, never
+//! a silently mis-parsed bundle.
 
 use llmzip::compress::registry::all_baselines;
+use llmzip::compress::{Container, ContainerTag};
+use llmzip::lm::config::by_name;
+use llmzip::lm::weights::Weights;
 use llmzip::util::Pcg64;
 
 /// Input families chosen to stress different code paths.
@@ -89,6 +96,215 @@ fn compression_is_deterministic_across_instances() {
         let a = llmzip::compress::baseline_by_name(name).unwrap().compress(&data).unwrap();
         let b = llmzip::compress::baseline_by_name(name).unwrap().compress(&data).unwrap();
         assert_eq!(a, b, "{name}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Structured-format property suite: ContainerTag + .lmz v1/v2.
+// ---------------------------------------------------------------------
+
+#[test]
+fn container_tag_parse_total_over_arbitrary_strings() {
+    // Valid tags roundtrip their fields; everything else errors. Nothing
+    // panics, whatever the string.
+    let valid = [
+        ("nano:0", "nano", false),
+        ("medium:2", "medium", false),
+        ("small:0:q8:00c0ffee", "small", true),
+        ("large:1:q8:ffffffff", "large", true),
+    ];
+    for (tag, model, quant) in valid {
+        let t = ContainerTag::parse(tag).unwrap_or_else(|e| panic!("{tag}: {e}"));
+        assert_eq!(t.model, model);
+        assert_eq!(t.fingerprint.is_some(), quant, "{tag}");
+    }
+    // Structured near-misses: every one must be a clean error.
+    for bad in [
+        "", "untagged", "nano", "nano:", "nano:x", "nano:65536", "nano:99",
+        "nano:0:q8", "nano:0:q8:", "nano:0:q8:zzzz", "nano:0:q8:00c0ffee:extra",
+        "nano:0:fp16:00c0ffee", "nano:0:q16:00c0ffee", "nano:0:q8:123456789abcdef0",
+        "::::", "a:b:c:d",
+    ] {
+        assert!(ContainerTag::parse(bad).is_err(), "'{bad}' must not parse");
+    }
+    // Seeded arbitrary ASCII soup: Ok or Err, never panic; anything Ok
+    // must have parsed a real executor flag.
+    let mut rng = Pcg64::seeded(271828);
+    let alphabet: Vec<char> = ":0123456789abcdefq8xyz ".chars().collect();
+    for _ in 0..2000 {
+        let len = rng.gen_index(24);
+        let s: String = (0..len).map(|_| alphabet[rng.gen_index(alphabet.len())]).collect();
+        if let Ok(t) = ContainerTag::parse(&s) {
+            assert!(matches!(t.executor.as_flag(), 0 | 1 | 2), "'{s}'");
+        }
+    }
+}
+
+#[test]
+fn lmz_truncations_always_error_never_panic() {
+    // EVERY proper prefix of a valid .lmz file (both versions) must be
+    // rejected; the full file must load and re-serialize byte-exactly.
+    let cfg = by_name("nano").unwrap();
+    for (name, bytes) in [
+        ("v1", Weights::random(cfg, 11).to_bytes()),
+        ("v2", Weights::random(cfg, 11).quantize().to_bytes()),
+    ] {
+        let w = Weights::from_bytes(&bytes, cfg).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(w.to_bytes(), bytes, "{name} roundtrip");
+        // Exhaustive over the header + structure region, sampled over the
+        // (large, homogeneous) payload tail.
+        let mut cuts: Vec<usize> = (0..200.min(bytes.len())).collect();
+        let mut rng = Pcg64::seeded(31337);
+        for _ in 0..300 {
+            cuts.push(rng.gen_index(bytes.len()));
+        }
+        for cut in cuts {
+            assert!(
+                Weights::from_bytes(&bytes[..cut], cfg).is_err(),
+                "{name} prefix of {cut} bytes must not parse"
+            );
+        }
+    }
+}
+
+#[test]
+fn lmz_flipped_dtype_bytes_and_corrupt_scale_tables_error_clearly() {
+    let cfg = by_name("nano").unwrap();
+    let v2 = Weights::random(cfg, 12).quantize().to_bytes();
+    // Locate the first tensor's header: 8-byte file header, then
+    // `len("embed")` prefix + name + ndim byte + 2 dims (embed is 2-D).
+    let name_len = v2[8] as usize;
+    assert_eq!(&v2[9..9 + name_len], b"embed");
+    let dt = 8 + 1 + name_len + 1 + 2 * 4;
+    assert_eq!(v2[dt], 1, "embed is int8 in a quantized bundle");
+    // Unknown dtype byte: clear error naming the dtype.
+    let mut bad = v2.clone();
+    bad[dt] = 7;
+    let err = Weights::from_bytes(&bad, cfg).unwrap_err().to_string();
+    assert!(err.contains("dtype"), "{err}");
+    // Dtype flipped i8 -> f32: the parser now walks a differently-sized
+    // payload and must desync into a structural error, not mis-load.
+    let mut flipped = v2.clone();
+    flipped[dt] = 0;
+    assert!(Weights::from_bytes(&flipped, cfg).is_err());
+    // Corrupt scale-table length: a huge count must be a clean truncation
+    // error (never an OOM attempt or a panic).
+    let mut huge = v2.clone();
+    huge[dt + 1..dt + 5].copy_from_slice(&u32::MAX.to_le_bytes());
+    let err = Weights::from_bytes(&huge, cfg).unwrap_err().to_string();
+    assert!(err.contains("truncated"), "{err}");
+    // A v1 file whose dtype region doesn't exist: flipping its version
+    // byte to v2 shifts parsing into payload bytes -> error, no panic.
+    let v1 = Weights::random(cfg, 12).to_bytes();
+    let mut misversioned = v1.clone();
+    misversioned[4] = 2;
+    let _ = Weights::from_bytes(&misversioned, cfg);
+    // Unsupported future version is refused by name.
+    let mut v9 = v1.clone();
+    v9[4] = 9;
+    let err = Weights::from_bytes(&v9, cfg).unwrap_err().to_string();
+    assert!(err.contains("version"), "{err}");
+}
+
+#[test]
+fn lmz_random_mutations_never_panic_and_ok_parses_stay_spec_valid() {
+    // Seeded byte flips anywhere in the file: the loader must never panic,
+    // and any mutation it ACCEPTS must still have produced a bundle that
+    // matches the model's parameter spec exactly (same names, same shapes,
+    // byte-exact re-serialization of whatever was parsed) — corrupt data
+    // may change values, never structure.
+    let cfg = by_name("nano").unwrap();
+    for (seed, bytes) in [
+        (21u64, Weights::random(cfg, 13).to_bytes()),
+        (22u64, Weights::random(cfg, 13).quantize().to_bytes()),
+    ] {
+        let mut rng = Pcg64::seeded(seed);
+        for _ in 0..400 {
+            let mut m = bytes.clone();
+            for _ in 0..1 + rng.gen_index(3) {
+                let at = rng.gen_index(m.len());
+                m[at] ^= 1 << rng.gen_index(8);
+            }
+            if let Ok(w) = Weights::from_bytes(&m, cfg) {
+                assert_eq!(w.tensors.len(), llmzip::lm::config::param_spec(cfg).len());
+                for ((name, shape), t) in
+                    llmzip::lm::config::param_spec(cfg).iter().zip(&w.tensors)
+                {
+                    assert_eq!(&t.name, name);
+                    assert_eq!(&t.shape, shape);
+                }
+                // Whatever parsed must re-serialize to what was parsed
+                // from (same length ⇒ same framing): no silent resync.
+                assert_eq!(w.to_bytes().len(), m.len());
+            }
+        }
+    }
+}
+
+#[test]
+fn lmz_v1_v2_to_bytes_from_bytes_roundtrip_property() {
+    // Property over seeds and models: serialize -> parse -> serialize is
+    // the identity for both the f32 (v1) and quantized (v2) formats, and
+    // quantization commutes with a save/load cycle.
+    for model in ["nano", "tiny"] {
+        let cfg = by_name(model).unwrap();
+        for seed in 0..3u64 {
+            let w = Weights::random(cfg, seed);
+            let b1 = w.to_bytes();
+            let r1 = Weights::from_bytes(&b1, cfg).unwrap();
+            assert_eq!(r1.to_bytes(), b1, "{model} s{seed} v1");
+            let q = w.quantize();
+            let b2 = q.to_bytes();
+            let r2 = Weights::from_bytes(&b2, cfg).unwrap();
+            assert_eq!(r2.to_bytes(), b2, "{model} s{seed} v2");
+            assert_eq!(
+                r1.quantize().to_bytes(),
+                b2,
+                "{model} s{seed}: quantize must commute with save/load"
+            );
+            assert_eq!(q.fingerprint(), r2.fingerprint(), "{model} s{seed}");
+        }
+    }
+}
+
+#[test]
+fn container_truncations_and_chunk_table_lies_always_error() {
+    // The outer .llmz container gets the same treatment: every prefix
+    // errors, and a chunk table that disagrees with the payload (or the
+    // recorded length) is refused structurally.
+    let c = Container {
+        orig_len: 10,
+        orig_crc32: 0x1234_5678,
+        chunk_tokens: 64,
+        model_name: "nano:0".into(),
+        chunks: vec![
+            llmzip::compress::ChunkRecord { comp_len: 4, n_tokens: 6 },
+            llmzip::compress::ChunkRecord { comp_len: 3, n_tokens: 4 },
+        ],
+        payload: vec![9, 8, 7, 6, 5, 4, 3],
+    };
+    let bytes = c.to_bytes();
+    assert_eq!(Container::from_bytes(&bytes).unwrap().payload, c.payload);
+    for cut in 0..bytes.len() {
+        assert!(Container::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+    }
+    // Payload shorter than the table claims.
+    let mut short = c.clone();
+    short.payload.pop();
+    assert!(Container::from_bytes(&short.to_bytes()).is_err());
+    // Token sum disagreeing with orig_len.
+    let mut lying = c.clone();
+    lying.chunks[0].n_tokens = 99;
+    assert!(Container::from_bytes(&lying.to_bytes()).is_err());
+    // Seeded random flips: never panic; Ok parses keep the framing.
+    let mut rng = Pcg64::seeded(55);
+    for _ in 0..500 {
+        let mut m = bytes.clone();
+        let at = rng.gen_index(m.len());
+        m[at] ^= 1 << rng.gen_index(8);
+        if let Ok(parsed) = Container::from_bytes(&m) {
+            assert_eq!(parsed.to_bytes().len(), m.len());
+        }
     }
 }
 

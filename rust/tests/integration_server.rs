@@ -59,6 +59,97 @@ fn replica_server(replicas: usize, threads: usize, weights: Arc<Weights>) -> Ser
     .unwrap()
 }
 
+/// Autoscaling server over shared weights: min 1, max 3, aggressive
+/// timings so scale events happen inside a test run.
+fn autoscale_server(weights: Arc<Weights>) -> Server {
+    let precision = weights.precision();
+    Server::start(
+        move || {
+            LlmCompressor::from_shared(
+                by_name("nano")?,
+                weights.clone(),
+                LlmCompressorConfig {
+                    model: "nano".into(),
+                    chunk_tokens: 64,
+                    stream_bytes: 256,
+                    executor: ExecutorKind::Native,
+                    lanes: 4,
+                    threads: 1,
+                    precision,
+                },
+            )
+        },
+        ServerConfig {
+            chunk_tokens: 64,
+            replicas: 2,
+            min_replicas: 1,
+            max_replicas: 3,
+            autoscale: true,
+            autoscale_cooldown: Duration::from_millis(10),
+            autoscale_shrink_after: Duration::from_millis(20),
+            policy: BatchPolicy { lanes: 4, max_wait: Duration::from_millis(2) },
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn scale_to_min_with_queued_bulk_work_never_starves() {
+    // Regression (scaling edge): shrink decisions require an EMPTY queue,
+    // so a pool racing toward min_replicas can never strand queued bulk
+    // work. Hammer an aggressively-shrinking server with bulk requests and
+    // demand every one completes, with the floor respected throughout.
+    let weights = Arc::new(Weights::random(by_name("nano").unwrap(), 99));
+    let server = Arc::new(autoscale_server(weights));
+    let mut handles = Vec::new();
+    for i in 0..8u64 {
+        let srv = server.clone();
+        handles.push(std::thread::spawn(move || {
+            for round in 0..3u64 {
+                let data = llmzip::textgen::quick_sample(600 + i as usize * 31, i * 10 + round);
+                let z = srv.compress(&data).unwrap();
+                assert_eq!(srv.decompress(&z).unwrap(), data, "client {i} round {round}");
+                // Idle gaps between rounds invite shrink attempts mid-run.
+                std::thread::sleep(Duration::from_millis(30));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = &server.metrics;
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0, "{}", m.report());
+    assert_eq!(m.requests.load(Ordering::Relaxed), 8 * 3 * 2);
+    assert!(m.replicas_low.load(Ordering::Relaxed) >= 1, "floor violated: {}", m.report());
+    assert!(m.replicas_peak.load(Ordering::Relaxed) <= 3, "ceiling violated: {}", m.report());
+}
+
+#[test]
+fn legacy_empty_container_exemption_survives_autoscaled_pool() {
+    // Regression (scaling edge): the pre-fix `model_name: ""` empty
+    // container decodes through an AUTOSCALED pool too — the exemption
+    // lives in admit, which never touches a worker for empty payloads, so
+    // no scale state can break it.
+    let weights = Arc::new(Weights::random(by_name("nano").unwrap(), 99));
+    let server = autoscale_server(weights);
+    let legacy = llmzip::compress::Container {
+        orig_len: 0,
+        orig_crc32: llmzip::util::crc32(b""),
+        chunk_tokens: 64,
+        model_name: String::new(),
+        chunks: vec![],
+        payload: vec![],
+    }
+    .to_bytes();
+    assert_eq!(server.decompress(&legacy).unwrap(), b"");
+    // And a server-produced empty container still carries the real tag.
+    let z = server.compress(b"").unwrap();
+    let c = llmzip::compress::Container::from_bytes(&z).unwrap();
+    assert_eq!(c.model_name, "nano:0");
+    assert_eq!(server.decompress(&z).unwrap(), b"");
+}
+
 #[test]
 fn many_concurrent_clients_roundtrip() {
     let server = Arc::new(native_server(4));

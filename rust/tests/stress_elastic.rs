@@ -1,0 +1,199 @@
+//! Deterministic stress/property harness for the ELASTIC replica pool.
+//!
+//! A seeded mixed-op load (bulk + interactive compress and decompress,
+//! across every textgen domain) hammers an autoscaling server with
+//! aggressive grow/shrink timings, forcing scale churn mid-traffic. The
+//! pinned property: **every container the server produces is byte-identical
+//! to the direct single-engine compressor path** — which
+//! `tests/golden_logits.rs` pins bit-for-bit to the frozen `lm/reference`
+//! implementation — no matter which `{replicas, threads, lanes, autoscale
+//! event}` history happened to serve it. Scaling must also stay provably
+//! bounded: never below `min_replicas`, never above `max_replicas`, and
+//! error-free.
+//!
+//! The timings force churn but the ASSERTIONS never depend on timing:
+//! byte-identity and bounds hold for every possible interleaving.
+
+use llmzip::compress::{Compressor, LlmCompressor, LlmCompressorConfig};
+use llmzip::coordinator::{BatchPolicy, Server, ServerConfig};
+use llmzip::lm::config::by_name;
+use llmzip::lm::weights::Weights;
+use llmzip::lm::{ExecutorKind, StepPool};
+use llmzip::textgen::Domain;
+use llmzip::util::Pcg64;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const CHUNK: usize = 64;
+const STREAM: usize = 256;
+const LANES: usize = 4;
+
+fn replica_cfg() -> LlmCompressorConfig {
+    LlmCompressorConfig {
+        model: "nano".into(),
+        chunk_tokens: CHUNK,
+        stream_bytes: STREAM,
+        executor: ExecutorKind::Native,
+        lanes: LANES,
+        threads: 1,
+        precision: llmzip::lm::Precision::F32,
+    }
+}
+
+/// Elastic server over `weights`, optionally fanning every replica's steps
+/// into one shared work-stealing [`StepPool`].
+fn elastic_server(weights: Arc<Weights>, pool: Option<Arc<StepPool>>) -> Server {
+    let precision = weights.precision();
+    Server::start(
+        move || {
+            let mut cfg = replica_cfg();
+            cfg.precision = precision;
+            LlmCompressor::from_shared_pooled(
+                by_name("nano")?,
+                weights.clone(),
+                cfg,
+                pool.clone(),
+            )
+        },
+        ServerConfig {
+            chunk_tokens: CHUNK,
+            replicas: 1,
+            min_replicas: 1,
+            max_replicas: 4,
+            autoscale: true,
+            autoscale_cooldown: Duration::from_millis(15),
+            autoscale_shrink_after: Duration::from_millis(30),
+            policy: BatchPolicy { lanes: LANES, max_wait: Duration::from_millis(2) },
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+/// The direct single-engine reference path (same weights, same window and
+/// stream granularity as the server replicas).
+fn direct(weights: Arc<Weights>) -> LlmCompressor {
+    LlmCompressor::from_weights(by_name("nano").unwrap(), weights, CHUNK, LANES).unwrap()
+}
+
+/// One client's seeded op stream: every compress is checked byte-for-byte
+/// against the direct path, every decompress for losslessness.
+fn client_ops(server: &Server, reference: &LlmCompressor, seed: u64, ops: usize) {
+    let mut rng = Pcg64::seeded(seed);
+    for op in 0..ops {
+        let domain = Domain::EVAL[rng.gen_index(Domain::EVAL.len())];
+        // Always > one stream chunk, so concurrent ops genuinely queue.
+        let size = 300 + rng.gen_index(800);
+        let data = llmzip::textgen::generate(domain, size, seed * 1000 + op as u64);
+        let golden = reference.compress(&data).unwrap();
+        match rng.gen_index(3) {
+            0 => {
+                let z = server.compress(&data).unwrap();
+                assert_eq!(z, golden, "bulk bytes diverged: {domain:?} seed {seed} op {op}");
+            }
+            1 => {
+                let z = server.compress_interactive(&data).unwrap();
+                assert_eq!(
+                    z, golden,
+                    "interactive bytes diverged: {domain:?} seed {seed} op {op}"
+                );
+            }
+            _ => {
+                assert_eq!(
+                    server.decompress(&golden).unwrap(),
+                    data,
+                    "decode diverged: {domain:?} seed {seed} op {op}"
+                );
+            }
+        }
+    }
+}
+
+/// Burst phase + quiet phase against one elastic server; returns once both
+/// a grow and a shrink have been observed (with a hard deadline).
+fn churn_and_verify(server: Arc<Server>, weights: Arc<Weights>, clients: u64) {
+    // Phase 1 — burst: concurrent seeded clients queue far more chunk
+    // items than one replica's lanes, forcing growth while every byte is
+    // checked against the reference.
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let srv = server.clone();
+        let w = weights.clone();
+        handles.push(std::thread::spawn(move || {
+            let reference = direct(w);
+            client_ops(&srv, &reference, c, 6);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = &server.metrics;
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0, "{}", m.report());
+    assert!(
+        m.scale_ups.load(Ordering::Relaxed) >= 1,
+        "burst never grew the pool: {}",
+        m.report()
+    );
+
+    // Phase 2 — quiet: idle trickle until the pool shrinks back.
+    let reference = direct(weights.clone());
+    let deadline = Instant::now() + Duration::from_secs(15);
+    let mut tick = 0u64;
+    while m.scale_downs.load(Ordering::Relaxed) == 0 {
+        assert!(Instant::now() < deadline, "pool never shrank: {}", m.report());
+        std::thread::sleep(Duration::from_millis(25));
+        // A trickle op mid-shrink must still be byte-identical.
+        if tick % 4 == 0 {
+            let data = llmzip::textgen::quick_sample(150, 999 + tick);
+            assert_eq!(server.compress(&data).unwrap(), reference.compress(&data).unwrap());
+        }
+        tick += 1;
+    }
+
+    // Bounds + integrity over the whole churn history.
+    assert!(m.replicas_peak.load(Ordering::Relaxed) <= 4, "{}", m.report());
+    assert!(m.replicas_low.load(Ordering::Relaxed) >= 1, "{}", m.report());
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0, "{}", m.report());
+
+    // Final sweep: after all scaling events, one container per domain must
+    // still match the reference exactly and roundtrip.
+    for (i, domain) in Domain::EVAL.iter().enumerate() {
+        let data = llmzip::textgen::generate(*domain, 400, 7_000 + i as u64);
+        let golden = reference.compress(&data).unwrap();
+        let z = server.compress(&data).unwrap();
+        assert_eq!(z, golden, "{domain:?} after churn");
+        assert_eq!(server.decompress(&z).unwrap(), data, "{domain:?} roundtrip");
+    }
+}
+
+#[test]
+fn elastic_stress_containers_byte_identical_under_scale_churn() {
+    let weights = Arc::new(Weights::random(by_name("nano").unwrap(), 99));
+    let server = Arc::new(elastic_server(weights.clone(), None));
+    churn_and_verify(server, weights, 6);
+}
+
+#[test]
+fn elastic_stress_with_shared_steal_pool() {
+    // Same harness, but every replica fans its steps into ONE shared
+    // work-stealing StepPool — autoscale churn + span stealing together
+    // must still be invisible in the bytes.
+    let weights = Arc::new(Weights::random(by_name("nano").unwrap(), 99));
+    let pool = StepPool::new(3);
+    let server = Arc::new(elastic_server(weights.clone(), Some(pool)));
+    churn_and_verify(server, weights, 6);
+}
+
+#[test]
+fn elastic_stress_int8_shared_pool() {
+    // The quantized path under the same churn: int8 containers are pinned
+    // by integer-accumulation determinism rather than the golden
+    // reference, so byte-identity against the direct int8 path is the
+    // contract.
+    let weights = Arc::new(Weights::random(by_name("nano").unwrap(), 99).quantize());
+    let pool = StepPool::new(2);
+    let server = Arc::new(elastic_server(weights.clone(), Some(pool)));
+    // Lighter load (int8 nano steps cost more in debug builds).
+    churn_and_verify(server, weights, 4);
+}
