@@ -51,5 +51,36 @@ fn main() -> llmzip::Result<()> {
     let back = llm.decompress(&z)?;
     assert_eq!(back, text);
     println!("\ndecompressed and CRC-verified: lossless ✓");
+
+    // 5. Streaming: LLM output is a token stream, and the API has the
+    //    same shape. `CompressWriter` implements std::io::Write — feed it
+    //    bytes as they are generated (here: 1 KiB at a time), and framed
+    //    container chunks flush incrementally with bounded memory. The
+    //    result is byte-identical to the one-shot call above.
+    use std::io::{Read, Write};
+    let mut writer = llm.stream_compress(Vec::new())?;
+    for piece in text.chunks(1024) {
+        writer.write_all(piece)?;
+    }
+    let (streamed, summary) = writer.finish()?;
+    assert_eq!(streamed, z, "streaming emits the identical container");
+    println!(
+        "streamed {} bytes -> {} container bytes in {} chunks (identical to one-shot ✓)",
+        summary.bytes_in, summary.bytes_out, summary.chunks
+    );
+
+    //    Decode side: `DecompressReader` implements std::io::Read and
+    //    verifies the CRC when it reaches the trailer...
+    let mut reader = llm.stream_decompress(&streamed[..])?;
+    let mut round = Vec::new();
+    reader.read_to_end(&mut round)?;
+    assert_eq!(round, text);
+
+    //    ...and the v2 container's trailer index gives random access:
+    //    decode 100 bytes from the middle without touching the rest.
+    let mid = text.len() as u64 / 2;
+    let slice = llm.decompress_range(&streamed, mid, 100)?;
+    assert_eq!(slice, &text[mid as usize..mid as usize + 100]);
+    println!("random-access decode of [{mid}, {mid}+100): exact ✓");
     Ok(())
 }

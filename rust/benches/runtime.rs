@@ -8,10 +8,14 @@
 //!    persistent worker pool), plus the bulk-encode path, per model size —
 //!    and an **f32-vs-int8** section (quantized weight path: tokens/sec +
 //!    resident weight bytes).
-//! 2. **Coordinator replica scaling (always runs)** — end-to-end server
+//! 2. **Streaming sessions (always runs)** — `CompressWriter` /
+//!    `DecompressReader` tokens/sec vs the one-shot calls (bytes asserted
+//!    identical), plus a peak-RSS proxy (`VmHWM`), in the `"stream"`
+//!    JSON section.
+//! 3. **Coordinator replica scaling (always runs)** — end-to-end server
 //!    tokens/sec with 1 vs N engine replicas sharing one `Arc<Weights>`,
 //!    under concurrent client load.
-//! 3. **PJRT runtime (requires `make artifacts`)** — forward/step call
+//! 4. **PJRT runtime (requires `make artifacts`)** — forward/step call
 //!    latency, in-graph generation, compressor throughput per executor,
 //!    and the figure regenerations. Skipped with a message when artifacts
 //!    (or the real xla crate) are absent.
@@ -235,6 +239,92 @@ fn int8_engine_benches() -> Vec<Int8Row> {
     rows
 }
 
+struct StreamRow {
+    bytes: usize,
+    one_shot_compress_tps: f64,
+    stream_compress_tps: f64,
+    one_shot_decompress_tps: f64,
+    stream_decompress_tps: f64,
+    /// Peak-RSS proxy (VmHWM, KiB; 0 where /proc is unavailable), sampled
+    /// AFTER the streaming phases but BEFORE the one-shot calls run — the
+    /// streaming path's claim is bounded working memory (one lane group),
+    /// and the one-shot whole-input buffers must not pollute the mark.
+    vm_hwm_kb: u64,
+}
+
+/// Process high-water RSS in KiB (Linux; 0 elsewhere) — the bench's peak
+/// memory proxy.
+fn vm_hwm_kb() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("VmHWM:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(0)
+}
+
+/// Streaming session API vs the one-shot calls (nano, native engine):
+/// identical bytes by contract, so the interesting numbers are
+/// tokens/sec on each face and the RSS proxy.
+fn stream_bench() -> StreamRow {
+    use std::io::{Read, Write};
+    let cfg = by_name("nano").unwrap();
+    let comp = LlmCompressor::from_weights(cfg, Weights::random(cfg, 17), 128, 4).unwrap();
+    let bytes = if smoke() { 16 * 1024 } else { 256 * 1024 };
+    section(&format!("streaming vs one-shot (nano, {} input)", bytes));
+    let data = llmzip::textgen::quick_sample(bytes, 99);
+
+    // Streaming phases FIRST, then the RSS snapshot: VmHWM is a monotonic
+    // process-wide high-water mark, so sampling before the one-shot calls
+    // keeps their whole-input buffers out of the streaming number.
+    let t0 = Instant::now();
+    let mut w = comp.stream_compress(Vec::new()).unwrap();
+    for piece in data.chunks(4096) {
+        w.write_all(piece).unwrap();
+    }
+    let (zs, summary) = w.finish().unwrap();
+    let stream_compress_tps = bytes as f64 / t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let mut r = comp.stream_decompress(&zs[..]).unwrap();
+    let mut back = Vec::with_capacity(bytes);
+    r.read_to_end(&mut back).unwrap();
+    let stream_decompress_tps = bytes as f64 / t0.elapsed().as_secs_f64();
+    assert_eq!(back, data);
+    let vm = vm_hwm_kb();
+
+    let t0 = Instant::now();
+    let z = comp.compress(&data).unwrap();
+    let one_shot_compress_tps = bytes as f64 / t0.elapsed().as_secs_f64();
+    assert_eq!(zs, z, "streamed container must be byte-identical to one-shot");
+    assert_eq!(summary.bytes_out as usize, z.len());
+
+    let t0 = Instant::now();
+    let back = comp.decompress(&z).unwrap();
+    let one_shot_decompress_tps = bytes as f64 / t0.elapsed().as_secs_f64();
+    assert_eq!(back, data);
+    println!(
+        "{:<28} {:>12.0} tok/s (one-shot)  {:>12.0} tok/s (stream)",
+        "compress", one_shot_compress_tps, stream_compress_tps
+    );
+    println!(
+        "{:<28} {:>12.0} tok/s (one-shot)  {:>12.0} tok/s (stream)",
+        "decompress", one_shot_decompress_tps, stream_decompress_tps
+    );
+    println!("{:<28} {:>12} KiB (VmHWM proxy)", "peak RSS", vm);
+    StreamRow {
+        bytes,
+        one_shot_compress_tps,
+        stream_compress_tps,
+        one_shot_decompress_tps,
+        stream_decompress_tps,
+        vm_hwm_kb: vm,
+    }
+}
+
 struct ReplicaPoint {
     replicas: usize,
     tokens_per_sec: f64,
@@ -324,11 +414,16 @@ fn replica_scaling_bench() -> Vec<ReplicaPoint> {
 }
 
 /// Hand-rolled JSON (no serde in this offline crate set).
-fn write_bench_json(rows: &[NativeRow], int8_rows: &[Int8Row], replica_points: &[ReplicaPoint]) {
+fn write_bench_json(
+    rows: &[NativeRow],
+    int8_rows: &[Int8Row],
+    stream: &StreamRow,
+    replica_points: &[ReplicaPoint],
+) {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"runtime\",\n");
-    s.push_str("  \"schema\": 2,\n");
+    s.push_str("  \"schema\": 3,\n");
     s.push_str(&format!("  \"lanes\": {LANES},\n"));
     s.push_str(&format!("  \"window\": {WINDOW},\n"));
     s.push_str("  \"unit\": \"tokens_per_sec\",\n");
@@ -366,6 +461,18 @@ fn write_bench_json(rows: &[NativeRow], int8_rows: &[Int8Row], replica_points: &
         ));
     }
     s.push_str("  ],\n");
+    s.push_str(&format!(
+        "  \"stream\": {{\"model\": \"nano\", \"bytes\": {}, \
+         \"one_shot_compress_tps\": {:.1}, \"stream_compress_tps\": {:.1}, \
+         \"one_shot_decompress_tps\": {:.1}, \"stream_decompress_tps\": {:.1}, \
+         \"vm_hwm_kb\": {}}},\n",
+        stream.bytes,
+        stream.one_shot_compress_tps,
+        stream.stream_compress_tps,
+        stream.one_shot_decompress_tps,
+        stream.stream_decompress_tps,
+        stream.vm_hwm_kb,
+    ));
     s.push_str("  \"replica_scaling\": {\n");
     s.push_str("    \"model\": \"nano\", \"clients\": 8, \"unit\": \"tokens_per_sec\",\n");
     s.push_str("    \"points\": [\n");
@@ -478,10 +585,14 @@ fn pjrt_benches() {
 }
 
 fn main() {
+    // Streaming first: its VmHWM peak-RSS proxy is a process-wide
+    // monotonic mark, so the whole-weight/whole-input buffers of the
+    // later phases must not run before it is sampled.
+    let stream = stream_bench();
     let rows = native_engine_benches();
     let int8_rows = int8_engine_benches();
     let replica_points = replica_scaling_bench();
-    write_bench_json(&rows, &int8_rows, &replica_points);
+    write_bench_json(&rows, &int8_rows, &stream, &replica_points);
     if smoke() {
         println!("\nSKIP PJRT runtime bench: smoke mode");
         return;

@@ -1,10 +1,16 @@
 //! `compress` / `decompress` / `ratio` — file-level LLM compression.
+//!
+//! Both directions run through the incremental `compress::stream` path
+//! with bounded memory (the container bytes are identical to the one-shot
+//! API), so `--in -` / `--out -` pipe through stdin/stdout and multi-GB
+//! files never need to be resident.
 
 use crate::cli::Args;
 use llmzip::compress::{Compressor, LlmCompressor, LlmCompressorConfig};
 use llmzip::lm::{ExecutorKind, Precision};
 use llmzip::runtime::ArtifactStore;
 use llmzip::Result;
+use std::io::{BufReader, BufWriter, Read, Write};
 use std::time::Instant;
 
 pub(crate) fn executor_from_str(s: &str) -> Result<ExecutorKind> {
@@ -37,44 +43,117 @@ pub(crate) fn open_compressor(args: &Args) -> Result<LlmCompressor> {
     LlmCompressor::open(&store, cfg)
 }
 
+/// `--in` source: `-` is stdin, anything else a file path.
+fn open_input(path: &str) -> Result<Box<dyn Read>> {
+    Ok(if path == "-" {
+        Box::new(std::io::stdin().lock())
+    } else {
+        Box::new(BufReader::new(std::fs::File::open(path)?))
+    })
+}
+
+/// Status line: stdout normally, stderr when the payload itself goes to
+/// stdout.
+fn report(to_stdout: bool, line: String) {
+    if to_stdout {
+        eprintln!("{line}");
+    } else {
+        println!("{line}");
+    }
+}
+
+/// All-or-nothing file output: the streaming paths write as they go, so a
+/// mid-stream failure would otherwise leave a truncated container (and
+/// `File::create` would have already destroyed any pre-existing file of
+/// the same name). File targets therefore stream into `<out>.partial` and
+/// rename over the destination only on success; failure removes the
+/// partial and never touches an existing `<out>`. Stdout is the caller's
+/// problem, as for any pipe tool.
+fn run_to_output<T>(out_path: &str, work: impl FnOnce(Box<dyn Write>) -> Result<T>) -> Result<T> {
+    if out_path == "-" {
+        return work(Box::new(std::io::stdout().lock()));
+    }
+    let tmp = format!("{out_path}.partial");
+    let file: Box<dyn Write> = Box::new(BufWriter::new(std::fs::File::create(&tmp)?));
+    match work(file) {
+        Ok(v) => {
+            std::fs::rename(&tmp, out_path)?;
+            Ok(v)
+        }
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
+
+fn compress_stream(
+    comp: &LlmCompressor,
+    input: &mut dyn Read,
+    output: Box<dyn Write>,
+) -> Result<llmzip::compress::StreamSummary> {
+    let mut writer = comp.stream_compress(output)?;
+    std::io::copy(input, &mut writer)?;
+    let (mut output, summary) = writer.finish()?;
+    output.flush()?;
+    Ok(summary)
+}
+
 pub fn compress(args: &[String]) -> Result<()> {
     let args = Args::parse(args)?;
-    let input = std::fs::read(args.required("in")?)?;
     let comp = open_compressor(&args)?;
+    let mut input = open_input(args.required("in")?)?;
+    let out_path = args.required("out")?.to_string();
     let t0 = Instant::now();
-    let z = comp.compress(&input)?;
+    let summary = run_to_output(&out_path, |out| compress_stream(&comp, &mut input, out))?;
     let dt = t0.elapsed();
-    std::fs::write(args.required("out")?, &z)?;
-    println!(
-        "{} -> {} bytes (ratio {:.2}x) in {:.2}s ({:.1} KiB/s, model={}, chunk={}, \
-         executor={:?}, precision={})",
-        input.len(),
-        z.len(),
-        input.len() as f64 / z.len() as f64,
-        dt.as_secs_f64(),
-        input.len() as f64 / 1024.0 / dt.as_secs_f64(),
-        comp.model_config().name,
-        comp.chunk_tokens(),
-        comp.executor_kind(),
-        comp.precision().as_str(),
+    report(
+        out_path == "-",
+        format!(
+            "{} -> {} bytes (ratio {:.2}x) in {:.2}s ({:.1} KiB/s, model={}, chunk={}, \
+             executor={:?}, precision={})",
+            summary.bytes_in,
+            summary.bytes_out,
+            summary.bytes_in as f64 / summary.bytes_out as f64,
+            dt.as_secs_f64(),
+            summary.bytes_in as f64 / 1024.0 / dt.as_secs_f64(),
+            comp.model_config().name,
+            comp.chunk_tokens(),
+            comp.executor_kind(),
+            comp.precision().as_str(),
+        ),
     );
     Ok(())
 }
 
+fn decompress_stream(
+    comp: &LlmCompressor,
+    input: Box<dyn Read>,
+    mut output: Box<dyn Write>,
+) -> Result<u64> {
+    let mut reader = comp.stream_decompress(input)?;
+    let n = std::io::copy(&mut reader, &mut output)?;
+    output.flush()?;
+    debug_assert!(reader.verified(), "copy drains to EOF, which verifies");
+    Ok(n)
+}
+
 pub fn decompress(args: &[String]) -> Result<()> {
     let args = Args::parse(args)?;
-    let input = std::fs::read(args.required("in")?)?;
     let comp = open_compressor(&args)?;
+    let input = open_input(args.required("in")?)?;
+    let out_path = args.required("out")?.to_string();
     let t0 = Instant::now();
-    let data = comp.decompress(&input)?;
+    let n = run_to_output(&out_path, |out| decompress_stream(&comp, input, out))?;
     let dt = t0.elapsed();
-    std::fs::write(args.required("out")?, &data)?;
-    println!(
-        "{} -> {} bytes (verified CRC) in {:.2}s ({:.1} KiB/s)",
-        input.len(),
-        data.len(),
-        dt.as_secs_f64(),
-        data.len() as f64 / 1024.0 / dt.as_secs_f64(),
+    report(
+        out_path == "-",
+        format!(
+            "{} bytes decoded (verified CRC) in {:.2}s ({:.1} KiB/s)",
+            n,
+            dt.as_secs_f64(),
+            n as f64 / 1024.0 / dt.as_secs_f64(),
+        ),
     );
     Ok(())
 }

@@ -1,16 +1,27 @@
 //! `serve` — the batched compression service over TCP.
 //!
-//! Wire protocol (little-endian):
-//!   request:  op u8 (1=compress, 2=decompress) | len u32 | payload
-//!   response: status u8 (0=ok, 1=error)        | len u32 | payload/message
-//! Connections are persistent; each request blocks until its response.
+//! Two wire protocols share the port, auto-detected per connection by
+//! [`llmzip::coordinator::wire::serve_connection`]:
+//!
+//! * **v1 (legacy, serial):** `op u8 (1=compress, 2=decompress) | len u32 |
+//!   payload` → `status u8 | len u32 | payload/message`, one request at a
+//!   time per connection.
+//! * **v2 (multiplexed):** the client opens with `"LZMX"`, then framed
+//!   `type u8 | req_id u32 | len u32 | payload` messages flow both ways —
+//!   many concurrent requests (and chunked streaming uploads) interleave
+//!   on one persistent connection, responses returning in completion
+//!   order. See the `wire` module docs for the frame types.
+//!
+//! With autoscaling on and work stealing enabled, the shared
+//! [`StepPool`]'s thread count FOLLOWS the live replica gauge (scale hook
+//! → [`StepPool::resize`]) instead of being provisioned for
+//! `max_replicas` up front.
 
 use crate::cli::Args;
 use llmzip::compress::{LlmCompressor, LlmCompressorConfig};
-use llmzip::coordinator::{BatchPolicy, Server, ServerConfig};
+use llmzip::coordinator::{BatchPolicy, ScaleHook, Server, ServerConfig};
 use llmzip::lm::{ExecutorKind, Precision, StepPool};
 use llmzip::Result;
-use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 use std::time::Duration;
@@ -38,6 +49,9 @@ pub fn serve(args: &[String]) -> Result<()> {
     let min_replicas = args.usize_or("min-replicas", replicas)?;
     let max_replicas = args.usize_or("max-replicas", replicas.max(min_replicas))?;
     let autoscale = min_replicas != max_replicas || args.has("autoscale");
+    if min_replicas > max_replicas {
+        anyhow::bail!("--min-replicas {min_replicas} > --max-replicas {max_replicas}");
+    }
     // Weight precision: with int8, the bundle is quantized ONCE here and
     // every replica shares the quantized Arc (half the resident weight
     // bytes, and one fingerprint for the whole pool).
@@ -52,6 +66,7 @@ pub fn serve(args: &[String]) -> Result<()> {
         threads,
         precision,
     };
+    let mut on_scale: Option<ScaleHook> = None;
     let factory: Box<dyn Fn() -> Result<LlmCompressor> + Send + Sync> =
         if executor == ExecutorKind::Native {
             // Load the weights ONCE; every replica clones the Arc.
@@ -67,16 +82,26 @@ pub fn serve(args: &[String]) -> Result<()> {
                 _ => weights,
             };
             let weights = Arc::new(weights);
-            // Cross-replica work stealing: ONE StepPool sized to the whole
-            // thread budget (what N private pools would have spawned), so
-            // replicas — including autoscale-grown ones — fan their lane
-            // spans into a shared injector and idle step threads help busy
-            // siblings. Only engaged when more than one replica can exist
-            // (stealing cannot help a lone replica — it would pay injector
-            // contention for nothing; the private per-replica pool is the
-            // right shape there). --no-steal restores private pools.
+            // Cross-replica work stealing: ONE StepPool shared by every
+            // native replica, so replicas — including autoscale-grown ones
+            // — fan their lane spans into a shared injector and idle step
+            // threads help busy siblings. The pool starts sized for the
+            // INITIAL replica count and then FOLLOWS the live replica
+            // gauge via the scale hook (no more paying max_replicas worth
+            // of threads while the pool is scaled down; resizing cannot
+            // change the bytes). Only engaged when more than one replica
+            // can exist (stealing cannot help a lone replica — it would
+            // pay injector contention for nothing). --no-steal restores
+            // private per-replica pools.
             let pool = if max_replicas > 1 && !args.has("no-steal") {
-                Some(StepPool::new(threads.max(1) * max_replicas))
+                let threads_per_replica = threads.max(1);
+                let initial = replicas.clamp(min_replicas.max(1), max_replicas);
+                let pool = StepPool::new(threads_per_replica * initial);
+                let hook_pool = pool.clone();
+                on_scale = Some(Arc::new(move |live: usize| {
+                    hook_pool.resize(threads_per_replica * live.max(1));
+                }));
+                Some(pool)
             } else {
                 None
             };
@@ -97,7 +122,7 @@ pub fn serve(args: &[String]) -> Result<()> {
                 LlmCompressor::open(&store, comp_cfg.clone())
             })
         };
-    let server = Server::start(
+    let server = Server::start_with_hook(
         factory,
         ServerConfig {
             chunk_tokens: chunk,
@@ -113,6 +138,7 @@ pub fn serve(args: &[String]) -> Result<()> {
             },
             ..Default::default()
         },
+        on_scale,
     )?;
     let server = Arc::new(server);
 
@@ -120,7 +146,7 @@ pub fn serve(args: &[String]) -> Result<()> {
     println!(
         "llmzip serving on 127.0.0.1:{port} \
          (chunk={chunk}, lanes={lanes}, threads={threads}, replicas={replicas}, \
-         autoscale={}, precision={})",
+         autoscale={}, precision={}, protocols=v1+v2-mux)",
         if autoscale { format!("{min_replicas}..{max_replicas}") } else { "off".into() },
         precision.as_str()
     );
@@ -135,75 +161,7 @@ pub fn serve(args: &[String]) -> Result<()> {
     }
 }
 
-/// Serve one persistent connection.
-pub fn handle_conn(mut stream: TcpStream, server: &Server) -> Result<()> {
-    loop {
-        let mut hdr = [0u8; 5];
-        match stream.read_exact(&mut hdr) {
-            Ok(()) => {}
-            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(()),
-            Err(e) => return Err(e.into()),
-        }
-        let op = hdr[0];
-        let len = u32::from_le_bytes(hdr[1..5].try_into().unwrap()) as usize;
-        if len > 256 << 20 {
-            anyhow::bail!("request too large: {len}");
-        }
-        let mut payload = vec![0u8; len];
-        stream.read_exact(&mut payload)?;
-        let result = match op {
-            1 => server.compress(&payload),
-            2 => server.decompress(&payload),
-            other => Err(anyhow::anyhow!("unknown op {other}")),
-        };
-        match result {
-            Ok(data) => {
-                stream.write_all(&[0u8])?;
-                stream.write_all(&(data.len() as u32).to_le_bytes())?;
-                stream.write_all(&data)?;
-            }
-            Err(e) => {
-                let msg = format!("{e:#}");
-                stream.write_all(&[1u8])?;
-                stream.write_all(&(msg.len() as u32).to_le_bytes())?;
-                stream.write_all(msg.as_bytes())?;
-            }
-        }
-        stream.flush()?;
-    }
-}
-
-/// Minimal client used by examples and tests.
-pub struct Client {
-    stream: TcpStream,
-}
-
-impl Client {
-    pub fn connect(addr: &str) -> Result<Client> {
-        Ok(Client { stream: TcpStream::connect(addr)? })
-    }
-
-    fn call(&mut self, op: u8, payload: &[u8]) -> Result<Vec<u8>> {
-        self.stream.write_all(&[op])?;
-        self.stream.write_all(&(payload.len() as u32).to_le_bytes())?;
-        self.stream.write_all(payload)?;
-        self.stream.flush()?;
-        let mut hdr = [0u8; 5];
-        self.stream.read_exact(&mut hdr)?;
-        let len = u32::from_le_bytes(hdr[1..5].try_into().unwrap()) as usize;
-        let mut data = vec![0u8; len];
-        self.stream.read_exact(&mut data)?;
-        if hdr[0] != 0 {
-            anyhow::bail!("server error: {}", String::from_utf8_lossy(&data));
-        }
-        Ok(data)
-    }
-
-    pub fn compress(&mut self, data: &[u8]) -> Result<Vec<u8>> {
-        self.call(1, data)
-    }
-
-    pub fn decompress(&mut self, data: &[u8]) -> Result<Vec<u8>> {
-        self.call(2, data)
-    }
+/// Serve one connection (either protocol, auto-detected).
+pub fn handle_conn(stream: TcpStream, server: &Server) -> Result<()> {
+    llmzip::coordinator::wire::serve_connection(stream, server)
 }

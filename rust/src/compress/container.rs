@@ -6,11 +6,14 @@
 //! original bytes, verified on every decode (lossless-ness is checked, not
 //! assumed).
 //!
-//! Layout (all little-endian):
+//! Two layouts share one magic and are distinguished by the version field
+//! (all integers little-endian):
+//!
+//! ## v1 — table-first (legacy, still parsed and re-encoded byte-exactly)
 //! ```text
 //! magic        u32   "LZP1"
-//! version      u16
-//! flags        u16
+//! version      u16   = 1
+//! flags        u16   no flag bits are defined for v1; nonzero is rejected
 //! orig_len     u64
 //! orig_crc32   u32
 //! chunk_tokens u32   tokens per chunk (context reset boundary)
@@ -19,13 +22,99 @@
 //! chunk table  n_chunks * { comp_len u32, n_tokens u32 }
 //! payload      concatenated chunk payloads
 //! ```
+//!
+//! v1 needs `orig_len`, the CRC and the full chunk table **before** the
+//! first payload byte, so an encoder must hold the whole input. That is
+//! exactly what the streaming API cannot do, hence:
+//!
+//! ## v2 — framed + seekable trailer (the format every encoder now emits)
+//! ```text
+//! magic        u32   "LZP1"
+//! version      u16   = 2
+//! flags        u16   must contain FLAG_SEEKABLE; unknown bits are rejected
+//! chunk_tokens u32
+//! model_name   u8 len + bytes
+//! frames       n_chunks * { 0xF1 u8 | comp_len u32 | n_tokens u32 | payload }
+//! trailer      0xEE u8
+//!              n_chunks u32
+//!              index      n_chunks * { comp_len u32, n_tokens u32 }
+//!              orig_len   u64
+//!              orig_crc32 u32
+//!              trailer_off u64   byte offset of the 0xEE marker
+//!              end_magic  u32   "LZP2"
+//! ```
+//!
+//! Every frame carries its own record, so a [`crate::compress::stream::CompressWriter`]
+//! emits it the moment the chunk is encoded — no lookahead, no buffering of
+//! earlier frames — and a [`crate::compress::stream::DecompressReader`]
+//! decodes frame-by-frame with bounded memory. The trailer duplicates the
+//! records as a **seekable index**: a reader that has the whole file jumps
+//! `len-12 → trailer_off → index`, computes payload offsets by prefix sum,
+//! and decodes any chunk without touching the rest (random-access decode;
+//! see `LlmCompressor::{decode_chunk, decompress_range}`). [`Container::from_bytes`]
+//! cross-checks frame headers against the index, so the two copies of the
+//! records can never disagree silently.
+//!
+//! The **payload bytes are identical between v1 and v2** for the same input:
+//! only the envelope moved. Parsing either version yields the same
+//! [`Container`] fields (modulo `version`/`flags`), and `to_bytes`
+//! re-serializes whichever layout `version` names, byte-exactly.
 
 use crate::util::{crc32, read_u32_le, read_u64_le};
 use crate::Result;
 
 /// Container magic: "LZP1".
 pub const CONTAINER_MAGIC: u32 = 0x3150_5A4C;
-pub const CONTAINER_VERSION: u16 = 1;
+/// Legacy table-first layout.
+pub const CONTAINER_V1: u16 = 1;
+/// Framed layout with a seekable trailer index.
+pub const CONTAINER_V2: u16 = 2;
+/// v2 end magic: "LZP2" (the last 4 bytes of every v2 container).
+pub const CONTAINER_END_MAGIC: u32 = 0x3250_5A4C;
+
+/// Flag bit: the container carries a trailer index for random-access
+/// decode. Set on every v2 container; undefined (and rejected) on v1.
+pub const FLAG_SEEKABLE: u16 = 0x0001;
+/// All flag bits this release understands, per version. Anything outside
+/// the mask is from a future release and must be refused, not ignored —
+/// a reader that ignores a semantics-bearing bit would decode garbage.
+const KNOWN_FLAGS_V1: u16 = 0;
+const KNOWN_FLAGS_V2: u16 = FLAG_SEEKABLE;
+
+/// Validate a parsed `(version, flags)` pair — the single definition of
+/// which flag bits this release understands, shared by
+/// [`Container::from_bytes`] and the incremental
+/// [`crate::compress::stream::DecompressReader`] so the two decode faces
+/// cannot drift.
+pub(crate) fn check_flags(version: u16, flags: u16) -> Result<()> {
+    let known = match version {
+        CONTAINER_V1 => KNOWN_FLAGS_V1,
+        CONTAINER_V2 => KNOWN_FLAGS_V2,
+        v => anyhow::bail!("unsupported container version {v}"),
+    };
+    if flags & !known != 0 {
+        anyhow::bail!(
+            "unknown v{version} container flag bits {flags:#06x} — file from a newer release?"
+        );
+    }
+    if version == CONTAINER_V2 && flags & FLAG_SEEKABLE == 0 {
+        anyhow::bail!("v2 container missing the seekable-index flag");
+    }
+    Ok(())
+}
+
+/// Marker byte opening each v2 frame.
+pub const FRAME_MARKER: u8 = 0xF1;
+/// Marker byte opening the v2 trailer.
+pub const TRAILER_MARKER: u8 = 0xEE;
+
+/// v2 fixed header size before the model name.
+const V2_HEADER_FIXED: usize = 13;
+/// v2 frame header size (marker + comp_len + n_tokens).
+pub const FRAME_HEADER: usize = 9;
+/// v2 trailer size excluding the index (marker + n_chunks + orig_len +
+/// crc + trailer_off + end magic).
+const V2_TRAILER_FIXED: usize = 1 + 4 + 8 + 4 + 8 + 4;
 
 /// Per-chunk entry in the table.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -39,6 +128,11 @@ pub struct ChunkRecord {
 /// Parsed/bundled container.
 #[derive(Clone, Debug)]
 pub struct Container {
+    /// Serialized layout: [`CONTAINER_V1`] or [`CONTAINER_V2`]. Preserved
+    /// by parse → re-encode, so v1 archives round-trip byte-exactly.
+    pub version: u16,
+    /// Format flags (carried through verbatim; see [`FLAG_SEEKABLE`]).
+    pub flags: u16,
     pub orig_len: u64,
     pub orig_crc32: u32,
     pub chunk_tokens: u32,
@@ -48,12 +142,111 @@ pub struct Container {
 }
 
 impl Container {
-    /// Serialize to bytes.
+    /// Build a legacy v1 container (flags: none defined).
+    pub fn v1(
+        orig_len: u64,
+        orig_crc32: u32,
+        chunk_tokens: u32,
+        model_name: String,
+        chunks: Vec<ChunkRecord>,
+        payload: Vec<u8>,
+    ) -> Container {
+        Container {
+            version: CONTAINER_V1,
+            flags: 0,
+            orig_len,
+            orig_crc32,
+            chunk_tokens,
+            model_name,
+            chunks,
+            payload,
+        }
+    }
+
+    /// Build a v2 framed container (always seekable).
+    pub fn v2(
+        orig_len: u64,
+        orig_crc32: u32,
+        chunk_tokens: u32,
+        model_name: String,
+        chunks: Vec<ChunkRecord>,
+        payload: Vec<u8>,
+    ) -> Container {
+        Container {
+            version: CONTAINER_V2,
+            flags: FLAG_SEEKABLE,
+            orig_len,
+            orig_crc32,
+            chunk_tokens,
+            model_name,
+            chunks,
+            payload,
+        }
+    }
+
+    /// Serialize the v2 header (everything before the first frame). Shared
+    /// by [`Self::to_bytes`] and the incremental
+    /// [`crate::compress::stream::CompressWriter`], so the two paths
+    /// cannot drift.
+    pub fn v2_header(chunk_tokens: u32, model_name: &str) -> Vec<u8> {
+        let name = model_name.as_bytes();
+        assert!(name.len() <= 255, "model tag too long");
+        let mut out = Vec::with_capacity(V2_HEADER_FIXED + name.len());
+        out.extend_from_slice(&CONTAINER_MAGIC.to_le_bytes());
+        out.extend_from_slice(&CONTAINER_V2.to_le_bytes());
+        out.extend_from_slice(&FLAG_SEEKABLE.to_le_bytes());
+        out.extend_from_slice(&chunk_tokens.to_le_bytes());
+        out.push(name.len() as u8);
+        out.extend_from_slice(name);
+        out
+    }
+
+    /// Serialize one v2 frame header (marker + record); the chunk payload
+    /// follows it verbatim.
+    pub fn v2_frame_header(rec: ChunkRecord) -> [u8; FRAME_HEADER] {
+        let mut h = [0u8; FRAME_HEADER];
+        h[0] = FRAME_MARKER;
+        h[1..5].copy_from_slice(&rec.comp_len.to_le_bytes());
+        h[5..9].copy_from_slice(&rec.n_tokens.to_le_bytes());
+        h
+    }
+
+    /// Serialize the v2 trailer. `trailer_off` is the byte offset (from
+    /// the container start) at which this trailer begins.
+    pub fn v2_trailer(
+        chunks: &[ChunkRecord],
+        orig_len: u64,
+        orig_crc32: u32,
+        trailer_off: u64,
+    ) -> Vec<u8> {
+        let mut out = Vec::with_capacity(V2_TRAILER_FIXED + chunks.len() * 8);
+        out.push(TRAILER_MARKER);
+        out.extend_from_slice(&(chunks.len() as u32).to_le_bytes());
+        for c in chunks {
+            out.extend_from_slice(&c.comp_len.to_le_bytes());
+            out.extend_from_slice(&c.n_tokens.to_le_bytes());
+        }
+        out.extend_from_slice(&orig_len.to_le_bytes());
+        out.extend_from_slice(&orig_crc32.to_le_bytes());
+        out.extend_from_slice(&trailer_off.to_le_bytes());
+        out.extend_from_slice(&CONTAINER_END_MAGIC.to_le_bytes());
+        out
+    }
+
+    /// Serialize to bytes in the layout `self.version` names.
     pub fn to_bytes(&self) -> Vec<u8> {
+        match self.version {
+            CONTAINER_V1 => self.to_bytes_v1(),
+            CONTAINER_V2 => self.to_bytes_v2(),
+            v => panic!("unencodable container version {v}"),
+        }
+    }
+
+    fn to_bytes_v1(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.payload.len() + 64 + self.chunks.len() * 8);
         out.extend_from_slice(&CONTAINER_MAGIC.to_le_bytes());
-        out.extend_from_slice(&CONTAINER_VERSION.to_le_bytes());
-        out.extend_from_slice(&0u16.to_le_bytes());
+        out.extend_from_slice(&CONTAINER_V1.to_le_bytes());
+        out.extend_from_slice(&self.flags.to_le_bytes());
         out.extend_from_slice(&self.orig_len.to_le_bytes());
         out.extend_from_slice(&self.orig_crc32.to_le_bytes());
         out.extend_from_slice(&self.chunk_tokens.to_le_bytes());
@@ -70,18 +263,54 @@ impl Container {
         out
     }
 
+    fn to_bytes_v2(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            self.payload.len() + 64 + self.chunks.len() * (8 + FRAME_HEADER),
+        );
+        out.extend_from_slice(&Self::v2_header(self.chunk_tokens, &self.model_name));
+        // v2() always sets FLAG_SEEKABLE; a hand-built container with other
+        // flags would not survive parse, so refuse to emit one.
+        assert_eq!(self.flags, FLAG_SEEKABLE, "v2 containers carry exactly FLAG_SEEKABLE");
+        let mut offset = 0usize;
+        for &rec in &self.chunks {
+            out.extend_from_slice(&Self::v2_frame_header(rec));
+            out.extend_from_slice(&self.payload[offset..offset + rec.comp_len as usize]);
+            offset += rec.comp_len as usize;
+        }
+        let trailer_off = out.len() as u64;
+        out.extend_from_slice(&Self::v2_trailer(
+            &self.chunks,
+            self.orig_len,
+            self.orig_crc32,
+            trailer_off,
+        ));
+        out
+    }
+
     /// Parse from bytes, validating structure (but not the CRC — that is
-    /// checked against the *decompressed* output by the caller).
+    /// checked against the *decompressed* output by the caller). Accepts
+    /// both layouts; the parsed `version` records which one, so
+    /// [`Self::to_bytes`] reproduces the input byte-exactly.
     pub fn from_bytes(data: &[u8]) -> Result<Self> {
-        if data.len() < 27 {
+        if data.len() < 8 {
             anyhow::bail!("container too short");
         }
         if read_u32_le(data, 0) != CONTAINER_MAGIC {
             anyhow::bail!("bad container magic");
         }
         let version = u16::from_le_bytes([data[4], data[5]]);
-        if version != CONTAINER_VERSION {
-            anyhow::bail!("unsupported container version {version}");
+        let flags = u16::from_le_bytes([data[6], data[7]]);
+        match version {
+            CONTAINER_V1 => Self::from_bytes_v1(data, flags),
+            CONTAINER_V2 => Self::from_bytes_v2(data, flags),
+            v => anyhow::bail!("unsupported container version {v}"),
+        }
+    }
+
+    fn from_bytes_v1(data: &[u8], flags: u16) -> Result<Self> {
+        check_flags(CONTAINER_V1, flags)?;
+        if data.len() < 27 {
+            anyhow::bail!("container too short");
         }
         let orig_len = read_u64_le(data, 8);
         let orig_crc32 = read_u32_le(data, 16);
@@ -121,12 +350,100 @@ impl Container {
             anyhow::bail!("chunk token sum {total_tokens} != original length {orig_len}");
         }
         Ok(Container {
+            version: CONTAINER_V1,
+            flags,
             orig_len,
             orig_crc32,
             chunk_tokens,
             model_name,
             chunks,
             payload: data[pos..].to_vec(),
+        })
+    }
+
+    fn from_bytes_v2(data: &[u8], flags: u16) -> Result<Self> {
+        check_flags(CONTAINER_V2, flags)?;
+        if data.len() < V2_HEADER_FIXED + V2_TRAILER_FIXED {
+            anyhow::bail!("container too short");
+        }
+        let chunk_tokens = read_u32_le(data, 8);
+        let name_len = data[12] as usize;
+        let header_end = V2_HEADER_FIXED + name_len;
+        if data.len() < header_end + V2_TRAILER_FIXED {
+            anyhow::bail!("truncated container header");
+        }
+        let model_name = String::from_utf8(data[V2_HEADER_FIXED..header_end].to_vec())
+            .map_err(|_| anyhow::anyhow!("model name is not UTF-8"))?;
+        // Trailer first (the seekable path): the last 12 bytes locate it.
+        if read_u32_le(data, data.len() - 4) != CONTAINER_END_MAGIC {
+            anyhow::bail!("bad container end magic — truncated v2 container?");
+        }
+        let trailer_off64 = read_u64_le(data, data.len() - 12);
+        let trailer_max = (data.len() - V2_TRAILER_FIXED) as u64;
+        if trailer_off64 < header_end as u64 || trailer_off64 > trailer_max {
+            anyhow::bail!("container trailer offset {trailer_off64} out of bounds");
+        }
+        let trailer_off = trailer_off64 as usize;
+        if data[trailer_off] != TRAILER_MARKER {
+            anyhow::bail!("container trailer marker missing at offset {trailer_off}");
+        }
+        let n_chunks = read_u32_le(data, trailer_off + 1) as usize;
+        if trailer_off as u64 + V2_TRAILER_FIXED as u64 + 8 * n_chunks as u64 != data.len() as u64 {
+            anyhow::bail!("container trailer size disagrees with its chunk count");
+        }
+        let index_at = trailer_off + 5;
+        let mut chunks = Vec::with_capacity(n_chunks);
+        let mut total_comp = 0u64;
+        let mut total_tokens = 0u64;
+        for i in 0..n_chunks {
+            let comp_len = read_u32_le(data, index_at + i * 8);
+            let n_tokens = read_u32_le(data, index_at + i * 8 + 4);
+            total_comp += comp_len as u64;
+            total_tokens += n_tokens as u64;
+            chunks.push(ChunkRecord { comp_len, n_tokens });
+        }
+        let orig_len = read_u64_le(data, index_at + n_chunks * 8);
+        let orig_crc32 = read_u32_le(data, index_at + n_chunks * 8 + 8);
+        if total_tokens != orig_len {
+            anyhow::bail!("chunk token sum {total_tokens} != original length {orig_len}");
+        }
+        // Frame walk: every frame header must agree with the index, and the
+        // frames must tile [header_end, trailer_off) exactly.
+        if trailer_off as u64
+            != header_end as u64 + n_chunks as u64 * FRAME_HEADER as u64 + total_comp
+        {
+            anyhow::bail!("container frame region size disagrees with the trailer index");
+        }
+        let mut payload = Vec::with_capacity(total_comp as usize);
+        let mut pos = header_end;
+        for (i, rec) in chunks.iter().enumerate() {
+            if data[pos] != FRAME_MARKER {
+                anyhow::bail!("frame {i} marker missing at offset {pos}");
+            }
+            let comp_len = read_u32_le(data, pos + 1);
+            let n_tokens = read_u32_le(data, pos + 5);
+            if comp_len != rec.comp_len || n_tokens != rec.n_tokens {
+                anyhow::bail!(
+                    "frame {i} header ({comp_len}, {n_tokens}) disagrees with trailer index \
+                     ({}, {})",
+                    rec.comp_len,
+                    rec.n_tokens
+                );
+            }
+            pos += FRAME_HEADER;
+            payload.extend_from_slice(&data[pos..pos + comp_len as usize]);
+            pos += comp_len as usize;
+        }
+        debug_assert_eq!(pos, trailer_off);
+        Ok(Container {
+            version: CONTAINER_V2,
+            flags,
+            orig_len,
+            orig_crc32,
+            chunk_tokens,
+            model_name,
+            chunks,
+            payload,
         })
     }
 
@@ -138,6 +455,23 @@ impl Container {
             offset += rec.comp_len as usize;
             (rec, s)
         })
+    }
+
+    /// Random access to one chunk: `(record, payload_slice)` for chunk `i`,
+    /// plus the offset (in decoded bytes) at which that chunk begins — the
+    /// trailer index makes this a table walk, no payload decoding.
+    pub fn chunk(&self, i: usize) -> Result<(ChunkRecord, &[u8], u64)> {
+        if i >= self.chunks.len() {
+            anyhow::bail!("chunk {i} out of range (container has {})", self.chunks.len());
+        }
+        let mut comp_off = 0usize;
+        let mut token_off = 0u64;
+        for rec in &self.chunks[..i] {
+            comp_off += rec.comp_len as usize;
+            token_off += rec.n_tokens as u64;
+        }
+        let rec = self.chunks[i];
+        Ok((rec, &self.payload[comp_off..comp_off + rec.comp_len as usize], token_off))
     }
 
     /// Verify a decompressed buffer against the recorded length + CRC.
@@ -158,26 +492,31 @@ mod tests {
     use super::*;
 
     fn sample() -> Container {
-        Container {
-            orig_len: 1000,
-            orig_crc32: 0xDEADBEEF,
-            chunk_tokens: 256,
-            model_name: "medium".to_string(),
-            chunks: vec![
+        Container::v1(
+            1000,
+            0xDEADBEEF,
+            256,
+            "medium".to_string(),
+            vec![
                 ChunkRecord { comp_len: 3, n_tokens: 256 },
                 ChunkRecord { comp_len: 4, n_tokens: 256 },
                 ChunkRecord { comp_len: 2, n_tokens: 256 },
                 ChunkRecord { comp_len: 1, n_tokens: 232 },
             ],
-            payload: vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10],
-        }
+            vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10],
+        )
     }
 
-    #[test]
-    fn roundtrip() {
-        let c = sample();
-        let bytes = c.to_bytes();
-        let d = Container::from_bytes(&bytes).unwrap();
+    fn sample_v2() -> Container {
+        let mut c = sample();
+        c.version = CONTAINER_V2;
+        c.flags = FLAG_SEEKABLE;
+        c
+    }
+
+    fn assert_fields_eq(d: &Container, c: &Container) {
+        assert_eq!(d.version, c.version);
+        assert_eq!(d.flags, c.flags);
         assert_eq!(d.orig_len, c.orig_len);
         assert_eq!(d.orig_crc32, c.orig_crc32);
         assert_eq!(d.chunk_tokens, c.chunk_tokens);
@@ -187,17 +526,63 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip() {
+        for c in [sample(), sample_v2()] {
+            let bytes = c.to_bytes();
+            let d = Container::from_bytes(&bytes).unwrap();
+            assert_fields_eq(&d, &c);
+            assert_eq!(d.to_bytes(), bytes, "parse -> re-encode is the identity");
+        }
+    }
+
+    #[test]
+    fn v1_and_v2_carry_identical_payload_and_records() {
+        let (a, b) = (sample(), sample_v2());
+        let pa = Container::from_bytes(&a.to_bytes()).unwrap();
+        let pb = Container::from_bytes(&b.to_bytes()).unwrap();
+        assert_eq!(pa.payload, pb.payload);
+        assert_eq!(pa.chunks, pb.chunks);
+        assert_eq!(pa.orig_crc32, pb.orig_crc32);
+    }
+
+    #[test]
+    fn v2_empty_container_roundtrips() {
+        let c = Container::v2(0, crc32(b""), 64, "nano:0".into(), vec![], vec![]);
+        let bytes = c.to_bytes();
+        let d = Container::from_bytes(&bytes).unwrap();
+        assert_fields_eq(&d, &c);
+        assert_eq!(d.to_bytes(), bytes);
+    }
+
+    #[test]
     fn iter_chunks_slices_payload() {
-        let c = sample();
-        let parts: Vec<Vec<u8>> = c.iter_chunks().map(|(_, s)| s.to_vec()).collect();
-        assert_eq!(parts, vec![vec![1, 2, 3], vec![4, 5, 6, 7], vec![8, 9], vec![10]]);
+        for c in [sample(), sample_v2()] {
+            let parts: Vec<Vec<u8>> = c.iter_chunks().map(|(_, s)| s.to_vec()).collect();
+            assert_eq!(parts, vec![vec![1, 2, 3], vec![4, 5, 6, 7], vec![8, 9], vec![10]]);
+        }
+    }
+
+    #[test]
+    fn chunk_random_access_matches_iteration() {
+        let c = sample_v2();
+        let mut token_off = 0u64;
+        for (i, (rec, slice)) in c.iter_chunks().enumerate() {
+            let (r, s, t) = c.chunk(i).unwrap();
+            assert_eq!(r, rec);
+            assert_eq!(s, slice);
+            assert_eq!(t, token_off);
+            token_off += rec.n_tokens as u64;
+        }
+        assert!(c.chunk(4).is_err());
     }
 
     #[test]
     fn bad_magic_rejected() {
-        let mut bytes = sample().to_bytes();
-        bytes[0] ^= 0xFF;
-        assert!(Container::from_bytes(&bytes).is_err());
+        for c in [sample(), sample_v2()] {
+            let mut bytes = c.to_bytes();
+            bytes[0] ^= 0xFF;
+            assert!(Container::from_bytes(&bytes).is_err());
+        }
     }
 
     #[test]
@@ -206,27 +591,102 @@ mod tests {
         for cut in [5, 20, 26, bytes.len() - 1] {
             assert!(Container::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
         }
+        // v2: EVERY proper prefix must be rejected (frame boundaries, mid
+        // trailer, mid index — all of them).
+        let bytes = sample_v2().to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(Container::from_bytes(&bytes[..cut]).is_err(), "v2 cut={cut}");
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        for c in [sample(), sample_v2()] {
+            let mut bytes = c.to_bytes();
+            bytes.push(0);
+            assert!(Container::from_bytes(&bytes).is_err());
+        }
+    }
+
+    #[test]
+    fn unknown_flag_bits_rejected() {
+        // v1 defines no flags; v2 defines only FLAG_SEEKABLE. Any other
+        // bit means a future format revision — refuse it by name.
+        let mut v1 = sample().to_bytes();
+        v1[6] = 0x01;
+        let err = Container::from_bytes(&v1).unwrap_err().to_string();
+        assert!(err.contains("flag"), "{err}");
+        let mut v2 = sample_v2().to_bytes();
+        v2[6] = 0x03; // seekable + one unknown bit
+        let err = Container::from_bytes(&v2).unwrap_err().to_string();
+        assert!(err.contains("flag"), "{err}");
+        // A v2 container WITHOUT the seekable bit is also malformed.
+        let mut v2 = sample_v2().to_bytes();
+        v2[6] = 0x00;
+        assert!(Container::from_bytes(&v2).is_err());
+    }
+
+    #[test]
+    fn flags_round_trip_through_serialization() {
+        let c = sample_v2();
+        let parsed = Container::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(parsed.flags, FLAG_SEEKABLE, "flags carried, not hardcoded");
+        assert_eq!(parsed.to_bytes(), c.to_bytes());
+    }
+
+    #[test]
+    fn v2_frame_index_disagreement_rejected() {
+        let c = sample_v2();
+        let mut bytes = c.to_bytes();
+        // Corrupt the first frame's n_tokens field (header starts right
+        // after the 13+name header; marker at header_end).
+        let header_end = 13 + c.model_name.len();
+        assert_eq!(bytes[header_end], FRAME_MARKER);
+        bytes[header_end + 5] ^= 1;
+        let err = Container::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("disagrees"), "{err}");
+    }
+
+    #[test]
+    fn v2_corrupt_trailer_and_end_magic_rejected() {
+        let c = sample_v2();
+        let n = c.to_bytes().len();
+        // End magic.
+        let mut bytes = c.to_bytes();
+        bytes[n - 1] ^= 0xFF;
+        assert!(Container::from_bytes(&bytes).is_err());
+        // Trailer offset.
+        let mut bytes = c.to_bytes();
+        bytes[n - 12] ^= 0xFF;
+        assert!(Container::from_bytes(&bytes).is_err());
+        // Chunk count in the trailer.
+        let mut bytes = c.to_bytes();
+        let trailer_off = read_u64_le(&bytes, n - 12) as usize;
+        bytes[trailer_off + 1] ^= 0x01;
+        assert!(Container::from_bytes(&bytes).is_err());
     }
 
     #[test]
     fn token_sum_must_match_orig_len() {
-        let mut c = sample();
-        c.chunks[0].n_tokens += 1;
-        let bytes = c.to_bytes();
-        assert!(Container::from_bytes(&bytes).is_err());
+        for mut c in [sample(), sample_v2()] {
+            c.chunks[0].n_tokens += 1;
+            // (v2 keeps frame headers and index in sync — both lie here.)
+            let bytes = c.to_bytes();
+            assert!(Container::from_bytes(&bytes).is_err());
+        }
     }
 
     #[test]
     fn verify_checks_crc_and_len() {
         let data = b"some original data".to_vec();
-        let c = Container {
-            orig_len: data.len() as u64,
-            orig_crc32: crate::util::crc32(&data),
-            chunk_tokens: 16,
-            model_name: "m".into(),
-            chunks: vec![ChunkRecord { comp_len: 0, n_tokens: data.len() as u32 }],
-            payload: vec![],
-        };
+        let c = Container::v1(
+            data.len() as u64,
+            crate::util::crc32(&data),
+            16,
+            "m".into(),
+            vec![ChunkRecord { comp_len: 0, n_tokens: data.len() as u32 }],
+            vec![],
+        );
         assert!(c.verify(&data).is_ok());
         assert!(c.verify(b"some original dat").is_err());
         let mut bad = data.clone();

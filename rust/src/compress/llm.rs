@@ -530,6 +530,130 @@ impl LlmCompressor {
         }
         Ok(outputs)
     }
+
+    /// Check a container's tag + window against this compressor's engine;
+    /// returns the container's `chunk_tokens`. Shared by every decode
+    /// entry point (one-shot, streaming reader, random access) so the
+    /// model / executor / precision / fingerprint contract cannot drift
+    /// between them.
+    pub(crate) fn validate_tag_and_window(
+        &self,
+        model_name: &str,
+        chunk_tokens: usize,
+    ) -> Result<usize> {
+        let recorded = ContainerTag::parse(model_name)?;
+        if recorded.model != self.cfg.model {
+            anyhow::bail!(
+                "container was compressed with model '{}', this compressor uses '{}'",
+                recorded.model,
+                self.cfg.model
+            );
+        }
+        let kind = self.engine.borrow().kind();
+        if !recorded.executor.compatible(kind) {
+            anyhow::bail!(
+                "container needs executor {:?}, engine is {:?} (streams are only \
+                 bit-identical within one executor kind)",
+                recorded.executor,
+                kind
+            );
+        }
+        // Precision + fingerprint are the weight-bytes contract: a
+        // mismatch would decode garbage and die on CRC, so refuse it here
+        // with an actionable error instead.
+        if recorded.precision != self.cfg.precision {
+            anyhow::bail!(
+                "container was compressed with {} weights, this compressor runs {} — both \
+                 ends must hold the same precision (pass the matching --precision)",
+                recorded.precision.as_str(),
+                self.cfg.precision.as_str()
+            );
+        }
+        let own = ContainerTag::parse(&self.tag).expect("compressor tag is well-formed");
+        if let (Some(want), Some(have)) = (recorded.fingerprint, own.fingerprint) {
+            if want != have {
+                anyhow::bail!(
+                    "quantized weight fingerprint mismatch: container {want:08x} vs engine \
+                     {have:08x} — lossless decode requires bit-identical weights on both ends"
+                );
+            }
+        }
+        if chunk_tokens == 0 || chunk_tokens > config::MAX_CONTEXT {
+            anyhow::bail!("container chunk_tokens {chunk_tokens} out of range");
+        }
+        Ok(chunk_tokens)
+    }
+
+    fn validate_container(&self, container: &Container) -> Result<usize> {
+        self.validate_tag_and_window(&container.model_name, container.chunk_tokens as usize)
+    }
+
+    /// Decode ONE chunk of a parsed container — random access: only chunk
+    /// `i`'s payload goes through the model, everything else is a table
+    /// walk. Returns the decoded bytes of that chunk (up to `stream_bytes`
+    /// of them). Note the container CRC covers the WHOLE input, so a
+    /// partial decode cannot be CRC-verified; the range coder + strict
+    /// framing still catch corruption structurally.
+    pub fn decode_chunk(&self, container: &Container, i: usize) -> Result<Vec<u8>> {
+        let ct = self.validate_container(container)?;
+        let (rec, payload, _) = container.chunk(i)?;
+        let mut engine = self.engine.borrow_mut();
+        let decoded = self.decompress_batch(&mut **engine, ct, &[rec], &[payload])?;
+        Ok(decoded.into_iter().next().expect("one chunk in, one chunk out"))
+    }
+
+    /// Random-access decode of `len` original bytes starting at `offset`:
+    /// only the chunks overlapping `[offset, offset + len)` are decoded.
+    /// Equals the same slice of a full [`Compressor::decompress`] (the
+    /// per-chunk range coders are independent, so partial decode is exact,
+    /// not approximate). Chunks batch across lanes exactly like the full
+    /// path.
+    pub fn decompress_range(&self, data: &[u8], offset: u64, len: u64) -> Result<Vec<u8>> {
+        let container = Container::from_bytes(data)?;
+        let ct = self.validate_container(&container)?;
+        let end = offset
+            .checked_add(len)
+            .ok_or_else(|| anyhow::anyhow!("range overflows"))?;
+        if end > container.orig_len {
+            anyhow::bail!(
+                "range [{offset}, {end}) exceeds original length {}",
+                container.orig_len
+            );
+        }
+        if len == 0 {
+            return Ok(Vec::new());
+        }
+        // Select the chunks the range touches (token offsets are prefix
+        // sums over the trailer index — no decoding).
+        let mut touched: Vec<(ChunkRecord, &[u8])> = Vec::new();
+        let mut first_start = 0u64;
+        let mut token_off = 0u64;
+        for (rec, payload) in container.iter_chunks() {
+            let chunk_end = token_off + rec.n_tokens as u64;
+            if chunk_end > offset && token_off < end {
+                if touched.is_empty() {
+                    first_start = token_off;
+                }
+                touched.push((rec, payload));
+            }
+            token_off = chunk_end;
+            if token_off >= end {
+                break;
+            }
+        }
+        let mut engine = self.engine.borrow_mut();
+        let lanes = engine.lanes();
+        let mut out = Vec::with_capacity((end - first_start) as usize);
+        for group in touched.chunks(lanes) {
+            let records: Vec<ChunkRecord> = group.iter().map(|(r, _)| *r).collect();
+            let payloads: Vec<&[u8]> = group.iter().map(|(_, p)| *p).collect();
+            for d in self.decompress_batch(&mut **engine, ct, &records, &payloads)? {
+                out.extend(d);
+            }
+        }
+        let lo = (offset - first_start) as usize;
+        Ok(out[lo..lo + len as usize].to_vec())
+    }
 }
 
 impl Compressor for LlmCompressor {
@@ -553,60 +677,21 @@ impl Compressor for LlmCompressor {
                 payload.extend(comp);
             }
         }
-        let container = Container {
-            orig_len: data.len() as u64,
-            orig_crc32: crc32(data),
-            chunk_tokens: self.cfg.chunk_tokens as u32,
-            model_name: self.tag.clone(),
-            chunks: records,
+        let container = Container::v2(
+            data.len() as u64,
+            crc32(data),
+            self.cfg.chunk_tokens as u32,
+            self.tag.clone(),
+            records,
             payload,
-        };
+        );
         Ok(container.to_bytes())
     }
 
     fn decompress(&self, data: &[u8]) -> Result<Vec<u8>> {
         let container = Container::from_bytes(data)?;
-        let recorded = ContainerTag::parse(&container.model_name)?;
+        let ct = self.validate_container(&container)?;
         let mut engine = self.engine.borrow_mut();
-        if recorded.model != self.cfg.model {
-            anyhow::bail!(
-                "container was compressed with model '{}', this compressor uses '{}'",
-                recorded.model,
-                self.cfg.model
-            );
-        }
-        if !recorded.executor.compatible(engine.kind()) {
-            anyhow::bail!(
-                "container needs executor {:?}, engine is {:?} (streams are only \
-                 bit-identical within one executor kind)",
-                recorded.executor,
-                engine.kind()
-            );
-        }
-        // Precision + fingerprint are the weight-bytes contract: a
-        // mismatch would decode garbage and die on CRC, so refuse it here
-        // with an actionable error instead.
-        if recorded.precision != self.cfg.precision {
-            anyhow::bail!(
-                "container was compressed with {} weights, this compressor runs {} — both \
-                 ends must hold the same precision (pass the matching --precision)",
-                recorded.precision.as_str(),
-                self.cfg.precision.as_str()
-            );
-        }
-        let own = ContainerTag::parse(&self.tag).expect("compressor tag is well-formed");
-        if let (Some(want), Some(have)) = (recorded.fingerprint, own.fingerprint) {
-            if want != have {
-                anyhow::bail!(
-                    "quantized weight fingerprint mismatch: container {want:08x} vs engine \
-                     {have:08x} — lossless decode requires bit-identical weights on both ends"
-                );
-            }
-        }
-        let ct = container.chunk_tokens as usize;
-        if ct == 0 || ct > config::MAX_CONTEXT {
-            anyhow::bail!("container chunk_tokens {ct} out of range");
-        }
         let lanes = engine.lanes();
         let all: Vec<(ChunkRecord, &[u8])> = container.iter_chunks().collect();
         let mut out = Vec::with_capacity(container.orig_len as usize);

@@ -4,14 +4,21 @@
 //! implements — the three entropy coders, the three dictionary coders, the
 //! three neural-simulation coders (see [`crate::baselines`]) and the paper's
 //! contribution, [`LlmCompressor`].
+//!
+//! The buffer-to-buffer trait is the batch face; [`stream`] adds the
+//! incremental one: [`CompressWriter`]/[`DecompressReader`] wrap an
+//! [`LlmCompressor`] behind `std::io::{Write, Read}` with bounded memory
+//! and byte-identical output, over the [`container`] v2 framed layout.
 
 pub mod container;
 pub mod llm;
 pub mod registry;
+pub mod stream;
 
-pub use container::{ChunkRecord, Container, CONTAINER_MAGIC};
+pub use container::{ChunkRecord, Container, CONTAINER_MAGIC, CONTAINER_V1, CONTAINER_V2};
 pub use llm::{ContainerTag, LlmCompressor, LlmCompressorConfig};
 pub use registry::{baseline_by_name, all_baseline_names};
+pub use stream::{CompressWriter, DecompressReader, StreamSummary};
 
 use crate::Result;
 

@@ -17,6 +17,16 @@
 //! occupancy, per-op latency percentiles (p50/p99), per-worker queue
 //! depth/fill, and the replica gauge + scale-event counters.
 //!
+//! The client face is **ticketed and asynchronous**: [`router::Server::submit`]
+//! returns a [`router::Ticket`] immediately (wait/try_wait), and
+//! [`router::Server::open_stream`] opens an incremental compression
+//! session whose chunks enter the batcher as they arrive — engine work
+//! overlaps input arrival, and the finished container is byte-identical
+//! to the one-shot path. [`wire`] exposes both over TCP: a multiplexed
+//! framed protocol (request ids, chunked uploads, interleaved responses
+//! on one persistent connection) with the legacy serial protocol
+//! auto-detected for old clients.
+//!
 //! No tokio in this environment: the coordinator is built on std threads +
 //! mpsc channels — one scheduler plus one OS thread per engine replica,
 //! which is exactly the right weight for CPU-bound engines.
@@ -24,7 +34,9 @@
 pub mod batcher;
 pub mod metrics;
 pub mod router;
+pub mod wire;
 
 pub use batcher::{BatchPolicy, DynamicBatcher, Priority, WorkItem, WorkKind};
 pub use metrics::{Metrics, WorkerMetrics};
-pub use router::{Server, ServerConfig};
+pub use router::{Op, ScaleHook, Server, ServerConfig, StreamHandle, Ticket};
+pub use wire::{Client, MuxClient};

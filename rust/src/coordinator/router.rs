@@ -1,10 +1,18 @@
-//! Request router: intake, chunking, priority scheduling across an
-//! engine-replica pool, and reassembly.
+//! Request router: ticketed intake, chunking, priority scheduling across
+//! an engine-replica pool, and reassembly.
 //!
 //! Architecture (replica-pool refactor):
 //!
-//! * **Clients** submit requests through a channel and block on a
-//!   per-request response channel.
+//! * **Clients** submit requests through a channel. The primitive is
+//!   asynchronous: [`Server::submit`] returns a [`Ticket`] immediately
+//!   ([`Ticket::wait`] blocks, [`Ticket::try_wait`] polls), so one client
+//!   thread can keep any number of operations in flight — the shape the
+//!   multiplexed wire protocol in [`crate::coordinator::wire`] maps
+//!   directly onto. The blocking `compress`/`decompress` calls are thin
+//!   wrappers. [`Server::open_stream`] opens an **incremental** session:
+//!   chunks enter the batcher as the client produces them, so engine work
+//!   overlaps input arrival and the finished container is still
+//!   byte-identical to the one-shot path.
 //! * **One scheduler thread** (`llmzip-sched`) owns intake, the
 //!   [`DynamicBatcher`] (decompress fast lane + per-item priorities),
 //!   per-request reassembly state, and worker dispatch. It never touches
@@ -53,11 +61,11 @@ use crate::compress::llm::LlmCompressor;
 use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher, Priority, WorkItem, WorkKind};
 use crate::coordinator::metrics::Metrics;
 use crate::lm::executor::ExecutorKind;
-use crate::util::crc32;
+use crate::util::{crc32, Crc32};
 use crate::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -131,9 +139,41 @@ fn pool_bounds(config: &ServerConfig) -> (usize, usize, usize) {
     (min, replicas.clamp(min, max), max)
 }
 
-enum Op {
+/// One operation for [`Server::submit`]: the async, ticketed intake. The
+/// blocking [`Server::compress`]/[`Server::decompress`] calls are thin
+/// wrappers over it.
+pub enum Op {
+    /// Compress raw bytes into a container.
     Compress(Vec<u8>),
+    /// Decompress a container back to the original bytes.
     Decompress(Vec<u8>),
+}
+
+/// Handle to one in-flight [`Server::submit`] operation. The scheduler
+/// answers on a private one-shot channel; [`Ticket::wait`] parks until it
+/// does, [`Ticket::try_wait`] polls — a client can hold any number of
+/// tickets, which is what lets one connection multiplex many requests.
+pub struct Ticket {
+    rx: Receiver<Result<Vec<u8>>>,
+}
+
+impl Ticket {
+    /// Block until the operation completes.
+    pub fn wait(self) -> Result<Vec<u8>> {
+        self.rx.recv().map_err(|_| anyhow::anyhow!("server dropped the request"))?
+    }
+
+    /// Poll without blocking: `Ok(None)` while still in flight,
+    /// `Ok(Some(bytes))` exactly once on completion.
+    pub fn try_wait(&self) -> Result<Option<Vec<u8>>> {
+        match self.rx.try_recv() {
+            Ok(result) => result.map(Some),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => {
+                anyhow::bail!("server dropped the request")
+            }
+        }
+    }
 }
 
 struct Request {
@@ -144,11 +184,25 @@ struct Request {
     started: Instant,
 }
 
-/// Everything the scheduler hears about: client intake, worker
-/// completions and runtime-grown worker readiness share one channel, so a
-/// single `recv` drives all of them.
+/// Everything the scheduler hears about: client intake (one-shot requests
+/// AND incremental stream sessions), worker completions and runtime-grown
+/// worker readiness share one channel, so a single `recv` drives all of
+/// them.
 enum ToScheduler {
     Request(Request),
+    /// A streaming compress session opened: reassembly state is created
+    /// with an unknown chunk count; chunks follow as the client produces
+    /// them.
+    StreamOpen { id: u64, respond: SyncSender<Result<Vec<u8>>>, started: Instant },
+    /// One stream chunk (already cut at the engine's stream granularity by
+    /// the [`StreamHandle`]); goes straight into the batcher, so batching
+    /// starts before the input has finished arriving.
+    StreamChunk { id: u64, index: u32, data: Vec<u8> },
+    /// The stream's input is complete: `n_chunks` chunks were sent, the
+    /// original byte count and CRC are final.
+    StreamFinish { id: u64, n_chunks: u32, orig_len: u64, orig_crc: u32 },
+    /// The client dropped its handle without finishing.
+    StreamAbort { id: u64 },
     Done(BatchDone),
     /// An autoscale-grown worker finished construction (`Ok` = serving).
     Ready { worker: usize, info: Result<EngineInfo> },
@@ -191,6 +245,7 @@ struct Pending {
     started: Instant,
     kind: WorkKind,
     /// Results by chunk index (compress: payloads; decompress: raw bytes).
+    /// For streams this grows as chunks arrive.
     results: Vec<Option<Vec<u8>>>,
     remaining: usize,
     /// Compress: original lengths per chunk + source crc/len for container.
@@ -199,7 +254,20 @@ struct Pending {
     orig_crc: u32,
     container_chunk_tokens: u32,
     bytes_in: usize,
+    /// One-shot requests know their chunk count at admit (`true` from the
+    /// start); a stream flips this at `StreamFinish`, when `orig_len`,
+    /// `orig_crc` and the chunk count become final. A request completes
+    /// when `finished && remaining == 0`.
+    finished: bool,
 }
+
+/// Callback the scheduler fires whenever the live replica count changes
+/// (startup, grow, shrink, worker death) — the autoscale-aware sizing
+/// hook. `cmd serve` uses it to retarget the shared
+/// [`crate::lm::native::StepPool`] so the step-thread budget follows the
+/// replica gauge instead of being provisioned for `max_replicas` up
+/// front. Runs on the scheduler thread: keep it quick and non-blocking.
+pub type ScaleHook = Arc<dyn Fn(usize) + Send + Sync>;
 
 /// The compression service.
 pub struct Server {
@@ -208,6 +276,9 @@ pub struct Server {
     pub metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
     scheduler: Option<std::thread::JoinHandle<()>>,
+    /// What the (identical) replicas reported at startup; fixed for the
+    /// server's life, so clients can read it without a scheduler roundtrip.
+    info: EngineInfo,
 }
 
 impl Server {
@@ -217,6 +288,19 @@ impl Server {
     /// captures plain data (clone an `Arc<Weights>` into it to make native
     /// replicas share tensors).
     pub fn start<F>(factory: F, config: ServerConfig) -> Result<Server>
+    where
+        F: Fn() -> Result<LlmCompressor> + Send + Sync + 'static,
+    {
+        Self::start_with_hook(factory, config, None)
+    }
+
+    /// [`Self::start`] with a [`ScaleHook`] observing every live-replica
+    /// change.
+    pub fn start_with_hook<F>(
+        factory: F,
+        config: ServerConfig,
+        on_scale: Option<ScaleHook>,
+    ) -> Result<Server>
     where
         F: Fn() -> Result<LlmCompressor> + Send + Sync + 'static,
     {
@@ -240,18 +324,40 @@ impl Server {
         let m = metrics.clone();
         let sd = shutdown.clone();
         let worker_tx = tx.clone();
-        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+        let (ready_tx, ready_rx) = sync_channel::<Result<EngineInfo>>(1);
         let scheduler = std::thread::Builder::new()
             .name("llmzip-sched".into())
-            .spawn(move || scheduler_main(factory, config, rx, worker_tx, m, sd, ready_tx))
+            .spawn(move || {
+                scheduler_main(factory, config, rx, worker_tx, m, sd, ready_tx, on_scale)
+            })
             .expect("spawning scheduler");
-        ready_rx
+        let info = ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("scheduler died during startup"))??;
-        Ok(Server { tx, next_id: AtomicU64::new(1), metrics, shutdown, scheduler: Some(scheduler) })
+        Ok(Server {
+            tx,
+            next_id: AtomicU64::new(1),
+            metrics,
+            shutdown,
+            scheduler: Some(scheduler),
+            info,
+        })
     }
 
-    fn submit(&self, op: Op, priority: Priority) -> Result<Vec<u8>> {
+    /// Submit an operation asynchronously at its default priority
+    /// (compress: bulk, decompress: interactive — the fast lane) and get a
+    /// [`Ticket`] back immediately. The calling thread never blocks on
+    /// engine work; many tickets can be in flight at once.
+    pub fn submit(&self, op: Op) -> Result<Ticket> {
+        let priority = match op {
+            Op::Compress(_) => Priority::Bulk,
+            Op::Decompress(_) => Priority::Interactive,
+        };
+        self.submit_with(op, priority)
+    }
+
+    /// [`Self::submit`] with an explicit scheduling class.
+    pub fn submit_with(&self, op: Op, priority: Priority) -> Result<Ticket> {
         let (rtx, rrx) = sync_channel(1);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.tx
@@ -263,26 +369,173 @@ impl Server {
                 started: Instant::now(),
             }))
             .map_err(|_| anyhow::anyhow!("server is shut down"))?;
-        rrx.recv().map_err(|_| anyhow::anyhow!("server dropped the request"))?
+        Ok(Ticket { rx: rrx })
+    }
+
+    /// Open an incremental compression session: bytes written to the
+    /// returned [`StreamHandle`] are cut into engine-granularity chunks
+    /// and fed into the batcher AS THEY ARRIVE, so encoding (and
+    /// cross-request batching) overlaps with input production instead of
+    /// waiting for it. [`StreamHandle::finish`] yields the [`Ticket`] for
+    /// the final container — byte-identical to [`Self::compress`] of the
+    /// concatenated input.
+    pub fn open_stream(&self) -> Result<StreamHandle> {
+        let (rtx, rrx) = sync_channel(1);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(ToScheduler::StreamOpen { id, respond: rtx, started: Instant::now() })
+            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        Ok(StreamHandle {
+            tx: self.tx.clone(),
+            id,
+            stream_bytes: self.info.stream_bytes,
+            buf: Vec::new(),
+            next_index: 0,
+            crc: Crc32::new(),
+            total: 0,
+            rx: Some(rrx),
+            finished: false,
+        })
     }
 
     /// Compress `data`, returning a container (blocks until done). Bulk
     /// priority: queued decompress work and interactive compressions go
-    /// first.
+    /// first. Thin wrapper over [`Self::submit_with`].
     pub fn compress(&self, data: &[u8]) -> Result<Vec<u8>> {
-        self.submit(Op::Compress(data.to_vec()), Priority::Bulk)
+        self.submit_with(Op::Compress(data.to_vec()), Priority::Bulk)?.wait()
     }
 
     /// [`Self::compress`] at interactive priority: overtakes queued bulk
     /// compress chunks (decompress keeps its own fast lane regardless).
     pub fn compress_interactive(&self, data: &[u8]) -> Result<Vec<u8>> {
-        self.submit(Op::Compress(data.to_vec()), Priority::Interactive)
+        self.submit_with(Op::Compress(data.to_vec()), Priority::Interactive)?.wait()
     }
 
     /// Decompress a container (blocks until done). Always interactive:
     /// reads ride the fast lane past bulk compress jobs.
     pub fn decompress(&self, container: &[u8]) -> Result<Vec<u8>> {
-        self.submit(Op::Decompress(container.to_vec()), Priority::Interactive)
+        self.submit_with(Op::Decompress(container.to_vec()), Priority::Interactive)?.wait()
+    }
+
+    /// Stream granularity of the replica engines: the chunk size
+    /// [`Self::open_stream`] sessions are cut at.
+    pub fn stream_bytes(&self) -> usize {
+        self.info.stream_bytes
+    }
+
+    /// Model-context window recorded in every produced container.
+    pub fn chunk_tokens(&self) -> usize {
+        self.info.chunk_tokens
+    }
+
+    /// The engine tag (`model:flag[:q8:<fp>]`) stamped into every
+    /// container this server produces.
+    pub fn engine_tag(&self) -> &str {
+        &self.info.tag
+    }
+}
+
+/// Client half of one [`Server::open_stream`] session. Implements
+/// [`std::io::Write`]; drop without [`StreamHandle::finish`] aborts the
+/// session server-side.
+pub struct StreamHandle {
+    tx: SyncSender<ToScheduler>,
+    id: u64,
+    stream_bytes: usize,
+    buf: Vec<u8>,
+    next_index: u32,
+    crc: Crc32,
+    total: u64,
+    rx: Option<Receiver<Result<Vec<u8>>>>,
+    finished: bool,
+}
+
+impl StreamHandle {
+    /// Feed input bytes; every completed `stream_bytes` chunk is shipped
+    /// to the scheduler immediately (client-side buffering is bounded by
+    /// one chunk, and a large write is chunked straight from the caller's
+    /// slice — linear, no repeated buffer shifting).
+    ///
+    /// NOTE: this boundary-cutting state machine mirrors
+    /// `compress::stream::CompressWriter::ingest` (same top-up/slice/tail
+    /// rule; different sink — frames there, scheduler messages here). The
+    /// byte-identity contract depends on the two agreeing; both are
+    /// pinned by split-point property tests, so change them together.
+    pub fn write_bytes(&mut self, mut data: &[u8]) -> Result<()> {
+        if self.finished {
+            anyhow::bail!("stream already finished");
+        }
+        self.crc.update(data);
+        self.total += data.len() as u64;
+        let sb = self.stream_bytes;
+        if !self.buf.is_empty() {
+            let take = (sb - self.buf.len()).min(data.len());
+            self.buf.extend_from_slice(&data[..take]);
+            data = &data[take..];
+            if self.buf.len() < sb {
+                return Ok(());
+            }
+            let chunk = std::mem::take(&mut self.buf);
+            self.send_chunk(chunk)?;
+        }
+        while data.len() >= sb {
+            self.send_chunk(data[..sb].to_vec())?;
+            data = &data[sb..];
+        }
+        self.buf.extend_from_slice(data);
+        Ok(())
+    }
+
+    fn send_chunk(&mut self, data: Vec<u8>) -> Result<()> {
+        let index = self.next_index;
+        self.next_index += 1;
+        self.tx
+            .send(ToScheduler::StreamChunk { id: self.id, index, data })
+            .map_err(|_| anyhow::anyhow!("server is shut down"))
+    }
+
+    /// Declare the input complete: ships the final partial chunk and the
+    /// stream totals, and returns the [`Ticket`] for the assembled
+    /// container.
+    pub fn finish(mut self) -> Result<Ticket> {
+        if !self.buf.is_empty() {
+            let tail = std::mem::take(&mut self.buf);
+            self.send_chunk(tail)?;
+        }
+        self.finished = true;
+        self.tx
+            .send(ToScheduler::StreamFinish {
+                id: self.id,
+                n_chunks: self.next_index,
+                orig_len: self.total,
+                orig_crc: self.crc.finalize(),
+            })
+            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        Ok(Ticket { rx: self.rx.take().expect("unfinished handle holds its receiver") })
+    }
+
+    /// Bytes fed so far.
+    pub fn bytes_in(&self) -> u64 {
+        self.total
+    }
+}
+
+impl Drop for StreamHandle {
+    fn drop(&mut self) {
+        if !self.finished {
+            let _ = self.tx.send(ToScheduler::StreamAbort { id: self.id });
+        }
+    }
+}
+
+impl std::io::Write for StreamHandle {
+    fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+        self.write_bytes(data).map_err(|e| std::io::Error::other(format!("{e:#}")))?;
+        Ok(data.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
     }
 }
 
@@ -567,6 +820,7 @@ struct SchedState {
     graveyard: Vec<std::thread::JoinHandle<()>>,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn scheduler_main<F>(
     factory: Arc<F>,
     config: ServerConfig,
@@ -574,7 +828,8 @@ fn scheduler_main<F>(
     worker_tx: SyncSender<ToScheduler>,
     metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
-    ready_tx: SyncSender<Result<()>>,
+    ready_tx: SyncSender<Result<EngineInfo>>,
+    on_scale: Option<ScaleHook>,
 ) where
     F: Fn() -> Result<LlmCompressor> + Send + Sync + 'static,
 {
@@ -641,7 +896,7 @@ fn scheduler_main<F>(
         return;
     }
     let info = info.expect("initial replicas >= 1 reported ready");
-    let _ = ready_tx.send(Ok(()));
+    let _ = ready_tx.send(Ok(info.clone()));
 
     let lanes = if config.lanes > 0 { config.lanes.min(info.lanes) } else { info.lanes };
     // Requests are split at the compressor's stream granularity; the
@@ -660,6 +915,9 @@ fn scheduler_main<F>(
         graveyard: Vec::new(),
     };
     metrics.set_replicas(initial);
+    if let Some(hook) = &on_scale {
+        hook(initial);
+    }
     loop {
         let busy = count_state(&st.slots, SlotState::Busy);
         let starting = count_state(&st.slots, SlotState::Starting);
@@ -684,7 +942,7 @@ fn scheduler_main<F>(
                 .unwrap_or(Duration::from_millis(10))
         };
         match rx.recv_timeout(timeout) {
-            Ok(msg) => handle_message(msg, &info, split, &mut st, &metrics),
+            Ok(msg) => handle_message(msg, &info, split, &mut st, &metrics, &on_scale),
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => {
                 // Unreachable in practice: the scheduler holds its own
@@ -695,7 +953,21 @@ fn scheduler_main<F>(
         }
         // Drain without blocking to fill batches before dispatching.
         while let Ok(msg) = rx.try_recv() {
-            handle_message(msg, &info, split, &mut st, &metrics);
+            handle_message(msg, &info, split, &mut st, &metrics, &on_scale);
+        }
+        // Shutdown drains in-flight work, but a stream whose client never
+        // finished can never complete — fail it instead of wedging the
+        // join in `Server::drop`. (Streams still decoding their last
+        // chunks keep `remaining > 0` and drain normally first.)
+        if shutdown.load(Ordering::SeqCst) {
+            st.pending.retain(|_, p| {
+                if !p.finished && p.remaining == 0 {
+                    let _ = p.respond.send(Err(anyhow::anyhow!("server shut down mid-stream")));
+                    false
+                } else {
+                    true
+                }
+            });
         }
         // Dispatch released batches onto idle replicas.
         while !st.idle.is_empty() {
@@ -719,7 +991,11 @@ fn scheduler_main<F>(
                     st.graveyard.push(h);
                 }
                 metrics.record_error();
-                metrics.set_replicas(live_count(&st.slots));
+                let live = live_count(&st.slots);
+                metrics.set_replicas(live);
+                if let Some(hook) = &on_scale {
+                    hook(live);
+                }
                 for item in failed.0.items {
                     if let Some(p) = st.pending.remove(&item.request_id) {
                         let _ = p
@@ -787,7 +1063,11 @@ fn scheduler_main<F>(
                         if let Some(h) = st.slots[id].handle.take() {
                             st.graveyard.push(h);
                         }
-                        metrics.record_scale(false, live_count(&st.slots));
+                        let live = live_count(&st.slots);
+                        metrics.record_scale(false, live);
+                        if let Some(hook) = &on_scale {
+                            hook(live);
+                        }
                     }
                 }
             }
@@ -814,10 +1094,76 @@ fn handle_message(
     split: Split,
     st: &mut SchedState,
     metrics: &Metrics,
+    on_scale: &Option<ScaleHook>,
 ) {
     match msg {
         ToScheduler::Request(req) => {
             admit(req, info, split, &mut st.batcher, &mut st.pending, metrics)
+        }
+        ToScheduler::StreamOpen { id, respond, started } => {
+            st.pending.insert(
+                id,
+                Pending {
+                    respond,
+                    started,
+                    kind: WorkKind::Compress,
+                    results: Vec::new(),
+                    remaining: 0,
+                    chunk_sizes: Vec::new(),
+                    orig_len: 0,
+                    orig_crc: 0,
+                    container_chunk_tokens: split.chunk_tokens,
+                    bytes_in: 0,
+                    finished: false,
+                },
+            );
+        }
+        ToScheduler::StreamChunk { id, index, data } => {
+            // An aborted/failed stream's entry is gone; late chunks are
+            // dropped silently (their results would be too).
+            let Some(p) = st.pending.get_mut(&id) else { return };
+            if index as usize != p.results.len() {
+                let p = st.pending.remove(&id).unwrap();
+                let _ = p.respond.send(Err(anyhow::anyhow!(
+                    "stream chunk {index} arrived out of order (expected {})",
+                    p.results.len()
+                )));
+                return;
+            }
+            p.results.push(None);
+            p.chunk_sizes.push(data.len() as u32);
+            p.remaining += 1;
+            p.bytes_in += data.len();
+            st.batcher.push(WorkItem {
+                request_id: id,
+                chunk_index: index,
+                kind: WorkKind::Compress,
+                priority: Priority::Bulk,
+                data,
+                record: None,
+                enqueued: Instant::now(),
+            });
+        }
+        ToScheduler::StreamFinish { id, n_chunks, orig_len, orig_crc } => {
+            let Some(p) = st.pending.get_mut(&id) else { return };
+            if n_chunks as usize != p.results.len() {
+                let p = st.pending.remove(&id).unwrap();
+                let _ = p.respond.send(Err(anyhow::anyhow!(
+                    "stream finished with {n_chunks} chunks, scheduler saw {}",
+                    p.results.len()
+                )));
+                return;
+            }
+            p.finished = true;
+            p.orig_len = orig_len;
+            p.orig_crc = orig_crc;
+            if p.remaining == 0 {
+                let p = st.pending.remove(&id).unwrap();
+                finish(&info.tag, p, metrics);
+            }
+        }
+        ToScheduler::StreamAbort { id } => {
+            st.pending.remove(&id);
         }
         ToScheduler::Done(done) => {
             st.slots[done.worker].state = SlotState::Idle;
@@ -844,7 +1190,11 @@ fn handle_message(
             } else {
                 st.slots[worker].state = SlotState::Idle;
                 st.idle.push(worker);
-                metrics.record_scale(true, live_count(&st.slots));
+                let live = live_count(&st.slots);
+                metrics.record_scale(true, live);
+                if let Some(hook) = on_scale {
+                    hook(live);
+                }
             }
         }
         ToScheduler::Ready { worker, info: Err(e) } => {
@@ -888,20 +1238,21 @@ fn admit(
                 orig_crc: crc32(&data),
                 container_chunk_tokens: split.chunk_tokens,
                 bytes_in: data.len(),
+                finished: true,
             };
             if data.is_empty() {
                 // Zero-chunk request: answer immediately with an empty
                 // container carrying the REAL engine tag — `finish` never
                 // sees this request, and decoding through
                 // `LlmCompressor::decompress` requires the `model:flag` tag.
-                let container = Container {
-                    orig_len: 0,
-                    orig_crc32: entry.orig_crc,
-                    chunk_tokens: entry.container_chunk_tokens,
-                    model_name: info.tag.clone(),
-                    chunks: vec![],
-                    payload: vec![],
-                };
+                let container = Container::v2(
+                    0,
+                    entry.orig_crc,
+                    entry.container_chunk_tokens,
+                    info.tag.clone(),
+                    vec![],
+                    vec![],
+                );
                 metrics.record_request_op(WorkKind::Compress, 0, 0, entry.started.elapsed());
                 let _ = entry.respond.send(Ok(container.to_bytes()));
                 return;
@@ -966,6 +1317,7 @@ fn admit(
                     orig_crc: container.orig_crc32,
                     container_chunk_tokens: container.chunk_tokens,
                     bytes_in: bytes.len(),
+                    finished: true,
                 };
                 if items.is_empty() {
                     metrics.record_request_op(
@@ -1017,7 +1369,9 @@ fn complete_batch(
                 let Some(p) = pending.get_mut(&item.request_id) else { continue };
                 p.results[item.chunk_index as usize] = Some(out);
                 p.remaining -= 1;
-                if p.remaining == 0 {
+                // Streams complete only once the client declared the input
+                // finished; one-shot requests are `finished` from admit.
+                if p.remaining == 0 && p.finished {
                     let p = pending.remove(&item.request_id).unwrap();
                     finish(&info.tag, p, metrics);
                 }
@@ -1039,14 +1393,14 @@ fn finish(tag: &str, p: Pending, metrics: &Metrics) {
                 });
                 payload.extend_from_slice(bytes);
             }
-            Ok(Container {
-                orig_len: p.orig_len,
-                orig_crc32: p.orig_crc,
-                chunk_tokens: p.container_chunk_tokens,
-                model_name: tag.to_string(),
-                chunks: records,
+            Ok(Container::v2(
+                p.orig_len,
+                p.orig_crc,
+                p.container_chunk_tokens,
+                tag.to_string(),
+                records,
                 payload,
-            }
+            )
             .to_bytes())
         }
         WorkKind::Decompress => {
@@ -1106,6 +1460,130 @@ mod tests {
     }
 
     #[test]
+    fn tickets_resolve_out_of_order_without_blocking() {
+        // The async primitive: submit several ops up front, then collect
+        // results via try_wait polling — no call ever parks the client
+        // until it chooses to.
+        let server = test_server(32, 2);
+        let data: Vec<Vec<u8>> =
+            (0..4).map(|i| crate::textgen::quick_sample(200 + i * 57, i as u64)).collect();
+        let golden: Vec<Vec<u8>> = data.iter().map(|d| server.compress(d).unwrap()).collect();
+        let tickets: Vec<Ticket> = golden
+            .iter()
+            .map(|z| server.submit(Op::Decompress(z.clone())).unwrap())
+            .collect();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut results: Vec<Option<Vec<u8>>> = vec![None; tickets.len()];
+        while results.iter().any(Option::is_none) {
+            assert!(Instant::now() < deadline, "tickets never resolved");
+            for (t, slot) in tickets.iter().zip(results.iter_mut()) {
+                if slot.is_none() {
+                    *slot = t.try_wait().unwrap();
+                }
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        for (got, want) in results.into_iter().zip(&data) {
+            assert_eq!(&got.unwrap(), want);
+        }
+        // Wait-based tickets work too, and submit defaults priorities.
+        let t = server.submit(Op::Compress(data[0].clone())).unwrap();
+        assert_eq!(t.wait().unwrap(), golden[0]);
+    }
+
+    #[test]
+    fn open_stream_matches_one_shot_bytes_for_any_write_split() {
+        let server = test_server(32, 2);
+        let data = crate::textgen::quick_sample(1100, 17);
+        let golden = server.compress(&data).unwrap();
+        for splits in [vec![1100usize], vec![1; 1100], vec![0, 127, 1, 128, 500, 344]] {
+            let mut stream = server.open_stream().unwrap();
+            let mut off = 0;
+            for s in splits {
+                stream.write_bytes(&data[off..off + s]).unwrap();
+                off += s;
+            }
+            assert_eq!(off, data.len());
+            assert_eq!(stream.bytes_in(), data.len() as u64);
+            let z = stream.finish().unwrap().wait().unwrap();
+            assert_eq!(z, golden, "streamed container must equal the one-shot bytes");
+        }
+        // Empty stream == one-shot empty compress (tagged empty container).
+        let z = server.open_stream().unwrap().finish().unwrap().wait().unwrap();
+        assert_eq!(z, server.compress(b"").unwrap());
+        assert_eq!(server.decompress(&z).unwrap(), b"");
+    }
+
+    #[test]
+    fn abandoned_stream_aborts_cleanly_and_server_keeps_serving() {
+        let server = test_server(32, 2);
+        {
+            let mut stream = server.open_stream().unwrap();
+            stream.write_bytes(&crate::textgen::quick_sample(300, 3)).unwrap();
+            // Dropped without finish: the scheduler must reap the session.
+        }
+        let data = crate::textgen::quick_sample(250, 4);
+        let z = server.compress(&data).unwrap();
+        assert_eq!(server.decompress(&z).unwrap(), data);
+    }
+
+    #[test]
+    fn scale_hook_follows_the_replica_gauge() {
+        // The hook fires at startup and on every grow/shrink with the live
+        // count — the signal cmd/serve uses to retarget the shared
+        // StepPool.
+        let observed = Arc::new(std::sync::Mutex::new(Vec::<usize>::new()));
+        let obs = observed.clone();
+        let server = Server::start_with_hook(
+            move || {
+                let cfg = by_name("nano").unwrap();
+                LlmCompressor::from_weights(cfg, Weights::random(cfg, 21), 32, 2)
+            },
+            ServerConfig {
+                chunk_tokens: 32,
+                replicas: 1,
+                min_replicas: 1,
+                max_replicas: 3,
+                autoscale: true,
+                autoscale_cooldown: Duration::from_millis(15),
+                autoscale_shrink_after: Duration::from_millis(30),
+                policy: BatchPolicy { lanes: 2, max_wait: Duration::from_millis(2) },
+                ..Default::default()
+            },
+            Some(Arc::new(move |n| obs.lock().unwrap().push(n))),
+        )
+        .unwrap();
+        assert_eq!(observed.lock().unwrap().clone(), vec![1usize], "startup fires the hook");
+        // Burst load to force a grow, then idle to force the shrink back.
+        let server = Arc::new(server);
+        let mut handles = Vec::new();
+        for i in 0..6u64 {
+            let s = server.clone();
+            handles.push(std::thread::spawn(move || {
+                let data = crate::textgen::quick_sample(1000, i);
+                for _ in 0..3 {
+                    let z = s.compress(&data).unwrap();
+                    assert_eq!(s.decompress(&z).unwrap(), data);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while server.metrics.scale_downs.load(Ordering::Relaxed) == 0 {
+            assert!(Instant::now() < deadline, "no shrink: {}", server.metrics.report());
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let seen = observed.lock().unwrap().clone();
+        assert!(seen.len() >= 3, "startup + grow + shrink: {seen:?}");
+        assert!(seen.iter().all(|&n| (1..=3).contains(&n)), "{seen:?}");
+        // Every hook value matches a gauge the metrics saw too.
+        let peak = server.metrics.replicas_peak.load(Ordering::Relaxed);
+        assert!(*seen.iter().max().unwrap() as u64 <= peak);
+    }
+
+    #[test]
     fn lane_cap_limits_batch_width() {
         // Engine has 4 lanes but the server is configured to fill at most 2.
         let server = Server::start(
@@ -1146,15 +1624,8 @@ mod tests {
         // Pre-fix servers emitted empty containers with model_name: "";
         // they carry no payload, so the new tag check must let them pass.
         let server = test_server(32, 2);
-        let legacy = Container {
-            orig_len: 0,
-            orig_crc32: crate::util::crc32(b""),
-            chunk_tokens: 32,
-            model_name: String::new(),
-            chunks: vec![],
-            payload: vec![],
-        }
-        .to_bytes();
+        let legacy = Container::v1(0, crate::util::crc32(b""), 32, String::new(), vec![], vec![])
+            .to_bytes();
         assert_eq!(server.decompress(&legacy).unwrap(), b"");
     }
 

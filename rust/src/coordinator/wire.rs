@@ -1,0 +1,382 @@
+//! TCP wire protocols for the compression service.
+//!
+//! Two protocols share one listening port; the first byte a client sends
+//! picks the session kind ([`serve_connection`] auto-detects):
+//!
+//! ## v1 — serial request/response (legacy clients)
+//! ```text
+//! request:  op u8 (1=compress, 2=decompress) | len u32 | payload
+//! response: status u8 (0=ok, 1=error)        | len u32 | payload/message
+//! ```
+//! One outstanding request per connection; the op byte is never `b'L'`,
+//! which is how v1 stays distinguishable from the v2 handshake.
+//!
+//! ## v2 — multiplexed frames (one persistent connection, many requests)
+//! The client opens with the 4-byte handshake `"LZMX"`, then both sides
+//! exchange frames:
+//! ```text
+//! frame: type u8 | req_id u32 | len u32 | payload
+//! ```
+//! Client→server types: [`MSG_COMPRESS`], [`MSG_DECOMPRESS`],
+//! [`MSG_COMPRESS_INTERACTIVE`], and the streaming trio
+//! [`MSG_STREAM_OPEN`] / [`MSG_STREAM_CHUNK`] / [`MSG_STREAM_FINISH`]
+//! (chunked payload upload: the server starts batching the moment the
+//! first chunk lands, long before the input finishes arriving).
+//! Server→client: [`MSG_OK`] / [`MSG_ERR`], tagged with the request id —
+//! responses interleave in COMPLETION order, not submission order, which
+//! is the whole point: a fast interactive op overtakes a bulk one on the
+//! same socket instead of queueing behind it head-of-line.
+//!
+//! `req_id` is client-chosen and only needs to be unique among that
+//! connection's in-flight requests. Every frame payload is capped at
+//! [`MAX_PAYLOAD`]; beyond that, in-flight memory is bounded by what the
+//! client chooses to submit before collecting responses (the scheduler
+//! admits queued work eagerly, and each outstanding one-shot ticket is
+//! parked on a waiter thread) — flow control across requests is the
+//! client's job, exactly as with the thread-per-connection v1 protocol.
+//!
+//! The server side maps frames 1:1 onto the coordinator's ticketed API
+//! ([`Server::submit_with`] / [`Server::open_stream`]); each ticket is
+//! resolved on a small waiter thread that forwards the result to the
+//! connection's single writer thread. [`MuxClient`] is the matching
+//! client (used by tests, benches and examples); [`Client`] speaks v1.
+
+use crate::coordinator::batcher::Priority;
+use crate::coordinator::router::{Op, Server, StreamHandle};
+use crate::Result;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{channel, Sender};
+
+/// v2 handshake bytes; the first (`b'L'`) doubles as the version sniff.
+pub const V2_HANDSHAKE: [u8; 4] = *b"LZMX";
+
+/// Hard cap on any single payload (request, chunk or response).
+pub const MAX_PAYLOAD: usize = 256 << 20;
+
+pub const MSG_COMPRESS: u8 = 1;
+pub const MSG_DECOMPRESS: u8 = 2;
+pub const MSG_COMPRESS_INTERACTIVE: u8 = 3;
+pub const MSG_STREAM_OPEN: u8 = 0x10;
+pub const MSG_STREAM_CHUNK: u8 = 0x11;
+pub const MSG_STREAM_FINISH: u8 = 0x12;
+pub const MSG_OK: u8 = 0x80;
+pub const MSG_ERR: u8 = 0x81;
+
+fn write_frame(w: &mut impl Write, typ: u8, req_id: u32, payload: &[u8]) -> Result<()> {
+    w.write_all(&[typ])?;
+    w.write_all(&req_id.to_le_bytes())?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+fn read_frame(r: &mut impl Read) -> Result<Option<(u8, u32, Vec<u8>)>> {
+    let mut hdr = [0u8; 9];
+    match r.read_exact(&mut hdr) {
+        Ok(()) => {}
+        // Clean EOF between frames ends the session.
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let typ = hdr[0];
+    let req_id = u32::from_le_bytes(hdr[1..5].try_into().unwrap());
+    let len = u32::from_le_bytes(hdr[5..9].try_into().unwrap()) as usize;
+    if len > MAX_PAYLOAD {
+        anyhow::bail!("frame too large: {len}");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some((typ, req_id, payload)))
+}
+
+/// Serve one TCP connection, auto-detecting the protocol from its first
+/// byte. Returns when the client disconnects.
+pub fn serve_connection(mut stream: TcpStream, server: &Server) -> Result<()> {
+    let mut first = [0u8; 1];
+    match stream.read_exact(&mut first) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(()),
+        Err(e) => return Err(e.into()),
+    }
+    match first[0] {
+        b if b == V2_HANDSHAKE[0] => {
+            let mut rest = [0u8; 3];
+            stream.read_exact(&mut rest)?;
+            if rest != V2_HANDSHAKE[1..] {
+                anyhow::bail!("bad protocol handshake");
+            }
+            serve_v2(stream, server)
+        }
+        op @ (MSG_COMPRESS | MSG_DECOMPRESS) => serve_v1(stream, server, Some(op)),
+        other => anyhow::bail!("unknown protocol opening byte {other:#04x}"),
+    }
+}
+
+/// The v1 serial loop. `first_op` is the already-consumed op byte of the
+/// first request (protocol sniffing ate it).
+fn serve_v1(mut stream: TcpStream, server: &Server, mut first_op: Option<u8>) -> Result<()> {
+    loop {
+        let op = match first_op.take() {
+            Some(op) => op,
+            None => {
+                let mut b = [0u8; 1];
+                match stream.read_exact(&mut b) {
+                    Ok(()) => b[0],
+                    Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(()),
+                    Err(e) => return Err(e.into()),
+                }
+            }
+        };
+        let mut lenb = [0u8; 4];
+        stream.read_exact(&mut lenb)?;
+        let len = u32::from_le_bytes(lenb) as usize;
+        if len > MAX_PAYLOAD {
+            anyhow::bail!("request too large: {len}");
+        }
+        let mut payload = vec![0u8; len];
+        stream.read_exact(&mut payload)?;
+        let result = match op {
+            MSG_COMPRESS => server.compress(&payload),
+            MSG_DECOMPRESS => server.decompress(&payload),
+            other => Err(anyhow::anyhow!("unknown op {other}")),
+        };
+        match result {
+            Ok(data) => {
+                stream.write_all(&[0u8])?;
+                stream.write_all(&(data.len() as u32).to_le_bytes())?;
+                stream.write_all(&data)?;
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                stream.write_all(&[1u8])?;
+                stream.write_all(&(msg.len() as u32).to_le_bytes())?;
+                stream.write_all(msg.as_bytes())?;
+            }
+        }
+        stream.flush()?;
+    }
+}
+
+/// One connection's response path: completions (from waiter threads) are
+/// serialized by a single writer thread, so interleaved tickets never
+/// corrupt the frame stream.
+type RespSender = Sender<(u32, Result<Vec<u8>>)>;
+
+fn spawn_waiter(resp: &RespSender, req_id: u32, ticket: crate::coordinator::router::Ticket) {
+    let tx = resp.clone();
+    std::thread::spawn(move || {
+        // The connection may be gone by completion time; nothing to do.
+        let _ = tx.send((req_id, ticket.wait()));
+    });
+}
+
+/// The v2 multiplexed loop.
+fn serve_v2(stream: TcpStream, server: &Server) -> Result<()> {
+    let mut reader = stream.try_clone()?;
+    let (resp_tx, resp_rx) = channel::<(u32, Result<Vec<u8>>)>();
+    let writer = std::thread::spawn(move || -> Result<()> {
+        let mut stream = stream;
+        for (req_id, result) in resp_rx {
+            match result {
+                Ok(data) => write_frame(&mut stream, MSG_OK, req_id, &data)?,
+                Err(e) => write_frame(&mut stream, MSG_ERR, req_id, format!("{e:#}").as_bytes())?,
+            }
+        }
+        Ok(())
+    });
+    let served = v2_reader_loop(&mut reader, server, &resp_tx);
+    // EOF (or a read error): open uploads were dropped by the loop (their
+    // Drop aborts the server-side session); let in-flight waiters drain
+    // into the writer, then take the writer down once the last sender is
+    // gone.
+    drop(resp_tx);
+    let write_result = writer.join().unwrap_or_else(|_| Err(anyhow::anyhow!("writer panicked")));
+    served?;
+    write_result
+}
+
+/// The v2 reader half: frames in, tickets + waiter threads out. Returns
+/// on client EOF; open upload sessions are dropped (= aborted) with it.
+fn v2_reader_loop(reader: &mut TcpStream, server: &Server, resp_tx: &RespSender) -> Result<()> {
+    // Open upload sessions by client-chosen request id.
+    let mut streams: HashMap<u32, StreamHandle> = HashMap::new();
+    while let Some((typ, req_id, payload)) = read_frame(reader)? {
+        match typ {
+            MSG_COMPRESS => {
+                spawn_waiter(
+                    resp_tx,
+                    req_id,
+                    server.submit_with(Op::Compress(payload), Priority::Bulk)?,
+                );
+            }
+            MSG_COMPRESS_INTERACTIVE => {
+                spawn_waiter(
+                    resp_tx,
+                    req_id,
+                    server.submit_with(Op::Compress(payload), Priority::Interactive)?,
+                );
+            }
+            MSG_DECOMPRESS => {
+                spawn_waiter(
+                    resp_tx,
+                    req_id,
+                    server.submit_with(Op::Decompress(payload), Priority::Interactive)?,
+                );
+            }
+            MSG_STREAM_OPEN => {
+                if streams.contains_key(&req_id) {
+                    let _ = resp_tx
+                        .send((req_id, Err(anyhow::anyhow!("stream {req_id} already open"))));
+                } else {
+                    streams.insert(req_id, server.open_stream()?);
+                }
+            }
+            MSG_STREAM_CHUNK => match streams.get_mut(&req_id) {
+                Some(handle) => {
+                    if let Err(e) = handle.write_bytes(&payload) {
+                        streams.remove(&req_id);
+                        let _ = resp_tx.send((req_id, Err(e)));
+                    }
+                }
+                None => {
+                    let _ = resp_tx
+                        .send((req_id, Err(anyhow::anyhow!("stream {req_id} is not open"))));
+                }
+            },
+            MSG_STREAM_FINISH => match streams.remove(&req_id) {
+                Some(handle) => spawn_waiter(resp_tx, req_id, handle.finish()?),
+                None => {
+                    let _ = resp_tx
+                        .send((req_id, Err(anyhow::anyhow!("stream {req_id} is not open"))));
+                }
+            },
+            other => {
+                let _ = resp_tx
+                    .send((req_id, Err(anyhow::anyhow!("unknown frame type {other:#04x}"))));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Minimal v1 client (kept for protocol back-compat and as the
+/// auto-detect regression fixture).
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        Ok(Client { stream: TcpStream::connect(addr)? })
+    }
+
+    fn call(&mut self, op: u8, payload: &[u8]) -> Result<Vec<u8>> {
+        self.stream.write_all(&[op])?;
+        self.stream.write_all(&(payload.len() as u32).to_le_bytes())?;
+        self.stream.write_all(payload)?;
+        self.stream.flush()?;
+        let mut hdr = [0u8; 5];
+        self.stream.read_exact(&mut hdr)?;
+        let len = u32::from_le_bytes(hdr[1..5].try_into().unwrap()) as usize;
+        let mut data = vec![0u8; len];
+        self.stream.read_exact(&mut data)?;
+        if hdr[0] != 0 {
+            anyhow::bail!("server error: {}", String::from_utf8_lossy(&data));
+        }
+        Ok(data)
+    }
+
+    pub fn compress(&mut self, data: &[u8]) -> Result<Vec<u8>> {
+        self.call(MSG_COMPRESS, data)
+    }
+
+    pub fn decompress(&mut self, data: &[u8]) -> Result<Vec<u8>> {
+        self.call(MSG_DECOMPRESS, data)
+    }
+}
+
+/// v2 multiplexed client: submit any number of operations, then collect
+/// responses (in completion order) with [`MuxClient::recv`].
+pub struct MuxClient {
+    stream: TcpStream,
+    next_id: u32,
+}
+
+impl MuxClient {
+    pub fn connect(addr: &str) -> Result<MuxClient> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.write_all(&V2_HANDSHAKE)?;
+        stream.flush()?;
+        Ok(MuxClient { stream, next_id: 1 })
+    }
+
+    fn alloc_id(&mut self) -> u32 {
+        let id = self.next_id;
+        self.next_id = self.next_id.wrapping_add(1).max(1);
+        id
+    }
+
+    fn send(&mut self, typ: u8, req_id: u32, payload: &[u8]) -> Result<()> {
+        write_frame(&mut self.stream, typ, req_id, payload)
+    }
+
+    /// Submit a bulk compress; returns the request id to match in
+    /// [`Self::recv`].
+    pub fn submit_compress(&mut self, data: &[u8]) -> Result<u32> {
+        let id = self.alloc_id();
+        self.send(MSG_COMPRESS, id, data)?;
+        Ok(id)
+    }
+
+    /// Submit an interactive-priority compress.
+    pub fn submit_compress_interactive(&mut self, data: &[u8]) -> Result<u32> {
+        let id = self.alloc_id();
+        self.send(MSG_COMPRESS_INTERACTIVE, id, data)?;
+        Ok(id)
+    }
+
+    /// Submit a decompress.
+    pub fn submit_decompress(&mut self, data: &[u8]) -> Result<u32> {
+        let id = self.alloc_id();
+        self.send(MSG_DECOMPRESS, id, data)?;
+        Ok(id)
+    }
+
+    /// Open a chunked-upload compression stream; feed it with
+    /// [`Self::stream_chunk`] and seal it with [`Self::stream_finish`]
+    /// (the response to the returned id is the finished container).
+    pub fn open_stream(&mut self) -> Result<u32> {
+        let id = self.alloc_id();
+        self.send(MSG_STREAM_OPEN, id, &[])?;
+        Ok(id)
+    }
+
+    /// Upload one piece of a stream's input (any size; the server re-cuts
+    /// at its engine granularity).
+    pub fn stream_chunk(&mut self, id: u32, data: &[u8]) -> Result<()> {
+        self.send(MSG_STREAM_CHUNK, id, data)
+    }
+
+    pub fn stream_finish(&mut self, id: u32) -> Result<()> {
+        self.send(MSG_STREAM_FINISH, id, &[])
+    }
+
+    /// Receive the next response frame: `(request id, result)`. Responses
+    /// arrive in completion order — the caller matches ids.
+    pub fn recv(&mut self) -> Result<(u32, Result<Vec<u8>>)> {
+        let Some((typ, req_id, payload)) = read_frame(&mut self.stream)? else {
+            anyhow::bail!("server closed the connection");
+        };
+        match typ {
+            MSG_OK => Ok((req_id, Ok(payload))),
+            MSG_ERR => Ok((
+                req_id,
+                Err(anyhow::anyhow!("server error: {}", String::from_utf8_lossy(&payload))),
+            )),
+            other => anyhow::bail!("unexpected response frame type {other:#04x}"),
+        }
+    }
+}

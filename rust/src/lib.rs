@@ -13,8 +13,12 @@
 //!
 //! The public entry points are [`compress::Compressor`] (the trait every
 //! compressor in the paper's Table 5 implements), [`compress::LlmCompressor`]
-//! (the paper's contribution), and [`coordinator::Server`] (the batched
-//! compression service).
+//! (the paper's contribution), its streaming faces
+//! [`compress::stream::CompressWriter`] / [`compress::stream::DecompressReader`]
+//! (incremental `std::io` sessions, byte-identical to the one-shot calls),
+//! and [`coordinator::Server`] (the batched compression service: ticketed
+//! async submits, incremental streams, and a multiplexed TCP protocol in
+//! [`coordinator::wire`]).
 //!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record of every table and figure.

@@ -63,7 +63,7 @@ use crate::lm::config::{LmConfig, MAX_CONTEXT, VOCAB};
 use crate::lm::weights::{ResolvedPlan, TensorView, Weights};
 use crate::Result;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -718,20 +718,38 @@ struct StealShared {
     queue: Mutex<VecDeque<StealTask>>,
     available: Condvar,
     shutdown: AtomicBool,
+    /// Desired live worker-thread count. [`StepPool::resize`] moves it at
+    /// runtime; surplus workers retire at their next wakeup, BETWEEN
+    /// tasks — a mid-span retirement could wedge a step barrier.
+    target: AtomicUsize,
+    /// Worker threads currently alive (retired threads decrement on exit).
+    alive: AtomicUsize,
 }
 
 /// A work-stealing step pool shared by any number of [`NativeExecutor`]
 /// replicas (attach with [`NativeExecutor::with_shared_pool`]).
 ///
-/// `threads` long-lived OS threads service one global injector queue of
-/// lane-span tasks. Replicas are expected to be homogeneous (same
-/// [`LmConfig`]); a heterogeneous pool still computes correctly but
-/// re-allocates per-thread scratch when configs alternate. A zero-thread
-/// pool is valid: every step is then executed entirely by its caller
-/// (useful for tests and as the degenerate sizing).
+/// Long-lived OS threads service one global injector queue of lane-span
+/// tasks. Replicas are expected to be homogeneous (same [`LmConfig`]); a
+/// heterogeneous pool still computes correctly but re-allocates per-thread
+/// scratch when configs alternate. A zero-thread pool is valid: every
+/// step is then executed entirely by its caller (useful for tests and as
+/// the degenerate sizing).
+///
+/// The thread count is **elastic**: [`StepPool::resize`] grows or shrinks
+/// the worker set at runtime, so an autoscaling coordinator can keep the
+/// step-thread budget proportional to its live replica gauge instead of
+/// provisioning for `max_replicas` up front. Sizing is a pure execution
+/// knob — spans are lane-disjoint and per-lane arithmetic is fixed, so the
+/// logits (and therefore the container bytes) are bit-identical for every
+/// pool size and every resize schedule.
 pub struct StepPool {
     shared: Arc<StealShared>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Handles of every thread ever spawned; joined at drop (retired
+    /// threads have already exited — their join is immediate).
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Monotonic name counter for spawned workers.
+    next_worker: AtomicUsize,
 }
 
 impl StepPool {
@@ -741,21 +759,74 @@ impl StepPool {
             queue: Mutex::new(VecDeque::new()),
             available: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            target: AtomicUsize::new(threads),
+            alive: AtomicUsize::new(0),
         });
-        let handles = (0..threads)
-            .map(|i| {
-                let sh = shared.clone();
-                std::thread::Builder::new()
-                    .name(format!("llmzip-steal-{i}"))
-                    .spawn(move || steal_worker_main(sh))
-                    .expect("spawning steal worker")
-            })
-            .collect();
-        Arc::new(StepPool { shared, handles })
+        let pool =
+            StepPool { shared, handles: Mutex::new(Vec::new()), next_worker: AtomicUsize::new(0) };
+        pool.spawn_to_target();
+        Arc::new(pool)
     }
 
+    /// Live worker-thread target (the sizing callers see; also the span
+    /// fan-out hint for [`NativeExecutor`] steps).
     pub fn threads(&self) -> usize {
-        self.handles.len()
+        self.shared.target.load(Ordering::SeqCst)
+    }
+
+    /// Retarget the pool to `threads` workers. Growth spawns immediately;
+    /// shrink retires surplus workers at their next wakeup (never mid
+    /// span). Safe to call concurrently with active steps from any number
+    /// of replicas: sizing cannot change the bytes, only the parallelism.
+    pub fn resize(&self, threads: usize) {
+        self.shared.target.store(threads, Ordering::SeqCst);
+        // Reap threads retired by earlier shrinks, so a long-lived server
+        // flapping between sizes doesn't accumulate unjoined handles (an
+        // exited-but-unjoined pthread keeps its stack mapping alive).
+        self.reap_finished();
+        self.spawn_to_target();
+        // Wake sleepers so surplus workers notice the lower target.
+        self.shared.available.notify_all();
+    }
+
+    /// Join (and drop) the handles of workers that have already exited.
+    fn reap_finished(&self) {
+        let mut handles = self.handles.lock().unwrap();
+        let mut i = 0;
+        while i < handles.len() {
+            if handles[i].is_finished() {
+                let _ = handles.swap_remove(i).join();
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Spawn workers until `alive` meets the target (CAS-claimed so
+    /// concurrent resizes never over-spawn).
+    fn spawn_to_target(&self) {
+        loop {
+            let target = self.shared.target.load(Ordering::SeqCst);
+            let alive = self.shared.alive.load(Ordering::SeqCst);
+            if alive >= target || self.shared.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            if self
+                .shared
+                .alive
+                .compare_exchange(alive, alive + 1, Ordering::SeqCst, Ordering::SeqCst)
+                .is_err()
+            {
+                continue;
+            }
+            let sh = self.shared.clone();
+            let id = self.next_worker.fetch_add(1, Ordering::Relaxed);
+            let handle = std::thread::Builder::new()
+                .name(format!("llmzip-steal-{id}"))
+                .spawn(move || steal_worker_main(sh))
+                .expect("spawning steal worker");
+            self.handles.lock().unwrap().push(handle);
+        }
     }
 
     fn push_tasks(&self, tasks: Vec<StealTask>) {
@@ -783,7 +854,7 @@ impl Drop for StepPool {
         // no step can be in flight: the queue is empty of live tasks.
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.available.notify_all();
-        for h in self.handles.drain(..) {
+        for h in self.handles.lock().unwrap().drain(..) {
             let _ = h.join();
         }
     }
@@ -792,7 +863,9 @@ impl Drop for StepPool {
 /// A pool thread: block on the injector, run spans from ANY attached
 /// executor. One cached scratch arena, rebuilt only when a span needs a
 /// different model config or a wider capacity (steady state with
-/// homogeneous replicas allocates nothing).
+/// homogeneous replicas allocates nothing). Exits when the pool shuts
+/// down or a [`StepPool::resize`] lowered the target below the live
+/// count — always between tasks, never inside one.
 fn steal_worker_main(shared: Arc<StealShared>) {
     let mut scratch: Option<(usize, Scratch)> = None;
     loop {
@@ -800,6 +873,19 @@ fn steal_worker_main(shared: Arc<StealShared>) {
             let mut q = shared.queue.lock().unwrap();
             loop {
                 if shared.shutdown.load(Ordering::SeqCst) {
+                    shared.alive.fetch_sub(1, Ordering::SeqCst);
+                    return;
+                }
+                // Elastic shrink: retire if we are surplus. The CAS makes
+                // exactly (alive - target) workers retire, even when many
+                // wake at once.
+                let alive = shared.alive.load(Ordering::SeqCst);
+                if alive > shared.target.load(Ordering::SeqCst)
+                    && shared
+                        .alive
+                        .compare_exchange(alive, alive - 1, Ordering::SeqCst, Ordering::SeqCst)
+                        .is_ok()
+                {
                     return;
                 }
                 if let Some(t) = q.pop_front() {
@@ -1463,6 +1549,34 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn shared_pool_resize_is_invisible_in_the_logits() {
+        // Elastic sizing mid-stream: grow and shrink the pool between
+        // (and across) steps; every logit must stay identical to the
+        // single-threaded reference. Shrinking to zero is valid — the
+        // stepping caller then runs every span itself.
+        let cfg = by_name("nano").unwrap();
+        let w = std::sync::Arc::new(Weights::random(cfg, 45));
+        let mut baseline = NativeExecutor::new(cfg, w.clone(), 5);
+        let pool = StepPool::new(1);
+        let mut ex = NativeExecutor::new(cfg, w, 5).with_shared_pool(pool.clone());
+        let sizes = [1usize, 4, 0, 2, 0, 3];
+        for (step, &size) in sizes.iter().enumerate() {
+            pool.resize(size);
+            assert_eq!(pool.threads(), size);
+            let toks: Vec<u32> = (0..5).map(|l| ((l * 43 + step * 13) % 256) as u32).collect();
+            assert_eq!(
+                baseline.step(&toks).unwrap(),
+                ex.step(&toks).unwrap(),
+                "step {step} at pool size {size}"
+            );
+        }
+        // Idempotent + monotone retargeting settles cleanly.
+        pool.resize(2);
+        pool.resize(2);
+        assert_eq!(pool.threads(), 2);
     }
 
     #[test]

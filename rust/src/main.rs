@@ -67,16 +67,18 @@ DATA
   gen-corpus  --out DIR [--bytes N] [--seed N]     write the procedural training corpora
   gen-data    --out DIR [--bytes N] [--model M]    sample the LLM-generated datasets
 
-COMPRESSION
-  compress    --model M --in FILE --out FILE [--chunk N] [--executor pjrt|native]
+COMPRESSION (streaming: bounded memory; `-` means stdin/stdout)
+  compress    --model M --in FILE|- --out FILE|- [--chunk N] [--executor pjrt|native]
               [--precision f32|int8]               int8 = quantized native weights
-  decompress  --model M --in FILE --out FILE [--executor pjrt|native] [--precision P]
+  decompress  --model M --in FILE|- --out FILE|- [--executor pjrt|native] [--precision P]
   ratio       --model M --in FILE [--chunk N]      report the compression ratio
 
 SERVICE
   serve       --model M [--port P] [--replicas N] [--min-replicas A --max-replicas B]
               [--precision f32|int8] [--no-steal]  batched compression server
-                                                   (a min/max range autoscales the pool)
+                                                   (a min/max range autoscales the pool;
+                                                   speaks the multiplexed v2 protocol
+                                                   with v1 auto-detected per connection)
 
 EXPERIMENTS (regenerate the paper's tables and figures)
   table2 | table3 | table5 | fig2 | fig5 | fig6 | fig7 | fig8 | fig9 | chunk-sweep

@@ -26,8 +26,42 @@ fn table() -> &'static [[u32; 256]; 8] {
 
 /// Compute the CRC-32 of `data` (slicing-by-8).
 pub fn crc32(data: &[u8]) -> u32 {
+    !update_state(!0u32, data)
+}
+
+/// Streaming CRC-32: feed bytes in any number of [`Crc32::update`] calls;
+/// [`Crc32::finalize`] equals [`crc32`] over the concatenation. Used by the
+/// incremental compression paths, which never hold the whole input.
+#[derive(Clone, Copy, Debug)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Crc32::new()
+    }
+}
+
+impl Crc32 {
+    pub fn new() -> Crc32 {
+        Crc32 { state: !0u32 }
+    }
+
+    pub fn update(&mut self, data: &[u8]) {
+        self.state = update_state(self.state, data);
+    }
+
+    /// Final CRC value; the accumulator stays usable (more updates extend
+    /// the stream).
+    pub fn finalize(&self) -> u32 {
+        !self.state
+    }
+}
+
+/// Advance the raw (pre-inversion) CRC state over `data` (slicing-by-8).
+fn update_state(mut crc: u32, data: &[u8]) -> u32 {
     let t = table();
-    let mut crc = !0u32;
     let mut chunks = data.chunks_exact(8);
     for c in &mut chunks {
         let lo = u32::from_le_bytes(c[0..4].try_into().unwrap()) ^ crc;
@@ -44,7 +78,7 @@ pub fn crc32(data: &[u8]) -> u32 {
     for &b in chunks.remainder() {
         crc = (crc >> 8) ^ t[0][((crc ^ b as u32) & 0xFF) as usize];
     }
-    !crc
+    crc
 }
 
 #[cfg(test)]
@@ -77,5 +111,25 @@ mod tests {
             };
             assert_eq!(crc32(&data[..len]), reference, "len={len}");
         }
+    }
+
+    #[test]
+    fn streaming_matches_one_shot_for_any_split() {
+        let data: Vec<u8> = (0..255u8).cycle().take(1000).collect();
+        let want = crc32(&data);
+        for split in [0usize, 1, 7, 8, 9, 500, 999, 1000] {
+            let mut c = Crc32::new();
+            c.update(&data[..split]);
+            c.update(&[]);
+            c.update(&data[split..]);
+            assert_eq!(c.finalize(), want, "split={split}");
+        }
+        // Many tiny updates.
+        let mut c = Crc32::new();
+        for b in &data {
+            c.update(std::slice::from_ref(b));
+        }
+        assert_eq!(c.finalize(), want);
+        assert_eq!(Crc32::new().finalize(), crc32(b""));
     }
 }

@@ -4,7 +4,7 @@ pub mod crc32;
 pub mod rng;
 pub mod stats;
 
-pub use crc32::crc32;
+pub use crc32::{crc32, Crc32};
 pub use rng::Pcg64;
 
 /// Integer log2 (floor). `msb(1) == 0`, `msb(255) == 7`.

@@ -1,10 +1,12 @@
 //! Hand-rolled property/fuzz tests: every baseline must round-trip every
 //! input family at every size, and reject mutated containers rather than
 //! return wrong data silently. Plus a seeded property suite over the
-//! structured parsers — [`llmzip::compress::ContainerTag`] and the `.lmz`
-//! v1/v2 weight format — where arbitrary truncations, flipped dtype bytes
-//! and corrupt scale tables must yield clear errors: never a panic, never
-//! a silently mis-parsed bundle.
+//! structured parsers — [`llmzip::compress::ContainerTag`], the `.lmz`
+//! v1/v2 weight format, and BOTH `.llmz` container layouts (the legacy
+//! table-first v1 and the framed+seekable v2) — where arbitrary
+//! truncations (including every frame boundary), flipped dtype/flag
+//! bytes, corrupt trailers/indexes and random mutations must yield clear
+//! errors: never a panic, never a silently mis-parsed archive.
 
 use llmzip::compress::registry::all_baselines;
 use llmzip::compress::{Container, ContainerTag};
@@ -267,22 +269,27 @@ fn lmz_v1_v2_to_bytes_from_bytes_roundtrip_property() {
     }
 }
 
+/// The shared container fixture for the format property tests.
+fn fixture_container() -> Container {
+    Container::v1(
+        10,
+        0x1234_5678,
+        64,
+        "nano:0".into(),
+        vec![
+            llmzip::compress::ChunkRecord { comp_len: 4, n_tokens: 6 },
+            llmzip::compress::ChunkRecord { comp_len: 3, n_tokens: 4 },
+        ],
+        vec![9, 8, 7, 6, 5, 4, 3],
+    )
+}
+
 #[test]
 fn container_truncations_and_chunk_table_lies_always_error() {
     // The outer .llmz container gets the same treatment: every prefix
     // errors, and a chunk table that disagrees with the payload (or the
     // recorded length) is refused structurally.
-    let c = Container {
-        orig_len: 10,
-        orig_crc32: 0x1234_5678,
-        chunk_tokens: 64,
-        model_name: "nano:0".into(),
-        chunks: vec![
-            llmzip::compress::ChunkRecord { comp_len: 4, n_tokens: 6 },
-            llmzip::compress::ChunkRecord { comp_len: 3, n_tokens: 4 },
-        ],
-        payload: vec![9, 8, 7, 6, 5, 4, 3],
-    };
+    let c = fixture_container();
     let bytes = c.to_bytes();
     assert_eq!(Container::from_bytes(&bytes).unwrap().payload, c.payload);
     for cut in 0..bytes.len() {
@@ -306,6 +313,103 @@ fn container_truncations_and_chunk_table_lies_always_error() {
             assert_eq!(parsed.to_bytes().len(), m.len());
         }
     }
+}
+
+#[test]
+fn container_v2_truncations_and_frame_corruptions_always_error() {
+    // The framed v2 layout: EVERY proper prefix errors (that covers
+    // truncation at every frame boundary, mid-frame, mid-index and mid-
+    // trailer), a frame header that disagrees with the trailer index is
+    // refused by name, and random mutations never panic — an accepted
+    // mutation must re-serialize to the same framing.
+    let mut c = fixture_container();
+    c.version = llmzip::compress::CONTAINER_V2;
+    c.flags = llmzip::compress::container::FLAG_SEEKABLE;
+    let bytes = c.to_bytes();
+    let parsed = Container::from_bytes(&bytes).unwrap();
+    assert_eq!(parsed.payload, c.payload);
+    assert_eq!(parsed.to_bytes(), bytes, "v2 parse -> re-encode is the identity");
+    for cut in 0..bytes.len() {
+        assert!(Container::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+    }
+    // Trailing garbage is structural corruption, not slack.
+    let mut noisy = bytes.clone();
+    noisy.extend_from_slice(&[0, 0, 0]);
+    assert!(Container::from_bytes(&noisy).is_err());
+    // Every single-byte flip anywhere in the container: never a panic,
+    // and an Ok parse must preserve the framing exactly. (The v2 fixture
+    // is small enough to sweep exhaustively over all bit positions.)
+    for at in 0..bytes.len() {
+        for bit in 0..8 {
+            let mut m = bytes.clone();
+            m[at] ^= 1 << bit;
+            if let Ok(parsed) = Container::from_bytes(&m) {
+                assert_eq!(parsed.to_bytes().len(), m.len(), "at={at} bit={bit}");
+            }
+        }
+    }
+}
+
+#[test]
+fn container_flag_bits_round_trip_and_unknown_bits_are_refused() {
+    // Satellite regression: `to_bytes` used to hardcode flags to 0 and
+    // `from_bytes` never looked. Now the field round-trips, and any bit
+    // this release does not define is a refusal — the forward-compat
+    // guard that made the v2 introduction safe.
+    let v1 = fixture_container().to_bytes();
+    let mut v2 = fixture_container();
+    v2.version = llmzip::compress::CONTAINER_V2;
+    v2.flags = llmzip::compress::container::FLAG_SEEKABLE;
+    let v2 = v2.to_bytes();
+    assert_eq!(Container::from_bytes(&v1).unwrap().flags, 0);
+    assert_eq!(
+        Container::from_bytes(&v2).unwrap().flags,
+        llmzip::compress::container::FLAG_SEEKABLE
+    );
+    // Flags live at byte offset 6 in both layouts.
+    for unknown in [0x0001u16, 0x0002, 0x8000, 0xFFFF] {
+        let mut m = v1.clone();
+        m[6..8].copy_from_slice(&unknown.to_le_bytes());
+        let err = Container::from_bytes(&m).unwrap_err().to_string();
+        assert!(err.contains("flag"), "v1 {unknown:#06x}: {err}");
+    }
+    for unknown in [0x0003u16, 0x8001, 0xFFFF] {
+        let mut m = v2.clone();
+        m[6..8].copy_from_slice(&unknown.to_le_bytes());
+        let err = Container::from_bytes(&m).unwrap_err().to_string();
+        assert!(err.contains("flag"), "v2 {unknown:#06x}: {err}");
+    }
+    // An unknown future VERSION is refused by name too.
+    let mut m = v1.clone();
+    m[4] = 9;
+    let err = Container::from_bytes(&m).unwrap_err().to_string();
+    assert!(err.contains("version"), "{err}");
+}
+
+#[test]
+fn container_v1_fixture_bytes_still_parse() {
+    // A byte-for-byte v1 fixture (the exact layout every pre-v2 release
+    // wrote, assembled by hand so no current code path can contaminate
+    // it) must keep parsing and re-encode to itself.
+    let mut fixture: Vec<u8> = Vec::new();
+    fixture.extend_from_slice(&0x3150_5A4Cu32.to_le_bytes()); // "LZP1"
+    fixture.extend_from_slice(&1u16.to_le_bytes()); // version
+    fixture.extend_from_slice(&0u16.to_le_bytes()); // flags
+    fixture.extend_from_slice(&5u64.to_le_bytes()); // orig_len
+    fixture.extend_from_slice(&0xAABB_CCDDu32.to_le_bytes()); // crc
+    fixture.extend_from_slice(&64u32.to_le_bytes()); // chunk_tokens
+    fixture.push(6); // name len
+    fixture.extend_from_slice(b"nano:0");
+    fixture.extend_from_slice(&1u32.to_le_bytes()); // n_chunks
+    fixture.extend_from_slice(&3u32.to_le_bytes()); // comp_len
+    fixture.extend_from_slice(&5u32.to_le_bytes()); // n_tokens
+    fixture.extend_from_slice(&[0xDE, 0xAD, 0xBF]); // payload
+    let c = Container::from_bytes(&fixture).unwrap();
+    assert_eq!(c.version, llmzip::compress::CONTAINER_V1);
+    assert_eq!(c.orig_len, 5);
+    assert_eq!(c.model_name, "nano:0");
+    assert_eq!(c.payload, vec![0xDE, 0xAD, 0xBF]);
+    assert_eq!(c.to_bytes(), fixture, "v1 fixture re-encodes byte-exactly");
 }
 
 #[test]

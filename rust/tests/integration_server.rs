@@ -3,7 +3,8 @@
 //! across pool configurations, and the TCP wire protocol.
 
 use llmzip::compress::{Compressor, LlmCompressor, LlmCompressorConfig};
-use llmzip::coordinator::{BatchPolicy, Server, ServerConfig, WorkKind};
+use llmzip::coordinator::wire::{serve_connection, Client, MuxClient};
+use llmzip::coordinator::{BatchPolicy, Op, Server, ServerConfig, WorkKind};
 use llmzip::lm::config::by_name;
 use llmzip::lm::weights::Weights;
 use llmzip::lm::ExecutorKind;
@@ -133,14 +134,14 @@ fn legacy_empty_container_exemption_survives_autoscaled_pool() {
     // no scale state can break it.
     let weights = Arc::new(Weights::random(by_name("nano").unwrap(), 99));
     let server = autoscale_server(weights);
-    let legacy = llmzip::compress::Container {
-        orig_len: 0,
-        orig_crc32: llmzip::util::crc32(b""),
-        chunk_tokens: 64,
-        model_name: String::new(),
-        chunks: vec![],
-        payload: vec![],
-    }
+    let legacy = llmzip::compress::Container::v1(
+        0,
+        llmzip::util::crc32(b""),
+        64,
+        String::new(),
+        vec![],
+        vec![],
+    )
     .to_bytes();
     assert_eq!(server.decompress(&legacy).unwrap(), b"");
     // And a server-produced empty container still carries the real tag.
@@ -346,6 +347,135 @@ fn int8_server_rejects_foreign_fingerprint_with_clear_error_not_crc() {
 }
 
 #[test]
+fn streamed_and_ticketed_containers_match_the_direct_path() {
+    // The streaming session and the async ticket API are new FACES, not
+    // new formats: both must produce the exact bytes of the direct
+    // reference-pinned compressor.
+    let cfg = by_name("nano").unwrap();
+    let weights = Arc::new(Weights::random(cfg, 99));
+    let server = replica_server(2, 1, weights.clone());
+    let direct = LlmCompressor::from_weights(cfg, weights, 64, 4).unwrap();
+    let data = llmzip::textgen::quick_sample(1500, 12);
+    let golden = direct.compress(&data).unwrap();
+    // Ticketed one-shot.
+    let ticket = server.submit(Op::Compress(data.clone())).unwrap();
+    assert_eq!(ticket.wait().unwrap(), golden);
+    // Streaming session, fed in awkward pieces.
+    let mut stream = server.open_stream().unwrap();
+    for piece in data.chunks(97) {
+        stream.write_bytes(piece).unwrap();
+    }
+    let z = stream.finish().unwrap().wait().unwrap();
+    assert_eq!(z, golden, "streamed bytes must equal the direct path");
+    assert_eq!(direct.decompress(&z).unwrap(), data);
+    // And the server's own incremental reader path agrees end-to-end.
+    use std::io::Read as _;
+    let mut back = Vec::new();
+    direct.stream_decompress(&z[..]).unwrap().read_to_end(&mut back).unwrap();
+    assert_eq!(back, data);
+}
+
+#[test]
+fn server_decodes_v1_containers_byte_exactly() {
+    // Old archives: the server accepts the legacy table-first layout
+    // (same bitstream, older envelope) through the same admit path.
+    let cfg = by_name("nano").unwrap();
+    let weights = Arc::new(Weights::random(cfg, 99));
+    let server = replica_server(1, 1, weights);
+    let data = llmzip::textgen::quick_sample(900, 13);
+    let mut cont =
+        llmzip::compress::Container::from_bytes(&server.compress(&data).unwrap()).unwrap();
+    assert_eq!(cont.version, llmzip::compress::CONTAINER_V2);
+    cont.version = llmzip::compress::CONTAINER_V1;
+    cont.flags = 0;
+    assert_eq!(server.decompress(&cont.to_bytes()).unwrap(), data);
+}
+
+/// Spin a real TCP acceptor over `server` and return its address.
+fn spawn_listener(server: Arc<Server>) -> String {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        while let Ok((stream, _)) = listener.accept() {
+            let srv = server.clone();
+            std::thread::spawn(move || {
+                let _ = serve_connection(stream, &srv);
+            });
+        }
+    });
+    addr
+}
+
+#[test]
+fn wire_v2_multiplexes_interleaved_requests_and_streams_on_one_connection() {
+    let cfg = by_name("nano").unwrap();
+    let weights = Arc::new(Weights::random(cfg, 99));
+    let server = Arc::new(replica_server(2, 1, weights.clone()));
+    let direct = LlmCompressor::from_weights(cfg, weights, 64, 4).unwrap();
+    let addr = spawn_listener(server);
+
+    let a = llmzip::textgen::quick_sample(800, 21);
+    let b = llmzip::textgen::quick_sample(500, 22);
+    let c = llmzip::textgen::quick_sample(300, 23);
+    let (za, zb, zc) =
+        (direct.compress(&a).unwrap(), direct.compress(&b).unwrap(), direct.compress(&c).unwrap());
+
+    let mut client = MuxClient::connect(&addr).unwrap();
+    // Interleave: two compresses, a decompress, and a chunked stream
+    // upload — all in flight on ONE connection before any response is
+    // read.
+    let id_a = client.submit_compress(&a).unwrap();
+    let id_stream = client.open_stream().unwrap();
+    let id_b = client.submit_compress_interactive(&b).unwrap();
+    for piece in c.chunks(131) {
+        client.stream_chunk(id_stream, piece).unwrap();
+    }
+    let id_dec = client.submit_decompress(&za).unwrap();
+    client.stream_finish(id_stream).unwrap();
+
+    let mut results: std::collections::HashMap<u32, Vec<u8>> = std::collections::HashMap::new();
+    for _ in 0..4 {
+        let (id, result) = client.recv().unwrap();
+        results.insert(id, result.unwrap());
+    }
+    assert_eq!(results[&id_a], za, "mux compress bytes match the direct path");
+    assert_eq!(results[&id_b], zb, "interactive priority must not change the bytes");
+    assert_eq!(results[&id_dec], a, "mux decompress returns the original");
+    assert_eq!(results[&id_stream], zc, "chunked upload equals one-shot bytes");
+
+    // Errors come back as tagged frames, and the connection survives them.
+    let bad = client.submit_decompress(b"not a container").unwrap();
+    let (id, result) = client.recv().unwrap();
+    assert_eq!(id, bad);
+    assert!(result.is_err());
+    let ok = client.submit_compress(&b).unwrap();
+    let (id, result) = client.recv().unwrap();
+    assert_eq!(id, ok);
+    assert_eq!(result.unwrap(), zb);
+}
+
+#[test]
+fn wire_v1_clients_still_speak_through_the_autodetect() {
+    let cfg = by_name("nano").unwrap();
+    let weights = Arc::new(Weights::random(cfg, 99));
+    let server = Arc::new(replica_server(1, 1, weights));
+    let addr = spawn_listener(server);
+    let data = llmzip::textgen::quick_sample(600, 31);
+    let mut client = Client::connect(&addr).unwrap();
+    let z = client.compress(&data).unwrap();
+    assert_eq!(client.decompress(&z).unwrap(), data);
+    // Several requests on the same persistent v1 connection.
+    let z2 = client.compress(&data).unwrap();
+    assert_eq!(z2, z);
+    // And a v2 client on a fresh connection to the same listener.
+    let mut mux = MuxClient::connect(&addr).unwrap();
+    let id = mux.submit_compress(&data).unwrap();
+    let (rid, result) = mux.recv().unwrap();
+    assert_eq!(rid, id);
+    assert_eq!(result.unwrap(), z);
+}
+
+#[test]
 fn int8_server_mixed_sizes_and_legacy_empty_exemption() {
     // Quantized servers serve the same edge cases as f32 ones, and the
     // legacy `model_name: ""` empty-container exemption is
@@ -356,14 +486,14 @@ fn int8_server_mixed_sizes_and_legacy_empty_exemption() {
         let z = server.compress(&data).unwrap();
         assert_eq!(server.decompress(&z).unwrap(), data, "n={n}");
     }
-    let legacy = llmzip::compress::Container {
-        orig_len: 0,
-        orig_crc32: llmzip::util::crc32(b""),
-        chunk_tokens: 64,
-        model_name: String::new(),
-        chunks: vec![],
-        payload: vec![],
-    }
+    let legacy = llmzip::compress::Container::v1(
+        0,
+        llmzip::util::crc32(b""),
+        64,
+        String::new(),
+        vec![],
+        vec![],
+    )
     .to_bytes();
     assert_eq!(server.decompress(&legacy).unwrap(), b"");
 }

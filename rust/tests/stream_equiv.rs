@@ -1,0 +1,231 @@
+//! Property suite for the streaming session API (PR 5 acceptance bar).
+//!
+//! * **Write-split invariance:** a [`CompressWriter`] fed the input at
+//!   RANDOM split points — 1-byte writes, chunk-straddling writes, empty
+//!   writes — emits a container byte-identical to the one-shot
+//!   `compress()` of the same bytes, across every textgen domain, in f32
+//!   AND int8. The one-shot path is itself pinned bit-for-bit to the
+//!   frozen `lm/reference` implementation by `tests/golden_logits.rs`, so
+//!   this transitively pins the streaming path to the golden bitstream.
+//! * **Read-split invariance:** a [`DecompressReader`] drained at random
+//!   read sizes reproduces the original bytes and verifies the CRC, for
+//!   both container versions.
+//! * **Random access:** `decompress_range(offset, len)` equals the same
+//!   slice of the full decode for arbitrary ranges, and `decode_chunk(i)`
+//!   equals the corresponding full-decode window — no whole-archive
+//!   decoding anywhere.
+
+use llmzip::compress::{Compressor, Container, LlmCompressor, LlmCompressorConfig};
+use llmzip::lm::config::by_name;
+use llmzip::lm::weights::{Precision, Weights};
+use llmzip::lm::ExecutorKind;
+use llmzip::textgen::Domain;
+use llmzip::util::Pcg64;
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+const CHUNK: usize = 32;
+const STREAM: usize = 128;
+
+fn compressor(precision: Precision) -> LlmCompressor {
+    let cfg = by_name("nano").unwrap();
+    let weights = Weights::random(cfg, 7);
+    let weights = match precision {
+        Precision::F32 => weights,
+        Precision::Int8 => weights.quantize(),
+    };
+    LlmCompressor::from_shared(
+        cfg,
+        Arc::new(weights),
+        LlmCompressorConfig {
+            model: cfg.name.into(),
+            chunk_tokens: CHUNK,
+            stream_bytes: STREAM,
+            executor: ExecutorKind::Native,
+            lanes: 2,
+            threads: 1,
+            precision,
+        },
+    )
+    .unwrap()
+}
+
+/// Cut `0..len` into random segments, seasoned with empty writes and
+/// exact-boundary / straddling cuts.
+fn random_splits(rng: &mut Pcg64, len: usize) -> Vec<usize> {
+    let mut splits = Vec::new();
+    let mut remaining = len;
+    while remaining > 0 {
+        let s = match rng.gen_index(6) {
+            0 => 1,                              // byte-at-a-time
+            1 => 0,                              // empty write
+            2 => STREAM.min(remaining),          // exactly one chunk
+            3 => (STREAM + 1).min(remaining),    // chunk-straddling
+            _ => 1 + rng.gen_index(remaining.min(513)),
+        };
+        let s = s.min(remaining);
+        splits.push(s);
+        remaining -= s;
+    }
+    if rng.gen_bool(0.5) {
+        splits.push(0); // trailing empty write
+    }
+    splits
+}
+
+fn stream_compress_with_splits(c: &LlmCompressor, data: &[u8], splits: &[usize]) -> Vec<u8> {
+    let mut w = c.stream_compress(Vec::new()).unwrap();
+    let mut off = 0;
+    for &s in splits {
+        // Exercise the std::io::Write face (what io::copy drives).
+        w.write_all(&data[off..off + s]).unwrap();
+        off += s;
+    }
+    assert_eq!(off, data.len());
+    let (out, summary) = w.finish().unwrap();
+    assert_eq!(summary.bytes_in, data.len() as u64);
+    assert_eq!(summary.bytes_out, out.len() as u64);
+    assert_eq!(summary.chunks, data.len().div_ceil(STREAM));
+    out
+}
+
+#[test]
+fn compress_writer_is_split_invariant_across_domains_f32_and_int8() {
+    for precision in [Precision::F32, Precision::Int8] {
+        let c = compressor(precision);
+        let mut rng = Pcg64::seeded(0xC0FFEE + precision as u64);
+        for (d, domain) in Domain::EVAL.iter().enumerate() {
+            let size = 300 + rng.gen_index(700);
+            let data = llmzip::textgen::generate(*domain, size, 40 + d as u64);
+            let golden = c.compress(&data).unwrap();
+            for round in 0..3 {
+                let splits = random_splits(&mut rng, data.len());
+                let z = stream_compress_with_splits(&c, &data, &splits);
+                assert_eq!(
+                    z, golden,
+                    "{precision:?} {domain:?} round {round}: streamed bytes diverged \
+                     (splits {splits:?})"
+                );
+            }
+        }
+        // Degenerate inputs: empty, one byte, exactly one chunk, exactly
+        // two chunks.
+        for data in [vec![], vec![65u8], vec![66u8; STREAM], vec![67u8; 2 * STREAM]] {
+            let golden = c.compress(&data).unwrap();
+            let splits: Vec<usize> = data.iter().map(|_| 1).collect();
+            assert_eq!(stream_compress_with_splits(&c, &data, &splits), golden);
+        }
+    }
+}
+
+#[test]
+fn decompress_reader_is_read_split_invariant_and_verifies() {
+    for precision in [Precision::F32, Precision::Int8] {
+        let c = compressor(precision);
+        let mut rng = Pcg64::seeded(0xBEEF + precision as u64);
+        let data = llmzip::textgen::quick_sample(900, 50);
+        let v2 = c.compress(&data).unwrap();
+        let v1 = {
+            let mut cont = Container::from_bytes(&v2).unwrap();
+            cont.version = llmzip::compress::CONTAINER_V1;
+            cont.flags = 0;
+            cont.to_bytes()
+        };
+        for z in [&v2, &v1] {
+            for _ in 0..3 {
+                let mut r = c.stream_decompress(&z[..]).unwrap();
+                let mut back = Vec::new();
+                loop {
+                    let want = 1 + rng.gen_index(300);
+                    let mut buf = vec![0u8; want];
+                    let n = r.read(&mut buf).unwrap();
+                    if n == 0 {
+                        break;
+                    }
+                    back.extend_from_slice(&buf[..n]);
+                }
+                assert_eq!(back, data, "{precision:?}");
+                assert!(r.verified(), "{precision:?}: EOF implies CRC verification");
+            }
+        }
+    }
+}
+
+#[test]
+fn decompress_range_equals_the_full_decode_slice() {
+    for precision in [Precision::F32, Precision::Int8] {
+        let c = compressor(precision);
+        let data = llmzip::textgen::quick_sample(1000, 60);
+        let z = c.compress(&data).unwrap();
+        let full = c.decompress(&z).unwrap();
+        assert_eq!(full, data);
+        let mut rng = Pcg64::seeded(0xDECODE + precision as u64);
+        // Structured ranges: chunk-aligned, chunk-straddling, single
+        // bytes, whole input, empty.
+        let mut ranges: Vec<(u64, u64)> = vec![
+            (0, 0),
+            (0, 1),
+            (0, data.len() as u64),
+            (data.len() as u64, 0),
+            (STREAM as u64 - 1, 2),
+            (STREAM as u64, STREAM as u64),
+            (3 * STREAM as u64 + 7, 100),
+        ];
+        for _ in 0..12 {
+            let off = rng.gen_index(data.len() + 1) as u64;
+            let len = rng.gen_index(data.len() + 1 - off as usize) as u64;
+            ranges.push((off, len));
+        }
+        for (off, len) in ranges {
+            let got = c.decompress_range(&z, off, len).unwrap();
+            assert_eq!(
+                got,
+                &full[off as usize..(off + len) as usize],
+                "{precision:?} range [{off}, {off}+{len})"
+            );
+        }
+        // Out-of-bounds ranges are refused, not truncated.
+        assert!(c.decompress_range(&z, 0, data.len() as u64 + 1).is_err());
+        assert!(c.decompress_range(&z, data.len() as u64, 1).is_err());
+        assert!(c.decompress_range(&z, u64::MAX, 2).is_err());
+    }
+}
+
+#[test]
+fn decode_chunk_random_access_matches_full_decode_windows() {
+    let c = compressor(Precision::F32);
+    let data = llmzip::textgen::quick_sample(1100, 61);
+    let z = c.compress(&data).unwrap();
+    let container = Container::from_bytes(&z).unwrap();
+    let full = c.decompress(&z).unwrap();
+    let n_chunks = data.len().div_ceil(STREAM);
+    assert_eq!(container.chunks.len(), n_chunks);
+    // Decode chunks in a scrambled order — each must equal its window of
+    // the full decode, independent of what was decoded before it.
+    let order: Vec<usize> = (0..n_chunks).rev().collect();
+    for i in order {
+        let got = c.decode_chunk(&container, i).unwrap();
+        let lo = i * STREAM;
+        let hi = (lo + STREAM).min(data.len());
+        assert_eq!(got, &full[lo..hi], "chunk {i}");
+    }
+    assert!(c.decode_chunk(&container, n_chunks).is_err());
+}
+
+#[test]
+fn range_decode_rejects_foreign_and_mismatched_containers() {
+    // Random access rides the same contract checks as the full path:
+    // model/executor/precision mismatches are refused by name, not
+    // decoded into garbage.
+    let f32c = compressor(Precision::F32);
+    let q8c = compressor(Precision::Int8);
+    let data = llmzip::textgen::quick_sample(400, 62);
+    let z8 = q8c.compress(&data).unwrap();
+    let err = f32c.decompress_range(&z8, 0, 10).unwrap_err().to_string();
+    assert!(err.contains("precision"), "{err}");
+    let container = Container::from_bytes(&z8).unwrap();
+    let err = f32c.decode_chunk(&container, 0).unwrap_err().to_string();
+    assert!(err.contains("precision"), "{err}");
+    // Same-engine access works on both faces.
+    assert_eq!(q8c.decompress_range(&z8, 1, 5).unwrap(), &data[1..6]);
+}
