@@ -7,7 +7,10 @@
 //!    (`llmzip::lm::reference`), single-threaded and multi-threaded (the
 //!    persistent worker pool), plus the bulk-encode path, per model size —
 //!    and an **f32-vs-int8** section (quantized weight path: tokens/sec +
-//!    resident weight bytes).
+//!    resident weight bytes, panel copies included), plus **kernel
+//!    microbenchmarks** (`"kernels"` JSON section): per-kernel GFLOP/s /
+//!    GOP/s of the scalar specification vs the detected-best SIMD tier at
+//!    representative projection shapes, with the selected tier string.
 //! 2. **Streaming sessions (always runs)** — `CompressWriter` /
 //!    `DecompressReader` tokens/sec vs the one-shot calls (bytes asserted
 //!    identical), plus a peak-RSS proxy (`VmHWM`), in the `"stream"`
@@ -35,10 +38,12 @@ use llmzip::coordinator::{BatchPolicy, Server, ServerConfig};
 use llmzip::experiments::{self, DatasetCache};
 use llmzip::lm::config::{self, by_name, VOCAB};
 use llmzip::lm::executor::LmExecutor;
+use llmzip::lm::kernels::{self, KernelTier, PanelF32, PanelI8};
 use llmzip::lm::native::NativeExecutor;
 use llmzip::lm::reference::{ReferenceLane, ReferenceModel};
 use llmzip::lm::weights::Weights;
 use llmzip::lm::ExecutorKind;
+use llmzip::util::Pcg64;
 use llmzip::runtime::{ArtifactStore, PjrtForwardExecutor, PjrtGenerator, PjrtStepExecutor};
 use llmzip::tokenizer::vocab::BOS;
 use std::sync::Arc;
@@ -195,15 +200,14 @@ fn int8_engine_benches() -> Vec<Int8Row> {
         if smoke() { &["nano", "small"] } else { &["nano", "small", "medium", "large"] };
     for &name in models {
         let cfg = by_name(name).unwrap();
-        let weights = Weights::random(cfg, 17);
-        let quantized = weights.quantize();
-        let (f32_bytes, int8_bytes) = (weights.resident_bytes(), quantized.resident_bytes());
+        let weights = Arc::new(Weights::random(cfg, 17));
+        let quantized = Arc::new(weights.quantize());
         let toks: Vec<u32> = std::iter::once(BOS)
             .chain((0..WINDOW - 1).map(|i| ((i * 31 + 7) % 256) as u32))
             .collect();
         let mut row = vec![0u32; LANES];
         let mut out = vec![0.0f32; LANES * VOCAB];
-        let mut f32_ex = NativeExecutor::new(cfg, weights, LANES);
+        let mut f32_ex = NativeExecutor::new(cfg, weights.clone(), LANES);
         let f32_tps = measure_tps(|| {
             f32_ex.reset();
             for &t in &toks {
@@ -211,7 +215,7 @@ fn int8_engine_benches() -> Vec<Int8Row> {
                 f32_ex.step_into(&row, &mut out).unwrap();
             }
         });
-        let mut int8_ex = NativeExecutor::new(cfg, quantized, LANES);
+        let mut int8_ex = NativeExecutor::new(cfg, quantized.clone(), LANES);
         let int8_tps = measure_tps(|| {
             int8_ex.reset();
             for &t in &toks {
@@ -219,6 +223,10 @@ fn int8_engine_benches() -> Vec<Int8Row> {
                 int8_ex.step_into(&row, &mut out).unwrap();
             }
         });
+        // Resident bytes AFTER the engines exist: building a plan
+        // materializes the interleaved panel copies in the shared bundle,
+        // and the honest memory number includes them.
+        let (f32_bytes, int8_bytes) = (weights.resident_bytes(), quantized.resident_bytes());
         println!(
             "{:<10} {:>14.0} {:>14.0} {:>7.2}x {:>12} {:>12}",
             name,
@@ -237,6 +245,133 @@ fn int8_engine_benches() -> Vec<Int8Row> {
         });
     }
     rows
+}
+
+struct KernelRow {
+    op: &'static str,
+    shape: String,
+    unit: &'static str,
+    scalar_gops: f64,
+    best_gops: f64,
+}
+
+/// Ops/sec (in G-units) of `f`, where one call performs `ops_per_iter`
+/// scalar operations.
+fn measure_gops<F: FnMut()>(ops_per_iter: f64, mut f: F) -> f64 {
+    f(); // warmup
+    let budget = budget_s();
+    let t0 = Instant::now();
+    let mut iters = 0usize;
+    while t0.elapsed().as_secs_f64() < budget {
+        f();
+        iters += 1;
+    }
+    ops_per_iter * iters as f64 / t0.elapsed().as_secs_f64() / 1e9
+}
+
+/// Kernel microbenchmarks: the scalar specification vs the detected-best
+/// tier, per primitive, at representative projection shapes (8 lanes at
+/// `d_model → d_model` and `d_model → d_ff` widths). Since every tier is
+/// bit-identical by construction, the only interesting number is the rate.
+fn kernel_benches() -> (&'static str, Vec<KernelRow>) {
+    let best = KernelTier::detect();
+    section(&format!("kernel microbenchmarks (selected tier: {})", best.as_str()));
+    println!(
+        "{:<14} {:<14} {:>10} {:>12} {:>12} {:>8}",
+        "OP", "SHAPE", "UNIT", "scalar", best.as_str(), "x"
+    );
+    let mut rng = Pcg64::seeded(23);
+    let mut rand_f32 =
+        |n: usize| -> Vec<f32> { (0..n).map(|_| (rng.next_u32() as f32 / u32::MAX as f32) - 0.5).collect() };
+    let n = LANES;
+    let mut rows = Vec::new();
+    let mut push = |op: &'static str, shape: String, unit: &'static str, per_tier: &mut dyn FnMut(KernelTier) -> f64| {
+        let scalar_gops = per_tier(KernelTier::Scalar);
+        let best_gops =
+            if best == KernelTier::Scalar { scalar_gops } else { per_tier(best) };
+        println!(
+            "{:<14} {:<14} {:>10} {:>12.3} {:>12.3} {:>7.2}x",
+            op,
+            shape,
+            unit,
+            scalar_gops,
+            best_gops,
+            best_gops / scalar_gops.max(1e-12),
+        );
+        rows.push(KernelRow { op, shape, unit, scalar_gops, best_gops });
+    };
+
+    // f32 matmul, panel layout: d_model→d_model and d_model→d_ff of the
+    // "large" config.
+    for (d_in, d_out) in [(128usize, 128usize), (128, 512)] {
+        let xs = rand_f32(n * d_in);
+        let w = rand_f32(d_in * d_out);
+        let panel = PanelF32::build(&w, d_in, d_out);
+        let mut ys = vec![0.0f32; n * d_out];
+        let flops = (2 * n * d_in * d_out) as f64;
+        push("matmul_f32", format!("{n}x{d_in}x{d_out}"), "gflops", &mut |t| {
+            measure_gops(flops, || {
+                ys.fill(0.0);
+                kernels::matmul_f32(t, n, d_in, d_out, &xs, &w, Some(&panel), &mut ys);
+                std::hint::black_box(&mut ys);
+            })
+        });
+    }
+
+    // int8 matmul over prequantized activations at the same wide shape.
+    {
+        let (d_in, d_out) = (128usize, 512usize);
+        let xs = rand_f32(n * d_in);
+        let wf = rand_f32(d_in * d_out);
+        let wq: Vec<i8> =
+            wf.iter().map(|v| (v * 254.0).clamp(-127.0, 127.0) as i8).collect();
+        let ws = rand_f32(d_out).iter().map(|v| v.abs() + 1e-3).collect::<Vec<_>>();
+        let mut qx = vec![0i8; n * d_in];
+        let mut sx = vec![0.0f32; n];
+        kernels::quantize_lanes(KernelTier::Scalar, n, d_in, &xs, &mut qx, &mut sx);
+        let panel = PanelI8::build(&wq, d_in, d_out);
+        let mut acc = vec![0i32; n * d_out];
+        let mut ys = vec![0.0f32; n * d_out];
+        let ops = (2 * n * d_in * d_out) as f64;
+        push("matmul_i8", format!("{n}x{d_in}x{d_out}"), "gops", &mut |t| {
+            measure_gops(ops, || {
+                ys.fill(0.0);
+                kernels::matmul_i8(
+                    t, n, d_in, d_out, &wq, &ws, Some(&panel), &qx, &sx, &mut acc, &mut ys,
+                );
+                std::hint::black_box(&mut ys);
+            })
+        });
+    }
+
+    // Reduction/elementwise primitives at head width (d_model = 128).
+    {
+        let d = 128usize;
+        let a = rand_f32(d);
+        let b = rand_f32(d);
+        push("dot_f32", format!("{d}"), "gflops", &mut |t| {
+            measure_gops(2.0 * d as f64, || {
+                std::hint::black_box(kernels::dot_f32(t, &a, &b));
+            })
+        });
+        let qa: Vec<i8> = a.iter().map(|v| (v * 254.0) as i8).collect();
+        let qb: Vec<i8> = b.iter().map(|v| (v * 254.0) as i8).collect();
+        push("dot_i8", format!("{d}"), "gops", &mut |t| {
+            measure_gops(2.0 * d as f64, || {
+                std::hint::black_box(kernels::dot_i8(t, &qa, &qb));
+            })
+        });
+        let xs = rand_f32(n * d);
+        let mut qx = vec![0i8; n * d];
+        let mut sx = vec![0.0f32; n];
+        push("quantize", format!("{n}x{d}"), "gelems", &mut |t| {
+            measure_gops((n * d) as f64, || {
+                kernels::quantize_lanes(t, n, d, &xs, &mut qx, &mut sx);
+                std::hint::black_box(&mut qx);
+            })
+        });
+    }
+    (best.as_str(), rows)
 }
 
 struct StreamRow {
@@ -417,13 +552,15 @@ fn replica_scaling_bench() -> Vec<ReplicaPoint> {
 fn write_bench_json(
     rows: &[NativeRow],
     int8_rows: &[Int8Row],
+    kernel_tier: &str,
+    kernel_rows: &[KernelRow],
     stream: &StreamRow,
     replica_points: &[ReplicaPoint],
 ) {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"runtime\",\n");
-    s.push_str("  \"schema\": 3,\n");
+    s.push_str("  \"schema\": 4,\n");
     s.push_str(&format!("  \"lanes\": {LANES},\n"));
     s.push_str(&format!("  \"window\": {WINDOW},\n"));
     s.push_str("  \"unit\": \"tokens_per_sec\",\n");
@@ -461,6 +598,21 @@ fn write_bench_json(
         ));
     }
     s.push_str("  ],\n");
+    s.push_str(&format!("  \"kernels\": {{\n    \"tier\": \"{kernel_tier}\",\n    \"rows\": [\n"));
+    for (i, r) in kernel_rows.iter().enumerate() {
+        s.push_str(&format!(
+            "      {{\"op\": \"{}\", \"shape\": \"{}\", \"unit\": \"{}\", \
+             \"scalar_gops\": {:.4}, \"best_gops\": {:.4}, \"speedup\": {:.3}}}{}\n",
+            r.op,
+            r.shape,
+            r.unit,
+            r.scalar_gops,
+            r.best_gops,
+            r.best_gops / r.scalar_gops.max(1e-12),
+            if i + 1 < kernel_rows.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("    ]\n  },\n");
     s.push_str(&format!(
         "  \"stream\": {{\"model\": \"nano\", \"bytes\": {}, \
          \"one_shot_compress_tps\": {:.1}, \"stream_compress_tps\": {:.1}, \
@@ -591,8 +743,9 @@ fn main() {
     let stream = stream_bench();
     let rows = native_engine_benches();
     let int8_rows = int8_engine_benches();
+    let (kernel_tier, kernel_rows) = kernel_benches();
     let replica_points = replica_scaling_bench();
-    write_bench_json(&rows, &int8_rows, &stream, &replica_points);
+    write_bench_json(&rows, &int8_rows, kernel_tier, &kernel_rows, &stream, &replica_points);
     if smoke() {
         println!("\nSKIP PJRT runtime bench: smoke mode");
         return;

@@ -7,7 +7,7 @@
 
 use crate::cli::Args;
 use llmzip::compress::{Compressor, LlmCompressor, LlmCompressorConfig};
-use llmzip::lm::{ExecutorKind, Precision};
+use llmzip::lm::{ExecutorKind, KernelTier, Precision};
 use llmzip::runtime::ArtifactStore;
 use llmzip::Result;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -28,6 +28,17 @@ pub(crate) fn precision_arg(args: &Args) -> Result<Precision> {
     Precision::parse(&args.str_or("precision", "f32"))
 }
 
+/// Shared `--kernel {auto,scalar,avx2,neon}` flag: `auto` (default) defers
+/// to load-time resolution (`LLMZIP_FORCE_KERNEL` override, else CPU
+/// detection); anything else forces a tier and errors at open if this CPU
+/// lacks it. Pure execution knob — container bytes never change.
+pub(crate) fn kernel_arg(args: &Args) -> Result<Option<KernelTier>> {
+    match args.str_or("kernel", "auto").as_str() {
+        "auto" => Ok(None),
+        s => KernelTier::parse(s).map(Some),
+    }
+}
+
 pub(crate) fn open_compressor(args: &Args) -> Result<LlmCompressor> {
     let store = ArtifactStore::open(args.get("artifacts"))?;
     let chunk = args.usize_or("chunk", 256)?;
@@ -39,6 +50,10 @@ pub(crate) fn open_compressor(args: &Args) -> Result<LlmCompressor> {
         lanes: args.usize_or("lanes", 8)?,
         threads: args.usize_or("threads", super::default_threads())?,
         precision: precision_arg(args)?,
+        kernel: kernel_arg(args)?,
+        // `--no-panels`: skip the interleaved-panel weight copies on
+        // memory-constrained hosts (slower matmuls, identical bytes).
+        panel_layout: !args.has("no-panels"),
     };
     LlmCompressor::open(&store, cfg)
 }

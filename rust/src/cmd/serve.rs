@@ -56,6 +56,12 @@ pub fn serve(args: &[String]) -> Result<()> {
     // every replica shares the quantized Arc (half the resident weight
     // bytes, and one fingerprint for the whole pool).
     let precision = super::compress::precision_arg(&args)?;
+    // Kernel dispatch: --kernel forces a tier (errors at startup if the
+    // CPU lacks it); --no-panels skips the interleaved weight copies on
+    // memory-constrained hosts. Both are pure execution knobs — the
+    // containers a replica produces never depend on them.
+    let kernel = super::compress::kernel_arg(&args)?;
+    let panel_layout = !args.has("no-panels");
 
     let comp_cfg = LlmCompressorConfig {
         model: model.clone(),
@@ -65,6 +71,8 @@ pub fn serve(args: &[String]) -> Result<()> {
         lanes,
         threads,
         precision,
+        kernel,
+        panel_layout,
     };
     let mut on_scale: Option<ScaleHook> = None;
     let factory: Box<dyn Fn() -> Result<LlmCompressor> + Send + Sync> =
@@ -132,6 +140,7 @@ pub fn serve(args: &[String]) -> Result<()> {
             min_replicas,
             max_replicas,
             autoscale,
+            panel_layout,
             policy: BatchPolicy {
                 lanes,
                 max_wait: Duration::from_millis(max_wait_ms),
@@ -146,9 +155,11 @@ pub fn serve(args: &[String]) -> Result<()> {
     println!(
         "llmzip serving on 127.0.0.1:{port} \
          (chunk={chunk}, lanes={lanes}, threads={threads}, replicas={replicas}, \
-         autoscale={}, precision={}, protocols=v1+v2-mux)",
+         autoscale={}, precision={}, kernel={}, panels={}, protocols=v1+v2-mux)",
         if autoscale { format!("{min_replicas}..{max_replicas}") } else { "off".into() },
-        precision.as_str()
+        precision.as_str(),
+        kernel.map_or("auto", |t| t.as_str()),
+        if panel_layout { "on" } else { "off" },
     );
     loop {
         let (stream, peer) = listener.accept()?;

@@ -49,6 +49,7 @@ use crate::compress::Compressor;
 use crate::entropy::range::{RangeDecoder, RangeEncoder};
 use crate::lm::config::{self, LmConfig};
 use crate::lm::executor::{ExecutorKind, LmExecutor};
+use crate::lm::kernels::{KernelOptions, KernelTier};
 use crate::lm::native::{NativeExecutor, StepPool};
 use crate::lm::weights::{Precision, Weights};
 use crate::runtime::{ArtifactStore, PjrtForwardExecutor, PjrtStepExecutor};
@@ -188,6 +189,19 @@ pub struct LlmCompressorConfig {
     /// container tag records precision + bundle fingerprint, and decode
     /// refuses containers whose contract doesn't match.
     pub precision: Precision,
+    /// Kernel dispatch tier for the native engine. `None` (default)
+    /// resolves at load: the `LLMZIP_FORCE_KERNEL` environment override if
+    /// set, else the best tier the CPU supports. `Some(tier)` forces one
+    /// programmatically (tests; the CLI `--kernel` flag) and errors at
+    /// open if the CPU lacks it. Pure execution knob — containers are
+    /// byte-identical across tiers. PJRT engines ignore this.
+    pub kernel: Option<KernelTier>,
+    /// Build the interleaved-panel weight layout the vector matmuls stream
+    /// from (native engine only; default on). Disable on memory-constrained
+    /// hosts to save roughly one extra copy of the projection tensors per
+    /// loaded model — matmuls then fall back to the strided no-panel
+    /// kernels, slower but still bit-identical.
+    pub panel_layout: bool,
 }
 
 impl Default for LlmCompressorConfig {
@@ -200,6 +214,8 @@ impl Default for LlmCompressorConfig {
             lanes: 8,
             threads: 1,
             precision: Precision::F32,
+            kernel: None,
+            panel_layout: true,
         }
     }
 }
@@ -312,7 +328,12 @@ impl LlmCompressor {
         let mut cfg = cfg;
         cfg.model = model_cfg.name.into();
         let tag = render_tag(&cfg.model, ExecutorKind::Native, Some(&weights));
-        let base = NativeExecutor::new(model_cfg, weights, cfg.lanes.max(1));
+        let base = NativeExecutor::with_opts(
+            model_cfg,
+            weights,
+            cfg.lanes.max(1),
+            KernelOptions { tier: cfg.kernel, panels: cfg.panel_layout },
+        )?;
         let engine = match pool {
             Some(p) => base.with_shared_pool(p),
             None => base.with_threads(cfg.threads.max(1)),
@@ -346,6 +367,8 @@ impl LlmCompressor {
                 lanes,
                 threads: 1,
                 precision: weights.precision(),
+                kernel: None,
+                panel_layout: true,
             },
             model_cfg,
             tag,
@@ -381,6 +404,12 @@ impl LlmCompressor {
     /// Executor kind tag recorded in containers produced by this compressor.
     pub fn executor_kind(&self) -> ExecutorKind {
         self.engine.borrow().kind()
+    }
+
+    /// Kernel dispatch tier the engine resolved at load (diagnostic only;
+    /// `"pjrt-hlo"` for lowered engines).
+    pub fn kernel_tier(&self) -> &'static str {
+        self.engine.borrow().kernel_tier()
     }
 
     /// Weight precision contract this compressor operates under.
@@ -783,6 +812,7 @@ mod tests {
                 lanes,
                 threads,
                 precision: Precision::F32,
+                ..Default::default()
             },
         )
         .unwrap()
@@ -817,6 +847,7 @@ mod tests {
             lanes: 2,
             threads: 2,
             precision: Precision::F32,
+            ..Default::default()
         };
         let a = LlmCompressor::from_shared(cfg, shared.clone(), replica_cfg.clone()).unwrap();
         let b = LlmCompressor::from_shared(cfg, shared.clone(), replica_cfg).unwrap();
@@ -847,6 +878,7 @@ mod tests {
             lanes: 2,
             threads: 1,
             precision: Precision::F32,
+            ..Default::default()
         };
         let a = LlmCompressor::from_shared_pooled(
             cfg,
@@ -920,6 +952,7 @@ mod tests {
                 lanes,
                 threads,
                 precision: Precision::Int8,
+                ..Default::default()
             },
         )
         .unwrap()
@@ -1012,6 +1045,7 @@ mod tests {
             stream_bytes: 128,
             lanes: 1,
             threads: 1,
+            ..Default::default()
         };
         assert!(LlmCompressor::from_shared(cfg, f32_w.clone(), cfg8.clone()).is_err());
         let q8_w = Arc::new(f32_w.quantize());
@@ -1024,6 +1058,7 @@ mod tests {
             stream_bytes: 128,
             lanes: 1,
             threads: 1,
+            ..Default::default()
         };
         assert!(LlmCompressor::from_shared(cfg, q8_w, cfg32).is_err());
     }

@@ -541,6 +541,7 @@ mod tests {
                 lanes: 2,
                 threads: 1,
                 precision: Precision::F32,
+                ..Default::default()
             },
         )
         .unwrap()

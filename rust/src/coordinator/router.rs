@@ -107,6 +107,16 @@ pub struct ServerConfig {
     /// exceeds this many ms while work is queued (`INFINITY` = disabled,
     /// queue-depth only — the deterministic default the tests pin).
     pub autoscale_p99_ms: f64,
+    /// Build the interleaved-panel weight layout in native replicas
+    /// (default on). Panels cost roughly one extra copy of the projection
+    /// tensors per loaded model — shared across all replicas via
+    /// `Arc<Weights>`, but worth turning off on memory-constrained hosts;
+    /// matmuls fall back to the strided kernels, slower but
+    /// byte-identical. Like `threads`, the factory owns engine
+    /// construction — `cmd/serve` wires this into
+    /// `LlmCompressorConfig::panel_layout`; it is recorded here so the
+    /// whole replica configuration travels through one struct.
+    pub panel_layout: bool,
     pub policy: BatchPolicy,
 }
 
@@ -123,6 +133,7 @@ impl Default for ServerConfig {
             autoscale_cooldown: Duration::from_millis(1000),
             autoscale_shrink_after: Duration::from_millis(2000),
             autoscale_p99_ms: f64::INFINITY,
+            panel_layout: true,
             policy: BatchPolicy::default(),
         }
     }

@@ -66,6 +66,14 @@ pub trait LmExecutor {
     /// Number of parallel lanes.
     fn lanes(&self) -> usize;
 
+    /// Human-readable kernel dispatch tier this executor resolved at load
+    /// (`"scalar"` / `"avx2"` / `"neon"` for the native engine,
+    /// `"pjrt-hlo"` for lowered engines). Diagnostic only — never part of
+    /// the stream contract, since tiers are bit-identical by construction.
+    fn kernel_tier(&self) -> &'static str {
+        "n/a"
+    }
+
     /// Reset every lane to position 0 (start of a new chunk batch).
     fn reset(&mut self);
 

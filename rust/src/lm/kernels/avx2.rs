@@ -1,0 +1,287 @@
+//! AVX2 kernels (x86_64). Bit-identical to `scalar` by construction:
+//!
+//! * f32 dots keep 8 lane accumulators in one `__m256` and combine with
+//!   the exact `extractf128` / `movehl` / `shuffle` sequence the scalar
+//!   [`super::scalar::combine8`] spells out. **No FMA** — every step is
+//!   an explicit `_mm256_mul_ps` followed by `_mm256_add_ps`, matching
+//!   the scalar `lanes[j] += a * b` two-op sequence.
+//! * Remainder lanes are staged through zeroed stack buffers (never
+//!   loading past a slice end); the padded `x * 0.0` products add `±0.0`
+//!   to accumulators that are provably never `-0.0`, a bitwise no-op.
+//! * i8 dots widen to i16 (`cvtepi8_epi16`); `madd_epi16` multiplies
+//!   and sums adjacent pairs directly into i32 lanes (pair sums reach
+//!   2·127², past i16 — the i32 widening is what keeps this exact);
+//!   lane sums accumulate in i32, where order is free.
+//!
+//! Callers must verify `avx2` support (done once at model load); every
+//! `unsafe fn` here is `#[target_feature(enable = "avx2")]`.
+
+use super::{PanelF32, PanelI8, F32_LANES, F32_PANEL_COLS, I8_LANES};
+use core::arch::x86_64::*;
+
+/// Canonical tree combine of 8 f32 lanes — identical adds, identical
+/// order to `scalar::combine8`.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum8(acc: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(acc);
+    let hi = _mm256_extractf128_ps(acc, 1);
+    let s = _mm_add_ps(lo, hi); // s_k = l_k + l_{k+4}
+    let pair = _mm_add_ps(s, _mm_movehl_ps(s, s)); // (s0+s2, s1+s3, ..)
+    let t = _mm_add_ss(pair, _mm_shuffle_ps(pair, pair, 1)); // (s0+s2)+(s1+s3)
+    _mm_cvtss_f32(t)
+}
+
+/// Exact horizontal i32 sum (order-free).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_i32(acc: __m256i) -> i32 {
+    let lo = _mm256_castsi256_si128(acc);
+    let hi = _mm256_extracti128_si256(acc, 1);
+    let s = _mm_add_epi32(lo, hi);
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0x4E));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0x01));
+    _mm_cvtsi128_si32(s)
+}
+
+/// # Safety
+/// Requires AVX2 (checked once at model load).
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + F32_LANES <= n {
+        let va = _mm256_loadu_ps(a.as_ptr().add(i));
+        let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+        i += F32_LANES;
+    }
+    if i < n {
+        let mut ta = [0.0f32; F32_LANES];
+        let mut tb = [0.0f32; F32_LANES];
+        ta[..n - i].copy_from_slice(&a[i..]);
+        tb[..n - i].copy_from_slice(&b[i..]);
+        let va = _mm256_loadu_ps(ta.as_ptr());
+        let vb = _mm256_loadu_ps(tb.as_ptr());
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+    }
+    hsum8(acc)
+}
+
+/// # Safety
+/// Requires AVX2 (checked once at model load).
+#[target_feature(enable = "avx2")]
+pub unsafe fn matmul_f32_panel(
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    xs: &[f32],
+    p: &PanelF32,
+    ys: &mut [f32],
+) {
+    let full = d_in / F32_LANES;
+    let rem = d_in % F32_LANES;
+    let n_panels = p.data.len() / (F32_PANEL_COLS * p.d_in_pad);
+    for l in 0..n {
+        let x = &xs[l * d_in..(l + 1) * d_in];
+        let mut xt = [0.0f32; F32_LANES];
+        if rem > 0 {
+            xt[..rem].copy_from_slice(&x[full * F32_LANES..]);
+        }
+        let y = &mut ys[l * d_out..(l + 1) * d_out];
+        for pi in 0..n_panels {
+            let base = p.data.as_ptr().add(pi * F32_PANEL_COLS * p.d_in_pad);
+            let mut a0 = _mm256_setzero_ps();
+            let mut a1 = _mm256_setzero_ps();
+            let mut a2 = _mm256_setzero_ps();
+            let mut a3 = _mm256_setzero_ps();
+            for k in 0..full {
+                let xv = _mm256_loadu_ps(x.as_ptr().add(k * F32_LANES));
+                let g = base.add(k * F32_LANES * F32_PANEL_COLS);
+                a0 = _mm256_add_ps(a0, _mm256_mul_ps(xv, _mm256_loadu_ps(g)));
+                a1 = _mm256_add_ps(a1, _mm256_mul_ps(xv, _mm256_loadu_ps(g.add(8))));
+                a2 = _mm256_add_ps(a2, _mm256_mul_ps(xv, _mm256_loadu_ps(g.add(16))));
+                a3 = _mm256_add_ps(a3, _mm256_mul_ps(xv, _mm256_loadu_ps(g.add(24))));
+            }
+            if rem > 0 {
+                let xv = _mm256_loadu_ps(xt.as_ptr());
+                let g = base.add(full * F32_LANES * F32_PANEL_COLS);
+                a0 = _mm256_add_ps(a0, _mm256_mul_ps(xv, _mm256_loadu_ps(g)));
+                a1 = _mm256_add_ps(a1, _mm256_mul_ps(xv, _mm256_loadu_ps(g.add(8))));
+                a2 = _mm256_add_ps(a2, _mm256_mul_ps(xv, _mm256_loadu_ps(g.add(16))));
+                a3 = _mm256_add_ps(a3, _mm256_mul_ps(xv, _mm256_loadu_ps(g.add(24))));
+            }
+            let j0 = pi * F32_PANEL_COLS;
+            let dots = [hsum8(a0), hsum8(a1), hsum8(a2), hsum8(a3)];
+            let live = F32_PANEL_COLS.min(d_out - j0);
+            for r in 0..live {
+                y[j0 + r] += dots[r];
+            }
+        }
+    }
+}
+
+/// # Safety
+/// Requires AVX2 (checked once at model load).
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let full = n / I8_LANES;
+    let rem = n % I8_LANES;
+    let mut acc = _mm256_setzero_si256();
+    for k in 0..full {
+        let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(a.as_ptr().add(k * I8_LANES) as *const __m128i));
+        let vb = _mm256_cvtepi8_epi16(_mm_loadu_si128(b.as_ptr().add(k * I8_LANES) as *const __m128i));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
+    }
+    if rem > 0 {
+        let mut ta = [0i8; I8_LANES];
+        let mut tb = [0i8; I8_LANES];
+        ta[..rem].copy_from_slice(&a[full * I8_LANES..]);
+        tb[..rem].copy_from_slice(&b[full * I8_LANES..]);
+        let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(ta.as_ptr() as *const __m128i));
+        let vb = _mm256_cvtepi8_epi16(_mm_loadu_si128(tb.as_ptr() as *const __m128i));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
+    }
+    hsum_i32(acc)
+}
+
+/// # Safety
+/// Requires AVX2 (checked once at model load).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub unsafe fn matmul_i8_panel(
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    p: &PanelI8,
+    ws: &[f32],
+    qx: &[i8],
+    sx: &[f32],
+    ys: &mut [f32],
+) {
+    let full = d_in / I8_LANES;
+    let rem = d_in % I8_LANES;
+    for l in 0..n {
+        let s = sx[l];
+        if s == 0.0 {
+            continue;
+        }
+        let q = &qx[l * d_in..(l + 1) * d_in];
+        let mut qt = [0i8; I8_LANES];
+        if rem > 0 {
+            qt[..rem].copy_from_slice(&q[full * I8_LANES..]);
+        }
+        let y = &mut ys[l * d_out..(l + 1) * d_out];
+        for j in 0..d_out {
+            let row = p.data.as_ptr().add(j * p.d_in_pad);
+            let mut acc = _mm256_setzero_si256();
+            for k in 0..full {
+                let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                    q.as_ptr().add(k * I8_LANES) as *const __m128i
+                ));
+                let vb =
+                    _mm256_cvtepi8_epi16(_mm_loadu_si128(row.add(k * I8_LANES) as *const __m128i));
+                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
+            }
+            if rem > 0 {
+                // Panel rows are zero-padded past d_in, so a full-width
+                // load of the weight tail is in-bounds and exact.
+                let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(qt.as_ptr() as *const __m128i));
+                let vb = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                    row.add(full * I8_LANES) as *const __m128i
+                ));
+                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
+            }
+            y[j] += s * ws[j] * hsum_i32(acc) as f32;
+        }
+    }
+}
+
+/// # Safety
+/// Requires AVX2 (checked once at model load).
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let va = _mm256_set1_ps(a);
+    let mut i = 0;
+    while i + F32_LANES <= n {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+        _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(yv, _mm256_mul_ps(va, xv)));
+        i += F32_LANES;
+    }
+    while i < n {
+        y[i] += a * x[i];
+        i += 1;
+    }
+}
+
+/// # Safety
+/// Requires AVX2 (checked once at model load).
+#[target_feature(enable = "avx2")]
+pub unsafe fn quantize_lanes(n: usize, d: usize, xs: &[f32], qx: &mut [i8], sx: &mut [f32]) {
+    let sign = _mm256_set1_ps(-0.0);
+    for l in 0..n {
+        let row = &xs[l * d..(l + 1) * d];
+        // Max-abs: vector max then horizontal max, folding the tail in
+        // scalar — `max` over non-negative values is order-free.
+        let mut vm = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + F32_LANES <= d {
+            let v = _mm256_loadu_ps(row.as_ptr().add(i));
+            vm = _mm256_max_ps(vm, _mm256_andnot_ps(sign, v));
+            i += F32_LANES;
+        }
+        let lo = _mm256_castps256_ps128(vm);
+        let hi = _mm256_extractf128_ps(vm, 1);
+        let m = _mm_max_ps(lo, hi);
+        let m = _mm_max_ps(m, _mm_movehl_ps(m, m));
+        let m = _mm_max_ss(m, _mm_shuffle_ps(m, m, 1));
+        let mut maxabs = _mm_cvtss_f32(m);
+        for &v in &row[i..] {
+            maxabs = maxabs.max(v.abs());
+        }
+
+        let q = &mut qx[l * d..(l + 1) * d];
+        if maxabs == 0.0 {
+            sx[l] = 0.0;
+            q.fill(0);
+            continue;
+        }
+        let scale = maxabs / 127.0;
+        sx[l] = scale;
+        let inv = 1.0 / scale;
+
+        // round(t) == trunc(t + copysign(0.5, t)) in-domain (|t| ≤ 127),
+        // so the cvtt truncation below matches `scalar::quantize_one`.
+        let vinv = _mm256_set1_ps(inv);
+        let vhalf = _mm256_set1_ps(0.5);
+        let cmin = _mm256_set1_epi32(-127);
+        let cmax = _mm256_set1_epi32(127);
+        let mut i = 0;
+        while i + F32_LANES <= d {
+            let t = _mm256_mul_ps(_mm256_loadu_ps(row.as_ptr().add(i)), vinv);
+            let half = _mm256_or_ps(vhalf, _mm256_and_ps(t, sign));
+            let r = _mm256_cvttps_epi32(_mm256_add_ps(t, half));
+            let c = _mm256_min_epi32(_mm256_max_epi32(r, cmin), cmax);
+            // Pack 8 i32 -> 8 i8 (values already in [-127, 127]).
+            let p16 = _mm256_packs_epi32(c, c);
+            let p8 = _mm256_packs_epi16(p16, p16);
+            let lo4 = _mm256_extract_epi32(p8, 0) as u32 as u64;
+            let hi4 = _mm256_extract_epi32(p8, 4) as u32 as u64;
+            let bytes = (lo4 | (hi4 << 32)).to_le_bytes();
+            for (dst, &b) in q[i..i + F32_LANES].iter_mut().zip(bytes.iter()) {
+                *dst = b as i8;
+            }
+            i += F32_LANES;
+        }
+        for (qi, &v) in q[i..].iter_mut().zip(&row[i..]) {
+            *qi = super::scalar::quantize_one(v, inv);
+        }
+    }
+}

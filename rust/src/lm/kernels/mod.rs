@@ -1,0 +1,476 @@
+//! SIMD kernel layer: dispatch-at-load vector matmuls, bit-exact by
+//! construction.
+//!
+//! Every hot loop of the native engine (projection matmuls, attention
+//! score/value dots, the weight-tied head, and activation quantization)
+//! routes through the entry points in this module. A [`KernelTier`] is
+//! resolved **once at model load** (stored in
+//! [`crate::lm::weights::ResolvedPlan`]) and passed down to every call,
+//! so there is no per-call feature detection and exactly one
+//! implementation per (dtype, tier).
+//!
+//! # The bit-exactness contract
+//!
+//! Containers must stay byte-identical across `{scalar, avx2, neon} ×
+//! {replicas, threads, lanes}`. Two mechanisms make that hold *by
+//! construction* rather than by tolerance:
+//!
+//! * **i8×i8 dots are exactly associative.** Products are at most
+//!   `127 * 127` and rows at most `MAX_D_IN` long, so the i32 accumulator
+//!   is bounded by `MAX_D_IN * 127 * 127 ≪ i32::MAX` — integer addition
+//!   never overflows and is order-free, so any lane width produces the
+//!   same i32 (and therefore the same f32 after the single
+//!   `sx * ws[j] * acc as f32` epilogue).
+//! * **f32 dots use one fixed tree-order reduction** ([`F32_LANES`] = 8
+//!   virtual lanes, combined as `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))`),
+//!   implemented *verbatim* by the scalar fallback and mapped 1:1 onto
+//!   the natural AVX2/NEON horizontal-add sequences. No FMA is ever
+//!   emitted (vector paths use explicit mul-then-add intrinsics; Rust
+//!   never contracts scalar `a * b + c`), so scalar and vector tiers
+//!   agree bit for bit.
+//!
+//! Zero padding is free: the lane accumulators start at `+0.0` and can
+//! never become `-0.0` (a round-to-nearest sum is `-0.0` only when both
+//! addends are `-0.0`, and products contributed by padding are
+//! `x * 0.0 = ±0.0` added to a non-`-0.0` accumulator — a bitwise
+//! no-op). Padded vector blocks therefore equal the scalar remainder
+//! loop exactly.
+//!
+//! # Panel layout
+//!
+//! Row-major `[d_in, d_out]` weights make the per-output dot stride
+//! `d_out` floats. [`PanelF32`]/[`PanelI8`] are deterministic transposed
+//! copies built at load from the unchanged `.lmz` bytes (never
+//! serialized): the f32 panel interleaves [`F32_PANEL_COLS`] output
+//! columns in [`F32_LANES`]-wide blocks so one pass streams contiguous
+//! memory while producing four outputs; the i8 panel stores one
+//! contiguous zero-padded row per output. See `docs/kernels.md` for the
+//! exact index maps.
+
+use crate::Result;
+use anyhow::bail;
+
+pub(crate) mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2;
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon;
+
+/// Virtual f32 lane count: the fixed-tree dot accumulates into 8 lanes
+/// regardless of tier (one `__m256` on AVX2, two `float32x4_t` on NEON,
+/// a `[f32; 8]` in the scalar fallback).
+pub const F32_LANES: usize = 8;
+
+/// Output columns interleaved per f32 panel (4 independent accumulators
+/// per pass keeps the FP add chains short enough to hide latency).
+pub const F32_PANEL_COLS: usize = 4;
+
+/// i8 block width: one 128-bit load of quantized activations.
+pub const I8_LANES: usize = 16;
+
+/// Environment override for the dispatch tier, checked at model load:
+/// `LLMZIP_FORCE_KERNEL={scalar,avx2,neon}`.
+pub const FORCE_KERNEL_ENV: &str = "LLMZIP_FORCE_KERNEL";
+
+/// A dispatch tier. All variants exist on every architecture (so config
+/// files and CLI flags parse everywhere); availability is checked by
+/// [`KernelTier::available`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelTier {
+    /// Portable fallback — also the *specification* the vector tiers
+    /// must match bit for bit.
+    Scalar,
+    /// x86_64 AVX2 (256-bit f32, `pmaddwd`-based i8).
+    Avx2,
+    /// aarch64 NEON (128-bit f32 pairs, `smull`-based i8).
+    Neon,
+}
+
+impl KernelTier {
+    /// Best tier supported by the running CPU.
+    pub fn detect() -> KernelTier {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return KernelTier::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return KernelTier::Neon;
+            }
+        }
+        KernelTier::Scalar
+    }
+
+    /// Whether this tier can run on the current CPU.
+    pub fn available(self) -> bool {
+        match self {
+            KernelTier::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            KernelTier::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "aarch64")]
+            KernelTier::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<KernelTier> {
+        Ok(match s {
+            "scalar" => KernelTier::Scalar,
+            "avx2" => KernelTier::Avx2,
+            "neon" => KernelTier::Neon,
+            other => bail!("unknown kernel tier '{other}' (expected scalar|avx2|neon)"),
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Avx2 => "avx2",
+            KernelTier::Neon => "neon",
+        }
+    }
+
+    /// Tier used when none is requested explicitly: the
+    /// [`FORCE_KERNEL_ENV`] override if set (an error if it names a tier
+    /// this CPU cannot run), else [`KernelTier::detect`].
+    pub fn resolve() -> Result<KernelTier> {
+        match std::env::var(FORCE_KERNEL_ENV) {
+            Ok(v) if !v.is_empty() => {
+                let tier = KernelTier::parse(&v)?;
+                if !tier.available() {
+                    bail!("{FORCE_KERNEL_ENV}={v} but this CPU does not support it");
+                }
+                Ok(tier)
+            }
+            _ => Ok(KernelTier::detect()),
+        }
+    }
+}
+
+/// Kernel configuration resolved once at model load.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelOptions {
+    /// Explicit tier; `None` resolves via [`KernelTier::resolve`]
+    /// (environment override, then CPU detection). Tests use the
+    /// explicit form — mutating the environment races under the
+    /// parallel test harness.
+    pub tier: Option<KernelTier>,
+    /// Build the interleaved panel weight copies (roughly doubles
+    /// resident weight memory; disable on memory-constrained hosts —
+    /// output bytes are identical either way, matmuls just run at
+    /// scalar-stride speed without panels).
+    pub panels: bool,
+}
+
+impl Default for KernelOptions {
+    fn default() -> Self {
+        KernelOptions { tier: None, panels: true }
+    }
+}
+
+/// Interleaved-panel copy of a row-major `[d_in, d_out]` f32 weight.
+///
+/// `d_in` is padded to a multiple of [`F32_LANES`] with zero rows and
+/// `d_out` to a multiple of [`F32_PANEL_COLS`] with zero columns; source
+/// element `w[i * d_out + j]` lands at
+/// `data[(j / 4) * 4 * d_in_pad + (i / 8) * 32 + (j % 4) * 8 + i % 8]`.
+#[derive(Clone, Debug)]
+pub struct PanelF32 {
+    pub d_in: usize,
+    pub d_out: usize,
+    /// `d_in` rounded up to a multiple of [`F32_LANES`].
+    pub d_in_pad: usize,
+    pub data: Vec<f32>,
+}
+
+impl PanelF32 {
+    /// Deterministic layout transform; `w` is the unchanged row-major
+    /// `.lmz` tensor data.
+    pub fn build(w: &[f32], d_in: usize, d_out: usize) -> PanelF32 {
+        assert_eq!(w.len(), d_in * d_out, "panel shape mismatch");
+        let d_in_pad = d_in.div_ceil(F32_LANES) * F32_LANES;
+        let n_panels = d_out.div_ceil(F32_PANEL_COLS);
+        let mut data = vec![0.0f32; n_panels * F32_PANEL_COLS * d_in_pad];
+        for p in 0..n_panels {
+            let base = p * F32_PANEL_COLS * d_in_pad;
+            for r in 0..F32_PANEL_COLS {
+                let j = p * F32_PANEL_COLS + r;
+                if j >= d_out {
+                    break;
+                }
+                for i in 0..d_in {
+                    let (k, jj) = (i / F32_LANES, i % F32_LANES);
+                    data[base + k * F32_LANES * F32_PANEL_COLS + r * F32_LANES + jj] =
+                        w[i * d_out + j];
+                }
+            }
+        }
+        PanelF32 { d_in, d_out, d_in_pad, data }
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Transposed copy of a row-major `[d_in, d_out]` i8 weight: one
+/// contiguous row per output column, `d_in` zero-padded to a multiple of
+/// [`I8_LANES`]. Source element `wq[i * d_out + j]` lands at
+/// `data[j * d_in_pad + i]`.
+#[derive(Clone, Debug)]
+pub struct PanelI8 {
+    pub d_in: usize,
+    pub d_out: usize,
+    /// `d_in` rounded up to a multiple of [`I8_LANES`].
+    pub d_in_pad: usize,
+    pub data: Vec<i8>,
+}
+
+impl PanelI8 {
+    pub fn build(wq: &[i8], d_in: usize, d_out: usize) -> PanelI8 {
+        assert_eq!(wq.len(), d_in * d_out, "panel shape mismatch");
+        let d_in_pad = d_in.div_ceil(I8_LANES) * I8_LANES;
+        let mut data = vec![0i8; d_out * d_in_pad];
+        for j in 0..d_out {
+            for i in 0..d_in {
+                data[j * d_in_pad + i] = wq[i * d_out + j];
+            }
+        }
+        PanelI8 { d_in, d_out, d_in_pad, data }
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// A panelized weight copy, matching the source tensor's dtype.
+#[derive(Clone, Debug)]
+pub enum Panels {
+    F32(PanelF32),
+    I8(PanelI8),
+}
+
+impl Panels {
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            Panels::F32(p) => p.resident_bytes(),
+            Panels::I8(p) => p.resident_bytes(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&PanelF32> {
+        match self {
+            Panels::F32(p) => Some(p),
+            Panels::I8(_) => None,
+        }
+    }
+
+    pub fn as_i8(&self) -> Option<&PanelI8> {
+        match self {
+            Panels::I8(p) => Some(p),
+            Panels::F32(_) => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch entry points. `tier` must satisfy `tier.available()` — the
+// `ResolvedPlan` constructor guarantees this, and the vector arms are
+// compiled only for their architecture, so an unavailable foreign tier
+// falls through to scalar rather than faulting.
+// ---------------------------------------------------------------------------
+
+/// Fixed-tree f32 dot product of two contiguous equal-length slices.
+#[inline]
+pub fn dot_f32(tier: KernelTier, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert!(tier.available());
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => unsafe { avx2::dot_f32(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        KernelTier::Neon => unsafe { neon::dot_f32(a, b) },
+        _ => scalar::dot_f32(a, b),
+    }
+}
+
+/// Exact i8×i8 dot with i32 accumulation (order-free; any tier returns
+/// the identical i32).
+#[inline]
+pub fn dot_i8(tier: KernelTier, a: &[i8], b: &[i8]) -> i32 {
+    debug_assert!(tier.available());
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => unsafe { avx2::dot_i8(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        KernelTier::Neon => unsafe { neon::dot_i8(a, b) },
+        _ => scalar::dot_i8(a, b),
+    }
+}
+
+/// `y[i] += a * x[i]` — element-wise, so lane width cannot change the
+/// per-element operation order and every tier is bit-identical.
+#[inline]
+pub fn axpy_f32(tier: KernelTier, a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert!(tier.available());
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => unsafe { avx2::axpy_f32(a, x, y) },
+        #[cfg(target_arch = "aarch64")]
+        KernelTier::Neon => unsafe { neon::axpy_f32(a, x, y) },
+        _ => scalar::axpy_f32(a, x, y),
+    }
+}
+
+/// Per-lane symmetric i8 quantization: `sx[l] = maxabs / 127`, `qx[l*d
+/// ..] = round(x / sx)` (half away from zero), all-zero lanes get
+/// `sx = 0` and zeroed codes. Bit-identical across tiers: maxabs is a
+/// pure lane-wise `max` (order-free on the non-negative `|x|` values)
+/// and rounding uses the shared `trunc(t + copysign(0.5, t))` formula in
+/// every tier.
+#[inline]
+pub fn quantize_lanes(tier: KernelTier, n: usize, d: usize, xs: &[f32], qx: &mut [i8], sx: &mut [f32]) {
+    debug_assert!(tier.available());
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => unsafe { avx2::quantize_lanes(n, d, xs, qx, sx) },
+        #[cfg(target_arch = "aarch64")]
+        KernelTier::Neon => unsafe { neon::quantize_lanes(n, d, xs, qx, sx) },
+        _ => scalar::quantize_lanes(n, d, xs, qx, sx),
+    }
+}
+
+/// `ys[l*d_out + j] += Σ_i xs[l*d_in + i] * w[i*d_out + j]` for `n`
+/// lanes, every per-output sum in the fixed tree order. With a panel the
+/// vector tiers stream contiguous memory; without one (panels disabled)
+/// all tiers fall back to the scalar strided-tree walk — same bits,
+/// scalar speed.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn matmul_f32(
+    tier: KernelTier,
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    xs: &[f32],
+    w: &[f32],
+    panel: Option<&PanelF32>,
+    ys: &mut [f32],
+) {
+    debug_assert!(tier.available());
+    let Some(p) = panel else {
+        scalar::matmul_f32_cols(n, d_in, d_out, xs, w, ys);
+        return;
+    };
+    debug_assert!(p.d_in == d_in && p.d_out == d_out);
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => unsafe { avx2::matmul_f32_panel(n, d_in, d_out, xs, p, ys) },
+        #[cfg(target_arch = "aarch64")]
+        KernelTier::Neon => unsafe { neon::matmul_f32_panel(n, d_in, d_out, xs, p, ys) },
+        _ => scalar::matmul_f32_panel(n, d_in, d_out, xs, p, ys),
+    }
+}
+
+/// Quantized matmul over prequantized activations:
+/// `ys[l*d_out + j] += sx[l] * ws[j] * Σ_i qx[l*d_in + i] * wq[i*d_out + j]`.
+/// The inner sum is exact i32, so the panel dot kernels and the
+/// row-major axpy fallback (used when panels are disabled) produce
+/// identical bytes on every tier. `acc` is `n * d_out` i32 scratch for
+/// the fallback. Lanes with `sx[l] == 0` are skipped entirely.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn matmul_i8(
+    tier: KernelTier,
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    wq: &[i8],
+    ws: &[f32],
+    panel: Option<&PanelI8>,
+    qx: &[i8],
+    sx: &[f32],
+    acc: &mut [i32],
+    ys: &mut [f32],
+) {
+    debug_assert!(tier.available());
+    let Some(p) = panel else {
+        scalar::matmul_i8_axpy(n, d_in, d_out, wq, ws, qx, sx, acc, ys);
+        return;
+    };
+    debug_assert!(p.d_in == d_in && p.d_out == d_out);
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => unsafe { avx2::matmul_i8_panel(n, d_in, d_out, p, ws, qx, sx, ys) },
+        #[cfg(target_arch = "aarch64")]
+        KernelTier::Neon => unsafe { neon::matmul_i8_panel(n, d_in, d_out, p, ws, qx, sx, ys) },
+        _ => scalar::matmul_i8_panel(n, d_in, d_out, p, ws, qx, sx, ys),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_parse_roundtrip() {
+        for t in [KernelTier::Scalar, KernelTier::Avx2, KernelTier::Neon] {
+            assert_eq!(KernelTier::parse(t.as_str()).unwrap(), t);
+        }
+        assert!(KernelTier::parse("sse9").is_err());
+    }
+
+    #[test]
+    fn detected_tier_is_available() {
+        let t = KernelTier::detect();
+        assert!(t.available());
+        assert!(KernelTier::Scalar.available());
+    }
+
+    #[test]
+    fn panel_f32_layout_maps_lmz_bytes() {
+        // 3x5 row-major source; check the documented index map, the zero
+        // padding, and the sizes.
+        let (d_in, d_out) = (3usize, 5usize);
+        let w: Vec<f32> = (0..d_in * d_out).map(|v| v as f32 + 1.0).collect();
+        let p = PanelF32::build(&w, d_in, d_out);
+        assert_eq!(p.d_in_pad, F32_LANES);
+        assert_eq!(p.data.len(), 2 * F32_PANEL_COLS * F32_LANES);
+        for i in 0..d_in {
+            for j in 0..d_out {
+                let idx = (j / F32_PANEL_COLS) * F32_PANEL_COLS * p.d_in_pad
+                    + (i / F32_LANES) * F32_LANES * F32_PANEL_COLS
+                    + (j % F32_PANEL_COLS) * F32_LANES
+                    + i % F32_LANES;
+                assert_eq!(p.data[idx], w[i * d_out + j]);
+            }
+        }
+        // Everything not covered by the map is zero padding.
+        let live: f64 = w.iter().map(|&v| v as f64).sum();
+        let total: f64 = p.data.iter().map(|&v| v as f64).sum();
+        assert_eq!(live, total);
+    }
+
+    #[test]
+    fn panel_i8_layout_is_transposed_rows() {
+        let (d_in, d_out) = (5usize, 3usize);
+        let wq: Vec<i8> = (0..d_in * d_out).map(|v| v as i8 - 7).collect();
+        let p = PanelI8::build(&wq, d_in, d_out);
+        assert_eq!(p.d_in_pad, I8_LANES);
+        assert_eq!(p.data.len(), d_out * I8_LANES);
+        for i in 0..d_in {
+            for j in 0..d_out {
+                assert_eq!(p.data[j * p.d_in_pad + i], wq[i * d_out + j]);
+            }
+            for j in 0..d_out {
+                assert!(p.data[j * p.d_in_pad + d_in..(j + 1) * p.d_in_pad].iter().all(|&v| v == 0));
+            }
+        }
+    }
+}

@@ -1,0 +1,280 @@
+//! NEON kernels (aarch64). Bit-identical to `scalar` by construction.
+//!
+//! The 8 virtual f32 lanes live in **two** `float32x4_t` accumulators
+//! (lanes 0–3 and 4–7); `vaddq_f32(lo, hi)` produces exactly the
+//! `s_k = l_k + l_{k+4}` vector of the canonical combine, and the final
+//! `(s0+s2) + (s1+s3)` is done with scalar lane extracts — NOT
+//! `vaddvq_f32`, whose `faddp`-pair order `(s0+s1) + (s2+s3)` would
+//! change the bits.
+//!
+//! **No FMA**: every multiply-accumulate is `vaddq_f32(acc,
+//! vmulq_f32(a, b))`, never `vmlaq_f32`/`vfmaq_f32` (those emit fused
+//! FMLA, which skips the intermediate rounding the scalar spec
+//! performs).
+//!
+//! i8 dots: `vmull_s8` widens products to i16 (each ≤ 127², exact),
+//! `vpadalq_s16` pairwise-accumulates into i32 lanes, `vaddvq_s32`
+//! folds — all integer, all exact, order-free.
+
+use super::{PanelF32, PanelI8, F32_LANES, F32_PANEL_COLS, I8_LANES};
+use core::arch::aarch64::*;
+
+/// Canonical tree combine from the two half-accumulators.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn combine2q(lo: float32x4_t, hi: float32x4_t) -> f32 {
+    let s = vaddq_f32(lo, hi); // s_k = l_k + l_{k+4}
+    let s0 = vgetq_lane_f32(s, 0);
+    let s1 = vgetq_lane_f32(s, 1);
+    let s2 = vgetq_lane_f32(s, 2);
+    let s3 = vgetq_lane_f32(s, 3);
+    (s0 + s2) + (s1 + s3)
+}
+
+/// # Safety
+/// Requires NEON (checked once at model load).
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc_lo = vdupq_n_f32(0.0);
+    let mut acc_hi = vdupq_n_f32(0.0);
+    let mut i = 0;
+    while i + F32_LANES <= n {
+        let a_lo = vld1q_f32(a.as_ptr().add(i));
+        let a_hi = vld1q_f32(a.as_ptr().add(i + 4));
+        let b_lo = vld1q_f32(b.as_ptr().add(i));
+        let b_hi = vld1q_f32(b.as_ptr().add(i + 4));
+        acc_lo = vaddq_f32(acc_lo, vmulq_f32(a_lo, b_lo));
+        acc_hi = vaddq_f32(acc_hi, vmulq_f32(a_hi, b_hi));
+        i += F32_LANES;
+    }
+    if i < n {
+        let mut ta = [0.0f32; F32_LANES];
+        let mut tb = [0.0f32; F32_LANES];
+        ta[..n - i].copy_from_slice(&a[i..]);
+        tb[..n - i].copy_from_slice(&b[i..]);
+        acc_lo = vaddq_f32(acc_lo, vmulq_f32(vld1q_f32(ta.as_ptr()), vld1q_f32(tb.as_ptr())));
+        acc_hi = vaddq_f32(
+            acc_hi,
+            vmulq_f32(vld1q_f32(ta.as_ptr().add(4)), vld1q_f32(tb.as_ptr().add(4))),
+        );
+    }
+    combine2q(acc_lo, acc_hi)
+}
+
+/// # Safety
+/// Requires NEON (checked once at model load).
+#[target_feature(enable = "neon")]
+pub unsafe fn matmul_f32_panel(
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    xs: &[f32],
+    p: &PanelF32,
+    ys: &mut [f32],
+) {
+    let full = d_in / F32_LANES;
+    let rem = d_in % F32_LANES;
+    let n_panels = p.data.len() / (F32_PANEL_COLS * p.d_in_pad);
+    for l in 0..n {
+        let x = &xs[l * d_in..(l + 1) * d_in];
+        let mut xt = [0.0f32; F32_LANES];
+        if rem > 0 {
+            xt[..rem].copy_from_slice(&x[full * F32_LANES..]);
+        }
+        let y = &mut ys[l * d_out..(l + 1) * d_out];
+        for pi in 0..n_panels {
+            let base = p.data.as_ptr().add(pi * F32_PANEL_COLS * p.d_in_pad);
+            // One (lo, hi) accumulator pair per interleaved output.
+            let mut acc = [vdupq_n_f32(0.0); 8];
+            for k in 0..full {
+                let x_lo = vld1q_f32(x.as_ptr().add(k * F32_LANES));
+                let x_hi = vld1q_f32(x.as_ptr().add(k * F32_LANES + 4));
+                let g = base.add(k * F32_LANES * F32_PANEL_COLS);
+                for r in 0..F32_PANEL_COLS {
+                    let w_lo = vld1q_f32(g.add(r * F32_LANES));
+                    let w_hi = vld1q_f32(g.add(r * F32_LANES + 4));
+                    acc[2 * r] = vaddq_f32(acc[2 * r], vmulq_f32(x_lo, w_lo));
+                    acc[2 * r + 1] = vaddq_f32(acc[2 * r + 1], vmulq_f32(x_hi, w_hi));
+                }
+            }
+            if rem > 0 {
+                let x_lo = vld1q_f32(xt.as_ptr());
+                let x_hi = vld1q_f32(xt.as_ptr().add(4));
+                let g = base.add(full * F32_LANES * F32_PANEL_COLS);
+                for r in 0..F32_PANEL_COLS {
+                    let w_lo = vld1q_f32(g.add(r * F32_LANES));
+                    let w_hi = vld1q_f32(g.add(r * F32_LANES + 4));
+                    acc[2 * r] = vaddq_f32(acc[2 * r], vmulq_f32(x_lo, w_lo));
+                    acc[2 * r + 1] = vaddq_f32(acc[2 * r + 1], vmulq_f32(x_hi, w_hi));
+                }
+            }
+            let j0 = pi * F32_PANEL_COLS;
+            let live = F32_PANEL_COLS.min(d_out - j0);
+            for r in 0..live {
+                y[j0 + r] += combine2q(acc[2 * r], acc[2 * r + 1]);
+            }
+        }
+    }
+}
+
+/// Exact i8×i8 dot over one zero-padded block pair.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn mac_i8(acc: int32x4_t, va: int8x16_t, vb: int8x16_t) -> int32x4_t {
+    let lo = vmull_s8(vget_low_s8(va), vget_low_s8(vb));
+    let hi = vmull_s8(vget_high_s8(va), vget_high_s8(vb));
+    vpadalq_s16(vpadalq_s16(acc, lo), hi)
+}
+
+/// # Safety
+/// Requires NEON (checked once at model load).
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let full = n / I8_LANES;
+    let rem = n % I8_LANES;
+    let mut acc = vdupq_n_s32(0);
+    for k in 0..full {
+        let va = vld1q_s8(a.as_ptr().add(k * I8_LANES));
+        let vb = vld1q_s8(b.as_ptr().add(k * I8_LANES));
+        acc = mac_i8(acc, va, vb);
+    }
+    if rem > 0 {
+        let mut ta = [0i8; I8_LANES];
+        let mut tb = [0i8; I8_LANES];
+        ta[..rem].copy_from_slice(&a[full * I8_LANES..]);
+        tb[..rem].copy_from_slice(&b[full * I8_LANES..]);
+        acc = mac_i8(acc, vld1q_s8(ta.as_ptr()), vld1q_s8(tb.as_ptr()));
+    }
+    vaddvq_s32(acc)
+}
+
+/// # Safety
+/// Requires NEON (checked once at model load).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+pub unsafe fn matmul_i8_panel(
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    p: &PanelI8,
+    ws: &[f32],
+    qx: &[i8],
+    sx: &[f32],
+    ys: &mut [f32],
+) {
+    let full = d_in / I8_LANES;
+    let rem = d_in % I8_LANES;
+    for l in 0..n {
+        let s = sx[l];
+        if s == 0.0 {
+            continue;
+        }
+        let q = &qx[l * d_in..(l + 1) * d_in];
+        let mut qt = [0i8; I8_LANES];
+        if rem > 0 {
+            qt[..rem].copy_from_slice(&q[full * I8_LANES..]);
+        }
+        let y = &mut ys[l * d_out..(l + 1) * d_out];
+        for j in 0..d_out {
+            let row = p.data.as_ptr().add(j * p.d_in_pad);
+            let mut acc = vdupq_n_s32(0);
+            for k in 0..full {
+                acc = mac_i8(
+                    acc,
+                    vld1q_s8(q.as_ptr().add(k * I8_LANES)),
+                    vld1q_s8(row.add(k * I8_LANES)),
+                );
+            }
+            if rem > 0 {
+                // Panel rows are zero-padded past d_in: full-width tail
+                // load is in-bounds and exact.
+                acc = mac_i8(acc, vld1q_s8(qt.as_ptr()), vld1q_s8(row.add(full * I8_LANES)));
+            }
+            y[j] += s * ws[j] * vaddvq_s32(acc) as f32;
+        }
+    }
+}
+
+/// # Safety
+/// Requires NEON (checked once at model load).
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let va = vdupq_n_f32(a);
+    let mut i = 0;
+    while i + 4 <= n {
+        let xv = vld1q_f32(x.as_ptr().add(i));
+        let yv = vld1q_f32(y.as_ptr().add(i));
+        vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(yv, vmulq_f32(va, xv)));
+        i += 4;
+    }
+    while i < n {
+        y[i] += a * x[i];
+        i += 1;
+    }
+}
+
+/// Quantize four activations: `clamp(trunc(t + copysign(0.5, t)))`.
+/// `vcvtq_s32_f32` truncates toward zero, matching
+/// `scalar::quantize_one` (round(t) == trunc(t + copysign(0.5, t)) for
+/// the in-domain |t| ≤ 127).
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn quant4(ptr: *const f32, inv: f32) -> int32x4_t {
+    let sign = vdupq_n_u32(0x8000_0000);
+    let half_bits = vdupq_n_u32(0x3F00_0000); // +0.5f32
+    let t = vmulq_n_f32(vld1q_f32(ptr), inv);
+    let tb = vreinterpretq_u32_f32(t);
+    let half = vreinterpretq_f32_u32(vorrq_u32(vandq_u32(tb, sign), half_bits));
+    let r = vcvtq_s32_f32(vaddq_f32(t, half));
+    vminq_s32(vmaxq_s32(r, vdupq_n_s32(-127)), vdupq_n_s32(127))
+}
+
+/// # Safety
+/// Requires NEON (checked once at model load).
+#[target_feature(enable = "neon")]
+pub unsafe fn quantize_lanes(n: usize, d: usize, xs: &[f32], qx: &mut [i8], sx: &mut [f32]) {
+    for l in 0..n {
+        let row = &xs[l * d..(l + 1) * d];
+        let mut vm = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 4 <= d {
+            vm = vmaxq_f32(vm, vabsq_f32(vld1q_f32(row.as_ptr().add(i))));
+            i += 4;
+        }
+        let mut maxabs = vmaxvq_f32(vm);
+        for &v in &row[i..] {
+            maxabs = maxabs.max(v.abs());
+        }
+
+        let q = &mut qx[l * d..(l + 1) * d];
+        if maxabs == 0.0 {
+            sx[l] = 0.0;
+            q.fill(0);
+            continue;
+        }
+        let scale = maxabs / 127.0;
+        sx[l] = scale;
+        let inv = 1.0 / scale;
+
+        let mut i = 0;
+        while i + F32_LANES <= d {
+            let c_lo = quant4(row.as_ptr().add(i), inv);
+            let c_hi = quant4(row.as_ptr().add(i + 4), inv);
+            let p16 = vcombine_s16(vqmovn_s32(c_lo), vqmovn_s32(c_hi));
+            let p8 = vqmovn_s16(p16);
+            let mut out = [0i8; 8];
+            vst1_s8(out.as_mut_ptr(), p8);
+            q[i..i + F32_LANES].copy_from_slice(&out);
+            i += F32_LANES;
+        }
+        for (qi, &v) in q[i..].iter_mut().zip(&row[i..]) {
+            *qi = super::scalar::quantize_one(v, inv);
+        }
+    }
+}

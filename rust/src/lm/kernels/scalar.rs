@@ -1,0 +1,248 @@
+//! Portable kernels — the bit-exact *specification* the vector tiers
+//! reproduce.
+//!
+//! Every f32 reduction here is the fixed-tree order: accumulate into
+//! [`F32_LANES`] virtual lanes (element `i` into lane `i % 8`; a
+//! remainder of `r` elements touches lanes `0..r`, exactly as if the
+//! input were zero-padded), then combine as
+//! `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))` — the natural AVX2
+//! `extractf128/movehl/shuffle` horizontal add. The vector tiers perform
+//! the same adds on the same values in the same order, just in fewer
+//! instructions.
+
+use super::{PanelF32, PanelI8, F32_LANES, F32_PANEL_COLS};
+
+/// The canonical 8-lane combine. `s = vaddq(acc_lo, acc_hi)` /
+/// `_mm_add_ps(cast128, extract128)` leaves `s[k] = l_k + l_{k+4}`; the
+/// final two adds mirror `movehl` + `shuffle(1)`.
+#[inline(always)]
+pub fn combine8(lanes: &[f32; F32_LANES]) -> f32 {
+    let s0 = lanes[0] + lanes[4];
+    let s1 = lanes[1] + lanes[5];
+    let s2 = lanes[2] + lanes[6];
+    let s3 = lanes[3] + lanes[7];
+    (s0 + s2) + (s1 + s3)
+}
+
+/// Fixed-tree dot of two contiguous slices.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; F32_LANES];
+    let mut i = 0;
+    while i + F32_LANES <= a.len() {
+        for j in 0..F32_LANES {
+            lanes[j] += a[i + j] * b[i + j];
+        }
+        i += F32_LANES;
+    }
+    for j in 0..a.len() - i {
+        lanes[j] += a[i + j] * b[i + j];
+    }
+    combine8(&lanes)
+}
+
+/// Fixed-tree dot of `x` against column `col` of a row-major
+/// `[d_in, d_out]` matrix (stride `d_out`). Same tree as [`dot_f32`] —
+/// only the addressing differs.
+#[inline]
+pub fn dot_f32_col(x: &[f32], w: &[f32], col: usize, d_out: usize) -> f32 {
+    let mut lanes = [0.0f32; F32_LANES];
+    let mut i = 0;
+    while i + F32_LANES <= x.len() {
+        for j in 0..F32_LANES {
+            lanes[j] += x[i + j] * w[(i + j) * d_out + col];
+        }
+        i += F32_LANES;
+    }
+    for j in 0..x.len() - i {
+        lanes[j] += x[i + j] * w[(i + j) * d_out + col];
+    }
+    combine8(&lanes)
+}
+
+/// No-panel f32 matmul: per-output strided tree walk. Used by every tier
+/// when panels are disabled — identical bits to the panel kernels,
+/// scalar speed.
+pub fn matmul_f32_cols(n: usize, d_in: usize, d_out: usize, xs: &[f32], w: &[f32], ys: &mut [f32]) {
+    debug_assert_eq!(w.len(), d_in * d_out);
+    for l in 0..n {
+        let x = &xs[l * d_in..(l + 1) * d_in];
+        let y = &mut ys[l * d_out..(l + 1) * d_out];
+        for (j, yj) in y.iter_mut().enumerate() {
+            *yj += dot_f32_col(x, w, j, d_out);
+        }
+    }
+}
+
+/// Panel f32 matmul, scalar tier. Walks the interleaved panel exactly
+/// like the vector kernels but one element at a time; the padded rows
+/// beyond `d_in` contribute `x_pad * 0.0` terms that cannot change the
+/// accumulator bits, so this loop simply stops at `d_in`.
+pub fn matmul_f32_panel(n: usize, d_in: usize, d_out: usize, xs: &[f32], p: &PanelF32, ys: &mut [f32]) {
+    let full = d_in / F32_LANES;
+    let rem = d_in % F32_LANES;
+    let n_panels = p.data.len() / (F32_PANEL_COLS * p.d_in_pad);
+    for l in 0..n {
+        let x = &xs[l * d_in..(l + 1) * d_in];
+        let y = &mut ys[l * d_out..(l + 1) * d_out];
+        for pi in 0..n_panels {
+            let base = pi * F32_PANEL_COLS * p.d_in_pad;
+            for r in 0..F32_PANEL_COLS {
+                let j = pi * F32_PANEL_COLS + r;
+                if j >= d_out {
+                    break;
+                }
+                let mut lanes = [0.0f32; F32_LANES];
+                for k in 0..full {
+                    let g = base + k * F32_LANES * F32_PANEL_COLS + r * F32_LANES;
+                    for jj in 0..F32_LANES {
+                        lanes[jj] += x[k * F32_LANES + jj] * p.data[g + jj];
+                    }
+                }
+                if rem > 0 {
+                    let g = base + full * F32_LANES * F32_PANEL_COLS + r * F32_LANES;
+                    for jj in 0..rem {
+                        lanes[jj] += x[full * F32_LANES + jj] * p.data[g + jj];
+                    }
+                }
+                y[j] += combine8(&lanes);
+            }
+        }
+    }
+}
+
+/// Exact i8×i8 dot. `a.len() * 127 * 127` fits i32 with orders of
+/// magnitude to spare for every model width, so accumulation order is
+/// irrelevant.
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0i32;
+    for i in 0..a.len() {
+        acc += a[i] as i32 * b[i] as i32;
+    }
+    acc
+}
+
+/// No-panel i8 matmul: the seed engine's row-major axpy walk over the
+/// unchanged `.lmz` layout (skipping zero codes), kept as the fallback
+/// when panels are disabled. The i32 accumulators are exact, so this
+/// produces the same bytes as the panel dot kernels on any tier.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_i8_axpy(
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    wq: &[i8],
+    ws: &[f32],
+    qx: &[i8],
+    sx: &[f32],
+    acc: &mut [i32],
+    ys: &mut [f32],
+) {
+    debug_assert_eq!(wq.len(), d_in * d_out);
+    let acc = &mut acc[..n * d_out];
+    acc.fill(0);
+    for l in 0..n {
+        if sx[l] == 0.0 {
+            continue;
+        }
+        let q = &qx[l * d_in..(l + 1) * d_in];
+        let a = &mut acc[l * d_out..(l + 1) * d_out];
+        for (i, &qi) in q.iter().enumerate() {
+            if qi == 0 {
+                continue;
+            }
+            let xi = qi as i32;
+            let row = &wq[i * d_out..(i + 1) * d_out];
+            for (aj, &rj) in a.iter_mut().zip(row) {
+                *aj += xi * rj as i32;
+            }
+        }
+    }
+    for l in 0..n {
+        let s = sx[l];
+        if s == 0.0 {
+            continue;
+        }
+        let a = &acc[l * d_out..(l + 1) * d_out];
+        let y = &mut ys[l * d_out..(l + 1) * d_out];
+        for j in 0..d_out {
+            y[j] += s * ws[j] * a[j] as f32;
+        }
+    }
+}
+
+/// Panel i8 matmul, scalar tier: contiguous per-output dot over the
+/// transposed rows.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_i8_panel(
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    p: &PanelI8,
+    ws: &[f32],
+    qx: &[i8],
+    sx: &[f32],
+    ys: &mut [f32],
+) {
+    for l in 0..n {
+        let s = sx[l];
+        if s == 0.0 {
+            continue;
+        }
+        let q = &qx[l * d_in..(l + 1) * d_in];
+        let y = &mut ys[l * d_out..(l + 1) * d_out];
+        for j in 0..d_out {
+            let row = &p.data[j * p.d_in_pad..j * p.d_in_pad + d_in];
+            y[j] += s * ws[j] * dot_i8(q, row) as f32;
+        }
+    }
+}
+
+/// `y[i] += a * x[i]`.
+#[inline]
+pub fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// Round-half-away-from-zero as `trunc(t + copysign(0.5, t))` — equal to
+/// `f32::round` for every `|t| < 2^22` (here `|t| ≤ ~127.5`, and `t +
+/// 0.5` is exact in that range), but expressible with plain vector
+/// ops (`or`/`add`/`round-to-zero`) so scalar and vector tiers share the
+/// formula verbatim.
+#[inline(always)]
+pub fn quantize_one(v: f32, inv: f32) -> i8 {
+    let t = v * inv;
+    let r = (t + 0.5f32.copysign(t)).trunc();
+    r.clamp(-127.0, 127.0) as i8
+}
+
+/// Per-lane symmetric quantization (see the dispatch wrapper for the
+/// contract). Max-abs is order-free: `|x|` values are non-negative, so
+/// `max` is a pure selection with no sign-of-zero pitfalls.
+pub fn quantize_lanes(n: usize, d: usize, xs: &[f32], qx: &mut [i8], sx: &mut [f32]) {
+    for l in 0..n {
+        let row = &xs[l * d..(l + 1) * d];
+        let mut maxabs = 0.0f32;
+        for &v in row {
+            maxabs = maxabs.max(v.abs());
+        }
+        let q = &mut qx[l * d..(l + 1) * d];
+        if maxabs == 0.0 {
+            sx[l] = 0.0;
+            q.fill(0);
+            continue;
+        }
+        let scale = maxabs / 127.0;
+        sx[l] = scale;
+        let inv = 1.0 / scale;
+        for (qi, &v) in q.iter_mut().zip(row) {
+            *qi = quantize_one(v, inv);
+        }
+    }
+}

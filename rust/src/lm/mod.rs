@@ -18,10 +18,18 @@
 //!   three purposes: a cross-check on the PJRT numerics, a fallback
 //!   executor that works without artifacts, and the reference for unit
 //!   tests.
+//! * [`kernels`] — the SIMD dispatch layer: one scalar *specification*
+//!   per (dtype, op) plus AVX2/NEON tiers that reproduce it bit for bit
+//!   (fixed-tree f32 reductions, exact i32 int8 accumulation). The tier
+//!   is resolved once at model load ([`kernels::KernelTier::resolve`],
+//!   overridable via `LLMZIP_FORCE_KERNEL`) and stored in the
+//!   [`weights::ResolvedPlan`] next to the optional interleaved-panel
+//!   weight layout the vector matmuls stream from.
 //! * [`reference`] — the **frozen seed implementation** (string-keyed
-//!   lookups, per-token allocations). Never optimized; golden tests assert
-//!   the modern engine reproduces it bit for bit, and the runtime bench
-//!   reports the speedup against it.
+//!   lookups, per-token allocations, pre-PR6 ascending-order reductions).
+//!   Never optimized; golden tests pin the modern engine against an
+//!   independent fixed-tree re-derivation and bound its drift from this
+//!   seed, and the runtime bench reports the speedup against it.
 //! * [`executor`] — the [`executor::LmExecutor`] trait the compressor and
 //!   coordinator program against: per-lane stepping ([`executor::LmExecutor::step`] /
 //!   allocation-free [`executor::LmExecutor::step_into`]) plus the bulk
@@ -31,11 +39,13 @@
 
 pub mod config;
 pub mod executor;
+pub mod kernels;
 pub mod native;
 pub mod reference;
 pub mod weights;
 
 pub use config::{LmConfig, CODED_BYTES, MAX_CONTEXT, VOCAB};
 pub use executor::{ExecutorKind, LmExecutor};
+pub use kernels::{KernelOptions, KernelTier};
 pub use native::{NativeExecutor, Scratch, StepPool};
 pub use weights::{Precision, ResolvedPlan, TensorData, TensorView, Weights};

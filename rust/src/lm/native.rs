@@ -45,21 +45,30 @@
 //!   stealing schedule (asserted by the tests below and by
 //!   `tests/stress_elastic.rs` end-to-end).
 //!
-//! ## Dtype dispatch (int8 weight path)
+//! ## Kernel dispatch (SIMD + dtype)
 //!
-//! The matmul inner loops dispatch per tensor on
-//! [`crate::lm::weights::TensorView`]: f32 tensors run the original
-//! bit-exact kernels, int8-quantized tensors run [`matmul_acc_i8`] —
-//! per-lane dynamic activation quantization, an i8×i8 dot product with i32
-//! accumulation, and one f32 scale multiply per output element.
-//! Activations, norm gains and the KV cache stay f32. Integer accumulation
-//! is exactly associative, so the int8 path is deterministic and
-//! bit-identical across lane batchings and thread counts by construction
-//! (the lossless-decode requirement); it is *not* bit-equal to the f32
-//! path, which is why containers record the weight precision and
-//! fingerprint (see `compress/llm.rs`).
+//! Every hot loop — the projection matmuls, the attention score/value
+//! dots, the weight-tied head, and activation quantization — routes
+//! through [`crate::lm::kernels`]. A [`crate::lm::kernels::KernelTier`]
+//! (scalar / AVX2 / NEON) is resolved once at model load and stored in
+//! the [`ResolvedPlan`] along with optional interleaved-panel weight
+//! copies; there is exactly one implementation per (dtype, tier) and the
+//! engine never re-detects CPU features per call.
+//!
+//! Per-tensor dtype dispatch is unchanged in spirit: f32 tensors run the
+//! fixed-tree f32 kernels, int8-quantized tensors run per-lane dynamic
+//! activation quantization + an i8×i8 dot with i32 accumulation + one
+//! f32 scale multiply per output element. Activations, norm gains and
+//! the KV cache stay f32. The int8 dots are exactly associative and the
+//! f32 kernels share one fixed tree-order reduction across every tier
+//! (see `lm/kernels`), so logits are bit-identical across lane
+//! batchings, thread counts, pool sizes AND dispatch tiers by
+//! construction — the lossless-decode requirement. Int8 is still *not*
+//! bit-equal to f32, which is why containers record the weight
+//! precision and fingerprint (see `compress/llm.rs`).
 
 use crate::lm::config::{LmConfig, MAX_CONTEXT, VOCAB};
+use crate::lm::kernels::{self, KernelOptions, KernelTier};
 use crate::lm::weights::{ResolvedPlan, TensorView, Weights};
 use crate::Result;
 use std::collections::VecDeque;
@@ -73,150 +82,6 @@ use std::time::Duration;
 fn gelu(x: f32) -> f32 {
     const C: f32 = 0.797_884_6; // sqrt(2/pi)
     0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
-}
-
-/// Batched matvec-accumulate: `ys[l] += xs[l] @ w` for every lane `l`.
-/// `xs: [n, d_in]`, `w: [d_in, d_out]` row-major, `ys: [n, d_out]`.
-///
-/// Each row of `w` is read once per step and applied to all lanes (the
-/// cache-locality win of batching); per output element the accumulation
-/// runs over `i` in ascending order, exactly like the seed per-lane
-/// matvec, so results are bit-identical.
-#[inline]
-fn matmul_acc(n: usize, d_in: usize, d_out: usize, xs: &[f32], w: &[f32], ys: &mut [f32]) {
-    debug_assert_eq!(xs.len(), n * d_in);
-    debug_assert_eq!(w.len(), d_in * d_out);
-    debug_assert_eq!(ys.len(), n * d_out);
-    for i in 0..d_in {
-        let row = &w[i * d_out..(i + 1) * d_out];
-        for l in 0..n {
-            let xi = xs[l * d_in + i];
-            if xi == 0.0 {
-                continue;
-            }
-            let y = &mut ys[l * d_out..(l + 1) * d_out];
-            for (yj, &rj) in y.iter_mut().zip(row) {
-                *yj += xi * rj;
-            }
-        }
-    }
-}
-
-/// Per-lane symmetric quantization of activations to i8: `qx[l,i] =
-/// round(xs[l,i] / sx[l])` with `sx[l] = maxabs(xs[l,:]) / 127`. An
-/// all-zero lane gets `sx = 0` and an all-zero `qx` row (the dot product
-/// is then exactly zero). Deterministic: plain f32 divide + round.
-#[inline]
-fn quantize_lanes(n: usize, d: usize, xs: &[f32], qx: &mut [i8], sx: &mut [f32]) {
-    for l in 0..n {
-        let row = &xs[l * d..(l + 1) * d];
-        let mut maxabs = 0.0f32;
-        for &v in row {
-            maxabs = maxabs.max(v.abs());
-        }
-        let q = &mut qx[l * d..(l + 1) * d];
-        if maxabs == 0.0 {
-            sx[l] = 0.0;
-            q.fill(0);
-            continue;
-        }
-        let scale = maxabs / 127.0;
-        sx[l] = scale;
-        let inv = 1.0 / scale;
-        for (qi, &v) in q.iter_mut().zip(row) {
-            *qi = (v * inv).round().clamp(-127.0, 127.0) as i8;
-        }
-    }
-}
-
-/// Int8 batched matvec-accumulate: `ys[l] += xs[l] @ dequant(w)` for every
-/// lane, with `w` stored as i8 `[d_in, d_out]` row-major and one f32 scale
-/// per output column (`w[i,j] ≈ wq[i,j] * ws[j]`).
-///
-/// Activations are quantized per lane on the fly (f32 in, f32 out — only
-/// the dot products are integer), accumulated in i32 (exact for any
-/// summation order: `d_in * 127 * 127` stays far below `i32::MAX`), then
-/// scaled back once per output element. Per-lane work is independent, so
-/// results are bit-identical for any lane batching or thread partition.
-#[inline]
-fn matmul_acc_i8(
-    n: usize,
-    d_in: usize,
-    d_out: usize,
-    xs: &[f32],
-    wq: &[i8],
-    ws: &[f32],
-    ys: &mut [f32],
-    quant: &mut QuantScratch,
-) {
-    debug_assert_eq!(xs.len(), n * d_in);
-    quantize_lanes(n, d_in, xs, &mut quant.qx, &mut quant.sx);
-    matmul_acc_i8_prequant(n, d_in, d_out, wq, ws, ys, quant);
-}
-
-/// [`matmul_acc_i8`] with the activation quantization already done:
-/// `quant.qx`/`quant.sx` must hold the current `[n, d_in]` activations.
-/// Split out so consumers of one activation buffer (the q/k/v projections)
-/// quantize it once instead of three times.
-#[inline]
-fn matmul_acc_i8_prequant(
-    n: usize,
-    d_in: usize,
-    d_out: usize,
-    wq: &[i8],
-    ws: &[f32],
-    ys: &mut [f32],
-    quant: &mut QuantScratch,
-) {
-    debug_assert_eq!(wq.len(), d_in * d_out);
-    debug_assert_eq!(ws.len(), d_out);
-    debug_assert_eq!(ys.len(), n * d_out);
-    let acc = &mut quant.acc[..n * d_out];
-    acc.fill(0);
-    for i in 0..d_in {
-        let row = &wq[i * d_out..(i + 1) * d_out];
-        for l in 0..n {
-            let q = quant.qx[l * d_in + i] as i32;
-            if q == 0 {
-                continue;
-            }
-            let a = &mut acc[l * d_out..(l + 1) * d_out];
-            for (aj, &rj) in a.iter_mut().zip(row) {
-                *aj += q * rj as i32;
-            }
-        }
-    }
-    for l in 0..n {
-        let s = quant.sx[l];
-        if s == 0.0 {
-            continue;
-        }
-        let y = &mut ys[l * d_out..(l + 1) * d_out];
-        let a = &acc[l * d_out..(l + 1) * d_out];
-        for ((yj, &aj), &wsj) in y.iter_mut().zip(a).zip(ws) {
-            *yj += s * wsj * aj as f32;
-        }
-    }
-}
-
-/// Dtype dispatch for one projection: f32 tensors run the bit-exact
-/// [`matmul_acc`], int8 tensors run [`matmul_acc_i8`].
-#[inline]
-fn matmul_acc_view(
-    n: usize,
-    d_in: usize,
-    d_out: usize,
-    xs: &[f32],
-    w: TensorView<'_>,
-    ys: &mut [f32],
-    quant: &mut QuantScratch,
-) {
-    match w {
-        TensorView::F32(w) => matmul_acc(n, d_in, d_out, xs, w, ys),
-        TensorView::I8 { data, scales } => {
-            matmul_acc_i8(n, d_in, d_out, xs, data, scales, ys, quant)
-        }
-    }
 }
 
 /// RMS-norm `x` with `gain` into `out` (no allocation; same reduction
@@ -339,17 +204,80 @@ pub struct NativeModel {
 
 impl NativeModel {
     /// Accepts either an owned `Weights` (wrapped into a fresh `Arc`) or an
-    /// `Arc<Weights>` already shared with other replicas.
+    /// `Arc<Weights>` already shared with other replicas. Kernel tier and
+    /// panel layout resolve to their defaults (environment override or
+    /// CPU detection; panels on).
     pub fn new(cfg: &'static LmConfig, weights: impl Into<Arc<Weights>>) -> Self {
-        let plan = ResolvedPlan::build(weights.into(), cfg)
-            .expect("weights were validated against param_spec at load");
+        Self::with_opts(cfg, weights, KernelOptions::default())
+            .expect("weights were validated against param_spec at load")
+    }
+
+    /// [`NativeModel::new`] with explicit kernel options (tests force a
+    /// tier programmatically; the serve path threads the panel knob
+    /// through here). Errors if an explicitly-requested tier is not
+    /// available on this CPU or the environment override is invalid.
+    pub fn with_opts(
+        cfg: &'static LmConfig,
+        weights: impl Into<Arc<Weights>>,
+        opts: KernelOptions,
+    ) -> Result<Self> {
+        let plan = ResolvedPlan::build_with(weights.into(), cfg, opts)?;
         let slopes = (0..cfg.n_heads).map(|h| cfg.alibi_slope(h)).collect();
-        NativeModel { cfg, plan, slopes }
+        Ok(NativeModel { cfg, plan, slopes })
     }
 
     /// The shared weight bundle (replicas clone this `Arc`, not the data).
     pub fn weights(&self) -> &Arc<Weights> {
         self.plan.weights()
+    }
+
+    /// The kernel dispatch tier this model resolved at load.
+    pub fn kernel_tier(&self) -> KernelTier {
+        self.plan.tier()
+    }
+
+    /// Whether this model's matmuls use the panel weight layout.
+    pub fn panels_enabled(&self) -> bool {
+        self.plan.panels_enabled()
+    }
+
+    /// One projection `ys += xs @ tensors[idx]` through the kernel layer:
+    /// dtype dispatch on the resolved view, panel lookup from the plan,
+    /// tier fixed at load. Int8 tensors quantize `xs` per lane first.
+    #[inline]
+    fn matmul_idx(
+        &self,
+        idx: usize,
+        n: usize,
+        d_in: usize,
+        d_out: usize,
+        xs: &[f32],
+        ys: &mut [f32],
+        quant: &mut QuantScratch,
+    ) {
+        let tier = self.plan.tier();
+        match self.plan.view(idx) {
+            TensorView::F32(w) => {
+                kernels::matmul_f32(tier, n, d_in, d_out, xs, w, self.plan.panel_f32(idx), ys)
+            }
+            TensorView::I8 { data, scales } => {
+                let QuantScratch { qx, sx, acc } = quant;
+                kernels::quantize_lanes(tier, n, d_in, xs, qx, sx);
+                kernels::matmul_i8(
+                    tier,
+                    n,
+                    d_in,
+                    d_out,
+                    data,
+                    scales,
+                    self.plan.panel_i8(idx),
+                    qx,
+                    sx,
+                    acc,
+                    ys,
+                );
+            }
+        }
     }
 
     /// Feed one token per lane; writes each lane's next-token logits into
@@ -389,6 +317,7 @@ impl NativeModel {
         let h = self.cfg.n_heads;
         let dh = self.cfg.d_head();
         let ffd = self.cfg.d_ff();
+        let tier = self.plan.tier();
         let embed = self.plan.view(self.plan.embed);
 
         // Token embeddings into the residual stream (int8 embed rows are
@@ -420,12 +349,6 @@ impl NativeModel {
             // alone); the projections dispatch per dtype.
             let attn_norm = self.plan.data(lp.attn_norm);
             let mlp_norm = self.plan.data(lp.mlp_norm);
-            let wq = self.plan.view(lp.wq);
-            let wk = self.plan.view(lp.wk);
-            let wv = self.plan.view(lp.wv);
-            let wo = self.plan.view(lp.wo);
-            let w1 = self.plan.view(lp.w1);
-            let w2 = self.plan.view(lp.w2);
 
             for l in 0..n {
                 rmsnorm_into(
@@ -440,18 +363,48 @@ impl NativeModel {
             let hn = &scratch.hn[..n * d];
             // The three attention projections consume the same activation
             // buffer: quantize it once and reuse it for every int8 tensor.
-            if [wq, wk, wv].iter().any(|w| matches!(w, TensorView::I8 { .. })) {
-                quantize_lanes(n, d, hn, &mut scratch.quant.qx, &mut scratch.quant.sx);
+            let qkv = [lp.wq, lp.wk, lp.wv];
+            if qkv.iter().any(|&i| matches!(self.plan.view(i), TensorView::I8 { .. })) {
+                kernels::quantize_lanes(
+                    tier,
+                    n,
+                    d,
+                    hn,
+                    &mut scratch.quant.qx,
+                    &mut scratch.quant.sx,
+                );
             }
-            for (w, ys) in [
-                (wq, &mut scratch.q[..n * d]),
-                (wk, &mut scratch.k[..n * d]),
-                (wv, &mut scratch.v[..n * d]),
+            for (idx, ys) in [
+                (lp.wq, &mut scratch.q[..n * d]),
+                (lp.wk, &mut scratch.k[..n * d]),
+                (lp.wv, &mut scratch.v[..n * d]),
             ] {
-                match w {
-                    TensorView::F32(w) => matmul_acc(n, d, d, hn, w, ys),
+                match self.plan.view(idx) {
+                    TensorView::F32(w) => kernels::matmul_f32(
+                        tier,
+                        n,
+                        d,
+                        d,
+                        hn,
+                        w,
+                        self.plan.panel_f32(idx),
+                        ys,
+                    ),
                     TensorView::I8 { data, scales } => {
-                        matmul_acc_i8_prequant(n, d, d, data, scales, ys, &mut scratch.quant)
+                        let QuantScratch { qx, sx, acc } = &mut scratch.quant;
+                        kernels::matmul_i8(
+                            tier,
+                            n,
+                            d,
+                            d,
+                            data,
+                            scales,
+                            self.plan.panel_i8(idx),
+                            qx,
+                            sx,
+                            acc,
+                            ys,
+                        );
                     }
                 }
             }
@@ -481,11 +434,8 @@ impl NativeModel {
                     for (j, sj) in scores.iter_mut().enumerate() {
                         let kj =
                             &lane.kv[lane.kv_slice(layer, 0, j)][head * dh..(head + 1) * dh];
-                        let mut dot = 0.0f32;
-                        for i in 0..dh {
-                            dot += qh[i] * kj[i];
-                        }
-                        let s = dot * scale - slope * (pos - j) as f32;
+                        let s = kernels::dot_f32(tier, qh, kj) * scale
+                            - slope * (pos - j) as f32;
                         max_s = max_s.max(s);
                         *sj = s;
                     }
@@ -499,15 +449,12 @@ impl NativeModel {
                     for (j, &w) in scores.iter().enumerate() {
                         let vj =
                             &lane.kv[lane.kv_slice(layer, 1, j)][head * dh..(head + 1) * dh];
-                        let wj = w * inv;
-                        for i in 0..dh {
-                            out_h[i] += wj * vj[i];
-                        }
+                        kernels::axpy_f32(tier, w * inv, vj, out_h);
                     }
                 }
             }
             let attn = &scratch.attn[..n * d];
-            matmul_acc_view(n, d, d, attn, wo, &mut scratch.x[..n * d], &mut scratch.quant);
+            self.matmul_idx(lp.wo, n, d, d, attn, &mut scratch.x[..n * d], &mut scratch.quant);
 
             for l in 0..n {
                 rmsnorm_into(
@@ -518,12 +465,12 @@ impl NativeModel {
             }
             scratch.ff[..n * ffd].fill(0.0);
             let hn = &scratch.hn[..n * d];
-            matmul_acc_view(n, d, ffd, hn, w1, &mut scratch.ff[..n * ffd], &mut scratch.quant);
+            self.matmul_idx(lp.w1, n, d, ffd, hn, &mut scratch.ff[..n * ffd], &mut scratch.quant);
             for v in scratch.ff[..n * ffd].iter_mut() {
                 *v = gelu(*v);
             }
             let ff = &scratch.ff[..n * ffd];
-            matmul_acc_view(n, ffd, d, ff, w2, &mut scratch.x[..n * d], &mut scratch.quant);
+            self.matmul_idx(lp.w2, n, ffd, d, ff, &mut scratch.x[..n * d], &mut scratch.quant);
         }
 
         // Final norm + weight-tied head (logits[v] = dot(xn, embed[v])).
@@ -542,27 +489,26 @@ impl NativeModel {
                 TensorView::F32(e) => {
                     for (v, lo) in out_l.iter_mut().take(head_rows).enumerate() {
                         let row = &e[v * d..(v + 1) * d];
-                        let mut dot = 0.0f32;
-                        for i in 0..d {
-                            dot += xn[i] * row[i];
-                        }
-                        *lo = dot;
+                        *lo = kernels::dot_f32(tier, xn, row);
                     }
                 }
                 TensorView::I8 { data, scales } => {
                     // Weight-tied int8 head: quantize this lane's normed
                     // state once, then one i32 dot + one scale multiply
                     // per coded logit row.
-                    quantize_lanes(1, d, xn, &mut scratch.quant.qx, &mut scratch.quant.sx);
+                    kernels::quantize_lanes(
+                        tier,
+                        1,
+                        d,
+                        xn,
+                        &mut scratch.quant.qx,
+                        &mut scratch.quant.sx,
+                    );
                     let qxn = &scratch.quant.qx[..d];
                     let sx = scratch.quant.sx[0];
                     for (v, lo) in out_l.iter_mut().take(head_rows).enumerate() {
                         let row = &data[v * d..(v + 1) * d];
-                        let mut dot = 0i32;
-                        for i in 0..d {
-                            dot += qxn[i] as i32 * row[i] as i32;
-                        }
-                        *lo = sx * scales[v] * dot as f32;
+                        *lo = sx * scales[v] * kernels::dot_i8(tier, qxn, row) as f32;
                     }
                 }
             }
@@ -930,12 +876,25 @@ impl NativeExecutor {
     /// other replicas (the coordinator's replica pool passes the latter,
     /// so N executors cost one copy of the tensors).
     pub fn new(cfg: &'static LmConfig, weights: impl Into<Arc<Weights>>, n_lanes: usize) -> Self {
-        let model = Arc::new(NativeModel::new(cfg, weights));
+        Self::with_opts(cfg, weights, n_lanes, KernelOptions::default())
+            .expect("weights were validated against param_spec at load")
+    }
+
+    /// [`NativeExecutor::new`] with explicit [`KernelOptions`] (forced
+    /// dispatch tier and/or panel layout off). Errors if the requested
+    /// tier is unavailable on this CPU.
+    pub fn with_opts(
+        cfg: &'static LmConfig,
+        weights: impl Into<Arc<Weights>>,
+        n_lanes: usize,
+        opts: KernelOptions,
+    ) -> Result<Self> {
+        let model = Arc::new(NativeModel::with_opts(cfg, weights, opts)?);
         let local = Some((
             (0..n_lanes).map(|_| LaneState::new(cfg, MAX_CONTEXT)).collect(),
             Scratch::new(cfg, n_lanes),
         ));
-        NativeExecutor {
+        Ok(NativeExecutor {
             model,
             n_lanes,
             threads: 1,
@@ -943,7 +902,12 @@ impl NativeExecutor {
             local,
             workers: Vec::new(),
             steal_pool: None,
-        }
+        })
+    }
+
+    /// The kernel dispatch tier the underlying model resolved at load.
+    pub fn tier(&self) -> KernelTier {
+        self.model.kernel_tier()
     }
 
     /// Partition lanes across `threads` persistent worker threads (clamped
@@ -1134,6 +1098,10 @@ impl crate::lm::executor::LmExecutor for NativeExecutor {
 
     fn lanes(&self) -> usize {
         self.n_lanes
+    }
+
+    fn kernel_tier(&self) -> &'static str {
+        self.model.kernel_tier().as_str()
     }
 
     fn reset(&mut self) {

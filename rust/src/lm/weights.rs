@@ -43,6 +43,7 @@
 //! memory only, never a second copy of the model.
 
 use crate::lm::config::{param_spec, LmConfig};
+use crate::lm::kernels::{KernelOptions, KernelTier, PanelF32, PanelI8, Panels};
 use crate::util::{crc32, read_u32_le};
 use crate::Result;
 use std::collections::HashMap;
@@ -175,6 +176,43 @@ pub struct Tensor {
     pub name: String,
     pub shape: Vec<usize>,
     pub data: TensorData,
+    /// Lazily-built interleaved-panel copy for the SIMD matmul kernels
+    /// (2-D projection tensors only; built at most once per bundle, so
+    /// every replica sharing an `Arc<Weights>` shares one panel copy).
+    /// Never serialized and excluded from the fingerprint: panels are a
+    /// deterministic function of `data`, not part of the `.lmz`
+    /// contract.
+    panels: OnceLock<Panels>,
+}
+
+impl Tensor {
+    fn new(name: String, shape: Vec<usize>, data: TensorData) -> Tensor {
+        Tensor { name, shape, data, panels: OnceLock::new() }
+    }
+
+    /// The panelized copy, if one has been built.
+    pub fn panels(&self) -> Option<&Panels> {
+        self.panels.get()
+    }
+
+    /// Build (once) and return the panelized copy of a 2-D tensor.
+    pub fn ensure_panels(&self) -> &Panels {
+        self.panels.get_or_init(|| {
+            assert_eq!(self.shape.len(), 2, "panels are for 2-D projection tensors");
+            let (d_in, d_out) = (self.shape[0], self.shape[1]);
+            match &self.data {
+                TensorData::F32(v) => Panels::F32(PanelF32::build(v, d_in, d_out)),
+                TensorData::I8 { data, .. } => Panels::I8(PanelI8::build(data, d_in, d_out)),
+            }
+        })
+    }
+
+    /// Resident bytes of this tensor: payload + scale table + any
+    /// panelized copy (panels roughly double a projection's footprint,
+    /// and the autoscaler's paging signals must see that).
+    pub fn resident_bytes(&self) -> usize {
+        self.data.resident_bytes() + self.panels.get().map_or(0, Panels::resident_bytes)
+    }
 }
 
 /// Whether a 2-D tensor's quantization scales run along its leading rows:
@@ -292,7 +330,7 @@ impl Weights {
                 }
                 other => anyhow::bail!("unknown dtype byte {other} for tensor '{name}'"),
             };
-            tensors.push(Tensor { name, shape, data: payload });
+            tensors.push(Tensor::new(name, shape, payload));
         }
         // Validate against the canonical spec (order, names, shapes, and
         // per-dtype invariants).
@@ -372,10 +410,14 @@ impl Weights {
         }
     }
 
-    /// Bytes of weight memory an engine streams per step (payloads + scale
-    /// tables; the quantization win the runtime bench reports).
+    /// Bytes of weight memory this bundle holds resident: payloads +
+    /// scale tables + any panelized kernel copies (see
+    /// [`Tensor::resident_bytes`]). With the panel layout enabled this
+    /// roughly doubles the projection weights — the autoscaler/paging
+    /// signals must not undercount that, and `ServerConfig` exposes a
+    /// knob to disable panels on memory-constrained hosts.
     pub fn resident_bytes(&self) -> usize {
-        self.tensors.iter().map(|t| t.data.resident_bytes()).sum()
+        self.tensors.iter().map(|t| t.resident_bytes()).sum()
     }
 
     /// Content fingerprint of the serialized bundle. Compressor and
@@ -453,7 +495,7 @@ impl Weights {
                     }
                     _ => t.data.clone(),
                 };
-                Tensor { name: t.name.clone(), shape: t.shape.clone(), data }
+                Tensor::new(t.name.clone(), t.shape.clone(), data)
             })
             .collect();
         let index = tensors.iter().enumerate().map(|(i, t)| (t.name.clone(), i)).collect();
@@ -486,7 +528,7 @@ impl Weights {
                     })
                     .collect()
             };
-            tensors.push(Tensor { name, shape, data: TensorData::F32(data) });
+            tensors.push(Tensor::new(name, shape, TensorData::F32(data)));
         }
         let index = tensors.iter().enumerate().map(|(i, t)| (t.name.clone(), i)).collect();
         Weights { tensors, index, version: WEIGHTS_VERSION_V1, fingerprint: OnceLock::new() }
@@ -555,13 +597,44 @@ pub struct ResolvedPlan {
     pub embed: usize,
     pub final_norm: usize,
     pub layers: Vec<LayerPlan>,
+    /// Kernel dispatch tier, selected once here at model load — the
+    /// engine never re-detects CPU features per call.
+    tier: KernelTier,
+    /// Whether matmuls may use the panelized weight copies. Gates access
+    /// only: panels already built on the shared bundle (by another
+    /// replica's plan) stay resident and counted either way.
+    use_panels: bool,
 }
 
 impl ResolvedPlan {
-    /// Resolve against a validated weight bundle. Shape errors cannot occur
-    /// here (the bundle was checked against `param_spec` at load), but a
-    /// missing name is still reported rather than panicking.
+    /// Resolve against a validated weight bundle with default kernel
+    /// options (tier from `LLMZIP_FORCE_KERNEL` or CPU detection, panel
+    /// layout enabled). Shape errors cannot occur here (the bundle was
+    /// checked against `param_spec` at load), but a missing name is
+    /// still reported rather than panicking.
     pub fn build(weights: Arc<Weights>, cfg: &LmConfig) -> Result<ResolvedPlan> {
+        Self::build_with(weights, cfg, KernelOptions::default())
+    }
+
+    /// Resolve with explicit kernel options. An explicitly-requested
+    /// tier the CPU cannot run is an error; with `opts.panels` the
+    /// interleaved panel copies for every projection tensor are built
+    /// here (deterministically, from the unchanged `.lmz` bytes) so the
+    /// hot path never takes the `OnceLock` initialization branch.
+    pub fn build_with(
+        weights: Arc<Weights>,
+        cfg: &LmConfig,
+        opts: KernelOptions,
+    ) -> Result<ResolvedPlan> {
+        let tier = match opts.tier {
+            Some(t) => {
+                if !t.available() {
+                    anyhow::bail!("kernel tier '{}' is not available on this CPU", t.as_str());
+                }
+                t
+            }
+            None => KernelTier::resolve()?,
+        };
         let mut layers = Vec::with_capacity(cfg.n_layers);
         for i in 0..cfg.n_layers {
             let p = format!("layer{i:02}.");
@@ -578,12 +651,50 @@ impl ResolvedPlan {
         }
         let embed = weights.tensor_index("embed")?;
         let final_norm = weights.tensor_index("final_norm")?;
-        Ok(ResolvedPlan { weights, embed, final_norm, layers })
+        if opts.panels {
+            for lp in &layers {
+                for idx in [lp.wq, lp.wk, lp.wv, lp.wo, lp.w1, lp.w2] {
+                    weights.tensors[idx].ensure_panels();
+                }
+            }
+        }
+        Ok(ResolvedPlan { weights, embed, final_norm, layers, tier, use_panels: opts.panels })
     }
 
     /// The shared weight bundle this plan indexes into.
     pub fn weights(&self) -> &Arc<Weights> {
         &self.weights
+    }
+
+    /// The dispatch tier every kernel call under this plan uses.
+    #[inline]
+    pub fn tier(&self) -> KernelTier {
+        self.tier
+    }
+
+    /// Whether this plan's matmuls use the panel layout.
+    pub fn panels_enabled(&self) -> bool {
+        self.use_panels
+    }
+
+    /// The f32 panel for a resolved projection index, when panels are
+    /// enabled, built, and the tensor is f32.
+    #[inline]
+    pub fn panel_f32(&self, idx: usize) -> Option<&PanelF32> {
+        if !self.use_panels {
+            return None;
+        }
+        self.weights.tensors[idx].panels().and_then(Panels::as_f32)
+    }
+
+    /// The i8 panel for a resolved projection index (see
+    /// [`ResolvedPlan::panel_f32`]).
+    #[inline]
+    pub fn panel_i8(&self, idx: usize) -> Option<&PanelI8> {
+        if !self.use_panels {
+            return None;
+        }
+        self.weights.tensors[idx].panels().and_then(Panels::as_i8)
     }
 
     /// Raw f32 data of the tensor at a resolved index (norm gains and
@@ -746,6 +857,55 @@ mod tests {
         assert_eq!(bad[dt], 1, "expected embed's i8 dtype byte");
         bad[dt] = 7;
         assert!(Weights::from_bytes(&bad, cfg).is_err());
+    }
+
+    #[test]
+    fn panels_are_shared_counted_and_gated() {
+        let cfg = by_name("nano").unwrap();
+        let w = Arc::new(Weights::random(cfg, 11));
+        let bare = w.resident_bytes();
+        // A panels-off plan builds nothing and exposes nothing.
+        let off = ResolvedPlan::build_with(
+            w.clone(),
+            cfg,
+            KernelOptions { tier: Some(KernelTier::Scalar), panels: false },
+        )
+        .unwrap();
+        assert_eq!(w.resident_bytes(), bare);
+        assert!(off.panel_f32(off.layers[0].wq).is_none());
+        // A panels-on plan builds them once; resident_bytes grows by
+        // roughly the projection payloads (all dims here are multiples
+        // of the lane widths, so panels add exactly the projection
+        // bytes), and a second plan reuses the same copies.
+        let on = ResolvedPlan::build(w.clone(), cfg).unwrap();
+        let with_panels = w.resident_bytes();
+        assert!(with_panels > bare, "panels must be counted");
+        let p1 = on.panel_f32(on.layers[0].wq).unwrap();
+        let on2 = ResolvedPlan::build(w.clone(), cfg).unwrap();
+        assert!(std::ptr::eq(p1, on2.panel_f32(on2.layers[0].wq).unwrap()));
+        assert_eq!(w.resident_bytes(), with_panels, "no duplicate panel builds");
+        // The panels-off plan still reports None even though the shared
+        // bundle now holds built panels.
+        assert!(off.panel_f32(off.layers[0].wq).is_none());
+        // Quantized projections get i8 panels.
+        let q = Arc::new(Weights::random(cfg, 11).quantize());
+        let qp = ResolvedPlan::build(q.clone(), cfg).unwrap();
+        assert!(qp.panel_i8(qp.layers[0].w1).is_some());
+        assert!(qp.panel_f32(qp.layers[0].w1).is_none());
+    }
+
+    #[test]
+    fn explicit_unavailable_tier_is_rejected() {
+        let cfg = by_name("nano").unwrap();
+        let w = Arc::new(Weights::random(cfg, 12));
+        // Exactly one of avx2/neon can ever be available on one host.
+        let foreign = if cfg!(target_arch = "x86_64") { KernelTier::Neon } else { KernelTier::Avx2 };
+        let res = ResolvedPlan::build_with(
+            w,
+            cfg,
+            KernelOptions { tier: Some(foreign), panels: true },
+        );
+        assert!(res.is_err());
     }
 
     #[test]

@@ -118,6 +118,10 @@ impl LmExecutor for PjrtForwardExecutor {
         self.batch
     }
 
+    fn kernel_tier(&self) -> &'static str {
+        "pjrt-hlo"
+    }
+
     fn reset(&mut self) {
         for f in self.fed.iter_mut() {
             f.clear();
@@ -200,6 +204,10 @@ impl LmExecutor for PjrtStepExecutor {
 
     fn lanes(&self) -> usize {
         self.batch
+    }
+
+    fn kernel_tier(&self) -> &'static str {
+        "pjrt-hlo"
     }
 
     fn reset(&mut self) {

@@ -46,6 +46,7 @@ fn replica_server(replicas: usize, threads: usize, weights: Arc<Weights>) -> Ser
                     lanes: 4,
                     threads,
                     precision,
+                    ..Default::default()
                 },
             )
         },
@@ -77,6 +78,7 @@ fn autoscale_server(weights: Arc<Weights>) -> Server {
                     lanes: 4,
                     threads: 1,
                     precision,
+                    ..Default::default()
                 },
             )
         },

@@ -1,0 +1,299 @@
+//! Property suite for the SIMD kernel layer: every tier available on this
+//! CPU must reproduce the scalar specification **bit for bit**, per
+//! primitive and end to end.
+//!
+//! * f32 ops: bitwise equality (`to_bits`) — the vector tiers share the
+//!   scalar path's fixed tree order, so this is equality by construction,
+//!   not tolerance.
+//! * i8 ops: the i32 accumulation is exact, so equality is plain `==`
+//!   (also checked against an independent i64 reference).
+//! * End to end: container bytes are identical across kernel tier × panel
+//!   layout × lanes × threads on every textgen domain, for f32 and int8
+//!   weights, and containers cross-decode between kernel variants.
+
+use llmzip::compress::{Compressor, LlmCompressor, LlmCompressorConfig};
+use llmzip::lm::config::by_name;
+use llmzip::lm::kernels::{self, KernelTier, PanelF32, PanelI8};
+use llmzip::lm::weights::Weights;
+use llmzip::lm::{ExecutorKind, Precision};
+use llmzip::textgen::{generate, Domain};
+use llmzip::util::Pcg64;
+use std::sync::Arc;
+
+/// Scalar first (the specification), then the best tier this CPU has —
+/// on a machine without SIMD this degenerates to `[Scalar]` and the suite
+/// still pins the panel/no-panel and e2e invariants.
+fn tiers() -> Vec<KernelTier> {
+    let mut out = vec![KernelTier::Scalar];
+    let best = KernelTier::detect();
+    if best != KernelTier::Scalar {
+        out.push(best);
+    }
+    out
+}
+
+fn rand_f32(rng: &mut Pcg64) -> f32 {
+    (rng.next_u32() as f32 / u32::MAX as f32) * 2.0 - 1.0
+}
+
+fn rand_vec_f32(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rand_f32(rng)).collect()
+}
+
+fn rand_vec_i8(rng: &mut Pcg64, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (rng.gen_range(255) as i64 - 127) as i8).collect()
+}
+
+/// Lengths that exercise full vector blocks, remainder lanes (1..7 for
+/// f32, 1..15 for i8), the empty tail, and sub-block inputs.
+const LENS: [usize; 20] =
+    [1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 24, 31, 32, 33, 48, 63, 64, 96, 127, 128];
+
+#[test]
+fn dot_f32_bitwise_across_tiers() {
+    let mut rng = Pcg64::seeded(11);
+    for &len in &LENS {
+        let a = rand_vec_f32(&mut rng, len);
+        let b = rand_vec_f32(&mut rng, len);
+        let want = kernels::dot_f32(KernelTier::Scalar, &a, &b);
+        for t in tiers() {
+            let got = kernels::dot_f32(t, &a, &b);
+            assert_eq!(got.to_bits(), want.to_bits(), "dot_f32 len {len} tier {t:?}");
+        }
+        // All-zero and exactly-cancelling inputs: the padded vector tail
+        // must not flip a +0.0 to -0.0 (sign bit is part of "bitwise").
+        let zeros = vec![0.0f32; len];
+        let negs: Vec<f32> = a.iter().map(|v| -v).collect();
+        for (x, y) in [(&zeros, &b), (&a, &zeros), (&negs, &b)] {
+            let want = kernels::dot_f32(KernelTier::Scalar, x, y);
+            for t in tiers() {
+                assert_eq!(
+                    kernels::dot_f32(t, x, y).to_bits(),
+                    want.to_bits(),
+                    "dot_f32 zero/neg len {len} tier {t:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dot_i8_exact_across_tiers() {
+    let mut rng = Pcg64::seeded(12);
+    for &len in &LENS {
+        let mut cases = vec![
+            (rand_vec_i8(&mut rng, len), rand_vec_i8(&mut rng, len)),
+            // Extremes: ±127 everywhere stresses the widening multiply
+            // (127*127 overflows i16 pairwise sums if an implementation
+            // ever tried to keep them narrow).
+            (vec![127i8; len], vec![127i8; len]),
+            (vec![-127i8; len], vec![127i8; len]),
+        ];
+        cases.push((vec![0i8; len], rand_vec_i8(&mut rng, len)));
+        for (a, b) in &cases {
+            let want: i64 = a.iter().zip(b).map(|(&x, &y)| x as i64 * y as i64).sum();
+            for t in tiers() {
+                let got = kernels::dot_i8(t, a, b);
+                assert_eq!(got as i64, want, "dot_i8 len {len} tier {t:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn axpy_f32_bitwise_across_tiers() {
+    let mut rng = Pcg64::seeded(13);
+    for &len in &LENS {
+        let x = rand_vec_f32(&mut rng, len);
+        let y0 = rand_vec_f32(&mut rng, len);
+        for a in [0.37f32, -1.25, 0.0, 1.0] {
+            let mut want = y0.clone();
+            kernels::axpy_f32(KernelTier::Scalar, a, &x, &mut want);
+            for t in tiers() {
+                let mut got = y0.clone();
+                kernels::axpy_f32(t, a, &x, &mut got);
+                let same = got.iter().zip(&want).all(|(g, w)| g.to_bits() == w.to_bits());
+                assert!(same, "axpy_f32 len {len} a {a} tier {t:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn quantize_lanes_matches_scalar() {
+    let mut rng = Pcg64::seeded(14);
+    for &d in &LENS {
+        let n = 3;
+        let mut xs = rand_vec_f32(&mut rng, n * d);
+        // Lane 1 all-zero: the contract is sx == 0.0 and zeroed codes
+        // (downstream matmuls skip such lanes entirely).
+        xs[d..2 * d].fill(0.0);
+        // Spice lane 2 with large magnitudes and negative zero.
+        for (i, v) in xs[2 * d..3 * d].iter_mut().enumerate() {
+            *v *= 1000.0;
+            if i % 7 == 3 {
+                *v = -0.0;
+            }
+        }
+        let mut want_q = vec![0i8; n * d];
+        let mut want_s = vec![0.0f32; n];
+        kernels::quantize_lanes(KernelTier::Scalar, n, d, &xs, &mut want_q, &mut want_s);
+        assert_eq!(want_s[1], 0.0, "all-zero lane must get sx == 0");
+        assert!(want_q[d..2 * d].iter().all(|&q| q == 0));
+        for t in tiers() {
+            let mut got_q = vec![0i8; n * d];
+            let mut got_s = vec![0.0f32; n];
+            kernels::quantize_lanes(t, n, d, &xs, &mut got_q, &mut got_s);
+            assert_eq!(got_q, want_q, "codes d {d} tier {t:?}");
+            let same = got_s.iter().zip(&want_s).all(|(g, w)| g.to_bits() == w.to_bits());
+            assert!(same, "scales d {d} tier {t:?}");
+        }
+    }
+}
+
+/// Shapes with remainder rows/columns against both block widths (8-wide
+/// f32 lanes, 4-wide panels, 16-wide i8 lanes).
+const SHAPES: [(usize, usize); 8] =
+    [(5, 3), (7, 9), (8, 4), (16, 12), (28, 8), (33, 17), (64, 48), (96, 40)];
+
+#[test]
+fn matmul_f32_panel_and_fallback_bitwise() {
+    let mut rng = Pcg64::seeded(15);
+    for &(d_in, d_out) in &SHAPES {
+        for n in [1usize, 3] {
+            let xs = rand_vec_f32(&mut rng, n * d_in);
+            let w = rand_vec_f32(&mut rng, d_in * d_out);
+            let base = rand_vec_f32(&mut rng, n * d_out); // accumulate semantics
+            let panel = PanelF32::build(&w, d_in, d_out);
+
+            let mut want = base.clone();
+            kernels::matmul_f32(KernelTier::Scalar, n, d_in, d_out, &xs, &w, None, &mut want);
+            for t in tiers() {
+                for p in [Some(&panel), None] {
+                    let mut got = base.clone();
+                    kernels::matmul_f32(t, n, d_in, d_out, &xs, &w, p, &mut got);
+                    let same =
+                        got.iter().zip(&want).all(|(g, v)| g.to_bits() == v.to_bits());
+                    assert!(
+                        same,
+                        "matmul_f32 {d_in}x{d_out} n {n} tier {t:?} panel {}",
+                        p.is_some()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn matmul_i8_panel_and_fallback_bitwise() {
+    let mut rng = Pcg64::seeded(16);
+    for &(d_in, d_out) in &SHAPES {
+        let n = 3;
+        let wq = rand_vec_i8(&mut rng, d_in * d_out);
+        let ws = rand_vec_f32(&mut rng, d_out);
+        let mut xs = rand_vec_f32(&mut rng, n * d_in);
+        xs[d_in..2 * d_in].fill(0.0); // sx == 0 lane: must be skipped, not zeroed
+        let mut qx = vec![0i8; n * d_in];
+        let mut sx = vec![0.0f32; n];
+        kernels::quantize_lanes(KernelTier::Scalar, n, d_in, &xs, &mut qx, &mut sx);
+        assert_eq!(sx[1], 0.0);
+        let base = rand_vec_f32(&mut rng, n * d_out);
+        let panel = PanelI8::build(&wq, d_in, d_out);
+
+        let mut want = base.clone();
+        let mut acc = vec![0i32; n * d_out];
+        kernels::matmul_i8(
+            KernelTier::Scalar, n, d_in, d_out, &wq, &ws, None, &qx, &sx, &mut acc, &mut want,
+        );
+        // The sx == 0 lane's outputs are exactly its `base` values.
+        assert_eq!(want[d_out..2 * d_out], base[d_out..2 * d_out]);
+        for t in tiers() {
+            for p in [Some(&panel), None] {
+                let mut got = base.clone();
+                let mut acc = vec![0i32; n * d_out];
+                kernels::matmul_i8(
+                    t, n, d_in, d_out, &wq, &ws, p, &qx, &sx, &mut acc, &mut got,
+                );
+                let same = got.iter().zip(&want).all(|(g, v)| g.to_bits() == v.to_bits());
+                assert!(
+                    same,
+                    "matmul_i8 {d_in}x{d_out} tier {t:?} panel {}",
+                    p.is_some()
+                );
+            }
+        }
+    }
+}
+
+/// Compressor variants that must all emit the same container bytes:
+/// kernel tier × panel layout × lane width × thread count.
+fn variants() -> Vec<LlmCompressorConfig> {
+    let mut out = Vec::new();
+    for tier in tiers() {
+        for panels in [true, false] {
+            out.push(LlmCompressorConfig {
+                chunk_tokens: 48,
+                stream_bytes: 192,
+                executor: ExecutorKind::Native,
+                lanes: 4,
+                threads: 2,
+                kernel: Some(tier),
+                panel_layout: panels,
+                ..Default::default()
+            });
+        }
+    }
+    // Batching/parallelism sweeps ride on the best tier with panels on
+    // (the production configuration).
+    out.push(LlmCompressorConfig {
+        chunk_tokens: 48,
+        stream_bytes: 192,
+        executor: ExecutorKind::Native,
+        lanes: 1,
+        threads: 1,
+        kernel: None, // auto-resolve path
+        panel_layout: true,
+        ..Default::default()
+    });
+    out
+}
+
+#[test]
+fn containers_identical_across_kernel_variants_all_domains() {
+    let cfg = by_name("nano").unwrap();
+    let f32_weights = Arc::new(Weights::random(cfg, 21));
+    let i8_weights = Arc::new(f32_weights.quantize());
+
+    let mut domains = Domain::EVAL.to_vec();
+    domains.push(Domain::Tpch);
+
+    for (precision, weights) in
+        [(Precision::F32, &f32_weights), (Precision::Int8, &i8_weights)]
+    {
+        let comps: Vec<LlmCompressor> = variants()
+            .into_iter()
+            .map(|mut c| {
+                c.precision = precision;
+                LlmCompressor::from_shared_pooled(cfg, weights.clone(), c, None).unwrap()
+            })
+            .collect();
+        for &domain in &domains {
+            let data = generate(domain, 600, 77);
+            let golden = comps[0].compress(&data).unwrap();
+            for (i, comp) in comps.iter().enumerate().skip(1) {
+                let z = comp.compress(&data).unwrap();
+                assert_eq!(
+                    z, golden,
+                    "container bytes diverged: {precision:?} {domain:?} variant {i}"
+                );
+            }
+            // Cross-decode: a forced-scalar/no-panel container decodes on
+            // the best-tier engine and vice versa.
+            let a = comps[0].decompress(&golden).unwrap();
+            let b = comps.last().unwrap().decompress(&golden).unwrap();
+            assert_eq!(a, data, "{precision:?} {domain:?}");
+            assert_eq!(b, data, "{precision:?} {domain:?}");
+        }
+    }
+}

@@ -45,6 +45,7 @@ fn compressor(precision: Precision) -> LlmCompressor {
             lanes: 2,
             threads: 1,
             precision,
+            ..Default::default()
         },
     )
     .unwrap()

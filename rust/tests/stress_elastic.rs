@@ -38,6 +38,7 @@ fn replica_cfg() -> LlmCompressorConfig {
         lanes: LANES,
         threads: 1,
         precision: llmzip::lm::Precision::F32,
+        ..Default::default()
     }
 }
 
