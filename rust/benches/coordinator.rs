@@ -15,7 +15,7 @@
 mod harness;
 
 use harness::{bench, section};
-use llmzip::compress::{LlmCompressor, LlmCompressorConfig};
+use llmzip::compress::{Codec, LlmCompressor, LlmCompressorConfig};
 use llmzip::coordinator::{
     BatchPolicy, DynamicBatcher, Priority, Server, ServerConfig, WorkItem, WorkKind,
 };
@@ -48,6 +48,7 @@ fn batcher_bench() {
                 priority: if i % 4 == 0 { Priority::Interactive } else { Priority::Bulk },
                 data: Vec::new(),
                 record: None,
+                codec: Codec::Range,
                 enqueued: now,
             });
         }

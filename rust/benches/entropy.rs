@@ -93,8 +93,8 @@ fn main() {
 
     section("FSE / tANS");
     let counts64: Vec<u64> = counts.to_vec();
-    let norm = fse::normalize_freqs(&counts64, 12);
-    let table = FseTable::new(&norm, 12);
+    let norm = fse::normalize_freqs(&counts64, 12).unwrap();
+    let table = FseTable::new(&norm, 12).unwrap();
     let symbols: Vec<usize> = data.iter().map(|&b| b as usize).collect();
     let mut fse_out = (0u32, Vec::new());
     bench("fse encode 1 MiB", 2.0, || {

@@ -18,6 +18,11 @@
 //! 3. **Coordinator replica scaling (always runs)** — end-to-end server
 //!    tokens/sec with 1 vs N engine replicas sharing one `Arc<Weights>`,
 //!    under concurrent client load.
+//! 3b. **Entropy backends (always runs)** — the `"entropy"` JSON section:
+//!    coder-stage MB/s of the adaptive range coder vs the table-driven
+//!    fse/tANS rank coder on a synthetic skewed rank stream, plus
+//!    end-to-end compression ratios (range vs fse) on a few textgen
+//!    domains through the nano model.
 //! 4. **PJRT runtime (requires `make artifacts`)** — forward/step call
 //!    latency, in-graph generation, compressor throughput per executor,
 //!    and the figure regenerations. Skipped with a message when artifacts
@@ -33,7 +38,7 @@
 mod harness;
 
 use harness::{bench, section};
-use llmzip::compress::{Compressor, LlmCompressor, LlmCompressorConfig};
+use llmzip::compress::{Codec, Compressor, LlmCompressor, LlmCompressorConfig};
 use llmzip::coordinator::{BatchPolicy, Server, ServerConfig};
 use llmzip::experiments::{self, DatasetCache};
 use llmzip::lm::config::{self, by_name, VOCAB};
@@ -548,6 +553,191 @@ fn replica_scaling_bench() -> Vec<ReplicaPoint> {
     points
 }
 
+struct EntropyCoderRow {
+    symbols: usize,
+    range_bytes: usize,
+    fse_bytes: usize,
+    range_encode_mbps: f64,
+    range_decode_mbps: f64,
+    fse_encode_mbps: f64,
+    fse_decode_mbps: f64,
+}
+
+struct EntropyRatioRow {
+    domain: String,
+    bytes: usize,
+    range_ratio: f64,
+    fse_ratio: f64,
+}
+
+/// Like `measure_tps` but counts `bytes` per iteration; returns MB/s.
+fn measure_mbps<F: FnMut()>(bytes: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let budget = budget_s();
+    let t0 = Instant::now();
+    let mut iters = 0usize;
+    while t0.elapsed().as_secs_f64() < budget {
+        f();
+        iters += 1;
+    }
+    (iters * bytes) as f64 / (1 << 20) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn entropy_benches() -> (EntropyCoderRow, Vec<EntropyRatioRow>) {
+    use llmzip::compress::llm::CDF_TOTAL;
+    use llmzip::compress::rank::{decode_rank_stream, encode_rank_stream};
+    use llmzip::entropy::{RangeDecoder, RangeEncoder};
+    use llmzip::textgen::Domain;
+
+    let n: usize = if smoke() { 1 << 16 } else { 1 << 20 };
+    section(&format!("entropy coder stage (skewed rank stream, {} KiB)", n >> 10));
+
+    // The stream the coder stage actually sees after the rank transform:
+    // heavily skewed toward rank 0, a geometric-ish tail, and a sprinkle
+    // of escape-range ranks (>= 64) — the same shape the fuzz suite uses.
+    let mut rng = Pcg64::seeded(0x0e117_0b5);
+    let ranks: Vec<u8> = (0..n)
+        .map(|_| {
+            let x = rng.gen_index(1000);
+            if x < 880 {
+                0
+            } else if x < 940 {
+                1 + rng.gen_index(3) as u8
+            } else if x < 985 {
+                4 + rng.gen_index(28) as u8
+            } else {
+                64 + rng.gen_index(192) as u8
+            }
+        })
+        .collect();
+
+    // Static CDF over the stream's own histogram, quantized to CDF_TOTAL
+    // with every symbol kept codable. The per-symbol arithmetic (one
+    // divide + multiply per encode/decode step) is exactly what the
+    // production range backend pays per token, so this isolates coder
+    // cost from model cost.
+    let mut counts = [1u64; 256];
+    for &r in &ranks {
+        counts[r as usize] += 1;
+    }
+    let total: u64 = counts.iter().sum();
+    let mut freqs = [0u32; 256];
+    let mut assigned = 0u32;
+    for i in 0..256 {
+        let f = (counts[i] as u128 * (CDF_TOTAL as u128 - 256) / total as u128) as u32 + 1;
+        freqs[i] = f;
+        assigned += f;
+    }
+    let top = (0..256).max_by_key(|&i| counts[i]).unwrap();
+    freqs[top] += CDF_TOTAL - assigned;
+    let mut cum = [0u32; 257];
+    for i in 0..256 {
+        cum[i + 1] = cum[i] + freqs[i];
+    }
+
+    let range_payload = {
+        let mut enc = RangeEncoder::new();
+        for &r in &ranks {
+            let s = r as usize;
+            enc.encode(cum[s], cum[s + 1] - cum[s], CDF_TOTAL);
+        }
+        enc.finish()
+    };
+    let fse_payload = encode_rank_stream(&ranks).expect("fse encode");
+
+    // Sanity before timing: both payloads decode back to the stream.
+    assert_eq!(decode_rank_stream(&fse_payload, n).expect("fse decode"), ranks);
+    {
+        let mut dec = RangeDecoder::new(&range_payload);
+        for &r in &ranks {
+            let target = dec.decode_freq(CDF_TOTAL);
+            let s = cum[1..].partition_point(|&c| c <= target);
+            dec.decode_update(cum[s], cum[s + 1] - cum[s]);
+            assert_eq!(s, r as usize);
+        }
+    }
+
+    let range_encode_mbps = measure_mbps(n, || {
+        let mut enc = RangeEncoder::new();
+        for &r in &ranks {
+            let s = r as usize;
+            enc.encode(cum[s], cum[s + 1] - cum[s], CDF_TOTAL);
+        }
+        std::hint::black_box(enc.finish());
+    });
+    let range_decode_mbps = measure_mbps(n, || {
+        let mut dec = RangeDecoder::new(&range_payload);
+        let mut out = vec![0u8; n];
+        for slot in out.iter_mut() {
+            let target = dec.decode_freq(CDF_TOTAL);
+            let s = cum[1..].partition_point(|&c| c <= target);
+            dec.decode_update(cum[s], cum[s + 1] - cum[s]);
+            *slot = s as u8;
+        }
+        std::hint::black_box(out);
+    });
+    let fse_encode_mbps = measure_mbps(n, || {
+        std::hint::black_box(encode_rank_stream(&ranks).unwrap());
+    });
+    let fse_decode_mbps = measure_mbps(n, || {
+        std::hint::black_box(decode_rank_stream(&fse_payload, n).unwrap());
+    });
+
+    println!(
+        "{:<30} {:>9.1} MB/s enc {:>9.1} MB/s dec  ({} bytes)",
+        "range (static cdf)", range_encode_mbps, range_decode_mbps, range_payload.len()
+    );
+    println!(
+        "{:<30} {:>9.1} MB/s enc {:>9.1} MB/s dec  ({} bytes)",
+        "fse/tANS (table-driven)", fse_encode_mbps, fse_decode_mbps, fse_payload.len()
+    );
+    println!(
+        "fse speedup: {:.2}x encode, {:.2}x decode",
+        fse_encode_mbps / range_encode_mbps.max(1e-9),
+        fse_decode_mbps / range_decode_mbps.max(1e-9)
+    );
+
+    let coder = EntropyCoderRow {
+        symbols: n,
+        range_bytes: range_payload.len(),
+        fse_bytes: fse_payload.len(),
+        range_encode_mbps,
+        range_decode_mbps,
+        fse_encode_mbps,
+        fse_decode_mbps,
+    };
+
+    // End-to-end: same model, same input, both backends — the ratio cost
+    // (or gain) of swapping the adaptive range coder for the table-driven
+    // one, per input domain.
+    section("entropy end-to-end ratio (nano, range vs fse)");
+    let cfg = by_name("nano").unwrap();
+    let bytes = if smoke() { 2048 } else { 16 * 1024 };
+    let range_c = LlmCompressor::from_weights(cfg, Weights::random(cfg, 17), 128, LANES)
+        .expect("range compressor");
+    let fse_c = LlmCompressor::from_weights(cfg, Weights::random(cfg, 17), 128, LANES)
+        .expect("fse compressor")
+        .with_codec(Codec::Fse);
+    let mut rows = Vec::new();
+    for domain in [Domain::EVAL[0], Domain::EVAL[2], Domain::EVAL[5]] {
+        let data = llmzip::textgen::generate(domain, bytes, 7);
+        let zr = range_c.compress(&data).unwrap();
+        let zf = fse_c.compress(&data).unwrap();
+        // Cross-decode keeps the bench honest about interoperability.
+        assert_eq!(range_c.decompress(&zf).unwrap(), data);
+        let range_ratio = data.len() as f64 / zr.len() as f64;
+        let fse_ratio = data.len() as f64 / zf.len() as f64;
+        println!("{domain:?}: range {range_ratio:.3}x  fse {fse_ratio:.3}x");
+        rows.push(EntropyRatioRow {
+            domain: format!("{domain:?}"),
+            bytes,
+            range_ratio,
+            fse_ratio,
+        });
+    }
+    (coder, rows)
+}
+
 /// Hand-rolled JSON (no serde in this offline crate set).
 fn write_bench_json(
     rows: &[NativeRow],
@@ -555,12 +745,14 @@ fn write_bench_json(
     kernel_tier: &str,
     kernel_rows: &[KernelRow],
     stream: &StreamRow,
+    entropy: &EntropyCoderRow,
+    entropy_e2e: &[EntropyRatioRow],
     replica_points: &[ReplicaPoint],
 ) {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"runtime\",\n");
-    s.push_str("  \"schema\": 4,\n");
+    s.push_str("  \"schema\": 5,\n");
     s.push_str(&format!("  \"lanes\": {LANES},\n"));
     s.push_str(&format!("  \"window\": {WINDOW},\n"));
     s.push_str("  \"unit\": \"tokens_per_sec\",\n");
@@ -625,6 +817,31 @@ fn write_bench_json(
         stream.stream_decompress_tps,
         stream.vm_hwm_kb,
     ));
+    s.push_str(&format!(
+        "  \"entropy\": {{\n    \"coder\": {{\"symbols\": {}, \"range_bytes\": {}, \
+         \"fse_bytes\": {}, \"range_encode_mbps\": {:.2}, \"range_decode_mbps\": {:.2}, \
+         \"fse_encode_mbps\": {:.2}, \"fse_decode_mbps\": {:.2}}},\n",
+        entropy.symbols,
+        entropy.range_bytes,
+        entropy.fse_bytes,
+        entropy.range_encode_mbps,
+        entropy.range_decode_mbps,
+        entropy.fse_encode_mbps,
+        entropy.fse_decode_mbps,
+    ));
+    s.push_str("    \"e2e\": [\n");
+    for (i, r) in entropy_e2e.iter().enumerate() {
+        s.push_str(&format!(
+            "      {{\"domain\": \"{}\", \"bytes\": {}, \"range_ratio\": {:.4}, \
+             \"fse_ratio\": {:.4}}}{}\n",
+            r.domain,
+            r.bytes,
+            r.range_ratio,
+            r.fse_ratio,
+            if i + 1 < entropy_e2e.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("    ]\n  },\n");
     s.push_str("  \"replica_scaling\": {\n");
     s.push_str("    \"model\": \"nano\", \"clients\": 8, \"unit\": \"tokens_per_sec\",\n");
     s.push_str("    \"points\": [\n");
@@ -744,8 +961,18 @@ fn main() {
     let rows = native_engine_benches();
     let int8_rows = int8_engine_benches();
     let (kernel_tier, kernel_rows) = kernel_benches();
+    let (entropy, entropy_e2e) = entropy_benches();
     let replica_points = replica_scaling_bench();
-    write_bench_json(&rows, &int8_rows, kernel_tier, &kernel_rows, &stream, &replica_points);
+    write_bench_json(
+        &rows,
+        &int8_rows,
+        kernel_tier,
+        &kernel_rows,
+        &stream,
+        &entropy,
+        &entropy_e2e,
+        &replica_points,
+    );
     if smoke() {
         println!("\nSKIP PJRT runtime bench: smoke mode");
         return;

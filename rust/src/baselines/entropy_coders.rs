@@ -98,8 +98,8 @@ impl Compressor for FseOrder0 {
         for &b in data {
             counts[b as usize] += 1;
         }
-        let norm = fse::normalize_freqs(&counts, FSE_TABLE_LOG);
-        let table = FseTable::new(&norm, FSE_TABLE_LOG);
+        let norm = fse::normalize_freqs(&counts, FSE_TABLE_LOG)?;
+        let table = FseTable::new(&norm, FSE_TABLE_LOG)?;
         let symbols: Vec<usize> = data.iter().map(|&b| b as usize).collect();
         let (state, payload) = fse::encode_all(&table, &symbols);
         out.extend_from_slice(&state.to_le_bytes());
@@ -124,8 +124,8 @@ impl Compressor for FseOrder0 {
         if state < (1 << FSE_TABLE_LOG) || state >= (2 << FSE_TABLE_LOG) {
             anyhow::bail!("corrupt fse state");
         }
-        let table = FseTable::new(&norm, FSE_TABLE_LOG);
-        let syms = fse::decode_all(&table, state, &data[12 + 512..], n);
+        let table = FseTable::new(&norm, FSE_TABLE_LOG)?;
+        let syms = fse::decode_all(&table, state, &data[12 + 512..], n)?;
         Ok(syms.into_iter().map(|s| s as u8).collect())
     }
 }

@@ -77,25 +77,25 @@ fn read_section<'a>(data: &'a [u8], pos: &mut usize) -> Result<&'a [u8]> {
 
 /// FSE-encode a slice of small symbols with a fresh table; returns the
 /// serialized section: `[n_syms u32][alphabet u16][table_log u8][state u32][norm][payload]`.
-fn fse_section(symbols: &[usize], alphabet: usize, table_log: u32) -> Vec<u8> {
+fn fse_section(symbols: &[usize], alphabet: usize, table_log: u32) -> Result<Vec<u8>> {
     let mut body = Vec::new();
     body.extend_from_slice(&(symbols.len() as u32).to_le_bytes());
     body.extend_from_slice(&(alphabet as u16).to_le_bytes());
     body.push(table_log as u8);
     if symbols.is_empty() {
-        return body;
+        return Ok(body);
     }
     let mut counts = vec![0u64; alphabet];
     for &s in symbols {
         counts[s] += 1;
     }
-    let norm = normalize_freqs(&counts, table_log);
-    let table = FseTable::new(&norm, table_log);
+    let norm = normalize_freqs(&counts, table_log)?;
+    let table = FseTable::new(&norm, table_log)?;
     let (state, payload) = encode_all(&table, symbols);
     body.extend_from_slice(&state.to_le_bytes());
     body.extend_from_slice(&pack_norm(&norm));
     body.extend_from_slice(&payload);
-    body
+    Ok(body)
 }
 
 fn fse_unsection(body: &[u8]) -> Result<Vec<usize>> {
@@ -113,12 +113,9 @@ fn fse_unsection(body: &[u8]) -> Result<Vec<usize>> {
     }
     let state = crate::util::read_u32_le(body, 7);
     let norm = unpack_norm(&body[11..], alphabet, table_log)?;
-    let table = FseTable::new(&norm, table_log);
+    let table = FseTable::new(&norm, table_log)?;
     let payload = &body[11 + alphabet * 2..];
-    if state < (1 << table_log) || state >= (2 << table_log) {
-        anyhow::bail!("corrupt FSE initial state");
-    }
-    Ok(decode_all(&table, state, payload, n))
+    decode_all(&table, state, payload, n)
 }
 
 pub struct ZstdLite;
@@ -170,10 +167,10 @@ impl Compressor for ZstdLite {
 
         let mut out = Vec::new();
         out.extend_from_slice(&(data.len() as u64).to_le_bytes());
-        push_section(&mut out, &fse_section(&ll_slots, NUM_SLOTS, SEQ_TABLE_LOG));
-        push_section(&mut out, &fse_section(&ml_slots, NUM_SLOTS, SEQ_TABLE_LOG));
-        push_section(&mut out, &fse_section(&of_slots, NUM_SLOTS, SEQ_TABLE_LOG));
-        push_section(&mut out, &fse_section(&lit_syms, 256, LIT_TABLE_LOG));
+        push_section(&mut out, &fse_section(&ll_slots, NUM_SLOTS, SEQ_TABLE_LOG)?);
+        push_section(&mut out, &fse_section(&ml_slots, NUM_SLOTS, SEQ_TABLE_LOG)?);
+        push_section(&mut out, &fse_section(&of_slots, NUM_SLOTS, SEQ_TABLE_LOG)?);
+        push_section(&mut out, &fse_section(&lit_syms, 256, LIT_TABLE_LOG)?);
         push_section(&mut out, &extra.finish());
         Ok(out)
     }

@@ -6,7 +6,7 @@
 //! files never need to be resident.
 
 use crate::cli::Args;
-use llmzip::compress::{Compressor, LlmCompressor, LlmCompressorConfig};
+use llmzip::compress::{Codec, Compressor, LlmCompressor, LlmCompressorConfig};
 use llmzip::lm::{ExecutorKind, KernelTier, Precision};
 use llmzip::runtime::ArtifactStore;
 use llmzip::Result;
@@ -39,6 +39,13 @@ pub(crate) fn kernel_arg(args: &Args) -> Result<Option<KernelTier>> {
     }
 }
 
+/// Shared `--codec {range,fse}` flag: the entropy backend newly written
+/// containers use. Decompression always follows the codec recorded in the
+/// container header, so the flag only changes the encode side.
+pub(crate) fn codec_arg(args: &Args) -> Result<Codec> {
+    Codec::parse(&args.str_or("codec", "range"))
+}
+
 pub(crate) fn open_compressor(args: &Args) -> Result<LlmCompressor> {
     let store = ArtifactStore::open(args.get("artifacts"))?;
     let chunk = args.usize_or("chunk", 256)?;
@@ -54,6 +61,7 @@ pub(crate) fn open_compressor(args: &Args) -> Result<LlmCompressor> {
         // `--no-panels`: skip the interleaved-panel weight copies on
         // memory-constrained hosts (slower matmuls, identical bytes).
         panel_layout: !args.has("no-panels"),
+        codec: codec_arg(args)?,
     };
     LlmCompressor::open(&store, cfg)
 }
@@ -126,7 +134,7 @@ pub fn compress(args: &[String]) -> Result<()> {
         out_path == "-",
         format!(
             "{} -> {} bytes (ratio {:.2}x) in {:.2}s ({:.1} KiB/s, model={}, chunk={}, \
-             executor={:?}, precision={})",
+             executor={:?}, precision={}, codec={})",
             summary.bytes_in,
             summary.bytes_out,
             summary.bytes_in as f64 / summary.bytes_out as f64,
@@ -136,6 +144,7 @@ pub fn compress(args: &[String]) -> Result<()> {
             comp.chunk_tokens(),
             comp.executor_kind(),
             comp.precision().as_str(),
+            comp.codec().as_str(),
         ),
     );
     Ok(())

@@ -62,6 +62,9 @@ pub fn serve(args: &[String]) -> Result<()> {
     // containers a replica produces never depend on them.
     let kernel = super::compress::kernel_arg(&args)?;
     let panel_layout = !args.has("no-panels");
+    // Entropy backend for containers this server WRITES; it decodes both
+    // (decompression follows the container's recorded codec).
+    let codec = super::compress::codec_arg(&args)?;
 
     let comp_cfg = LlmCompressorConfig {
         model: model.clone(),
@@ -73,6 +76,7 @@ pub fn serve(args: &[String]) -> Result<()> {
         precision,
         kernel,
         panel_layout,
+        codec,
     };
     let mut on_scale: Option<ScaleHook> = None;
     let factory: Box<dyn Fn() -> Result<LlmCompressor> + Send + Sync> =
@@ -141,6 +145,7 @@ pub fn serve(args: &[String]) -> Result<()> {
             max_replicas,
             autoscale,
             panel_layout,
+            codec,
             policy: BatchPolicy {
                 lanes,
                 max_wait: Duration::from_millis(max_wait_ms),
@@ -155,11 +160,12 @@ pub fn serve(args: &[String]) -> Result<()> {
     println!(
         "llmzip serving on 127.0.0.1:{port} \
          (chunk={chunk}, lanes={lanes}, threads={threads}, replicas={replicas}, \
-         autoscale={}, precision={}, kernel={}, panels={}, protocols=v1+v2-mux)",
+         autoscale={}, precision={}, kernel={}, panels={}, codec={}, protocols=v1+v2-mux)",
         if autoscale { format!("{min_replicas}..{max_replicas}") } else { "off".into() },
         precision.as_str(),
         kernel.map_or("auto", |t| t.as_str()),
         if panel_layout { "on" } else { "off" },
+        codec.as_str(),
     );
     loop {
         let (stream, peer) = listener.accept()?;

@@ -75,11 +75,66 @@ pub const CONTAINER_END_MAGIC: u32 = 0x3250_5A4C;
 /// Flag bit: the container carries a trailer index for random-access
 /// decode. Set on every v2 container; undefined (and rejected) on v1.
 pub const FLAG_SEEKABLE: u16 = 0x0001;
+/// Flag bit: chunk payloads are rank-transformed and FSE/tANS-coded
+/// instead of range-coded (see [`Codec::Fse`]). v2 only — pre-FSE
+/// releases refuse the bit by name through [`check_flags`], which is
+/// exactly the forward-compat story the flag mask was built for.
+pub const FLAG_CODEC_FSE: u16 = 0x0002;
 /// All flag bits this release understands, per version. Anything outside
 /// the mask is from a future release and must be refused, not ignored —
 /// a reader that ignores a semantics-bearing bit would decode garbage.
 const KNOWN_FLAGS_V1: u16 = 0;
-const KNOWN_FLAGS_V2: u16 = FLAG_SEEKABLE;
+const KNOWN_FLAGS_V2: u16 = FLAG_SEEKABLE | FLAG_CODEC_FSE;
+
+/// Entropy backend used for chunk payloads — the pluggable stage behind
+/// the `Codec` seam in [`crate::compress::llm`]. The choice is recorded
+/// twice per container (a v2 flag bit and a [`super::ContainerTag`]
+/// suffix), and the two records are cross-checked on decode.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Codec {
+    /// Adaptive binary-search range coder over the model CDF (the seed
+    /// bitstream; byte-for-byte unchanged since v1).
+    #[default]
+    Range,
+    /// Rank transform (position of the observed byte in the CDF's
+    /// frequency order) + static table-driven FSE/tANS over the ranks.
+    Fse,
+}
+
+impl Codec {
+    /// Parse a CLI/tag spelling.
+    pub fn parse(s: &str) -> Result<Codec> {
+        match s {
+            "range" => Ok(Codec::Range),
+            "fse" => Ok(Codec::Fse),
+            other => anyhow::bail!("unknown codec '{other}' (expected 'range' or 'fse')"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Codec::Range => "range",
+            Codec::Fse => "fse",
+        }
+    }
+
+    /// The v2 flag bits this codec contributes.
+    pub fn flag_bits(self) -> u16 {
+        match self {
+            Codec::Range => 0,
+            Codec::Fse => FLAG_CODEC_FSE,
+        }
+    }
+
+    /// Recover the codec from a validated v2 flag word.
+    pub fn from_flags(flags: u16) -> Codec {
+        if flags & FLAG_CODEC_FSE != 0 {
+            Codec::Fse
+        } else {
+            Codec::Range
+        }
+    }
+}
 
 /// Validate a parsed `(version, flags)` pair — the single definition of
 /// which flag bits this release understands, shared by
@@ -163,8 +218,30 @@ impl Container {
         }
     }
 
-    /// Build a v2 framed container (always seekable).
+    /// Build a v2 framed container (always seekable, range-coded payload).
     pub fn v2(
+        orig_len: u64,
+        orig_crc32: u32,
+        chunk_tokens: u32,
+        model_name: String,
+        chunks: Vec<ChunkRecord>,
+        payload: Vec<u8>,
+    ) -> Container {
+        Self::v2_coded(
+            Codec::Range,
+            orig_len,
+            orig_crc32,
+            chunk_tokens,
+            model_name,
+            chunks,
+            payload,
+        )
+    }
+
+    /// Build a v2 framed container whose payload was produced by `codec`
+    /// (the codec's flag bit is set alongside [`FLAG_SEEKABLE`]).
+    pub fn v2_coded(
+        codec: Codec,
         orig_len: u64,
         orig_crc32: u32,
         chunk_tokens: u32,
@@ -174,7 +251,7 @@ impl Container {
     ) -> Container {
         Container {
             version: CONTAINER_V2,
-            flags: FLAG_SEEKABLE,
+            flags: FLAG_SEEKABLE | codec.flag_bits(),
             orig_len,
             orig_crc32,
             chunk_tokens,
@@ -188,13 +265,17 @@ impl Container {
     /// by [`Self::to_bytes`] and the incremental
     /// [`crate::compress::stream::CompressWriter`], so the two paths
     /// cannot drift.
-    pub fn v2_header(chunk_tokens: u32, model_name: &str) -> Vec<u8> {
+    pub fn v2_header(flags: u16, chunk_tokens: u32, model_name: &str) -> Vec<u8> {
         let name = model_name.as_bytes();
         assert!(name.len() <= 255, "model tag too long");
+        assert!(
+            flags & FLAG_SEEKABLE != 0 && flags & !KNOWN_FLAGS_V2 == 0,
+            "v2 header flags {flags:#06x} must be seekable + known bits only"
+        );
         let mut out = Vec::with_capacity(V2_HEADER_FIXED + name.len());
         out.extend_from_slice(&CONTAINER_MAGIC.to_le_bytes());
         out.extend_from_slice(&CONTAINER_V2.to_le_bytes());
-        out.extend_from_slice(&FLAG_SEEKABLE.to_le_bytes());
+        out.extend_from_slice(&flags.to_le_bytes());
         out.extend_from_slice(&chunk_tokens.to_le_bytes());
         out.push(name.len() as u8);
         out.extend_from_slice(name);
@@ -267,10 +348,10 @@ impl Container {
         let mut out = Vec::with_capacity(
             self.payload.len() + 64 + self.chunks.len() * (8 + FRAME_HEADER),
         );
-        out.extend_from_slice(&Self::v2_header(self.chunk_tokens, &self.model_name));
-        // v2() always sets FLAG_SEEKABLE; a hand-built container with other
-        // flags would not survive parse, so refuse to emit one.
-        assert_eq!(self.flags, FLAG_SEEKABLE, "v2 containers carry exactly FLAG_SEEKABLE");
+        // v2_coded() always sets FLAG_SEEKABLE plus known codec bits; a
+        // hand-built container with other flags would not survive parse,
+        // so refuse to emit one (v2_header re-checks the same set).
+        out.extend_from_slice(&Self::v2_header(self.flags, self.chunk_tokens, &self.model_name));
         let mut offset = 0usize;
         for &rec in &self.chunks {
             out.extend_from_slice(&Self::v2_frame_header(rec));
@@ -610,20 +691,47 @@ mod tests {
 
     #[test]
     fn unknown_flag_bits_rejected() {
-        // v1 defines no flags; v2 defines only FLAG_SEEKABLE. Any other
-        // bit means a future format revision — refuse it by name.
+        // v1 defines no flags; v2 defines FLAG_SEEKABLE and FLAG_CODEC_FSE.
+        // Any other bit means a future format revision — refuse it by name.
         let mut v1 = sample().to_bytes();
         v1[6] = 0x01;
         let err = Container::from_bytes(&v1).unwrap_err().to_string();
         assert!(err.contains("flag"), "{err}");
         let mut v2 = sample_v2().to_bytes();
-        v2[6] = 0x03; // seekable + one unknown bit
+        v2[6] = 0x05; // seekable + one unknown bit
         let err = Container::from_bytes(&v2).unwrap_err().to_string();
         assert!(err.contains("flag"), "{err}");
         // A v2 container WITHOUT the seekable bit is also malformed.
         let mut v2 = sample_v2().to_bytes();
         v2[6] = 0x00;
         assert!(Container::from_bytes(&v2).is_err());
+    }
+
+    #[test]
+    fn fse_codec_flag_round_trips_and_maps_to_codec() {
+        let mut c = sample_v2();
+        c.flags = FLAG_SEEKABLE | FLAG_CODEC_FSE;
+        let bytes = c.to_bytes();
+        let parsed = Container::from_bytes(&bytes).unwrap();
+        assert_eq!(parsed.flags, FLAG_SEEKABLE | FLAG_CODEC_FSE);
+        assert_eq!(parsed.to_bytes(), bytes);
+        assert_eq!(Codec::from_flags(parsed.flags), Codec::Fse);
+        assert_eq!(Codec::from_flags(FLAG_SEEKABLE), Codec::Range);
+        let via = Container::v2_coded(Codec::Fse, 10, 1, 64, "m".into(), vec![], vec![]);
+        assert_eq!(via.flags, FLAG_SEEKABLE | FLAG_CODEC_FSE);
+    }
+
+    #[test]
+    fn codec_parse_and_render() {
+        assert_eq!(Codec::parse("range").unwrap(), Codec::Range);
+        assert_eq!(Codec::parse("fse").unwrap(), Codec::Fse);
+        assert!(Codec::parse("").is_err());
+        assert!(Codec::parse("huffman").is_err());
+        assert_eq!(Codec::Range.as_str(), "range");
+        assert_eq!(Codec::Fse.as_str(), "fse");
+        assert_eq!(Codec::Fse.flag_bits(), FLAG_CODEC_FSE);
+        assert_eq!(Codec::Range.flag_bits(), 0);
+        assert_eq!(Codec::default(), Codec::Range);
     }
 
     #[test]

@@ -44,7 +44,8 @@
 //! with a clear error instead of surfacing as a baffling CRC failure
 //! after decoding garbage.
 
-use crate::compress::container::{ChunkRecord, Container};
+use crate::compress::container::{ChunkRecord, Codec, Container};
+use crate::compress::rank::{FseChunkDecoder, FseChunkEncoder};
 use crate::compress::Compressor;
 use crate::entropy::range::{RangeDecoder, RangeEncoder};
 use crate::lm::config::{self, LmConfig};
@@ -67,6 +68,14 @@ pub const CDF_TOTAL: u32 = 1 << 16;
 /// then deterministic quantization to a cumulative table summing CDF_TOTAL.
 /// Returns `cums[257]` with `cums[256] == CDF_TOTAL`.
 pub fn logits_to_cdf(logits: &[f32]) -> [u32; 257] {
+    logits_to_cdf_argmax(logits).0
+}
+
+/// [`logits_to_cdf`] plus the index the leftover mass was assigned to — the
+/// first symbol of maximal quantized frequency. The rank coder needs it (the
+/// argmax IS rank 0 under the `(freq desc, index asc)` ordering), and it
+/// falls out of the quantization loop for free.
+pub fn logits_to_cdf_argmax(logits: &[f32]) -> ([u32; 257], usize) {
     debug_assert!(logits.len() >= 256);
     let bytes = &logits[..256];
     let mut max = f32::NEG_INFINITY;
@@ -108,11 +117,89 @@ pub fn logits_to_cdf(logits: &[f32]) -> [u32; 257] {
         cums[i + 1] = cums[i] + freqs[i];
     }
     debug_assert_eq!(cums[256], CDF_TOTAL);
-    cums
+    (cums, argmax)
 }
 
-/// Parsed container tag: `model:executor_flag` (legacy, f32) or
-/// `model:executor_flag:q8:<fingerprint-hex>` (int8-quantized weights).
+/// Per-stream entropy-stage encoder behind the codec seam. One instance per
+/// stream lane; `push` is called once per coded byte across every context
+/// window of the stream, `finish` yields the stream's payload bytes.
+///
+/// `argmax` is the quantization argmax from [`logits_to_cdf_argmax`] — the
+/// range backend ignores it, the rank backend uses it as the rank-0 symbol.
+pub trait ChunkEncoder {
+    fn push(&mut self, cdf: &[u32; 257], argmax: usize, sym: usize);
+    fn finish(self: Box<Self>) -> Result<Vec<u8>>;
+}
+
+/// Per-stream entropy-stage decoder (mirror of [`ChunkEncoder`]). `next`
+/// yields the symbol coded at the current position given the same CDF the
+/// encoder saw; `finish` runs end-of-stream structural checks.
+pub trait ChunkDecoder {
+    fn next(&mut self, cdf: &[u32; 257], argmax: usize) -> Result<usize>;
+    fn finish(&mut self) -> Result<()>;
+}
+
+/// The default backend: the adaptive-interval range coder, op-for-op the
+/// pre-seam code path so range containers stay byte-identical.
+struct RangeChunkEncoder {
+    enc: RangeEncoder,
+}
+
+impl ChunkEncoder for RangeChunkEncoder {
+    #[inline]
+    fn push(&mut self, cdf: &[u32; 257], _argmax: usize, sym: usize) {
+        self.enc.encode(cdf[sym], cdf[sym + 1] - cdf[sym], CDF_TOTAL);
+    }
+
+    fn finish(self: Box<Self>) -> Result<Vec<u8>> {
+        Ok(self.enc.finish())
+    }
+}
+
+struct RangeChunkDecoder<'a> {
+    dec: RangeDecoder<'a>,
+}
+
+impl ChunkDecoder for RangeChunkDecoder<'_> {
+    #[inline]
+    fn next(&mut self, cdf: &[u32; 257], _argmax: usize) -> Result<usize> {
+        let target = self.dec.decode_freq(CDF_TOTAL);
+        let sym = cdf.partition_point(|&c| c <= target) - 1;
+        self.dec.decode_update(cdf[sym], cdf[sym + 1] - cdf[sym]);
+        Ok(sym)
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        // The range coder has no end-of-stream structure of its own; the
+        // container CRC is the integrity check.
+        Ok(())
+    }
+}
+
+fn new_chunk_encoder(codec: Codec) -> Box<dyn ChunkEncoder> {
+    match codec {
+        Codec::Range => Box::new(RangeChunkEncoder { enc: RangeEncoder::new() }),
+        Codec::Fse => Box::new(FseChunkEncoder::new()),
+    }
+}
+
+fn new_chunk_decoder(codec: Codec, payload: &[u8]) -> Result<Box<dyn ChunkDecoder + '_>> {
+    Ok(match codec {
+        Codec::Range => Box::new(RangeChunkDecoder { dec: RangeDecoder::new(payload) }),
+        Codec::Fse => Box::new(FseChunkDecoder::new(payload)?),
+    })
+}
+
+/// Parsed container tag. The grammar, oldest form first:
+///
+/// - `model:executor_flag` — legacy, f32, range-coded
+/// - `model:executor_flag:fse` — f32, FSE rank-coded
+/// - `model:executor_flag:q8:<fingerprint-hex>` — int8, range-coded
+/// - `model:executor_flag:q8:<fingerprint-hex>:fse` — int8, FSE rank-coded
+///
+/// Every pre-existing tag keeps its old meaning; the optional trailing
+/// `fse` names the entropy backend and is cross-checked against the
+/// container's codec flag bit on decode.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ContainerTag<'a> {
     pub model: &'a str,
@@ -120,48 +207,93 @@ pub struct ContainerTag<'a> {
     pub precision: Precision,
     /// Weight-bundle fingerprint; `None` for legacy f32 tags.
     pub fingerprint: Option<u32>,
+    /// Entropy backend that coded the payloads (`Range` for legacy tags).
+    pub codec: Codec,
 }
 
 impl<'a> ContainerTag<'a> {
-    /// Parse a container's `model_name` field. Legacy 2-part tags are f32;
-    /// 4-part tags carry precision + fingerprint.
+    /// Parse a container's `model_name` field. Legacy 2-part tags are
+    /// f32 + range; `q8` adds precision + fingerprint; a trailing `fse`
+    /// names the table-driven rank backend.
     pub fn parse(tag: &'a str) -> Result<ContainerTag<'a>> {
         let parts: Vec<&str> = tag.split(':').collect();
-        let (model, flag) = match parts.as_slice() {
-            [m, f] | [m, f, _, _] => (*m, *f),
-            _ => anyhow::bail!("container missing executor tag"),
-        };
-        let flag: u16 = flag.parse()?;
+        if !(2..=5).contains(&parts.len()) {
+            anyhow::bail!("container missing executor tag");
+        }
+        let model = parts[0];
+        let flag: u16 = parts[1].parse()?;
         let executor = ExecutorKind::from_flag(flag)?;
-        let (precision, fingerprint) = match parts.as_slice() {
-            [_, _] => (Precision::F32, None),
-            [_, _, prec, fp] => {
+        let (precision, fingerprint, codec) = match &parts[2..] {
+            [] => (Precision::F32, None, Codec::Range),
+            ["fse"] => (Precision::F32, None, Codec::Fse),
+            [other] => anyhow::bail!("unknown container codec tag '{other}'"),
+            [prec, fp] | [prec, fp, "fse"] => {
                 if *prec != "q8" {
                     anyhow::bail!("unknown container precision tag '{prec}'");
                 }
                 let fp = u32::from_str_radix(fp, 16)
                     .map_err(|_| anyhow::anyhow!("bad weight fingerprint '{fp}'"))?;
-                (Precision::Int8, Some(fp))
+                let codec = if parts.len() == 5 { Codec::Fse } else { Codec::Range };
+                (Precision::Int8, Some(fp), codec)
             }
-            _ => unreachable!("matched above"),
+            [_, _, other] => anyhow::bail!("unknown container codec tag '{other}'"),
+            _ => unreachable!("length bounded above"),
         };
-        Ok(ContainerTag { model, executor, precision, fingerprint })
+        Ok(ContainerTag { model, executor, precision, fingerprint, codec })
+    }
+
+    /// True when two tags name the same *model engine* — identical logits
+    /// on both ends — ignoring the entropy backend. The codec changes how
+    /// the probability stream is serialized, not what the model predicts,
+    /// so a server can decode either codec's containers with one engine.
+    pub fn same_engine(&self, other: &ContainerTag<'_>) -> bool {
+        self.model == other.model
+            && self.executor == other.executor
+            && self.precision == other.precision
+            && self.fingerprint == other.fingerprint
     }
 }
 
-/// Render the tag this compressor stamps into containers. F32 bundles use
-/// the legacy 2-part form so f32 container bytes are identical to every
-/// earlier release (golden-pinned); quantized bundles add `q8` + the
-/// bundle fingerprint.
-fn render_tag(model: &str, executor: ExecutorKind, weights: Option<&Weights>) -> String {
+/// Render the tag this compressor stamps into containers. F32 range bundles
+/// use the legacy 2-part form so f32 container bytes are identical to every
+/// earlier release (golden-pinned); quantized bundles add `q8` + the bundle
+/// fingerprint; the FSE backend appends its codec name.
+fn render_tag(
+    model: &str,
+    executor: ExecutorKind,
+    weights: Option<&Weights>,
+    codec: Codec,
+) -> String {
     let flag = executor.as_flag();
-    match weights.map(|w| w.precision()) {
+    let base = match weights.map(|w| w.precision()) {
         None | Some(Precision::F32) => format!("{model}:{flag}"),
         Some(Precision::Int8) => {
             let fp = weights.expect("int8 implies weights").fingerprint();
             format!("{model}:{flag}:q8:{fp:08x}")
         }
+    };
+    match codec {
+        Codec::Range => base,
+        Codec::Fse => format!("{base}:fse"),
     }
+}
+
+/// Entropy backend a parsed container's payloads were written with,
+/// cross-checking the tag's codec suffix against the header flag bits.
+/// Used by the coordinator before any engine is in hand; the same check
+/// runs inside every compressor decode path.
+pub fn container_codec(container: &Container) -> Result<Codec> {
+    let tag = ContainerTag::parse(&container.model_name)?;
+    let flag_codec = Codec::from_flags(container.flags);
+    if tag.codec != flag_codec {
+        anyhow::bail!(
+            "container tag says codec '{}' but the flag bits say '{}' — corrupt or \
+             hand-edited header",
+            tag.codec.as_str(),
+            flag_codec.as_str()
+        );
+    }
+    Ok(tag.codec)
 }
 
 /// Configuration for [`LlmCompressor`].
@@ -202,6 +334,12 @@ pub struct LlmCompressorConfig {
     /// loaded model — matmuls then fall back to the strided no-panel
     /// kernels, slower but still bit-identical.
     pub panel_layout: bool,
+    /// Entropy backend for *produced* containers. `Range` (default) keeps
+    /// every container byte-identical to earlier releases; `Fse` codes the
+    /// per-position CDF ranks with a table-driven tANS coder. Decode
+    /// accepts either codec regardless of this knob (the container says
+    /// which backend wrote it).
+    pub codec: Codec,
 }
 
 impl Default for LlmCompressorConfig {
@@ -216,6 +354,7 @@ impl Default for LlmCompressorConfig {
             precision: Precision::F32,
             kernel: None,
             panel_layout: true,
+            codec: Codec::Range,
         }
     }
 }
@@ -273,7 +412,7 @@ impl LlmCompressor {
                 return Self::from_shared(model_cfg, Arc::new(weights), cfg);
             }
         };
-        let tag = render_tag(&cfg.model, cfg.executor, None);
+        let tag = render_tag(&cfg.model, cfg.executor, None, cfg.codec);
         Ok(LlmCompressor { cfg, model_cfg, tag, engine: RefCell::new(engine) })
     }
 
@@ -327,7 +466,7 @@ impl LlmCompressor {
         // built, whatever the caller left in `cfg.model`.
         let mut cfg = cfg;
         cfg.model = model_cfg.name.into();
-        let tag = render_tag(&cfg.model, ExecutorKind::Native, Some(&weights));
+        let tag = render_tag(&cfg.model, ExecutorKind::Native, Some(&weights), cfg.codec);
         let base = NativeExecutor::with_opts(
             model_cfg,
             weights,
@@ -357,7 +496,7 @@ impl LlmCompressor {
             anyhow::bail!("chunk_tokens must be in 1..={}", config::MAX_CONTEXT);
         }
         let weights: Arc<Weights> = weights.into();
-        let tag = render_tag(model_cfg.name, ExecutorKind::Native, Some(&weights));
+        let tag = render_tag(model_cfg.name, ExecutorKind::Native, Some(&weights), Codec::Range);
         Ok(LlmCompressor {
             cfg: LlmCompressorConfig {
                 model: model_cfg.name.into(),
@@ -369,6 +508,7 @@ impl LlmCompressor {
                 precision: weights.precision(),
                 kernel: None,
                 panel_layout: true,
+                codec: Codec::Range,
             },
             model_cfg,
             tag,
@@ -386,6 +526,24 @@ impl LlmCompressor {
         }
         self.cfg.stream_bytes = stream_bytes;
         Ok(self)
+    }
+
+    /// Switch the entropy backend for *produced* containers (the tag is
+    /// re-rendered to match). Decode is unaffected — it always follows the
+    /// container's recorded codec.
+    pub fn with_codec(mut self, codec: Codec) -> LlmCompressor {
+        let base = self.tag.strip_suffix(":fse").unwrap_or(&self.tag).to_string();
+        self.tag = match codec {
+            Codec::Range => base,
+            Codec::Fse => format!("{base}:fse"),
+        };
+        self.cfg.codec = codec;
+        self
+    }
+
+    /// Entropy backend this compressor stamps into produced containers.
+    pub fn codec(&self) -> Codec {
+        self.cfg.codec
     }
 
     pub fn stream_bytes(&self) -> usize {
@@ -435,11 +593,15 @@ impl LlmCompressor {
     }
 
     /// Decompress one batch of chunks (mirror of [`Self::compress_chunks`]).
+    /// `codecs` names the entropy backend of each payload — per chunk, so
+    /// the coordinator can batch chunks from range and FSE containers into
+    /// one lane group.
     pub fn decompress_chunks(
         &self,
         chunk_tokens: usize,
         records: &[ChunkRecord],
         payloads: &[&[u8]],
+        codecs: &[Codec],
     ) -> Result<Vec<Vec<u8>>> {
         let mut engine = self.engine.borrow_mut();
         if records.len() > engine.lanes() {
@@ -448,7 +610,7 @@ impl LlmCompressor {
         if chunk_tokens == 0 || chunk_tokens > config::MAX_CONTEXT {
             anyhow::bail!("container chunk_tokens {chunk_tokens} out of range");
         }
-        self.decompress_batch(&mut **engine, chunk_tokens, records, payloads)
+        self.decompress_batch(&mut **engine, chunk_tokens, records, payloads, codecs)
     }
 
     pub fn model_config(&self) -> &'static LmConfig {
@@ -458,7 +620,7 @@ impl LlmCompressor {
     /// Compress one batch of streams (one engine lane per stream). Each
     /// stream is split into context windows of `chunk_tokens` bytes (the
     /// model context resets per window) but all windows of a stream share
-    /// its range coder, amortizing the flush overhead.
+    /// its entropy coder, amortizing the flush/frame overhead.
     fn compress_batch(
         &self,
         engine: &mut dyn LmExecutor,
@@ -467,8 +629,8 @@ impl LlmCompressor {
         let ct = self.cfg.chunk_tokens;
         let max_len = streams.iter().map(|s| s.len()).max().unwrap_or(0);
         let n_windows = max_len.div_ceil(ct);
-        let mut encoders: Vec<RangeEncoder> =
-            streams.iter().map(|_| RangeEncoder::new()).collect();
+        let mut encoders: Vec<Box<dyn ChunkEncoder>> =
+            streams.iter().map(|_| new_chunk_encoder(self.cfg.codec)).collect();
         for w in 0..n_windows {
             // Lane input: BOS + window bytes except the last (position t
             // codes byte t, so the final byte is never fed on encode).
@@ -500,13 +662,12 @@ impl LlmCompressor {
                 let enc = &mut encoders[l];
                 for (t, &byte) in win.iter().enumerate() {
                     let base = (l * n_positions + t) * VOCAB;
-                    let cdf = logits_to_cdf(&logits[base..base + VOCAB]);
-                    let s = byte as usize;
-                    enc.encode(cdf[s], cdf[s + 1] - cdf[s], CDF_TOTAL);
+                    let (cdf, argmax) = logits_to_cdf_argmax(&logits[base..base + VOCAB]);
+                    enc.push(&cdf, argmax, byte as usize);
                 }
             }
         }
-        Ok(encoders.into_iter().map(|e| e.finish()).collect())
+        encoders.into_iter().map(|e| e.finish()).collect()
     }
 
     /// Decompress one batch of streams (lockstep lanes, context reset every
@@ -519,11 +680,18 @@ impl LlmCompressor {
         ct: usize,
         records: &[ChunkRecord],
         payloads: &[&[u8]],
+        codecs: &[Codec],
     ) -> Result<Vec<Vec<u8>>> {
         let n_lanes = engine.lanes();
         debug_assert!(records.len() <= n_lanes);
-        let mut decoders: Vec<RangeDecoder> =
-            payloads.iter().map(|p| RangeDecoder::new(p)).collect();
+        if codecs.len() != payloads.len() {
+            anyhow::bail!("{} codecs for {} payloads", codecs.len(), payloads.len());
+        }
+        let mut decoders: Vec<Box<dyn ChunkDecoder + '_>> = payloads
+            .iter()
+            .zip(codecs)
+            .map(|(p, &c)| new_chunk_decoder(c, p))
+            .collect::<Result<_>>()?;
         let mut outputs: Vec<Vec<u8>> =
             records.iter().map(|r| Vec::with_capacity(r.n_tokens as usize)).collect();
         let n_max = records.iter().map(|r| r.n_tokens as usize).max().unwrap_or(0);
@@ -545,10 +713,9 @@ impl LlmCompressor {
                         next_feed[l] = PAD;
                         continue;
                     }
-                    let cdf = logits_to_cdf(&logits[l * VOCAB..(l + 1) * VOCAB]);
-                    let target = decoders[l].decode_freq(CDF_TOTAL);
-                    let sym = cdf.partition_point(|&c| c <= target) - 1;
-                    decoders[l].decode_update(cdf[sym], cdf[sym + 1] - cdf[sym]);
+                    let (cdf, argmax) =
+                        logits_to_cdf_argmax(&logits[l * VOCAB..(l + 1) * VOCAB]);
+                    let sym = decoders[l].next(&cdf, argmax)?;
                     outputs[l].push(sym as u8);
                     next_feed[l] = sym as u32;
                 }
@@ -557,20 +724,38 @@ impl LlmCompressor {
                 }
             }
         }
+        for dec in &mut decoders {
+            dec.finish()?;
+        }
         Ok(outputs)
     }
 
     /// Check a container's tag + window against this compressor's engine;
-    /// returns the container's `chunk_tokens`. Shared by every decode
-    /// entry point (one-shot, streaming reader, random access) so the
-    /// model / executor / precision / fingerprint contract cannot drift
-    /// between them.
+    /// returns the container's `chunk_tokens` and the codec its payloads
+    /// were written with. Shared by every decode entry point (one-shot,
+    /// streaming reader, random access) so the model / executor /
+    /// precision / fingerprint / codec contract cannot drift between them.
+    ///
+    /// The codec is NOT required to match `cfg.codec` — the engine contract
+    /// covers the logits, and either backend can decode against them. It IS
+    /// required to match the container's flag bits (`flags` as read from
+    /// the header; 0 for v1 containers, which predate the codec field).
     pub(crate) fn validate_tag_and_window(
         &self,
         model_name: &str,
         chunk_tokens: usize,
-    ) -> Result<usize> {
+        flags: u16,
+    ) -> Result<(usize, Codec)> {
         let recorded = ContainerTag::parse(model_name)?;
+        let flag_codec = Codec::from_flags(flags);
+        if recorded.codec != flag_codec {
+            anyhow::bail!(
+                "container tag says codec '{}' but the flag bits say '{}' — corrupt or \
+                 hand-edited header",
+                recorded.codec.as_str(),
+                flag_codec.as_str()
+            );
+        }
         if recorded.model != self.cfg.model {
             anyhow::bail!(
                 "container was compressed with model '{}', this compressor uses '{}'",
@@ -610,11 +795,15 @@ impl LlmCompressor {
         if chunk_tokens == 0 || chunk_tokens > config::MAX_CONTEXT {
             anyhow::bail!("container chunk_tokens {chunk_tokens} out of range");
         }
-        Ok(chunk_tokens)
+        Ok((chunk_tokens, recorded.codec))
     }
 
-    fn validate_container(&self, container: &Container) -> Result<usize> {
-        self.validate_tag_and_window(&container.model_name, container.chunk_tokens as usize)
+    fn validate_container(&self, container: &Container) -> Result<(usize, Codec)> {
+        self.validate_tag_and_window(
+            &container.model_name,
+            container.chunk_tokens as usize,
+            container.flags,
+        )
     }
 
     /// Decode ONE chunk of a parsed container — random access: only chunk
@@ -624,10 +813,11 @@ impl LlmCompressor {
     /// partial decode cannot be CRC-verified; the range coder + strict
     /// framing still catch corruption structurally.
     pub fn decode_chunk(&self, container: &Container, i: usize) -> Result<Vec<u8>> {
-        let ct = self.validate_container(container)?;
+        let (ct, codec) = self.validate_container(container)?;
         let (rec, payload, _) = container.chunk(i)?;
         let mut engine = self.engine.borrow_mut();
-        let decoded = self.decompress_batch(&mut **engine, ct, &[rec], &[payload])?;
+        let decoded =
+            self.decompress_batch(&mut **engine, ct, &[rec], &[payload], &[codec])?;
         Ok(decoded.into_iter().next().expect("one chunk in, one chunk out"))
     }
 
@@ -639,7 +829,7 @@ impl LlmCompressor {
     /// path.
     pub fn decompress_range(&self, data: &[u8], offset: u64, len: u64) -> Result<Vec<u8>> {
         let container = Container::from_bytes(data)?;
-        let ct = self.validate_container(&container)?;
+        let (ct, codec) = self.validate_container(&container)?;
         let end = offset
             .checked_add(len)
             .ok_or_else(|| anyhow::anyhow!("range overflows"))?;
@@ -676,7 +866,8 @@ impl LlmCompressor {
         for group in touched.chunks(lanes) {
             let records: Vec<ChunkRecord> = group.iter().map(|(r, _)| *r).collect();
             let payloads: Vec<&[u8]> = group.iter().map(|(_, p)| *p).collect();
-            for d in self.decompress_batch(&mut **engine, ct, &records, &payloads)? {
+            let codecs = vec![codec; payloads.len()];
+            for d in self.decompress_batch(&mut **engine, ct, &records, &payloads, &codecs)? {
                 out.extend(d);
             }
         }
@@ -706,7 +897,8 @@ impl Compressor for LlmCompressor {
                 payload.extend(comp);
             }
         }
-        let container = Container::v2(
+        let container = Container::v2_coded(
+            self.cfg.codec,
             data.len() as u64,
             crc32(data),
             self.cfg.chunk_tokens as u32,
@@ -719,7 +911,7 @@ impl Compressor for LlmCompressor {
 
     fn decompress(&self, data: &[u8]) -> Result<Vec<u8>> {
         let container = Container::from_bytes(data)?;
-        let ct = self.validate_container(&container)?;
+        let (ct, codec) = self.validate_container(&container)?;
         let mut engine = self.engine.borrow_mut();
         let lanes = engine.lanes();
         let all: Vec<(ChunkRecord, &[u8])> = container.iter_chunks().collect();
@@ -727,7 +919,9 @@ impl Compressor for LlmCompressor {
         for group in all.chunks(lanes) {
             let records: Vec<ChunkRecord> = group.iter().map(|(r, _)| *r).collect();
             let payloads: Vec<&[u8]> = group.iter().map(|(_, p)| *p).collect();
-            let decoded = self.decompress_batch(&mut **engine, ct, &records, &payloads)?;
+            let codecs = vec![codec; payloads.len()];
+            let decoded =
+                self.decompress_batch(&mut **engine, ct, &records, &payloads, &codecs)?;
             for d in decoded {
                 out.extend(d);
             }
@@ -1072,5 +1266,130 @@ mod tests {
         let zf = native_compressor(64).compress(&data).unwrap().len() as f64;
         let z8 = int8_compressor(64, 2, 1).compress(&data).unwrap().len() as f64;
         assert!(z8 < zf * 1.5, "int8 {z8} bytes vs f32 {zf} bytes");
+    }
+
+    #[test]
+    fn fse_tag_grammar_parses_and_rejects() {
+        let fse = ContainerTag::parse("nano:0:fse").unwrap();
+        assert_eq!(fse.codec, Codec::Fse);
+        assert_eq!(fse.precision, Precision::F32);
+        assert_eq!(ContainerTag::parse("nano:0").unwrap().codec, Codec::Range);
+        let q8_fse = ContainerTag::parse("medium:0:q8:deadbeef:fse").unwrap();
+        assert_eq!(q8_fse.codec, Codec::Fse);
+        assert_eq!(q8_fse.precision, Precision::Int8);
+        assert_eq!(q8_fse.fingerprint, Some(0xDEADBEEF));
+        // Range and fse tags for one engine differ only in the suffix.
+        let range = ContainerTag::parse("medium:0:q8:deadbeef").unwrap();
+        assert!(range.same_engine(&q8_fse));
+        assert!(!range.same_engine(&fse));
+        for bad in ["nano:0:xyz", "nano:0:q8:deadbeef:xyz", "nano:0:q8:deadbeef:fse:extra"] {
+            assert!(ContainerTag::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn fse_roundtrip_with_native_engine() {
+        let c = native_compressor(32).with_codec(Codec::Fse);
+        assert!(c.container_tag().ends_with(":fse"), "{}", c.container_tag());
+        for data in [
+            b"".to_vec(),
+            b"a".to_vec(),
+            b"hello world".to_vec(),
+            (0u8..=255).collect(),
+            crate::textgen::quick_sample(500, 3),
+        ] {
+            let z = c.compress(&data).unwrap();
+            let cont = Container::from_bytes(&z).unwrap();
+            assert_eq!(Codec::from_flags(cont.flags), Codec::Fse);
+            assert_eq!(c.decompress(&z).unwrap(), data, "len {}", data.len());
+        }
+    }
+
+    #[test]
+    fn fse_containers_identical_across_threads_lanes_and_pool() {
+        // The fse path inherits the byte-identity spine: each stream is
+        // rank-transformed and table-coded in exactly one lane, so the
+        // container cannot depend on execution shape.
+        let data = crate::textgen::quick_sample(500, 13);
+        let golden = threaded_compressor(32, 2, 1).with_codec(Codec::Fse).compress(&data).unwrap();
+        for (lanes, threads) in [(1usize, 1usize), (2, 2), (4, 3)] {
+            let c = threaded_compressor(32, lanes, threads).with_codec(Codec::Fse);
+            assert_eq!(
+                c.compress(&data).unwrap(),
+                golden,
+                "lanes={lanes} threads={threads} must not change the fse bytes"
+            );
+            assert_eq!(c.decompress(&golden).unwrap(), data);
+        }
+        let cfg = by_name("nano").unwrap();
+        let shared = Arc::new(Weights::random(cfg, 7));
+        let pool = StepPool::new(2);
+        let replica_cfg = LlmCompressorConfig {
+            model: cfg.name.into(),
+            chunk_tokens: 32,
+            stream_bytes: 128,
+            executor: ExecutorKind::Native,
+            lanes: 2,
+            threads: 1,
+            precision: Precision::F32,
+            codec: Codec::Fse,
+            ..Default::default()
+        };
+        let pooled =
+            LlmCompressor::from_shared_pooled(cfg, shared, replica_cfg, Some(pool)).unwrap();
+        assert_eq!(pooled.compress(&data).unwrap(), golden, "stealing must not change the bytes");
+    }
+
+    #[test]
+    fn codecs_cross_decode_but_produce_different_streams() {
+        // Decompression follows the CONTAINER's recorded codec, not the
+        // decoder's configured one — a range-configured compressor decodes
+        // fse containers from the same engine, and vice versa.
+        let data = crate::textgen::quick_sample(400, 17);
+        let range_c = native_compressor(32);
+        let fse_c = native_compressor(32).with_codec(Codec::Fse);
+        let zr = range_c.compress(&data).unwrap();
+        let zf = fse_c.compress(&data).unwrap();
+        assert_ne!(zr, zf, "the two backends cannot emit the same container");
+        assert_eq!(range_c.decompress(&zf).unwrap(), data);
+        assert_eq!(fse_c.decompress(&zr).unwrap(), data);
+        // Seekable faces stay codec-agnostic on the fse container.
+        let slice = fse_c.decompress_range(&zf, 40, 100).unwrap();
+        assert_eq!(slice, data[40..140]);
+        let cont = Container::from_bytes(&zf).unwrap();
+        assert_eq!(fse_c.decode_chunk(&cont, 1).unwrap(), data[32..64]);
+    }
+
+    #[test]
+    fn fse_int8_roundtrip_and_tag() {
+        let c = int8_compressor(32, 2, 1).with_codec(Codec::Fse);
+        let tag = c.container_tag();
+        assert!(tag.starts_with("nano:0:q8:") && tag.ends_with(":fse"), "{tag}");
+        let data = crate::textgen::quick_sample(400, 11);
+        let z = c.compress(&data).unwrap();
+        assert_eq!(c.decompress(&z).unwrap(), data);
+    }
+
+    #[test]
+    fn fse_corrupted_payload_fails_crc_not_panic() {
+        let c = native_compressor(32).with_codec(Codec::Fse);
+        let data = crate::textgen::quick_sample(200, 5);
+        let z = c.compress(&data).unwrap();
+        let mut cont = Container::from_bytes(&z).unwrap();
+        let n = cont.payload.len();
+        cont.payload[n / 2] ^= 0x40;
+        assert!(c.decompress(&cont.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn codec_flag_and_tag_must_agree() {
+        // A container whose tag says fse but whose flag bits say range (or
+        // the reverse) is refused as corrupt, not silently mis-decoded.
+        let c = native_compressor(32);
+        let data = crate::textgen::quick_sample(100, 6);
+        let mut cont = Container::from_bytes(&c.compress(&data).unwrap()).unwrap();
+        cont.model_name = format!("{}:fse", cont.model_name);
+        let err = c.decompress(&cont.to_bytes()).unwrap_err().to_string();
+        assert!(err.contains("flag bits"), "{err}");
     }
 }

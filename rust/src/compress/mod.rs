@@ -12,10 +12,13 @@
 
 pub mod container;
 pub mod llm;
+pub mod rank;
 pub mod registry;
 pub mod stream;
 
-pub use container::{ChunkRecord, Container, CONTAINER_MAGIC, CONTAINER_V1, CONTAINER_V2};
+pub use container::{
+    ChunkRecord, Codec, Container, CONTAINER_MAGIC, CONTAINER_V1, CONTAINER_V2,
+};
 pub use llm::{ContainerTag, LlmCompressor, LlmCompressorConfig};
 pub use registry::{baseline_by_name, all_baseline_names};
 pub use stream::{CompressWriter, DecompressReader, StreamSummary};

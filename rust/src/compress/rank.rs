@@ -1,0 +1,495 @@
+//! Table-driven rank coding: the FSE/tANS entropy backend.
+//!
+//! The range backend codes each byte against its full 257-entry CDF with
+//! two 32-bit divisions per symbol. This backend splits that work in two:
+//!
+//! 1. **Rank transform** — replace each byte by its *rank* under the
+//!    deterministic ordering `(quantized freq desc, byte index asc)` of the
+//!    position's CDF. A well-predicted stream maps overwhelmingly to rank 0
+//!    (the model's argmax), with a geometric tail — exactly the shape a
+//!    static table-driven coder handles at peak throughput.
+//! 2. **tANS coding** — one normalized histogram of the chunk's ranks,
+//!    serialized in the frame, drives a [`FseTable`] built once per chunk;
+//!    decode is a pure table walk (no per-symbol adaptation, no division).
+//!
+//! Ranks `0..RANK_ESCAPE` are direct tANS symbols; rarer ranks go through
+//! an escape symbol plus a raw literal byte, keeping the alphabet (and the
+//! serialized histogram) small without giving up losslessness.
+//!
+//! Determinism: the rank of a byte is a pure function of the quantized CDF,
+//! which both ends compute from identical logits (the same precision/kernel
+//! contract the range backend relies on — see `docs/entropy.md`). The
+//! ordering is a total order, so encode and decode agree on every rank even
+//! under frequency ties.
+//!
+//! ## Frame layout (one frame per stream payload)
+//!
+//! ```text
+//! table_log  u8            tANS table log (encoder emits 10, or 12 on
+//!                          normalization underflow; decoder caps at 12)
+//! alphabet   u8            highest coded symbol + 1 (1..=65)
+//! fse_len    u32 LE        tANS bitstream length in bytes
+//! state      u32 LE        initial decoder state, in [2^tl, 2^{tl+1})
+//! norm       alphabet * u16 LE   normalized freqs, sum == 1 << table_log
+//! fse        [fse_len]     tANS bitstream (decoded forwards)
+//! escapes    rest          raw rank literals (>= RANK_ESCAPE), in position
+//!                          order, one per escape symbol in the tANS stream
+//! ```
+//!
+//! An empty stream (zero coded bytes) serializes to an empty payload.
+//!
+//! Corruption policy: framing, histogram sum, state range, escape
+//! canonicality (literals must be `>= RANK_ESCAPE`) and escape accounting
+//! are hard errors here; a bit flip *inside* the tANS bitstream decodes to
+//! some wrong-but-well-formed rank sequence (the final decode step
+//! legitimately reads past the written bits into the writer's zero padding,
+//! so overrun is not a usable signal) and is caught by the container CRC,
+//! exactly like a flipped range-coder payload.
+
+use crate::compress::llm::{ChunkDecoder, ChunkEncoder};
+use crate::entropy::fse::{self, normalize_freqs, pack_norm, unpack_norm, FseTable};
+use crate::entropy::BitReader;
+use crate::util::read_u32_le;
+use crate::Result;
+
+/// Ranks below this are direct tANS symbols; this value itself is the
+/// escape symbol (so the alphabet is at most `RANK_ESCAPE + 1` wide).
+pub const RANK_ESCAPE: usize = 64;
+
+/// Table log the encoder prefers (1024 states — the rank alphabet is at
+/// most 65 wide, so this is plenty of resolution at a quarter of the
+/// Zstd-default table's cache footprint).
+pub const RANK_TABLE_LOG: u32 = 10;
+
+/// Fallback table log when normalization to [`RANK_TABLE_LOG`] underflows
+/// (possible only for near-flat rank histograms over the full alphabet).
+/// Proven sufficient: with `n` nonzero symbols of 65, rounding can
+/// overshoot by at most `n * (65 - n) <= 1056 < 4096 - 65` slots, so the
+/// most frequent symbol always keeps a positive count at log 12.
+pub const RANK_TABLE_LOG_WIDE: u32 = 12;
+
+const FRAME_FIXED: usize = 10; // table_log + alphabet + fse_len + state
+
+/// Serialize a chunk's rank stream into one self-describing frame.
+pub fn encode_rank_stream(ranks: &[u8]) -> Result<Vec<u8>> {
+    if ranks.is_empty() {
+        return Ok(Vec::new());
+    }
+    let mut symbols = Vec::with_capacity(ranks.len());
+    let mut escapes = Vec::new();
+    for &r in ranks {
+        if (r as usize) < RANK_ESCAPE {
+            symbols.push(r as usize);
+        } else {
+            symbols.push(RANK_ESCAPE);
+            escapes.push(r);
+        }
+    }
+    let alphabet = symbols.iter().copied().max().expect("non-empty") + 1;
+    let mut counts = vec![0u64; alphabet];
+    for &s in &symbols {
+        counts[s] += 1;
+    }
+    // Deterministic table-log selection: prefer the small table, fall back
+    // to the wide one when the histogram is too flat for it. The chosen log
+    // travels in the frame, so the decoder never re-derives this choice.
+    let (norm, table_log) = match normalize_freqs(&counts, RANK_TABLE_LOG) {
+        Ok(n) => (n, RANK_TABLE_LOG),
+        Err(_) => (normalize_freqs(&counts, RANK_TABLE_LOG_WIDE)?, RANK_TABLE_LOG_WIDE),
+    };
+    let table = FseTable::new(&norm, table_log)?;
+    let (state, payload) = fse::encode_all(&table, &symbols);
+    let mut out = Vec::with_capacity(FRAME_FIXED + 2 * alphabet + payload.len() + escapes.len());
+    out.push(table_log as u8);
+    out.push(alphabet as u8);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&state.to_le_bytes());
+    out.extend_from_slice(&pack_norm(&norm));
+    out.extend_from_slice(&payload);
+    out.extend_from_slice(&escapes);
+    Ok(out)
+}
+
+/// Streaming decoder over one serialized rank frame: header parsed and
+/// table built once at construction, then [`Self::next_rank`] is a pure
+/// decode-table walk.
+pub struct RankStreamDecoder<'a> {
+    table: Option<FseTable>,
+    reader: BitReader<'a>,
+    state: u32,
+    escapes: &'a [u8],
+    escape_pos: usize,
+}
+
+impl<'a> RankStreamDecoder<'a> {
+    pub fn new(payload: &'a [u8]) -> Result<Self> {
+        if payload.is_empty() {
+            // Valid for a zero-length stream; any decode attempt errors.
+            return Ok(RankStreamDecoder {
+                table: None,
+                reader: BitReader::new(&[]),
+                state: 0,
+                escapes: &[],
+                escape_pos: 0,
+            });
+        }
+        if payload.len() < FRAME_FIXED {
+            anyhow::bail!("truncated rank frame header");
+        }
+        let table_log = payload[0] as u32;
+        if table_log == 0 || table_log > RANK_TABLE_LOG_WIDE {
+            anyhow::bail!("corrupt rank frame: table_log {table_log} out of range (1..=12)");
+        }
+        let alphabet = payload[1] as usize;
+        if alphabet == 0 || alphabet > RANK_ESCAPE + 1 {
+            anyhow::bail!("corrupt rank frame: alphabet {alphabet} out of range (1..=65)");
+        }
+        let fse_len = read_u32_le(payload, 2) as usize;
+        let state = read_u32_le(payload, 6);
+        let norm_end = FRAME_FIXED + 2 * alphabet;
+        if payload.len() < norm_end {
+            anyhow::bail!("truncated rank frame: frequency table cut short");
+        }
+        let norm = unpack_norm(&payload[FRAME_FIXED..norm_end], alphabet, table_log)?;
+        let table = FseTable::new(&norm, table_log)?;
+        let table_size = 1u32 << table_log;
+        if state < table_size || state >= 2 * table_size {
+            anyhow::bail!("corrupt rank frame: initial state {state} out of range");
+        }
+        let Some(fse_end) = norm_end.checked_add(fse_len) else {
+            anyhow::bail!("corrupt rank frame: bitstream length overflows");
+        };
+        if payload.len() < fse_end {
+            anyhow::bail!("truncated rank frame: bitstream cut short");
+        }
+        Ok(RankStreamDecoder {
+            table: Some(table),
+            reader: BitReader::new(&payload[norm_end..fse_end]),
+            state,
+            escapes: &payload[fse_end..],
+            escape_pos: 0,
+        })
+    }
+
+    /// Decode the next rank (one decode-table walk, plus an escape-literal
+    /// fetch for ranks `>= RANK_ESCAPE`).
+    pub fn next_rank(&mut self) -> Result<u8> {
+        let Some(table) = &self.table else {
+            anyhow::bail!("rank stream underrun: empty frame decoded past its end");
+        };
+        let (sym, next) = table.decode_step(self.state, &mut self.reader);
+        self.state = next;
+        if sym < RANK_ESCAPE {
+            return Ok(sym as u8);
+        }
+        let Some(&lit) = self.escapes.get(self.escape_pos) else {
+            anyhow::bail!("rank stream underrun: escape literal missing");
+        };
+        self.escape_pos += 1;
+        if (lit as usize) < RANK_ESCAPE {
+            anyhow::bail!("non-canonical rank escape literal {lit} (< {RANK_ESCAPE})");
+        }
+        Ok(lit)
+    }
+
+    /// End-of-stream structural check: every escape literal the frame
+    /// carried must have been claimed by an escape symbol.
+    pub fn finish(&mut self) -> Result<()> {
+        if self.escape_pos != self.escapes.len() {
+            anyhow::bail!(
+                "rank frame carries {} escape literals but only {} were consumed",
+                self.escapes.len(),
+                self.escape_pos
+            );
+        }
+        Ok(())
+    }
+}
+
+/// One-shot inverse of [`encode_rank_stream`]: decode exactly `n` ranks
+/// and run the end-of-stream checks (tests and fuzzing).
+pub fn decode_rank_stream(payload: &[u8], n: usize) -> Result<Vec<u8>> {
+    let mut dec = RankStreamDecoder::new(payload)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(dec.next_rank()?);
+    }
+    dec.finish()?;
+    Ok(out)
+}
+
+/// [`ChunkEncoder`] for the FSE backend: buffers the stream's ranks (one
+/// byte each) across every context window, then serializes a single frame
+/// at finish — mirroring how the range backend amortizes its flush.
+pub struct FseChunkEncoder {
+    ranks: Vec<u8>,
+}
+
+impl FseChunkEncoder {
+    pub fn new() -> Self {
+        FseChunkEncoder { ranks: Vec::new() }
+    }
+}
+
+impl Default for FseChunkEncoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ChunkEncoder for FseChunkEncoder {
+    #[inline]
+    fn push(&mut self, cdf: &[u32; 257], argmax: usize, sym: usize) {
+        self.ranks.push(rank_of(cdf, argmax, sym));
+    }
+
+    fn finish(self: Box<Self>) -> Result<Vec<u8>> {
+        encode_rank_stream(&self.ranks)
+    }
+}
+
+/// [`ChunkDecoder`] for the FSE backend: rank off the table walk, byte via
+/// the CDF's deterministic rank order.
+pub struct FseChunkDecoder<'a> {
+    inner: RankStreamDecoder<'a>,
+}
+
+impl<'a> FseChunkDecoder<'a> {
+    pub fn new(payload: &'a [u8]) -> Result<Self> {
+        Ok(FseChunkDecoder { inner: RankStreamDecoder::new(payload)? })
+    }
+}
+
+impl ChunkDecoder for FseChunkDecoder<'_> {
+    #[inline]
+    fn next(&mut self, cdf: &[u32; 257], argmax: usize) -> Result<usize> {
+        let rank = self.inner.next_rank()?;
+        Ok(byte_of_rank(cdf, argmax, rank) as usize)
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.inner.finish()
+    }
+}
+
+/// Rank of byte `sym` under the ordering `(quantized freq desc, index
+/// asc)` of the CDF's 256 frequencies. `argmax` must be the quantization
+/// argmax from `logits_to_cdf_argmax` — it is the unique rank-0 element
+/// (first index of maximal frequency), giving the hot path an O(1) exit;
+/// other symbols cost one pass over the 256 frequencies.
+#[inline]
+pub fn rank_of(cdf: &[u32; 257], argmax: usize, sym: usize) -> u8 {
+    if sym == argmax {
+        return 0;
+    }
+    let fs = cdf[sym + 1] - cdf[sym];
+    let mut rank = 0u32;
+    for j in 0..256 {
+        let fj = cdf[j + 1] - cdf[j];
+        if fj > fs || (fj == fs && j < sym) {
+            rank += 1;
+        }
+    }
+    debug_assert!(rank >= 1, "only the argmax has rank 0");
+    rank as u8
+}
+
+/// Inverse of [`rank_of`]: the byte holding rank `rank` under the same
+/// total order. Rank 0 is the argmax (O(1), the overwhelmingly common
+/// case); deeper ranks select the `rank`-th element of the identity byte
+/// array under `(freq desc, index asc)` — `select_nth_unstable_by` is
+/// deterministic here because the comparator is a total order.
+#[inline]
+pub fn byte_of_rank(cdf: &[u32; 257], argmax: usize, rank: u8) -> u8 {
+    if rank == 0 {
+        return argmax as u8;
+    }
+    let mut idx: [u8; 256] = [0; 256];
+    for (i, slot) in idx.iter_mut().enumerate() {
+        *slot = i as u8;
+    }
+    let (_, nth, _) = idx.select_nth_unstable_by(rank as usize, |a, b| {
+        let fa = cdf[*a as usize + 1] - cdf[*a as usize];
+        let fb = cdf[*b as usize + 1] - cdf[*b as usize];
+        fb.cmp(&fa).then(a.cmp(b))
+    });
+    *nth
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::llm::logits_to_cdf_argmax;
+    use crate::util::Pcg64;
+
+    fn random_cdf(rng: &mut Pcg64) -> ([u32; 257], usize) {
+        let logits: Vec<f32> =
+            (0..crate::lm::config::VOCAB).map(|_| (rng.gen_f64() * 12.0 - 6.0) as f32).collect();
+        logits_to_cdf_argmax(&logits)
+    }
+
+    #[test]
+    fn rank_transform_is_self_inverse_for_every_byte() {
+        let mut rng = Pcg64::seeded(21);
+        for _ in 0..20 {
+            let (cdf, argmax) = random_cdf(&mut rng);
+            let mut seen = [false; 256];
+            for sym in 0..256usize {
+                let r = rank_of(&cdf, argmax, sym);
+                assert_eq!(byte_of_rank(&cdf, argmax, r) as usize, sym, "sym {sym} rank {r}");
+                assert!(!seen[r as usize], "rank {r} assigned twice");
+                seen[r as usize] = true;
+            }
+            assert_eq!(rank_of(&cdf, argmax, argmax), 0);
+            assert_eq!(byte_of_rank(&cdf, argmax, 0) as usize, argmax);
+        }
+    }
+
+    #[test]
+    fn rank_zero_is_argmax_even_under_frequency_ties() {
+        // A flat CDF maximizes quantized-frequency ties; the (freq desc,
+        // index asc) order must still be total on both ends.
+        let logits = vec![0.0f32; crate::lm::config::VOCAB];
+        let (cdf, argmax) = logits_to_cdf_argmax(&logits);
+        assert_eq!(byte_of_rank(&cdf, argmax, 0) as usize, argmax);
+        for sym in 0..256usize {
+            let r = rank_of(&cdf, argmax, sym);
+            assert_eq!(byte_of_rank(&cdf, argmax, r) as usize, sym);
+        }
+    }
+
+    fn skewed_ranks(n: usize, seed: u64) -> Vec<u8> {
+        // The shape a trained model produces: ~90% rank 0, geometric tail,
+        // occasional deep escapes.
+        let mut rng = Pcg64::seeded(seed);
+        (0..n)
+            .map(|_| {
+                let x = rng.gen_f64();
+                if x < 0.90 {
+                    0u8
+                } else if x < 0.99 {
+                    rng.gen_index(8) as u8 + 1
+                } else if x < 0.999 {
+                    rng.gen_index(55) as u8 + 9
+                } else {
+                    rng.gen_index(192) as u8 + 64
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn frame_roundtrips_on_skewed_and_degenerate_streams() {
+        for (ranks, label) in [
+            (skewed_ranks(10_000, 3), "skewed"),
+            (vec![0u8; 5000], "all rank 0"),
+            (vec![200u8; 64], "all escapes"),
+            ((0..=255u8).collect::<Vec<u8>>(), "every rank once"),
+            (vec![1u8], "single symbol"),
+            (Vec::new(), "empty"),
+        ] {
+            let frame = encode_rank_stream(&ranks).unwrap();
+            assert_eq!(decode_rank_stream(&frame, ranks.len()).unwrap(), ranks, "{label}");
+            if ranks.is_empty() {
+                assert!(frame.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn skewed_stream_compresses_far_below_one_byte_per_symbol() {
+        let ranks = skewed_ranks(50_000, 4);
+        let frame = encode_rank_stream(&ranks).unwrap();
+        // ~0.6 bits/symbol entropy; allow generous slack over it.
+        assert!(frame.len() < ranks.len() / 8, "{} bytes for {}", frame.len(), ranks.len());
+    }
+
+    #[test]
+    fn every_strict_prefix_of_a_frame_errors() {
+        let ranks = skewed_ranks(2000, 5);
+        let frame = encode_rank_stream(&ranks).unwrap();
+        for cut in 0..frame.len() {
+            assert!(
+                decode_rank_stream(&frame[..cut], ranks.len()).is_err(),
+                "prefix of {cut}/{} bytes must not decode",
+                frame.len()
+            );
+        }
+    }
+
+    #[test]
+    fn structural_corruptions_are_errors_not_panics() {
+        let ranks = skewed_ranks(500, 6);
+        let frame = encode_rank_stream(&ranks).unwrap();
+        // table_log out of range.
+        let mut f = frame.clone();
+        f[0] = 13;
+        assert!(decode_rank_stream(&f, ranks.len()).is_err());
+        // alphabet out of range.
+        let mut f = frame.clone();
+        f[1] = 66;
+        assert!(decode_rank_stream(&f, ranks.len()).is_err());
+        // fse_len pointing past the payload.
+        let mut f = frame.clone();
+        f[2..6].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_rank_stream(&f, ranks.len()).is_err());
+        // Initial state below the table range.
+        let mut f = frame.clone();
+        f[6..10].copy_from_slice(&0u32.to_le_bytes());
+        assert!(decode_rank_stream(&f, ranks.len()).is_err());
+        // Histogram that lies about its sum.
+        let mut f = frame.clone();
+        f[FRAME_FIXED] ^= 0x01;
+        assert!(decode_rank_stream(&f, ranks.len()).is_err());
+        // Non-canonical escape literal (< RANK_ESCAPE).
+        let mut f = frame.clone();
+        let last = f.len() - 1;
+        f[last] = 3; // the stream above always ends with escape literals present
+        if decode_rank_stream(&f, ranks.len()).is_ok() {
+            // If the tail byte happened to be bitstream, the frame had no
+            // escapes — force one instead.
+            let with_escape = encode_rank_stream(&[0, 0, 200]).unwrap();
+            let mut g = with_escape.clone();
+            let last = g.len() - 1;
+            g[last] = 3;
+            assert!(decode_rank_stream(&g, 3).is_err());
+        }
+        // Unconsumed escape literals.
+        let mut f = frame.clone();
+        f.push(200);
+        assert!(decode_rank_stream(&f, ranks.len()).is_err());
+    }
+
+    #[test]
+    fn arbitrary_bytes_never_panic() {
+        let mut rng = Pcg64::seeded(7);
+        for len in 0..200usize {
+            let junk: Vec<u8> = (0..len).map(|_| rng.gen_index(256) as u8).collect();
+            let _ = decode_rank_stream(&junk, rng.gen_index(300));
+        }
+        // And bit-flip sweeps over a valid frame: error or wrong ranks,
+        // never a panic (CRC catches wrong-but-well-formed at the container
+        // level).
+        let ranks = skewed_ranks(300, 8);
+        let frame = encode_rank_stream(&ranks).unwrap();
+        for i in 0..frame.len() {
+            for bit in [0x01u8, 0x10, 0x80] {
+                let mut f = frame.clone();
+                f[i] ^= bit;
+                let _ = decode_rank_stream(&f, ranks.len());
+            }
+        }
+    }
+
+    #[test]
+    fn flat_histogram_takes_the_wide_table_fallback() {
+        // Every direct rank exactly once, plus escapes: a maximally flat
+        // 65-symbol histogram. Whichever table log normalization lands on,
+        // the frame must round-trip and record its own log.
+        let mut ranks: Vec<u8> = (0..64u8).collect();
+        ranks.push(100);
+        let frame = encode_rank_stream(&ranks).unwrap();
+        assert!(frame[0] == RANK_TABLE_LOG as u8 || frame[0] == RANK_TABLE_LOG_WIDE as u8);
+        assert_eq!(decode_rank_stream(&frame, ranks.len()).unwrap(), ranks);
+    }
+}

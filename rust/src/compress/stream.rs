@@ -36,8 +36,8 @@
 //! the same `Container` v2 framing helpers.
 
 use crate::compress::container::{
-    ChunkRecord, Container, CONTAINER_MAGIC, CONTAINER_V1, CONTAINER_V2, FRAME_HEADER,
-    FRAME_MARKER, TRAILER_MARKER,
+    ChunkRecord, Codec, Container, CONTAINER_MAGIC, CONTAINER_V1, CONTAINER_V2, FLAG_SEEKABLE,
+    FRAME_HEADER, FRAME_MARKER, TRAILER_MARKER,
 };
 use crate::compress::llm::LlmCompressor;
 use crate::util::Crc32;
@@ -85,7 +85,8 @@ pub struct CompressWriter<'c, W: Write> {
 impl<'c, W: Write> CompressWriter<'c, W> {
     /// Open a session: writes the container header immediately.
     pub(crate) fn new(comp: &'c LlmCompressor, mut inner: W) -> Result<CompressWriter<'c, W>> {
-        let header = Container::v2_header(comp.chunk_tokens() as u32, &comp.container_tag());
+        let flags = FLAG_SEEKABLE | comp.codec().flag_bits();
+        let header = Container::v2_header(flags, comp.chunk_tokens() as u32, &comp.container_tag());
         inner.write_all(&header)?;
         Ok(CompressWriter {
             comp,
@@ -235,6 +236,9 @@ pub struct DecompressReader<'c, R: Read> {
     frames: Frames,
     /// Context window recorded in the header.
     ct: usize,
+    /// Entropy backend recorded in the header (tag + flag bits, cross-
+    /// checked at open).
+    codec: Codec,
     /// Bytes consumed from `inner` (validates the v2 trailer offset).
     consumed: u64,
     crc: Crc32,
@@ -255,6 +259,7 @@ impl<'c, R: Read> DecompressReader<'c, R> {
             inner,
             frames: Frames::V2 { seen: Vec::new() },
             ct: 0,
+            codec: Codec::Range,
             consumed: 0,
             crc: Crc32::new(),
             total_out: 0,
@@ -276,7 +281,7 @@ impl<'c, R: Read> DecompressReader<'c, R> {
                 let orig_crc32 = r.read_u32()?;
                 let chunk_tokens = r.read_u32()? as usize;
                 let name = r.read_name()?;
-                r.ct = comp.validate_tag_and_window(&name, chunk_tokens)?;
+                (r.ct, r.codec) = comp.validate_tag_and_window(&name, chunk_tokens, flags)?;
                 let n_chunks = r.read_u32()? as usize;
                 let mut table = Vec::with_capacity(n_chunks.min(1 << 20));
                 let mut total_tokens = 0u64;
@@ -297,7 +302,7 @@ impl<'c, R: Read> DecompressReader<'c, R> {
             CONTAINER_V2 => {
                 let chunk_tokens = r.read_u32()? as usize;
                 let name = r.read_name()?;
-                r.ct = comp.validate_tag_and_window(&name, chunk_tokens)?;
+                (r.ct, r.codec) = comp.validate_tag_and_window(&name, chunk_tokens, flags)?;
             }
             v => anyhow::bail!("unsupported container version {v}"),
         }
@@ -358,7 +363,8 @@ impl<'c, R: Read> DecompressReader<'c, R> {
     fn decode_group(&mut self, group: Vec<(ChunkRecord, Vec<u8>)>) -> Result<()> {
         let records: Vec<ChunkRecord> = group.iter().map(|(r, _)| *r).collect();
         let payloads: Vec<&[u8]> = group.iter().map(|(_, p)| p.as_slice()).collect();
-        let decoded = self.comp.decompress_chunks(self.ct, &records, &payloads)?;
+        let codecs = vec![self.codec; payloads.len()];
+        let decoded = self.comp.decompress_chunks(self.ct, &records, &payloads, &codecs)?;
         self.chunk.clear();
         for d in decoded {
             self.chunk.extend_from_slice(&d);
@@ -572,6 +578,31 @@ mod tests {
             assert_eq!(summary.bytes_out, golden.len() as u64);
             assert_eq!(summary.chunks, 6);
         }
+    }
+
+    #[test]
+    fn fse_writer_bytes_identical_to_one_shot_and_verified_roundtrip() {
+        let c = compressor().with_codec(Codec::Fse);
+        let data = crate::textgen::quick_sample(700, 3);
+        let golden = c.compress(&data).unwrap();
+        let mut w = c.stream_compress(Vec::new()).unwrap();
+        for chunk in data.chunks(97) {
+            w.write_bytes(chunk).unwrap();
+        }
+        let (out, _) = w.finish().unwrap();
+        assert_eq!(out, golden, "streaming FSE container must match one-shot");
+        let mut r = c.stream_decompress(&out[..]).unwrap();
+        let mut back = Vec::new();
+        r.read_to_end(&mut back).unwrap();
+        assert_eq!(back, data);
+        assert!(r.verified());
+        // A range-configured compressor decodes the FSE stream too: the
+        // codec is the container's property, not the engine's.
+        let range_side = compressor();
+        let mut r = range_side.stream_decompress(&out[..]).unwrap();
+        let mut back = Vec::new();
+        r.read_to_end(&mut back).unwrap();
+        assert_eq!(back, data);
     }
 
     #[test]

@@ -18,7 +18,7 @@
 //!   class, so a latency-sensitive compress request can overtake a bulk
 //!   ingest job without a separate queueing tier.
 
-use crate::compress::container::ChunkRecord;
+use crate::compress::container::{ChunkRecord, Codec};
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
@@ -50,6 +50,10 @@ pub struct WorkItem {
     pub data: Vec<u8>,
     /// Decompress only: the chunk record (token count).
     pub record: Option<ChunkRecord>,
+    /// Entropy backend of this chunk's payload. Compress: the engine's
+    /// configured codec. Decompress: the *container's* recorded codec —
+    /// per item, so one engine batch may mix range and FSE chunks.
+    pub codec: Codec,
     pub enqueued: Instant,
 }
 
@@ -203,6 +207,7 @@ mod tests {
             priority: Priority::Bulk,
             data: vec![1, 2, 3],
             record: None,
+            codec: Codec::Range,
             enqueued: at,
         }
     }

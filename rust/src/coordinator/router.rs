@@ -56,8 +56,8 @@
 //! reach the payload. `tests/stress_elastic.rs` pins this end-to-end
 //! against the direct single-engine path under forced grow/shrink churn.
 
-use crate::compress::container::{ChunkRecord, Container};
-use crate::compress::llm::LlmCompressor;
+use crate::compress::container::{ChunkRecord, Codec, Container};
+use crate::compress::llm::{container_codec, ContainerTag, LlmCompressor};
 use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher, Priority, WorkItem, WorkKind};
 use crate::coordinator::metrics::Metrics;
 use crate::lm::executor::ExecutorKind;
@@ -117,6 +117,13 @@ pub struct ServerConfig {
     /// `LlmCompressorConfig::panel_layout`; it is recorded here so the
     /// whole replica configuration travels through one struct.
     pub panel_layout: bool,
+    /// Entropy backend the replicas encode with. Like `threads` and
+    /// `panel_layout`, the factory owns engine construction — `cmd/serve`
+    /// wires this into the compressor via [`LlmCompressor::with_codec`];
+    /// it is recorded here so the whole replica configuration travels
+    /// through one struct. Decompression always follows the *container's*
+    /// recorded codec, so a server configured either way decodes both.
+    pub codec: Codec,
     pub policy: BatchPolicy,
 }
 
@@ -134,6 +141,7 @@ impl Default for ServerConfig {
             autoscale_shrink_after: Duration::from_millis(2000),
             autoscale_p99_ms: f64::INFINITY,
             panel_layout: true,
+            codec: Codec::Range,
             policy: BatchPolicy::default(),
         }
     }
@@ -248,6 +256,9 @@ struct EngineInfo {
     /// Executor kind: autoscale only moves native pools (PJRT handles are
     /// thread-affine and their replicas stay static).
     kind: ExecutorKind,
+    /// Entropy backend the replicas were built with; stamped into every
+    /// compress `WorkItem` and every container this server produces.
+    codec: Codec,
 }
 
 /// Per-request reassembly state.
@@ -604,6 +615,7 @@ fn engine_worker<F>(
                 chunk_tokens: c.chunk_tokens(),
                 tag: c.container_tag(),
                 kind: c.executor_kind(),
+                codec: c.codec(),
             };
             ready.send(id, Ok(info));
             c
@@ -639,7 +651,10 @@ fn engine_worker<F>(
                     .map(|i| i.record.expect("decode item has record"))
                     .collect();
                 let payloads: Vec<&[u8]> = job.items.iter().map(|i| i.data.as_slice()).collect();
-                compressor.decompress_chunks(job.chunk_tokens, &records, &payloads)
+                // Decode follows each *container's* recorded codec (stamped
+                // into the item at admit), not the replica's configured one.
+                let codecs: Vec<Codec> = job.items.iter().map(|i| i.codec).collect();
+                compressor.decompress_chunks(job.chunk_tokens, &records, &payloads, &codecs)
             }
         }))
         .unwrap_or_else(|_| Err(anyhow::anyhow!("engine batch panicked")));
@@ -1152,6 +1167,7 @@ fn handle_message(
                 priority: Priority::Bulk,
                 data,
                 record: None,
+                codec: info.codec,
                 enqueued: Instant::now(),
             });
         }
@@ -1170,7 +1186,7 @@ fn handle_message(
             p.orig_crc = orig_crc;
             if p.remaining == 0 {
                 let p = st.pending.remove(&id).unwrap();
-                finish(&info.tag, p, metrics);
+                finish(info, p, metrics);
             }
         }
         ToScheduler::StreamAbort { id } => {
@@ -1256,7 +1272,8 @@ fn admit(
                 // container carrying the REAL engine tag — `finish` never
                 // sees this request, and decoding through
                 // `LlmCompressor::decompress` requires the `model:flag` tag.
-                let container = Container::v2(
+                let container = Container::v2_coded(
+                    info.codec,
                     0,
                     entry.orig_crc,
                     entry.container_chunk_tokens,
@@ -1277,6 +1294,7 @@ fn admit(
                     priority: req.priority,
                     data: chunk.to_vec(),
                     record: None,
+                    codec: info.codec,
                     enqueued: now,
                 });
             }
@@ -1290,14 +1308,36 @@ fn admit(
                 // with an empty tag; they carry no payload, so decoding them
                 // stays valid on any engine.
                 let legacy_empty = container.model_name.is_empty() && container.chunks.is_empty();
-                if container.model_name != info.tag && !legacy_empty {
-                    let _ = req.respond.send(Err(anyhow::anyhow!(
-                        "container was produced by engine '{}', this server runs '{}'",
-                        container.model_name,
-                        info.tag
-                    )));
-                    return;
-                }
+                // Engine identity ignores the codec suffix: a range-configured
+                // server decodes fse containers from the same model (and vice
+                // versa) — decompression always follows the *container's*
+                // recorded codec, cross-checked against the flag bits.
+                let codec = if legacy_empty {
+                    Codec::Range
+                } else {
+                    let same = match (
+                        ContainerTag::parse(&container.model_name),
+                        ContainerTag::parse(&info.tag),
+                    ) {
+                        (Ok(theirs), Ok(ours)) => theirs.same_engine(&ours),
+                        _ => container.model_name == info.tag,
+                    };
+                    if !same {
+                        let _ = req.respond.send(Err(anyhow::anyhow!(
+                            "container was produced by engine '{}', this server runs '{}'",
+                            container.model_name,
+                            info.tag
+                        )));
+                        return;
+                    }
+                    match container_codec(&container) {
+                        Ok(c) => c,
+                        Err(e) => {
+                            let _ = req.respond.send(Err(e));
+                            return;
+                        }
+                    }
+                };
                 // Batches mix chunks from concurrent requests and the
                 // engine decodes a whole batch with ONE context-window
                 // size, so this server can only decode containers written
@@ -1349,6 +1389,7 @@ fn admit(
                         priority: req.priority,
                         data: payload,
                         record: Some(rec),
+                        codec,
                         enqueued: now,
                     });
                 }
@@ -1384,14 +1425,14 @@ fn complete_batch(
                 // finished; one-shot requests are `finished` from admit.
                 if p.remaining == 0 && p.finished {
                     let p = pending.remove(&item.request_id).unwrap();
-                    finish(&info.tag, p, metrics);
+                    finish(info, p, metrics);
                 }
             }
         }
     }
 }
 
-fn finish(tag: &str, p: Pending, metrics: &Metrics) {
+fn finish(info: &EngineInfo, p: Pending, metrics: &Metrics) {
     let response: Result<Vec<u8>> = match p.kind {
         WorkKind::Compress => {
             let mut records = Vec::with_capacity(p.results.len());
@@ -1404,11 +1445,12 @@ fn finish(tag: &str, p: Pending, metrics: &Metrics) {
                 });
                 payload.extend_from_slice(bytes);
             }
-            Ok(Container::v2(
+            Ok(Container::v2_coded(
+                info.codec,
                 p.orig_len,
                 p.orig_crc,
                 p.container_chunk_tokens,
-                tag.to_string(),
+                info.tag.to_string(),
                 records,
                 payload,
             )

@@ -93,6 +93,13 @@ impl<'a> BitReader<'a> {
     pub fn exhausted(&self) -> bool {
         self.pos >= self.data.len() && self.nbits == 0
     }
+
+    /// True if more bits were requested than the buffer holds (reads past
+    /// the end return zeros but advance `pos` beyond the data) — the
+    /// structural-corruption signal for fixed-length bitstream frames.
+    pub fn overran(&self) -> bool {
+        self.pos > self.data.len()
+    }
 }
 
 #[cfg(test)]

@@ -14,11 +14,15 @@ use crate::Result;
 pub const DEFAULT_TABLE_LOG: u32 = 12;
 
 /// Normalize raw counts so they sum to `1 << table_log`, keeping every
-/// present symbol at frequency >= 1.
-pub fn normalize_freqs(counts: &[u64], table_log: u32) -> Vec<u32> {
+/// present symbol at frequency >= 1. Degenerate inputs (empty
+/// distribution, alphabet too wide for the table) are clean errors, not
+/// panics: these paths are reachable from decoding untrusted containers.
+pub fn normalize_freqs(counts: &[u64], table_log: u32) -> Result<Vec<u32>> {
     let table_size = 1u64 << table_log;
     let total: u64 = counts.iter().sum();
-    assert!(total > 0, "cannot normalize an empty distribution");
+    if total == 0 {
+        anyhow::bail!("cannot normalize an empty distribution");
+    }
     let mut norm = vec![0u32; counts.len()];
     let mut assigned: u64 = 0;
     let mut max_idx = 0;
@@ -40,11 +44,13 @@ pub fn normalize_freqs(counts: &[u64], table_log: u32) -> Vec<u32> {
     if assigned != table_size {
         let diff = table_size as i64 - assigned as i64;
         let adjusted = norm[max_idx] as i64 + diff;
-        assert!(adjusted >= 1, "normalization underflow: distribution too flat for table_log");
+        if adjusted < 1 {
+            anyhow::bail!("normalization underflow: distribution too flat for table_log");
+        }
         norm[max_idx] = adjusted as u32;
     }
     debug_assert_eq!(norm.iter().map(|&x| x as u64).sum::<u64>(), table_size);
-    norm
+    Ok(norm)
 }
 
 /// Spread symbols over the state table (Yann Collet's step function).
@@ -82,9 +88,17 @@ pub struct FseTable {
 
 impl FseTable {
     /// Build from normalized frequencies (must sum to `1 << table_log`).
-    pub fn new(norm: &[u32], table_log: u32) -> Self {
+    /// The sum is a hard precondition of the spread/decode construction,
+    /// so it is validated for real — tables are built from container
+    /// headers, and a lying header must be an error, not a panic.
+    pub fn new(norm: &[u32], table_log: u32) -> Result<Self> {
+        if table_log == 0 || table_log > 15 {
+            anyhow::bail!("FSE table_log {table_log} out of range (1..=15)");
+        }
         let table_size = 1u32 << table_log;
-        debug_assert_eq!(norm.iter().sum::<u32>(), table_size);
+        if norm.iter().map(|&f| f as u64).sum::<u64>() != table_size as u64 {
+            anyhow::bail!("FSE frequencies do not sum to table size 1<<{table_log}");
+        }
         let spread = spread_symbols(norm, table_log);
         let mut next: Vec<u32> = norm.to_vec();
         let mut decode = vec![DecodeEntry { symbol: 0, nb_bits: 0, base: 0 }; table_size as usize];
@@ -103,7 +117,7 @@ impl FseTable {
             // State value for the encoder: i + table_size in [TS, 2TS).
             encode[s][(x - norm[s]) as usize] = i as u32 + table_size;
         }
-        FseTable { table_log, norm: norm.to_vec(), decode, encode }
+        Ok(FseTable { table_log, norm: norm.to_vec(), decode, encode })
     }
 
     pub fn table_log(&self) -> u32 {
@@ -112,6 +126,19 @@ impl FseTable {
 
     pub fn norm(&self) -> &[u32] {
         &self.norm
+    }
+
+    /// One decode-table walk for external streaming decoders: consumes the
+    /// entry's bits from `reader` and returns `(symbol, next_state)`.
+    /// `state` must be in `[table_size, 2 * table_size)` — validate the
+    /// frame's initial state once (as [`FseDecoder::new`] does) and every
+    /// state this returns stays in range by construction.
+    #[inline]
+    pub fn decode_step(&self, state: u32, reader: &mut BitReader) -> (usize, u32) {
+        let table_size = 1u32 << self.table_log;
+        let entry = self.decode[(state - table_size) as usize];
+        let bits = reader.read_bits(entry.nb_bits as u32) as u32;
+        (entry.symbol as usize, entry.base + table_size + bits)
     }
 }
 
@@ -176,17 +203,22 @@ pub struct FseDecoder<'t, 'a> {
 }
 
 impl<'t, 'a> FseDecoder<'t, 'a> {
-    pub fn new(table: &'t FseTable, initial_state: u32, data: &'a [u8]) -> Self {
-        FseDecoder { table, state: initial_state, reader: BitReader::new(data) }
+    /// The initial state comes straight off the wire, so it is validated
+    /// here once; every state [`Self::next`] computes afterwards is in
+    /// `[TS, 2TS)` by table construction.
+    pub fn new(table: &'t FseTable, initial_state: u32, data: &'a [u8]) -> Result<Self> {
+        let table_size = 1u32 << table.table_log;
+        if initial_state < table_size || initial_state >= 2 * table_size {
+            anyhow::bail!("corrupt FSE initial state {initial_state}");
+        }
+        Ok(FseDecoder { table, state: initial_state, reader: BitReader::new(data) })
     }
 
     /// Decode the next symbol.
     pub fn next(&mut self) -> usize {
-        let table_size = 1u32 << self.table.table_log;
-        let entry = self.table.decode[(self.state - table_size) as usize];
-        let bits = self.reader.read_bits(entry.nb_bits as u32) as u32;
-        self.state = entry.base + table_size + bits;
-        entry.symbol as usize
+        let (sym, next) = self.table.decode_step(self.state, &mut self.reader);
+        self.state = next;
+        sym
     }
 }
 
@@ -201,9 +233,14 @@ pub fn encode_all(table: &FseTable, symbols: &[usize]) -> (u32, Vec<u8>) {
 }
 
 /// One-shot helper: decode `n` symbols.
-pub fn decode_all(table: &FseTable, initial_state: u32, payload: &[u8], n: usize) -> Vec<usize> {
-    let mut dec = FseDecoder::new(table, initial_state, payload);
-    (0..n).map(|_| dec.next()).collect()
+pub fn decode_all(
+    table: &FseTable,
+    initial_state: u32,
+    payload: &[u8],
+    n: usize,
+) -> Result<Vec<usize>> {
+    let mut dec = FseDecoder::new(table, initial_state, payload)?;
+    Ok((0..n).map(|_| dec.next()).collect())
 }
 
 /// Serialize normalized frequencies compactly (u16 little-endian each).
@@ -244,10 +281,10 @@ mod tests {
         for &s in symbols {
             counts[s] += 1;
         }
-        let norm = normalize_freqs(&counts, table_log);
-        let table = FseTable::new(&norm, table_log);
+        let norm = normalize_freqs(&counts, table_log).unwrap();
+        let table = FseTable::new(&norm, table_log).unwrap();
         let (state, payload) = encode_all(&table, symbols);
-        let decoded = decode_all(&table, state, &payload, symbols.len());
+        let decoded = decode_all(&table, state, &payload, symbols.len()).unwrap();
         assert_eq!(decoded, symbols);
         payload.len()
     }
@@ -281,10 +318,10 @@ mod tests {
         let syms = vec![5usize; 1000];
         let mut counts = vec![0u64; 8];
         counts[5] = 1000;
-        let norm = normalize_freqs(&counts, 6);
-        let table = FseTable::new(&norm, 6);
+        let norm = normalize_freqs(&counts, 6).unwrap();
+        let table = FseTable::new(&norm, 6).unwrap();
         let (state, payload) = encode_all(&table, &syms);
-        let decoded = decode_all(&table, state, &payload, syms.len());
+        let decoded = decode_all(&table, state, &payload, syms.len()).unwrap();
         assert_eq!(decoded, syms);
         // Degenerate distribution costs ~0 bits per symbol.
         assert!(payload.len() <= 2);
@@ -307,7 +344,7 @@ mod tests {
             if counts.iter().sum::<u64>() == 0 {
                 continue;
             }
-            let norm = normalize_freqs(&counts, 12);
+            let norm = normalize_freqs(&counts, 12).unwrap();
             assert_eq!(norm.iter().sum::<u32>(), 1 << 12);
             for (i, &c) in counts.iter().enumerate() {
                 assert_eq!(c > 0, norm[i] > 0, "presence must be preserved");
@@ -318,7 +355,7 @@ mod tests {
     #[test]
     fn pack_unpack_norm_roundtrip() {
         let counts = vec![3u64, 0, 10, 1, 1, 500];
-        let norm = normalize_freqs(&counts, 10);
+        let norm = normalize_freqs(&counts, 10).unwrap();
         let packed = pack_norm(&norm);
         let restored = unpack_norm(&packed, norm.len(), 10).unwrap();
         assert_eq!(restored, norm);
@@ -328,6 +365,48 @@ mod tests {
     fn unpack_rejects_bad_sum() {
         let bad = pack_norm(&[1, 2, 3]);
         assert!(unpack_norm(&bad, 3, 10).is_err());
+    }
+
+    #[test]
+    fn degenerate_inputs_are_errors_not_panics() {
+        // Satellite hardening: every decode-reachable constructor refuses
+        // corrupt inputs with a clean error.
+        let err = normalize_freqs(&[0u64; 8], 10).unwrap_err().to_string();
+        assert!(err.contains("empty distribution"), "{err}");
+        // 64 present symbols cannot each get >= 1 slot in a 32-slot table.
+        let err = normalize_freqs(&vec![1u64; 64], 5).unwrap_err().to_string();
+        assert!(err.contains("underflow"), "{err}");
+        // Frequencies that lie about the table size.
+        assert!(FseTable::new(&[1, 2, 3], 10).is_err());
+        assert!(FseTable::new(&[1 << 10], 16).is_err());
+        // Out-of-range initial state off the wire.
+        let norm = normalize_freqs(&[10, 20, 30], 8).unwrap();
+        let table = FseTable::new(&norm, 8).unwrap();
+        for bad_state in [0u32, 255, 512, u32::MAX] {
+            assert!(FseDecoder::new(&table, bad_state, &[]).is_err(), "{bad_state}");
+            assert!(decode_all(&table, bad_state, &[], 4).is_err(), "{bad_state}");
+        }
+    }
+
+    #[test]
+    fn decode_step_matches_streaming_decoder() {
+        let syms = sample(&[8.0, 4.0, 2.0, 1.0], 5000, 7);
+        let mut counts = vec![0u64; 4];
+        for &s in &syms {
+            counts[s] += 1;
+        }
+        let norm = normalize_freqs(&counts, 9).unwrap();
+        let table = FseTable::new(&norm, 9).unwrap();
+        let (state0, payload) = encode_all(&table, &syms);
+        let mut reader = BitReader::new(&payload);
+        let mut state = state0;
+        let mut out = Vec::with_capacity(syms.len());
+        for _ in 0..syms.len() {
+            let (sym, next) = table.decode_step(state, &mut reader);
+            out.push(sym);
+            state = next;
+        }
+        assert_eq!(out, syms);
     }
 
     #[test]

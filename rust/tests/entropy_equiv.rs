@@ -1,0 +1,181 @@
+//! Cross-backend equivalence suite for the pluggable entropy stage.
+//!
+//! The fse backend (rank transform + tANS table coding) must be lossless
+//! everywhere the adaptive range backend is — every textgen domain, both
+//! weight precisions — produce byte-identical containers regardless of
+//! execution shape, and interoperate with range-coded containers through
+//! every decode face: one-shot, seekable, and the coordinator service
+//! (including a MIXED fleet where the two sides are configured with
+//! different codecs).
+
+use llmzip::compress::rank::{byte_of_rank, rank_of};
+use llmzip::compress::{Codec, Compressor, Container, LlmCompressor};
+use llmzip::coordinator::{BatchPolicy, Server, ServerConfig};
+use llmzip::lm::config::by_name;
+use llmzip::lm::weights::Weights;
+use llmzip::textgen::{generate, Domain};
+use llmzip::util::Pcg64;
+use std::sync::Arc;
+use std::time::Duration;
+
+const CHUNK: usize = 64;
+const LANES: usize = 4;
+
+fn f32_compressor(codec: Codec) -> LlmCompressor {
+    let cfg = by_name("nano").unwrap();
+    LlmCompressor::from_weights(cfg, Weights::random(cfg, 99), CHUNK, LANES)
+        .unwrap()
+        .with_codec(codec)
+}
+
+fn int8_compressor(codec: Codec) -> LlmCompressor {
+    let cfg = by_name("nano").unwrap();
+    LlmCompressor::from_weights(cfg, Weights::random(cfg, 99).quantize(), CHUNK, LANES)
+        .unwrap()
+        .with_codec(codec)
+}
+
+/// Coordinator server over the same seed-99 weights, writing `codec`.
+fn server_with_codec(codec: Codec, replicas: usize, threads: usize) -> Server {
+    let cfg = by_name("nano").unwrap();
+    let weights = Arc::new(Weights::random(cfg, 99));
+    Server::start(
+        move || {
+            LlmCompressor::from_shared(
+                cfg,
+                weights.clone(),
+                llmzip::compress::LlmCompressorConfig {
+                    model: cfg.name.into(),
+                    chunk_tokens: CHUNK,
+                    stream_bytes: 4 * CHUNK,
+                    executor: llmzip::lm::ExecutorKind::Native,
+                    lanes: LANES,
+                    threads,
+                    codec,
+                    ..Default::default()
+                },
+            )
+        },
+        ServerConfig {
+            chunk_tokens: CHUNK,
+            replicas,
+            threads,
+            codec,
+            policy: BatchPolicy { lanes: LANES, max_wait: Duration::from_millis(3) },
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn fse_is_lossless_on_every_domain_and_matches_range_output() {
+    // The acceptance bar for the new backend: on all nine generator
+    // domains, for f32 AND int8 weights, the fse container decodes to
+    // exactly what the range container decodes to (the original bytes),
+    // and each side's decoder accepts the other side's container.
+    for (label, range_c, fse_c) in [
+        ("f32", f32_compressor(Codec::Range), f32_compressor(Codec::Fse)),
+        ("int8", int8_compressor(Codec::Range), int8_compressor(Codec::Fse)),
+    ] {
+        for domain in Domain::EVAL {
+            let data = generate(domain, 700, 17);
+            let zr = range_c.compress(&data).unwrap();
+            let zf = fse_c.compress(&data).unwrap();
+            assert_eq!(Codec::from_flags(Container::from_bytes(&zr).unwrap().flags), Codec::Range);
+            assert_eq!(Codec::from_flags(Container::from_bytes(&zf).unwrap().flags), Codec::Fse);
+            // Both backends are lossless...
+            assert_eq!(range_c.decompress(&zr).unwrap(), data, "{label} {domain:?} range");
+            assert_eq!(fse_c.decompress(&zf).unwrap(), data, "{label} {domain:?} fse");
+            // ...and each decodes the OTHER's container (decode follows the
+            // container's recorded codec, not the decoder's config).
+            assert_eq!(range_c.decompress(&zf).unwrap(), data, "{label} {domain:?} cross r<-f");
+            assert_eq!(fse_c.decompress(&zr).unwrap(), data, "{label} {domain:?} cross f<-r");
+        }
+    }
+}
+
+#[test]
+fn rank_transform_is_self_inverse_on_model_cdfs() {
+    // Suite-level restatement of the transform's core contract, over
+    // random logit vectors rather than hand-built CDFs: rank_of and
+    // byte_of_rank are exact inverses and the ranks are a permutation.
+    let mut rng = Pcg64::seeded(23);
+    for _ in 0..10 {
+        let logits: Vec<f32> =
+            (0..256).map(|_| (rng.gen_f64() * 16.0 - 8.0) as f32).collect();
+        let (cdf, argmax) = llmzip::compress::llm::logits_to_cdf_argmax(&logits);
+        assert_eq!(byte_of_rank(&cdf, argmax, 0) as usize, argmax);
+        let mut seen = [false; 256];
+        for sym in 0..256usize {
+            let r = rank_of(&cdf, argmax, sym);
+            assert!(!seen[r as usize]);
+            seen[r as usize] = true;
+            assert_eq!(byte_of_rank(&cdf, argmax, r) as usize, sym);
+        }
+    }
+}
+
+#[test]
+fn fse_containers_byte_identical_across_server_shapes_and_direct_path() {
+    // The byte-identity spine extends to the new backend: the coordinator
+    // (any pool shape) and the direct single-engine path emit the same
+    // fse container for the same input.
+    let reference = f32_compressor(Codec::Fse);
+    let data = generate(Domain::EVAL[2], 900, 31);
+    let golden = reference.compress(&data).unwrap();
+    for (replicas, threads) in [(1usize, 1usize), (2, 2)] {
+        let server = server_with_codec(Codec::Fse, replicas, threads);
+        let z = server.compress(&data).unwrap();
+        assert_eq!(z, golden, "replicas={replicas} threads={threads}");
+        assert_eq!(server.decompress(&golden).unwrap(), data);
+    }
+}
+
+#[test]
+fn mixed_codec_fleet_cross_decodes() {
+    // A range-configured server decodes containers written by an
+    // fse-configured server over the same engine, and vice versa — and
+    // each stamps ITS codec on what it writes.
+    let range_srv = server_with_codec(Codec::Range, 1, 1);
+    let fse_srv = server_with_codec(Codec::Fse, 1, 1);
+    let data = generate(Domain::EVAL[5], 800, 41);
+    let zr = range_srv.compress(&data).unwrap();
+    let zf = fse_srv.compress(&data).unwrap();
+    assert_eq!(Codec::from_flags(Container::from_bytes(&zf).unwrap().flags), Codec::Fse);
+    assert!(Container::from_bytes(&zf).unwrap().model_name.ends_with(":fse"));
+    assert_eq!(fse_srv.decompress(&zr).unwrap(), data, "fse server <- range container");
+    assert_eq!(range_srv.decompress(&zf).unwrap(), data, "range server <- fse container");
+    // Empty input through the fse server still yields a valid, decodable
+    // container stamped with the fse codec (the zero-chunk fast path).
+    let z0 = fse_srv.compress(&[]).unwrap();
+    assert_eq!(Codec::from_flags(Container::from_bytes(&z0).unwrap().flags), Codec::Fse);
+    assert_eq!(range_srv.decompress(&z0).unwrap(), Vec::<u8>::new());
+}
+
+#[test]
+fn fse_seekable_faces_match_range_faces() {
+    // decompress_range / decode_chunk return the same slices from an fse
+    // container as from the range container of the same input.
+    let range_c = f32_compressor(Codec::Range);
+    let fse_c = f32_compressor(Codec::Fse);
+    let data = generate(Domain::EVAL[0], 1000, 53);
+    let zr = range_c.compress(&data).unwrap();
+    let zf = fse_c.compress(&data).unwrap();
+    for (offset, len) in [(0u64, 64u64), (100, 300), (937, 63)] {
+        let a = range_c.decompress_range(&zr, offset, len).unwrap();
+        let b = range_c.decompress_range(&zf, offset, len).unwrap();
+        assert_eq!(a, b, "range at {offset}+{len}");
+        assert_eq!(a, data[offset as usize..(offset + len) as usize]);
+    }
+    let cr = Container::from_bytes(&zr).unwrap();
+    let cf = Container::from_bytes(&zf).unwrap();
+    assert_eq!(cr.chunks.len(), cf.chunks.len());
+    for i in 0..cr.chunks.len() {
+        assert_eq!(
+            range_c.decode_chunk(&cr, i).unwrap(),
+            fse_c.decode_chunk(&cf, i).unwrap(),
+            "chunk {i}"
+        );
+    }
+}

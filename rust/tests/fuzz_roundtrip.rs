@@ -114,6 +114,8 @@ fn container_tag_parse_total_over_arbitrary_strings() {
         ("medium:2", "medium", false),
         ("small:0:q8:00c0ffee", "small", true),
         ("large:1:q8:ffffffff", "large", true),
+        ("nano:0:fse", "nano", false),
+        ("large:1:q8:ffffffff:fse", "large", true),
     ];
     for (tag, model, quant) in valid {
         let t = ContainerTag::parse(tag).unwrap_or_else(|e| panic!("{tag}: {e}"));
@@ -125,14 +127,15 @@ fn container_tag_parse_total_over_arbitrary_strings() {
         "", "untagged", "nano", "nano:", "nano:x", "nano:65536", "nano:99",
         "nano:0:q8", "nano:0:q8:", "nano:0:q8:zzzz", "nano:0:q8:00c0ffee:extra",
         "nano:0:fp16:00c0ffee", "nano:0:q16:00c0ffee", "nano:0:q8:123456789abcdef0",
-        "::::", "a:b:c:d",
+        "::::", "a:b:c:d", "nano:0:tans", "nano:0:fse:extra", "nano:0:fse:00c0ffee",
+        "nano:0:q8:00c0ffee:fse:extra", "nano:0:FSE",
     ] {
         assert!(ContainerTag::parse(bad).is_err(), "'{bad}' must not parse");
     }
     // Seeded arbitrary ASCII soup: Ok or Err, never panic; anything Ok
     // must have parsed a real executor flag.
     let mut rng = Pcg64::seeded(271828);
-    let alphabet: Vec<char> = ":0123456789abcdefq8xyz ".chars().collect();
+    let alphabet: Vec<char> = ":0123456789abcdefq8sxyz ".chars().collect();
     for _ in 0..2000 {
         let len = rng.gen_index(24);
         let s: String = (0..len).map(|_| alphabet[rng.gen_index(alphabet.len())]).collect();
@@ -373,7 +376,14 @@ fn container_flag_bits_round_trip_and_unknown_bits_are_refused() {
         let err = Container::from_bytes(&m).unwrap_err().to_string();
         assert!(err.contains("flag"), "v1 {unknown:#06x}: {err}");
     }
-    for unknown in [0x0003u16, 0x8001, 0xFFFF] {
+    // 0x0002 (fse) became a KNOWN v2 bit in this release: seekable|fse
+    // parses and the field round-trips...
+    let mut fse_flags = v2.clone();
+    fse_flags[6..8].copy_from_slice(&0x0003u16.to_le_bytes());
+    assert_eq!(Container::from_bytes(&fse_flags).unwrap().flags, 0x0003);
+    // ...while any bit BEYOND the validated set is still refused by name —
+    // the guarantee that pre-fse decoders refuse fse containers cleanly.
+    for unknown in [0x0005u16, 0x8001, 0xFFFC, 0xFFFF] {
         let mut m = v2.clone();
         m[6..8].copy_from_slice(&unknown.to_le_bytes());
         let err = Container::from_bytes(&m).unwrap_err().to_string();
@@ -410,6 +420,112 @@ fn container_v1_fixture_bytes_still_parse() {
     assert_eq!(c.model_name, "nano:0");
     assert_eq!(c.payload, vec![0xDE, 0xAD, 0xBF]);
     assert_eq!(c.to_bytes(), fixture, "v1 fixture re-encodes byte-exactly");
+}
+
+// ---------------------------------------------------------------------
+// Rank-frame (fse codec) property suite: the per-stream tANS frames the
+// fse backend writes into v2 containers.
+// ---------------------------------------------------------------------
+
+/// A model-shaped rank stream: heavily skewed toward rank 0 with a thin
+/// escape tail, the distribution the fse path is built for.
+fn skewed_ranks(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..n)
+        .map(|_| {
+            let r = rng.gen_index(1000);
+            if r < 880 {
+                0
+            } else if r < 995 {
+                1 + rng.gen_index(8) as u8
+            } else {
+                64 + rng.gen_index(192) as u8 // escape literals
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn rank_frames_roundtrip_and_reject_every_prefix() {
+    use llmzip::compress::rank::{decode_rank_stream, encode_rank_stream};
+    for (name, ranks) in [
+        ("skewed", skewed_ranks(3000, 41)),
+        ("all-zero", vec![0u8; 500]),
+        ("all-escape", vec![200u8; 64]),
+        ("every-rank", (0u8..=255).collect()),
+        ("single", vec![3u8]),
+        ("empty", vec![]),
+    ] {
+        let frame = encode_rank_stream(&ranks).unwrap();
+        assert_eq!(decode_rank_stream(&frame, ranks.len()).unwrap(), ranks, "{name}");
+        for cut in 0..frame.len() {
+            assert!(
+                decode_rank_stream(&frame[..cut], ranks.len()).is_err(),
+                "{name}: prefix of {cut} bytes must not decode"
+            );
+        }
+    }
+}
+
+#[test]
+fn rank_frame_arbitrary_bytes_and_bit_flips_never_panic() {
+    use llmzip::compress::rank::{decode_rank_stream, encode_rank_stream};
+    // Pure junk: Ok or Err, never a panic; an Ok decode must have the
+    // requested length (wrong VALUES are the container CRC's job).
+    let mut rng = Pcg64::seeded(4242);
+    for _ in 0..500 {
+        let mut junk = vec![0u8; rng.gen_index(80)];
+        rng.fill_bytes(&mut junk);
+        let n = rng.gen_index(256);
+        if let Ok(out) = decode_rank_stream(&junk, n) {
+            assert_eq!(out.len(), n);
+        }
+    }
+    // Every single-bit flip of a real frame: same contract.
+    let ranks = skewed_ranks(400, 43);
+    let frame = encode_rank_stream(&ranks).unwrap();
+    for at in 0..frame.len() {
+        for bit in 0..8 {
+            let mut m = frame.clone();
+            m[at] ^= 1 << bit;
+            if let Ok(out) = decode_rank_stream(&m, ranks.len()) {
+                assert_eq!(out.len(), ranks.len(), "at={at} bit={bit}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fse_histogram_and_table_roundtrip_property() {
+    use llmzip::entropy::fse::{
+        decode_all, encode_all, normalize_freqs, pack_norm, unpack_norm, FseTable,
+    };
+    let mut rng = Pcg64::seeded(271);
+    for trial in 0..40 {
+        let alphabet = 1 + rng.gen_index(65);
+        let table_log = 6 + (trial % 5) as u32; // 6..=10
+        // Random counts with at least one present symbol.
+        let mut counts = vec![0u64; alphabet];
+        for c in counts.iter_mut() {
+            *c = rng.gen_index(1000) as u64;
+        }
+        counts[rng.gen_index(alphabet)] += 1;
+        let Ok(norm) = normalize_freqs(&counts, table_log) else {
+            continue; // tiny tables can legitimately refuse wide alphabets
+        };
+        // Histogram serialization round-trips exactly.
+        let packed = pack_norm(&norm);
+        assert_eq!(unpack_norm(&packed, norm.len(), table_log).unwrap(), norm, "t{trial}");
+        // And the table built from it codes a random stream losslessly.
+        let table = FseTable::new(&norm, table_log).unwrap();
+        let present: Vec<usize> =
+            (0..alphabet).filter(|&s| norm[s] > 0).collect();
+        let symbols: Vec<usize> =
+            (0..2000).map(|_| present[rng.gen_index(present.len())]).collect();
+        let (state, payload) = encode_all(&table, &symbols);
+        let back = decode_all(&table, state, &payload, symbols.len()).unwrap();
+        assert_eq!(back, symbols, "t{trial} log={table_log} n={alphabet}");
+    }
 }
 
 #[test]
