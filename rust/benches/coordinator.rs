@@ -15,7 +15,9 @@
 mod harness;
 
 use harness::{bench, section};
-use llmzip::compress::{Codec, LlmCompressor, LlmCompressorConfig};
+use llmzip::compress::{
+    Codec, Compressor, FileSource, LlmCompressor, LlmCompressorConfig, SeekableContainer,
+};
 use llmzip::coordinator::{
     BatchPolicy, DynamicBatcher, Priority, Server, ServerConfig, WorkItem, WorkKind,
 };
@@ -23,9 +25,50 @@ use llmzip::lm::config::by_name;
 use llmzip::lm::weights::Weights;
 use llmzip::lm::{ExecutorKind, StepPool};
 use llmzip::util::stats::percentile;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------
+// Allocation accounting: a counting global allocator makes
+// "allocations per op" a measured number, not a claim. Bench binary
+// only — the library never sees this allocator.
+// ---------------------------------------------------------------------
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl std::alloc::GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: std::alloc::Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        std::alloc::System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: std::alloc::Layout) {
+        std::alloc::System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: std::alloc::Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        std::alloc::System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_counts() -> (u64, u64) {
+    (ALLOC_CALLS.load(Ordering::Relaxed), ALLOC_BYTES.load(Ordering::Relaxed))
+}
 
 /// CI smoke mode: tiny load, same measured paths, same JSON schema.
 fn smoke() -> bool {
@@ -46,7 +89,7 @@ fn batcher_bench() {
                 chunk_index: 0,
                 kind: WorkKind::Compress,
                 priority: if i % 4 == 0 { Priority::Interactive } else { Priority::Bulk },
-                data: Vec::new(),
+                data: Vec::new().into(),
                 record: None,
                 codec: Codec::Range,
                 enqueued: now,
@@ -276,12 +319,138 @@ fn elastic_bench() -> Vec<ElasticScenario> {
     vec![steady, bursty]
 }
 
+// ---------------------------------------------------------------------
+// Zero-copy serve path: allocations/op with buffer pooling on vs off,
+// the pool's hit/return counters, the RSS high-water mark, and the
+// positioned-read property of ranged decode (frames touched vs total).
+// ---------------------------------------------------------------------
+
+struct AllocSample {
+    name: &'static str,
+    ops: u64,
+    allocs_per_op: f64,
+    kb_per_op: f64,
+}
+
+struct AllocReport {
+    samples: Vec<AllocSample>,
+    /// (hits, misses, returns, discards) of the pooled server's pool.
+    pool: (u64, u64, u64, u64),
+    /// (frames_touched, frames_total, bytes_read, file_bytes) for one
+    /// small ranged decode off an on-disk container.
+    range: (u64, u64, u64, u64),
+    vm_hwm_kb: u64,
+}
+
+/// Process high-water RSS in KiB (Linux; 0 elsewhere).
+fn vm_hwm_kb() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("VmHWM:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(0)
+}
+
+/// One warmup call (lazy inits, pool fill), then `ops` measured calls.
+fn measured(name: &'static str, ops: u64, mut f: impl FnMut()) -> AllocSample {
+    f();
+    let (c0, b0) = alloc_counts();
+    for _ in 0..ops {
+        f();
+    }
+    let (c1, b1) = alloc_counts();
+    let s = AllocSample {
+        name,
+        ops,
+        allocs_per_op: (c1 - c0) as f64 / ops as f64,
+        kb_per_op: (b1 - b0) as f64 / 1024.0 / ops as f64,
+    };
+    println!("{:<28} {:>10.0} allocs/op  {:>10.0} KiB/op", s.name, s.allocs_per_op, s.kb_per_op);
+    s
+}
+
+fn job_server(pooling: bool) -> Arc<Server> {
+    Arc::new(
+        Server::start(
+            || {
+                let cfg = by_name("nano")?;
+                LlmCompressor::from_weights(cfg, Weights::random(cfg, 3), 128, 8)
+            },
+            ServerConfig {
+                chunk_tokens: 128,
+                pooling,
+                policy: BatchPolicy { lanes: 8, max_wait: Duration::from_millis(2) },
+                ..Default::default()
+            },
+        )
+        .expect("server"),
+    )
+}
+
+fn alloc_bench() -> AllocReport {
+    section("zero-copy serve path (allocations/op, pooling A/B)");
+    let payload = llmzip::textgen::quick_sample(if smoke() { 2048 } else { 8192 }, 5);
+    let ops = if smoke() { 3 } else { 10 };
+    let pooled = job_server(true);
+    let unpooled = job_server(false);
+    // Pooling changes where bytes live, never their values.
+    let golden = pooled.compress(&payload).unwrap();
+    assert_eq!(unpooled.compress(&payload).unwrap(), golden, "pooling changed the container");
+    let mut samples = Vec::new();
+    for (name, srv) in [
+        ("server_roundtrip_pooled", &pooled),
+        ("server_roundtrip_unpooled", &unpooled),
+    ] {
+        samples.push(measured(name, ops, || {
+            let z = srv.compress(&payload).unwrap();
+            assert_eq!(srv.decompress(&z).unwrap(), payload);
+        }));
+    }
+    let st = pooled.pool().stats();
+    println!(
+        "pool: {} hits  {} misses  {} returns  {} discards",
+        st.hits, st.misses, st.returns, st.discards
+    );
+
+    // Ranged decode off disk: positioned reads must touch the frames the
+    // range overlaps — not the file.
+    let comp = {
+        let cfg = by_name("nano").unwrap();
+        LlmCompressor::from_weights(cfg, Weights::random(cfg, 3), 128, 4).unwrap()
+    };
+    let big = llmzip::textgen::quick_sample(if smoke() { 16 << 10 } else { 64 << 10 }, 9);
+    let z = comp.compress(&big).unwrap();
+    let path =
+        std::env::temp_dir().join(format!("llmzip-bench-range-{}.lmz", std::process::id()));
+    std::fs::write(&path, &z).unwrap();
+    let file = FileSource::open(&path).unwrap();
+    let cont = SeekableContainer::open(&file).unwrap();
+    let got = comp.decompress_range_from(&cont, 100, 64).unwrap();
+    assert_eq!(&got[..], &big[100..164]);
+    let range = (cont.frames_read(), cont.n_chunks() as u64, cont.bytes_read(), z.len() as u64);
+    std::fs::remove_file(&path).ok();
+    println!(
+        "range decode [100, 164): {}/{} frames, {}/{} container bytes read",
+        range.0, range.1, range.2, range.3
+    );
+    AllocReport {
+        samples,
+        pool: (st.hits, st.misses, st.returns, st.discards),
+        range,
+        vm_hwm_kb: vm_hwm_kb(),
+    }
+}
+
 /// Hand-rolled JSON (no serde in this offline crate set).
-fn write_bench_json(scenarios: &[ElasticScenario]) {
+fn write_bench_json(scenarios: &[ElasticScenario], alloc: &AllocReport) {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"coordinator\",\n");
-    s.push_str("  \"schema\": 1,\n");
+    s.push_str("  \"schema\": 2,\n");
     s.push_str("  \"elastic\": {\n");
     s.push_str(&format!(
         "    \"model\": \"nano\", \"min_replicas\": {ELASTIC_MIN}, \
@@ -302,7 +471,34 @@ fn write_bench_json(scenarios: &[ElasticScenario]) {
         }
         s.push_str(&format!("]}}{}\n", if i + 1 < scenarios.len() { "," } else { "" }));
     }
-    s.push_str("    ]\n  }\n}\n");
+    s.push_str("    ]\n  },\n");
+    s.push_str("  \"alloc\": {\n");
+    s.push_str("    \"unit\": \"allocations_per_op\",\n");
+    s.push_str(&format!("    \"vm_hwm_kb\": {},\n", alloc.vm_hwm_kb));
+    s.push_str("    \"samples\": [\n");
+    for (i, sm) in alloc.samples.iter().enumerate() {
+        s.push_str(&format!(
+            "      {{\"name\": \"{}\", \"ops\": {}, \"allocs_per_op\": {:.1}, \
+             \"kb_per_op\": {:.1}}}{}\n",
+            sm.name,
+            sm.ops,
+            sm.allocs_per_op,
+            sm.kb_per_op,
+            if i + 1 < alloc.samples.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("    ],\n");
+    let (hits, misses, returns, discards) = alloc.pool;
+    s.push_str(&format!(
+        "    \"pool\": {{\"hits\": {hits}, \"misses\": {misses}, \"returns\": {returns}, \
+         \"discards\": {discards}}},\n"
+    ));
+    let (frames_touched, frames_total, bytes_read, file_bytes) = alloc.range;
+    s.push_str(&format!(
+        "    \"range_decode\": {{\"frames_touched\": {frames_touched}, \"frames_total\": \
+         {frames_total}, \"bytes_read\": {bytes_read}, \"file_bytes\": {file_bytes}}}\n"
+    ));
+    s.push_str("  }\n}\n");
     let path = std::env::var("LLMZIP_BENCH_COORD_JSON")
         .unwrap_or_else(|_| "BENCH_coordinator.json".to_string());
     match std::fs::write(&path, &s) {
@@ -315,5 +511,6 @@ fn main() {
     batcher_bench();
     server_bench();
     let scenarios = elastic_bench();
-    write_bench_json(&scenarios);
+    let alloc = alloc_bench();
+    write_bench_json(&scenarios, &alloc);
 }

@@ -6,7 +6,9 @@
 //! files never need to be resident.
 
 use crate::cli::Args;
-use llmzip::compress::{Codec, Compressor, LlmCompressor, LlmCompressorConfig};
+use llmzip::compress::{
+    Codec, FileSource, LlmCompressor, LlmCompressorConfig, SeekableContainer,
+};
 use llmzip::lm::{ExecutorKind, KernelTier, Precision};
 use llmzip::runtime::ArtifactStore;
 use llmzip::Result;
@@ -162,11 +164,71 @@ fn decompress_stream(
     Ok(n)
 }
 
+/// `--range OFFSET:LEN` — which decoded bytes a partial decompress serves.
+fn parse_range(s: &str) -> Result<(u64, u64)> {
+    let Some((off, len)) = s.split_once(':') else {
+        anyhow::bail!("--range expects OFFSET:LEN (decoded-byte offset and length)");
+    };
+    let off = off.parse().map_err(|_| anyhow::anyhow!("--range offset must be an integer"))?;
+    let len = len.parse().map_err(|_| anyhow::anyhow!("--range length must be an integer"))?;
+    Ok((off, len))
+}
+
+/// Ranged decode: positioned reads on file inputs (only the header, the
+/// trailer index and the frames overlapping the range are fetched), a
+/// slurp + the same chunk selection on stdin (pipes cannot seek). Returns
+/// `(decoded bytes, frames fetched / total, container bytes read)` — the
+/// counters are None for stdin.
+fn decompress_range_input(
+    comp: &LlmCompressor,
+    in_path: &str,
+    offset: u64,
+    len: u64,
+) -> Result<(Vec<u8>, Option<(u64, usize, u64)>)> {
+    if in_path == "-" {
+        let mut all = Vec::new();
+        std::io::stdin().lock().read_to_end(&mut all)?;
+        return Ok((comp.decompress_range(&all, offset, len)?, None));
+    }
+    let file = FileSource::open(std::path::Path::new(in_path))?;
+    let cont = SeekableContainer::open(&file)?;
+    let bytes = comp.decompress_range_from(&cont, offset, len)?;
+    Ok((bytes, Some((cont.frames_read(), cont.n_chunks(), cont.bytes_read()))))
+}
+
 pub fn decompress(args: &[String]) -> Result<()> {
     let args = Args::parse(args)?;
     let comp = open_compressor(&args)?;
-    let input = open_input(args.required("in")?)?;
+    let in_path = args.required("in")?.to_string();
     let out_path = args.required("out")?.to_string();
+    if let Some(range) = args.get("range") {
+        let (offset, len) = parse_range(range)?;
+        let t0 = Instant::now();
+        let (bytes, touched) = decompress_range_input(&comp, &in_path, offset, len)?;
+        run_to_output(&out_path, |mut out| {
+            out.write_all(&bytes)?;
+            out.flush()?;
+            Ok(())
+        })?;
+        let extent = match touched {
+            Some((frames, total, read)) => {
+                format!(", {frames}/{total} frames, {read} container bytes read")
+            }
+            None => String::new(),
+        };
+        report(
+            out_path == "-",
+            format!(
+                "{} bytes decoded from range [{offset}, {}) in {:.2}s (partial decode — \
+                 whole-stream CRC not checked{extent})",
+                bytes.len(),
+                offset + len,
+                t0.elapsed().as_secs_f64(),
+            ),
+        );
+        return Ok(());
+    }
+    let input = open_input(&in_path)?;
     let t0 = Instant::now();
     let n = run_to_output(&out_path, |out| decompress_stream(&comp, input, out))?;
     let dt = t0.elapsed();
@@ -184,9 +246,14 @@ pub fn decompress(args: &[String]) -> Result<()> {
 
 pub fn ratio(args: &[String]) -> Result<()> {
     let args = Args::parse(args)?;
-    let input = std::fs::read(args.required("in")?)?;
     let comp = open_compressor(&args)?;
-    let z = comp.compress(&input)?;
-    println!("{:.3}", input.len() as f64 / z.len() as f64);
+    // Stream through the compressor into a counting sink: the ratio needs
+    // only the two byte totals, so the input is never resident (and `-`
+    // reads stdin, like the other subcommands).
+    let mut input = open_input(args.required("in")?)?;
+    let mut writer = comp.stream_compress(std::io::sink())?;
+    std::io::copy(&mut input, &mut writer)?;
+    let (_, summary) = writer.finish()?;
+    println!("{:.3}", summary.bytes_in as f64 / summary.bytes_out.max(1) as f64);
     Ok(())
 }

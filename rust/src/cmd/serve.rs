@@ -65,6 +65,9 @@ pub fn serve(args: &[String]) -> Result<()> {
     // Entropy backend for containers this server WRITES; it decodes both
     // (decompression follows the container's recorded codec).
     let codec = super::compress::codec_arg(&args)?;
+    // Buffer recycling for wire frames and job payloads. Pure execution
+    // knob — the byte-identity suites pass either way.
+    let pooling = !args.has("no-pool");
 
     let comp_cfg = LlmCompressorConfig {
         model: model.clone(),
@@ -146,6 +149,7 @@ pub fn serve(args: &[String]) -> Result<()> {
             autoscale,
             panel_layout,
             codec,
+            pooling,
             policy: BatchPolicy {
                 lanes,
                 max_wait: Duration::from_millis(max_wait_ms),
@@ -160,12 +164,14 @@ pub fn serve(args: &[String]) -> Result<()> {
     println!(
         "llmzip serving on 127.0.0.1:{port} \
          (chunk={chunk}, lanes={lanes}, threads={threads}, replicas={replicas}, \
-         autoscale={}, precision={}, kernel={}, panels={}, codec={}, protocols=v1+v2-mux)",
+         autoscale={}, precision={}, kernel={}, panels={}, codec={}, pool={}, \
+         protocols=v1+v2-mux)",
         if autoscale { format!("{min_replicas}..{max_replicas}") } else { "off".into() },
         precision.as_str(),
         kernel.map_or("auto", |t| t.as_str()),
         if panel_layout { "on" } else { "off" },
         codec.as_str(),
+        if pooling { "on" } else { "off" },
     );
     loop {
         let (stream, peer) = listener.accept()?;

@@ -164,12 +164,12 @@ pub const FRAME_MARKER: u8 = 0xF1;
 pub const TRAILER_MARKER: u8 = 0xEE;
 
 /// v2 fixed header size before the model name.
-const V2_HEADER_FIXED: usize = 13;
+pub(crate) const V2_HEADER_FIXED: usize = 13;
 /// v2 frame header size (marker + comp_len + n_tokens).
 pub const FRAME_HEADER: usize = 9;
 /// v2 trailer size excluding the index (marker + n_chunks + orig_len +
 /// crc + trailer_off + end magic).
-const V2_TRAILER_FIXED: usize = 1 + 4 + 8 + 4 + 8 + 4;
+pub(crate) const V2_TRAILER_FIXED: usize = 1 + 4 + 8 + 4 + 8 + 4;
 
 /// Per-chunk entry in the table.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

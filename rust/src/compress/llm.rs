@@ -46,6 +46,7 @@
 
 use crate::compress::container::{ChunkRecord, Codec, Container};
 use crate::compress::rank::{FseChunkDecoder, FseChunkEncoder};
+use crate::compress::source::SeekableContainer;
 use crate::compress::Compressor;
 use crate::entropy::range::{RangeDecoder, RangeEncoder};
 use crate::lm::config::{self, LmConfig};
@@ -827,7 +828,18 @@ impl LlmCompressor {
     /// per-chunk range coders are independent, so partial decode is exact,
     /// not approximate). Chunks batch across lanes exactly like the full
     /// path.
+    ///
+    /// v2 slices route through [`SeekableContainer`], so only the header,
+    /// the trailer index and the frames the range touches are ever parsed
+    /// (v1 has no trailer index and falls back to a full parse).
     pub fn decompress_range(&self, data: &[u8], offset: u64, len: u64) -> Result<Vec<u8>> {
+        if data.len() >= 6
+            && crate::util::read_u32_le(data, 0) == crate::compress::CONTAINER_MAGIC
+            && u16::from_le_bytes([data[4], data[5]]) == crate::compress::CONTAINER_V2
+        {
+            let cont = SeekableContainer::open(data)?;
+            return self.decompress_range_from(&cont, offset, len);
+        }
         let container = Container::from_bytes(data)?;
         let (ct, codec) = self.validate_container(&container)?;
         let end = offset
@@ -843,7 +855,7 @@ impl LlmCompressor {
             return Ok(Vec::new());
         }
         // Select the chunks the range touches (token offsets are prefix
-        // sums over the trailer index — no decoding).
+        // sums over the chunk table — no decoding).
         let mut touched: Vec<(ChunkRecord, &[u8])> = Vec::new();
         let mut first_start = 0u64;
         let mut token_off = 0u64;
@@ -873,6 +885,64 @@ impl LlmCompressor {
         }
         let lo = (offset - first_start) as usize;
         Ok(out[lo..lo + len as usize].to_vec())
+    }
+
+    /// Ranged decode over an open [`SeekableContainer`] — the positioned-
+    /// read path: frames outside `[offset, offset + len)` are never
+    /// fetched from the source, so a small range out of an on-disk
+    /// archive reads O(frames-in-range) bytes, not the file.
+    pub fn decompress_range_from(
+        &self,
+        cont: &SeekableContainer<'_>,
+        offset: u64,
+        len: u64,
+    ) -> Result<Vec<u8>> {
+        let (ct, codec) = self.validate_tag_and_window(
+            cont.model_name(),
+            cont.chunk_tokens() as usize,
+            cont.flags(),
+        )?;
+        let touched = cont.chunks_in_range(offset, len)?;
+        if touched.is_empty() {
+            return Ok(Vec::new());
+        }
+        let first_start = cont.token_start(touched.start);
+        let indices: Vec<usize> = touched.collect();
+        let mut engine = self.engine.borrow_mut();
+        let lanes = engine.lanes();
+        let mut out = Vec::with_capacity((offset + len - first_start) as usize);
+        for group in indices.chunks(lanes) {
+            let records: Vec<ChunkRecord> =
+                group.iter().map(|&i| cont.records()[i]).collect();
+            let fetched: Vec<Vec<u8>> = group
+                .iter()
+                .map(|&i| cont.read_chunk_payload(i))
+                .collect::<Result<_>>()?;
+            let payloads: Vec<&[u8]> = fetched.iter().map(|p| p.as_slice()).collect();
+            let codecs = vec![codec; payloads.len()];
+            for d in self.decompress_batch(&mut **engine, ct, &records, &payloads, &codecs)? {
+                out.extend(d);
+            }
+        }
+        let lo = (offset - first_start) as usize;
+        Ok(out[lo..lo + len as usize].to_vec())
+    }
+
+    /// Random-access decode of ONE chunk straight off a
+    /// [`SeekableContainer`] — the positioned-read twin of
+    /// [`Self::decode_chunk`]: exactly one frame is fetched.
+    pub fn decode_chunk_from(&self, cont: &SeekableContainer<'_>, i: usize) -> Result<Vec<u8>> {
+        let (ct, codec) = self.validate_tag_and_window(
+            cont.model_name(),
+            cont.chunk_tokens() as usize,
+            cont.flags(),
+        )?;
+        let payload = cont.read_chunk_payload(i)?;
+        let rec = cont.records()[i];
+        let mut engine = self.engine.borrow_mut();
+        let decoded =
+            self.decompress_batch(&mut **engine, ct, &[rec], &[payload.as_slice()], &[codec])?;
+        Ok(decoded.into_iter().next().expect("one chunk in, one chunk out"))
     }
 }
 

@@ -14,6 +14,7 @@ pub mod container;
 pub mod llm;
 pub mod rank;
 pub mod registry;
+pub mod source;
 pub mod stream;
 
 pub use container::{
@@ -21,6 +22,7 @@ pub use container::{
 };
 pub use llm::{ContainerTag, LlmCompressor, LlmCompressorConfig};
 pub use registry::{baseline_by_name, all_baseline_names};
+pub use source::{ContainerSource, FileSource, SeekableContainer};
 pub use stream::{CompressWriter, DecompressReader, StreamSummary};
 
 use crate::Result;

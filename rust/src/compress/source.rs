@@ -1,0 +1,469 @@
+//! Positioned reads over seekable v2 containers.
+//!
+//! [`Container::from_bytes`](super::Container::from_bytes) needs the whole
+//! container in memory: it copies every frame payload into one contiguous
+//! buffer before anything can be decoded. That is the right shape for the
+//! serve path (the request already arrived as bytes), but exactly wrong for
+//! random access into an archive on disk — decoding 100 bytes out of a
+//! 10 GB container should read the header, the trailer index, and the one
+//! or two frames the range touches. Nothing else.
+//!
+//! [`ContainerSource`] abstracts "a thing positioned reads come from":
+//! an in-memory slice, or a file via `pread` ([`FileSource`]). On top of it
+//! [`SeekableContainer`] opens a v2 container by reading only the header
+//! and the trailer index, computes every frame's byte offset by prefix sum
+//! (the index stores per-chunk lengths), and serves individual frame
+//! payloads on demand — each fetch cross-checks the frame's own header
+//! against the index, so the two copies of the records cannot disagree
+//! silently, same as the slurping parser.
+//!
+//! The ranged entry points live on the compressor:
+//! [`LlmCompressor::decompress_range_from`](super::llm) and
+//! [`decode_chunk_from`](super::llm). `decompress_range(&[u8], ..)` now
+//! routes v2 slices through this module too, so both faces share one
+//! frame-selection path. Byte/frame counters ([`SeekableContainer::bytes_read`],
+//! [`SeekableContainer::frames_read`]) exist so tests and the allocation
+//! bench can assert the O(frames-in-range) property instead of trusting it.
+
+use crate::compress::container::{
+    check_flags, ChunkRecord, CONTAINER_END_MAGIC, CONTAINER_MAGIC, CONTAINER_V2, FRAME_HEADER,
+    FRAME_MARKER, TRAILER_MARKER, V2_HEADER_FIXED, V2_TRAILER_FIXED,
+};
+use crate::util::{read_u32_le, read_u64_le};
+use crate::Result;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Something a container can be read out of at arbitrary offsets, without
+/// consuming or buffering the rest. `read_at` is `&self` so one open
+/// container can serve reads from multiple call sites (files use `pread`,
+/// which never touches the shared cursor).
+pub trait ContainerSource {
+    /// Total size in bytes.
+    fn len(&self) -> u64;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fill `buf` exactly from `offset`. Short reads are errors — callers
+    /// always know how many bytes the format says are there.
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()>;
+}
+
+impl ContainerSource for [u8] {
+    fn len(&self) -> u64 {
+        <[u8]>::len(self) as u64
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        let end = offset
+            .checked_add(buf.len() as u64)
+            .ok_or_else(|| anyhow::anyhow!("read range overflows"))?;
+        if end > <[u8]>::len(self) as u64 {
+            anyhow::bail!(
+                "read [{offset}, {end}) past end of {}-byte container",
+                <[u8]>::len(self)
+            );
+        }
+        buf.copy_from_slice(&self[offset as usize..end as usize]);
+        Ok(())
+    }
+}
+
+/// A container file served by positioned reads (`pread(2)` on unix): no
+/// seek state, no buffering, safe to share behind `&self`.
+pub struct FileSource {
+    #[cfg(unix)]
+    file: std::fs::File,
+    #[cfg(not(unix))]
+    file: std::sync::Mutex<std::fs::File>,
+    len: u64,
+}
+
+impl FileSource {
+    pub fn open(path: &std::path::Path) -> Result<FileSource> {
+        let file = std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+        let len = file.metadata()?.len();
+        #[cfg(not(unix))]
+        let file = std::sync::Mutex::new(file);
+        Ok(FileSource { file, len })
+    }
+}
+
+impl ContainerSource for FileSource {
+    fn len(&self) -> u64 {
+        self.len
+    }
+
+    #[cfg(unix)]
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        use std::os::unix::fs::FileExt;
+        self.file.read_exact_at(buf, offset)?;
+        Ok(())
+    }
+
+    #[cfg(not(unix))]
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut f = self.file.lock().expect("file lock");
+        f.seek(SeekFrom::Start(offset))?;
+        f.read_exact(buf)?;
+        Ok(())
+    }
+}
+
+/// A v2 container opened for random access: header + trailer index are
+/// read (and fully validated) up front; frame payloads are fetched on
+/// demand by [`Self::read_chunk_payload`]. Total bytes touched for a
+/// ranged decode: `header + trailer + Σ frames-in-range`.
+pub struct SeekableContainer<'a> {
+    src: &'a dyn ContainerSource,
+    flags: u16,
+    chunk_tokens: u32,
+    model_name: String,
+    records: Vec<ChunkRecord>,
+    /// Byte offset of frame `i`'s header (prefix sums over the index).
+    frame_offsets: Vec<u64>,
+    /// Decoded-byte offset at which chunk `i` begins (prefix sums over
+    /// `n_tokens`).
+    token_starts: Vec<u64>,
+    orig_len: u64,
+    orig_crc32: u32,
+    bytes_read: AtomicU64,
+    frames_read: AtomicU64,
+}
+
+impl<'a> SeekableContainer<'a> {
+    /// Open + validate: reads the fixed header, the model name, and the
+    /// whole trailer. Every structural check `Container::from_bytes`
+    /// performs on those regions happens here too; per-frame header
+    /// checks are deferred to the frame fetch (that is the point).
+    pub fn open(src: &'a dyn ContainerSource) -> Result<SeekableContainer<'a>> {
+        let total = src.len();
+        let bytes_read = AtomicU64::new(0);
+        let min = (V2_HEADER_FIXED + V2_TRAILER_FIXED) as u64;
+        if total < min {
+            anyhow::bail!("container too short");
+        }
+        let mut fixed = [0u8; V2_HEADER_FIXED];
+        src.read_at(0, &mut fixed)?;
+        bytes_read.fetch_add(V2_HEADER_FIXED as u64, Ordering::Relaxed);
+        if read_u32_le(&fixed, 0) != CONTAINER_MAGIC {
+            anyhow::bail!("bad container magic");
+        }
+        let version = u16::from_le_bytes([fixed[4], fixed[5]]);
+        if version != CONTAINER_V2 {
+            anyhow::bail!(
+                "positioned reads need a v2 (seekable) container, got version {version}"
+            );
+        }
+        let flags = u16::from_le_bytes([fixed[6], fixed[7]]);
+        check_flags(CONTAINER_V2, flags)?;
+        let chunk_tokens = read_u32_le(&fixed, 8);
+        let name_len = fixed[12] as usize;
+        let header_end = (V2_HEADER_FIXED + name_len) as u64;
+        if total < header_end + V2_TRAILER_FIXED as u64 {
+            anyhow::bail!("truncated container header");
+        }
+        let mut name = vec![0u8; name_len];
+        src.read_at(V2_HEADER_FIXED as u64, &mut name)?;
+        bytes_read.fetch_add(name_len as u64, Ordering::Relaxed);
+        let model_name = String::from_utf8(name)
+            .map_err(|_| anyhow::anyhow!("model name is not UTF-8"))?;
+
+        // The last 12 bytes locate the trailer.
+        let mut tail = [0u8; 12];
+        src.read_at(total - 12, &mut tail)?;
+        bytes_read.fetch_add(12, Ordering::Relaxed);
+        if read_u32_le(&tail, 8) != CONTAINER_END_MAGIC {
+            anyhow::bail!("bad container end magic — truncated v2 container?");
+        }
+        let trailer_off = read_u64_le(&tail, 0);
+        if trailer_off < header_end || trailer_off > total - V2_TRAILER_FIXED as u64 {
+            anyhow::bail!("container trailer offset {trailer_off} out of bounds");
+        }
+        // Marker + chunk count pin the trailer's size before the index
+        // allocation — a lying count cannot ask for more than the trailer
+        // region the file actually has.
+        let mut head = [0u8; 5];
+        src.read_at(trailer_off, &mut head)?;
+        bytes_read.fetch_add(5, Ordering::Relaxed);
+        if head[0] != TRAILER_MARKER {
+            anyhow::bail!("container trailer marker missing at offset {trailer_off}");
+        }
+        let n_chunks = read_u32_le(&head, 1) as usize;
+        if trailer_off + V2_TRAILER_FIXED as u64 + 8 * n_chunks as u64 != total {
+            anyhow::bail!("container trailer size disagrees with its chunk count");
+        }
+        let mut index = vec![0u8; 8 * n_chunks + 12];
+        src.read_at(trailer_off + 5, &mut index)?;
+        bytes_read.fetch_add(index.len() as u64, Ordering::Relaxed);
+        let mut records = Vec::with_capacity(n_chunks);
+        let mut frame_offsets = Vec::with_capacity(n_chunks);
+        let mut token_starts = Vec::with_capacity(n_chunks);
+        let mut comp_off = header_end;
+        let mut token_off = 0u64;
+        for i in 0..n_chunks {
+            let rec = ChunkRecord {
+                comp_len: read_u32_le(&index, i * 8),
+                n_tokens: read_u32_le(&index, i * 8 + 4),
+            };
+            frame_offsets.push(comp_off);
+            token_starts.push(token_off);
+            comp_off += (FRAME_HEADER as u32 + rec.comp_len) as u64;
+            token_off += rec.n_tokens as u64;
+            records.push(rec);
+        }
+        let orig_len = read_u64_le(&index, 8 * n_chunks);
+        let orig_crc32 = read_u32_le(&index, 8 * n_chunks + 8);
+        if token_off != orig_len {
+            anyhow::bail!("chunk token sum {token_off} != original length {orig_len}");
+        }
+        if comp_off != trailer_off {
+            anyhow::bail!("container frame region size disagrees with the trailer index");
+        }
+        Ok(SeekableContainer {
+            src,
+            flags,
+            chunk_tokens,
+            model_name,
+            records,
+            frame_offsets,
+            token_starts,
+            orig_len,
+            orig_crc32,
+            bytes_read,
+            frames_read: AtomicU64::new(0),
+        })
+    }
+
+    pub fn flags(&self) -> u16 {
+        self.flags
+    }
+
+    pub fn chunk_tokens(&self) -> u32 {
+        self.chunk_tokens
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.model_name
+    }
+
+    pub fn orig_len(&self) -> u64 {
+        self.orig_len
+    }
+
+    pub fn orig_crc32(&self) -> u32 {
+        self.orig_crc32
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn records(&self) -> &[ChunkRecord] {
+        &self.records
+    }
+
+    /// Decoded-byte offset at which chunk `i` begins.
+    pub fn token_start(&self, i: usize) -> u64 {
+        self.token_starts[i]
+    }
+
+    /// Total bytes fetched from the source so far (header + trailer +
+    /// frames).
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read.load(Ordering::Relaxed)
+    }
+
+    /// Frame payloads fetched so far — THE number a ranged decode is
+    /// judged by: it must be the frames the range touches, not
+    /// `n_chunks`.
+    pub fn frames_read(&self) -> u64 {
+        self.frames_read.load(Ordering::Relaxed)
+    }
+
+    /// Size of the underlying source.
+    pub fn source_len(&self) -> u64 {
+        self.src.len()
+    }
+
+    /// Which chunks `[offset, offset + len)` of the decoded stream
+    /// touches. Validates the range against the recorded original
+    /// length; `len == 0` yields an empty range.
+    pub fn chunks_in_range(&self, offset: u64, len: u64) -> Result<Range<usize>> {
+        let end = offset
+            .checked_add(len)
+            .ok_or_else(|| anyhow::anyhow!("range overflows"))?;
+        if end > self.orig_len {
+            anyhow::bail!("range [{offset}, {end}) exceeds original length {}", self.orig_len);
+        }
+        if len == 0 {
+            return Ok(0..0);
+        }
+        // token_starts is strictly increasing (every chunk carries at
+        // least one token), so both bounds are partition points.
+        let first = self.token_starts.partition_point(|&s| s <= offset) - 1;
+        let after = self.token_starts.partition_point(|&s| s < end);
+        Ok(first..after)
+    }
+
+    /// Fetch chunk `i`'s payload: one positioned read of header+payload,
+    /// cross-checked against the trailer index.
+    pub fn read_chunk_payload(&self, i: usize) -> Result<Vec<u8>> {
+        let Some(&rec) = self.records.get(i) else {
+            anyhow::bail!("chunk {i} out of range (container has {})", self.records.len());
+        };
+        let mut buf = vec![0u8; FRAME_HEADER + rec.comp_len as usize];
+        self.src.read_at(self.frame_offsets[i], &mut buf)?;
+        self.bytes_read.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        self.frames_read.fetch_add(1, Ordering::Relaxed);
+        if buf[0] != FRAME_MARKER {
+            anyhow::bail!("frame {i} marker missing at offset {}", self.frame_offsets[i]);
+        }
+        let comp_len = read_u32_le(&buf, 1);
+        let n_tokens = read_u32_le(&buf, 5);
+        if comp_len != rec.comp_len || n_tokens != rec.n_tokens {
+            anyhow::bail!(
+                "frame {i} header ({comp_len}, {n_tokens}) disagrees with trailer index \
+                 ({}, {})",
+                rec.comp_len,
+                rec.n_tokens
+            );
+        }
+        buf.drain(..FRAME_HEADER);
+        Ok(buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::container::Container;
+    use crate::util::crc32;
+
+    fn sample_v2_bytes() -> Vec<u8> {
+        Container::v2(
+            1000,
+            0xDEADBEEF,
+            256,
+            "medium".to_string(),
+            vec![
+                ChunkRecord { comp_len: 3, n_tokens: 256 },
+                ChunkRecord { comp_len: 4, n_tokens: 256 },
+                ChunkRecord { comp_len: 2, n_tokens: 256 },
+                ChunkRecord { comp_len: 1, n_tokens: 232 },
+            ],
+            vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10],
+        )
+        .to_bytes()
+    }
+
+    #[test]
+    fn open_agrees_with_the_slurping_parser() {
+        let bytes = sample_v2_bytes();
+        let parsed = Container::from_bytes(&bytes).unwrap();
+        let s = SeekableContainer::open(&bytes[..]).unwrap();
+        assert_eq!(s.n_chunks(), parsed.chunks.len());
+        assert_eq!(s.records(), &parsed.chunks[..]);
+        assert_eq!(s.orig_len(), parsed.orig_len);
+        assert_eq!(s.orig_crc32(), parsed.orig_crc32);
+        assert_eq!(s.chunk_tokens(), parsed.chunk_tokens);
+        assert_eq!(s.model_name(), parsed.model_name);
+        assert_eq!(s.flags(), parsed.flags);
+        // Payload fetches match iter_chunks, and only touch one frame each.
+        for (i, (rec, slice)) in parsed.iter_chunks().enumerate() {
+            let before = s.frames_read();
+            let p = s.read_chunk_payload(i).unwrap();
+            assert_eq!(p, slice, "chunk {i}");
+            assert_eq!(p.len(), rec.comp_len as usize);
+            assert_eq!(s.frames_read(), before + 1);
+        }
+        assert!(s.read_chunk_payload(4).is_err());
+    }
+
+    #[test]
+    fn open_reads_only_header_and_trailer() {
+        let bytes = sample_v2_bytes();
+        let s = SeekableContainer::open(&bytes[..]).unwrap();
+        let payload_total: u64 = s.records().iter().map(|r| r.comp_len as u64).sum();
+        let frame_headers = (s.n_chunks() * FRAME_HEADER) as u64;
+        assert_eq!(
+            s.bytes_read(),
+            bytes.len() as u64 - payload_total - frame_headers,
+            "open must not touch the frame region"
+        );
+        assert_eq!(s.frames_read(), 0);
+    }
+
+    #[test]
+    fn chunks_in_range_selects_exactly_the_overlapping_chunks() {
+        let bytes = sample_v2_bytes();
+        let s = SeekableContainer::open(&bytes[..]).unwrap();
+        // Chunk token boundaries: 0, 256, 512, 768, 1000.
+        assert_eq!(s.chunks_in_range(0, 1).unwrap(), 0..1);
+        assert_eq!(s.chunks_in_range(255, 1).unwrap(), 0..1);
+        assert_eq!(s.chunks_in_range(255, 2).unwrap(), 0..2);
+        assert_eq!(s.chunks_in_range(256, 1).unwrap(), 1..2);
+        assert_eq!(s.chunks_in_range(300, 600).unwrap(), 1..4);
+        assert_eq!(s.chunks_in_range(0, 1000).unwrap(), 0..4);
+        assert_eq!(s.chunks_in_range(999, 1).unwrap(), 3..4);
+        assert_eq!(s.chunks_in_range(500, 0).unwrap(), 0..0);
+        assert!(s.chunks_in_range(0, 1001).is_err());
+        assert!(s.chunks_in_range(1000, 1).is_err());
+        assert!(s.chunks_in_range(u64::MAX, 2).is_err());
+    }
+
+    #[test]
+    fn rejects_v1_truncation_and_corruption() {
+        let v1 = Container::v1(0, crc32(b""), 64, "m".into(), vec![], vec![]).to_bytes();
+        let err = SeekableContainer::open(&v1[..]).unwrap_err().to_string();
+        assert!(err.contains("v2"), "{err}");
+        let bytes = sample_v2_bytes();
+        for cut in 0..bytes.len() {
+            assert!(SeekableContainer::open(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+        // Frame header disagreeing with the index is caught at fetch time.
+        let mut bad = bytes.clone();
+        let header_end = 13 + "medium".len();
+        assert_eq!(bad[header_end], FRAME_MARKER);
+        bad[header_end + 5] ^= 1;
+        let s = SeekableContainer::open(&bad[..]).unwrap();
+        let err = s.read_chunk_payload(0).unwrap_err().to_string();
+        assert!(err.contains("disagrees"), "{err}");
+        // Corrupt trailer chunk count.
+        let mut bad = bytes.clone();
+        let trailer_off = read_u64_le(&bad, bytes.len() - 12) as usize;
+        bad[trailer_off + 1] ^= 1;
+        assert!(SeekableContainer::open(&bad[..]).is_err());
+    }
+
+    #[test]
+    fn file_source_round_trips_via_pread() {
+        let bytes = sample_v2_bytes();
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("llmzip-source-test-{}.lmz", std::process::id()));
+        std::fs::write(&path, &bytes).unwrap();
+        let file = FileSource::open(&path).unwrap();
+        assert_eq!(ContainerSource::len(&file), bytes.len() as u64);
+        let s = SeekableContainer::open(&file).unwrap();
+        assert_eq!(s.n_chunks(), 4);
+        let parsed = Container::from_bytes(&bytes).unwrap();
+        for (i, (_, slice)) in parsed.iter_chunks().enumerate() {
+            assert_eq!(s.read_chunk_payload(i).unwrap(), slice);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_container_opens_with_zero_chunks() {
+        let bytes = Container::v2(0, crc32(b""), 64, "nano:0".into(), vec![], vec![]).to_bytes();
+        let s = SeekableContainer::open(&bytes[..]).unwrap();
+        assert_eq!(s.n_chunks(), 0);
+        assert_eq!(s.orig_len(), 0);
+        assert_eq!(s.chunks_in_range(0, 0).unwrap(), 0..0);
+        assert!(s.chunks_in_range(0, 1).is_err());
+    }
+}

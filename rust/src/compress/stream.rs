@@ -40,7 +40,7 @@ use crate::compress::container::{
     FRAME_HEADER, FRAME_MARKER, TRAILER_MARKER,
 };
 use crate::compress::llm::LlmCompressor;
-use crate::util::Crc32;
+use crate::util::{BytePool, Crc32, PooledBuf};
 use crate::Result;
 use std::io::{Read, Write};
 
@@ -153,8 +153,16 @@ impl<'c, W: Write> CompressWriter<'c, W> {
             if self.buf.len() < sb {
                 return Ok(());
             }
+            // Take the staging buffer out to appease the borrow checker,
+            // then put its storage back: the writer re-stages a partial
+            // chunk on almost every call, and re-allocating `stream_bytes`
+            // of capacity per boundary crossing is the serve path's hottest
+            // avoidable allocation.
             let head = std::mem::take(&mut self.buf);
-            self.encode_group(&[&head])?;
+            let encoded = self.encode_group(&[&head]);
+            self.buf = head;
+            self.buf.clear();
+            encoded?;
         }
         // Encode whole chunks directly from the caller's slice,
         // lane-batched.
@@ -247,6 +255,9 @@ pub struct DecompressReader<'c, R: Read> {
     chunk: Vec<u8>,
     pos: usize,
     done: bool,
+    /// Recycles frame-payload buffers across lane groups (the reader's
+    /// steady-state allocation). Honors `LLMZIP_POOL=0`.
+    pool: BytePool,
 }
 
 impl<'c, R: Read> DecompressReader<'c, R> {
@@ -266,6 +277,7 @@ impl<'c, R: Read> DecompressReader<'c, R> {
             chunk: Vec::new(),
             pos: 0,
             done: false,
+            pool: BytePool::new(16),
         };
         if r.read_u32()? != CONTAINER_MAGIC {
             anyhow::bail!("bad container magic");
@@ -360,7 +372,7 @@ impl<'c, R: Read> DecompressReader<'c, R> {
     /// Decode a group of frames (≤ engine lanes) in one batched engine
     /// pass — the reader's lane parallelism. Output order is frame order,
     /// so the served byte stream is unaffected.
-    fn decode_group(&mut self, group: Vec<(ChunkRecord, Vec<u8>)>) -> Result<()> {
+    fn decode_group(&mut self, group: Vec<(ChunkRecord, PooledBuf)>) -> Result<()> {
         let records: Vec<ChunkRecord> = group.iter().map(|(r, _)| *r).collect();
         let payloads: Vec<&[u8]> = group.iter().map(|(_, p)| p.as_slice()).collect();
         let codecs = vec![self.codec; payloads.len()];
@@ -438,7 +450,8 @@ impl<'c, R: Read> DecompressReader<'c, R> {
                     *next = hi;
                     let mut group = Vec::with_capacity(records.len());
                     for rec in records {
-                        let mut payload = vec![0u8; rec.comp_len as usize];
+                        let mut payload = self.pool.take(rec.comp_len as usize);
+                        payload.resize(rec.comp_len as usize, 0);
                         self.read_exact(&mut payload)?;
                         group.push((rec, payload));
                     }
@@ -449,7 +462,7 @@ impl<'c, R: Read> DecompressReader<'c, R> {
                 }
             }
             Frames::V2 { .. } => {
-                let mut group: Vec<(ChunkRecord, Vec<u8>)> = Vec::new();
+                let mut group: Vec<(ChunkRecord, PooledBuf)> = Vec::new();
                 let mut trailer_at: Option<u64> = None;
                 while group.len() < lanes && trailer_at.is_none() {
                     let marker_off = self.consumed;
@@ -460,7 +473,8 @@ impl<'c, R: Read> DecompressReader<'c, R> {
                                 n_tokens: self.read_u32()?,
                             };
                             Self::check_record(rec)?;
-                            let mut payload = vec![0u8; rec.comp_len as usize];
+                            let mut payload = self.pool.take(rec.comp_len as usize);
+                            payload.resize(rec.comp_len as usize, 0);
                             self.read_exact(&mut payload)?;
                             group.push((rec, payload));
                         }
@@ -644,6 +658,24 @@ mod tests {
             }
             assert_eq!(back, data, "{name}");
             assert!(r.verified(), "{name}");
+        }
+    }
+
+    #[test]
+    fn reader_recycles_payload_buffers_across_lane_groups() {
+        let c = compressor();
+        // 900 bytes at stream_bytes=128 → 8 frames; lanes=2 → 4 groups, so
+        // the second and later groups must hit the recycler.
+        let data = crate::textgen::quick_sample(900, 8);
+        let z = c.compress(&data).unwrap();
+        let mut r = c.stream_decompress(&z[..]).unwrap();
+        let mut back = Vec::new();
+        r.read_to_end(&mut back).unwrap();
+        assert_eq!(back, data);
+        assert!(r.verified());
+        if r.pool.is_enabled() {
+            let stats = r.pool.stats();
+            assert!(stats.hits > 0, "expected payload buffer reuse, got {stats:?}");
         }
     }
 

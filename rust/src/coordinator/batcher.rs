@@ -19,6 +19,7 @@
 //!   ingest job without a separate queueing tier.
 
 use crate::compress::container::{ChunkRecord, Codec};
+use crate::util::PooledBuf;
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
@@ -46,8 +47,13 @@ pub struct WorkItem {
     pub chunk_index: u32,
     pub kind: WorkKind,
     pub priority: Priority,
-    /// Compress: raw bytes. Decompress: compressed payload.
-    pub data: Vec<u8>,
+    /// Compress: raw bytes. Decompress: compressed payload. Rides a
+    /// pool-recycled buffer: when the item is dropped after its batch
+    /// completes, the storage returns to the server's [`BytePool`]
+    /// (detached plain vectors convert with `.into()`).
+    ///
+    /// [`BytePool`]: crate::util::BytePool
+    pub data: PooledBuf,
     /// Decompress only: the chunk record (token count).
     pub record: Option<ChunkRecord>,
     /// Entropy backend of this chunk's payload. Compress: the engine's
@@ -205,7 +211,7 @@ mod tests {
             chunk_index: 0,
             kind,
             priority: Priority::Bulk,
-            data: vec![1, 2, 3],
+            data: vec![1, 2, 3].into(),
             record: None,
             codec: Codec::Range,
             enqueued: at,

@@ -61,7 +61,7 @@ use crate::compress::llm::{container_codec, ContainerTag, LlmCompressor};
 use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher, Priority, WorkItem, WorkKind};
 use crate::coordinator::metrics::Metrics;
 use crate::lm::executor::ExecutorKind;
-use crate::util::{crc32, Crc32};
+use crate::util::{crc32, BytePool, Crc32, PooledBuf};
 use crate::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -124,6 +124,13 @@ pub struct ServerConfig {
     /// through one struct. Decompression always follows the *container's*
     /// recorded codec, so a server configured either way decodes both.
     pub codec: Codec,
+    /// Recycle serve-path byte buffers through a shared
+    /// [`BytePool`] (default on): wire frame reads, request chunking and
+    /// stream staging reuse returned storage instead of allocating per
+    /// op. `false` — or `LLMZIP_POOL=0` in the environment — makes every
+    /// take a plain allocation; output bytes are identical either way
+    /// (pinned by `tests/integration_server.rs`).
+    pub pooling: bool,
     pub policy: BatchPolicy,
 }
 
@@ -142,6 +149,7 @@ impl Default for ServerConfig {
             autoscale_p99_ms: f64::INFINITY,
             panel_layout: true,
             codec: Codec::Range,
+            pooling: true,
             policy: BatchPolicy::default(),
         }
     }
@@ -162,10 +170,12 @@ fn pool_bounds(config: &ServerConfig) -> (usize, usize, usize) {
 /// blocking [`Server::compress`]/[`Server::decompress`] calls are thin
 /// wrappers over it.
 pub enum Op {
-    /// Compress raw bytes into a container.
-    Compress(Vec<u8>),
+    /// Compress raw bytes into a container. `PooledBuf` is an owned
+    /// `Vec<u8>` whose storage recycles on drop; plain vectors convert
+    /// with `.into()` (detached — they just drop normally).
+    Compress(PooledBuf),
     /// Decompress a container back to the original bytes.
-    Decompress(Vec<u8>),
+    Decompress(PooledBuf),
 }
 
 /// Handle to one in-flight [`Server::submit`] operation. The scheduler
@@ -216,7 +226,7 @@ enum ToScheduler {
     /// One stream chunk (already cut at the engine's stream granularity by
     /// the [`StreamHandle`]); goes straight into the batcher, so batching
     /// starts before the input has finished arriving.
-    StreamChunk { id: u64, index: u32, data: Vec<u8> },
+    StreamChunk { id: u64, index: u32, data: PooledBuf },
     /// The stream's input is complete: `n_chunks` chunks were sent, the
     /// original byte count and CRC are final.
     StreamFinish { id: u64, n_chunks: u32, orig_len: u64, orig_crc: u32 },
@@ -301,6 +311,10 @@ pub struct Server {
     /// What the (identical) replicas reported at startup; fixed for the
     /// server's life, so clients can read it without a scheduler roundtrip.
     info: EngineInfo,
+    /// Shared buffer recycler for the serve path: wire frame reads,
+    /// request chunking and stream staging all draw from (and return
+    /// to) this pool. Disabled pools hand out plain allocations.
+    pool: BytePool,
 }
 
 impl Server {
@@ -337,6 +351,16 @@ impl Server {
             );
         }
         let (_, _, max_replicas) = pool_bounds(&config);
+        // Serve-path buffer recycler. `BytePool::new` additionally honors
+        // `LLMZIP_POOL=0`, so CI can pin the fallback path without a
+        // config change. The cap bounds idle hoarding: free buffers are
+        // at most `cap x MAX_RECYCLED_CAPACITY` bytes, and oversized
+        // one-offs are never retained.
+        let pool = if config.pooling {
+            BytePool::new(32 + 16 * max_replicas)
+        } else {
+            BytePool::disabled()
+        };
         let (tx, rx) = sync_channel::<ToScheduler>(256 + 4 * max_replicas);
         // One metrics slot per worker the pool can EVER hold, so a grown
         // replica's attribution works from its first batch.
@@ -347,10 +371,11 @@ impl Server {
         let sd = shutdown.clone();
         let worker_tx = tx.clone();
         let (ready_tx, ready_rx) = sync_channel::<Result<EngineInfo>>(1);
+        let sched_pool = pool.clone();
         let scheduler = std::thread::Builder::new()
             .name("llmzip-sched".into())
             .spawn(move || {
-                scheduler_main(factory, config, rx, worker_tx, m, sd, ready_tx, on_scale)
+                scheduler_main(factory, config, rx, worker_tx, m, sd, ready_tx, on_scale, sched_pool)
             })
             .expect("spawning scheduler");
         let info = ready_rx
@@ -363,7 +388,15 @@ impl Server {
             shutdown,
             scheduler: Some(scheduler),
             info,
+            pool,
         })
+    }
+
+    /// The server's shared serve-path buffer pool. The wire layer reads
+    /// request frames into buffers from here, so their storage recycles
+    /// once the request's work items are done.
+    pub fn pool(&self) -> &BytePool {
+        &self.pool
     }
 
     /// Submit an operation asynchronously at its default priority
@@ -411,6 +444,7 @@ impl Server {
             tx: self.tx.clone(),
             id,
             stream_bytes: self.info.stream_bytes,
+            pool: self.pool.clone(),
             buf: Vec::new(),
             next_index: 0,
             crc: Crc32::new(),
@@ -424,19 +458,26 @@ impl Server {
     /// priority: queued decompress work and interactive compressions go
     /// first. Thin wrapper over [`Self::submit_with`].
     pub fn compress(&self, data: &[u8]) -> Result<Vec<u8>> {
-        self.submit_with(Op::Compress(data.to_vec()), Priority::Bulk)?.wait()
+        self.submit_with(Op::Compress(self.pooled_copy(data)), Priority::Bulk)?.wait()
     }
 
     /// [`Self::compress`] at interactive priority: overtakes queued bulk
     /// compress chunks (decompress keeps its own fast lane regardless).
     pub fn compress_interactive(&self, data: &[u8]) -> Result<Vec<u8>> {
-        self.submit_with(Op::Compress(data.to_vec()), Priority::Interactive)?.wait()
+        self.submit_with(Op::Compress(self.pooled_copy(data)), Priority::Interactive)?.wait()
     }
 
     /// Decompress a container (blocks until done). Always interactive:
     /// reads ride the fast lane past bulk compress jobs.
     pub fn decompress(&self, container: &[u8]) -> Result<Vec<u8>> {
-        self.submit_with(Op::Decompress(container.to_vec()), Priority::Interactive)?.wait()
+        self.submit_with(Op::Decompress(self.pooled_copy(container)), Priority::Interactive)?
+            .wait()
+    }
+
+    fn pooled_copy(&self, data: &[u8]) -> PooledBuf {
+        let mut buf = self.pool.take(data.len());
+        buf.extend_from_slice(data);
+        buf
     }
 
     /// Stream granularity of the replica engines: the chunk size
@@ -464,6 +505,10 @@ pub struct StreamHandle {
     tx: SyncSender<ToScheduler>,
     id: u64,
     stream_bytes: usize,
+    /// The owning server's buffer recycler: chunks ship to the
+    /// scheduler in pooled buffers, whose storage returns once the
+    /// engine has encoded them.
+    pool: BytePool,
     buf: Vec<u8>,
     next_index: u32,
     crc: Crc32,
@@ -497,18 +542,26 @@ impl StreamHandle {
             if self.buf.len() < sb {
                 return Ok(());
             }
-            let chunk = std::mem::take(&mut self.buf);
+            // Ship a pooled COPY and keep `self.buf`'s storage: the
+            // staging buffer reaches `stream_bytes` capacity once and
+            // never reallocates again, and the shipped chunk's storage
+            // recycles through the pool after encoding.
+            let mut chunk = self.pool.take(self.buf.len());
+            chunk.extend_from_slice(&self.buf);
+            self.buf.clear();
             self.send_chunk(chunk)?;
         }
         while data.len() >= sb {
-            self.send_chunk(data[..sb].to_vec())?;
+            let mut chunk = self.pool.take(sb);
+            chunk.extend_from_slice(&data[..sb]);
+            self.send_chunk(chunk)?;
             data = &data[sb..];
         }
         self.buf.extend_from_slice(data);
         Ok(())
     }
 
-    fn send_chunk(&mut self, data: Vec<u8>) -> Result<()> {
+    fn send_chunk(&mut self, data: PooledBuf) -> Result<()> {
         let index = self.next_index;
         self.next_index += 1;
         self.tx
@@ -521,7 +574,9 @@ impl StreamHandle {
     /// container.
     pub fn finish(mut self) -> Result<Ticket> {
         if !self.buf.is_empty() {
-            let tail = std::mem::take(&mut self.buf);
+            let mut tail = self.pool.take(self.buf.len());
+            tail.extend_from_slice(&self.buf);
+            self.buf.clear();
             self.send_chunk(tail)?;
         }
         self.finished = true;
@@ -856,6 +911,7 @@ fn scheduler_main<F>(
     shutdown: Arc<AtomicBool>,
     ready_tx: SyncSender<Result<EngineInfo>>,
     on_scale: Option<ScaleHook>,
+    pool: BytePool,
 ) where
     F: Fn() -> Result<LlmCompressor> + Send + Sync + 'static,
 {
@@ -968,7 +1024,7 @@ fn scheduler_main<F>(
                 .unwrap_or(Duration::from_millis(10))
         };
         match rx.recv_timeout(timeout) {
-            Ok(msg) => handle_message(msg, &info, split, &mut st, &metrics, &on_scale),
+            Ok(msg) => handle_message(msg, &info, split, &mut st, &metrics, &on_scale, &pool),
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => {
                 // Unreachable in practice: the scheduler holds its own
@@ -979,7 +1035,7 @@ fn scheduler_main<F>(
         }
         // Drain without blocking to fill batches before dispatching.
         while let Ok(msg) = rx.try_recv() {
-            handle_message(msg, &info, split, &mut st, &metrics, &on_scale);
+            handle_message(msg, &info, split, &mut st, &metrics, &on_scale, &pool);
         }
         // Shutdown drains in-flight work, but a stream whose client never
         // finished can never complete — fail it instead of wedging the
@@ -1114,6 +1170,7 @@ fn scheduler_main<F>(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn handle_message(
     msg: ToScheduler,
     info: &EngineInfo,
@@ -1121,10 +1178,11 @@ fn handle_message(
     st: &mut SchedState,
     metrics: &Metrics,
     on_scale: &Option<ScaleHook>,
+    pool: &BytePool,
 ) {
     match msg {
         ToScheduler::Request(req) => {
-            admit(req, info, split, &mut st.batcher, &mut st.pending, metrics)
+            admit(req, info, split, &mut st.batcher, &mut st.pending, metrics, pool)
         }
         ToScheduler::StreamOpen { id, respond, started } => {
             st.pending.insert(
@@ -1241,6 +1299,7 @@ struct Split {
     chunk_tokens: u32,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn admit(
     req: Request,
     info: &EngineInfo,
@@ -1248,19 +1307,19 @@ fn admit(
     batcher: &mut DynamicBatcher,
     pending: &mut HashMap<u64, Pending>,
     metrics: &Metrics,
+    pool: &BytePool,
 ) {
     let now = Instant::now();
     match req.op {
         Op::Compress(data) => {
-            let chunks: Vec<&[u8]> = data.chunks(split.stream_bytes).collect();
-            let n = chunks.len().max(1);
+            let n = data.chunks(split.stream_bytes).count().max(1);
             let entry = Pending {
                 respond: req.respond,
                 started: req.started,
                 kind: WorkKind::Compress,
                 results: vec![None; n],
                 remaining: n,
-                chunk_sizes: chunks.iter().map(|c| c.len() as u32).collect(),
+                chunk_sizes: data.chunks(split.stream_bytes).map(|c| c.len() as u32).collect(),
                 orig_len: data.len() as u64,
                 orig_crc: crc32(&data),
                 container_chunk_tokens: split.chunk_tokens,
@@ -1286,17 +1345,36 @@ fn admit(
                 return;
             }
             pending.insert(req.id, entry);
-            for (i, chunk) in chunks.iter().enumerate() {
+            if data.len() <= split.stream_bytes {
+                // Single-chunk request: the wire payload IS the work
+                // item — move it through, zero copies end-to-end.
                 batcher.push(WorkItem {
                     request_id: req.id,
-                    chunk_index: i as u32,
+                    chunk_index: 0,
                     kind: WorkKind::Compress,
                     priority: req.priority,
-                    data: chunk.to_vec(),
+                    data,
                     record: None,
                     codec: info.codec,
                     enqueued: now,
                 });
+            } else {
+                for (i, chunk) in data.chunks(split.stream_bytes).enumerate() {
+                    let mut item = pool.take(chunk.len());
+                    item.extend_from_slice(chunk);
+                    batcher.push(WorkItem {
+                        request_id: req.id,
+                        chunk_index: i as u32,
+                        kind: WorkKind::Compress,
+                        priority: req.priority,
+                        data: item,
+                        record: None,
+                        codec: info.codec,
+                        enqueued: now,
+                    });
+                }
+                // `data` drops here: the request buffer's storage goes
+                // back to the pool for the next frame read.
             }
         }
         Op::Decompress(bytes) => match Container::from_bytes(&bytes) {
@@ -1354,8 +1432,14 @@ fn admit(
                     )));
                     return;
                 }
-                let items: Vec<(ChunkRecord, Vec<u8>)> =
-                    container.iter_chunks().map(|(r, p)| (r, p.to_vec())).collect();
+                let items: Vec<(ChunkRecord, PooledBuf)> = container
+                    .iter_chunks()
+                    .map(|(r, p)| {
+                        let mut buf = pool.take(p.len());
+                        buf.extend_from_slice(p);
+                        (r, buf)
+                    })
+                    .collect();
                 let n = items.len().max(1);
                 let entry = Pending {
                     respond: req.respond,
@@ -1523,7 +1607,7 @@ mod tests {
         let golden: Vec<Vec<u8>> = data.iter().map(|d| server.compress(d).unwrap()).collect();
         let tickets: Vec<Ticket> = golden
             .iter()
-            .map(|z| server.submit(Op::Decompress(z.clone())).unwrap())
+            .map(|z| server.submit(Op::Decompress(z.clone().into())).unwrap())
             .collect();
         let deadline = Instant::now() + Duration::from_secs(30);
         let mut results: Vec<Option<Vec<u8>>> = vec![None; tickets.len()];
@@ -1540,7 +1624,7 @@ mod tests {
             assert_eq!(&got.unwrap(), want);
         }
         // Wait-based tickets work too, and submit defaults priorities.
-        let t = server.submit(Op::Compress(data[0].clone())).unwrap();
+        let t = server.submit(Op::Compress(data[0].clone().into())).unwrap();
         assert_eq!(t.wait().unwrap(), golden[0]);
     }
 

@@ -43,9 +43,10 @@
 
 use crate::coordinator::batcher::Priority;
 use crate::coordinator::router::{Op, Server, StreamHandle};
+use crate::util::{BytePool, PooledBuf};
 use crate::Result;
 use std::collections::HashMap;
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::TcpStream;
 use std::sync::mpsc::{channel, Sender};
 
@@ -54,6 +55,12 @@ pub const V2_HANDSHAKE: [u8; 4] = *b"LZMX";
 
 /// Hard cap on any single payload (request, chunk or response).
 pub const MAX_PAYLOAD: usize = 256 << 20;
+
+/// Up-front reservation cap for an incoming frame payload. Reads grow
+/// the buffer adaptively beyond this with what actually arrives, so a
+/// lying length header cannot force a [`MAX_PAYLOAD`]-sized allocation
+/// out of a 9-byte frame header.
+const FRAME_PREALLOC: usize = 64 << 10;
 
 pub const MSG_COMPRESS: u8 = 1;
 pub const MSG_DECOMPRESS: u8 = 2;
@@ -64,16 +71,67 @@ pub const MSG_STREAM_FINISH: u8 = 0x12;
 pub const MSG_OK: u8 = 0x80;
 pub const MSG_ERR: u8 = 0x81;
 
+/// Write one frame (header + payload) with vectored I/O and NO flush.
+/// The 9-byte header and the payload reach the kernel in a single
+/// `write_vectored` call in the common case, instead of the four
+/// `write_all` round-trips the old encoder made. The manual advance
+/// loop keeps this on stable Rust (`Write::write_all_vectored` is
+/// unstable) and handles short writes byte-exactly.
+fn write_frame_vectored(w: &mut impl Write, typ: u8, req_id: u32, payload: &[u8]) -> Result<()> {
+    let mut hdr = [0u8; 9];
+    hdr[0] = typ;
+    hdr[1..5].copy_from_slice(&req_id.to_le_bytes());
+    hdr[5..9].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    let mut hpos = 0usize; // bytes of the header already written
+    let mut ppos = 0usize; // bytes of the payload already written
+    while hpos < hdr.len() || ppos < payload.len() {
+        let res = if hpos < hdr.len() {
+            w.write_vectored(&[IoSlice::new(&hdr[hpos..]), IoSlice::new(payload)])
+        } else {
+            w.write(&payload[ppos..])
+        };
+        let n = match res {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "failed to write whole frame",
+                )
+                .into());
+            }
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        };
+        if hpos < hdr.len() {
+            let hdr_left = hdr.len() - hpos;
+            if n >= hdr_left {
+                hpos = hdr.len();
+                ppos = n - hdr_left;
+            } else {
+                hpos += n;
+            }
+        } else {
+            ppos += n;
+        }
+    }
+    Ok(())
+}
+
+/// Frame write for request/response endpoints that need the frame on
+/// the wire now: vectored write + flush. The v2 server writer thread
+/// deliberately does NOT use this — it flushes once per wakeup, not per
+/// frame (see [`serve_v2`]).
 fn write_frame(w: &mut impl Write, typ: u8, req_id: u32, payload: &[u8]) -> Result<()> {
-    w.write_all(&[typ])?;
-    w.write_all(&req_id.to_le_bytes())?;
-    w.write_all(&(payload.len() as u32).to_le_bytes())?;
-    w.write_all(payload)?;
+    write_frame_vectored(w, typ, req_id, payload)?;
     w.flush()?;
     Ok(())
 }
 
-fn read_frame(r: &mut impl Read) -> Result<Option<(u8, u32, Vec<u8>)>> {
+/// Read one frame into a pool-recycled buffer. Allocation is bounded by
+/// what the connection actually delivers: the declared length only caps
+/// the read, it does not size an up-front buffer, so a peer declaring
+/// 256 MB and sending 10 bytes costs ~10 bytes, then errors.
+fn read_frame(r: &mut impl Read, pool: &BytePool) -> Result<Option<(u8, u32, PooledBuf)>> {
     let mut hdr = [0u8; 9];
     match r.read_exact(&mut hdr) {
         Ok(()) => {}
@@ -87,8 +145,11 @@ fn read_frame(r: &mut impl Read) -> Result<Option<(u8, u32, Vec<u8>)>> {
     if len > MAX_PAYLOAD {
         anyhow::bail!("frame too large: {len}");
     }
-    let mut payload = vec![0u8; len];
-    r.read_exact(&mut payload)?;
+    let mut payload = pool.take(len.min(FRAME_PREALLOC));
+    let got = (&mut *r).take(len as u64).read_to_end(&mut payload)?;
+    if got < len {
+        anyhow::bail!("connection ended after {got} of {len} declared payload bytes");
+    }
     Ok(Some((typ, req_id, payload)))
 }
 
@@ -136,8 +197,12 @@ fn serve_v1(mut stream: TcpStream, server: &Server, mut first_op: Option<u8>) ->
         if len > MAX_PAYLOAD {
             anyhow::bail!("request too large: {len}");
         }
-        let mut payload = vec![0u8; len];
-        stream.read_exact(&mut payload)?;
+        // Same bounded-allocation discipline as the v2 frame reader.
+        let mut payload = server.pool().take(len.min(FRAME_PREALLOC));
+        let got = (&mut stream).take(len as u64).read_to_end(&mut payload)?;
+        if got < len {
+            anyhow::bail!("connection ended after {got} of {len} declared payload bytes");
+        }
         let result = match op {
             MSG_COMPRESS => server.compress(&payload),
             MSG_DECOMPRESS => server.decompress(&payload),
@@ -179,11 +244,29 @@ fn serve_v2(stream: TcpStream, server: &Server) -> Result<()> {
     let (resp_tx, resp_rx) = channel::<(u32, Result<Vec<u8>>)>();
     let writer = std::thread::spawn(move || -> Result<()> {
         let mut stream = stream;
-        for (req_id, result) in resp_rx {
-            match result {
-                Ok(data) => write_frame(&mut stream, MSG_OK, req_id, &data)?,
-                Err(e) => write_frame(&mut stream, MSG_ERR, req_id, format!("{e:#}").as_bytes())?,
+        // Flush once per WAKEUP, not per frame: block for one
+        // completion, then drain everything else already queued before
+        // touching flush. Under load many response frames ride one
+        // flush; when idle this degrades to flush-per-frame, which is
+        // the latency-optimal case anyway.
+        while let Ok(mut next) = resp_rx.recv() {
+            loop {
+                let (req_id, result) = next;
+                match result {
+                    Ok(data) => write_frame_vectored(&mut stream, MSG_OK, req_id, &data)?,
+                    Err(e) => write_frame_vectored(
+                        &mut stream,
+                        MSG_ERR,
+                        req_id,
+                        format!("{e:#}").as_bytes(),
+                    )?,
+                }
+                match resp_rx.try_recv() {
+                    Ok(m) => next = m,
+                    Err(_) => break,
+                }
             }
+            stream.flush()?;
         }
         Ok(())
     });
@@ -203,7 +286,7 @@ fn serve_v2(stream: TcpStream, server: &Server) -> Result<()> {
 fn v2_reader_loop(reader: &mut TcpStream, server: &Server, resp_tx: &RespSender) -> Result<()> {
     // Open upload sessions by client-chosen request id.
     let mut streams: HashMap<u32, StreamHandle> = HashMap::new();
-    while let Some((typ, req_id, payload)) = read_frame(reader)? {
+    while let Some((typ, req_id, payload)) = read_frame(reader, server.pool())? {
         match typ {
             MSG_COMPRESS => {
                 spawn_waiter(
@@ -303,6 +386,10 @@ impl Client {
 pub struct MuxClient {
     stream: TcpStream,
     next_id: u32,
+    /// Client responses are handed to the caller as plain `Vec<u8>`
+    /// (public API), so recycling buys nothing here; a disabled pool
+    /// keeps [`read_frame`]'s bounded-read path shared with the server.
+    pool: BytePool,
 }
 
 impl MuxClient {
@@ -310,7 +397,7 @@ impl MuxClient {
         let mut stream = TcpStream::connect(addr)?;
         stream.write_all(&V2_HANDSHAKE)?;
         stream.flush()?;
-        Ok(MuxClient { stream, next_id: 1 })
+        Ok(MuxClient { stream, next_id: 1, pool: BytePool::disabled() })
     }
 
     fn alloc_id(&mut self) -> u32 {
@@ -367,16 +454,119 @@ impl MuxClient {
     /// Receive the next response frame: `(request id, result)`. Responses
     /// arrive in completion order — the caller matches ids.
     pub fn recv(&mut self) -> Result<(u32, Result<Vec<u8>>)> {
-        let Some((typ, req_id, payload)) = read_frame(&mut self.stream)? else {
+        let Some((typ, req_id, payload)) = read_frame(&mut self.stream, &self.pool)? else {
             anyhow::bail!("server closed the connection");
         };
         match typ {
-            MSG_OK => Ok((req_id, Ok(payload))),
+            MSG_OK => Ok((req_id, Ok(payload.detach()))),
             MSG_ERR => Ok((
                 req_id,
                 Err(anyhow::anyhow!("server error: {}", String::from_utf8_lossy(&payload))),
             )),
             other => anyhow::bail!("unexpected response frame type {other:#04x}"),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_vectored() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, MSG_OK, 42, b"payload-bytes").unwrap();
+        let pool = BytePool::with_enabled(2, true);
+        let mut cur = std::io::Cursor::new(buf);
+        let (typ, id, payload) = read_frame(&mut cur, &pool).unwrap().unwrap();
+        assert_eq!((typ, id), (MSG_OK, 42));
+        assert_eq!(&payload[..], b"payload-bytes");
+        assert!(read_frame(&mut cur, &pool).unwrap().is_none());
+    }
+
+    #[test]
+    fn empty_payload_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, MSG_STREAM_FINISH, 7, &[]).unwrap();
+        assert_eq!(buf.len(), 9);
+        let pool = BytePool::disabled();
+        let mut cur = std::io::Cursor::new(buf);
+        let (typ, id, payload) = read_frame(&mut cur, &pool).unwrap().unwrap();
+        assert_eq!((typ, id, payload.len()), (MSG_STREAM_FINISH, 7, 0));
+    }
+
+    /// Regression (lying length header): a frame declaring MAX_PAYLOAD
+    /// but delivering 5 bytes must fail with a clear error after those
+    /// 5 bytes — not commit a 256 MB buffer up front. The bounded read
+    /// grows with arrival, so the allocation is ~5 bytes + slack.
+    #[test]
+    fn lying_length_header_is_bounded() {
+        let mut frame = vec![MSG_COMPRESS];
+        frame.extend_from_slice(&9u32.to_le_bytes());
+        frame.extend_from_slice(&(MAX_PAYLOAD as u32).to_le_bytes());
+        frame.extend_from_slice(b"hello");
+        let pool = BytePool::with_enabled(2, true);
+        let mut cur = std::io::Cursor::new(frame);
+        let err = read_frame(&mut cur, &pool).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("5 of"), "unexpected error: {msg}");
+        assert!(msg.contains("declared"), "unexpected error: {msg}");
+    }
+
+    #[test]
+    fn oversize_declared_len_is_rejected() {
+        let mut frame = vec![MSG_COMPRESS];
+        frame.extend_from_slice(&1u32.to_le_bytes());
+        frame.extend_from_slice(&u32::MAX.to_le_bytes());
+        let pool = BytePool::disabled();
+        let mut cur = std::io::Cursor::new(frame);
+        let err = read_frame(&mut cur, &pool).unwrap_err();
+        assert!(format!("{err:#}").contains("frame too large"));
+    }
+
+    /// A writer that accepts at most `k` bytes per call: the vectored
+    /// frame writer must survive arbitrary short writes byte-exactly.
+    struct Dribble {
+        out: Vec<u8>,
+        k: usize,
+    }
+
+    impl Write for Dribble {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            let n = buf.len().min(self.k);
+            self.out.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn vectored_write_survives_short_writes() {
+        let payload = b"0123456789abcdef";
+        let mut want = Vec::new();
+        write_frame(&mut want, 7, 9, payload).unwrap();
+        for k in 1..=want.len() {
+            let mut d = Dribble { out: Vec::new(), k };
+            write_frame(&mut d, 7, 9, payload).unwrap();
+            assert_eq!(d.out, want, "short-write cap {k}");
+        }
+    }
+
+    #[test]
+    fn pooled_read_recycles_frame_buffers() {
+        let pool = BytePool::with_enabled(4, true);
+        let mut wire = Vec::new();
+        write_frame(&mut wire, MSG_OK, 1, &[0xAB; 100]).unwrap();
+        let mut cur = std::io::Cursor::new(&wire[..]);
+        let (_, _, payload) = read_frame(&mut cur, &pool).unwrap().unwrap();
+        drop(payload);
+        assert_eq!(pool.free_len(), 1);
+        // Second read of the same frame reuses that storage.
+        let mut cur = std::io::Cursor::new(&wire[..]);
+        let (_, _, payload) = read_frame(&mut cur, &pool).unwrap().unwrap();
+        assert_eq!(payload.len(), 100);
+        assert_eq!(pool.stats().hits, 1);
     }
 }

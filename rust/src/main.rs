@@ -71,11 +71,13 @@ COMPRESSION (streaming: bounded memory; `-` means stdin/stdout)
   compress    --model M --in FILE|- --out FILE|- [--chunk N] [--executor pjrt|native]
               [--precision f32|int8]               int8 = quantized native weights
   decompress  --model M --in FILE|- --out FILE|- [--executor pjrt|native] [--precision P]
-  ratio       --model M --in FILE [--chunk N]      report the compression ratio
+              [--range OFF:LEN]   decode only those original bytes — on a file,
+                                  positioned reads fetch just the frames in range
+  ratio       --model M --in FILE|- [--chunk N]    report the compression ratio
 
 SERVICE
   serve       --model M [--port P] [--replicas N] [--min-replicas A --max-replicas B]
-              [--precision f32|int8] [--no-steal]  batched compression server
+              [--precision f32|int8] [--no-steal] [--no-pool]  batched compression server
                                                    (a min/max range autoscales the pool;
                                                    speaks the multiplexed v2 protocol
                                                    with v1 auto-detected per connection)

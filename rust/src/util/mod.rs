@@ -1,10 +1,12 @@
 //! Shared utilities: deterministic RNG, CRC32, byte helpers, simple stats.
 
 pub mod crc32;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 
 pub use crc32::{crc32, Crc32};
+pub use pool::{BytePool, PooledBuf, PoolStats};
 pub use rng::Pcg64;
 
 /// Integer log2 (floor). `msb(1) == 0`, `msb(255) == 7`.

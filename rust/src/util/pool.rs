@@ -1,0 +1,425 @@
+//! Bounded recycling pool for byte buffers.
+//!
+//! The serve path allocates a fresh `Vec<u8>` at every hop today: wire
+//! frame read, batcher hand-off, container assembly, response write. At
+//! steady state those buffers are all the same few sizes, so the
+//! allocations are pure churn. `BytePool` is a bounded free list of
+//! `Vec<u8>` storage; `PooledBuf` is a `Vec<u8>` that returns its
+//! storage to the pool on drop (the squashfs-rs `ParallelCompressor`
+//! idiom: finished buffers go back to a bounded channel when the
+//! response is dropped).
+//!
+//! Ownership contract (see `docs/zerocopy.md`):
+//!
+//! - A `PooledBuf` is an owned, mutable `Vec<u8>` — hold it as long as
+//!   you like, send it across threads, grow it. Nothing is borrowed.
+//! - Storage returns to the pool exactly once, on drop. `detach()`
+//!   converts to a plain `Vec<u8>` and opts out of recycling.
+//! - `Clone` makes a *detached* copy (the clone does not return to the
+//!   pool); cloning is for the rare fan-out path, not the hot loop.
+//! - When the pool is dry (or disabled via `LLMZIP_POOL=0`) `take()`
+//!   falls back to a plain allocation; behavior is identical either
+//!   way — pooling changes *where* bytes live, never their values.
+//!
+//! Std-only by design (vendored-offline dependency policy): the free
+//! list is a `Mutex<Vec<Vec<u8>>>`, not a crossbeam channel. The lock
+//! is held only to push/pop one pointer-sized element.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Upper bound on the capacity a recycled buffer may retain. Returning
+/// a one-off 256 MB frame to the pool would pin that memory for the
+/// life of the server; anything above this cap is dropped instead.
+const MAX_RECYCLED_CAPACITY: usize = 8 << 20;
+
+/// Counters exposed for tests and the allocation bench. All are
+/// monotonically increasing totals since pool creation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// `take()` calls served from the free list.
+    pub hits: u64,
+    /// `take()` calls that fell back to a fresh allocation.
+    pub misses: u64,
+    /// Buffers accepted back into the free list on drop.
+    pub returns: u64,
+    /// Buffers dropped on return (pool full, oversized, or disabled).
+    pub discards: u64,
+}
+
+struct Inner {
+    free: Mutex<Vec<Vec<u8>>>,
+    /// Maximum number of buffers the free list may hold.
+    cap: usize,
+    /// `false` when recycling is disabled (`LLMZIP_POOL=0` or
+    /// `BytePool::disabled()`): every take allocates, every return
+    /// discards. The `PooledBuf` type is still used so call sites
+    /// don't branch.
+    enabled: bool,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    returns: AtomicU64,
+    discards: AtomicU64,
+}
+
+/// Cloneable handle to a shared bounded buffer pool.
+#[derive(Clone)]
+pub struct BytePool {
+    inner: Arc<Inner>,
+}
+
+impl std::fmt::Debug for BytePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("BytePool")
+            .field("cap", &self.inner.cap)
+            .field("enabled", &self.inner.enabled)
+            .field("stats", &s)
+            .finish()
+    }
+}
+
+impl BytePool {
+    /// Pool holding at most `cap` free buffers. Recycling is disabled
+    /// when the `LLMZIP_POOL` environment variable is set to `0`
+    /// (checked here, at construction, so a process can build both
+    /// pooled and unpooled servers for A/B measurement).
+    pub fn new(cap: usize) -> Self {
+        let enabled = std::env::var("LLMZIP_POOL").map(|v| v != "0").unwrap_or(true);
+        Self::with_enabled(cap, enabled)
+    }
+
+    /// Pool that never recycles: every take allocates, every return
+    /// discards. Used for pooling-off A/B runs regardless of env.
+    pub fn disabled() -> Self {
+        Self::with_enabled(0, false)
+    }
+
+    /// Explicit on/off constructor (tests and benches want determinism
+    /// independent of the environment).
+    pub fn with_enabled(cap: usize, enabled: bool) -> Self {
+        BytePool {
+            inner: Arc::new(Inner {
+                free: Mutex::new(Vec::with_capacity(cap.min(64))),
+                cap,
+                enabled,
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+                returns: AtomicU64::new(0),
+                discards: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Whether this pool recycles at all.
+    pub fn is_enabled(&self) -> bool {
+        self.inner.enabled
+    }
+
+    /// An empty buffer, recycled if the free list has one. The buffer
+    /// always has `len() == 0`; `min_capacity` is a reservation hint so
+    /// the first fill doesn't regrow.
+    pub fn take(&self, min_capacity: usize) -> PooledBuf {
+        if self.inner.enabled {
+            let recycled = self.inner.free.lock().expect("pool lock").pop();
+            if let Some(mut buf) = recycled {
+                self.inner.hits.fetch_add(1, Ordering::Relaxed);
+                buf.clear();
+                if buf.capacity() < min_capacity {
+                    buf.reserve(min_capacity - buf.capacity());
+                }
+                return PooledBuf { buf, pool: Some(self.clone()) };
+            }
+        }
+        self.inner.misses.fetch_add(1, Ordering::Relaxed);
+        let pool = if self.inner.enabled { Some(self.clone()) } else { None };
+        PooledBuf { buf: Vec::with_capacity(min_capacity), pool }
+    }
+
+    /// Wrap an existing `Vec<u8>` so its storage recycles on drop.
+    /// The contents are preserved.
+    pub fn adopt(&self, buf: Vec<u8>) -> PooledBuf {
+        let pool = if self.inner.enabled { Some(self.clone()) } else { None };
+        PooledBuf { buf, pool }
+    }
+
+    /// Number of buffers currently on the free list.
+    pub fn free_len(&self) -> usize {
+        self.inner.free.lock().expect("pool lock").len()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.inner.hits.load(Ordering::Relaxed),
+            misses: self.inner.misses.load(Ordering::Relaxed),
+            returns: self.inner.returns.load(Ordering::Relaxed),
+            discards: self.inner.discards.load(Ordering::Relaxed),
+        }
+    }
+
+    fn give_back(&self, buf: Vec<u8>) {
+        if !self.inner.enabled
+            || buf.capacity() == 0
+            || buf.capacity() > MAX_RECYCLED_CAPACITY
+        {
+            self.inner.discards.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let mut free = self.inner.free.lock().expect("pool lock");
+        if free.len() < self.inner.cap {
+            free.push(buf);
+            drop(free);
+            self.inner.returns.fetch_add(1, Ordering::Relaxed);
+        } else {
+            drop(free);
+            self.inner.discards.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// An owned byte buffer whose storage returns to its `BytePool` on
+/// drop. Derefs to `Vec<u8>`, so call sites read and mutate it exactly
+/// like the plain vectors it replaces.
+pub struct PooledBuf {
+    buf: Vec<u8>,
+    /// `None` for detached buffers (plain-alloc fallback, `From<Vec>`,
+    /// clones): those just drop normally.
+    pool: Option<BytePool>,
+}
+
+impl PooledBuf {
+    /// A detached empty buffer (never recycles). Handy for tests and
+    /// for call sites that construct payloads without a server pool.
+    pub fn detached(buf: Vec<u8>) -> Self {
+        PooledBuf { buf, pool: None }
+    }
+
+    /// Consume, returning the inner `Vec<u8>` and opting out of
+    /// recycling (the storage now belongs to the caller for good).
+    pub fn detach(mut self) -> Vec<u8> {
+        self.pool = None;
+        std::mem::take(&mut self.buf)
+    }
+}
+
+impl std::ops::Deref for PooledBuf {
+    type Target = Vec<u8>;
+    fn deref(&self) -> &Vec<u8> {
+        &self.buf
+    }
+}
+
+impl std::ops::DerefMut for PooledBuf {
+    fn deref_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            pool.give_back(std::mem::take(&mut self.buf));
+        }
+    }
+}
+
+impl Clone for PooledBuf {
+    /// Clones are detached: only the original returns to the pool, so
+    /// storage can never be recycled twice.
+    fn clone(&self) -> Self {
+        PooledBuf { buf: self.buf.clone(), pool: None }
+    }
+}
+
+impl From<Vec<u8>> for PooledBuf {
+    fn from(buf: Vec<u8>) -> Self {
+        PooledBuf::detached(buf)
+    }
+}
+
+impl std::fmt::Debug for PooledBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PooledBuf")
+            .field("len", &self.buf.len())
+            .field("capacity", &self.buf.capacity())
+            .field("pooled", &self.pool.is_some())
+            .finish()
+    }
+}
+
+impl PartialEq for PooledBuf {
+    fn eq(&self, other: &Self) -> bool {
+        self.buf == other.buf
+    }
+}
+impl Eq for PooledBuf {}
+
+impl AsRef<[u8]> for PooledBuf {
+    fn as_ref(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn take_and_drop_round_trips_capacity() {
+        let pool = BytePool::with_enabled(4, true);
+        let mut b = pool.take(1024);
+        assert_eq!(b.len(), 0);
+        assert!(b.capacity() >= 1024);
+        b.extend_from_slice(&[7u8; 512]);
+        let cap = b.capacity();
+        drop(b);
+        assert_eq!(pool.free_len(), 1);
+        // The next take reuses the same storage (capacity preserved,
+        // contents cleared).
+        let b2 = pool.take(0);
+        assert_eq!(b2.len(), 0);
+        assert_eq!(b2.capacity(), cap);
+        let s = pool.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.returns, 1);
+    }
+
+    #[test]
+    fn dry_pool_falls_back_to_plain_alloc() {
+        let pool = BytePool::with_enabled(2, true);
+        let a = pool.take(16);
+        let b = pool.take(16);
+        let c = pool.take(16); // nothing returned yet: all three are misses
+        assert_eq!(pool.stats().misses, 3);
+        assert_eq!(pool.stats().hits, 0);
+        drop(a);
+        drop(b);
+        drop(c); // cap is 2: third return is discarded
+        assert_eq!(pool.free_len(), 2);
+        assert_eq!(pool.stats().returns, 2);
+        assert_eq!(pool.stats().discards, 1);
+    }
+
+    #[test]
+    fn disabled_pool_never_recycles() {
+        let pool = BytePool::with_enabled(8, false);
+        let b = pool.take(64);
+        drop(b);
+        assert_eq!(pool.free_len(), 0);
+        let s = pool.stats();
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.returns, 0);
+    }
+
+    #[test]
+    fn detach_opts_out_of_recycling() {
+        let pool = BytePool::with_enabled(4, true);
+        let mut b = pool.take(8);
+        b.extend_from_slice(b"hello");
+        let v = b.detach();
+        assert_eq!(v, b"hello");
+        drop(v);
+        assert_eq!(pool.free_len(), 0, "detached storage must not return");
+        assert_eq!(pool.stats().returns, 0);
+    }
+
+    #[test]
+    fn clone_is_detached_and_returns_once() {
+        let pool = BytePool::with_enabled(4, true);
+        let mut b = pool.take(8);
+        b.extend_from_slice(&[1, 2, 3]);
+        let c = b.clone();
+        assert_eq!(&*c, &[1, 2, 3]);
+        drop(c);
+        assert_eq!(pool.free_len(), 0, "clone must not return to the pool");
+        drop(b);
+        assert_eq!(pool.free_len(), 1, "original returns exactly once");
+        assert_eq!(pool.stats().returns, 1);
+    }
+
+    #[test]
+    fn adopt_preserves_contents_and_recycles() {
+        let pool = BytePool::with_enabled(4, true);
+        let b = pool.adopt(vec![9u8; 33]);
+        assert_eq!(b.len(), 33);
+        drop(b);
+        assert_eq!(pool.free_len(), 1);
+    }
+
+    #[test]
+    fn oversized_buffers_are_not_hoarded() {
+        let pool = BytePool::with_enabled(4, true);
+        let b = pool.adopt(Vec::with_capacity(MAX_RECYCLED_CAPACITY + 1));
+        drop(b);
+        assert_eq!(pool.free_len(), 0);
+        assert_eq!(pool.stats().discards, 1);
+    }
+
+    /// Property test: a random interleaving of takes, writes, drops,
+    /// detaches and clones keeps the free list within its cap, returns
+    /// each pooled buffer at most once, and never corrupts contents.
+    #[test]
+    fn property_random_interleaving() {
+        let mut rng = Pcg64::seeded(0xB0F1_57AA);
+        for round in 0..50 {
+            let cap = (rng.next_u64() % 5) as usize + 1;
+            let pool = BytePool::with_enabled(cap, true);
+            let mut live: Vec<(PooledBuf, Vec<u8>)> = Vec::new();
+            let mut expected_returns = 0u64;
+            for _ in 0..200 {
+                match rng.next_u64() % 4 {
+                    0 => {
+                        // take + fill with a known pattern
+                        let n = (rng.next_u64() % 2000) as usize;
+                        let mut b = pool.take(n);
+                        let fill: Vec<u8> =
+                            (0..n).map(|i| (i as u8) ^ (round as u8)).collect();
+                        b.extend_from_slice(&fill);
+                        live.push((b, fill));
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let i = (rng.next_u64() as usize) % live.len();
+                            let (b, want) = live.swap_remove(i);
+                            assert_eq!(&*b, &want, "contents corrupted");
+                            if b.capacity() > 0 && pool.free_len() < cap {
+                                expected_returns += 1;
+                            }
+                            drop(b);
+                        }
+                    }
+                    2 => {
+                        if !live.is_empty() {
+                            let i = (rng.next_u64() as usize) % live.len();
+                            let (b, want) = live.swap_remove(i);
+                            let v = b.detach();
+                            assert_eq!(v, want);
+                        }
+                    }
+                    _ => {
+                        if let Some((b, want)) = live.last() {
+                            let c = b.clone();
+                            assert_eq!(&*c, want);
+                        }
+                    }
+                }
+                assert!(pool.free_len() <= cap, "free list exceeded cap");
+            }
+            drop(live);
+            let s = pool.stats();
+            assert!(pool.free_len() <= cap);
+            assert!(
+                s.returns >= expected_returns,
+                "returns {} < lower bound {}",
+                s.returns,
+                expected_returns
+            );
+            // Conservation: every take either returned or discarded or
+            // was detached/still-live; returns never exceed takes.
+            assert!(s.returns <= s.hits + s.misses);
+        }
+    }
+}

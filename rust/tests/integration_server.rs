@@ -2,7 +2,7 @@
 //! artifacts needed): the replica pool, priority scheduling, bit-exactness
 //! across pool configurations, and the TCP wire protocol.
 
-use llmzip::compress::{Compressor, LlmCompressor, LlmCompressorConfig};
+use llmzip::compress::{Codec, Compressor, LlmCompressor, LlmCompressorConfig};
 use llmzip::coordinator::wire::{serve_connection, Client, MuxClient};
 use llmzip::coordinator::{BatchPolicy, Op, Server, ServerConfig, WorkKind};
 use llmzip::lm::config::by_name;
@@ -360,7 +360,7 @@ fn streamed_and_ticketed_containers_match_the_direct_path() {
     let data = llmzip::textgen::quick_sample(1500, 12);
     let golden = direct.compress(&data).unwrap();
     // Ticketed one-shot.
-    let ticket = server.submit(Op::Compress(data.clone())).unwrap();
+    let ticket = server.submit(Op::Compress(data.clone().into())).unwrap();
     assert_eq!(ticket.wait().unwrap(), golden);
     // Streaming session, fed in awkward pieces.
     let mut stream = server.open_stream().unwrap();
@@ -391,6 +391,85 @@ fn server_decodes_v1_containers_byte_exactly() {
     cont.version = llmzip::compress::CONTAINER_V1;
     cont.flags = 0;
     assert_eq!(server.decompress(&cont.to_bytes()).unwrap(), data);
+}
+
+/// Server with the buffer pool explicitly on or off (same engine,
+/// weights and batching as [`replica_server`]): the pooling A/B fixture.
+fn pooled_server(replicas: usize, pooling: bool, weights: Arc<Weights>, codec: Codec) -> Server {
+    Server::start(
+        move || {
+            LlmCompressor::from_shared(
+                by_name("nano")?,
+                weights.clone(),
+                LlmCompressorConfig {
+                    model: "nano".into(),
+                    chunk_tokens: 64,
+                    stream_bytes: 256,
+                    executor: ExecutorKind::Native,
+                    lanes: 4,
+                    threads: 1,
+                    codec,
+                    ..Default::default()
+                },
+            )
+        },
+        ServerConfig {
+            chunk_tokens: 64,
+            replicas,
+            threads: 1,
+            codec,
+            pooling,
+            policy: BatchPolicy { lanes: 4, max_wait: Duration::from_millis(3) },
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn containers_bit_identical_with_pooling_on_and_off() {
+    // The zero-copy acceptance bar: buffer recycling changes where bytes
+    // live, never their values. Containers (one-shot AND streamed) must
+    // be byte-identical with the pool enabled and disabled, across
+    // replica counts and both entropy backends, and the pooled server
+    // must actually be recycling (hit counter moves).
+    let cfg = by_name("nano").unwrap();
+    let weights = Arc::new(Weights::random(cfg, 99));
+    let data = llmzip::textgen::quick_sample(1400, 19);
+    for codec in [Codec::Range, Codec::Fse] {
+        let mut golden: Option<Vec<u8>> = None;
+        for replicas in [1usize, 3] {
+            for pooling in [true, false] {
+                let server = pooled_server(replicas, pooling, weights.clone(), codec);
+                assert_eq!(server.pool().is_enabled(), pooling);
+                let z = server.compress(&data).unwrap();
+                match &golden {
+                    None => golden = Some(z.clone()),
+                    Some(g) => assert_eq!(
+                        &z, g,
+                        "bytes diverged at replicas={replicas} pooling={pooling} codec={codec:?}"
+                    ),
+                }
+                assert_eq!(server.decompress(&z).unwrap(), data);
+                // Streamed upload hits the pooled chunk-staging path.
+                let mut stream = server.open_stream().unwrap();
+                for piece in data.chunks(113) {
+                    stream.write_bytes(piece).unwrap();
+                }
+                assert_eq!(&stream.finish().unwrap().wait().unwrap(), golden.as_ref().unwrap());
+                let stats = server.pool().stats();
+                if pooling {
+                    assert!(
+                        stats.hits > 0,
+                        "pooled server never recycled a buffer: {stats:?}"
+                    );
+                } else {
+                    assert_eq!(stats.hits, 0, "disabled pool must not recycle: {stats:?}");
+                    assert_eq!(stats.returns, 0, "disabled pool must not retain: {stats:?}");
+                }
+            }
+        }
+    }
 }
 
 /// Spin a real TCP acceptor over `server` and return its address.

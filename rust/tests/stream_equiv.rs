@@ -214,6 +214,65 @@ fn decode_chunk_random_access_matches_full_decode_windows() {
 }
 
 #[test]
+fn positioned_range_decode_from_file_reads_only_touched_frames() {
+    use llmzip::compress::{FileSource, SeekableContainer};
+    let c = compressor(Precision::F32);
+    let data = llmzip::textgen::quick_sample(1000, 63);
+    let z = c.compress(&data).unwrap();
+    let full = c.decompress(&z).unwrap();
+    let path = std::env::temp_dir()
+        .join(format!("llmzip-stream-equiv-{}.lmz", std::process::id()));
+    std::fs::write(&path, &z).unwrap();
+    let file = FileSource::open(&path).unwrap();
+
+    // A fresh open per range isolates the byte/frame counters.
+    for (off, len, want_frames) in [
+        (0u64, 1u64, 1u64),                     // first byte → first frame
+        (STREAM as u64 - 1, 2, 2),              // straddle → two frames
+        (3 * STREAM as u64 + 7, 50, 1),         // interior → one frame
+        (0, 1000, 8),                           // everything → all 8 frames
+        (500, 0, 0),                            // empty → nothing
+    ] {
+        let cont = SeekableContainer::open(&file).unwrap();
+        let opened_bytes = cont.bytes_read();
+        let got = c.decompress_range_from(&cont, off, len).unwrap();
+        assert_eq!(got, &full[off as usize..(off + len) as usize], "[{off}, {off}+{len})");
+        assert_eq!(cont.frames_read(), want_frames, "[{off}, {off}+{len})");
+        // The decode touched header + trailer + exactly the frames in
+        // range — never the whole file (except the all-frames range).
+        let frame_bytes: u64 = cont
+            .chunks_in_range(off, len)
+            .unwrap()
+            .map(|i| 9 + cont.records()[i].comp_len as u64)
+            .sum();
+        assert_eq!(cont.bytes_read(), opened_bytes + frame_bytes);
+        if want_frames < 8 {
+            assert!(
+                cont.bytes_read() < z.len() as u64,
+                "ranged decode read the whole container"
+            );
+        }
+    }
+
+    // decode_chunk_from equals the corresponding full-decode window and
+    // fetches exactly one frame.
+    let cont = SeekableContainer::open(&file).unwrap();
+    for i in (0..cont.n_chunks()).rev() {
+        let got = c.decode_chunk_from(&cont, i).unwrap();
+        let lo = i * STREAM;
+        let hi = (lo + STREAM).min(data.len());
+        assert_eq!(got, &full[lo..hi], "chunk {i}");
+    }
+    assert_eq!(cont.frames_read(), cont.n_chunks() as u64);
+    assert!(c.decode_chunk_from(&cont, cont.n_chunks()).is_err());
+
+    // The slice-backed path routes v2 through the same machinery and
+    // stays equal to the full-decode slice.
+    assert_eq!(c.decompress_range(&z, 130, 77).unwrap(), &full[130..207]);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn range_decode_rejects_foreign_and_mismatched_containers() {
     // Random access rides the same contract checks as the full path:
     // model/executor/precision mismatches are refused by name, not
