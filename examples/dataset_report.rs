@@ -26,7 +26,7 @@ fn report(label: &str, data: &[u8]) {
         ng[0] * 100.0, ng[1] * 100.0, ng[2] * 100.0, ng[3] * 100.0
     );
     print!("baselines      ");
-    for c in all_baselines() {
+    for c in all_baselines().expect("baseline registry") {
         let z = c.compress(data).expect("compress");
         print!("{} {:.2}x  ", c.name(), data.len() as f64 / z.len() as f64);
     }

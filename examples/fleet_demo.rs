@@ -1,0 +1,217 @@
+//! Fleet smoke driver (CI's multi-model E2E): host two model pools — nano
+//! f32/range and nano int8/fse — behind one TCP endpoint, run mixed-tenant
+//! clients against both over the multiplexed wire protocol, cross-check
+//! every container against the direct single-compressor path, and
+//! demonstrate that load shedding surfaces as a clean wire error.
+//!
+//! ```sh
+//! cargo run --release --example fleet_demo
+//! ```
+//!
+//! No artifacts needed: both pools run the native nano engine on
+//! deterministic random weights.
+
+use llmzip::compress::{Codec, Compressor, LlmCompressor, LlmCompressorConfig};
+use llmzip::coordinator::wire::serve_connection;
+use llmzip::coordinator::{
+    BatchPolicy, FleetConfig, FleetModelSpec, FleetServer, MuxClient, ServerConfig, TenantSpec,
+};
+use llmzip::lm::config::by_name;
+use llmzip::lm::weights::Weights;
+use llmzip::lm::{ExecutorKind, Precision};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+const CHUNK: usize = 128;
+
+fn compressor_cfg(precision: Precision, codec: Codec) -> LlmCompressorConfig {
+    LlmCompressorConfig {
+        model: "nano".into(),
+        chunk_tokens: CHUNK,
+        stream_bytes: 512,
+        executor: ExecutorKind::Native,
+        lanes: 4,
+        threads: 1,
+        precision,
+        codec,
+        ..Default::default()
+    }
+}
+
+fn spec(key: &str, precision: Precision, codec: Codec, seed: u64) -> FleetModelSpec {
+    FleetModelSpec {
+        key: key.to_string(),
+        compressor: compressor_cfg(precision, codec),
+        server: ServerConfig {
+            chunk_tokens: CHUNK,
+            codec,
+            policy: BatchPolicy { lanes: 4, max_wait: Duration::from_millis(3) },
+            ..Default::default()
+        },
+        load: Arc::new(move || Ok(Weights::random(by_name("nano")?, seed))),
+    }
+}
+
+fn direct(precision: Precision, codec: Codec, seed: u64) -> llmzip::Result<LlmCompressor> {
+    let cfg = by_name("nano")?;
+    let weights = Weights::random(cfg, seed);
+    let weights =
+        if precision == Precision::Int8 { Arc::new(weights.quantize()) } else { Arc::new(weights) };
+    LlmCompressor::from_shared(cfg, weights, compressor_cfg(precision, codec))
+}
+
+fn main() -> llmzip::Result<()> {
+    println!("starting fleet: nano-f32 (f32/range) + nano-int8 (int8/fse), tenants alice:3 bob:1");
+    let fleet = Arc::new(FleetServer::start(
+        vec![
+            spec("nano-f32", Precision::F32, Codec::Range, 7),
+            spec("nano-int8", Precision::Int8, Codec::Fse, 8),
+        ],
+        FleetConfig {
+            max_inflight: 16,
+            tenants: vec![
+                TenantSpec {
+                    name: "alice".into(),
+                    weight: 3,
+                    rate_bytes_per_sec: 0.0,
+                    burst_bytes: 0.0,
+                },
+                TenantSpec {
+                    name: "bob".into(),
+                    weight: 1,
+                    rate_bytes_per_sec: 0.0,
+                    burst_bytes: 0.0,
+                },
+            ],
+            ..Default::default()
+        },
+    )?);
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    {
+        let fleet = fleet.clone();
+        std::thread::spawn(move || {
+            while let Ok((stream, _)) = listener.accept() {
+                let fl = fleet.clone();
+                std::thread::spawn(move || {
+                    let _ = serve_connection(stream, &*fl);
+                });
+            }
+        });
+    }
+    println!("fleet listening on {addr} (models: {})", fleet.model_keys().join(", "));
+
+    // Reference compressors: the bytes every fleet response must equal.
+    let direct_f32 = direct(Precision::F32, Codec::Range, 7)?;
+    let direct_int8 = direct(Precision::Int8, Codec::Fse, 8)?;
+
+    // Mixed-tenant mixed-model clients over one multiplexed connection
+    // each: alice on f32, bob on int8, both checked bit-for-bit.
+    let mut totals = Vec::new();
+    for (tenant, key, seed) in
+        [("alice", "nano-f32", 41u64), ("bob", "nano-int8", 42), ("alice", "nano-int8", 43)]
+    {
+        let mut client = MuxClient::connect(&addr)?;
+        client.set_tenant(tenant)?;
+        let data = llmzip::textgen::quick_sample(1500, seed);
+        let id = client.submit_compress_tagged(key, &data, false)?;
+        let (rid, result) = client.recv()?;
+        if rid != id {
+            anyhow::bail!("response id mismatch");
+        }
+        let z = result?;
+        let golden = if key == "nano-int8" {
+            direct_int8.compress(&data)?
+        } else {
+            direct_f32.compress(&data)?
+        };
+        if z != golden {
+            anyhow::bail!("fleet container differs from direct path on {key}");
+        }
+        // Unrouted decompress: the container's own tag picks the pool.
+        let did = client.submit_decompress(&z)?;
+        let (rid, back) = client.recv()?;
+        if rid != did {
+            anyhow::bail!("response id mismatch");
+        }
+        if back? != data {
+            anyhow::bail!("roundtrip mismatch");
+        }
+        println!(
+            "tenant {tenant:<5} model {key:<9} {} bytes -> {} bytes, matches direct path",
+            data.len(),
+            z.len()
+        );
+        totals.push((key, data.len(), z.len()));
+    }
+    println!("cross-decode ok: every container routed home by its own tag");
+
+    // Streaming upload routed by key, equal to the one-shot container.
+    let mut client = MuxClient::connect(&addr)?;
+    client.set_tenant("alice")?;
+    let data = llmzip::textgen::quick_sample(2000, 44);
+    let sid = client.open_stream_for("nano-int8")?;
+    for piece in data.chunks(357) {
+        client.stream_chunk(sid, piece)?;
+    }
+    client.stream_finish(sid)?;
+    let (rid, result) = client.recv()?;
+    if rid != sid {
+        anyhow::bail!("response id mismatch");
+    }
+    if result? != direct_int8.compress(&data)? {
+        anyhow::bail!("stream differs from one-shot");
+    }
+    println!("tenant alice streamed {} bytes to nano-int8, matches one-shot", data.len());
+
+    // Load shedding: a 1-slot fleet with its slot pinned by an open stream
+    // must refuse the next request with a clean wire error — not a hang.
+    let capped = Arc::new(FleetServer::start(
+        vec![spec("nano-f32", Precision::F32, Codec::Range, 7)],
+        FleetConfig { max_inflight: 1, ..Default::default() },
+    )?);
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let capped_addr = listener.local_addr()?.to_string();
+    {
+        let capped = capped.clone();
+        std::thread::spawn(move || {
+            while let Ok((stream, _)) = listener.accept() {
+                let fl = capped.clone();
+                std::thread::spawn(move || {
+                    let _ = serve_connection(stream, &*fl);
+                });
+            }
+        });
+    }
+    let mut client = MuxClient::connect(&capped_addr)?;
+    let small = llmzip::textgen::quick_sample(400, 45);
+    let sid = client.open_stream_for("nano-f32")?;
+    client.stream_chunk(sid, &small)?;
+    let shed_id = client.submit_compress_tagged("nano-f32", &small, false)?;
+    let (rid, result) = client.recv()?;
+    if rid != shed_id {
+        anyhow::bail!("shed response must come back first");
+    }
+    let err = result.expect_err("over-cap request must be refused");
+    println!("load shed surfaced as clean wire error: {err:#}");
+    client.stream_finish(sid)?;
+    let (rid, result) = client.recv()?;
+    if rid != sid || result.is_err() {
+        anyhow::bail!("pinned stream must still complete");
+    }
+    println!(
+        "fleet metrics: shed={} rate_limited={} page_outs={} page_ins={}",
+        capped.metrics.shed.load(Ordering::Relaxed),
+        capped.metrics.rate_limited.load(Ordering::Relaxed),
+        fleet.metrics.page_outs.load(Ordering::Relaxed),
+        fleet.metrics.page_ins.load(Ordering::Relaxed),
+    );
+
+    for (key, raw, z) in totals {
+        println!("summary {key:<9} ratio {:.3}", z as f64 / raw as f64);
+    }
+    println!("fleet demo ok");
+    Ok(())
+}

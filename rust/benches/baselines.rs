@@ -15,7 +15,7 @@ fn main() {
         "{:<12} {:>8} {:>14} {:>14}",
         "METHOD", "RATIO", "COMP MiB/s", "DECOMP MiB/s"
     );
-    for c in all_baselines() {
+    for c in all_baselines().expect("baseline registry") {
         let mut z = Vec::new();
         let enc = bench(&format!("{} compress", c.name()), 1.5, || {
             z = c.compress(&data).unwrap();

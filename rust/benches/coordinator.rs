@@ -19,11 +19,12 @@ use llmzip::compress::{
     Codec, Compressor, FileSource, LlmCompressor, LlmCompressorConfig, SeekableContainer,
 };
 use llmzip::coordinator::{
-    BatchPolicy, DynamicBatcher, Priority, Server, ServerConfig, WorkItem, WorkKind,
+    BatchPolicy, DynamicBatcher, FleetConfig, FleetModelSpec, FleetServer, Priority, Server,
+    ServerConfig, TenantSpec, WireService, WorkItem, WorkKind,
 };
 use llmzip::lm::config::by_name;
 use llmzip::lm::weights::Weights;
-use llmzip::lm::{ExecutorKind, StepPool};
+use llmzip::lm::{ExecutorKind, Precision, StepPool};
 use llmzip::util::stats::percentile;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -89,6 +90,7 @@ fn batcher_bench() {
                 chunk_index: 0,
                 kind: WorkKind::Compress,
                 priority: if i % 4 == 0 { Priority::Interactive } else { Priority::Bulk },
+                tenant: (i % 3) as u32,
                 data: Vec::new().into(),
                 record: None,
                 codec: Codec::Range,
@@ -445,12 +447,167 @@ fn alloc_bench() -> AllocReport {
     }
 }
 
+// ---------------------------------------------------------------------
+// Model fleet: two pools (nano f32/range + nano int8/fse) behind one
+// FleetServer — per-model throughput under mixed-tenant load, forced
+// page-out churn under a tiny memory budget, and the shed rate at a
+// 1-deep in-flight cap.
+// ---------------------------------------------------------------------
+
+struct FleetReport {
+    /// (route key, tokens/sec) under the mixed-tenant phase.
+    per_model: Vec<(String, f64)>,
+    page_outs: u64,
+    page_ins: u64,
+    shed: u64,
+    shed_attempts: u64,
+}
+
+fn fleet_spec(key: &str, precision: Precision, codec: Codec, seed: u64) -> FleetModelSpec {
+    FleetModelSpec {
+        key: key.to_string(),
+        compressor: LlmCompressorConfig {
+            model: "nano".into(),
+            chunk_tokens: 128,
+            stream_bytes: 512,
+            executor: ExecutorKind::Native,
+            lanes: 4,
+            threads: 1,
+            precision,
+            codec,
+            ..Default::default()
+        },
+        server: ServerConfig {
+            chunk_tokens: 128,
+            codec,
+            policy: BatchPolicy { lanes: 4, max_wait: Duration::from_millis(2) },
+            ..Default::default()
+        },
+        load: Arc::new(move || Ok(Weights::random(by_name("nano")?, seed))),
+    }
+}
+
+fn fleet_bench() -> FleetReport {
+    section("model fleet (two pools, tenant QoS, paging, shedding)");
+    let payload_bytes = if smoke() { 768usize } else { 3072 };
+    let rounds = if smoke() { 2usize } else { 6 };
+
+    // Phase 1: mixed-tenant throughput per model (weights 3:1 — QoS is
+    // a queueing policy; both tenants' bytes count toward the pool).
+    let fleet = Arc::new(
+        FleetServer::start(
+            vec![
+                fleet_spec("nano-f32", Precision::F32, Codec::Range, 21),
+                fleet_spec("nano-int8", Precision::Int8, Codec::Fse, 22),
+            ],
+            FleetConfig {
+                tenants: vec![
+                    TenantSpec {
+                        name: "alice".into(),
+                        weight: 3,
+                        rate_bytes_per_sec: 0.0,
+                        burst_bytes: 0.0,
+                    },
+                    TenantSpec {
+                        name: "bob".into(),
+                        weight: 1,
+                        rate_bytes_per_sec: 0.0,
+                        burst_bytes: 0.0,
+                    },
+                ],
+                ..Default::default()
+            },
+        )
+        .expect("fleet"),
+    );
+    let alice = fleet.bind_tenant("alice").unwrap();
+    let bob = fleet.bind_tenant("bob").unwrap();
+    let mut per_model = Vec::new();
+    for key in ["nano-f32", "nano-int8"] {
+        let t0 = Instant::now();
+        let handles: Vec<_> = [(alice, 31u64), (bob, 32)]
+            .into_iter()
+            .map(|(tenant, seed)| {
+                let fl = fleet.clone();
+                std::thread::spawn(move || {
+                    let data = llmzip::textgen::quick_sample(payload_bytes, seed);
+                    let mut bytes = 0usize;
+                    for _ in 0..rounds {
+                        let z = fl.compress_for(tenant, key, &data).unwrap();
+                        assert_eq!(fl.decompress(&z).unwrap(), data, "{key} roundtrip");
+                        bytes += data.len();
+                    }
+                    bytes
+                })
+            })
+            .collect();
+        let bytes: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let tps = (2 * bytes) as f64 / t0.elapsed().as_secs_f64();
+        println!("{key:<10} {tps:>10.0} tok/s (2 tenants, weights 3:1)");
+        per_model.push((key.to_string(), tps));
+    }
+    drop(fleet);
+
+    // Phase 2: a 1-byte memory budget forces the coldest pool out on
+    // every model switch — page-out/page-in churn with byte-identical
+    // results (the fingerprint check rides every re-materialization).
+    let paged = Arc::new(
+        FleetServer::start(
+            vec![
+                fleet_spec("nano-f32", Precision::F32, Codec::Range, 21),
+                fleet_spec("nano-int8", Precision::Int8, Codec::Fse, 22),
+            ],
+            FleetConfig { memory_budget_bytes: 1, ..Default::default() },
+        )
+        .expect("paged fleet"),
+    );
+    let data = llmzip::textgen::quick_sample(payload_bytes, 33);
+    for i in 0..if smoke() { 4u64 } else { 8 } {
+        let key = if i % 2 == 0 { "nano-f32" } else { "nano-int8" };
+        let z = paged.compress_for(0, key, &data).unwrap();
+        assert_eq!(paged.decompress(&z).unwrap(), data, "{key} paged roundtrip");
+    }
+    let page_outs = paged.metrics.page_outs.load(Ordering::Relaxed);
+    let page_ins = paged.metrics.page_ins.load(Ordering::Relaxed);
+    println!("paging under 1-byte budget: {page_outs} page-outs, {page_ins} page-ins");
+    drop(paged);
+
+    // Phase 3: in-flight cap 1 + a thundering herd — the overflow must
+    // shed with clean errors (counted), never hang.
+    let capped = Arc::new(
+        FleetServer::start(
+            vec![fleet_spec("nano-f32", Precision::F32, Codec::Range, 21)],
+            FleetConfig { max_inflight: 1, ..Default::default() },
+        )
+        .expect("capped fleet"),
+    );
+    let shed_attempts = 8u64;
+    let handles: Vec<_> = (0..shed_attempts)
+        .map(|seed| {
+            let fl = capped.clone();
+            std::thread::spawn(move || {
+                let data = llmzip::textgen::quick_sample(512, 40 + seed);
+                fl.compress_for(0, "nano-f32", &data).is_ok()
+            })
+        })
+        .collect();
+    let ok = handles.into_iter().filter(|h| h.join().unwrap()).count() as u64;
+    let shed = capped.metrics.shed.load(Ordering::Relaxed);
+    println!(
+        "shed at cap 1: {ok}/{shed_attempts} served, {shed} shed ({:.0}%)",
+        100.0 * shed as f64 / shed_attempts as f64
+    );
+    assert!(ok >= 1, "at least one request must get through the cap");
+
+    FleetReport { per_model, page_outs, page_ins, shed, shed_attempts }
+}
+
 /// Hand-rolled JSON (no serde in this offline crate set).
-fn write_bench_json(scenarios: &[ElasticScenario], alloc: &AllocReport) {
+fn write_bench_json(scenarios: &[ElasticScenario], alloc: &AllocReport, fleet: &FleetReport) {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"coordinator\",\n");
-    s.push_str("  \"schema\": 2,\n");
+    s.push_str("  \"schema\": 3,\n");
     s.push_str("  \"elastic\": {\n");
     s.push_str(&format!(
         "    \"model\": \"nano\", \"min_replicas\": {ELASTIC_MIN}, \
@@ -498,6 +655,26 @@ fn write_bench_json(scenarios: &[ElasticScenario], alloc: &AllocReport) {
         "    \"range_decode\": {{\"frames_touched\": {frames_touched}, \"frames_total\": \
          {frames_total}, \"bytes_read\": {bytes_read}, \"file_bytes\": {file_bytes}}}\n"
     ));
+    s.push_str("  },\n");
+    s.push_str("  \"fleet\": {\n");
+    s.push_str("    \"unit\": \"tokens_per_sec\",\n    \"models\": [\n");
+    for (i, (key, tps)) in fleet.per_model.iter().enumerate() {
+        s.push_str(&format!(
+            "      {{\"key\": \"{key}\", \"tokens_per_sec\": {tps:.1}}}{}\n",
+            if i + 1 < fleet.per_model.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("    ],\n");
+    s.push_str(&format!(
+        "    \"page_outs\": {}, \"page_ins\": {},\n",
+        fleet.page_outs, fleet.page_ins
+    ));
+    s.push_str(&format!(
+        "    \"shed\": {}, \"shed_attempts\": {}, \"shed_rate\": {:.3}\n",
+        fleet.shed,
+        fleet.shed_attempts,
+        fleet.shed as f64 / fleet.shed_attempts.max(1) as f64
+    ));
     s.push_str("  }\n}\n");
     let path = std::env::var("LLMZIP_BENCH_COORD_JSON")
         .unwrap_or_else(|_| "BENCH_coordinator.json".to_string());
@@ -512,5 +689,6 @@ fn main() {
     server_bench();
     let scenarios = elastic_bench();
     let alloc = alloc_bench();
-    write_bench_json(&scenarios, &alloc);
+    let fleet = fleet_bench();
+    write_bench_json(&scenarios, &alloc, &fleet);
 }

@@ -18,8 +18,11 @@
 //! `max_replicas` up front.
 
 use crate::cli::Args;
-use llmzip::compress::{LlmCompressor, LlmCompressorConfig};
-use llmzip::coordinator::{BatchPolicy, ScaleHook, Server, ServerConfig};
+use llmzip::compress::{Codec, LlmCompressor, LlmCompressorConfig};
+use llmzip::coordinator::{
+    BatchPolicy, FleetConfig, FleetModelSpec, FleetServer, ScaleHook, Server, ServerConfig,
+    TenantSpec, WireService,
+};
 use llmzip::lm::{ExecutorKind, Precision, StepPool};
 use llmzip::Result;
 use std::net::{TcpListener, TcpStream};
@@ -28,6 +31,12 @@ use std::time::Duration;
 
 pub fn serve(args: &[String]) -> Result<()> {
     let args = Args::parse(args)?;
+    // --models switches to fleet mode: several model pools behind one
+    // port, with routing, a shared replica budget and tenant QoS.
+    if let Some(models) = args.get("models") {
+        let models = models.to_string();
+        return serve_fleet(&args, &models);
+    }
     let model = args.str_or("model", "medium");
     let chunk = args.usize_or("chunk", 256)?;
     let port = args.usize_or("port", 7878)?;
@@ -177,14 +186,180 @@ pub fn serve(args: &[String]) -> Result<()> {
         let (stream, peer) = listener.accept()?;
         let srv = server.clone();
         std::thread::spawn(move || {
-            if let Err(e) = handle_conn(stream, &srv) {
+            if let Err(e) = handle_conn(stream, &*srv) {
                 eprintln!("connection {peer}: {e:#}");
             }
         });
     }
 }
 
-/// Serve one connection (either protocol, auto-detected).
-pub fn handle_conn(stream: TcpStream, server: &Server) -> Result<()> {
-    llmzip::coordinator::wire::serve_connection(stream, server)
+/// Serve one connection (either protocol, auto-detected) against either
+/// a single-model [`Server`] or a [`FleetServer`].
+pub fn handle_conn(stream: TcpStream, service: &dyn WireService) -> Result<()> {
+    llmzip::coordinator::wire::serve_connection(stream, service)
+}
+
+/// Parse one `--models` entry: `name[:int8][:fse]` (modifier order
+/// free; `f32`/`range` are accepted as explicit spellings of the
+/// defaults). The entry string itself becomes the fleet route key.
+fn parse_model_entry(entry: &str) -> Result<(String, Precision, Codec)> {
+    let mut parts = entry.split(':');
+    let name = parts.next().unwrap_or("");
+    if name.is_empty() {
+        anyhow::bail!("empty model entry in --models");
+    }
+    let (mut precision, mut codec) = (Precision::F32, Codec::Range);
+    for token in parts {
+        match token {
+            "int8" => precision = Precision::Int8,
+            "f32" => precision = Precision::F32,
+            "fse" => codec = Codec::Fse,
+            "range" => codec = Codec::Range,
+            other => anyhow::bail!(
+                "unknown modifier '{other}' in --models entry '{entry}' \
+                 (expected int8, f32, fse or range)"
+            ),
+        }
+    }
+    Ok((name.to_string(), precision, codec))
+}
+
+/// Parse one `--tenants` entry: `name:weight[:rateKB]` — WFQ weight plus
+/// an optional sustained rate limit in KiB/s of payload bytes.
+fn parse_tenant_entry(entry: &str) -> Result<TenantSpec> {
+    let parts: Vec<&str> = entry.split(':').collect();
+    if parts.is_empty() || parts[0].is_empty() || parts.len() > 3 {
+        anyhow::bail!("bad --tenants entry '{entry}' (expected name:weight[:rateKB])");
+    }
+    let weight = match parts.get(1) {
+        Some(w) => w
+            .parse::<u64>()
+            .map_err(|_| anyhow::anyhow!("bad weight in --tenants entry '{entry}'"))?,
+        None => 1,
+    };
+    let rate_kb = match parts.get(2) {
+        Some(r) => r
+            .parse::<u64>()
+            .map_err(|_| anyhow::anyhow!("bad rateKB in --tenants entry '{entry}'"))?,
+        None => 0,
+    };
+    Ok(TenantSpec {
+        name: parts[0].to_string(),
+        weight,
+        rate_bytes_per_sec: (rate_kb * 1024) as f64,
+        burst_bytes: 0.0,
+    })
+}
+
+/// Fleet mode: `--models nano,nano:int8:fse` hosts one replica pool per
+/// entry behind the same port. Single-model knobs (chunk, lanes, threads,
+/// replica range, batching) apply to EVERY pool; the fleet adds
+/// `--max-total-replicas` (global autoscale budget),
+/// `--memory-budget-mb` (page cold pools out beyond it),
+/// `--max-inflight` (load shed) and `--tenants` (QoS).
+fn serve_fleet(args: &Args, models: &str) -> Result<()> {
+    let chunk = args.usize_or("chunk", 256)?;
+    let port = args.usize_or("port", 7878)?;
+    let max_wait_ms = args.u64_or("max-wait-ms", 20)?;
+    let artifacts = args.get("artifacts").map(str::to_string);
+    let lanes = args.usize_or("lanes", 8)?;
+    let threads = args.usize_or("threads", super::default_threads())?;
+    let replicas = args.usize_or("replicas", 1)?;
+    let min_replicas = args.usize_or("min-replicas", replicas)?;
+    let max_replicas = args.usize_or("max-replicas", replicas.max(min_replicas))?;
+    let autoscale = min_replicas != max_replicas || args.has("autoscale");
+    if min_replicas > max_replicas {
+        anyhow::bail!("--min-replicas {min_replicas} > --max-replicas {max_replicas}");
+    }
+    let kernel = super::compress::kernel_arg(args)?;
+    let panel_layout = !args.has("no-panels");
+    let pooling = !args.has("no-pool");
+    // Fleet pools are native-engine replicas sharing one Arc<Weights>
+    // per model; PJRT's thread-affine handles don't page in and out.
+    match args.str_or("executor", "native").as_str() {
+        "native" => {}
+        other => anyhow::bail!("fleet mode is native-only (got --executor {other})"),
+    }
+
+    let max_total_replicas = args.usize_or("max-total-replicas", 0)?;
+    let memory_budget_bytes = args.usize_or("memory-budget-mb", 0)? << 20;
+    let max_inflight = args.usize_or("max-inflight", 0)?;
+    let tenants = match args.get("tenants") {
+        Some(list) => list
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(parse_tenant_entry)
+            .collect::<Result<Vec<_>>>()?,
+        None => Vec::new(),
+    };
+
+    let mut specs = Vec::new();
+    for entry in models.split(',').filter(|s| !s.is_empty()) {
+        let (model, precision, codec) = parse_model_entry(entry)?;
+        let compressor = LlmCompressorConfig {
+            model: model.clone(),
+            chunk_tokens: chunk,
+            stream_bytes: 4096.max(chunk),
+            executor: ExecutorKind::Native,
+            lanes,
+            threads,
+            precision,
+            kernel,
+            panel_layout,
+            codec,
+        };
+        let server = ServerConfig {
+            chunk_tokens: chunk,
+            lanes,
+            threads,
+            replicas,
+            min_replicas,
+            max_replicas,
+            autoscale,
+            panel_layout,
+            codec,
+            pooling,
+            policy: BatchPolicy { lanes, max_wait: Duration::from_millis(max_wait_ms) },
+            ..Default::default()
+        };
+        // The loader re-opens the artifact store per call so a paged-out
+        // pool re-materializes from disk — the fingerprint check in the
+        // fleet refuses weights that changed while the pool was out.
+        let model_name = model.clone();
+        let loader_artifacts = artifacts.clone();
+        let load: llmzip::coordinator::WeightsLoader = Arc::new(move || {
+            let cfg = llmzip::lm::config::by_name(&model_name)?;
+            let store = llmzip::runtime::ArtifactStore::open(loader_artifacts.as_deref())?;
+            store.weights(cfg)
+        });
+        specs.push(FleetModelSpec { key: entry.to_string(), compressor, server, load });
+    }
+
+    let tenant_count = tenants.len();
+    let fleet = Arc::new(FleetServer::start(
+        specs,
+        FleetConfig { max_total_replicas, memory_budget_bytes, max_inflight, tenants, pooling },
+    )?);
+
+    let listener = TcpListener::bind(("127.0.0.1", port as u16))?;
+    println!(
+        "llmzip fleet serving on 127.0.0.1:{port} \
+         (models=[{}], chunk={chunk}, lanes={lanes}, replicas={replicas}, autoscale={}, \
+         budget={}, mem={}MB, inflight={}, tenants={}, protocols=v1+v2-mux)",
+        fleet.model_keys().join(", "),
+        if autoscale { format!("{min_replicas}..{max_replicas}") } else { "off".into() },
+        if max_total_replicas > 0 { max_total_replicas.to_string() } else { "off".into() },
+        memory_budget_bytes >> 20,
+        if max_inflight > 0 { max_inflight.to_string() } else { "off".into() },
+        tenant_count,
+    );
+    loop {
+        let (stream, peer) = listener.accept()?;
+        let srv = fleet.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle_conn(stream, &*srv) {
+                eprintln!("connection {peer}: {e:#}");
+            }
+        });
+    }
 }

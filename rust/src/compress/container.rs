@@ -368,6 +368,36 @@ impl Container {
         out
     }
 
+    /// Read just the model tag out of a serialized container's header —
+    /// both layouts — without parsing the chunk table or touching the
+    /// payload. This is how a multi-model router picks the pool for a
+    /// decompress request: the container itself names its engine. Borrows
+    /// from `data`, so routing a 100 MB container costs a few header
+    /// bytes of work and no allocation.
+    pub fn peek_model_name(data: &[u8]) -> Result<&str> {
+        if data.len() < 8 {
+            anyhow::bail!("container too short");
+        }
+        if read_u32_le(data, 0) != CONTAINER_MAGIC {
+            anyhow::bail!("bad container magic");
+        }
+        let version = u16::from_le_bytes([data[4], data[5]]);
+        // Offset of the `u8 len | bytes` model-name field per layout.
+        let name_at = match version {
+            CONTAINER_V1 => 24,
+            CONTAINER_V2 => 12,
+            v => anyhow::bail!("unsupported container version {v}"),
+        };
+        let name_len = *data
+            .get(name_at)
+            .ok_or_else(|| anyhow::anyhow!("truncated container header"))?
+            as usize;
+        let name = data
+            .get(name_at + 1..name_at + 1 + name_len)
+            .ok_or_else(|| anyhow::anyhow!("truncated container header"))?;
+        std::str::from_utf8(name).map_err(|_| anyhow::anyhow!("model name is not UTF-8"))
+    }
+
     /// Parse from bytes, validating structure (but not the CRC — that is
     /// checked against the *decompressed* output by the caller). Accepts
     /// both layouts; the parsed `version` records which one, so
@@ -624,6 +654,19 @@ mod tests {
         assert_eq!(pa.payload, pb.payload);
         assert_eq!(pa.chunks, pb.chunks);
         assert_eq!(pa.orig_crc32, pb.orig_crc32);
+    }
+
+    #[test]
+    fn peek_model_name_reads_both_layouts_without_parsing() {
+        for c in [sample(), sample_v2()] {
+            let bytes = c.to_bytes();
+            assert_eq!(Container::peek_model_name(&bytes).unwrap(), c.model_name);
+            // The peek reads the header only: truncating the payload off
+            // the end still routes, a truncated header errors cleanly.
+            assert_eq!(Container::peek_model_name(&bytes[..32]).unwrap(), c.model_name);
+            assert!(Container::peek_model_name(&bytes[..10]).is_err());
+        }
+        assert!(Container::peek_model_name(b"not a container").is_err());
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub use container::{
     ChunkRecord, Codec, Container, CONTAINER_MAGIC, CONTAINER_V1, CONTAINER_V2,
 };
 pub use llm::{ContainerTag, LlmCompressor, LlmCompressorConfig};
-pub use registry::{baseline_by_name, all_baseline_names};
+pub use registry::{all_baseline_names, baseline_by_name, ModelRegistry, ModelRoute};
 pub use source::{ContainerSource, FileSource, SeekableContainer};
 pub use stream::{CompressWriter, DecompressReader, StreamSummary};
 

@@ -1,10 +1,16 @@
-//! Name-indexed registry of the nine baseline compressors — the rows of the
-//! paper's Table 5 minus "Ours" (which needs a model and lives in
-//! [`super::llm`]).
+//! Name-indexed registries: the nine baseline compressors of the paper's
+//! Table 5, and the fleet's **model registry** — route keys resolved to
+//! per-model pool slots by the multi-model coordinator
+//! ([`crate::coordinator::FleetServer`]).
+//!
+//! The whole module is panic-free: lookups and registrations report the
+//! offending name in a `Result` instead of unwrapping, so a bad route key
+//! from the wire never takes the server down.
 
 use crate::baselines::{
     ArithmeticOrder0, ContextMixing, FseOrder0, GzipLike, HuffmanOrder0, LzmaLite, Ppm, ZstdLite,
 };
+use crate::compress::llm::ContainerTag;
 use crate::compress::Compressor;
 use crate::Result;
 
@@ -33,9 +39,142 @@ pub fn baseline_by_name(name: &str) -> Result<Box<dyn Compressor>> {
     })
 }
 
-/// Instantiate every baseline in table order.
-pub fn all_baselines() -> Vec<Box<dyn Compressor>> {
-    BASELINE_NAMES.iter().map(|n| baseline_by_name(n).unwrap()).collect()
+/// Instantiate every baseline in table order. Propagates (rather than
+/// unwraps) a construction failure, naming the baseline that failed.
+pub fn all_baselines() -> Result<Vec<Box<dyn Compressor>>> {
+    BASELINE_NAMES
+        .iter()
+        .map(|n| {
+            baseline_by_name(n)
+                .map_err(|e| anyhow::anyhow!("constructing baseline '{n}': {e:#}"))
+        })
+        .collect()
+}
+
+/// One hosted model in a [`ModelRegistry`]: a user-facing alias (the key
+/// clients route by) bound to the full engine tag its pool stamps into
+/// containers (`model:flag[:q8:<fp>][:fse]`).
+#[derive(Clone, Debug)]
+pub struct ModelRoute {
+    /// User-facing route key, e.g. `"nano"` or `"nano-int8"`.
+    pub alias: String,
+    /// The pool's container tag, e.g. `"nano:0:q8:93ab01c2:fse"`.
+    pub engine_tag: String,
+}
+
+/// Route-key → pool-slot registry for a multi-model fleet. Slots are the
+/// insertion indices, which is how [`crate::coordinator::FleetServer`]
+/// pairs entries with its pool vector.
+///
+/// Resolution order for a key (first match wins):
+/// 1. exact alias match;
+/// 2. the key parses as a [`ContainerTag`] naming the same engine as a
+///    registered pool (codec suffix ignored — one engine decodes both);
+/// 3. the key is a bare model name hosted by exactly ONE pool.
+///
+/// Every failure names the offending key and lists what the registry
+/// holds — no panics anywhere in the module.
+#[derive(Debug, Default)]
+pub struct ModelRegistry {
+    routes: Vec<ModelRoute>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.routes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.routes.is_empty()
+    }
+
+    /// Registered routes in slot order.
+    pub fn routes(&self) -> &[ModelRoute] {
+        &self.routes
+    }
+
+    /// Comma-separated alias list for error messages.
+    fn known(&self) -> String {
+        if self.routes.is_empty() {
+            return "(none)".into();
+        }
+        self.routes.iter().map(|r| r.alias.as_str()).collect::<Vec<_>>().join(", ")
+    }
+
+    /// Register a pool under `alias` with the engine tag it stamps into
+    /// containers; returns the slot index. Duplicate aliases AND duplicate
+    /// engines are rejected — either would make routing ambiguous.
+    pub fn register(&mut self, alias: &str, engine_tag: &str) -> Result<usize> {
+        if alias.is_empty() {
+            anyhow::bail!("model route alias must be non-empty");
+        }
+        if let Some(dup) = self.routes.iter().find(|r| r.alias == alias) {
+            anyhow::bail!(
+                "model route alias '{alias}' already registered (engine '{}')",
+                dup.engine_tag
+            );
+        }
+        let tag = ContainerTag::parse(engine_tag)
+            .map_err(|e| anyhow::anyhow!("engine tag '{engine_tag}' for '{alias}': {e:#}"))?;
+        for r in &self.routes {
+            let other = ContainerTag::parse(&r.engine_tag)
+                .map_err(|e| anyhow::anyhow!("registry holds bad tag '{}': {e:#}", r.engine_tag))?;
+            if tag.same_engine(&other) {
+                anyhow::bail!(
+                    "engine '{engine_tag}' already registered under alias '{}' — \
+                     two pools for one engine would make routing ambiguous",
+                    r.alias
+                );
+            }
+        }
+        self.routes.push(ModelRoute { alias: alias.into(), engine_tag: engine_tag.into() });
+        Ok(self.routes.len() - 1)
+    }
+
+    /// Resolve a route key to its slot index (see the type docs for the
+    /// matching order).
+    pub fn resolve(&self, key: &str) -> Result<usize> {
+        if let Some(i) = self.routes.iter().position(|r| r.alias == key) {
+            return Ok(i);
+        }
+        // A full container tag routes by engine equivalence, so a client
+        // holding only a container can ask for "whoever decodes this".
+        if let Ok(tag) = ContainerTag::parse(key) {
+            for (i, r) in self.routes.iter().enumerate() {
+                if ContainerTag::parse(&r.engine_tag).is_ok_and(|own| own.same_engine(&tag)) {
+                    return Ok(i);
+                }
+            }
+        }
+        // Bare model name: unambiguous only when a single pool hosts it.
+        let by_model: Vec<usize> = self
+            .routes
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.engine_tag.split(':').next() == Some(key))
+            .map(|(i, _)| i)
+            .collect();
+        match by_model.as_slice() {
+            [one] => Ok(*one),
+            [] => anyhow::bail!(
+                "unknown model route '{key}' — fleet hosts: {}",
+                self.known()
+            ),
+            many => anyhow::bail!(
+                "model route '{key}' is ambiguous ({} pools host that model: {}) — \
+                 use a full alias or container tag",
+                many.len(),
+                many.iter()
+                    .map(|&i| self.routes[i].alias.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -54,9 +193,42 @@ mod tests {
     #[test]
     fn every_baseline_roundtrips_shared_corpus() {
         let data = crate::textgen::quick_sample(8_000, 42);
-        for c in all_baselines() {
+        for c in all_baselines().unwrap() {
             let z = c.compress(&data).unwrap();
             assert_eq!(c.decompress(&z).unwrap(), data, "{}", c.name());
         }
+    }
+
+    #[test]
+    fn model_registry_resolves_alias_tag_and_bare_name() {
+        let mut reg = ModelRegistry::new();
+        let f32_slot = reg.register("nano-f32", "nano:0").unwrap();
+        let q8_slot = reg.register("nano-q8", "nano:0:q8:deadbeef:fse").unwrap();
+        let med = reg.register("medium", "medium:0").unwrap();
+        assert_eq!(reg.resolve("nano-q8").unwrap(), q8_slot);
+        // A container tag routes by engine, ignoring the codec suffix.
+        assert_eq!(reg.resolve("nano:0:q8:deadbeef").unwrap(), q8_slot);
+        assert_eq!(reg.resolve("nano:0:fse").unwrap(), f32_slot);
+        // Bare model name: unique → resolves, shared → ambiguous error.
+        assert_eq!(reg.resolve("medium").unwrap(), med);
+        let err = format!("{:#}", reg.resolve("nano").unwrap_err());
+        assert!(err.contains("ambiguous"), "{err}");
+        let err = format!("{:#}", reg.resolve("giant").unwrap_err());
+        assert!(err.contains("unknown model route 'giant'"), "{err}");
+        assert!(err.contains("nano-f32"), "{err}");
+    }
+
+    #[test]
+    fn model_registry_rejects_duplicates_without_panicking() {
+        let mut reg = ModelRegistry::new();
+        reg.register("a", "nano:0").unwrap();
+        let err = format!("{:#}", reg.register("a", "medium:0").unwrap_err());
+        assert!(err.contains("alias 'a' already registered"), "{err}");
+        // Same engine under a new alias (even with another codec suffix).
+        let err = format!("{:#}", reg.register("b", "nano:0:fse").unwrap_err());
+        assert!(err.contains("already registered under alias 'a'"), "{err}");
+        // Malformed engine tags are errors naming the tag, not panics.
+        let err = format!("{:#}", reg.register("c", "untagged").unwrap_err());
+        assert!(err.contains("untagged"), "{err}");
     }
 }

@@ -17,10 +17,19 @@
 //!   items drain ahead of [`Priority::Bulk`] items, FIFO inside each
 //!   class, so a latency-sensitive compress request can overtake a bulk
 //!   ingest job without a separate queueing tier.
+//! * **Per-tenant weighted fair queueing** — within a (kind, class), items
+//!   are kept in per-tenant FIFO lanes scheduled by start-time fair
+//!   queueing: each lane carries a virtual time that advances by
+//!   `bytes / weight` per popped item, and the lane with the smallest
+//!   virtual time goes next. Backlogged tenants therefore share engine
+//!   bytes in proportion to their weights, and no backlogged tenant can
+//!   be starved (its virtual time stands still while others advance). A
+//!   single-tenant server degenerates to one lane — plain FIFO, exactly
+//!   the pre-fleet behavior.
 
 use crate::compress::container::{ChunkRecord, Codec};
 use crate::util::PooledBuf;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
 
 /// What kind of engine pass a work item needs.
@@ -47,6 +56,10 @@ pub struct WorkItem {
     pub chunk_index: u32,
     pub kind: WorkKind,
     pub priority: Priority,
+    /// Owning tenant (`0` = the default/anonymous tenant). Items of the
+    /// same tenant stay FIFO within their (kind, class); across tenants
+    /// the batcher schedules by weighted fair queueing.
+    pub tenant: u32,
     /// Compress: raw bytes. Decompress: compressed payload. Rides a
     /// pool-recycled buffer: when the item is dropped after its batch
     /// completes, the storage returns to the server's [`BytePool`]
@@ -78,50 +91,143 @@ impl Default for BatchPolicy {
     }
 }
 
-/// One kind's queue: two FIFO classes, interactive drained first.
-#[derive(Default)]
-struct KindQueue {
+/// Virtual-time scale: one popped byte advances a weight-1 lane's virtual
+/// time by this much, so integer division by the weight keeps resolution.
+const VT_SCALE: u64 = 1024;
+
+/// One tenant's backlog within a kind: two FIFO classes plus the lane's
+/// weighted-fair virtual time.
+struct TenantLane {
+    tenant: u32,
     interactive: VecDeque<WorkItem>,
     bulk: VecDeque<WorkItem>,
+    /// Start-time-fair-queueing tag: advances by `bytes * VT_SCALE /
+    /// weight` per popped item. The lane with the smallest tag goes next
+    /// within its class.
+    vtime: u64,
 }
 
-impl KindQueue {
+impl TenantLane {
     fn len(&self) -> usize {
         self.interactive.len() + self.bulk.len()
     }
 
-    /// Enqueue time of the oldest item across both classes.
-    fn oldest(&self) -> Option<Instant> {
-        match (self.interactive.front(), self.bulk.front()) {
-            (Some(a), Some(b)) => Some(a.enqueued.min(b.enqueued)),
-            (a, b) => a.or(b).map(|i| i.enqueued),
+    fn class(&self, p: Priority) -> &VecDeque<WorkItem> {
+        match p {
+            Priority::Interactive => &self.interactive,
+            Priority::Bulk => &self.bulk,
         }
     }
 
-    fn push(&mut self, item: WorkItem) {
-        match item.priority {
-            Priority::Interactive => self.interactive.push_back(item),
-            Priority::Bulk => self.bulk.push_back(item),
+    fn class_mut(&mut self, p: Priority) -> &mut VecDeque<WorkItem> {
+        match p {
+            Priority::Interactive => &mut self.interactive,
+            Priority::Bulk => &mut self.bulk,
         }
+    }
+}
+
+/// One kind's queue: per-tenant WFQ lanes, each split into two FIFO
+/// classes; interactive drains first across lanes.
+#[derive(Default)]
+struct KindQueue {
+    lanes: Vec<TenantLane>,
+    /// Virtual clock: the tag of the most recently served lane. A lane
+    /// going from empty to backlogged starts no earlier than this, so an
+    /// idle tenant cannot bank virtual time and then monopolize the
+    /// queue.
+    vclock: u64,
+}
+
+impl KindQueue {
+    fn len(&self) -> usize {
+        self.lanes.iter().map(TenantLane::len).sum()
+    }
+
+    /// Enqueue time of the oldest item across all lanes and classes.
+    fn oldest(&self) -> Option<Instant> {
+        self.lanes
+            .iter()
+            .flat_map(|l| [l.interactive.front(), l.bulk.front()])
+            .flatten()
+            .map(|i| i.enqueued)
+            .min()
+    }
+
+    fn push(&mut self, item: WorkItem) {
+        let idx = match self.lanes.iter().position(|l| l.tenant == item.tenant) {
+            Some(i) => i,
+            None => {
+                self.lanes.push(TenantLane {
+                    tenant: item.tenant,
+                    interactive: VecDeque::new(),
+                    bulk: VecDeque::new(),
+                    vtime: 0,
+                });
+                self.lanes.len() - 1
+            }
+        };
+        let lane = &mut self.lanes[idx];
+        if lane.len() == 0 {
+            // Newly backlogged: catch the lane up to the virtual clock.
+            lane.vtime = lane.vtime.max(self.vclock);
+        }
+        lane.class_mut(item.priority).push_back(item);
+    }
+
+    /// Index of the non-empty `class` lane with the smallest virtual time
+    /// (ties break on registration order, so selection is deterministic).
+    fn min_vtime_lane(&self, class: Priority) -> Option<usize> {
+        self.lanes
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| !l.class(class).is_empty())
+            .min_by_key(|(i, l)| (l.vtime, *i))
+            .map(|(i, _)| i)
+    }
+
+    /// Pop one item of `class` from the fairest lane and charge its lane.
+    fn pop_fair(&mut self, class: Priority, weights: &HashMap<u32, u64>) -> Option<WorkItem> {
+        let idx = self.min_vtime_lane(class)?;
+        let lane = &mut self.lanes[idx];
+        let item = lane.class_mut(class).pop_front().expect("lane selected non-empty");
+        let weight = weights.get(&lane.tenant).copied().unwrap_or(1).max(1);
+        let cost = (item.data.len() as u64).max(1);
+        self.vclock = lane.vtime;
+        lane.vtime = lane.vtime.saturating_add(cost.saturating_mul(VT_SCALE) / weight);
+        Some(item)
     }
 
     /// Pop up to `n` items, interactive class first — unless bulk's oldest
     /// item has aged past `starve_after`, in which case bulk drains first
     /// this batch so a sustained interactive flood cannot starve it.
-    fn pop_batch(&mut self, n: usize, now: Instant, starve_after: Duration) -> Vec<WorkItem> {
+    /// Within each class, lanes interleave by weighted fair queueing.
+    fn pop_batch(
+        &mut self,
+        n: usize,
+        now: Instant,
+        starve_after: Duration,
+        weights: &HashMap<u32, u64>,
+    ) -> Vec<WorkItem> {
         let bulk_starving = self
-            .bulk
-            .front()
-            .is_some_and(|i| now.duration_since(i.enqueued) >= starve_after);
-        let (first, second) = if bulk_starving {
-            (&mut self.bulk, &mut self.interactive)
+            .lanes
+            .iter()
+            .filter_map(|l| l.bulk.front())
+            .any(|i| now.duration_since(i.enqueued) >= starve_after);
+        let order = if bulk_starving {
+            [Priority::Bulk, Priority::Interactive]
         } else {
-            (&mut self.interactive, &mut self.bulk)
+            [Priority::Interactive, Priority::Bulk]
         };
-        let hi = first.len().min(n);
-        let mut batch: Vec<WorkItem> = first.drain(..hi).collect();
-        let lo = second.len().min(n - hi);
-        batch.extend(second.drain(..lo));
+        let mut batch = Vec::new();
+        for class in order {
+            while batch.len() < n {
+                match self.pop_fair(class, weights) {
+                    Some(item) => batch.push(item),
+                    None => break,
+                }
+            }
+        }
         batch
     }
 }
@@ -132,6 +238,9 @@ pub struct DynamicBatcher {
     policy: BatchPolicy,
     compress_q: KindQueue,
     decompress_q: KindQueue,
+    /// WFQ weight per tenant id; unlisted tenants (including the default
+    /// tenant `0`) weigh 1.
+    tenant_weights: HashMap<u32, u64>,
 }
 
 impl DynamicBatcher {
@@ -140,11 +249,18 @@ impl DynamicBatcher {
             policy,
             compress_q: KindQueue::default(),
             decompress_q: KindQueue::default(),
+            tenant_weights: HashMap::new(),
         }
     }
 
     pub fn policy(&self) -> BatchPolicy {
         self.policy
+    }
+
+    /// Set one tenant's WFQ weight (relative share of engine bytes while
+    /// backlogged). Weight `0` is clamped to 1; unset tenants weigh 1.
+    pub fn set_tenant_weight(&mut self, tenant: u32, weight: u64) {
+        self.tenant_weights.insert(tenant, weight.max(1));
     }
 
     pub fn push(&mut self, item: WorkItem) {
@@ -187,7 +303,7 @@ impl DynamicBatcher {
             return None;
         };
         let n = q.len().min(lanes);
-        Some((kind, q.pop_batch(n, now, starve_after)))
+        Some((kind, q.pop_batch(n, now, starve_after, &self.tenant_weights)))
     }
 
     /// Earliest deadline among queued items (for the scheduler's sleep).
@@ -211,6 +327,7 @@ mod tests {
             chunk_index: 0,
             kind,
             priority: Priority::Bulk,
+            tenant: 0,
             data: vec![1, 2, 3].into(),
             record: None,
             codec: Codec::Range,
@@ -327,6 +444,105 @@ mod tests {
         let (_, batch) = b.next_batch(now).unwrap();
         assert_eq!(batch.iter().map(|i| i.request_id).collect::<Vec<_>>(), vec![0, 1]);
         assert_eq!(b.pending(), 3);
+    }
+
+    #[test]
+    fn wfq_weighted_shares_within_tolerance() {
+        // Two backlogged tenants, weights 3:1, equal item sizes: over a
+        // long drain, popped items interleave near the 3:1 share. Assert
+        // the first half of the drain honors the ratio within tolerance.
+        let mut b = DynamicBatcher::new(BatchPolicy { lanes: 4, max_wait: Duration::ZERO });
+        b.set_tenant_weight(1, 3);
+        b.set_tenant_weight(2, 1);
+        let t0 = Instant::now();
+        for i in 0..200u64 {
+            for tenant in [1u32, 2] {
+                let mut it = item(i, WorkKind::Compress, t0);
+                it.tenant = tenant;
+                it.chunk_index = i as u32;
+                b.push(it);
+            }
+        }
+        let mut first_half = Vec::new();
+        while first_half.len() < 200 {
+            let (_, batch) = b.next_batch(t0).expect("backlogged");
+            first_half.extend(batch);
+        }
+        let heavy = first_half.iter().filter(|i| i.tenant == 1).count();
+        let light = first_half.len() - heavy;
+        // Ideal split of the first 200 pops is 150/50; allow slack for
+        // batch-boundary rounding.
+        assert!(
+            (140..=160).contains(&heavy),
+            "weight-3 tenant got {heavy} of {} pops",
+            first_half.len()
+        );
+        assert!(light > 0, "weight-1 tenant must not starve");
+        // Everything still drains (work conservation).
+        let mut total = first_half.len();
+        while let Some((_, batch)) = b.next_batch(t0) {
+            total += batch.len();
+        }
+        assert_eq!(total, 400);
+    }
+
+    #[test]
+    fn wfq_no_tenant_starves_and_fifo_holds_per_tenant() {
+        // Heavily weighted tenant 1 vs weight-1 tenant 2: tenant 2 still
+        // progresses every few batches, and each tenant's items stay FIFO.
+        let mut b = DynamicBatcher::new(BatchPolicy { lanes: 2, max_wait: Duration::ZERO });
+        b.set_tenant_weight(1, 8);
+        let t0 = Instant::now();
+        for i in 0..40u64 {
+            let mut it = item(i, WorkKind::Compress, t0);
+            it.tenant = if i % 4 == 0 { 2 } else { 1 };
+            it.chunk_index = i as u32;
+            b.push(it);
+        }
+        let mut seen: HashMap<u32, Vec<u32>> = HashMap::new();
+        while let Some((_, batch)) = b.next_batch(t0) {
+            for it in batch {
+                seen.entry(it.tenant).or_default().push(it.chunk_index);
+            }
+        }
+        assert_eq!(seen.values().map(Vec::len).sum::<usize>(), 40);
+        assert!(!seen[&2].is_empty(), "light tenant drained");
+        for order in seen.values() {
+            assert!(order.windows(2).all(|w| w[0] < w[1]), "FIFO within tenant");
+        }
+    }
+
+    #[test]
+    fn late_arriving_tenant_cannot_bank_virtual_time() {
+        // Tenant 2 arrives after tenant 1 has drained many bytes; its
+        // fresh lane starts at the virtual clock, so it shares from now on
+        // instead of monopolizing the queue to "catch up".
+        let mut b = DynamicBatcher::new(BatchPolicy { lanes: 1, max_wait: Duration::ZERO });
+        let t0 = Instant::now();
+        for i in 0..10u64 {
+            let mut it = item(i, WorkKind::Compress, t0);
+            it.tenant = 1;
+            b.push(it);
+        }
+        for _ in 0..10 {
+            b.next_batch(t0).expect("tenant 1 backlog");
+        }
+        for i in 10..14u64 {
+            for tenant in [1u32, 2] {
+                let mut it = item(i, WorkKind::Compress, t0);
+                it.tenant = tenant;
+                b.push(it);
+            }
+        }
+        let mut tenants = Vec::new();
+        while let Some((_, batch)) = b.next_batch(t0) {
+            tenants.extend(batch.into_iter().map(|i| i.tenant));
+        }
+        // Equal weights, equal sizes: strict alternation, not a burst of
+        // tenant-2 items first.
+        let t2_lead = tenants.iter().take_while(|&&t| t == 2).count();
+        assert!(t2_lead <= 1, "late tenant burst: {tenants:?}");
+        assert_eq!(tenants.len(), 8);
     }
 
     #[test]

@@ -1,0 +1,779 @@
+//! Multi-model **fleet** coordinator: many per-model replica pools behind
+//! one wire endpoint, one shared autoscaling budget, tenant QoS, and
+//! weight paging.
+//!
+//! The paper's predictor-must-match-the-source result means a production
+//! compression service hosts *every* model whose traffic it stores. A
+//! [`FleetServer`] owns one [`Server`] pool per hosted model and routes
+//! each [`Op`] to the right pool:
+//!
+//! * **compress** — by an explicit route key (a registry alias, a bare
+//!   model name, or a full container tag; see
+//!   [`crate::compress::ModelRegistry`]);
+//! * **decompress** — by the tag the container itself records
+//!   ([`Container::peek_model_name`]), so clients never tag reads.
+//!
+//! Cross-pool arbitration happens through three shared levers:
+//!
+//! * a fleet-wide [`ReplicaBudget`]: every pool's startup replicas and
+//!   autoscale grows draw permits from one cap, so the fleet's total
+//!   replica count is bounded no matter which pools' scalers fire;
+//! * a **memory budget** over [`Weights::resident_bytes`]: when live
+//!   bundles exceed it, the coldest pool (LRU by last routed request) is
+//!   *paged out* — its `Server` is dropped (draining in-flight work) and
+//!   only the spec + weight [`Weights::fingerprint`] stay. The next
+//!   request re-materializes it and the reloaded bundle must reproduce
+//!   the pinned fingerprint, or the fleet refuses to serve from it;
+//! * **admission control**: per-tenant token-bucket rate limits and a
+//!   fleet-wide in-flight cap. Past the cap, requests are *shed* with a
+//!   clear error (surfaced as `MSG_ERR` on wire v2) instead of queueing
+//!   without bound.
+//!
+//! Tenancy is a pure scheduling layer: a tenant id rides each work item
+//! into the per-pool [`crate::coordinator::DynamicBatcher`]'s weighted
+//! fair queue. None of routing, paging, budgets or tenancy can change a
+//! single container byte — every container a fleet produces is
+//! byte-identical to the direct single-compressor path (pinned by
+//! `tests/fleet.rs`).
+//!
+//! [`WireService`] is the seam the TCP layer ([`super::wire`]) speaks: a
+//! plain [`Server`] implements it too, so one `serve_connection` serves
+//! both shapes.
+
+use crate::compress::container::Container;
+use crate::compress::llm::ContainerTag;
+use crate::compress::registry::ModelRegistry;
+use crate::compress::{LlmCompressor, LlmCompressorConfig};
+use crate::coordinator::batcher::Priority;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::router::{
+    Op, ReplicaBudget, Server, ServerConfig, StreamHandle, Ticket,
+};
+use crate::lm::{config, ExecutorKind, Precision, Weights};
+use crate::util::{crc32, BytePool};
+use crate::Result;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// What the wire layer needs from a serving endpoint — implemented by
+/// both the single-model [`Server`] (routing and admission are no-ops)
+/// and the [`FleetServer`]. Object-safe: `serve_connection` holds a
+/// `&dyn WireService`.
+pub trait WireService: Send + Sync {
+    /// Buffer recycler for reading request frames.
+    fn wire_pool(&self) -> &BytePool;
+
+    /// Resolve a tenant name to the scheduling id stamped on that
+    /// connection's work. Empty name = the default tenant `0`.
+    fn bind_tenant(&self, name: &str) -> Result<u32>;
+
+    /// Submit one operation. `route` picks the model pool (`None` =
+    /// unrouted: the sole pool for compress, the container's own tag for
+    /// decompress). Errors here are *admission* errors (unknown route,
+    /// rate limit, load shed) and map to a clean wire error frame.
+    fn submit_wire(
+        &self,
+        tenant: u32,
+        route: Option<&str>,
+        op: Op,
+        priority: Priority,
+    ) -> Result<WireTicket>;
+
+    /// Open a chunked-upload compression stream on the routed pool.
+    fn open_wire_stream(&self, tenant: u32, route: Option<&str>) -> Result<WireStream>;
+}
+
+/// RAII admission slot: holds one unit of the fleet's in-flight cap and
+/// returns it on drop — whether the request completed, errored, or the
+/// connection died with the ticket unresolved.
+pub struct InflightGuard {
+    counter: Arc<AtomicUsize>,
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.counter.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// A routed, admitted in-flight operation: the pool's [`Ticket`] plus
+/// whatever the admitting service needs pinned while it runs — the
+/// owning `Server` (so a page-out cannot tear the pool down under an
+/// active request) and the admission slot.
+pub struct WireTicket {
+    ticket: Ticket,
+    server: Option<Arc<Server>>,
+    guard: Option<InflightGuard>,
+}
+
+impl WireTicket {
+    /// Block until the operation completes. Releases the admission slot
+    /// as soon as the result is in hand.
+    pub fn wait(self) -> Result<Vec<u8>> {
+        let WireTicket { ticket, server, guard } = self;
+        let out = ticket.wait();
+        drop(guard);
+        drop(server);
+        out
+    }
+
+    /// Poll without blocking (see [`Ticket::try_wait`]). The admission
+    /// slot is held until the `WireTicket` is dropped.
+    pub fn try_wait(&self) -> Result<Option<Vec<u8>>> {
+        self.ticket.try_wait()
+    }
+}
+
+/// A routed, admitted upload stream; the admission slot and pool pin ride
+/// into the final [`WireTicket`] at [`WireStream::finish`].
+pub struct WireStream {
+    handle: StreamHandle,
+    server: Option<Arc<Server>>,
+    guard: Option<InflightGuard>,
+}
+
+impl WireStream {
+    pub fn write_bytes(&mut self, data: &[u8]) -> Result<()> {
+        self.handle.write_bytes(data)
+    }
+
+    pub fn finish(self) -> Result<WireTicket> {
+        let WireStream { handle, server, guard } = self;
+        Ok(WireTicket { ticket: handle.finish()?, server, guard })
+    }
+}
+
+/// Does `route` name the engine behind `engine_tag`? Accepts the full
+/// tag, any tag for the same engine (codec suffix ignored — one engine
+/// decodes both), or the bare model name.
+pub(crate) fn route_matches(route: &str, engine_tag: &str) -> bool {
+    if route == engine_tag || engine_tag.split(':').next() == Some(route) {
+        return true;
+    }
+    match (ContainerTag::parse(route), ContainerTag::parse(engine_tag)) {
+        (Ok(a), Ok(b)) => a.same_engine(&b),
+        _ => false,
+    }
+}
+
+fn ensure_route(route: &str, engine_tag: &str) -> Result<()> {
+    if route_matches(route, engine_tag) {
+        Ok(())
+    } else {
+        anyhow::bail!("unknown model route '{route}' — this server hosts '{engine_tag}'")
+    }
+}
+
+/// Scheduling id for a free-form tenant name on an endpoint with no
+/// configured tenant table: a stable hash, so each name gets its own WFQ
+/// lane (at default weight 1). Never 0 — that is the anonymous tenant.
+fn hashed_tenant(name: &str) -> u32 {
+    crc32(name.as_bytes()).max(1)
+}
+
+/// The single-model server speaks the same wire seam: every route that
+/// names its engine is accepted, tenants are pure lane labels, and
+/// admission control is the pool's own backpressure.
+impl WireService for Server {
+    fn wire_pool(&self) -> &BytePool {
+        self.pool()
+    }
+
+    fn bind_tenant(&self, name: &str) -> Result<u32> {
+        Ok(if name.is_empty() { 0 } else { hashed_tenant(name) })
+    }
+
+    fn submit_wire(
+        &self,
+        tenant: u32,
+        route: Option<&str>,
+        op: Op,
+        priority: Priority,
+    ) -> Result<WireTicket> {
+        if let Some(route) = route {
+            ensure_route(route, self.engine_tag())?;
+        }
+        Ok(WireTicket { ticket: self.submit_for(tenant, op, priority)?, server: None, guard: None })
+    }
+
+    fn open_wire_stream(&self, tenant: u32, route: Option<&str>) -> Result<WireStream> {
+        if let Some(route) = route {
+            ensure_route(route, self.engine_tag())?;
+        }
+        Ok(WireStream { handle: self.open_stream_for(tenant)?, server: None, guard: None })
+    }
+}
+
+/// How a fleet loads (and RE-loads, after a page-out) one model's weight
+/// bundle. Must be deterministic: page-in verifies the reloaded bundle's
+/// fingerprint against the one pinned at first materialization.
+pub type WeightsLoader = Arc<dyn Fn() -> Result<Weights> + Send + Sync>;
+
+/// One hosted model: the route key clients use, the compressor/pool
+/// configuration, and the weights loader.
+pub struct FleetModelSpec {
+    /// Registry alias, e.g. `"nano"` or `"nano-int8"`.
+    pub key: String,
+    /// Per-replica compressor configuration (native executor only — fleet
+    /// pools share one `Arc<Weights>` per model). With
+    /// `precision == Int8` and an f32 loader, the bundle is quantized
+    /// once per materialization, exactly like `cmd serve`.
+    pub compressor: LlmCompressorConfig,
+    /// This model's pool shape (replicas, autoscale range, batching).
+    /// `replica_budget` and `tenants` are overwritten by the fleet.
+    pub server: ServerConfig,
+    pub load: WeightsLoader,
+}
+
+/// One tenant's QoS contract.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub name: String,
+    /// WFQ weight inside every pool's batcher (`0` counts as 1).
+    pub weight: u64,
+    /// Sustained admission rate in payload bytes/second (`0` = no limit).
+    pub rate_bytes_per_sec: f64,
+    /// Token-bucket depth in bytes (`0` = one second of rate). Requests
+    /// larger than the burst are refused outright.
+    pub burst_bytes: f64,
+}
+
+/// Fleet-wide arbitration knobs. Everything here is a pure
+/// scheduling/placement policy: no setting changes any container byte.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Cap on replicas across ALL pools (`0` = uncapped, no shared
+    /// budget). Startup claims what it can per pool (erroring only when a
+    /// pool would get zero); autoscale grows need a free permit.
+    pub max_total_replicas: usize,
+    /// Cap on summed [`Weights::resident_bytes`] of live pools (`0` =
+    /// unlimited). Exceeding it pages out the coldest pool(s). Soft: the
+    /// fleet never pages out the pool a request is being routed to, so
+    /// one oversized model still serves.
+    pub memory_budget_bytes: usize,
+    /// Fleet-wide in-flight request cap (`0` = unlimited). Beyond it,
+    /// submissions are shed with a clear error instead of queueing.
+    pub max_inflight: usize,
+    pub tenants: Vec<TenantSpec>,
+    /// Recycle wire-frame buffers (matches [`ServerConfig::pooling`]).
+    pub pooling: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            max_total_replicas: 0,
+            memory_budget_bytes: 0,
+            max_inflight: 0,
+            tenants: Vec::new(),
+            pooling: true,
+        }
+    }
+}
+
+/// Fleet-level counters (per-pool throughput lives in each pool's own
+/// [`Metrics`], reachable via [`FleetServer::pool_metrics`]).
+#[derive(Debug, Default)]
+pub struct FleetMetrics {
+    pub page_outs: AtomicU64,
+    pub page_ins: AtomicU64,
+    /// Requests refused by the in-flight cap.
+    pub shed: AtomicU64,
+    /// Requests refused by a tenant rate limit.
+    pub rate_limited: AtomicU64,
+}
+
+/// Classic token bucket over payload bytes.
+struct TenantBucket {
+    rate: f64,
+    burst: f64,
+    /// `(tokens, last refill)`.
+    state: Mutex<(f64, Instant)>,
+}
+
+impl TenantBucket {
+    fn new(rate: f64, burst: f64) -> TenantBucket {
+        TenantBucket { rate, burst, state: Mutex::new((burst, Instant::now())) }
+    }
+
+    fn try_take(&self, cost: f64) -> bool {
+        let mut st = self.state.lock().unwrap();
+        let now = Instant::now();
+        let elapsed = now.duration_since(st.1).as_secs_f64();
+        st.0 = (st.0 + elapsed * self.rate).min(self.burst);
+        st.1 = now;
+        if st.0 >= cost {
+            st.0 -= cost;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+struct Tenant {
+    name: String,
+    id: u32,
+    bucket: Option<TenantBucket>,
+}
+
+/// A pool slot: live (serving) or paged out (spec + pinned fingerprint
+/// only; the weights and every replica thread are gone).
+enum PoolState {
+    Live {
+        server: Arc<Server>,
+        /// [`Weights::resident_bytes`] sampled at materialization — the
+        /// memory-budget signal.
+        resident: usize,
+    },
+    Paged,
+}
+
+struct PoolEntry {
+    key: String,
+    engine_tag: String,
+    /// Weight fingerprint pinned at first materialization; every page-in
+    /// must reproduce it or the pool refuses to serve.
+    fingerprint: u32,
+    spec: FleetModelSpec,
+    state: Mutex<PoolState>,
+    /// Logical LRU clock value of the last request routed here.
+    last_used: AtomicU64,
+}
+
+/// Build (or re-build) one pool from its spec. Returns the server, the
+/// bundle fingerprint and the resident-byte sample. `expect` pins the
+/// fingerprint on page-in.
+fn materialize(spec: &FleetModelSpec, expect: Option<u32>) -> Result<(Arc<Server>, u32, usize)> {
+    let model_cfg = config::by_name(&spec.compressor.model)?;
+    let weights = (spec.load)()?;
+    let weights = match (spec.compressor.precision, weights.precision()) {
+        (Precision::Int8, Precision::F32) => weights.quantize(),
+        (Precision::F32, Precision::Int8) => anyhow::bail!(
+            "weights for '{}' are int8-quantized but the pool is configured for f32",
+            spec.compressor.model
+        ),
+        _ => weights,
+    };
+    let fp = weights.fingerprint();
+    if let Some(expect) = expect {
+        if fp != expect {
+            anyhow::bail!(
+                "weights for '{}' changed while paged out: fingerprint {fp:08x} on reload \
+                 vs {expect:08x} at first materialization — refusing to serve (containers \
+                 would decode against the wrong engine)",
+                spec.key
+            );
+        }
+    }
+    let weights = Arc::new(weights);
+    let resident_probe = weights.clone();
+    let cfg = spec.compressor.clone();
+    let server = Server::start(
+        move || LlmCompressor::from_shared(model_cfg, weights.clone(), cfg.clone()),
+        spec.server.clone(),
+    )?;
+    // Sampled after startup so panelized kernel copies (built by the
+    // first replica, shared by the rest) are counted.
+    let resident = resident_probe.resident_bytes();
+    Ok((Arc::new(server), fp, resident))
+}
+
+/// The multi-model serving fleet. See the module docs for the contract.
+pub struct FleetServer {
+    pools: Vec<PoolEntry>,
+    registry: ModelRegistry,
+    tenants: Vec<Tenant>,
+    budget: Option<Arc<ReplicaBudget>>,
+    memory_budget: usize,
+    max_inflight: usize,
+    inflight: Arc<AtomicUsize>,
+    /// Monotone logical clock feeding the pools' LRU stamps.
+    clock: AtomicU64,
+    pub metrics: FleetMetrics,
+    pool: BytePool,
+}
+
+impl FleetServer {
+    /// Materialize every pool eagerly (pinning each bundle fingerprint),
+    /// then apply the memory budget — so a fleet configured tighter than
+    /// its models starts with the coldest already paged out rather than
+    /// overcommitted.
+    pub fn start(specs: Vec<FleetModelSpec>, config: FleetConfig) -> Result<FleetServer> {
+        if specs.is_empty() {
+            anyhow::bail!("a fleet needs at least one model");
+        }
+        let budget =
+            (config.max_total_replicas > 0).then(|| ReplicaBudget::new(config.max_total_replicas));
+        let mut tenants: Vec<Tenant> = Vec::new();
+        for (i, t) in config.tenants.iter().enumerate() {
+            if t.name.is_empty() {
+                anyhow::bail!("tenant names must be non-empty");
+            }
+            if tenants.iter().any(|x| x.name == t.name) {
+                anyhow::bail!("tenant '{}' configured twice", t.name);
+            }
+            let bucket = (t.rate_bytes_per_sec > 0.0).then(|| {
+                let burst =
+                    if t.burst_bytes > 0.0 { t.burst_bytes } else { t.rate_bytes_per_sec };
+                TenantBucket::new(t.rate_bytes_per_sec, burst)
+            });
+            tenants.push(Tenant { name: t.name.clone(), id: (i + 1) as u32, bucket });
+        }
+        let lane_weights: Vec<(u32, u64)> = tenants
+            .iter()
+            .zip(&config.tenants)
+            .map(|(t, s)| (t.id, s.weight.max(1)))
+            .collect();
+        let mut registry = ModelRegistry::new();
+        let mut pools: Vec<PoolEntry> = Vec::new();
+        for mut spec in specs {
+            if spec.compressor.executor != ExecutorKind::Native {
+                anyhow::bail!(
+                    "fleet pools require the native executor (model '{}' wants {:?})",
+                    spec.key,
+                    spec.compressor.executor
+                );
+            }
+            spec.server.replica_budget = budget.clone();
+            spec.server.tenants = lane_weights.clone();
+            let (server, fingerprint, resident) = materialize(&spec, None)
+                .map_err(|e| anyhow::anyhow!("starting model pool '{}': {e:#}", spec.key))?;
+            let engine_tag = server.engine_tag().to_string();
+            registry.register(&spec.key, &engine_tag)?;
+            pools.push(PoolEntry {
+                key: spec.key.clone(),
+                engine_tag,
+                fingerprint,
+                spec,
+                state: Mutex::new(PoolState::Live { server, resident }),
+                last_used: AtomicU64::new(0),
+            });
+        }
+        let fleet = FleetServer {
+            pools,
+            registry,
+            tenants,
+            budget,
+            memory_budget: config.memory_budget_bytes,
+            max_inflight: config.max_inflight,
+            inflight: Arc::new(AtomicUsize::new(0)),
+            clock: AtomicU64::new(0),
+            metrics: FleetMetrics::default(),
+            pool: if config.pooling { BytePool::new(64) } else { BytePool::disabled() },
+        };
+        fleet.enforce_memory_budget(None);
+        Ok(fleet)
+    }
+
+    /// Route keys in registration order.
+    pub fn model_keys(&self) -> Vec<String> {
+        self.pools.iter().map(|p| p.key.clone()).collect()
+    }
+
+    /// The engine tag a pool stamps into containers.
+    pub fn engine_tag(&self, key: &str) -> Result<String> {
+        Ok(self.pools[self.registry.resolve(key)?].engine_tag.clone())
+    }
+
+    /// Is this model currently materialized?
+    pub fn is_live(&self, key: &str) -> Result<bool> {
+        let entry = &self.pools[self.registry.resolve(key)?];
+        Ok(matches!(&*entry.state.lock().unwrap(), PoolState::Live { .. }))
+    }
+
+    /// A live pool's metrics (`None` while paged out) — the per-model
+    /// throughput feed for benches and ops.
+    pub fn pool_metrics(&self, key: &str) -> Result<Option<Arc<Metrics>>> {
+        let entry = &self.pools[self.registry.resolve(key)?];
+        Ok(match &*entry.state.lock().unwrap() {
+            PoolState::Live { server, .. } => Some(server.metrics.clone()),
+            PoolState::Paged => None,
+        })
+    }
+
+    /// Summed resident weight bytes of the live pools.
+    pub fn resident_bytes(&self) -> usize {
+        self.pools
+            .iter()
+            .map(|e| match &*e.state.lock().unwrap() {
+                PoolState::Live { resident, .. } => *resident,
+                PoolState::Paged => 0,
+            })
+            .sum()
+    }
+
+    /// The shared replica budget, when one is configured.
+    pub fn budget(&self) -> Option<&ReplicaBudget> {
+        self.budget.as_deref()
+    }
+
+    /// Requests currently admitted and not yet resolved.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Explicitly page a model out (tests/ops; the memory budget does
+    /// this automatically). Returns whether a live pool was dropped —
+    /// in-flight work on it drains first ([`Server`] shutdown is
+    /// graceful), pinned by any outstanding [`WireTicket`]'s own `Arc`.
+    pub fn page_out(&self, key: &str) -> Result<bool> {
+        Ok(self.page_out_slot(self.registry.resolve(key)?))
+    }
+
+    fn page_out_slot(&self, idx: usize) -> bool {
+        let entry = &self.pools[idx];
+        let Ok(mut st) = entry.state.try_lock() else {
+            return false;
+        };
+        match &*st {
+            PoolState::Live { .. } => {
+                *st = PoolState::Paged;
+                self.metrics.page_outs.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            PoolState::Paged => false,
+        }
+    }
+
+    /// Evict coldest-first until live weights fit the budget. `protect`
+    /// exempts the pool a request is being routed to, so routing can
+    /// never page out its own target. Uses `try_lock` throughout and
+    /// stops on the first failed eviction — a busy pool is never waited
+    /// on, and the budget is soft by design.
+    fn enforce_memory_budget(&self, protect: Option<usize>) {
+        if self.memory_budget == 0 {
+            return;
+        }
+        loop {
+            let mut total = 0usize;
+            let mut coldest: Option<(usize, u64)> = None;
+            for (i, e) in self.pools.iter().enumerate() {
+                let Ok(st) = e.state.try_lock() else { continue };
+                if let PoolState::Live { resident, .. } = &*st {
+                    total += *resident;
+                    if Some(i) != protect {
+                        let used = e.last_used.load(Ordering::Relaxed);
+                        if coldest.map_or(true, |(_, c)| used < c) {
+                            coldest = Some((i, used));
+                        }
+                    }
+                }
+            }
+            if total <= self.memory_budget {
+                return;
+            }
+            let Some((victim, _)) = coldest else { return };
+            if !self.page_out_slot(victim) {
+                return;
+            }
+        }
+    }
+
+    /// Touch the LRU stamp and return the pool's server, re-materializing
+    /// a paged-out pool first (with fingerprint verification).
+    fn ensure_live(&self, idx: usize) -> Result<Arc<Server>> {
+        let entry = &self.pools[idx];
+        entry
+            .last_used
+            .store(self.clock.fetch_add(1, Ordering::Relaxed) + 1, Ordering::Relaxed);
+        let server = {
+            let mut st = entry.state.lock().unwrap();
+            if let PoolState::Live { server, .. } = &*st {
+                return Ok(server.clone());
+            }
+            let (server, _, resident) = materialize(&entry.spec, Some(entry.fingerprint))
+                .map_err(|e| {
+                    anyhow::anyhow!("re-materializing model pool '{}': {e:#}", entry.key)
+                })?;
+            self.metrics.page_ins.fetch_add(1, Ordering::Relaxed);
+            *st = PoolState::Live { server: server.clone(), resident };
+            server
+        };
+        self.enforce_memory_budget(Some(idx));
+        Ok(server)
+    }
+
+    /// Admission control: tenant rate limit, then the in-flight cap.
+    fn admit(&self, tenant: u32, bytes: usize) -> Result<Option<InflightGuard>> {
+        if tenant != 0 {
+            if let Some(t) = self.tenants.iter().find(|t| t.id == tenant) {
+                if let Some(b) = &t.bucket {
+                    if !b.try_take(bytes as f64) {
+                        self.metrics.rate_limited.fetch_add(1, Ordering::Relaxed);
+                        anyhow::bail!(
+                            "tenant '{}' rate limit exceeded ({bytes}-byte request; \
+                             {:.0} B/s sustained, {:.0} B burst) — retry later",
+                            t.name,
+                            b.rate,
+                            b.burst
+                        );
+                    }
+                }
+            }
+        }
+        if self.max_inflight == 0 {
+            return Ok(None);
+        }
+        let mut cur = self.inflight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.max_inflight {
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!(
+                    "fleet saturated: {cur} requests in flight (cap {}) — load shed, \
+                     retry later",
+                    self.max_inflight
+                );
+            }
+            match self.inflight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Ok(Some(InflightGuard { counter: self.inflight.clone() })),
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// The only valid unrouted compress target: a single-model fleet.
+    fn sole_pool(&self) -> Result<usize> {
+        if self.pools.len() == 1 {
+            Ok(0)
+        } else {
+            anyhow::bail!(
+                "untagged compress request is ambiguous — fleet hosts {} models ({}); \
+                 route it with a model key",
+                self.pools.len(),
+                self.model_keys().join(", ")
+            )
+        }
+    }
+
+    /// Blocking convenience: compress `data` on the pool `key` routes to,
+    /// for `tenant`.
+    pub fn compress_for(&self, tenant: u32, key: &str, data: &[u8]) -> Result<Vec<u8>> {
+        let mut buf = self.pool.take(data.len());
+        buf.extend_from_slice(data);
+        self.submit_wire(tenant, Some(key), Op::Compress(buf), Priority::Bulk)?.wait()
+    }
+
+    /// Blocking convenience: decompress, routed by the container's own
+    /// recorded tag.
+    pub fn decompress(&self, container: &[u8]) -> Result<Vec<u8>> {
+        let mut buf = self.pool.take(container.len());
+        buf.extend_from_slice(container);
+        self.submit_wire(0, None, Op::Decompress(buf), Priority::Interactive)?.wait()
+    }
+}
+
+impl WireService for FleetServer {
+    fn wire_pool(&self) -> &BytePool {
+        &self.pool
+    }
+
+    fn bind_tenant(&self, name: &str) -> Result<u32> {
+        if name.is_empty() {
+            return Ok(0);
+        }
+        if self.tenants.is_empty() {
+            // Open fleet: any name gets its own WFQ lane at weight 1.
+            return Ok(hashed_tenant(name));
+        }
+        match self.tenants.iter().find(|t| t.name == name) {
+            Some(t) => Ok(t.id),
+            None => anyhow::bail!(
+                "unknown tenant '{name}' — configured tenants: {}",
+                self.tenants.iter().map(|t| t.name.as_str()).collect::<Vec<_>>().join(", ")
+            ),
+        }
+    }
+
+    fn submit_wire(
+        &self,
+        tenant: u32,
+        route: Option<&str>,
+        op: Op,
+        priority: Priority,
+    ) -> Result<WireTicket> {
+        let idx = match (route, &op) {
+            (Some(r), _) => self.registry.resolve(r)?,
+            // Unrouted decompress: the container names its own engine.
+            (None, Op::Decompress(p)) => self.registry.resolve(Container::peek_model_name(p)?)?,
+            (None, Op::Compress(_)) => self.sole_pool()?,
+        };
+        let bytes = match &op {
+            Op::Compress(p) | Op::Decompress(p) => p.len(),
+        };
+        let guard = self.admit(tenant, bytes)?;
+        let server = self.ensure_live(idx)?;
+        let ticket = server.submit_for(tenant, op, priority)?;
+        Ok(WireTicket { ticket, server: Some(server), guard })
+    }
+
+    fn open_wire_stream(&self, tenant: u32, route: Option<&str>) -> Result<WireStream> {
+        let idx = match route {
+            Some(r) => self.registry.resolve(r)?,
+            None => self.sole_pool()?,
+        };
+        // Streams admit at zero cost (their size is unknown at open); the
+        // in-flight cap still applies.
+        let guard = self.admit(tenant, 0)?;
+        let server = self.ensure_live(idx)?;
+        let handle = server.open_stream_for(tenant)?;
+        Ok(WireStream { handle, server: Some(server), guard })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn route_matching_accepts_tag_name_and_engine_equivalents() {
+        let tag = "nano:0:q8:deadbeef:fse";
+        assert!(route_matches(tag, tag));
+        assert!(route_matches("nano", tag));
+        assert!(route_matches("nano:0:q8:deadbeef", tag), "codec suffix ignored");
+        assert!(!route_matches("medium", tag));
+        assert!(!route_matches("nano:0", tag), "f32 route must not hit a q8 engine");
+        assert!(!route_matches("", tag));
+    }
+
+    #[test]
+    fn token_bucket_enforces_rate_and_burst() {
+        let b = TenantBucket::new(1_000_000.0, 100.0);
+        assert!(b.try_take(60.0));
+        assert!(b.try_take(40.0));
+        // Bucket drained; an immediate third request is refused.
+        assert!(!b.try_take(50.0));
+        // Refill at 1 MB/s makes 50 bytes available in well under the
+        // test's patience.
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while !b.try_take(50.0) {
+            assert!(Instant::now() < deadline, "bucket never refilled");
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        // A request larger than the burst can never pass.
+        assert!(!b.try_take(1000.0));
+    }
+
+    #[test]
+    fn inflight_guard_returns_slot_on_drop() {
+        let counter = Arc::new(AtomicUsize::new(1));
+        let g = InflightGuard { counter: counter.clone() };
+        assert_eq!(counter.load(Ordering::Relaxed), 1);
+        drop(g);
+        assert_eq!(counter.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn hashed_tenants_are_stable_and_nonzero() {
+        assert_eq!(hashed_tenant("alice"), hashed_tenant("alice"));
+        assert_ne!(hashed_tenant("alice"), hashed_tenant("bob"));
+        assert_ne!(hashed_tenant("alice"), 0);
+    }
+}

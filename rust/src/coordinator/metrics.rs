@@ -80,6 +80,11 @@ pub struct Metrics {
     /// Autoscale actions taken (a grow only counts once its worker is up).
     pub scale_ups: AtomicU64,
     pub scale_downs: AtomicU64,
+    /// Grow decisions denied because the shared fleet
+    /// [`ReplicaBudget`](crate::coordinator::ReplicaBudget) had no free
+    /// permit — the fleet-level arbitration signal (always 0 without a
+    /// budget).
+    pub grows_denied: AtomicU64,
     /// Low/high watermarks of the replica gauge over the server's life —
     /// the bound the autoscale tests assert. `replicas_low` starts at
     /// `u64::MAX` ("never set") so a genuine gauge value of 0 — every
@@ -218,6 +223,11 @@ impl Metrics {
         self.set_replicas(now_live);
     }
 
+    /// A grow decision was vetoed by the shared fleet replica budget.
+    pub fn record_grow_denied(&self) {
+        self.grows_denied.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Human-readable snapshot.
     pub fn report(&self) -> String {
         let (c_p50, c_p99) = self.latency_p50_p99_ms(WorkKind::Compress);
@@ -227,7 +237,7 @@ impl Metrics {
         let tps = self.tokens_per_sec.lock().unwrap();
         let mut s = format!(
             "requests={} chunks={} batches={} bytes_in={} bytes_out={} tokens={} errors={} \
-             replicas={} scale_ups={} scale_downs={} \
+             replicas={} scale_ups={} scale_downs={} grows_denied={} \
              latency_ms[mean={:.2} max={:.2}] batch_fill[mean={:.2}] \
              engine_tok_per_s[mean={:.0} max={:.0}] \
              compress_ms[p50={:.2} p99={:.2}] decompress_ms[p50={:.2} p99={:.2}]",
@@ -241,6 +251,7 @@ impl Metrics {
             self.replicas.load(Ordering::Relaxed),
             self.scale_ups.load(Ordering::Relaxed),
             self.scale_downs.load(Ordering::Relaxed),
+            self.grows_denied.load(Ordering::Relaxed),
             lat.mean(),
             lat.max(),
             occ.mean(),

@@ -27,16 +27,30 @@
 //! on one persistent connection) with the legacy serial protocol
 //! auto-detected for old clients.
 //!
+//! [`fleet`] stacks a multi-model layer on top: a [`fleet::FleetServer`]
+//! hosts one replica pool per model, routes requests by model key or
+//! container tag through a [`crate::compress::ModelRegistry`], arbitrates
+//! every pool's autoscaler against ONE global [`router::ReplicaBudget`],
+//! pages cold pools out under a memory budget (fingerprint-verified
+//! reload), and layers tenant QoS on the batcher's weighted-fair queues —
+//! with rate limits and load shedding that surface as clean wire errors.
+//! See `docs/fleet.md` for the contract.
+//!
 //! No tokio in this environment: the coordinator is built on std threads +
 //! mpsc channels — one scheduler plus one OS thread per engine replica,
 //! which is exactly the right weight for CPU-bound engines.
 
 pub mod batcher;
+pub mod fleet;
 pub mod metrics;
 pub mod router;
 pub mod wire;
 
 pub use batcher::{BatchPolicy, DynamicBatcher, Priority, WorkItem, WorkKind};
+pub use fleet::{
+    FleetConfig, FleetMetrics, FleetModelSpec, FleetServer, TenantSpec, WeightsLoader,
+    WireService, WireStream, WireTicket,
+};
 pub use metrics::{Metrics, WorkerMetrics};
-pub use router::{Op, ScaleHook, Server, ServerConfig, StreamHandle, Ticket};
+pub use router::{Op, ReplicaBudget, ScaleHook, Server, ServerConfig, StreamHandle, Ticket};
 pub use wire::{Client, MuxClient};

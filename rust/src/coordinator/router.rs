@@ -64,10 +64,139 @@ use crate::lm::executor::ExecutorKind;
 use crate::util::{crc32, BytePool, Crc32, PooledBuf};
 use crate::Result;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// A fleet-wide replica budget: one shared pool of replica permits
+/// arbitrated across every [`Server`] that holds a clone of the `Arc`.
+/// This is what turns the per-pool [`Autoscaler`] into a fleet-level one:
+/// each pool still runs its own (pure, unit-tested) scaling brain, but a
+/// Grow decision only lands if a permit is free — so the sum of live and
+/// starting replicas across all pools never exceeds the cap, no matter
+/// which pools' scalers fire. Shrinks, worker deaths, refused replicas
+/// and shutdowns return permits, which other pools' next evaluation can
+/// claim. Denied grows are counted in
+/// [`Metrics::grows_denied`](crate::coordinator::Metrics).
+#[derive(Debug)]
+pub struct ReplicaBudget {
+    cap: usize,
+    used: AtomicUsize,
+}
+
+impl ReplicaBudget {
+    pub fn new(cap: usize) -> Arc<ReplicaBudget> {
+        Arc::new(ReplicaBudget { cap, used: AtomicUsize::new(0) })
+    }
+
+    /// Total permits.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Permits currently held across all pools.
+    pub fn used(&self) -> usize {
+        self.used.load(Ordering::SeqCst)
+    }
+
+    /// Claim `n` permits atomically; `false` (claiming nothing) if fewer
+    /// than `n` are free.
+    pub fn try_acquire(&self, n: usize) -> bool {
+        self.acquire_up_to_min(n, n) == n
+    }
+
+    /// Claim up to `n` permits (possibly fewer, possibly zero), returning
+    /// how many were granted.
+    pub fn acquire_up_to(&self, n: usize) -> usize {
+        self.acquire_up_to_min(n, 0)
+    }
+
+    fn acquire_up_to_min(&self, n: usize, min: usize) -> usize {
+        let mut used = self.used.load(Ordering::SeqCst);
+        loop {
+            let free = self.cap.saturating_sub(used);
+            let grant = free.min(n);
+            if grant < min {
+                return 0;
+            }
+            match self.used.compare_exchange(
+                used,
+                used + grant,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => return grant,
+                Err(actual) => used = actual,
+            }
+        }
+    }
+
+    /// Return `n` permits.
+    pub fn release(&self, n: usize) {
+        let prev = self.used.fetch_sub(n, Ordering::SeqCst);
+        debug_assert!(prev >= n, "budget release underflow");
+    }
+}
+
+/// Scheduler-side view of the optional shared budget: tracks how many
+/// permits THIS pool holds so every exit path can settle them exactly.
+struct BudgetHold {
+    budget: Option<Arc<ReplicaBudget>>,
+    held: usize,
+}
+
+impl BudgetHold {
+    fn new(budget: Option<Arc<ReplicaBudget>>) -> BudgetHold {
+        BudgetHold { budget, held: 0 }
+    }
+
+    /// Claim up to `n` startup permits; without a budget, everything is
+    /// granted.
+    fn acquire_up_to(&mut self, n: usize) -> usize {
+        match &self.budget {
+            None => n,
+            Some(b) => {
+                let granted = b.acquire_up_to(n);
+                self.held += granted;
+                granted
+            }
+        }
+    }
+
+    /// Claim one grow permit.
+    fn try_acquire_one(&mut self) -> bool {
+        match &self.budget {
+            None => true,
+            Some(b) => {
+                let ok = b.try_acquire(1);
+                if ok {
+                    self.held += 1;
+                }
+                ok
+            }
+        }
+    }
+
+    /// Return one permit (replica retired, died, or refused).
+    fn release_one(&mut self) {
+        if let Some(b) = &self.budget {
+            if self.held > 0 {
+                b.release(1);
+                self.held -= 1;
+            }
+        }
+    }
+
+    fn release_all(&mut self) {
+        if let Some(b) = &self.budget {
+            if self.held > 0 {
+                b.release(self.held);
+                self.held = 0;
+            }
+        }
+    }
+}
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -131,6 +260,17 @@ pub struct ServerConfig {
     /// take a plain allocation; output bytes are identical either way
     /// (pinned by `tests/integration_server.rs`).
     pub pooling: bool,
+    /// Optional fleet-wide replica budget shared with sibling pools.
+    /// Startup claims as many permits as it can for the initial replicas
+    /// (erroring only if ZERO are free), and every autoscale Grow needs a
+    /// free permit; shrinks/deaths return theirs. `None` = this pool
+    /// arbitrates nothing (single-server behavior, unchanged).
+    pub replica_budget: Option<Arc<ReplicaBudget>>,
+    /// Tenant WFQ weights `(tenant id, weight)` seeded into the
+    /// [`DynamicBatcher`]. Unlisted tenants (including the default tenant
+    /// `0`) weigh 1. Pure scheduling knob: which tenant a chunk belongs
+    /// to can never change its bytes.
+    pub tenants: Vec<(u32, u64)>,
     pub policy: BatchPolicy,
 }
 
@@ -150,6 +290,8 @@ impl Default for ServerConfig {
             panel_layout: true,
             codec: Codec::Range,
             pooling: true,
+            replica_budget: None,
+            tenants: Vec::new(),
             policy: BatchPolicy::default(),
         }
     }
@@ -209,6 +351,7 @@ struct Request {
     id: u64,
     op: Op,
     priority: Priority,
+    tenant: u32,
     respond: SyncSender<Result<Vec<u8>>>,
     started: Instant,
 }
@@ -222,7 +365,7 @@ enum ToScheduler {
     /// A streaming compress session opened: reassembly state is created
     /// with an unknown chunk count; chunks follow as the client produces
     /// them.
-    StreamOpen { id: u64, respond: SyncSender<Result<Vec<u8>>>, started: Instant },
+    StreamOpen { id: u64, tenant: u32, respond: SyncSender<Result<Vec<u8>>>, started: Instant },
     /// One stream chunk (already cut at the engine's stream granularity by
     /// the [`StreamHandle`]); goes straight into the batcher, so batching
     /// starts before the input has finished arriving.
@@ -276,6 +419,9 @@ struct Pending {
     respond: SyncSender<Result<Vec<u8>>>,
     started: Instant,
     kind: WorkKind,
+    /// Owning tenant: stamped into every work item this request feeds the
+    /// batcher (streams learn it at open; one-shots at admit).
+    tenant: u32,
     /// Results by chunk index (compress: payloads; decompress: raw bytes).
     /// For streams this grows as chunks arrive.
     results: Vec<Option<Vec<u8>>>,
@@ -411,8 +557,16 @@ impl Server {
         self.submit_with(op, priority)
     }
 
-    /// [`Self::submit`] with an explicit scheduling class.
+    /// [`Self::submit`] with an explicit scheduling class (default
+    /// tenant).
     pub fn submit_with(&self, op: Op, priority: Priority) -> Result<Ticket> {
+        self.submit_for(0, op, priority)
+    }
+
+    /// [`Self::submit_with`] on behalf of a tenant: the request's chunks
+    /// ride that tenant's WFQ lane in the batcher. Tenant ids are a pure
+    /// scheduling label — the produced bytes are identical for any id.
+    pub fn submit_for(&self, tenant: u32, op: Op, priority: Priority) -> Result<Ticket> {
         let (rtx, rrx) = sync_channel(1);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.tx
@@ -420,6 +574,7 @@ impl Server {
                 id,
                 op,
                 priority,
+                tenant,
                 respond: rtx,
                 started: Instant::now(),
             }))
@@ -435,10 +590,16 @@ impl Server {
     /// the final container — byte-identical to [`Self::compress`] of the
     /// concatenated input.
     pub fn open_stream(&self) -> Result<StreamHandle> {
+        self.open_stream_for(0)
+    }
+
+    /// [`Self::open_stream`] on behalf of a tenant (see
+    /// [`Self::submit_for`]).
+    pub fn open_stream_for(&self, tenant: u32) -> Result<StreamHandle> {
         let (rtx, rrx) = sync_channel(1);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.tx
-            .send(ToScheduler::StreamOpen { id, respond: rtx, started: Instant::now() })
+            .send(ToScheduler::StreamOpen { id, tenant, respond: rtx, started: Instant::now() })
             .map_err(|_| anyhow::anyhow!("server is shut down"))?;
         Ok(StreamHandle {
             tx: self.tx.clone(),
@@ -916,6 +1077,21 @@ fn scheduler_main<F>(
     F: Fn() -> Result<LlmCompressor> + Send + Sync + 'static,
 {
     let (min_replicas, initial, max_replicas) = pool_bounds(&config);
+    // Fleet budget: claim permits for the initial replicas. A contended
+    // budget can grant fewer than asked (the pool starts smaller and the
+    // autoscaler grows it later, permits allowing); zero free permits is
+    // a startup error — a pool with no replica can serve nothing.
+    let mut budget = BudgetHold::new(config.replica_budget.clone());
+    let initial = match budget.acquire_up_to(initial) {
+        0 => {
+            let cap = config.replica_budget.as_ref().map(|b| b.cap()).unwrap_or(0);
+            let _ = ready_tx.send(Err(anyhow::anyhow!(
+                "fleet replica budget exhausted: 0 of {cap} permits free at pool startup"
+            )));
+            return;
+        }
+        granted => granted,
+    };
     // Spawn the initial workers; each gets a 1-deep private job channel
     // (a worker never holds more than one batch) and reports completions
     // on the scheduler's own intake channel. The remaining slots up to
@@ -975,6 +1151,7 @@ fn scheduler_main<F>(
                 let _ = h.join();
             }
         }
+        budget.release_all();
         return;
     }
     let info = info.expect("initial replicas >= 1 reported ready");
@@ -989,8 +1166,12 @@ fn scheduler_main<F>(
         eprintln!("llmzip-sched: autoscale disabled — PJRT replicas are static");
     }
     let mut scaler = Autoscaler::new(min_replicas, max_replicas, lanes, &config);
+    let mut batcher = DynamicBatcher::new(BatchPolicy { lanes, ..config.policy });
+    for (tenant, weight) in &config.tenants {
+        batcher.set_tenant_weight(*tenant, *weight);
+    }
     let mut st = SchedState {
-        batcher: DynamicBatcher::new(BatchPolicy { lanes, ..config.policy }),
+        batcher,
         pending: HashMap::new(),
         slots,
         idle: (0..initial).rev().collect(),
@@ -1024,7 +1205,9 @@ fn scheduler_main<F>(
                 .unwrap_or(Duration::from_millis(10))
         };
         match rx.recv_timeout(timeout) {
-            Ok(msg) => handle_message(msg, &info, split, &mut st, &metrics, &on_scale, &pool),
+            Ok(msg) => {
+                handle_message(msg, &info, split, &mut st, &metrics, &on_scale, &pool, &mut budget)
+            }
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => {
                 // Unreachable in practice: the scheduler holds its own
@@ -1035,7 +1218,7 @@ fn scheduler_main<F>(
         }
         // Drain without blocking to fill batches before dispatching.
         while let Ok(msg) = rx.try_recv() {
-            handle_message(msg, &info, split, &mut st, &metrics, &on_scale, &pool);
+            handle_message(msg, &info, split, &mut st, &metrics, &on_scale, &pool, &mut budget);
         }
         // Shutdown drains in-flight work, but a stream whose client never
         // finished can never complete — fail it instead of wedging the
@@ -1072,6 +1255,7 @@ fn scheduler_main<F>(
                 if let Some(h) = st.slots[worker].handle.take() {
                     st.graveyard.push(h);
                 }
+                budget.release_one();
                 metrics.record_error();
                 let live = live_count(&st.slots);
                 metrics.set_replicas(live);
@@ -1115,19 +1299,29 @@ fn scheduler_main<F>(
                             )
                         })
                     {
-                        if let Some(h) = st.slots[id].handle.take() {
-                            st.graveyard.push(h);
-                        }
-                        match spawn_worker(id, &factory, &worker_tx, None, &metrics) {
-                            Ok(slot) => st.slots[id] = slot,
-                            Err(e) => {
-                                // Thread limit hit mid-burst: contain it
-                                // exactly like a failed factory — the slot
-                                // stays free and a later evaluation
-                                // retries after the cooldown.
-                                st.slots[id] = Slot::empty();
-                                metrics.record_error();
-                                eprintln!("llmzip-sched: {e:#}");
+                        // Fleet arbitration: a Grow only lands with a free
+                        // budget permit. Denials are counted, not errors —
+                        // another pool is using the capacity, and a later
+                        // evaluation retries once permits free up.
+                        if !budget.try_acquire_one() {
+                            metrics.record_grow_denied();
+                        } else {
+                            if let Some(h) = st.slots[id].handle.take() {
+                                st.graveyard.push(h);
+                            }
+                            match spawn_worker(id, &factory, &worker_tx, None, &metrics) {
+                                Ok(slot) => st.slots[id] = slot,
+                                Err(e) => {
+                                    // Thread limit hit mid-burst: contain
+                                    // it exactly like a failed factory —
+                                    // the slot stays free and a later
+                                    // evaluation retries after the
+                                    // cooldown.
+                                    st.slots[id] = Slot::empty();
+                                    budget.release_one();
+                                    metrics.record_error();
+                                    eprintln!("llmzip-sched: {e:#}");
+                                }
                             }
                         }
                     }
@@ -1145,6 +1339,7 @@ fn scheduler_main<F>(
                         if let Some(h) = st.slots[id].handle.take() {
                             st.graveyard.push(h);
                         }
+                        budget.release_one();
                         let live = live_count(&st.slots);
                         metrics.record_scale(false, live);
                         if let Some(hook) = &on_scale {
@@ -1168,6 +1363,8 @@ fn scheduler_main<F>(
     for h in st.graveyard {
         let _ = h.join();
     }
+    // Hand every remaining permit back to the fleet.
+    budget.release_all();
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -1179,18 +1376,20 @@ fn handle_message(
     metrics: &Metrics,
     on_scale: &Option<ScaleHook>,
     pool: &BytePool,
+    budget: &mut BudgetHold,
 ) {
     match msg {
         ToScheduler::Request(req) => {
             admit(req, info, split, &mut st.batcher, &mut st.pending, metrics, pool)
         }
-        ToScheduler::StreamOpen { id, respond, started } => {
+        ToScheduler::StreamOpen { id, tenant, respond, started } => {
             st.pending.insert(
                 id,
                 Pending {
                     respond,
                     started,
                     kind: WorkKind::Compress,
+                    tenant,
                     results: Vec::new(),
                     remaining: 0,
                     chunk_sizes: Vec::new(),
@@ -1218,11 +1417,13 @@ fn handle_message(
             p.chunk_sizes.push(data.len() as u32);
             p.remaining += 1;
             p.bytes_in += data.len();
+            let tenant = p.tenant;
             st.batcher.push(WorkItem {
                 request_id: id,
                 chunk_index: index,
                 kind: WorkKind::Compress,
                 priority: Priority::Bulk,
+                tenant,
                 data,
                 record: None,
                 codec: info.codec,
@@ -1266,6 +1467,7 @@ fn handle_message(
             {
                 st.slots[worker].state = SlotState::Retired;
                 st.slots[worker].job_tx = None;
+                budget.release_one();
                 metrics.record_error();
                 eprintln!(
                     "llmzip-sched: grown worker {worker} reported engine '{}' != pool '{}' — \
@@ -1287,6 +1489,7 @@ fn handle_message(
             // later evaluation can retry, and surface the error.
             st.slots[worker].state = SlotState::Empty;
             st.slots[worker].job_tx = None;
+            budget.release_one();
             metrics.record_error();
             eprintln!("llmzip-sched: growing engine worker {worker} failed: {e:#}");
         }
@@ -1317,6 +1520,7 @@ fn admit(
                 respond: req.respond,
                 started: req.started,
                 kind: WorkKind::Compress,
+                tenant: req.tenant,
                 results: vec![None; n],
                 remaining: n,
                 chunk_sizes: data.chunks(split.stream_bytes).map(|c| c.len() as u32).collect(),
@@ -1353,6 +1557,7 @@ fn admit(
                     chunk_index: 0,
                     kind: WorkKind::Compress,
                     priority: req.priority,
+                    tenant: req.tenant,
                     data,
                     record: None,
                     codec: info.codec,
@@ -1367,6 +1572,7 @@ fn admit(
                         chunk_index: i as u32,
                         kind: WorkKind::Compress,
                         priority: req.priority,
+                        tenant: req.tenant,
                         data: item,
                         record: None,
                         codec: info.codec,
@@ -1445,6 +1651,7 @@ fn admit(
                     respond: req.respond,
                     started: req.started,
                     kind: WorkKind::Decompress,
+                    tenant: req.tenant,
                     results: vec![None; n],
                     remaining: items.len(),
                     chunk_sizes: vec![],
@@ -1471,6 +1678,7 @@ fn admit(
                         chunk_index: i as u32,
                         kind: WorkKind::Decompress,
                         priority: req.priority,
+                        tenant: req.tenant,
                         data: payload,
                         record: Some(rec),
                         codec,
@@ -2211,5 +2419,108 @@ mod tests {
         // And the survivor still serves.
         let z = server.compress(&data).unwrap();
         assert_eq!(server.decompress(&z).unwrap(), data);
+    }
+
+    #[test]
+    fn replica_budget_grants_partially_and_atomically() {
+        let b = ReplicaBudget::new(3);
+        assert_eq!((b.cap(), b.used()), (3, 0));
+        // All-or-nothing: asking for more than is free claims NOTHING.
+        assert!(!b.try_acquire(4));
+        assert_eq!(b.used(), 0);
+        assert!(b.try_acquire(2));
+        // Best-effort: grants what is free, down to zero.
+        assert_eq!(b.acquire_up_to(5), 1);
+        assert_eq!(b.acquire_up_to(5), 0);
+        assert_eq!(b.used(), 3);
+        b.release(2);
+        assert!(b.try_acquire(1));
+        assert_eq!(b.used(), 2);
+        b.release(2);
+        assert_eq!(b.used(), 0);
+    }
+
+    #[test]
+    fn replica_budget_is_race_free_across_pools() {
+        // 8 contenders hammer a 4-permit budget; at no observable point
+        // may more than 4 permits be out, and the final balance is zero.
+        let b = ReplicaBudget::new(4);
+        let peak = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let b = b.clone();
+                let peak = peak.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..200 {
+                        if b.try_acquire(1) {
+                            peak.fetch_max(b.used(), Ordering::SeqCst);
+                            assert!(b.used() <= 4, "budget overshot its cap");
+                            b.release(1);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(b.used(), 0, "permits leaked");
+        assert!(peak.load(Ordering::SeqCst) >= 1);
+    }
+
+    #[test]
+    fn pool_startup_respects_a_contended_budget() {
+        // A 2-permit budget with 1 permit already held elsewhere: a pool
+        // asking for 2 starting replicas gets granted 1 and RUNS with it.
+        let budget = ReplicaBudget::new(2);
+        assert!(budget.try_acquire(1));
+        let server = Server::start(
+            || {
+                let cfg = by_name("nano")?;
+                LlmCompressor::from_weights(cfg, Weights::random(cfg, 21), 32, 2)
+            },
+            ServerConfig {
+                chunk_tokens: 32,
+                replicas: 2,
+                min_replicas: 1,
+                max_replicas: 2,
+                replica_budget: Some(budget.clone()),
+                policy: BatchPolicy { lanes: 2, max_wait: Duration::from_millis(2) },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(budget.used(), 2, "pool claimed the one free permit");
+        assert_eq!(server.metrics.replicas.load(Ordering::Relaxed), 1);
+        let data = crate::textgen::quick_sample(300, 4);
+        let z = server.compress(&data).unwrap();
+        assert_eq!(server.decompress(&z).unwrap(), data);
+        drop(server);
+        assert_eq!(budget.used(), 1, "shutdown returned the pool's permits");
+        budget.release(1);
+    }
+
+    #[test]
+    fn pool_startup_fails_cleanly_on_an_exhausted_budget() {
+        let budget = ReplicaBudget::new(1);
+        assert!(budget.try_acquire(1));
+        let err = Server::start(
+            || {
+                let cfg = by_name("nano")?;
+                LlmCompressor::from_weights(cfg, Weights::random(cfg, 21), 32, 2)
+            },
+            ServerConfig {
+                chunk_tokens: 32,
+                replica_budget: Some(budget.clone()),
+                policy: BatchPolicy { lanes: 2, max_wait: Duration::from_millis(2) },
+                ..Default::default()
+            },
+        )
+        .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("replica budget exhausted"),
+            "unexpected error: {err:#}"
+        );
+        assert_eq!(budget.used(), 1, "failed startup must not leak or steal permits");
     }
 }

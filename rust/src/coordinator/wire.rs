@@ -1,7 +1,10 @@
 //! TCP wire protocols for the compression service.
 //!
 //! Two protocols share one listening port; the first byte a client sends
-//! picks the session kind ([`serve_connection`] auto-detects):
+//! picks the session kind ([`serve_connection`] auto-detects). The server
+//! side of both speaks through the [`WireService`] seam, so one accept
+//! loop serves a single-model [`crate::coordinator::Server`] or a
+//! multi-model [`crate::coordinator::FleetServer`] identically.
 //!
 //! ## v1 — serial request/response (legacy clients)
 //! ```text
@@ -18,34 +21,43 @@
 //! frame: type u8 | req_id u32 | len u32 | payload
 //! ```
 //! Client→server types: [`MSG_COMPRESS`], [`MSG_DECOMPRESS`],
-//! [`MSG_COMPRESS_INTERACTIVE`], and the streaming trio
-//! [`MSG_STREAM_OPEN`] / [`MSG_STREAM_CHUNK`] / [`MSG_STREAM_FINISH`]
-//! (chunked payload upload: the server starts batching the moment the
-//! first chunk lands, long before the input finishes arriving).
-//! Server→client: [`MSG_OK`] / [`MSG_ERR`], tagged with the request id —
-//! responses interleave in COMPLETION order, not submission order, which
-//! is the whole point: a fast interactive op overtakes a bulk one on the
-//! same socket instead of queueing behind it head-of-line.
+//! [`MSG_COMPRESS_INTERACTIVE`], the streaming trio [`MSG_STREAM_OPEN`]
+//! / [`MSG_STREAM_CHUNK`] / [`MSG_STREAM_FINISH`] (chunked payload
+//! upload: the server starts batching the moment the first chunk lands),
+//! and the fleet pair [`MSG_SET_TENANT`] (bind the connection's QoS
+//! identity) / [`MSG_COMPRESS_TAGGED`] (compress routed to a named model
+//! pool; `MSG_STREAM_OPEN`'s payload optionally carries the same route
+//! key). Server→client: [`MSG_OK`] / [`MSG_ERR`], tagged with the
+//! request id — responses interleave in COMPLETION order, not submission
+//! order, which is the whole point: a fast interactive op overtakes a
+//! bulk one on the same socket instead of queueing behind it
+//! head-of-line. Admission failures (unknown route, tenant rate limit,
+//! fleet load shed) come back as ordinary [`MSG_ERR`] frames — the
+//! connection survives them.
 //!
 //! `req_id` is client-chosen and only needs to be unique among that
-//! connection's in-flight requests. Every frame payload is capped at
-//! [`MAX_PAYLOAD`]; beyond that, in-flight memory is bounded by what the
-//! client chooses to submit before collecting responses (the scheduler
-//! admits queued work eagerly, and each outstanding one-shot ticket is
-//! parked on a waiter thread) — flow control across requests is the
-//! client's job, exactly as with the thread-per-connection v1 protocol.
+//! connection's in-flight requests ([`MuxClient`] enforces exactly that —
+//! see [`IdAlloc`]). Every frame payload is capped at [`MAX_PAYLOAD`],
+//! and every WRITE path validates its length before emitting a single
+//! header byte: a payload the u32 length field cannot carry is refused
+//! with a clear error, never silently truncated into a corrupt frame.
+//! Beyond that, in-flight memory is bounded by what the client chooses
+//! to submit before collecting responses — flow control across requests
+//! is the client's job, exactly as with the thread-per-connection v1
+//! protocol.
 //!
-//! The server side maps frames 1:1 onto the coordinator's ticketed API
-//! ([`Server::submit_with`] / [`Server::open_stream`]); each ticket is
-//! resolved on a small waiter thread that forwards the result to the
-//! connection's single writer thread. [`MuxClient`] is the matching
-//! client (used by tests, benches and examples); [`Client`] speaks v1.
+//! The server side maps frames 1:1 onto the service's ticketed API; each
+//! ticket is resolved on a small waiter thread that forwards the result
+//! to the connection's single writer thread. [`MuxClient`] is the
+//! matching client (used by tests, benches and examples); [`Client`]
+//! speaks v1.
 
 use crate::coordinator::batcher::Priority;
-use crate::coordinator::router::{Op, Server, StreamHandle};
+use crate::coordinator::fleet::{WireService, WireTicket};
+use crate::coordinator::router::Op;
 use crate::util::{BytePool, PooledBuf};
 use crate::Result;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{IoSlice, Read, Write};
 use std::net::TcpStream;
 use std::sync::mpsc::{channel, Sender};
@@ -68,8 +80,35 @@ pub const MSG_COMPRESS_INTERACTIVE: u8 = 3;
 pub const MSG_STREAM_OPEN: u8 = 0x10;
 pub const MSG_STREAM_CHUNK: u8 = 0x11;
 pub const MSG_STREAM_FINISH: u8 = 0x12;
+/// Bind the connection's tenant identity (payload: UTF-8 tenant name;
+/// empty = the anonymous default). Acked with an empty [`MSG_OK`].
+pub const MSG_SET_TENANT: u8 = 0x20;
+/// Compress routed to a model pool. Payload: `priority u8 (0=bulk,
+/// 1=interactive) | key_len u16 LE | route key | data`.
+pub const MSG_COMPRESS_TAGGED: u8 = 0x21;
 pub const MSG_OK: u8 = 0x80;
 pub const MSG_ERR: u8 = 0x81;
+
+/// Validate a payload length against the u32 frame field and the
+/// protocol cap BEFORE any header byte reaches the wire. The old
+/// `payload.len() as u32` silently truncated at 4 GiB, emitting a frame
+/// whose length field lied — the peer would misparse every byte after
+/// it. Refusing up front keeps the stream parseable: the caller turns
+/// the error into a response the peer can read.
+fn check_wire_len(len: usize) -> Result<u32> {
+    if len > MAX_PAYLOAD {
+        anyhow::bail!("payload too large for wire frame: {len} bytes (cap {MAX_PAYLOAD})");
+    }
+    Ok(len as u32)
+}
+
+/// Cap an error message to something the frame can always carry. Byte
+/// truncation may split a UTF-8 sequence; receivers render lossily.
+fn error_payload(e: &anyhow::Error) -> Vec<u8> {
+    let mut msg = format!("{e:#}").into_bytes();
+    msg.truncate(MAX_PAYLOAD);
+    msg
+}
 
 /// Write one frame (header + payload) with vectored I/O and NO flush.
 /// The 9-byte header and the payload reach the kernel in a single
@@ -78,10 +117,11 @@ pub const MSG_ERR: u8 = 0x81;
 /// loop keeps this on stable Rust (`Write::write_all_vectored` is
 /// unstable) and handles short writes byte-exactly.
 fn write_frame_vectored(w: &mut impl Write, typ: u8, req_id: u32, payload: &[u8]) -> Result<()> {
+    let len = check_wire_len(payload.len())?;
     let mut hdr = [0u8; 9];
     hdr[0] = typ;
     hdr[1..5].copy_from_slice(&req_id.to_le_bytes());
-    hdr[5..9].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    hdr[5..9].copy_from_slice(&len.to_le_bytes());
     let mut hpos = 0usize; // bytes of the header already written
     let mut ppos = 0usize; // bytes of the payload already written
     while hpos < hdr.len() || ppos < payload.len() {
@@ -154,8 +194,9 @@ fn read_frame(r: &mut impl Read, pool: &BytePool) -> Result<Option<(u8, u32, Poo
 }
 
 /// Serve one TCP connection, auto-detecting the protocol from its first
-/// byte. Returns when the client disconnects.
-pub fn serve_connection(mut stream: TcpStream, server: &Server) -> Result<()> {
+/// byte. Returns when the client disconnects. `service` is either a
+/// single-model `Server` or a `FleetServer` (both coerce).
+pub fn serve_connection(mut stream: TcpStream, service: &dyn WireService) -> Result<()> {
     let mut first = [0u8; 1];
     match stream.read_exact(&mut first) {
         Ok(()) => {}
@@ -169,16 +210,22 @@ pub fn serve_connection(mut stream: TcpStream, server: &Server) -> Result<()> {
             if rest != V2_HANDSHAKE[1..] {
                 anyhow::bail!("bad protocol handshake");
             }
-            serve_v2(stream, server)
+            serve_v2(stream, service)
         }
-        op @ (MSG_COMPRESS | MSG_DECOMPRESS) => serve_v1(stream, server, Some(op)),
+        op @ (MSG_COMPRESS | MSG_DECOMPRESS) => serve_v1(stream, service, Some(op)),
         other => anyhow::bail!("unknown protocol opening byte {other:#04x}"),
     }
 }
 
 /// The v1 serial loop. `first_op` is the already-consumed op byte of the
-/// first request (protocol sniffing ate it).
-fn serve_v1(mut stream: TcpStream, server: &Server, mut first_op: Option<u8>) -> Result<()> {
+/// first request (protocol sniffing ate it). v1 predates tenancy and
+/// routing: requests run as the anonymous tenant on the default route
+/// (decompress still routes by the container's own tag on a fleet).
+fn serve_v1(
+    mut stream: TcpStream,
+    service: &dyn WireService,
+    mut first_op: Option<u8>,
+) -> Result<()> {
     loop {
         let op = match first_op.take() {
             Some(op) => op,
@@ -198,27 +245,34 @@ fn serve_v1(mut stream: TcpStream, server: &Server, mut first_op: Option<u8>) ->
             anyhow::bail!("request too large: {len}");
         }
         // Same bounded-allocation discipline as the v2 frame reader.
-        let mut payload = server.pool().take(len.min(FRAME_PREALLOC));
+        let mut payload = service.wire_pool().take(len.min(FRAME_PREALLOC));
         let got = (&mut stream).take(len as u64).read_to_end(&mut payload)?;
         if got < len {
             anyhow::bail!("connection ended after {got} of {len} declared payload bytes");
         }
         let result = match op {
-            MSG_COMPRESS => server.compress(&payload),
-            MSG_DECOMPRESS => server.decompress(&payload),
+            MSG_COMPRESS => service
+                .submit_wire(0, None, Op::Compress(payload), Priority::Bulk)
+                .and_then(WireTicket::wait),
+            MSG_DECOMPRESS => service
+                .submit_wire(0, None, Op::Decompress(payload), Priority::Interactive)
+                .and_then(WireTicket::wait),
             other => Err(anyhow::anyhow!("unknown op {other}")),
         };
+        // A result too large for the u32 length field becomes the error
+        // reply — never a truncated frame the client would misparse.
+        let result = result.and_then(|data| check_wire_len(data.len()).map(|_| data));
         match result {
             Ok(data) => {
                 stream.write_all(&[0u8])?;
-                stream.write_all(&(data.len() as u32).to_le_bytes())?;
+                stream.write_all(&check_wire_len(data.len())?.to_le_bytes())?;
                 stream.write_all(&data)?;
             }
             Err(e) => {
-                let msg = format!("{e:#}");
+                let msg = error_payload(&e);
                 stream.write_all(&[1u8])?;
-                stream.write_all(&(msg.len() as u32).to_le_bytes())?;
-                stream.write_all(msg.as_bytes())?;
+                stream.write_all(&check_wire_len(msg.len())?.to_le_bytes())?;
+                stream.write_all(&msg)?;
             }
         }
         stream.flush()?;
@@ -230,7 +284,7 @@ fn serve_v1(mut stream: TcpStream, server: &Server, mut first_op: Option<u8>) ->
 /// corrupt the frame stream.
 type RespSender = Sender<(u32, Result<Vec<u8>>)>;
 
-fn spawn_waiter(resp: &RespSender, req_id: u32, ticket: crate::coordinator::router::Ticket) {
+fn spawn_waiter(resp: &RespSender, req_id: u32, ticket: WireTicket) {
     let tx = resp.clone();
     std::thread::spawn(move || {
         // The connection may be gone by completion time; nothing to do.
@@ -238,8 +292,52 @@ fn spawn_waiter(resp: &RespSender, req_id: u32, ticket: crate::coordinator::rout
     });
 }
 
+/// Submit one routed op; admission errors become error frames for THIS
+/// request instead of tearing the connection down.
+fn submit(
+    service: &dyn WireService,
+    resp_tx: &RespSender,
+    tenant: u32,
+    route: Option<&str>,
+    req_id: u32,
+    op: Op,
+    priority: Priority,
+) {
+    match service.submit_wire(tenant, route, op, priority) {
+        Ok(ticket) => spawn_waiter(resp_tx, req_id, ticket),
+        Err(e) => {
+            let _ = resp_tx.send((req_id, Err(e)));
+        }
+    }
+}
+
+/// Parse a [`MSG_COMPRESS_TAGGED`] payload: `priority u8 | key_len u16 LE
+/// | route key | data`. The data tail is copied into a pool buffer (the
+/// route prefix cannot be sliced off a `PooledBuf` in place).
+fn parse_tagged(pool: &BytePool, payload: &[u8]) -> Result<(Priority, String, PooledBuf)> {
+    if payload.len() < 3 {
+        anyhow::bail!("tagged compress frame too short for its header");
+    }
+    let priority = match payload[0] {
+        0 => Priority::Bulk,
+        1 => Priority::Interactive,
+        other => anyhow::bail!("bad priority byte {other} in tagged compress frame"),
+    };
+    let klen = u16::from_le_bytes([payload[1], payload[2]]) as usize;
+    let key = payload
+        .get(3..3 + klen)
+        .ok_or_else(|| anyhow::anyhow!("tagged compress frame truncated inside its route key"))?;
+    let key = std::str::from_utf8(key)
+        .map_err(|_| anyhow::anyhow!("route key is not UTF-8"))?
+        .to_string();
+    let rest = &payload[3 + klen..];
+    let mut data = pool.take(rest.len());
+    data.extend_from_slice(rest);
+    Ok((priority, key, data))
+}
+
 /// The v2 multiplexed loop.
-fn serve_v2(stream: TcpStream, server: &Server) -> Result<()> {
+fn serve_v2(stream: TcpStream, service: &dyn WireService) -> Result<()> {
     let mut reader = stream.try_clone()?;
     let (resp_tx, resp_rx) = channel::<(u32, Result<Vec<u8>>)>();
     let writer = std::thread::spawn(move || -> Result<()> {
@@ -252,14 +350,14 @@ fn serve_v2(stream: TcpStream, server: &Server) -> Result<()> {
         while let Ok(mut next) = resp_rx.recv() {
             loop {
                 let (req_id, result) = next;
+                // An oversize result cannot be framed — downgrade it to
+                // this request's error frame, keeping the stream intact.
+                let result = result.and_then(|data| check_wire_len(data.len()).map(|_| data));
                 match result {
                     Ok(data) => write_frame_vectored(&mut stream, MSG_OK, req_id, &data)?,
-                    Err(e) => write_frame_vectored(
-                        &mut stream,
-                        MSG_ERR,
-                        req_id,
-                        format!("{e:#}").as_bytes(),
-                    )?,
+                    Err(e) => {
+                        write_frame_vectored(&mut stream, MSG_ERR, req_id, &error_payload(&e))?
+                    }
                 }
                 match resp_rx.try_recv() {
                     Ok(m) => next = m,
@@ -270,7 +368,7 @@ fn serve_v2(stream: TcpStream, server: &Server) -> Result<()> {
         }
         Ok(())
     });
-    let served = v2_reader_loop(&mut reader, server, &resp_tx);
+    let served = v2_reader_loop(&mut reader, service, &resp_tx);
     // EOF (or a read error): open uploads were dropped by the loop (their
     // Drop aborts the server-side session); let in-flight waiters drain
     // into the writer, then take the writer down once the last sender is
@@ -283,38 +381,88 @@ fn serve_v2(stream: TcpStream, server: &Server) -> Result<()> {
 
 /// The v2 reader half: frames in, tickets + waiter threads out. Returns
 /// on client EOF; open upload sessions are dropped (= aborted) with it.
-fn v2_reader_loop(reader: &mut TcpStream, server: &Server, resp_tx: &RespSender) -> Result<()> {
+/// Per-request failures — admission, routing, rate limits, shedding —
+/// are answered with [`MSG_ERR`] and the connection lives on.
+fn v2_reader_loop(
+    reader: &mut TcpStream,
+    service: &dyn WireService,
+    resp_tx: &RespSender,
+) -> Result<()> {
     // Open upload sessions by client-chosen request id.
-    let mut streams: HashMap<u32, StreamHandle> = HashMap::new();
-    while let Some((typ, req_id, payload)) = read_frame(reader, server.pool())? {
+    let mut streams: HashMap<u32, crate::coordinator::fleet::WireStream> = HashMap::new();
+    // The connection's bound tenant (MSG_SET_TENANT); 0 = anonymous.
+    let mut tenant: u32 = 0;
+    while let Some((typ, req_id, payload)) = read_frame(reader, service.wire_pool())? {
         match typ {
+            MSG_SET_TENANT => {
+                let bound = std::str::from_utf8(&payload)
+                    .map_err(|_| anyhow::anyhow!("tenant name is not UTF-8"))
+                    .and_then(|name| service.bind_tenant(name));
+                match bound {
+                    Ok(id) => {
+                        tenant = id;
+                        let _ = resp_tx.send((req_id, Ok(Vec::new())));
+                    }
+                    Err(e) => {
+                        let _ = resp_tx.send((req_id, Err(e)));
+                    }
+                }
+            }
             MSG_COMPRESS => {
-                spawn_waiter(
-                    resp_tx,
-                    req_id,
-                    server.submit_with(Op::Compress(payload), Priority::Bulk)?,
-                );
+                submit(service, resp_tx, tenant, None, req_id, Op::Compress(payload), Priority::Bulk)
             }
-            MSG_COMPRESS_INTERACTIVE => {
-                spawn_waiter(
+            MSG_COMPRESS_INTERACTIVE => submit(
+                service,
+                resp_tx,
+                tenant,
+                None,
+                req_id,
+                Op::Compress(payload),
+                Priority::Interactive,
+            ),
+            MSG_DECOMPRESS => submit(
+                service,
+                resp_tx,
+                tenant,
+                None,
+                req_id,
+                Op::Decompress(payload),
+                Priority::Interactive,
+            ),
+            MSG_COMPRESS_TAGGED => match parse_tagged(service.wire_pool(), &payload) {
+                Ok((priority, route, data)) => submit(
+                    service,
                     resp_tx,
+                    tenant,
+                    Some(&route),
                     req_id,
-                    server.submit_with(Op::Compress(payload), Priority::Interactive)?,
-                );
-            }
-            MSG_DECOMPRESS => {
-                spawn_waiter(
-                    resp_tx,
-                    req_id,
-                    server.submit_with(Op::Decompress(payload), Priority::Interactive)?,
-                );
-            }
+                    Op::Compress(data),
+                    priority,
+                ),
+                Err(e) => {
+                    let _ = resp_tx.send((req_id, Err(e)));
+                }
+            },
             MSG_STREAM_OPEN => {
                 if streams.contains_key(&req_id) {
                     let _ = resp_tx
                         .send((req_id, Err(anyhow::anyhow!("stream {req_id} already open"))));
-                } else {
-                    streams.insert(req_id, server.open_stream()?);
+                    continue;
+                }
+                // Optional payload: a route key for fleet endpoints.
+                let opened = std::str::from_utf8(&payload)
+                    .map_err(|_| anyhow::anyhow!("stream route key is not UTF-8"))
+                    .and_then(|route| {
+                        let route = (!route.is_empty()).then_some(route);
+                        service.open_wire_stream(tenant, route)
+                    });
+                match opened {
+                    Ok(handle) => {
+                        streams.insert(req_id, handle);
+                    }
+                    Err(e) => {
+                        let _ = resp_tx.send((req_id, Err(e)));
+                    }
                 }
             }
             MSG_STREAM_CHUNK => match streams.get_mut(&req_id) {
@@ -330,7 +478,12 @@ fn v2_reader_loop(reader: &mut TcpStream, server: &Server, resp_tx: &RespSender)
                 }
             },
             MSG_STREAM_FINISH => match streams.remove(&req_id) {
-                Some(handle) => spawn_waiter(resp_tx, req_id, handle.finish()?),
+                Some(handle) => match handle.finish() {
+                    Ok(ticket) => spawn_waiter(resp_tx, req_id, ticket),
+                    Err(e) => {
+                        let _ = resp_tx.send((req_id, Err(e)));
+                    }
+                },
                 None => {
                     let _ = resp_tx
                         .send((req_id, Err(anyhow::anyhow!("stream {req_id} is not open"))));
@@ -357,8 +510,9 @@ impl Client {
     }
 
     fn call(&mut self, op: u8, payload: &[u8]) -> Result<Vec<u8>> {
+        let len = check_wire_len(payload.len())?;
         self.stream.write_all(&[op])?;
-        self.stream.write_all(&(payload.len() as u32).to_le_bytes())?;
+        self.stream.write_all(&len.to_le_bytes())?;
         self.stream.write_all(payload)?;
         self.stream.flush()?;
         let mut hdr = [0u8; 5];
@@ -381,11 +535,48 @@ impl Client {
     }
 }
 
+/// Request-id allocator for [`MuxClient`]. Ids must be unique among the
+/// connection's IN-FLIGHT requests — the server tags responses with
+/// them, so a duplicate cross-wires two answers. A bare wrapping counter
+/// breaks that guarantee after 2^32 requests on a long-lived connection;
+/// this allocator tracks live ids, skips them at the wrap, and refuses
+/// (with a clear reconnect error) in the pathological case of every id
+/// being in flight at once. Id 0 is never handed out (reserved, matching
+/// the legacy allocator's behavior).
+struct IdAlloc {
+    next: u32,
+    live: HashSet<u32>,
+}
+
+impl IdAlloc {
+    fn new() -> IdAlloc {
+        IdAlloc { next: 1, live: HashSet::new() }
+    }
+
+    fn alloc(&mut self) -> Result<u32> {
+        if self.live.len() >= u32::MAX as usize {
+            anyhow::bail!("all request ids are in flight on this connection — reconnect");
+        }
+        loop {
+            let id = self.next;
+            // Wrap past u32::MAX straight to 1, skipping the reserved 0.
+            self.next = self.next.wrapping_add(1).max(1);
+            if self.live.insert(id) {
+                return Ok(id);
+            }
+        }
+    }
+
+    fn release(&mut self, id: u32) {
+        self.live.remove(&id);
+    }
+}
+
 /// v2 multiplexed client: submit any number of operations, then collect
 /// responses (in completion order) with [`MuxClient::recv`].
 pub struct MuxClient {
     stream: TcpStream,
-    next_id: u32,
+    ids: IdAlloc,
     /// Client responses are handed to the caller as plain `Vec<u8>`
     /// (public API), so recycling buys nothing here; a disabled pool
     /// keeps [`read_frame`]'s bounded-read path shared with the server.
@@ -397,37 +588,70 @@ impl MuxClient {
         let mut stream = TcpStream::connect(addr)?;
         stream.write_all(&V2_HANDSHAKE)?;
         stream.flush()?;
-        Ok(MuxClient { stream, next_id: 1, pool: BytePool::disabled() })
-    }
-
-    fn alloc_id(&mut self) -> u32 {
-        let id = self.next_id;
-        self.next_id = self.next_id.wrapping_add(1).max(1);
-        id
+        Ok(MuxClient { stream, ids: IdAlloc::new(), pool: BytePool::disabled() })
     }
 
     fn send(&mut self, typ: u8, req_id: u32, payload: &[u8]) -> Result<()> {
         write_frame(&mut self.stream, typ, req_id, payload)
     }
 
+    /// Bind this connection's tenant identity; later submissions ride
+    /// that tenant's QoS lane server-side. Synchronous: waits for the
+    /// server's ack, so call it BEFORE submitting other work (an
+    /// interleaved completion would be misread as the ack).
+    pub fn set_tenant(&mut self, name: &str) -> Result<()> {
+        let id = self.ids.alloc()?;
+        self.send(MSG_SET_TENANT, id, name.as_bytes())?;
+        let (rid, result) = self.recv()?;
+        if rid != id {
+            anyhow::bail!(
+                "response {rid} interleaved with tenant handshake {id} — bind the tenant \
+                 before submitting work"
+            );
+        }
+        result.map(|_| ())
+    }
+
     /// Submit a bulk compress; returns the request id to match in
     /// [`Self::recv`].
     pub fn submit_compress(&mut self, data: &[u8]) -> Result<u32> {
-        let id = self.alloc_id();
+        let id = self.ids.alloc()?;
         self.send(MSG_COMPRESS, id, data)?;
         Ok(id)
     }
 
     /// Submit an interactive-priority compress.
     pub fn submit_compress_interactive(&mut self, data: &[u8]) -> Result<u32> {
-        let id = self.alloc_id();
+        let id = self.ids.alloc()?;
         self.send(MSG_COMPRESS_INTERACTIVE, id, data)?;
         Ok(id)
     }
 
-    /// Submit a decompress.
+    /// Submit a compress routed to a fleet model (`route` is a model key,
+    /// bare model name or container tag).
+    pub fn submit_compress_tagged(
+        &mut self,
+        route: &str,
+        data: &[u8],
+        interactive: bool,
+    ) -> Result<u32> {
+        if route.len() > u16::MAX as usize {
+            anyhow::bail!("route key too long for the tagged frame ({} bytes)", route.len());
+        }
+        let id = self.ids.alloc()?;
+        let mut payload = Vec::with_capacity(3 + route.len() + data.len());
+        payload.push(interactive as u8);
+        payload.extend_from_slice(&(route.len() as u16).to_le_bytes());
+        payload.extend_from_slice(route.as_bytes());
+        payload.extend_from_slice(data);
+        self.send(MSG_COMPRESS_TAGGED, id, &payload)?;
+        Ok(id)
+    }
+
+    /// Submit a decompress (a fleet routes it by the container's own
+    /// recorded tag).
     pub fn submit_decompress(&mut self, data: &[u8]) -> Result<u32> {
-        let id = self.alloc_id();
+        let id = self.ids.alloc()?;
         self.send(MSG_DECOMPRESS, id, data)?;
         Ok(id)
     }
@@ -436,8 +660,15 @@ impl MuxClient {
     /// [`Self::stream_chunk`] and seal it with [`Self::stream_finish`]
     /// (the response to the returned id is the finished container).
     pub fn open_stream(&mut self) -> Result<u32> {
-        let id = self.alloc_id();
+        let id = self.ids.alloc()?;
         self.send(MSG_STREAM_OPEN, id, &[])?;
+        Ok(id)
+    }
+
+    /// [`Self::open_stream`] routed to a fleet model key.
+    pub fn open_stream_for(&mut self, route: &str) -> Result<u32> {
+        let id = self.ids.alloc()?;
+        self.send(MSG_STREAM_OPEN, id, route.as_bytes())?;
         Ok(id)
     }
 
@@ -452,11 +683,13 @@ impl MuxClient {
     }
 
     /// Receive the next response frame: `(request id, result)`. Responses
-    /// arrive in completion order — the caller matches ids.
+    /// arrive in completion order — the caller matches ids. The id is
+    /// released for reuse the moment its response lands.
     pub fn recv(&mut self) -> Result<(u32, Result<Vec<u8>>)> {
         let Some((typ, req_id, payload)) = read_frame(&mut self.stream, &self.pool)? else {
             anyhow::bail!("server closed the connection");
         };
+        self.ids.release(req_id);
         match typ {
             MSG_OK => Ok((req_id, Ok(payload.detach()))),
             MSG_ERR => Ok((
@@ -493,6 +726,70 @@ mod tests {
         let mut cur = std::io::Cursor::new(buf);
         let (typ, id, payload) = read_frame(&mut cur, &pool).unwrap().unwrap();
         assert_eq!((typ, id, payload.len()), (MSG_STREAM_FINISH, 7, 0));
+    }
+
+    /// Regression (u32 length truncation): every write path used to
+    /// encode `payload.len() as u32`, silently truncating ≥ 4 GiB
+    /// payloads into corrupt frames. The length check must refuse BOTH
+    /// the u32-overflow case and the protocol cap, and must do so before
+    /// a single header byte is emitted.
+    #[test]
+    fn oversize_payload_is_refused_not_truncated() {
+        assert!(check_wire_len(0).is_ok());
+        assert!(check_wire_len(MAX_PAYLOAD).is_ok());
+        // The exact overflow boundary: u32::MAX + 1 would truncate to 0.
+        let err = check_wire_len((u32::MAX as usize).saturating_add(1)).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("payload too large for wire frame"),
+            "unexpected error: {err:#}"
+        );
+        assert!(check_wire_len(MAX_PAYLOAD + 1).is_err());
+        // The frame writer refuses without emitting partial bytes.
+        let payload = vec![0u8; MAX_PAYLOAD + 1];
+        let mut out = Vec::new();
+        let err = write_frame(&mut out, MSG_OK, 1, &payload).unwrap_err();
+        assert!(format!("{err:#}").contains("payload too large for wire frame"));
+        assert!(out.is_empty(), "no partial frame may reach the wire");
+    }
+
+    /// Regression (req-id reuse): with `next_id = u32::MAX` the old
+    /// allocator wrapped to 1 regardless of which ids were still in
+    /// flight. The new one skips live ids and the reserved 0.
+    #[test]
+    fn id_allocator_survives_wrap_and_skips_live_ids() {
+        let mut ids = IdAlloc::new();
+        assert_eq!(ids.alloc().unwrap(), 1);
+        assert_eq!(ids.alloc().unwrap(), 2);
+        ids.release(1);
+        ids.next = u32::MAX;
+        assert_eq!(ids.alloc().unwrap(), u32::MAX);
+        // Wraps past 0 (reserved) to 1, which was released above.
+        assert_eq!(ids.alloc().unwrap(), 1);
+        // 2 is still in flight and must be skipped.
+        assert_eq!(ids.alloc().unwrap(), 3);
+        ids.release(2);
+        ids.release(3);
+        assert!(ids.live.contains(&1) && ids.live.contains(&u32::MAX));
+    }
+
+    #[test]
+    fn tagged_frame_parses_and_rejects_malformed() {
+        let pool = BytePool::disabled();
+        let mut p = vec![1u8];
+        p.extend_from_slice(&4u16.to_le_bytes());
+        p.extend_from_slice(b"nano");
+        p.extend_from_slice(b"data!");
+        let (prio, key, data) = parse_tagged(&pool, &p).unwrap();
+        assert_eq!(prio, Priority::Interactive);
+        assert_eq!(key, "nano");
+        assert_eq!(&data[..], b"data!");
+        // Empty data is legal (an empty compress is a valid op).
+        let p = [0u8, 1, 0, b'x'];
+        let (prio, key, data) = parse_tagged(&pool, &p).unwrap();
+        assert_eq!((prio, key.as_str(), data.len()), (Priority::Bulk, "x", 0));
+        assert!(parse_tagged(&pool, &[]).is_err(), "empty frame");
+        assert!(parse_tagged(&pool, &[0, 10, 0, b'x']).is_err(), "truncated key");
+        assert!(parse_tagged(&pool, &[9, 1, 0, b'x']).is_err(), "bad priority byte");
     }
 
     /// Regression (lying length header): a frame declaring MAX_PAYLOAD

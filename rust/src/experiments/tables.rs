@@ -90,7 +90,7 @@ pub fn table5(cache: &mut DatasetCache, model: &str, chunk: usize) -> Result<Tab
     for d in Domain::EVAL {
         data.push(cache.get(GENERATOR_MODEL, d)?.to_vec());
     }
-    for c in all_baselines() {
+    for c in all_baselines()? {
         let mut row = vec![s(paper_name(c.name()))];
         for d in &data {
             row.push(f2(ratio_of(c.as_ref(), d)?));

@@ -430,6 +430,13 @@ impl Weights {
         *self.fingerprint.get_or_init(|| crc32(&self.to_bytes()))
     }
 
+    /// [`Self::fingerprint`] in the 8-hex-digit spelling container tags
+    /// and fleet paging diagnostics use (`{:08x}`), so logs, tags and
+    /// reload-verify errors all render the same token.
+    pub fn fingerprint_hex(&self) -> String {
+        format!("{:08x}", self.fingerprint())
+    }
+
     /// Serialize to `.lmz` bytes: v1 when the bundle is all-f32 and was not
     /// loaded from a v2 file (bit-exact with the seed format), v2 otherwise.
     /// Round-trips both formats byte-exactly through [`Weights::from_bytes`].

@@ -1,0 +1,438 @@
+//! Fleet property suite: a multi-model [`FleetServer`] must be invisible
+//! in the bytes (every container identical to the direct single-compressor
+//! path, for any mix of tenants, models, codecs and paging history) and
+//! loud in its errors (unknown routes, rate limits, load shedding and
+//! fingerprint drift all fail fast with clear messages — never a hang,
+//! never a corrupt frame).
+
+use llmzip::compress::{Codec, Compressor, LlmCompressor, LlmCompressorConfig};
+use llmzip::coordinator::wire::serve_connection;
+use llmzip::coordinator::{
+    BatchPolicy, FleetConfig, FleetModelSpec, FleetServer, ServerConfig, TenantSpec, WireService,
+};
+use llmzip::lm::config::by_name;
+use llmzip::lm::weights::Weights;
+use llmzip::lm::{ExecutorKind, Precision};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+const CHUNK: usize = 64;
+
+fn compressor_cfg(precision: Precision, codec: Codec) -> LlmCompressorConfig {
+    LlmCompressorConfig {
+        model: "nano".into(),
+        chunk_tokens: CHUNK,
+        stream_bytes: 256,
+        executor: ExecutorKind::Native,
+        lanes: 4,
+        threads: 1,
+        precision,
+        codec,
+        ..Default::default()
+    }
+}
+
+fn spec(key: &str, precision: Precision, codec: Codec, seed: u64) -> FleetModelSpec {
+    FleetModelSpec {
+        key: key.to_string(),
+        compressor: compressor_cfg(precision, codec),
+        server: ServerConfig {
+            chunk_tokens: CHUNK,
+            codec,
+            policy: BatchPolicy { lanes: 4, max_wait: Duration::from_millis(2) },
+            ..Default::default()
+        },
+        load: Arc::new(move || Ok(Weights::random(by_name("nano")?, seed))),
+    }
+}
+
+/// The reference: a plain compressor built exactly like the fleet builds
+/// its pool (same seed, precision, codec, chunking). Byte-identity of the
+/// fleet path is always measured against THIS.
+fn direct(precision: Precision, codec: Codec, seed: u64) -> LlmCompressor {
+    let cfg = by_name("nano").unwrap();
+    let weights = Weights::random(cfg, seed);
+    let weights = match precision {
+        Precision::Int8 => Arc::new(weights.quantize()),
+        _ => Arc::new(weights),
+    };
+    LlmCompressor::from_shared(cfg, weights, compressor_cfg(precision, codec)).unwrap()
+}
+
+fn two_model_fleet(config: FleetConfig) -> Arc<FleetServer> {
+    Arc::new(
+        FleetServer::start(
+            vec![
+                spec("nano-f32", Precision::F32, Codec::Range, 7),
+                spec("nano-int8", Precision::Int8, Codec::Fse, 8),
+            ],
+            config,
+        )
+        .unwrap(),
+    )
+}
+
+fn spawn_listener(fleet: Arc<FleetServer>) -> String {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        while let Ok((stream, _)) = listener.accept() {
+            let fl = fleet.clone();
+            std::thread::spawn(move || {
+                let _ = serve_connection(stream, &*fl);
+            });
+        }
+    });
+    addr
+}
+
+#[test]
+fn mixed_tenant_mixed_model_bursts_are_byte_identical_to_direct() {
+    let fleet = two_model_fleet(FleetConfig {
+        tenants: vec![
+            TenantSpec {
+                name: "alice".into(),
+                weight: 3,
+                rate_bytes_per_sec: 0.0,
+                burst_bytes: 0.0,
+            },
+            TenantSpec { name: "bob".into(), weight: 1, rate_bytes_per_sec: 0.0, burst_bytes: 0.0 },
+        ],
+        ..Default::default()
+    });
+    let direct_f32 = direct(Precision::F32, Codec::Range, 7);
+    let direct_int8 = direct(Precision::Int8, Codec::Fse, 8);
+    let alice = fleet.bind_tenant("alice").unwrap();
+    let bob = fleet.bind_tenant("bob").unwrap();
+    assert_ne!(alice, bob);
+
+    // A concurrent burst: both tenants hammer both models at once. Every
+    // container that comes back must equal the direct path bit for bit —
+    // tenancy, WFQ and routing may reorder WORK, never bytes.
+    let handles: Vec<_> = (0..8u64)
+        .map(|i| {
+            let fl = fleet.clone();
+            let tenant = if i % 2 == 0 { alice } else { bob };
+            std::thread::spawn(move || {
+                let data = llmzip::textgen::quick_sample(400 + (i as usize) * 97, i);
+                let key = if i % 3 == 0 { "nano-int8" } else { "nano-f32" };
+                let z = fl.compress_for(tenant, key, &data).unwrap();
+                (key, data, z)
+            })
+        })
+        .collect();
+    for h in handles {
+        let (key, data, z) = h.join().unwrap();
+        let golden = match key {
+            "nano-int8" => direct_int8.compress(&data).unwrap(),
+            _ => direct_f32.compress(&data).unwrap(),
+        };
+        assert_eq!(z, golden, "fleet container differs from direct path on {key}");
+        // Cross-decode: unrouted decompress follows the container's tag.
+        assert_eq!(fleet.decompress(&z).unwrap(), data);
+    }
+}
+
+#[test]
+fn tagged_wire_requests_and_streams_match_direct_and_survive_bad_routes() {
+    use llmzip::coordinator::MuxClient;
+    let fleet = two_model_fleet(FleetConfig {
+        tenants: vec![TenantSpec {
+            name: "alice".into(),
+            weight: 2,
+            rate_bytes_per_sec: 0.0,
+            burst_bytes: 0.0,
+        }],
+        ..Default::default()
+    });
+    let addr = spawn_listener(fleet);
+    let direct_f32 = direct(Precision::F32, Codec::Range, 7);
+    let direct_int8 = direct(Precision::Int8, Codec::Fse, 8);
+    let a = llmzip::textgen::quick_sample(700, 41);
+    let b = llmzip::textgen::quick_sample(500, 42);
+
+    let mut client = MuxClient::connect(&addr).unwrap();
+    client.set_tenant("alice").unwrap();
+    // Unknown tenants are a clean error, and the connection survives.
+    assert!(format!("{:#}", client.set_tenant("mallory").unwrap_err()).contains("mallory"));
+
+    // Tagged one-shots to both models + a tagged stream, interleaved.
+    let id_f32 = client.submit_compress_tagged("nano-f32", &a, false).unwrap();
+    let id_int8 = client.submit_compress_tagged("nano-int8", &b, true).unwrap();
+    let sid = client.open_stream_for("nano-int8").unwrap();
+    for piece in a.chunks(173) {
+        client.stream_chunk(sid, piece).unwrap();
+    }
+    client.stream_finish(sid).unwrap();
+    // A bad route sheds THIS request only.
+    let id_bad = client.submit_compress_tagged("no-such-model", &a, false).unwrap();
+
+    let mut got = std::collections::HashMap::new();
+    for _ in 0..4 {
+        let (id, result) = client.recv().unwrap();
+        got.insert(id, result);
+    }
+    assert_eq!(got.remove(&id_f32).unwrap().unwrap(), direct_f32.compress(&a).unwrap());
+    let z_int8 = got.remove(&id_int8).unwrap().unwrap();
+    assert_eq!(z_int8, direct_int8.compress(&b).unwrap());
+    assert_eq!(got.remove(&sid).unwrap().unwrap(), direct_int8.compress(&a).unwrap());
+    let bad = format!("{:#}", got.remove(&id_bad).unwrap().unwrap_err());
+    assert!(bad.contains("no-such-model"), "unexpected error: {bad}");
+
+    // The connection still works: unrouted decompress follows the tag.
+    let did = client.submit_decompress(&z_int8).unwrap();
+    let (rid, result) = client.recv().unwrap();
+    assert_eq!(rid, did);
+    assert_eq!(result.unwrap(), b);
+}
+
+#[test]
+fn page_out_and_back_in_is_byte_identical() {
+    let fleet = two_model_fleet(FleetConfig::default());
+    let direct_f32 = direct(Precision::F32, Codec::Range, 7);
+    let data = llmzip::textgen::quick_sample(900, 51);
+    let before = fleet.compress_for(0, "nano-f32", &data).unwrap();
+
+    assert!(fleet.page_out("nano-f32").unwrap());
+    assert!(!fleet.is_live("nano-f32").unwrap());
+    assert!(!fleet.page_out("nano-f32").unwrap(), "double page-out is a no-op");
+    // The other pool is untouched.
+    assert!(fleet.is_live("nano-int8").unwrap());
+
+    // Next request re-materializes (fingerprint-checked) and the bytes
+    // are EXACTLY the pre-paging and direct-path containers.
+    let after = fleet.compress_for(0, "nano-f32", &data).unwrap();
+    assert!(fleet.is_live("nano-f32").unwrap());
+    assert_eq!(after, before);
+    assert_eq!(after, direct_f32.compress(&data).unwrap());
+    assert_eq!(fleet.decompress(&after).unwrap(), data);
+    assert_eq!(fleet.metrics.page_outs.load(Ordering::Relaxed), 1);
+    assert_eq!(fleet.metrics.page_ins.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn memory_budget_pages_out_the_coldest_pool() {
+    // A 1-byte budget can hold nothing: at most one pool is ever live
+    // (the one a request protects), and switching models churns pages.
+    let fleet = two_model_fleet(FleetConfig { memory_budget_bytes: 1, ..Default::default() });
+    let data = llmzip::textgen::quick_sample(400, 52);
+    let direct_f32 = direct(Precision::F32, Codec::Range, 7);
+    let direct_int8 = direct(Precision::Int8, Codec::Fse, 8);
+    for round in 0..3 {
+        let zf = fleet.compress_for(0, "nano-f32", &data).unwrap();
+        assert_eq!(zf, direct_f32.compress(&data).unwrap(), "round {round}");
+        let zq = fleet.compress_for(0, "nano-int8", &data).unwrap();
+        assert_eq!(zq, direct_int8.compress(&data).unwrap(), "round {round}");
+    }
+    assert!(
+        fleet.metrics.page_outs.load(Ordering::Relaxed) >= 2,
+        "budget pressure never paged anything out"
+    );
+    let live = ["nano-f32", "nano-int8"]
+        .iter()
+        .filter(|k| fleet.is_live(k).unwrap())
+        .count();
+    assert!(live <= 1, "1-byte budget left {live} pools live");
+}
+
+#[test]
+fn changed_weights_on_reload_are_refused() {
+    // A loader that returns DIFFERENT weights on each call: the page-in
+    // fingerprint check must refuse to serve from the drifted bundle.
+    let calls = Arc::new(AtomicUsize::new(0));
+    let drifting = {
+        let calls = calls.clone();
+        FleetModelSpec {
+            key: "drifty".into(),
+            compressor: compressor_cfg(Precision::F32, Codec::Range),
+            server: ServerConfig {
+                chunk_tokens: CHUNK,
+                policy: BatchPolicy { lanes: 4, max_wait: Duration::from_millis(2) },
+                ..Default::default()
+            },
+            load: Arc::new(move || {
+                let n = calls.fetch_add(1, Ordering::SeqCst) as u64;
+                Ok(Weights::random(by_name("nano")?, 100 + n))
+            }),
+        }
+    };
+    let fleet = Arc::new(
+        FleetServer::start(
+            vec![drifting, spec("stable", Precision::F32, Codec::Range, 7)],
+            FleetConfig::default(),
+        )
+        .unwrap(),
+    );
+    let data = llmzip::textgen::quick_sample(300, 61);
+    fleet.compress_for(0, "drifty", &data).unwrap();
+    assert!(fleet.page_out("drifty").unwrap());
+    let err = format!("{:#}", fleet.compress_for(0, "drifty", &data).unwrap_err());
+    assert!(err.contains("changed while paged out"), "unexpected error: {err}");
+    assert!(err.contains("fingerprint"), "unexpected error: {err}");
+    assert_eq!(calls.load(Ordering::SeqCst), 2, "exactly one reload was attempted");
+    // The drifted pool stays out; the rest of the fleet serves on.
+    assert!(!fleet.is_live("drifty").unwrap());
+    let z = fleet.compress_for(0, "stable", &data).unwrap();
+    assert_eq!(fleet.decompress(&z).unwrap(), data);
+}
+
+#[test]
+fn load_shed_is_a_clean_error_in_process() {
+    let fleet = two_model_fleet(FleetConfig { max_inflight: 1, ..Default::default() });
+    // Deterministic: an open stream HOLDS the only in-flight slot, so the
+    // next submission must shed — with a message, not a hang.
+    let stream = fleet.open_wire_stream(0, Some("nano-f32")).unwrap();
+    let data = llmzip::textgen::quick_sample(200, 71);
+    let err = format!("{:#}", fleet.compress_for(0, "nano-f32", &data).unwrap_err());
+    assert!(err.contains("load shed"), "unexpected error: {err}");
+    assert!(err.contains("cap 1"), "unexpected error: {err}");
+    assert_eq!(fleet.metrics.shed.load(Ordering::Relaxed), 1);
+    // Finishing the stream frees the slot; service resumes.
+    let mut stream = stream;
+    stream.write_bytes(&data).unwrap();
+    let z = stream.finish().unwrap().wait().unwrap();
+    assert_eq!(fleet.decompress(&z).unwrap(), data);
+    let z2 = fleet.compress_for(0, "nano-f32", &data).unwrap();
+    assert_eq!(z2, z, "stream and one-shot containers must match");
+}
+
+#[test]
+fn load_shed_on_the_wire_answers_every_request() {
+    use llmzip::coordinator::MuxClient;
+    let fleet = two_model_fleet(FleetConfig { max_inflight: 1, ..Default::default() });
+    let addr = spawn_listener(fleet);
+    let mut client = MuxClient::connect(&addr).unwrap();
+    let data = llmzip::textgen::quick_sample(300, 72);
+    // The stream pins the only slot server-side...
+    let sid = client.open_stream_for("nano-f32").unwrap();
+    client.stream_chunk(sid, &data).unwrap();
+    // ...so this one-shot must come back as a clean MSG_ERR, while the
+    // stream (submitted first) still completes. Every id gets an answer.
+    let shed_id = client.submit_compress_tagged("nano-f32", &data, false).unwrap();
+    let (rid, result) = client.recv().unwrap();
+    assert_eq!(rid, shed_id, "the shed response must arrive first");
+    let err = format!("{:#}", result.unwrap_err());
+    assert!(err.contains("load shed"), "unexpected error: {err}");
+    client.stream_finish(sid).unwrap();
+    let (rid, result) = client.recv().unwrap();
+    assert_eq!(rid, sid);
+    let z = result.unwrap();
+    // And the connection keeps serving after the shed.
+    let did = client.submit_decompress(&z).unwrap();
+    let (rid, result) = client.recv().unwrap();
+    assert_eq!(rid, did);
+    assert_eq!(result.unwrap(), data);
+}
+
+#[test]
+fn tenant_rate_limit_refuses_oversize_and_sustained_traffic() {
+    let fleet = two_model_fleet(FleetConfig {
+        tenants: vec![TenantSpec {
+            name: "metered".into(),
+            weight: 1,
+            rate_bytes_per_sec: 50.0,
+            burst_bytes: 600.0,
+        }],
+        ..Default::default()
+    });
+    let t = fleet.bind_tenant("metered").unwrap();
+    let data = llmzip::textgen::quick_sample(500, 81);
+    // First request fits the 600-byte bucket.
+    let z = fleet.compress_for(t, "nano-f32", &data).unwrap();
+    assert_eq!(fleet.decompress(&z).unwrap(), data);
+    // The bucket is nearly empty and refills at 50 B/s: an immediate
+    // repeat is refused with the tenant named in the error.
+    let err = format!("{:#}", fleet.compress_for(t, "nano-f32", &data).unwrap_err());
+    assert!(err.contains("rate limit exceeded"), "unexpected error: {err}");
+    assert!(err.contains("metered"), "unexpected error: {err}");
+    assert!(fleet.metrics.rate_limited.load(Ordering::Relaxed) >= 1);
+    // A request larger than the burst can NEVER pass.
+    let huge = llmzip::textgen::quick_sample(2000, 82);
+    let err = format!("{:#}", fleet.compress_for(t, "nano-f32", &huge).unwrap_err());
+    assert!(err.contains("rate limit exceeded"), "unexpected error: {err}");
+    // The anonymous tenant is unmetered.
+    let z = fleet.compress_for(0, "nano-f32", &data).unwrap();
+    assert_eq!(fleet.decompress(&z).unwrap(), data);
+}
+
+#[test]
+fn global_budget_caps_replicas_across_pools() {
+    // Two pools each wanting 2 replicas under a 3-permit budget: the
+    // fleet starts with every permit claimed and no pool at zero.
+    let fleet = Arc::new(
+        FleetServer::start(
+            vec![
+                FleetModelSpec {
+                    server: ServerConfig {
+                        chunk_tokens: CHUNK,
+                        replicas: 2,
+                        min_replicas: 1,
+                        max_replicas: 2,
+                        policy: BatchPolicy { lanes: 4, max_wait: Duration::from_millis(2) },
+                        ..Default::default()
+                    },
+                    ..spec("nano-f32", Precision::F32, Codec::Range, 7)
+                },
+                FleetModelSpec {
+                    server: ServerConfig {
+                        chunk_tokens: CHUNK,
+                        replicas: 2,
+                        min_replicas: 1,
+                        max_replicas: 2,
+                        codec: Codec::Fse,
+                        policy: BatchPolicy { lanes: 4, max_wait: Duration::from_millis(2) },
+                        ..Default::default()
+                    },
+                    ..spec("nano-int8", Precision::Int8, Codec::Fse, 8)
+                },
+            ],
+            FleetConfig { max_total_replicas: 3, ..Default::default() },
+        )
+        .unwrap(),
+    );
+    let budget = fleet.budget().expect("budget configured");
+    assert_eq!(budget.cap(), 3);
+    assert!(budget.used() <= 3, "budget overshot: {}", budget.used());
+    assert!(budget.used() >= 2, "each pool must hold at least one permit");
+    // Both pools serve, and the bytes are still the direct bytes.
+    let data = llmzip::textgen::quick_sample(350, 91);
+    let zf = fleet.compress_for(0, "nano-f32", &data).unwrap();
+    assert_eq!(zf, direct(Precision::F32, Codec::Range, 7).compress(&data).unwrap());
+    let zq = fleet.compress_for(0, "nano-int8", &data).unwrap();
+    assert_eq!(zq, direct(Precision::Int8, Codec::Fse, 8).compress(&data).unwrap());
+    // Paging a pool out returns its permits to the shared budget.
+    let before = budget.used();
+    assert!(fleet.page_out("nano-int8").unwrap());
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    while budget.used() >= before {
+        assert!(std::time::Instant::now() < deadline, "page-out never returned permits");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn unknown_routes_and_ambiguous_requests_error_clearly() {
+    let fleet = two_model_fleet(FleetConfig::default());
+    let data = llmzip::textgen::quick_sample(100, 95);
+    let err = format!("{:#}", fleet.compress_for(0, "mystery", &data).unwrap_err());
+    assert!(err.contains("mystery"), "unexpected error: {err}");
+    assert!(err.contains("nano-f32") && err.contains("nano-int8"), "error must list hosts: {err}");
+    // An unrouted compress on a multi-model fleet is ambiguous.
+    let buf = fleet.wire_pool().take(data.len());
+    let err = {
+        let mut buf = buf;
+        buf.extend_from_slice(&data);
+        let res = fleet.submit_wire(
+            0,
+            None,
+            llmzip::coordinator::Op::Compress(buf),
+            llmzip::coordinator::Priority::Bulk,
+        );
+        format!("{:#}", res.unwrap_err())
+    };
+    assert!(err.contains("ambiguous"), "unexpected error: {err}");
+    // Bare model names route only when unique: both pools are "nano".
+    let err = format!("{:#}", fleet.compress_for(0, "nano", &data).unwrap_err());
+    assert!(err.contains("nano"), "unexpected error: {err}");
+}

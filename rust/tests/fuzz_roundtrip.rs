@@ -43,7 +43,7 @@ fn families(seed: u64) -> Vec<(&'static str, Vec<u8>)> {
 fn all_baselines_roundtrip_all_families() {
     for seed in 0..4 {
         for (family, data) in families(seed) {
-            for c in all_baselines() {
+            for c in all_baselines().expect("baseline registry") {
                 let z = c
                     .compress(&data)
                     .unwrap_or_else(|e| panic!("{} compress {family} s{seed}: {e}", c.name()));
@@ -63,7 +63,7 @@ fn boundary_sizes_roundtrip() {
         65_535, 65_536, 65_537]
     {
         let data = llmzip::textgen::quick_sample(n, n as u64);
-        for c in all_baselines() {
+        for c in all_baselines().expect("baseline registry") {
             let z = c.compress(&data).unwrap();
             assert_eq!(c.decompress(&z).unwrap(), data, "{} n={n}", c.name());
         }
@@ -78,7 +78,7 @@ fn mutated_streams_never_return_wrong_data_silently() {
     // length/CRC... the baselines don't CRC, so we only demand no panic.
     let data = llmzip::textgen::quick_sample(6000, 77);
     let mut rng = Pcg64::seeded(99);
-    for c in all_baselines() {
+    for c in all_baselines().expect("baseline registry") {
         let z = c.compress(&data).unwrap();
         for _ in 0..30 {
             let mut zm = z.clone();
@@ -535,7 +535,7 @@ fn ratios_track_input_entropy() {
     let low: Vec<u8> = b"ab".iter().copied().cycle().take(20_000).collect();
     let mut high = vec![0u8; 20_000];
     Pcg64::seeded(1).fill_bytes(&mut high);
-    for c in all_baselines() {
+    for c in all_baselines().expect("baseline registry") {
         let zl = c.compress(&low).unwrap().len();
         let zh = c.compress(&high).unwrap().len();
         assert!(zl < zh, "{}: low {} !< high {}", c.name(), zl, zh);

@@ -480,7 +480,7 @@ fn spawn_listener(server: Arc<Server>) -> String {
         while let Ok((stream, _)) = listener.accept() {
             let srv = server.clone();
             std::thread::spawn(move || {
-                let _ = serve_connection(stream, &srv);
+                let _ = serve_connection(stream, &*srv);
             });
         }
     });
