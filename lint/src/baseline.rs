@@ -1,0 +1,203 @@
+//! The baseline ratchet.
+//!
+//! The repo predates the linter, so hundreds of findings exist at the
+//! moment L1–L5 turn on. Blocking on them would make the linter
+//! unadoptable; ignoring them would make it toothless. The ratchet is
+//! the middle path: every pre-existing finding is recorded in a
+//! committed `lint/baseline.txt`, CI fails the moment a count EXCEEDS
+//! its recorded value (a regression) and merely notes counts that
+//! dropped (an improvement — shrink the baseline with
+//! `--update-baseline` in the same PR). The debt can only burn down.
+//!
+//! Entries are keyed `(rule, path, symbol)` with a count rather than a
+//! line number, so refactors that move code without adding violations
+//! do not churn the file.
+//!
+//! Format, one entry per line, tab-separated, sorted:
+//!
+//! ```text
+//! L3<TAB>rust/src/compress/stream.rs<TAB>next_chunk<TAB>2
+//! ```
+
+use crate::rules::Finding;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// `(rule, path, symbol)` — the granularity at which counts ratchet.
+pub type Key = (String, String, String);
+
+#[derive(Clone, Debug, Default)]
+pub struct Baseline {
+    pub counts: BTreeMap<Key, u64>,
+}
+
+/// One key whose current count exceeds the committed allowance.
+#[derive(Clone, Debug)]
+pub struct Regression {
+    pub key: Key,
+    pub current: u64,
+    pub allowed: u64,
+}
+
+/// Check outcome: regressions fail the build, improvements are notes.
+#[derive(Clone, Debug, Default)]
+pub struct Diff {
+    pub regressions: Vec<Regression>,
+    pub improvements: Vec<Regression>,
+}
+
+#[derive(Debug)]
+pub struct BaselineError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for BaselineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "baseline line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for BaselineError {}
+
+const HEADER: &str = "\
+# pallas-lint baseline: pre-existing findings, allowed to shrink but never to grow.
+# Format: rule<TAB>path<TAB>symbol<TAB>count (sorted). Do not edit by hand;
+# regenerate with `cargo run -p pallas-lint -- --update-baseline` after fixing findings.";
+
+impl Baseline {
+    pub fn parse(src: &str) -> Result<Baseline, BaselineError> {
+        let mut counts = BTreeMap::new();
+        for (idx, raw) in src.lines().enumerate() {
+            let line = raw.trim_end();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            let &[rule, path, symbol, count] = fields.as_slice() else {
+                return Err(BaselineError {
+                    line: idx + 1,
+                    message: format!("expected 4 tab-separated fields, got {}", fields.len()),
+                });
+            };
+            let count: u64 = count.parse().map_err(|_| BaselineError {
+                line: idx + 1,
+                message: format!("bad count `{count}`"),
+            })?;
+            counts.insert((rule.to_string(), path.to_string(), symbol.to_string()), count);
+        }
+        Ok(Baseline { counts })
+    }
+
+    pub fn from_findings(findings: &[Finding]) -> Baseline {
+        let mut counts: BTreeMap<Key, u64> = BTreeMap::new();
+        for f in findings {
+            *counts.entry(f.key()).or_insert(0) += 1;
+        }
+        Baseline { counts }
+    }
+
+    /// Serialized form, stable: header, then sorted entries. A trailing
+    /// newline keeps `wc -l` (the CI never-grows grep) honest.
+    pub fn render(&self) -> String {
+        let mut out = String::from(HEADER);
+        out.push('\n');
+        for ((rule, path, symbol), count) in &self.counts {
+            out.push_str(&format!("{rule}\t{path}\t{symbol}\t{count}\n"));
+        }
+        out
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.values().sum()
+    }
+
+    /// Compare the scan against the committed allowance.
+    pub fn diff(current: &Baseline, committed: &Baseline) -> Diff {
+        let mut diff = Diff::default();
+        for (key, &cur) in &current.counts {
+            let allowed = committed.counts.get(key).copied().unwrap_or(0);
+            if cur > allowed {
+                diff.regressions.push(Regression { key: key.clone(), current: cur, allowed });
+            } else if cur < allowed {
+                diff.improvements.push(Regression { key: key.clone(), current: cur, allowed });
+            }
+        }
+        for (key, &allowed) in &committed.counts {
+            if !current.counts.contains_key(key) {
+                diff.improvements.push(Regression { key: key.clone(), current: 0, allowed });
+            }
+        }
+        diff
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rules::Rule;
+
+    fn finding(rule: Rule, path: &str, symbol: &str) -> Finding {
+        Finding {
+            rule,
+            path: path.to_string(),
+            line: 1,
+            symbol: symbol.to_string(),
+            message: String::new(),
+        }
+    }
+
+    #[test]
+    fn roundtrips_through_render() {
+        let fs = vec![
+            finding(Rule::L3, "a.rs", "f"),
+            finding(Rule::L3, "a.rs", "f"),
+            finding(Rule::L1, "b.rs", "-"),
+        ];
+        let b = Baseline::from_findings(&fs);
+        let reparsed = Baseline::parse(&b.render()).unwrap();
+        assert_eq!(reparsed.counts, b.counts);
+        assert_eq!(reparsed.total(), 3);
+        let key = ("L3".to_string(), "a.rs".to_string(), "f".to_string());
+        assert_eq!(reparsed.counts[&key], 2);
+    }
+
+    #[test]
+    fn diff_flags_growth_only() {
+        let committed = Baseline::from_findings(&[
+            finding(Rule::L3, "a.rs", "f"),
+            finding(Rule::L4, "gone.rs", "g"),
+        ]);
+        // Same L3 count, a brand-new L1, the L4 fixed entirely.
+        let current = Baseline::from_findings(&[
+            finding(Rule::L3, "a.rs", "f"),
+            finding(Rule::L1, "new.rs", "h"),
+        ]);
+        let diff = Baseline::diff(&current, &committed);
+        assert_eq!(diff.regressions.len(), 1);
+        assert_eq!(diff.regressions[0].key.0, "L1");
+        assert_eq!(diff.regressions[0].allowed, 0);
+        assert_eq!(diff.improvements.len(), 1);
+        assert_eq!(diff.improvements[0].key.0, "L4");
+    }
+
+    #[test]
+    fn diff_flags_count_increase_within_key() {
+        let committed = Baseline::from_findings(&[finding(Rule::L3, "a.rs", "f")]);
+        let current = Baseline::from_findings(&[
+            finding(Rule::L3, "a.rs", "f"),
+            finding(Rule::L3, "a.rs", "f"),
+        ]);
+        let diff = Baseline::diff(&current, &committed);
+        assert_eq!(diff.regressions.len(), 1);
+        assert_eq!(diff.regressions[0].current, 2);
+        assert_eq!(diff.regressions[0].allowed, 1);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        assert!(Baseline::parse("L3\tonly_two\n").is_err());
+        assert!(Baseline::parse("L3\ta.rs\tf\tnot_a_number\n").is_err());
+        assert!(Baseline::parse("# comment only\n\n").unwrap().counts.is_empty());
+    }
+}

@@ -1,0 +1,427 @@
+//! A hand-rolled Rust lexer that PRESERVES COMMENTS.
+//!
+//! `pallas-lint`'s rules are lexical: they need to see `// SAFETY:`
+//! comments, `// lint: allow(..)` waivers, and the token stream around an
+//! `as u32` cast — exactly the information `syn`-style parsers throw away
+//! and this offline environment could not download anyway. The lexer
+//! therefore stays deliberately small: it distinguishes identifiers,
+//! numeric literals (integer vs float — rule L5 keys on floats), string
+//! and char literals (so `"unsafe"` in a string is never a keyword),
+//! lifetimes, comments (line, block with nesting, doc) and punctuation,
+//! each tagged with its 1-based source line.
+//!
+//! It is NOT a full Rust parser. It does not need to be: every rule is
+//! defined directly in terms of this token stream (see `docs/lint.md`),
+//! so "what the linter enforces" has no gap to "what the lexer sees".
+//!
+//! NOTE: `lint/tools/gen_baseline.py` is a line-for-line transliteration
+//! of this module (the bootstrap path for environments without cargo).
+//! Change them together.
+
+/// Token classes. Comments are real tokens here — rules L1 (SAFETY
+/// comments) and the waiver grammar read them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Lifetime,
+    Int,
+    Float,
+    Str,
+    Char,
+    LineComment,
+    BlockComment,
+    Punct,
+}
+
+/// One token: kind, verbatim text, and the 1-based line it STARTS on.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is_comment(&self) -> bool {
+        matches!(self.kind, TokKind::LineComment | TokKind::BlockComment)
+    }
+}
+
+/// Multi-character operators, longest first so `>>=` never lexes as
+/// `>` `>` `=`. Order matters.
+const MULTI_PUNCT: [&str; 24] = [
+    "<<=", ">>=", "..=", "...", "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "+=", "-=",
+    "*=", "/=", "%=", "^=", "&=", "|=", "<<", ">>", "..",
+];
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Tokenize `src`. Lexing is total: any byte sequence produces a token
+/// stream (unrecognized bytes become single-char `Punct` tokens), so a
+/// syntactically broken fixture file still lints.
+pub fn lex(src: &str) -> Vec<Tok> {
+    Lexer { b: src.as_bytes(), i: 0, line: 1, out: Vec::new() }.run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    i: usize,
+    line: u32,
+    out: Vec<Tok>,
+}
+
+impl Lexer<'_> {
+    fn peek(&self, ahead: usize) -> u8 {
+        *self.b.get(self.i + ahead).unwrap_or(&0)
+    }
+
+    /// Advance one byte, tracking line numbers.
+    fn bump(&mut self) {
+        if self.peek(0) == b'\n' {
+            self.line += 1;
+        }
+        self.i += 1;
+    }
+
+    fn push(&mut self, kind: TokKind, start: usize, line: u32) {
+        let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+        self.out.push(Tok { kind, text, line });
+    }
+
+    fn run(mut self) -> Vec<Tok> {
+        while self.i < self.b.len() {
+            let c = self.peek(0);
+            let (start, line) = (self.i, self.line);
+            if c.is_ascii_whitespace() {
+                self.bump();
+            } else if c == b'/' && self.peek(1) == b'/' {
+                while self.i < self.b.len() && self.peek(0) != b'\n' {
+                    self.bump();
+                }
+                self.push(TokKind::LineComment, start, line);
+            } else if c == b'/' && self.peek(1) == b'*' {
+                self.block_comment();
+                self.push(TokKind::BlockComment, start, line);
+            } else if c == b'r' && self.raw_string_ahead() {
+                self.raw_string();
+                self.push(TokKind::Str, start, line);
+            } else if c == b'b' && self.peek(1) == b'r' && self.raw_string_ahead_at(1) {
+                self.bump();
+                self.raw_string();
+                self.push(TokKind::Str, start, line);
+            } else if c == b'b' && self.peek(1) == b'"' {
+                self.bump();
+                self.quoted(b'"');
+                self.push(TokKind::Str, start, line);
+            } else if c == b'b' && self.peek(1) == b'\'' {
+                self.bump();
+                self.quoted(b'\'');
+                self.push(TokKind::Char, start, line);
+            } else if c == b'r' && self.peek(1) == b'#' && is_ident_start(self.peek(2)) {
+                // Raw identifier r#foo: strip the prefix so rules see `foo`.
+                self.bump();
+                self.bump();
+                while is_ident_cont(self.peek(0)) {
+                    self.bump();
+                }
+                let text = String::from_utf8_lossy(&self.b[start + 2..self.i]).into_owned();
+                self.out.push(Tok { kind: TokKind::Ident, text, line });
+            } else if is_ident_start(c) {
+                while is_ident_cont(self.peek(0)) {
+                    self.bump();
+                }
+                self.push(TokKind::Ident, start, line);
+            } else if c.is_ascii_digit() {
+                let kind = self.number();
+                self.push(kind, start, line);
+            } else if c == b'"' {
+                self.quoted(b'"');
+                self.push(TokKind::Str, start, line);
+            } else if c == b'\'' {
+                self.lifetime_or_char(start, line);
+            } else {
+                self.punct(start, line);
+            }
+        }
+        self.out
+    }
+
+    /// Nested block comment; leaves `i` past the closing `*/` (or at EOF).
+    fn block_comment(&mut self) {
+        self.bump();
+        self.bump();
+        let mut depth = 1usize;
+        while self.i < self.b.len() && depth > 0 {
+            if self.peek(0) == b'/' && self.peek(1) == b'*' {
+                depth += 1;
+                self.bump();
+                self.bump();
+            } else if self.peek(0) == b'*' && self.peek(1) == b'/' {
+                depth -= 1;
+                self.bump();
+                self.bump();
+            } else {
+                self.bump();
+            }
+        }
+    }
+
+    fn raw_string_ahead(&self) -> bool {
+        self.raw_string_ahead_at(0)
+    }
+
+    /// Does `r`[#...]`"` start at offset `at` from the cursor?
+    fn raw_string_ahead_at(&self, at: usize) -> bool {
+        let mut j = at + 1;
+        while self.peek(j) == b'#' {
+            j += 1;
+        }
+        self.peek(j) == b'"'
+    }
+
+    /// Raw string starting at the `r`; ends at `"` followed by the same
+    /// number of `#` as the opener.
+    fn raw_string(&mut self) {
+        self.bump(); // r
+        let mut hashes = 0usize;
+        while self.peek(0) == b'#' {
+            hashes += 1;
+            self.bump();
+        }
+        self.bump(); // opening quote
+        while self.i < self.b.len() {
+            if self.peek(0) == b'"' {
+                let mut ok = true;
+                for k in 0..hashes {
+                    if self.peek(1 + k) != b'#' {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    for _ in 0..=hashes {
+                        self.bump();
+                    }
+                    return;
+                }
+            }
+            self.bump();
+        }
+    }
+
+    /// Escaped quoted literal (string or char), cursor on the quote.
+    fn quoted(&mut self, q: u8) {
+        self.bump();
+        while self.i < self.b.len() {
+            let c = self.peek(0);
+            if c == b'\\' {
+                self.bump();
+                self.bump();
+            } else if c == q {
+                self.bump();
+                return;
+            } else {
+                self.bump();
+            }
+        }
+    }
+
+    /// Number starting with a digit. Float iff it has a fractional part,
+    /// an exponent, or an `f32`/`f64` suffix — rule L5's trigger.
+    fn number(&mut self) -> TokKind {
+        let mut float = false;
+        if self.peek(0) == b'0' && matches!(self.peek(1), b'x' | b'o' | b'b') {
+            self.bump();
+            self.bump();
+            while is_ident_cont(self.peek(0)) {
+                self.bump();
+            }
+            return TokKind::Int;
+        }
+        while self.peek(0).is_ascii_digit() || self.peek(0) == b'_' {
+            self.bump();
+        }
+        if self.peek(0) == b'.' && self.peek(1).is_ascii_digit() {
+            float = true;
+            self.bump();
+            while self.peek(0).is_ascii_digit() || self.peek(0) == b'_' {
+                self.bump();
+            }
+        }
+        if matches!(self.peek(0), b'e' | b'E')
+            && (self.peek(1).is_ascii_digit()
+                || (matches!(self.peek(1), b'+' | b'-') && self.peek(2).is_ascii_digit()))
+        {
+            float = true;
+            self.bump();
+            self.bump();
+            while self.peek(0).is_ascii_digit() || self.peek(0) == b'_' {
+                self.bump();
+            }
+        }
+        // Type suffix (f32, u64, usize, ...) rides on the same token.
+        let suffix_at = self.i;
+        while is_ident_cont(self.peek(0)) {
+            self.bump();
+        }
+        let suffix = &self.b[suffix_at..self.i];
+        if suffix == b"f32" || suffix == b"f64" {
+            float = true;
+        }
+        if float {
+            TokKind::Float
+        } else {
+            TokKind::Int
+        }
+    }
+
+    /// `'` starts a lifetime (`'a`, `'static`) or a char (`'x'`, `'\n'`).
+    fn lifetime_or_char(&mut self, start: usize, line: u32) {
+        if self.peek(1) == b'\\' {
+            self.quoted(b'\'');
+            self.push(TokKind::Char, start, line);
+        } else if is_ident_start(self.peek(1)) {
+            // Identifier-shaped: char iff a closing quote follows it
+            // immediately ('a' vs 'a as in &'a str).
+            let mut j = 2;
+            while is_ident_cont(self.peek(j)) {
+                j += 1;
+            }
+            if self.peek(j) == b'\'' {
+                self.quoted(b'\'');
+                self.push(TokKind::Char, start, line);
+            } else {
+                self.bump();
+                while is_ident_cont(self.peek(0)) {
+                    self.bump();
+                }
+                self.push(TokKind::Lifetime, start, line);
+            }
+        } else {
+            self.quoted(b'\'');
+            self.push(TokKind::Char, start, line);
+        }
+    }
+
+    fn punct(&mut self, start: usize, line: u32) {
+        for op in MULTI_PUNCT {
+            if self.b[self.i..].starts_with(op.as_bytes()) {
+                for _ in 0..op.len() {
+                    self.bump();
+                }
+                self.push(TokKind::Punct, start, line);
+                return;
+            }
+        }
+        self.bump();
+        self.push(TokKind::Punct, start, line);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn comments_are_preserved_with_lines() {
+        let toks = lex("// SAFETY: fine\nlet x = 1; /* a /* nested */ b */ y");
+        assert_eq!(toks[0].kind, TokKind::LineComment);
+        assert_eq!(toks[0].text, "// SAFETY: fine");
+        assert_eq!(toks[0].line, 1);
+        let block = toks.iter().find(|t| t.kind == TokKind::BlockComment).unwrap();
+        assert!(block.text.contains("nested"));
+        assert_eq!(block.line, 2);
+        assert_eq!(toks.last().unwrap().text, "y");
+    }
+
+    #[test]
+    fn strings_hide_keywords_and_track_lines() {
+        let toks = lex("let s = \"unsafe // not a comment\";\nnext");
+        assert!(toks.iter().all(|t| t.kind != TokKind::LineComment));
+        assert_eq!(toks.iter().filter(|t| t.text == "unsafe").count(), 0);
+        assert_eq!(toks.last().unwrap().line, 2);
+    }
+
+    #[test]
+    fn raw_strings_and_bytes() {
+        let toks = kinds(r####"r#"has "quotes" inside"# b"bytes" b'x' r"plain""####);
+        assert_eq!(
+            toks.iter().map(|(k, _)| *k).collect::<Vec<_>>(),
+            vec![TokKind::Str, TokKind::Str, TokKind::Char, TokKind::Str]
+        );
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let toks = kinds("&'a str 'x' '\\n' 'static");
+        let kindv: Vec<TokKind> = toks.iter().map(|(k, _)| *k).collect();
+        assert_eq!(
+            kindv,
+            vec![
+                TokKind::Punct,
+                TokKind::Lifetime,
+                TokKind::Ident,
+                TokKind::Char,
+                TokKind::Char,
+                TokKind::Lifetime,
+            ]
+        );
+    }
+
+    #[test]
+    fn float_classification_drives_l5() {
+        for (src, kind) in [
+            ("1.5", TokKind::Float),
+            ("1e-6", TokKind::Float),
+            ("2f32", TokKind::Float),
+            ("1_000.25", TokKind::Float),
+            ("0x4E", TokKind::Int),
+            ("17", TokKind::Int),
+            ("3usize", TokKind::Int),
+        ] {
+            let toks = lex(src);
+            assert_eq!(toks.len(), 1, "{src}");
+            assert_eq!(toks[0].kind, kind, "{src}");
+        }
+        // `0..10` is two ints and a range, not a float.
+        let toks = kinds("0..10");
+        assert_eq!(
+            toks.iter().map(|(k, _)| *k).collect::<Vec<_>>(),
+            vec![TokKind::Int, TokKind::Punct, TokKind::Int]
+        );
+    }
+
+    #[test]
+    fn multi_char_punct_is_greedy() {
+        let texts: Vec<String> =
+            lex("a >>= b :: c -> d ..= e").into_iter().map(|t| t.text).collect();
+        assert!(texts.contains(&">>=".to_string()));
+        assert!(texts.contains(&"::".to_string()));
+        assert!(texts.contains(&"->".to_string()));
+        assert!(texts.contains(&"..=".to_string()));
+    }
+
+    #[test]
+    fn raw_idents_lose_their_sigil() {
+        let toks = lex("r#type r#match");
+        assert_eq!(toks[0].kind, TokKind::Ident);
+        assert_eq!(toks[0].text, "type");
+        assert_eq!(toks[1].text, "match");
+    }
+
+    #[test]
+    fn lexing_is_total_on_garbage() {
+        let toks = lex("\u{1F980} @@@ $ ` 'unterminated");
+        assert!(!toks.is_empty());
+    }
+}

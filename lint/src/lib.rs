@@ -1,0 +1,72 @@
+//! `pallas-lint`: offline invariant linter for the llmzip workspace.
+//!
+//! The compressor's correctness story is byte-identity under every
+//! deployment shape, and several past bugs (silent `as u32` wire
+//! truncations, panics reachable from hostile container bytes, f32
+//! reassociation) share a property: they are *lexically visible*. This
+//! crate mechanizes those checks — five rules over a comment-preserving
+//! token stream, zone-scoped by `lint/zones.toml`, ratcheted against
+//! `lint/baseline.txt`. Zero external dependencies by design: it must
+//! build in the same offline environments as the rest of the workspace.
+//!
+//! See `docs/lint.md` for the rule catalog, waiver grammar, and
+//! workflow; `lint/tools/gen_baseline.py` is the no-cargo bootstrap
+//! mirror of the scanner.
+
+pub mod baseline;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+pub mod zones;
+
+use rules::Finding;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use zones::Zones;
+
+/// All `.rs` files under `root`'s scan roots, sorted by normalized
+/// path so every run (and the Python mirror) sees the same order.
+pub fn collect_rs_files(root: &Path, zones: &Zones) -> io::Result<Vec<PathBuf>> {
+    let mut files = Vec::new();
+    for scan in &zones.scan {
+        let base = if scan.is_empty() { root.to_path_buf() } else { root.join(scan) };
+        walk(&base, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    Ok(files)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if dir.is_file() {
+        out.push(dir.to_path_buf());
+        return Ok(());
+    }
+    let mut entries = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        entries.push(entry?.path());
+    }
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Scan every file under the manifest's roots; paths in findings are
+/// `root`-relative and `/`-separated (the zone/baseline key form).
+pub fn scan_tree(root: &Path, zones: &Zones) -> io::Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+    for file in collect_rs_files(root, zones)? {
+        let src = fs::read_to_string(&file)?;
+        let rel = file.strip_prefix(root).unwrap_or(&file);
+        let rel = zones::normalize(rel);
+        findings.extend(rules::scan_file(&rel, &src, zones));
+    }
+    Ok(findings)
+}

@@ -1,0 +1,140 @@
+//! CLI entry point.
+//!
+//! ```text
+//! cargo run -p pallas-lint -- --check            # CI mode: diff vs baseline
+//! cargo run -p pallas-lint -- --check --json     # machine-readable findings
+//! cargo run -p pallas-lint -- --update-baseline  # rewrite lint/baseline.txt
+//! ```
+//!
+//! Exit codes: 0 clean (or improvements only), 1 regressions vs the
+//! baseline, 2 usage/configuration error. Paths for `--zones` and
+//! `--baseline` are resolved relative to `--root` (default `.`), so the
+//! tool works from the workspace root and from fixture trees alike.
+
+use pallas_lint::baseline::Baseline;
+use pallas_lint::rules::Rule;
+use pallas_lint::zones::Zones;
+use pallas_lint::{report, scan_tree};
+use std::fs;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "\
+pallas-lint: invariant linter for the llmzip workspace (see docs/lint.md)
+
+USAGE: pallas-lint [--check | --update-baseline] [OPTIONS]
+
+  --check             scan and diff against the committed baseline (default)
+  --update-baseline   scan and rewrite the baseline file to current findings
+  --json              emit the machine-readable report on stdout
+  --only <RULE>       restrict to one rule (L1..L5); baseline filtered too
+  --root <DIR>        tree to lint (default: .)
+  --zones <FILE>      zone manifest, relative to --root (default: lint/zones.toml)
+  --baseline <FILE>   baseline file, relative to --root (default: lint/baseline.txt)";
+
+struct Opts {
+    update: bool,
+    json: bool,
+    only: Option<Rule>,
+    root: PathBuf,
+    zones: String,
+    baseline: String,
+}
+
+fn parse_opts() -> Result<Opts, String> {
+    let mut opts = Opts {
+        update: false,
+        json: false,
+        only: None,
+        root: PathBuf::from("."),
+        zones: "lint/zones.toml".to_string(),
+        baseline: "lint/baseline.txt".to_string(),
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        let mut value = |name: &str| args.next().ok_or_else(|| format!("{name} needs a value"));
+        match arg.as_str() {
+            "--check" => opts.update = false,
+            "--update-baseline" => opts.update = true,
+            "--json" => opts.json = true,
+            "--only" => {
+                let v = value("--only")?;
+                opts.only = Some(Rule::parse(&v).ok_or_else(|| format!("unknown rule `{v}`"))?);
+            }
+            "--root" => opts.root = PathBuf::from(value("--root")?),
+            "--zones" => opts.zones = value("--zones")?,
+            "--baseline" => opts.baseline = value("--baseline")?,
+            "--help" | "-h" => return Err(String::new()),
+            other => return Err(format!("unknown argument `{other}`")),
+        }
+    }
+    Ok(opts)
+}
+
+fn run(opts: &Opts) -> Result<ExitCode, String> {
+    let zones_path = opts.root.join(&opts.zones);
+    let zones_src = fs::read_to_string(&zones_path)
+        .map_err(|e| format!("reading {}: {e}", zones_path.display()))?;
+    let zones = Zones::parse(&zones_src).map_err(|e| e.to_string())?;
+
+    let mut findings = scan_tree(&opts.root, &zones)
+        .map_err(|e| format!("scanning {}: {e}", opts.root.display()))?;
+    if let Some(rule) = opts.only {
+        findings.retain(|f| f.rule == rule);
+    }
+
+    let baseline_path = opts.root.join(&opts.baseline);
+    if opts.update {
+        let current = Baseline::from_findings(&findings);
+        fs::write(&baseline_path, current.render())
+            .map_err(|e| format!("writing {}: {e}", baseline_path.display()))?;
+        println!(
+            "pallas-lint: wrote {} entries ({} findings) to {}",
+            current.counts.len(),
+            current.total(),
+            baseline_path.display()
+        );
+        return Ok(ExitCode::SUCCESS);
+    }
+
+    let committed_src = fs::read_to_string(&baseline_path)
+        .map_err(|e| format!("reading {}: {e} (run --update-baseline?)", baseline_path.display()))?;
+    let mut committed = Baseline::parse(&committed_src).map_err(|e| e.to_string())?;
+    if let Some(rule) = opts.only {
+        committed.counts.retain(|(r, _, _), _| r == rule.as_str());
+    }
+
+    let current = Baseline::from_findings(&findings);
+    let diff = Baseline::diff(&current, &committed);
+    if opts.json {
+        print!("{}", report::json(&findings, &diff));
+    } else {
+        print!("{}", report::human(&findings, &diff));
+    }
+    if diff.regressions.is_empty() {
+        Ok(ExitCode::SUCCESS)
+    } else {
+        Ok(ExitCode::from(1))
+    }
+}
+
+fn main() -> ExitCode {
+    let opts = match parse_opts() {
+        Ok(opts) => opts,
+        Err(msg) => {
+            if msg.is_empty() {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            eprintln!("pallas-lint: {msg}\n\n{USAGE}");
+            return ExitCode::from(2);
+        }
+    };
+    match run(&opts) {
+        Ok(code) => code,
+        Err(msg) => {
+            eprintln!("pallas-lint: {msg}");
+            ExitCode::from(2)
+        }
+    }
+}

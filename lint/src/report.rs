@@ -1,0 +1,155 @@
+//! Finding reporters: human text for terminals/CI logs, hand-rolled
+//! JSON (`--json`) for tooling. Both are pure string builders so the
+//! integration tests can assert on them without capturing stdout.
+
+use crate::baseline::{Diff, Regression};
+use crate::rules::Finding;
+
+/// Human report for `--check`: regressions first (these fail the
+/// build), each with the concrete `path:line` sites from the current
+/// scan, then improvement notes, then a one-line summary.
+pub fn human(findings: &[Finding], diff: &Diff) -> String {
+    let mut out = String::new();
+    for r in &diff.regressions {
+        let (rule, path, symbol) = &r.key;
+        out.push_str(&format!(
+            "REGRESSION {rule} {path} [{symbol}]: {} finding(s), baseline allows {}\n",
+            r.current, r.allowed
+        ));
+        for f in findings.iter().filter(|f| keyed(f, r)) {
+            out.push_str(&format!("  {}:{}: {} ({})\n", f.path, f.line, f.message, f.rule));
+        }
+    }
+    for r in &diff.improvements {
+        let (rule, path, symbol) = &r.key;
+        out.push_str(&format!(
+            "improved {rule} {path} [{symbol}]: {} -> {} (shrink the baseline: --update-baseline)\n",
+            r.allowed, r.current
+        ));
+    }
+    let status = if diff.regressions.is_empty() { "ok" } else { "FAIL" };
+    out.push_str(&format!(
+        "pallas-lint: {status} — {} finding(s), {} regression(s), {} improvement(s)\n",
+        findings.len(),
+        diff.regressions.len(),
+        diff.improvements.len()
+    ));
+    out
+}
+
+fn keyed(f: &Finding, r: &Regression) -> bool {
+    let (rule, path, symbol) = &r.key;
+    f.rule.as_str() == rule && &f.path == path && &f.symbol == symbol
+}
+
+/// Machine-readable report: every current finding plus the diff.
+pub fn json(findings: &[Finding], diff: &Diff) -> String {
+    let mut out = String::from("{\n  \"findings\": [");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"rule\": \"{}\", \"path\": \"{}\", \"line\": {}, \"symbol\": \"{}\", \
+             \"message\": \"{}\"}}",
+            f.rule,
+            escape(&f.path),
+            f.line,
+            escape(&f.symbol),
+            escape(&f.message)
+        ));
+    }
+    out.push_str("\n  ],\n  \"regressions\": [");
+    push_keys(&mut out, &diff.regressions);
+    out.push_str("\n  ],\n  \"improvements\": [");
+    push_keys(&mut out, &diff.improvements);
+    out.push_str(&format!(
+        "\n  ],\n  \"ok\": {}\n}}\n",
+        if diff.regressions.is_empty() { "true" } else { "false" }
+    ));
+    out
+}
+
+fn push_keys(out: &mut String, entries: &[Regression]) {
+    for (i, r) in entries.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let (rule, path, symbol) = &r.key;
+        out.push_str(&format!(
+            "\n    {{\"rule\": \"{}\", \"path\": \"{}\", \"symbol\": \"{}\", \
+             \"current\": {}, \"allowed\": {}}}",
+            escape(rule),
+            escape(path),
+            escape(symbol),
+            r.current,
+            r.allowed
+        ));
+    }
+}
+
+/// Minimal JSON string escaping: quotes, backslashes, control chars.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::Baseline;
+    use crate::rules::{Finding, Rule};
+
+    fn sample() -> (Vec<Finding>, Diff) {
+        let findings = vec![Finding {
+            rule: Rule::L3,
+            path: "a.rs".to_string(),
+            line: 7,
+            symbol: "f".to_string(),
+            message: "`.unwrap()` in decode-reachable code".to_string(),
+        }];
+        let diff = Baseline::diff(&Baseline::from_findings(&findings), &Baseline::default());
+        (findings, diff)
+    }
+
+    #[test]
+    fn human_report_names_the_site() {
+        let (findings, diff) = sample();
+        let text = human(&findings, &diff);
+        assert!(text.contains("REGRESSION L3 a.rs [f]"));
+        assert!(text.contains("a.rs:7:"));
+        assert!(text.contains("FAIL"));
+        let clean = human(&[], &Baseline::diff(&Baseline::default(), &Baseline::default()));
+        assert!(clean.contains("ok"));
+        assert!(!clean.contains("REGRESSION"));
+    }
+
+    #[test]
+    fn json_report_is_parseable_shape() {
+        let (findings, diff) = sample();
+        let j = json(&findings, &diff);
+        assert!(j.contains("\"rule\": \"L3\""));
+        assert!(j.contains("\"line\": 7"));
+        assert!(j.contains("\"ok\": false"));
+        // Balanced braces/brackets (cheap well-formedness proxy).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn escape_handles_specials() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+    }
+}

@@ -1,0 +1,669 @@
+//! The five invariant rules, defined directly over the token stream.
+//!
+//! Each rule mechanizes a contract this repo previously enforced by
+//! hand-audit (see `docs/lint.md` for the catalog and the incidents
+//! behind each one):
+//!
+//! - **L1** `unsafe` without an adjacent `// SAFETY:` comment (all files).
+//! - **L2** truncating `as u16`/`as u32` on a length-like expression
+//!   (decode-reachable) — wire lengths route through `check_wire_len`.
+//! - **L3** `panic!`/`unwrap`/`expect` in decode-reachable code.
+//! - **L4** nondeterminism sources (`HashMap`/`HashSet`, `Instant::now`,
+//!   `SystemTime`, env reads) in coded zones.
+//! - **L5** f32 arithmetic and `mul_add` outside `lm/kernels` — PR 6's
+//!   "no arithmetic inner loops in native.rs" contract.
+//!
+//! Rules are lexical, not type-aware: they are deliberately defined so
+//! that "what the linter sees" is exactly "what a reviewer greps for",
+//! and so the Python bootstrap (`lint/tools/gen_baseline.py`) can mirror
+//! them line-for-line. False positives are handled by the waiver
+//! grammar (`// lint: allow(<rules>) <reason>`, covering its own line
+//! and the next) or by the committed baseline ratchet.
+//!
+//! `#[test]` / `#[cfg(test)]` items are skipped entirely: test code may
+//! panic and use HashMaps freely.
+
+use crate::lexer::{lex, Tok, TokKind};
+use crate::zones::Zones;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Rule identifiers. Stable strings — they appear in baselines and
+/// waivers, so renaming one invalidates committed state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    L1,
+    L2,
+    L3,
+    L4,
+    L5,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 5] = [Rule::L1, Rule::L2, Rule::L3, Rule::L4, Rule::L5];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Rule::L1 => "L1",
+            Rule::L2 => "L2",
+            Rule::L3 => "L3",
+            Rule::L4 => "L4",
+            Rule::L5 => "L5",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Rule> {
+        match s.to_ascii_uppercase().as_str() {
+            "L1" => Some(Rule::L1),
+            "L2" => Some(Rule::L2),
+            "L3" => Some(Rule::L3),
+            "L4" => Some(Rule::L4),
+            "L5" => Some(Rule::L5),
+            _ => None,
+        }
+    }
+
+    /// One-line description, used by reports and `docs/lint.md`.
+    pub fn title(self) -> &'static str {
+        match self {
+            Rule::L1 => "unsafe without a SAFETY comment",
+            Rule::L2 => "truncating length cast (use check_wire_len)",
+            Rule::L3 => "panic path in decode-reachable code",
+            Rule::L4 => "nondeterminism source in a coded zone",
+            Rule::L5 => "float arithmetic outside lm/kernels",
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One finding. `symbol` is the enclosing `fn` (or `-` at item level):
+/// the baseline is keyed on `(rule, path, symbol)` with a count, so it
+/// survives line churn without going stale.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: Rule,
+    pub path: String,
+    pub line: u32,
+    pub symbol: String,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn key(&self) -> (String, String, String) {
+        (self.rule.as_str().to_string(), self.path.clone(), self.symbol.clone())
+    }
+}
+
+/// Lint one file. `path` must be lint-root-relative and `/`-separated
+/// (see `zones::normalize`); zone membership decides which rules run.
+pub fn scan_file(path: &str, src: &str, zones: &Zones) -> Vec<Finding> {
+    let coded = zones.in_zone("coded", path);
+    let decode = zones.in_zone("decode_reachable", path);
+    let kernel = zones.in_zone("kernel", path);
+
+    let all = lex(src);
+    let lines: Vec<&str> = src.lines().collect();
+    let waivers = collect_waivers(&all);
+    let t: Vec<Tok> = all.into_iter().filter(|t| !t.is_comment()).collect();
+    let skip = test_item_mask(&t);
+    let symbols = enclosing_fn(&t);
+
+    let cx = Cx { path, t: &t, skip: &skip, symbols: &symbols, lines: &lines };
+    let mut out = Vec::new();
+    rule_l1(&cx, &mut out);
+    if decode {
+        rule_l2(&cx, &mut out);
+        rule_l3(&cx, &mut out);
+    }
+    if coded {
+        rule_l4(&cx, &mut out);
+        if !kernel {
+            rule_l5(&cx, &mut out);
+        }
+    }
+
+    out.retain(|f| !waived(&waivers, f));
+    out.sort_by_key(|f| (f.line, f.rule));
+    out
+}
+
+/// Per-file context shared by the rule passes. `t` is the token stream
+/// with comments removed; `skip` masks `#[test]`/`#[cfg(test)]` items.
+struct Cx<'a> {
+    path: &'a str,
+    t: &'a [Tok],
+    skip: &'a [bool],
+    symbols: &'a [String],
+    lines: &'a [&'a str],
+}
+
+impl Cx<'_> {
+    fn push(&self, out: &mut Vec<Finding>, rule: Rule, j: usize, message: String) {
+        out.push(Finding {
+            rule,
+            path: self.path.to_string(),
+            line: self.t[j].line,
+            symbol: self.symbols[j].clone(),
+            message,
+        });
+    }
+
+    fn ident_at(&self, j: usize, text: &str) -> bool {
+        self.t.get(j).is_some_and(|t| t.kind == TokKind::Ident && t.text == text)
+    }
+
+    fn punct_at(&self, j: usize, text: &str) -> bool {
+        self.t.get(j).is_some_and(|t| t.kind == TokKind::Punct && t.text == text)
+    }
+}
+
+// ---------------------------------------------------------------- waivers
+
+const WAIVER_MARK: &str = "lint: allow(";
+
+fn collect_waivers(toks: &[Tok]) -> BTreeMap<u32, Vec<Rule>> {
+    let mut map: BTreeMap<u32, Vec<Rule>> = BTreeMap::new();
+    for t in toks.iter().filter(|t| t.is_comment()) {
+        let Some(pos) = t.text.find(WAIVER_MARK) else { continue };
+        let rest = &t.text[pos + WAIVER_MARK.len()..];
+        let Some(end) = rest.find(')') else { continue };
+        let rules: Vec<Rule> = rest[..end].split([',', ' ']).filter_map(Rule::parse).collect();
+        if !rules.is_empty() {
+            map.entry(t.line).or_default().extend(rules);
+        }
+    }
+    map
+}
+
+/// A waiver covers its own line and the next one (comment above the
+/// offending line, or trailing on the same line).
+fn waived(map: &BTreeMap<u32, Vec<Rule>>, f: &Finding) -> bool {
+    let hit = |l: u32| map.get(&l).is_some_and(|v| v.contains(&f.rule));
+    hit(f.line) || (f.line > 1 && hit(f.line - 1))
+}
+
+// ------------------------------------------------- test-item skipping
+
+/// Mask tokens belonging to items annotated `#[test]` / `#[cfg(test)]`
+/// (any attribute containing the ident `test` but not `not`, so
+/// `#[cfg(not(test))]` items still lint). The skipped item runs to the
+/// matching `}` of its first `{`, or to a `;` before any brace.
+fn test_item_mask(t: &[Tok]) -> Vec<bool> {
+    let mut skip = vec![false; t.len()];
+    let mut i = 0;
+    while i < t.len() {
+        if !(t[i].kind == TokKind::Punct && t[i].text == "#") {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        if j < t.len() && t[j].kind == TokKind::Punct && t[j].text == "!" {
+            j += 1;
+        }
+        if !(j < t.len() && t[j].kind == TokKind::Punct && t[j].text == "[") {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0i32;
+        let mut has_test = false;
+        let mut has_not = false;
+        while j < t.len() {
+            match (t[j].kind, t[j].text.as_str()) {
+                (TokKind::Punct, "[") => depth += 1,
+                (TokKind::Punct, "]") => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                (TokKind::Ident, "test") => has_test = true,
+                (TokKind::Ident, "not") => has_not = true,
+                _ => {}
+            }
+            j += 1;
+        }
+        if has_test && !has_not {
+            let end = item_end(t, j + 1);
+            for s in skip.iter_mut().take(end).skip(i) {
+                *s = true;
+            }
+            i = end;
+        } else {
+            i = j + 1;
+        }
+    }
+    skip
+}
+
+/// First index past the item starting at `i`: past the matching `}` of
+/// the first `{`, or past a `;` seen before any brace.
+fn item_end(t: &[Tok], mut i: usize) -> usize {
+    let mut brace = 0i32;
+    while i < t.len() {
+        if t[i].kind == TokKind::Punct {
+            match t[i].text.as_str() {
+                "{" => brace += 1,
+                "}" => {
+                    brace -= 1;
+                    if brace <= 0 {
+                        return i + 1;
+                    }
+                }
+                ";" if brace == 0 => return i + 1,
+                _ => {}
+            }
+        }
+        i += 1;
+    }
+    t.len()
+}
+
+// ---------------------------------------------------- enclosing symbol
+
+/// Enclosing `fn` name per token (`-` at item level). Tracks brace
+/// depth; a `fn` name is pushed when its body `{` opens and popped at
+/// the matching `}`. Trait-method declarations (`fn f();`) never open.
+fn enclosing_fn(t: &[Tok]) -> Vec<String> {
+    let mut out = Vec::with_capacity(t.len());
+    let mut stack: Vec<(String, i32)> = Vec::new();
+    let mut depth = 0i32;
+    let mut pending: Option<String> = None;
+    for (i, tok) in t.iter().enumerate() {
+        out.push(stack.last().map_or_else(|| "-".to_string(), |(n, _)| n.clone()));
+        match (tok.kind, tok.text.as_str()) {
+            (TokKind::Ident, "fn") => {
+                if let Some(next) = t.get(i + 1) {
+                    if next.kind == TokKind::Ident {
+                        pending = Some(next.text.clone());
+                    }
+                }
+            }
+            (TokKind::Punct, "{") => {
+                depth += 1;
+                if let Some(name) = pending.take() {
+                    stack.push((name, depth));
+                }
+            }
+            (TokKind::Punct, "}") => {
+                if stack.last().is_some_and(|&(_, d)| d == depth) {
+                    stack.pop();
+                }
+                depth -= 1;
+            }
+            (TokKind::Punct, ";") => pending = None,
+            _ => {}
+        }
+    }
+    out
+}
+
+// -------------------------------------------------------------- rule L1
+
+fn has_safety(line: &str) -> bool {
+    line.contains("SAFETY") || line.contains("# Safety")
+}
+
+/// Is there a SAFETY comment on `line` itself, or in the contiguous run
+/// of comment/attribute lines directly above it? The walk is raw-text
+/// on purpose: the Rust and Python implementations cannot diverge over
+/// comment token subtleties.
+fn safety_nearby(lines: &[&str], line: u32) -> bool {
+    let idx = line as usize - 1;
+    if lines.get(idx).is_some_and(|l| has_safety(l)) {
+        return true;
+    }
+    let mut k = idx;
+    while k > 0 {
+        k -= 1;
+        let trimmed = lines[k].trim_start();
+        let carrier = trimmed.starts_with("//")
+            || trimmed.starts_with("#[")
+            || trimmed.starts_with("#!");
+        if !carrier {
+            return false;
+        }
+        if has_safety(trimmed) {
+            return true;
+        }
+    }
+    false
+}
+
+fn rule_l1(cx: &Cx<'_>, out: &mut Vec<Finding>) {
+    for (j, tok) in cx.t.iter().enumerate() {
+        if cx.skip[j] || tok.kind != TokKind::Ident || tok.text != "unsafe" {
+            continue;
+        }
+        if safety_nearby(cx.lines, tok.line) {
+            continue;
+        }
+        // `unsafe fn name` reports under `name`, not the outer scope.
+        let symbol = if cx.ident_at(j + 1, "fn") {
+            cx.t.get(j + 2)
+                .filter(|n| n.kind == TokKind::Ident)
+                .map_or_else(|| cx.symbols[j].clone(), |n| n.text.clone())
+        } else {
+            cx.symbols[j].clone()
+        };
+        out.push(Finding {
+            rule: Rule::L1,
+            path: cx.path.to_string(),
+            line: tok.line,
+            symbol,
+            message: "`unsafe` without an adjacent `// SAFETY:` comment".to_string(),
+        });
+    }
+}
+
+// -------------------------------------------------------------- rule L2
+
+/// How far back from `as` the cast operand is searched for a
+/// length-like name before giving up or hitting a statement boundary.
+const CAST_LOOKBACK: usize = 12;
+const CAST_STOPPERS: [&str; 5] = [";", "{", "}", ",", "="];
+
+fn length_like(name: &str) -> bool {
+    let n = name.to_ascii_lowercase();
+    n.contains("len")
+        || n.ends_with("size")
+        || n.ends_with("count")
+        || n.ends_with("capacity")
+        || n.ends_with("offset")
+        || n.ends_with("off")
+        || n.starts_with("n_")
+}
+
+fn rule_l2(cx: &Cx<'_>, out: &mut Vec<Finding>) {
+    for (j, tok) in cx.t.iter().enumerate() {
+        if cx.skip[j] || tok.kind != TokKind::Ident || tok.text != "as" {
+            continue;
+        }
+        let narrow = cx.ident_at(j + 1, "u16") || cx.ident_at(j + 1, "u32");
+        if !narrow {
+            continue;
+        }
+        let ty = cx.t[j + 1].text.clone();
+        let mut culprit: Option<String> = None;
+        for back in 1..=CAST_LOOKBACK {
+            let Some(k) = j.checked_sub(back) else { break };
+            let p = &cx.t[k];
+            if p.kind == TokKind::Punct && CAST_STOPPERS.contains(&p.text.as_str()) {
+                break;
+            }
+            if p.kind == TokKind::Ident && length_like(&p.text) {
+                culprit = Some(p.text.clone());
+                break;
+            }
+        }
+        if let Some(name) = culprit {
+            let message = format!(
+                "truncating `as {ty}` on length-like `{name}` (route through check_wire_len)"
+            );
+            cx.push(out, Rule::L2, j, message);
+        }
+    }
+}
+
+// -------------------------------------------------------------- rule L3
+
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+
+fn rule_l3(cx: &Cx<'_>, out: &mut Vec<Finding>) {
+    for (j, tok) in cx.t.iter().enumerate() {
+        if cx.skip[j] || tok.kind != TokKind::Ident {
+            continue;
+        }
+        let name = tok.text.as_str();
+        if (name == "unwrap" || name == "expect")
+            && j > 0
+            && cx.punct_at(j - 1, ".")
+            && cx.punct_at(j + 1, "(")
+        {
+            cx.push(out, Rule::L3, j, format!("`.{name}()` in decode-reachable code"));
+        } else if PANIC_MACROS.contains(&name) && cx.punct_at(j + 1, "!") {
+            cx.push(out, Rule::L3, j, format!("`{name}!` in decode-reachable code"));
+        }
+    }
+}
+
+// -------------------------------------------------------------- rule L4
+
+fn rule_l4(cx: &Cx<'_>, out: &mut Vec<Finding>) {
+    for (j, tok) in cx.t.iter().enumerate() {
+        if cx.skip[j] || tok.kind != TokKind::Ident {
+            continue;
+        }
+        match tok.text.as_str() {
+            "HashMap" | "HashSet" => {
+                let message = format!("`{}` iteration order is nondeterministic", tok.text);
+                cx.push(out, Rule::L4, j, message);
+            }
+            "SystemTime" => {
+                cx.push(out, Rule::L4, j, "`SystemTime` in a coded zone".to_string());
+            }
+            "Instant" if cx.punct_at(j + 1, "::") && cx.ident_at(j + 2, "now") => {
+                cx.push(out, Rule::L4, j, "`Instant::now` in a coded zone".to_string());
+            }
+            "env" => {
+                let read = cx.punct_at(j + 1, "::")
+                    && (cx.ident_at(j + 2, "var") || cx.ident_at(j + 2, "var_os"));
+                if read {
+                    let message = format!("`env::{}` reads the environment", cx.t[j + 2].text);
+                    cx.push(out, Rule::L4, j, message);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+// -------------------------------------------------------------- rule L5
+
+const FLOAT_METHODS: [&str; 17] = [
+    "exp", "exp2", "exp_m1", "ln", "ln_1p", "log2", "log10", "powf", "powi", "sqrt", "recip",
+    "hypot", "sin", "cos", "tan", "to_degrees", "to_radians",
+];
+const ARITH_OPS: [&str; 8] = ["+", "-", "*", "/", "+=", "-=", "*=", "/="];
+/// Idents after which a `-` is a sign, not a subtraction.
+const UNARY_PREV: [&str; 7] = ["return", "as", "else", "in", "match", "if", "while"];
+
+fn floaty(tok: Option<&Tok>) -> bool {
+    tok.is_some_and(|t| {
+        t.kind == TokKind::Float
+            || (t.kind == TokKind::Ident && (t.text == "f32" || t.text == "f64"))
+    })
+}
+
+fn rule_l5(cx: &Cx<'_>, out: &mut Vec<Finding>) {
+    for (j, tok) in cx.t.iter().enumerate() {
+        if cx.skip[j] {
+            continue;
+        }
+        if tok.kind == TokKind::Ident && j > 0 && cx.punct_at(j - 1, ".") {
+            if tok.text == "mul_add" {
+                cx.push(out, Rule::L5, j, "`mul_add` outside lm/kernels".to_string());
+                continue;
+            }
+            if FLOAT_METHODS.contains(&tok.text.as_str()) && cx.punct_at(j + 1, "(") {
+                let message = format!("float method `.{}()` outside lm/kernels", tok.text);
+                cx.push(out, Rule::L5, j, message);
+                continue;
+            }
+        }
+        if tok.kind != TokKind::Punct || !ARITH_OPS.contains(&tok.text.as_str()) {
+            continue;
+        }
+        if tok.text == "-" && minus_is_unary(cx, j) {
+            continue;
+        }
+        let prev = if j > 0 { cx.t.get(j - 1) } else { None };
+        if floaty(prev) || floaty(cx.t.get(j + 1)) {
+            let message = format!("float arithmetic `{}` outside lm/kernels", tok.text);
+            cx.push(out, Rule::L5, j, message);
+        }
+    }
+}
+
+/// A leading `-` (start of expression) negates a literal; only binary
+/// minus is arithmetic.
+fn minus_is_unary(cx: &Cx<'_>, j: usize) -> bool {
+    let Some(k) = j.checked_sub(1) else { return true };
+    let p = &cx.t[k];
+    match p.kind {
+        TokKind::Punct => p.text != ")" && p.text != "]",
+        TokKind::Ident => UNARY_PREV.contains(&p.text.as_str()),
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn zones_all() -> Zones {
+        Zones::parse(concat!(
+            "scan = [\"\"]\n",
+            "[zone.coded]\ninclude = [\"\"]\n",
+            "[zone.decode_reachable]\ninclude = [\"\"]\n",
+            "[zone.kernel]\ninclude = [\"kernel/\"]\n",
+        ))
+        .unwrap()
+    }
+
+    fn findings(src: &str) -> Vec<Finding> {
+        scan_file("x.rs", src, &zones_all())
+    }
+
+    fn count(src: &str, rule: Rule) -> usize {
+        findings(src).iter().filter(|f| f.rule == rule).count()
+    }
+
+    #[test]
+    fn l1_unsafe_needs_safety() {
+        assert_eq!(count("fn f() { unsafe { g() } }", Rule::L1), 1);
+        assert_eq!(count("fn f() {\n    // SAFETY: g is fine\n    unsafe { g() }\n}", Rule::L1), 0);
+        assert_eq!(count("fn f() { unsafe { g() } } // SAFETY: same line\n", Rule::L1), 0);
+        // Walks through attribute + doc-comment runs.
+        let doc = "/// # Safety\n/// caller checks\n#[inline]\npub unsafe fn f() {}\n";
+        assert_eq!(count(doc, Rule::L1), 0);
+        // A code line breaks the walk.
+        let broken = "// SAFETY: too far\nlet y = 1;\nunsafe { g() }\n";
+        assert_eq!(count(broken, Rule::L1), 1);
+    }
+
+    #[test]
+    fn l1_symbol_is_fn_name() {
+        let f = findings("unsafe fn boom() {}\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].symbol, "boom");
+        let f = findings("fn outer() { unsafe { g() } }\n");
+        assert_eq!(f[0].symbol, "outer");
+    }
+
+    #[test]
+    fn l2_flags_length_casts() {
+        assert_eq!(count("fn f(b: &[u8]) { w(b.len() as u32); }", Rule::L2), 1);
+        assert_eq!(count("fn f(b: &[u8]) { w(b.len() as u16); }", Rule::L2), 1);
+        assert_eq!(count("fn f() { let x = comp_off as u32; }", Rule::L2), 1);
+        // Widening casts and non-length operands are fine.
+        assert_eq!(count("fn f(b: &[u8]) { w(b.len() as u64); }", Rule::L2), 0);
+        assert_eq!(count("fn f(x: u64) { w(x as u32); }", Rule::L2), 0);
+        // A statement boundary ends the lookback.
+        assert_eq!(count("fn f(n: usize) { let _ = n.len(); let y = x as u32; }", Rule::L2), 0);
+    }
+
+    #[test]
+    fn l3_flags_panic_paths_not_tests() {
+        let src = "fn f(x: Option<u8>) { x.unwrap(); }";
+        assert_eq!(count(src, Rule::L3), 1);
+        assert_eq!(count("fn f() { panic!(\"boom\"); }", Rule::L3), 1);
+        assert_eq!(count("fn f() { unreachable!() }", Rule::L3), 1);
+        assert_eq!(count("fn f(x: Option<u8>) { x.unwrap_or(0); }", Rule::L3), 0);
+        assert_eq!(count("#[test]\nfn t() { x.unwrap(); }", Rule::L3), 0);
+        let module = "#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn f() {}\n";
+        assert_eq!(count(module, Rule::L3), 0);
+        let not_test = "#[cfg(not(test))]\nfn f(x: Option<u8>) { x.unwrap(); }";
+        assert_eq!(count(not_test, Rule::L3), 1);
+    }
+
+    #[test]
+    fn l4_flags_nondeterminism() {
+        assert_eq!(count("use std::collections::HashMap;", Rule::L4), 1);
+        assert_eq!(count("fn f() { let s: HashSet<u8> = HashSet::new(); }", Rule::L4), 2);
+        assert_eq!(count("fn f() { let t = Instant::now(); }", Rule::L4), 1);
+        assert_eq!(count("fn f() { let v = std::env::var(\"X\"); }", Rule::L4), 1);
+        // Instant as a type (metrics plumbing) is not the violation.
+        assert_eq!(count("fn f(t: Instant) {}", Rule::L4), 0);
+        assert_eq!(count("use std::collections::BTreeMap;", Rule::L4), 0);
+    }
+
+    #[test]
+    fn l5_flags_float_arith_and_methods() {
+        assert_eq!(count("fn f(x: f32) -> f32 { x * 2.0 }", Rule::L5), 1);
+        assert_eq!(count("fn f(x: f32) -> f32 { x.exp() }", Rule::L5), 1);
+        assert_eq!(count("fn f(x: f32) -> f32 { x.mul_add(2.0, 1.0) }", Rule::L5), 1);
+        assert_eq!(count("fn f(x: u32) -> f32 { x as f32 / 3.0 }", Rule::L5), 1);
+        // Integer arithmetic and negative float constants are fine.
+        assert_eq!(count("fn f(x: u32) -> u32 { x * 2 }", Rule::L5), 0);
+        assert_eq!(count("const X: f32 = -1.5;", Rule::L5), 0);
+        assert_eq!(count("fn f() { g(-1.5); }", Rule::L5), 0);
+        // Binary minus on floats IS arithmetic.
+        assert_eq!(count("fn f(x: f32) -> f32 { x - 1.5 }", Rule::L5), 1);
+    }
+
+    #[test]
+    fn l5_skipped_in_kernel_zone() {
+        let src = "fn f(x: f32) -> f32 { x * 2.0 }";
+        let z = zones_all();
+        assert_eq!(scan_file("kernel/k.rs", src, &z).len(), 0);
+        assert_eq!(scan_file("other/k.rs", src, &z).len(), 1);
+    }
+
+    #[test]
+    fn waivers_cover_same_and_next_line() {
+        let above = "fn f(x: Option<u8>) {\n    // lint: allow(L3) startup only\n    x.unwrap();\n}";
+        assert_eq!(count(above, Rule::L3), 0);
+        let trailing = "fn f(x: Option<u8>) { x.unwrap(); } // lint: allow(L3) startup only";
+        assert_eq!(count(trailing, Rule::L3), 0);
+        // A waiver for one rule does not silence another.
+        let wrong = "fn f(x: Option<u8>) {\n    // lint: allow(L2) mismatched\n    x.unwrap();\n}";
+        assert_eq!(count(wrong, Rule::L3), 1);
+        // Multi-rule waivers.
+        let multi = "fn f() {\n    // lint: allow(L3, L5) both\n    panic!(\"{}\", 1.0 * 2.0);\n}";
+        assert_eq!(scan_file("x.rs", multi, &zones_all()).len(), 0);
+    }
+
+    #[test]
+    fn rules_gate_on_zones() {
+        let z = Zones::parse(concat!(
+            "scan = [\"\"]\n",
+            "[zone.coded]\ninclude = [\"coded/\"]\n",
+            "[zone.decode_reachable]\ninclude = [\"coded/\", \"wire.rs\"]\n",
+            "[zone.kernel]\ninclude = []\n",
+        ))
+        .unwrap();
+        let src = "fn f(x: Option<u8>) { x.unwrap(); let m: HashMap<u8, u8>; }";
+        // wire.rs: decode-reachable (L3 fires) but not coded (L4 silent).
+        let wire: Vec<Rule> = scan_file("wire.rs", src, &z).iter().map(|f| f.rule).collect();
+        assert_eq!(wire, vec![Rule::L3]);
+        // coded/: both.
+        assert_eq!(scan_file("coded/a.rs", src, &z).len(), 2);
+        // outside both zones: neither (L1 still applies everywhere).
+        assert_eq!(scan_file("elsewhere.rs", src, &z).len(), 0);
+    }
+
+    #[test]
+    fn finding_keys_are_symbol_scoped() {
+        let src = "fn a(x: Option<u8>) { x.unwrap(); }\nfn b(x: Option<u8>) { x.unwrap(); }";
+        let keys: Vec<_> = findings(src).into_iter().map(|f| f.key()).collect();
+        assert_eq!(keys.len(), 2);
+        assert_ne!(keys[0], keys[1]);
+        assert_eq!(keys[0].2, "a");
+        assert_eq!(keys[1].2, "b");
+    }
+}

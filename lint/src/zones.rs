@@ -1,0 +1,248 @@
+//! Zone classification from a checked-in manifest (`lint/zones.toml`).
+//!
+//! The rules are not uniform over the tree: panic-freedom (L3) matters
+//! exactly where hostile container bytes can reach, nondeterminism (L4)
+//! matters exactly where bits are coded, and the f32 ban (L5) carves the
+//! kernel layer OUT of the coded zone. Those boundaries are repository
+//! policy, so they live in a committed manifest the linter reads — not in
+//! linter source where they would drift silently.
+//!
+//! The manifest is a small TOML subset parsed by hand (zero deps):
+//!
+//! ```toml
+//! scan = ["rust/src"]
+//!
+//! [zone.coded]
+//! include = ["rust/src/compress/", "rust/src/entropy/"]
+//! exclude = ["rust/src/lm/reference.rs"]
+//! ```
+//!
+//! Matching is by path prefix on `/`-normalized paths relative to the
+//! lint root: an entry ending in `/` matches the subtree, any other
+//! entry matches the paths it prefixes (in practice, exactly that
+//! file), `""` matches everything. `exclude` wins over `include`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// A manifest error, with the line that caused it.
+#[derive(Debug)]
+pub struct ManifestError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "zones manifest line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+/// One zone: include/exclude prefix lists.
+#[derive(Clone, Debug, Default)]
+pub struct Zone {
+    pub include: Vec<String>,
+    pub exclude: Vec<String>,
+}
+
+impl Zone {
+    fn matches_entry(entry: &str, path: &str) -> bool {
+        entry.is_empty() || path == entry || path.starts_with(entry)
+    }
+
+    pub fn contains(&self, path: &str) -> bool {
+        if self.exclude.iter().any(|e| Self::matches_entry(e, path)) {
+            return false;
+        }
+        self.include.iter().any(|e| Self::matches_entry(e, path))
+    }
+}
+
+/// The parsed manifest: scan roots plus named zones. Zone names the
+/// rules engine relies on: `coded`, `decode_reachable`, `kernel`.
+#[derive(Clone, Debug, Default)]
+pub struct Zones {
+    pub scan: Vec<String>,
+    zones: BTreeMap<String, Zone>,
+}
+
+impl Zones {
+    pub fn parse(src: &str) -> Result<Zones, ManifestError> {
+        let mut zones = Zones::default();
+        let mut section: Option<String> = None;
+        for (idx, raw) in src.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    return Err(ManifestError {
+                        line: lineno,
+                        message: format!("unterminated section header: {raw}"),
+                    });
+                };
+                let Some(zone) = name.strip_prefix("zone.") else {
+                    return Err(ManifestError {
+                        line: lineno,
+                        message: format!("unknown section [{name}] (expected [zone.<name>])"),
+                    });
+                };
+                zones.zones.entry(zone.to_string()).or_default();
+                section = Some(zone.to_string());
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return Err(ManifestError {
+                    line: lineno,
+                    message: format!("expected `key = [..]`, got: {raw}"),
+                });
+            };
+            let key = key.trim();
+            let entries = parse_string_array(value.trim())
+                .map_err(|message| ManifestError { line: lineno, message })?;
+            match (&section, key) {
+                (None, "scan") => zones.scan = entries,
+                (None, other) => {
+                    return Err(ManifestError {
+                        line: lineno,
+                        message: format!("unknown top-level key `{other}`"),
+                    });
+                }
+                (Some(zone), "include") => {
+                    zones.zones.get_mut(zone).unwrap().include = entries;
+                }
+                (Some(zone), "exclude") => {
+                    zones.zones.get_mut(zone).unwrap().exclude = entries;
+                }
+                (Some(_), other) => {
+                    return Err(ManifestError {
+                        line: lineno,
+                        message: format!("unknown zone key `{other}` (expected include/exclude)"),
+                    });
+                }
+            }
+        }
+        if zones.scan.is_empty() {
+            return Err(ManifestError {
+                line: 0,
+                message: "manifest must set `scan = [..]`".to_string(),
+            });
+        }
+        Ok(zones)
+    }
+
+    pub fn zone(&self, name: &str) -> Option<&Zone> {
+        self.zones.get(name)
+    }
+
+    /// Is `path` (lint-root-relative, `/`-separated) in zone `name`?
+    /// Unknown zones contain nothing.
+    pub fn in_zone(&self, name: &str, path: &str) -> bool {
+        self.zones.get(name).is_some_and(|z| z.contains(path))
+    }
+
+    pub fn zone_names(&self) -> impl Iterator<Item = &str> {
+        self.zones.keys().map(String::as_str)
+    }
+}
+
+/// Normalize a path for zone matching: relative, forward slashes.
+pub fn normalize(path: &Path) -> String {
+    let s = path.to_string_lossy().replace('\\', "/");
+    s.strip_prefix("./").unwrap_or(&s).to_string()
+}
+
+/// Strip a `#` comment, respecting double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse `["a", "b"]` (single line, trailing comma tolerated).
+fn parse_string_array(value: &str) -> Result<Vec<String>, String> {
+    let inner = value
+        .strip_prefix('[')
+        .and_then(|v| v.strip_suffix(']'))
+        .ok_or_else(|| format!("expected a [..] array, got: {value}"))?;
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let unq = part
+            .strip_prefix('"')
+            .and_then(|p| p.strip_suffix('"'))
+            .ok_or_else(|| format!("array entries must be double-quoted strings, got: {part}"))?;
+        out.push(unq.to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"
+# comment
+scan = ["rust/src"]
+
+[zone.coded]
+include = ["rust/src/compress/", "rust/src/entropy/", "rust/src/lm/"]
+exclude = ["rust/src/lm/reference.rs"]
+
+[zone.kernel]
+include = ["rust/src/lm/kernels/"]
+"#;
+
+    #[test]
+    fn parses_and_classifies() {
+        let z = Zones::parse(MANIFEST).unwrap();
+        assert_eq!(z.scan, vec!["rust/src"]);
+        assert!(z.in_zone("coded", "rust/src/compress/llm.rs"));
+        assert!(z.in_zone("coded", "rust/src/lm/kernels/avx2.rs"));
+        assert!(!z.in_zone("coded", "rust/src/lm/reference.rs"));
+        assert!(!z.in_zone("coded", "rust/src/coordinator/wire.rs"));
+        assert!(z.in_zone("kernel", "rust/src/lm/kernels/mod.rs"));
+        assert!(!z.in_zone("kernel", "rust/src/lm/native.rs"));
+        assert!(!z.in_zone("nonexistent", "rust/src/lm/native.rs"));
+    }
+
+    #[test]
+    fn exact_file_entries_and_match_all() {
+        let z = Zones::parse(
+            "scan = [\"\"]\n[zone.a]\ninclude = [\"x/y.rs\"]\n[zone.b]\ninclude = [\"\"]\n",
+        )
+        .unwrap();
+        assert!(z.in_zone("a", "x/y.rs"));
+        assert!(!z.in_zone("a", "x/y2.rs"));
+        assert!(z.in_zone("b", "anything/at/all.rs"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Zones::parse("scan = [\"s\"]\n[weird]\n").is_err());
+        assert!(Zones::parse("scan = [\"s\"]\nstray\n").is_err());
+        assert!(Zones::parse("[zone.a]\ninclude = [\"x\"]\n").is_err(), "missing scan");
+        assert!(Zones::parse("scan = [bare]\n").is_err(), "unquoted entry");
+    }
+
+    #[test]
+    fn comment_stripping_respects_strings() {
+        let z = Zones::parse("scan = [\"a#b/\"] # trailing\n[zone.z]\ninclude = [\"a#b/\"]\n")
+            .unwrap();
+        assert!(z.in_zone("z", "a#b/c.rs"));
+    }
+}

@@ -1,0 +1,98 @@
+//! Library-level fixture assertions: exact finding counts per rule,
+//! waiver handling, and zone gating, against `tests/fixtures/`.
+//!
+//! The counts asserted here are the contract the CI fixture legs and
+//! the Python bootstrap mirror (`lint/tools/gen_baseline.py`) are
+//! checked against — change a fixture and all three move together.
+
+use pallas_lint::rules::{Finding, Rule};
+use pallas_lint::scan_tree;
+use pallas_lint::zones::Zones;
+use std::path::{Path, PathBuf};
+
+fn fixture_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+fn scan_fixtures() -> Vec<Finding> {
+    let root = fixture_root();
+    let zones_src = std::fs::read_to_string(root.join("zones.toml")).unwrap();
+    let zones = Zones::parse(&zones_src).unwrap();
+    scan_tree(&root, &zones).unwrap()
+}
+
+fn by_rule(findings: &[Finding], rule: Rule) -> Vec<&Finding> {
+    findings.iter().filter(|f| f.rule == rule).collect()
+}
+
+#[test]
+fn fixture_counts_are_exact() {
+    let findings = scan_fixtures();
+    assert_eq!(by_rule(&findings, Rule::L1).len(), 1);
+    assert_eq!(by_rule(&findings, Rule::L2).len(), 1);
+    assert_eq!(by_rule(&findings, Rule::L3).len(), 2);
+    assert_eq!(by_rule(&findings, Rule::L4).len(), 5);
+    assert_eq!(by_rule(&findings, Rule::L5).len(), 3);
+    assert_eq!(findings.len(), 12, "total across all fixture files");
+}
+
+#[test]
+fn violations_land_in_the_expected_files_and_symbols() {
+    let findings = scan_fixtures();
+    let l1 = by_rule(&findings, Rule::L1);
+    assert_eq!(l1[0].path, "src/decode/l1_bad.rs");
+    assert_eq!(l1[0].symbol, "first");
+
+    // The 4 GiB truncation reproduction: the bare `payload.len() as u32`
+    // the wire layer shipped before check_wire_len existed.
+    let l2 = by_rule(&findings, Rule::L2);
+    assert_eq!(l2[0].path, "src/decode/l2_bad.rs");
+    assert_eq!(l2[0].symbol, "encode_header");
+    assert!(l2[0].message.contains("check_wire_len"), "{}", l2[0].message);
+
+    let l3 = by_rule(&findings, Rule::L3);
+    assert!(l3.iter().all(|f| f.path == "src/decode/l3_bad.rs" && f.symbol == "parse"));
+    assert!(l3.iter().any(|f| f.message.contains("unwrap")));
+    assert!(l3.iter().any(|f| f.message.contains("panic!")));
+
+    // Three HashMap mentions (one at item level), Instant::now, env::var.
+    let l4 = by_rule(&findings, Rule::L4);
+    assert!(l4.iter().all(|f| f.path == "src/coded/l4_bad.rs"));
+    assert_eq!(l4.iter().filter(|f| f.symbol == "-").count(), 1, "use-level HashMap");
+    assert_eq!(l4.iter().filter(|f| f.symbol == "entropy_order").count(), 4);
+
+    let l5 = by_rule(&findings, Rule::L5);
+    assert!(l5.iter().all(|f| f.path == "src/coded/l5_bad.rs" && f.symbol == "blend"));
+}
+
+#[test]
+fn clean_waived_and_kernel_files_produce_nothing() {
+    let findings = scan_fixtures();
+    for quiet in [
+        "src/decode/l1_clean.rs",
+        "src/decode/l2_clean.rs",
+        "src/decode/l3_clean.rs",
+        "src/decode/waiver.rs",
+        "src/coded/l4_clean.rs",
+        "src/kernel/l5_kernel.rs",
+    ] {
+        assert!(
+            findings.iter().all(|f| f.path != quiet),
+            "expected no findings in {quiet}"
+        );
+    }
+}
+
+#[test]
+fn kernel_zone_exempts_l5_but_not_the_other_rules() {
+    // The kernel fixture is byte-identical arithmetic to l5_bad.rs; only
+    // its zone differs. An unsafe block without SAFETY in the kernel
+    // zone must still fire (the kernel L1 baseline ships empty).
+    let root = fixture_root();
+    let zones_src = std::fs::read_to_string(root.join("zones.toml")).unwrap();
+    let zones = Zones::parse(&zones_src).unwrap();
+    let kernel_src = "pub fn peek(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    let f = pallas_lint::rules::scan_file("src/kernel/x.rs", kernel_src, &zones);
+    assert_eq!(f.len(), 1);
+    assert_eq!(f[0].rule, Rule::L1);
+}

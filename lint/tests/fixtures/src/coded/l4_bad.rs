@@ -1,0 +1,16 @@
+//! Fixture: L4 — nondeterminism sources inside a coded zone.
+//! Expected findings: three `HashMap` mentions, one `Instant::now`, one
+//! `env::var` — five in total.
+
+use std::collections::HashMap;
+
+pub fn entropy_order(xs: &[u8]) -> usize {
+    let start = std::time::Instant::now();
+    let mut seen: HashMap<u8, u64> = HashMap::new();
+    for &x in xs {
+        *seen.entry(x).or_insert(0) += 1;
+    }
+    let _ = std::env::var("LLMZIP_SEED");
+    let _ = start;
+    seen.len()
+}

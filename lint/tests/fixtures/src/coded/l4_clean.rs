@@ -1,0 +1,11 @@
+//! Fixture: L4 counterpart — deterministic containers only.
+
+use std::collections::BTreeMap;
+
+pub fn histogram(xs: &[u8]) -> BTreeMap<u8, u64> {
+    let mut h = BTreeMap::new();
+    for &x in xs {
+        *h.entry(x).or_insert(0) += 1;
+    }
+    h
+}

@@ -1,0 +1,8 @@
+//! Fixture: L5 — float arithmetic outside the kernel layer.
+//! Expected findings: one `*` with a float operand, one `mul_add`, one
+//! `.exp()` — three in total.
+
+pub fn blend(x: f32, a: f32, b: f32) -> f32 {
+    let y = x * 0.5f32;
+    y.mul_add(a, b).exp()
+}

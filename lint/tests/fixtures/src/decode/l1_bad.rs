@@ -1,0 +1,6 @@
+//! Fixture: L1 — `unsafe` with no adjacent SAFETY comment.
+
+pub fn first(xs: &[u8]) -> u8 {
+    let p = xs.as_ptr();
+    unsafe { *p }
+}

@@ -1,0 +1,8 @@
+//! Fixture: L1 counterpart — the same read, justified.
+
+pub fn first(xs: &[u8]) -> u8 {
+    assert!(!xs.is_empty());
+    let p = xs.as_ptr();
+    // SAFETY: the assert above guarantees at least one element.
+    unsafe { *p }
+}

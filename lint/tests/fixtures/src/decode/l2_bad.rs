@@ -1,0 +1,16 @@
+//! Fixture: L2 — the 4 GiB wire-truncation bug, verbatim shape.
+//!
+//! This is the exact pattern the coordinator's frame encoder shipped
+//! before PR 9 fixed it: once `payload` reaches 4 GiB the `as u32`
+//! wraps, the header's length field lies, and the peer misparses every
+//! byte that follows. `check_wire_len` (rust/src/coordinator/wire.rs)
+//! is the sanctioned replacement — it refuses over-cap payloads before
+//! any header byte reaches the wire.
+
+pub fn encode_header(typ: u8, req_id: u32, payload: &[u8]) -> Vec<u8> {
+    let mut hdr = vec![0u8; 9];
+    hdr[0] = typ;
+    hdr[1..5].copy_from_slice(&req_id.to_le_bytes());
+    hdr[5..9].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    hdr
+}

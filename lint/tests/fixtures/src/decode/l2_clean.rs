@@ -1,0 +1,5 @@
+//! Fixture: L2 counterpart — widen instead of truncating.
+
+pub fn encoded_len(payload: &[u8]) -> u64 {
+    payload.len() as u64
+}

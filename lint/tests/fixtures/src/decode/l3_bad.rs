@@ -1,0 +1,9 @@
+//! Fixture: L3 — panic paths on the decode side.
+
+pub fn parse(bytes: &[u8]) -> u8 {
+    let first = bytes.first().unwrap();
+    if *first == 0xFF {
+        panic!("reserved marker");
+    }
+    *first
+}

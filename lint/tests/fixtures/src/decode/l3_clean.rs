@@ -1,0 +1,9 @@
+//! Fixture: L3 counterpart — hostile bytes become named errors.
+
+pub fn parse(bytes: &[u8]) -> Result<u8, String> {
+    match bytes.first() {
+        Some(&b) if b != 0xFF => Ok(b),
+        Some(_) => Err("reserved marker".to_string()),
+        None => Err("empty input".to_string()),
+    }
+}

@@ -1,0 +1,7 @@
+//! Fixture: waiver grammar — a violation with a written-down reason is
+//! not reported.
+
+pub fn tail(xs: &[u8]) -> u8 {
+    // lint: allow(L3) fixture: documented invariant, xs is never empty
+    xs.last().copied().unwrap()
+}

@@ -1,0 +1,8 @@
+//! Fixture: L5 counterpart — byte-for-byte the same arithmetic as
+//! `coded/l5_bad.rs`, but in the kernel zone, where the fixed-tree
+//! contract makes float arithmetic the point rather than the bug.
+
+pub fn blend(x: f32, a: f32, b: f32) -> f32 {
+    let y = x * 0.5f32;
+    y.mul_add(a, b).exp()
+}

@@ -1,0 +1,123 @@
+//! End-to-end CLI tests: exit codes, per-rule fixture legs, the
+//! baseline ratchet (growth fails, improvements pass), and the JSON
+//! report — everything CI's `lint` job relies on.
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+/// Run the built binary against the fixture tree with an explicit
+/// baseline file.
+fn lint(baseline: &str, extra: &[&str]) -> Output {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_pallas-lint"));
+    cmd.current_dir(env!("CARGO_MANIFEST_DIR"))
+        .arg("--check")
+        .args(["--root", "tests/fixtures"])
+        .args(["--zones", "zones.toml"])
+        .args(["--baseline", baseline])
+        .args(extra);
+    cmd.output().expect("spawn pallas-lint")
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+/// A scratch path for baselines the tests generate; absolute, so it
+/// survives the CLI's `--root`-relative join.
+fn scratch(name: &str) -> String {
+    let p: PathBuf =
+        std::env::temp_dir().join(format!("pallas-lint-{}-{name}", std::process::id()));
+    p.to_string_lossy().into_owned()
+}
+
+#[test]
+fn empty_baseline_fails_with_regressions() {
+    let out = lint("baseline_empty.txt", &[]);
+    assert_eq!(out.status.code(), Some(1));
+    let text = stdout(&out);
+    assert!(text.contains("REGRESSION"), "{text}");
+    assert!(text.contains("FAIL"), "{text}");
+    // The truncation fixture surfaces with the fix pointer in the message.
+    assert!(text.contains("check_wire_len"), "{text}");
+}
+
+#[test]
+fn each_rule_fails_its_own_fixture_leg() {
+    // `--check --only L<n>` must exit non-zero for every violation
+    // class — the CI legs assert exactly this, one rule at a time.
+    for rule in ["L1", "L2", "L3", "L4", "L5"] {
+        let out = lint("baseline_empty.txt", &["--only", rule]);
+        assert_eq!(out.status.code(), Some(1), "rule {rule} leg must fail");
+        let text = stdout(&out);
+        assert!(text.contains(&format!("REGRESSION {rule}")), "rule {rule}: {text}");
+    }
+}
+
+#[test]
+fn update_then_check_is_clean_and_growth_fails() {
+    let base = scratch("ratchet.txt");
+    // 1. Capture the current findings as the baseline.
+    let out = lint(&base, &["--update-baseline"]);
+    assert_eq!(out.status.code(), Some(0), "{}", stdout(&out));
+    // 2. A check against that baseline is clean.
+    let out = lint(&base, &[]);
+    assert_eq!(out.status.code(), Some(0), "{}", stdout(&out));
+    assert!(stdout(&out).contains("pallas-lint: ok"));
+    // 3. Shrink one allowance (simulating a baseline that predates a
+    //    newly-introduced finding): the ratchet must fail the check.
+    let text = std::fs::read_to_string(&base).unwrap();
+    let shrunk: String = text
+        .lines()
+        .map(|l| {
+            if l.starts_with("L3") {
+                let mut fields: Vec<&str> = l.split('\t').collect();
+                assert_eq!(fields.pop(), Some("2"), "fixture L3 count moved; update this test");
+                format!("{}\t1\n", fields.join("\t"))
+            } else {
+                format!("{l}\n")
+            }
+        })
+        .collect();
+    assert_ne!(shrunk, text, "expected an L3 entry to shrink");
+    std::fs::write(&base, shrunk).unwrap();
+    let out = lint(&base, &[]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stdout(&out).contains("REGRESSION L3"), "{}", stdout(&out));
+    // 4. An allowance larger than reality is only an improvement note.
+    let grown: String = std::fs::read_to_string(&base)
+        .unwrap()
+        .lines()
+        .map(|l| {
+            if l.starts_with("L3") {
+                let mut fields: Vec<&str> = l.split('\t').collect();
+                fields.pop();
+                format!("{}\t9\n", fields.join("\t"))
+            } else {
+                format!("{l}\n")
+            }
+        })
+        .collect();
+    std::fs::write(&base, grown).unwrap();
+    let out = lint(&base, &[]);
+    assert_eq!(out.status.code(), Some(0), "{}", stdout(&out));
+    assert!(stdout(&out).contains("improved"), "{}", stdout(&out));
+    std::fs::remove_file(&base).ok();
+}
+
+#[test]
+fn json_report_carries_the_verdict() {
+    let out = lint("baseline_empty.txt", &["--json"]);
+    assert_eq!(out.status.code(), Some(1));
+    let j = stdout(&out);
+    assert!(j.contains("\"ok\": false"), "{j}");
+    assert!(j.contains("\"rule\": \"L2\""), "{j}");
+    assert_eq!(j.matches('{').count(), j.matches('}').count());
+}
+
+#[test]
+fn missing_baseline_is_a_config_error_not_a_pass() {
+    let out = lint("does_not_exist.txt", &[]);
+    assert_eq!(out.status.code(), Some(2));
+    let err = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(err.contains("--update-baseline"), "{err}");
+}

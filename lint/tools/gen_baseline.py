@@ -1,0 +1,735 @@
+#!/usr/bin/env python3
+"""Bootstrap mirror of pallas-lint for environments without cargo.
+
+This is a line-for-line transliteration of the Rust scanner
+(lint/src/{lexer,zones,rules,baseline}.rs). Its only job is to produce
+`lint/baseline.txt` (and fixture expectations) in environments where the
+Rust toolchain is unavailable, so the committed baseline can exist
+before the first `cargo run -p pallas-lint` ever executes. The Rust
+binary is the source of truth; when both are available, their outputs
+must be identical — `lint/tests/` pins the fixture counts both
+implementations are checked against.
+
+Usage:
+    python3 lint/tools/gen_baseline.py \
+        [--root DIR] [--zones FILE] [--out FILE] [--findings]
+
+`--zones` and `--out` are resolved relative to `--root` (default `.`),
+matching the CLI. `--out -` writes the baseline to stdout; `--findings`
+prints individual findings (rule, path, line, symbol, message) instead.
+"""
+
+import os
+import sys
+
+# ---------------------------------------------------------------- lexer
+# Mirrors lint/src/lexer.rs. Tokens are (kind, text, line) with kinds:
+IDENT = "Ident"
+LIFETIME = "Lifetime"
+INT = "Int"
+FLOAT = "Float"
+STR = "Str"
+CHAR = "Char"
+LINE_COMMENT = "LineComment"
+BLOCK_COMMENT = "BlockComment"
+PUNCT = "Punct"
+
+MULTI_PUNCT = [
+    "<<=", ">>=", "..=", "...", "::", "->", "=>", "==", "!=", "<=", ">=",
+    "&&", "||", "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=", "<<", ">>",
+    "..",
+]
+
+
+def _is_ident_start(c):
+    return c.isalpha() or c == "_"
+
+
+def _is_ident_cont(c):
+    return c.isalnum() or c == "_"
+
+
+class _Lexer:
+    def __init__(self, src):
+        # Decode as the Rust side does (lossy): errors never abort a scan.
+        self.b = src
+        self.i = 0
+        self.line = 1
+        self.out = []
+
+    def peek(self, ahead=0):
+        j = self.i + ahead
+        return self.b[j] if j < len(self.b) else "\0"
+
+    def bump(self):
+        if self.peek(0) == "\n":
+            self.line += 1
+        self.i += 1
+
+    def push(self, kind, start, line):
+        self.out.append((kind, self.b[start:self.i], line))
+
+    def run(self):
+        while self.i < len(self.b):
+            c = self.peek(0)
+            start, line = self.i, self.line
+            if c.isspace():
+                self.bump()
+            elif c == "/" and self.peek(1) == "/":
+                while self.i < len(self.b) and self.peek(0) != "\n":
+                    self.bump()
+                self.push(LINE_COMMENT, start, line)
+            elif c == "/" and self.peek(1) == "*":
+                self.block_comment()
+                self.push(BLOCK_COMMENT, start, line)
+            elif c == "r" and self.raw_string_ahead_at(0):
+                self.raw_string()
+                self.push(STR, start, line)
+            elif c == "b" and self.peek(1) == "r" and self.raw_string_ahead_at(1):
+                self.bump()
+                self.raw_string()
+                self.push(STR, start, line)
+            elif c == "b" and self.peek(1) == '"':
+                self.bump()
+                self.quoted('"')
+                self.push(STR, start, line)
+            elif c == "b" and self.peek(1) == "'":
+                self.bump()
+                self.quoted("'")
+                self.push(CHAR, start, line)
+            elif c == "r" and self.peek(1) == "#" and _is_ident_start(self.peek(2)):
+                self.bump()
+                self.bump()
+                while _is_ident_cont(self.peek(0)):
+                    self.bump()
+                self.out.append((IDENT, self.b[start + 2:self.i], line))
+            elif _is_ident_start(c):
+                while _is_ident_cont(self.peek(0)):
+                    self.bump()
+                self.push(IDENT, start, line)
+            elif c.isdigit():
+                kind = self.number()
+                self.push(kind, start, line)
+            elif c == '"':
+                self.quoted('"')
+                self.push(STR, start, line)
+            elif c == "'":
+                self.lifetime_or_char(start, line)
+            else:
+                self.punct(start, line)
+        return self.out
+
+    def block_comment(self):
+        self.bump()
+        self.bump()
+        depth = 1
+        while self.i < len(self.b) and depth > 0:
+            if self.peek(0) == "/" and self.peek(1) == "*":
+                depth += 1
+                self.bump()
+                self.bump()
+            elif self.peek(0) == "*" and self.peek(1) == "/":
+                depth -= 1
+                self.bump()
+                self.bump()
+            else:
+                self.bump()
+
+    def raw_string_ahead_at(self, at):
+        j = at + 1
+        while self.peek(j) == "#":
+            j += 1
+        return self.peek(j) == '"'
+
+    def raw_string(self):
+        self.bump()  # r
+        hashes = 0
+        while self.peek(0) == "#":
+            hashes += 1
+            self.bump()
+        self.bump()  # opening quote
+        while self.i < len(self.b):
+            if self.peek(0) == '"':
+                ok = all(self.peek(1 + k) == "#" for k in range(hashes))
+                if ok:
+                    for _ in range(hashes + 1):
+                        self.bump()
+                    return
+            self.bump()
+
+    def quoted(self, q):
+        self.bump()
+        while self.i < len(self.b):
+            c = self.peek(0)
+            if c == "\\":
+                self.bump()
+                self.bump()
+            elif c == q:
+                self.bump()
+                return
+            else:
+                self.bump()
+
+    def number(self):
+        is_float = False
+        if self.peek(0) == "0" and self.peek(1) in ("x", "o", "b"):
+            self.bump()
+            self.bump()
+            while _is_ident_cont(self.peek(0)):
+                self.bump()
+            return INT
+        while self.peek(0).isdigit() or self.peek(0) == "_":
+            self.bump()
+        if self.peek(0) == "." and self.peek(1).isdigit():
+            is_float = True
+            self.bump()
+            while self.peek(0).isdigit() or self.peek(0) == "_":
+                self.bump()
+        if self.peek(0) in ("e", "E") and (
+            self.peek(1).isdigit()
+            or (self.peek(1) in ("+", "-") and self.peek(2).isdigit())
+        ):
+            is_float = True
+            self.bump()
+            self.bump()
+            while self.peek(0).isdigit() or self.peek(0) == "_":
+                self.bump()
+        suffix_at = self.i
+        while _is_ident_cont(self.peek(0)):
+            self.bump()
+        suffix = self.b[suffix_at:self.i]
+        if suffix in ("f32", "f64"):
+            is_float = True
+        return FLOAT if is_float else INT
+
+    def lifetime_or_char(self, start, line):
+        if self.peek(1) == "\\":
+            self.quoted("'")
+            self.push(CHAR, start, line)
+        elif _is_ident_start(self.peek(1)):
+            j = 2
+            while _is_ident_cont(self.peek(j)):
+                j += 1
+            if self.peek(j) == "'":
+                self.quoted("'")
+                self.push(CHAR, start, line)
+            else:
+                self.bump()
+                while _is_ident_cont(self.peek(0)):
+                    self.bump()
+                self.push(LIFETIME, start, line)
+        else:
+            self.quoted("'")
+            self.push(CHAR, start, line)
+
+    def punct(self, start, line):
+        for op in MULTI_PUNCT:
+            if self.b.startswith(op, self.i):
+                for _ in range(len(op)):
+                    self.bump()
+                self.push(PUNCT, start, line)
+                return
+        self.bump()
+        self.push(PUNCT, start, line)
+
+
+def lex(src):
+    return _Lexer(src).run()
+
+
+# ---------------------------------------------------------------- zones
+# Mirrors lint/src/zones.rs (the same TOML subset, same errors).
+
+
+def _strip_comment(line):
+    in_str = False
+    for i, c in enumerate(line):
+        if c == '"':
+            in_str = not in_str
+        elif c == "#" and not in_str:
+            return line[:i]
+    return line
+
+
+def _parse_string_array(value, lineno):
+    if not (value.startswith("[") and value.endswith("]")):
+        raise SystemExit(f"zones manifest line {lineno}: expected a [..] array, got: {value}")
+    out = []
+    for part in value[1:-1].split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if not (part.startswith('"') and part.endswith('"') and len(part) >= 2):
+            raise SystemExit(
+                f"zones manifest line {lineno}: array entries must be double-quoted "
+                f"strings, got: {part}"
+            )
+        out.append(part[1:-1])
+    return out
+
+
+def parse_zones(src):
+    scan = []
+    zones = {}
+    section = None
+    for idx, raw in enumerate(src.split("\n")):
+        lineno = idx + 1
+        line = _strip_comment(raw).strip()
+        if not line:
+            continue
+        if line.startswith("["):
+            if not line.endswith("]"):
+                raise SystemExit(
+                    f"zones manifest line {lineno}: unterminated section header: {raw}"
+                )
+            name = line[1:-1]
+            if not name.startswith("zone."):
+                raise SystemExit(
+                    f"zones manifest line {lineno}: unknown section [{name}] "
+                    f"(expected [zone.<name>])"
+                )
+            section = name[len("zone."):]
+            zones.setdefault(section, {"include": [], "exclude": []})
+            continue
+        if "=" not in line:
+            raise SystemExit(f"zones manifest line {lineno}: expected `key = [..]`, got: {raw}")
+        key, value = line.split("=", 1)
+        key = key.strip()
+        entries = _parse_string_array(value.strip(), lineno)
+        if section is None:
+            if key != "scan":
+                raise SystemExit(f"zones manifest line {lineno}: unknown top-level key `{key}`")
+            scan = entries
+        elif key in ("include", "exclude"):
+            zones[section][key] = entries
+        else:
+            raise SystemExit(
+                f"zones manifest line {lineno}: unknown zone key `{key}` "
+                f"(expected include/exclude)"
+            )
+    if not scan:
+        raise SystemExit("zones manifest: must set `scan = [..]`")
+    return scan, zones
+
+
+def _matches_entry(entry, path):
+    return entry == "" or path == entry or path.startswith(entry)
+
+
+def in_zone(zones, name, path):
+    z = zones.get(name)
+    if z is None:
+        return False
+    if any(_matches_entry(e, path) for e in z["exclude"]):
+        return False
+    return any(_matches_entry(e, path) for e in z["include"])
+
+
+def normalize(path):
+    s = path.replace("\\", "/")
+    return s[2:] if s.startswith("./") else s
+
+
+# ---------------------------------------------------------------- rules
+# Mirrors lint/src/rules.rs. Findings are (rule, path, line, symbol,
+# message) tuples.
+
+RULES = ["L1", "L2", "L3", "L4", "L5"]
+WAIVER_MARK = "lint: allow("
+CAST_LOOKBACK = 12
+CAST_STOPPERS = (";", "{", "}", ",", "=")
+PANIC_MACROS = ("panic", "unreachable", "todo", "unimplemented")
+FLOAT_METHODS = (
+    "exp", "exp2", "exp_m1", "ln", "ln_1p", "log2", "log10", "powf", "powi",
+    "sqrt", "recip", "hypot", "sin", "cos", "tan", "to_degrees", "to_radians",
+)
+ARITH_OPS = ("+", "-", "*", "/", "+=", "-=", "*=", "/=")
+UNARY_PREV = ("return", "as", "else", "in", "match", "if", "while")
+
+
+def _parse_rule(s):
+    s = s.upper()
+    return s if s in RULES else None
+
+
+def collect_waivers(toks):
+    waivers = {}
+    for kind, text, line in toks:
+        if kind not in (LINE_COMMENT, BLOCK_COMMENT):
+            continue
+        pos = text.find(WAIVER_MARK)
+        if pos < 0:
+            continue
+        rest = text[pos + len(WAIVER_MARK):]
+        end = rest.find(")")
+        if end < 0:
+            continue
+        rules = []
+        for piece in rest[:end].replace(",", " ").split(" "):
+            r = _parse_rule(piece)
+            if r:
+                rules.append(r)
+        if rules:
+            waivers.setdefault(line, []).extend(rules)
+    return waivers
+
+
+def waived(waivers, rule, line):
+    if rule in waivers.get(line, ()):
+        return True
+    return line > 1 and rule in waivers.get(line - 1, ())
+
+
+def test_item_mask(t):
+    skip = [False] * len(t)
+    i = 0
+    while i < len(t):
+        if not (t[i][0] == PUNCT and t[i][1] == "#"):
+            i += 1
+            continue
+        j = i + 1
+        if j < len(t) and t[j][0] == PUNCT and t[j][1] == "!":
+            j += 1
+        if not (j < len(t) and t[j][0] == PUNCT and t[j][1] == "["):
+            i += 1
+            continue
+        depth = 0
+        has_test = False
+        has_not = False
+        while j < len(t):
+            kind, text = t[j][0], t[j][1]
+            if kind == PUNCT and text == "[":
+                depth += 1
+            elif kind == PUNCT and text == "]":
+                depth -= 1
+                if depth == 0:
+                    break
+            elif kind == IDENT and text == "test":
+                has_test = True
+            elif kind == IDENT and text == "not":
+                has_not = True
+            j += 1
+        if has_test and not has_not:
+            end = item_end(t, j + 1)
+            for s in range(i, end):
+                skip[s] = True
+            i = end
+        else:
+            i = j + 1
+    return skip
+
+
+def item_end(t, i):
+    brace = 0
+    while i < len(t):
+        if t[i][0] == PUNCT:
+            text = t[i][1]
+            if text == "{":
+                brace += 1
+            elif text == "}":
+                brace -= 1
+                if brace <= 0:
+                    return i + 1
+            elif text == ";" and brace == 0:
+                return i + 1
+        i += 1
+    return len(t)
+
+
+def enclosing_fn(t):
+    out = []
+    stack = []
+    depth = 0
+    pending = None
+    for i, (kind, text, _line) in enumerate(t):
+        out.append(stack[-1][0] if stack else "-")
+        if kind == IDENT and text == "fn":
+            if i + 1 < len(t) and t[i + 1][0] == IDENT:
+                pending = t[i + 1][1]
+        elif kind == PUNCT and text == "{":
+            depth += 1
+            if pending is not None:
+                stack.append((pending, depth))
+                pending = None
+        elif kind == PUNCT and text == "}":
+            if stack and stack[-1][1] == depth:
+                stack.pop()
+            depth -= 1
+        elif kind == PUNCT and text == ";":
+            pending = None
+    return out
+
+
+def _has_safety(line):
+    return "SAFETY" in line or "# Safety" in line
+
+
+def safety_nearby(lines, line):
+    idx = line - 1
+    if idx < len(lines) and _has_safety(lines[idx]):
+        return True
+    k = idx
+    while k > 0:
+        k -= 1
+        trimmed = lines[k].lstrip()
+        carrier = (
+            trimmed.startswith("//")
+            or trimmed.startswith("#[")
+            or trimmed.startswith("#!")
+        )
+        if not carrier:
+            return False
+        if _has_safety(trimmed):
+            return True
+    return False
+
+
+def _length_like(name):
+    n = name.lower()
+    return (
+        "len" in n
+        or n.endswith("size")
+        or n.endswith("count")
+        or n.endswith("capacity")
+        or n.endswith("offset")
+        or n.endswith("off")
+        or n.startswith("n_")
+    )
+
+
+def _ident_at(t, j, text):
+    return 0 <= j < len(t) and t[j][0] == IDENT and t[j][1] == text
+
+
+def _punct_at(t, j, text):
+    return 0 <= j < len(t) and t[j][0] == PUNCT and t[j][1] == text
+
+
+def _floaty(tok):
+    if tok is None:
+        return False
+    kind, text = tok[0], tok[1]
+    return kind == FLOAT or (kind == IDENT and text in ("f32", "f64"))
+
+
+def scan_file(path, src, scan_zones):
+    coded = in_zone(scan_zones, "coded", path)
+    decode = in_zone(scan_zones, "decode_reachable", path)
+    kernel = in_zone(scan_zones, "kernel", path)
+
+    all_toks = lex(src)
+    lines = [l[:-1] if l.endswith("\r") else l for l in src.split("\n")]
+    waivers = collect_waivers(all_toks)
+    t = [tok for tok in all_toks if tok[0] not in (LINE_COMMENT, BLOCK_COMMENT)]
+    skip = test_item_mask(t)
+    symbols = enclosing_fn(t)
+
+    out = []
+
+    def push(rule, j, message, symbol=None):
+        out.append((rule, path, t[j][2], symbol if symbol else symbols[j], message))
+
+    # L1 — every file under scan.
+    for j, (kind, text, line) in enumerate(t):
+        if skip[j] or kind != IDENT or text != "unsafe":
+            continue
+        if safety_nearby(lines, line):
+            continue
+        symbol = None
+        if _ident_at(t, j + 1, "fn") and j + 2 < len(t) and t[j + 2][0] == IDENT:
+            symbol = t[j + 2][1]
+        push("L1", j, "`unsafe` without an adjacent `// SAFETY:` comment", symbol)
+
+    if decode:
+        # L2 — truncating casts on length-like expressions.
+        for j, (kind, text, _line) in enumerate(t):
+            if skip[j] or kind != IDENT or text != "as":
+                continue
+            if not (_ident_at(t, j + 1, "u16") or _ident_at(t, j + 1, "u32")):
+                continue
+            ty = t[j + 1][1]
+            culprit = None
+            for back in range(1, CAST_LOOKBACK + 1):
+                k = j - back
+                if k < 0:
+                    break
+                pk, pt = t[k][0], t[k][1]
+                if pk == PUNCT and pt in CAST_STOPPERS:
+                    break
+                if pk == IDENT and _length_like(pt):
+                    culprit = pt
+                    break
+            if culprit is not None:
+                push(
+                    "L2", j,
+                    f"truncating `as {ty}` on length-like `{culprit}` "
+                    f"(route through check_wire_len)",
+                )
+        # L3 — panic paths.
+        for j, (kind, text, _line) in enumerate(t):
+            if skip[j] or kind != IDENT:
+                continue
+            if (
+                text in ("unwrap", "expect")
+                and j > 0
+                and _punct_at(t, j - 1, ".")
+                and _punct_at(t, j + 1, "(")
+            ):
+                push("L3", j, f"`.{text}()` in decode-reachable code")
+            elif text in PANIC_MACROS and _punct_at(t, j + 1, "!"):
+                push("L3", j, f"`{text}!` in decode-reachable code")
+
+    if coded:
+        # L4 — nondeterminism sources.
+        for j, (kind, text, _line) in enumerate(t):
+            if skip[j] or kind != IDENT:
+                continue
+            if text in ("HashMap", "HashSet"):
+                push("L4", j, f"`{text}` iteration order is nondeterministic")
+            elif text == "SystemTime":
+                push("L4", j, "`SystemTime` in a coded zone")
+            elif text == "Instant" and _punct_at(t, j + 1, "::") and _ident_at(t, j + 2, "now"):
+                push("L4", j, "`Instant::now` in a coded zone")
+            elif text == "env":
+                read = _punct_at(t, j + 1, "::") and (
+                    _ident_at(t, j + 2, "var") or _ident_at(t, j + 2, "var_os")
+                )
+                if read:
+                    push("L4", j, f"`env::{t[j + 2][1]}` reads the environment")
+        if not kernel:
+            # L5 — float arithmetic and methods.
+            for j, (kind, text, _line) in enumerate(t):
+                if skip[j]:
+                    continue
+                if kind == IDENT and j > 0 and _punct_at(t, j - 1, "."):
+                    if text == "mul_add":
+                        push("L5", j, "`mul_add` outside lm/kernels")
+                        continue
+                    if text in FLOAT_METHODS and _punct_at(t, j + 1, "("):
+                        push("L5", j, f"float method `.{text}()` outside lm/kernels")
+                        continue
+                if kind != PUNCT or text not in ARITH_OPS:
+                    continue
+                if text == "-" and _minus_is_unary(t, j):
+                    continue
+                prev = t[j - 1] if j > 0 else None
+                nxt = t[j + 1] if j + 1 < len(t) else None
+                if _floaty(prev) or _floaty(nxt):
+                    push("L5", j, f"float arithmetic `{text}` outside lm/kernels")
+
+    out = [f for f in out if not waived(waivers, f[0], f[2])]
+    out.sort(key=lambda f: (f[2], f[0]))
+    return out
+
+
+def _minus_is_unary(t, j):
+    if j == 0:
+        return True
+    kind, text = t[j - 1][0], t[j - 1][1]
+    if kind == PUNCT:
+        return text not in (")", "]")
+    if kind == IDENT:
+        return text in UNARY_PREV
+    return False
+
+
+# ------------------------------------------------------------- baseline
+
+HEADER = (
+    "# pallas-lint baseline: pre-existing findings, allowed to shrink but "
+    "never to grow.\n"
+    "# Format: rule<TAB>path<TAB>symbol<TAB>count (sorted). Do not edit by "
+    "hand;\n"
+    "# regenerate with `cargo run -p pallas-lint -- --update-baseline` after "
+    "fixing findings.\n"
+)
+
+
+def render_baseline(findings):
+    counts = {}
+    for rule, path, _line, symbol, _message in findings:
+        key = (rule, path, symbol)
+        counts[key] = counts.get(key, 0) + 1
+    out = [HEADER]
+    for (rule, path, symbol) in sorted(counts):
+        out.append(f"{rule}\t{path}\t{symbol}\t{counts[(rule, path, symbol)]}\n")
+    return "".join(out)
+
+
+# ----------------------------------------------------------------- walk
+
+
+def collect_rs_files(root, scan):
+    files = []
+
+    def walk(d):
+        if os.path.isfile(d):
+            files.append(d)
+            return
+        entries = sorted(os.path.join(d, e) for e in os.listdir(d))
+        for p in entries:
+            if os.path.isdir(p):
+                walk(p)
+            elif p.endswith(".rs"):
+                files.append(p)
+
+    for s in scan:
+        walk(os.path.join(root, s) if s else root)
+    return sorted(set(files))
+
+
+def scan_tree(root, scan, zones):
+    findings = []
+    for f in collect_rs_files(root, scan):
+        with open(f, "r", encoding="utf-8", errors="replace") as fh:
+            src = fh.read()
+        rel = os.path.relpath(f, root)
+        findings.extend(scan_file(normalize(rel), src, zones))
+    return findings
+
+
+# ----------------------------------------------------------------- main
+
+
+def main(argv):
+    root, zones_path, out_path, list_findings = ".", "lint/zones.toml", "lint/baseline.txt", False
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--root":
+            i += 1
+            root = argv[i]
+        elif a == "--zones":
+            i += 1
+            zones_path = argv[i]
+        elif a == "--out":
+            i += 1
+            out_path = argv[i]
+        elif a == "--findings":
+            list_findings = True
+        else:
+            raise SystemExit(f"unknown argument `{a}` (see the module docstring)")
+        i += 1
+    with open(os.path.join(root, zones_path), "r", encoding="utf-8") as fh:
+        scan, zones = parse_zones(fh.read())
+    findings = scan_tree(root, scan, zones)
+    if list_findings:
+        for rule, path, line, symbol, message in findings:
+            sys.stdout.write(f"{rule}\t{path}\t{line}\t{symbol}\t{message}\n")
+        sys.stdout.write(f"# {len(findings)} finding(s)\n")
+        return
+    rendered = render_baseline(findings)
+    if out_path == "-":
+        sys.stdout.write(rendered)
+    else:
+        target = os.path.join(root, out_path)
+        with open(target, "w", encoding="utf-8") as fh:
+            fh.write(rendered)
+        entries = sum(1 for l in rendered.splitlines() if l and not l.startswith("#"))
+        sys.stdout.write(
+            f"gen_baseline: wrote {entries} entries ({len(findings)} findings) to {target}\n"
+        )
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -906,7 +906,7 @@ impl LlmCompressor {
         if touched.is_empty() {
             return Ok(Vec::new());
         }
-        let first_start = cont.token_start(touched.start);
+        let first_start = cont.token_start(touched.start)?;
         let indices: Vec<usize> = touched.collect();
         let mut engine = self.engine.borrow_mut();
         let lanes = engine.lanes();

@@ -107,7 +107,10 @@ impl ContainerSource for FileSource {
     #[cfg(not(unix))]
     fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
         use std::io::{Read, Seek, SeekFrom};
-        let mut f = self.file.lock().expect("file lock");
+        // A poisoned lock only means another reader panicked mid-read; the
+        // file handle itself carries no invariants, so recover the guard
+        // rather than propagating the panic into the decode path.
+        let mut f = self.file.lock().unwrap_or_else(|p| p.into_inner());
         f.seek(SeekFrom::Start(offset))?;
         f.read_exact(buf)?;
         Ok(())
@@ -212,7 +215,9 @@ impl<'a> SeekableContainer<'a> {
             };
             frame_offsets.push(comp_off);
             token_starts.push(token_off);
-            comp_off += (FRAME_HEADER as u32 + rec.comp_len) as u64;
+            // Widen BEFORE adding: `comp_len` is attacker-controlled index
+            // bytes, and `FRAME_HEADER as u32 + comp_len` wraps at 4 GiB.
+            comp_off += FRAME_HEADER as u64 + rec.comp_len as u64;
             token_off += rec.n_tokens as u64;
             records.push(rec);
         }
@@ -267,9 +272,14 @@ impl<'a> SeekableContainer<'a> {
         &self.records
     }
 
-    /// Decoded-byte offset at which chunk `i` begins.
-    pub fn token_start(&self, i: usize) -> u64 {
-        self.token_starts[i]
+    /// Decoded-byte offset at which chunk `i` begins. An out-of-range
+    /// index is a caller bug, but this is decode-reachable code, so it
+    /// reports instead of panicking.
+    pub fn token_start(&self, i: usize) -> Result<u64> {
+        match self.token_starts.get(i) {
+            Some(&s) => Ok(s),
+            None => anyhow::bail!("chunk {i} out of range (container has {})", self.records.len()),
+        }
     }
 
     /// Total bytes fetched from the source so far (header + trailer +

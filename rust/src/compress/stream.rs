@@ -53,6 +53,19 @@ fn to_io(e: anyhow::Error) -> std::io::Error {
     std::io::Error::other(format!("{e:#}"))
 }
 
+/// Validate a chunk/payload length against the container's u32 frame
+/// fields and [`MAX_FRAME_BYTES`]. A bare `len as u32` here would
+/// silently truncate at 4 GiB and write a frame header that lies about
+/// its own payload — the same bug class the wire layer's
+/// `check_wire_len` closed.
+fn check_frame_len(len: usize, what: &str) -> Result<u32> {
+    if len > MAX_FRAME_BYTES as usize {
+        anyhow::bail!("{what} length {len} exceeds the {MAX_FRAME_BYTES}-byte frame cap");
+    }
+    // lint: allow(L2) the sanctioned truncation point; bounds-checked above
+    Ok(len as u32)
+}
+
 /// What a finished streaming session produced.
 #[derive(Clone, Copy, Debug)]
 pub struct StreamSummary {
@@ -104,13 +117,14 @@ impl<'c, W: Write> CompressWriter<'c, W> {
     fn encode_group(&mut self, chunks: &[&[u8]]) -> Result<()> {
         let compressed = self.comp.compress_chunks(chunks)?;
         for (chunk, comp) in chunks.iter().zip(&compressed) {
-            self.emit_frame(chunk.len() as u32, comp)?;
+            self.emit_frame(check_frame_len(chunk.len(), "chunk")?, comp)?;
         }
         Ok(())
     }
 
     fn emit_frame(&mut self, n_tokens: u32, payload: &[u8]) -> Result<()> {
-        let rec = ChunkRecord { comp_len: payload.len() as u32, n_tokens };
+        let comp_len = check_frame_len(payload.len(), "compressed frame")?;
+        let rec = ChunkRecord { comp_len, n_tokens };
         self.inner.write_all(&Container::v2_frame_header(rec))?;
         self.inner.write_all(payload)?;
         self.written += (FRAME_HEADER + payload.len()) as u64;
@@ -409,14 +423,23 @@ impl<'c, R: Read> DecompressReader<'c, R> {
     /// totals + EOF.
     fn read_and_verify_trailer(&mut self, marker_off: u64) -> Result<()> {
         let n_chunks = self.read_u32()? as usize;
-        let Frames::V2 { seen } = &self.frames else { unreachable!("trailer is v2-only") };
-        if n_chunks != seen.len() {
-            anyhow::bail!("trailer counts {n_chunks} chunks, stream carried {}", seen.len());
+        // Only the v2 arm of `next_chunk` calls this, but the input is
+        // hostile bytes: report state confusion as a decode error rather
+        // than panicking mid-stream.
+        let seen_count = match &self.frames {
+            Frames::V2 { seen } => seen.len(),
+            Frames::V1 { .. } => anyhow::bail!("v2 trailer encountered in a v1 container"),
+        };
+        if n_chunks != seen_count {
+            anyhow::bail!("trailer counts {n_chunks} chunks, stream carried {seen_count}");
         }
         for i in 0..n_chunks {
             let rec = ChunkRecord { comp_len: self.read_u32()?, n_tokens: self.read_u32()? };
-            let Frames::V2 { seen } = &self.frames else { unreachable!() };
-            if rec != seen[i] {
+            let matches = match &self.frames {
+                Frames::V2 { seen } => rec == seen[i],
+                Frames::V1 { .. } => false,
+            };
+            if !matches {
                 anyhow::bail!(
                     "trailer index entry {i} disagrees with the stream's frame header"
                 );
@@ -485,8 +508,15 @@ impl<'c, R: Read> DecompressReader<'c, R> {
                     }
                 }
                 if !group.is_empty() {
-                    let Frames::V2 { seen } = &mut self.frames else { unreachable!() };
-                    seen.extend(group.iter().map(|(r, _)| *r));
+                    // The enclosing match arm proved v2; losing that state
+                    // mid-group is a bug, but this path decodes hostile
+                    // bytes, so it reports instead of panicking.
+                    match &mut self.frames {
+                        Frames::V2 { seen } => seen.extend(group.iter().map(|(r, _)| *r)),
+                        Frames::V1 { .. } => {
+                            anyhow::bail!("decoder lost v2 framing state mid-stream")
+                        }
+                    }
                     self.decode_group(group)?;
                 }
                 if let Some(marker_off) = trailer_at {

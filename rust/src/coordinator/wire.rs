@@ -99,7 +99,18 @@ fn check_wire_len(len: usize) -> Result<u32> {
     if len > MAX_PAYLOAD {
         anyhow::bail!("payload too large for wire frame: {len} bytes (cap {MAX_PAYLOAD})");
     }
+    // lint: allow(L2) the sanctioned truncation point; bounds-checked above
     Ok(len as u32)
+}
+
+/// Validate a route-key length against the u16 field of the tagged-frame
+/// payload. Same contract as [`check_wire_len`], one field narrower.
+fn check_key_len(len: usize) -> Result<u16> {
+    if len > u16::MAX as usize {
+        anyhow::bail!("route key too long for the tagged frame ({len} bytes)");
+    }
+    // lint: allow(L2) the sanctioned truncation point; bounds-checked above
+    Ok(len as u16)
 }
 
 /// Cap an error message to something the frame can always carry. Byte
@@ -635,13 +646,11 @@ impl MuxClient {
         data: &[u8],
         interactive: bool,
     ) -> Result<u32> {
-        if route.len() > u16::MAX as usize {
-            anyhow::bail!("route key too long for the tagged frame ({} bytes)", route.len());
-        }
+        let key_len = check_key_len(route.len())?;
         let id = self.ids.alloc()?;
         let mut payload = Vec::with_capacity(3 + route.len() + data.len());
         payload.push(interactive as u8);
-        payload.extend_from_slice(&(route.len() as u16).to_le_bytes());
+        payload.extend_from_slice(&key_len.to_le_bytes());
         payload.extend_from_slice(route.as_bytes());
         payload.extend_from_slice(data);
         self.send(MSG_COMPRESS_TAGGED, id, &payload)?;

@@ -14,16 +14,21 @@
 //!   lane sums accumulate in i32, where order is free.
 //!
 //! Callers must verify `avx2` support (done once at model load); every
-//! `unsafe fn` here is `#[target_feature(enable = "avx2")]`.
+//! `unsafe fn` here is `#[target_feature(enable = "avx2")]`. Inside
+//! these bodies the value-only intrinsics are safe; the explicit
+//! `unsafe` blocks below mark exactly the pointer loads/stores, each
+//! with the bound that keeps it in-range.
 
 use super::{PanelF32, PanelI8, F32_LANES, F32_PANEL_COLS, I8_LANES};
 use core::arch::x86_64::*;
 
 /// Canonical tree combine of 8 f32 lanes — identical adds, identical
-/// order to `scalar::combine8`.
+/// order to `scalar::combine8`. Value-only (no memory access), so it is
+/// a safe `#[target_feature]` fn: callable without `unsafe` from the
+/// AVX2 kernels, never from generic code.
 #[inline]
 #[target_feature(enable = "avx2")]
-unsafe fn hsum8(acc: __m256) -> f32 {
+fn hsum8(acc: __m256) -> f32 {
     let lo = _mm256_castps256_ps128(acc);
     let hi = _mm256_extractf128_ps(acc, 1);
     let s = _mm_add_ps(lo, hi); // s_k = l_k + l_{k+4}
@@ -32,10 +37,11 @@ unsafe fn hsum8(acc: __m256) -> f32 {
     _mm_cvtss_f32(t)
 }
 
-/// Exact horizontal i32 sum (order-free).
+/// Exact horizontal i32 sum (order-free). Value-only, safe to call from
+/// AVX2 contexts (see `hsum8`).
 #[inline]
 #[target_feature(enable = "avx2")]
-unsafe fn hsum_i32(acc: __m256i) -> i32 {
+fn hsum_i32(acc: __m256i) -> i32 {
     let lo = _mm256_castsi256_si128(acc);
     let hi = _mm256_extracti128_si256(acc, 1);
     let s = _mm_add_epi32(lo, hi);
@@ -45,7 +51,7 @@ unsafe fn hsum_i32(acc: __m256i) -> i32 {
 }
 
 /// # Safety
-/// Requires AVX2 (checked once at model load).
+/// Requires AVX2 (checked once at model load); `a.len() == b.len()`.
 #[target_feature(enable = "avx2")]
 pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -53,8 +59,11 @@ pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     let mut acc = _mm256_setzero_ps();
     let mut i = 0;
     while i + F32_LANES <= n {
-        let va = _mm256_loadu_ps(a.as_ptr().add(i));
-        let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+        // SAFETY: i + F32_LANES <= n and both slices hold n elements,
+        // so each unaligned 8-lane load stays in bounds.
+        let va = unsafe { _mm256_loadu_ps(a.as_ptr().add(i)) };
+        // SAFETY: same bound as `va` above.
+        let vb = unsafe { _mm256_loadu_ps(b.as_ptr().add(i)) };
         acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
         i += F32_LANES;
     }
@@ -63,15 +72,17 @@ pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
         let mut tb = [0.0f32; F32_LANES];
         ta[..n - i].copy_from_slice(&a[i..]);
         tb[..n - i].copy_from_slice(&b[i..]);
-        let va = _mm256_loadu_ps(ta.as_ptr());
-        let vb = _mm256_loadu_ps(tb.as_ptr());
+        // SAFETY: ta/tb are exactly F32_LANES-wide stack arrays.
+        let (va, vb) = unsafe { (_mm256_loadu_ps(ta.as_ptr()), _mm256_loadu_ps(tb.as_ptr())) };
         acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
     }
     hsum8(acc)
 }
 
 /// # Safety
-/// Requires AVX2 (checked once at model load).
+/// Requires AVX2 (checked once at model load); slice geometry per
+/// `super::matmul_f32` (xs is n×d_in, ys is n×d_out, p packs d_out
+/// columns of d_in_pad-padded weights).
 #[target_feature(enable = "avx2")]
 pub unsafe fn matmul_f32_panel(
     n: usize,
@@ -92,27 +103,35 @@ pub unsafe fn matmul_f32_panel(
         }
         let y = &mut ys[l * d_out..(l + 1) * d_out];
         for pi in 0..n_panels {
-            let base = p.data.as_ptr().add(pi * F32_PANEL_COLS * p.d_in_pad);
-            let mut a0 = _mm256_setzero_ps();
-            let mut a1 = _mm256_setzero_ps();
-            let mut a2 = _mm256_setzero_ps();
-            let mut a3 = _mm256_setzero_ps();
-            for k in 0..full {
-                let xv = _mm256_loadu_ps(x.as_ptr().add(k * F32_LANES));
-                let g = base.add(k * F32_LANES * F32_PANEL_COLS);
-                a0 = _mm256_add_ps(a0, _mm256_mul_ps(xv, _mm256_loadu_ps(g)));
-                a1 = _mm256_add_ps(a1, _mm256_mul_ps(xv, _mm256_loadu_ps(g.add(8))));
-                a2 = _mm256_add_ps(a2, _mm256_mul_ps(xv, _mm256_loadu_ps(g.add(16))));
-                a3 = _mm256_add_ps(a3, _mm256_mul_ps(xv, _mm256_loadu_ps(g.add(24))));
-            }
-            if rem > 0 {
-                let xv = _mm256_loadu_ps(xt.as_ptr());
-                let g = base.add(full * F32_LANES * F32_PANEL_COLS);
-                a0 = _mm256_add_ps(a0, _mm256_mul_ps(xv, _mm256_loadu_ps(g)));
-                a1 = _mm256_add_ps(a1, _mm256_mul_ps(xv, _mm256_loadu_ps(g.add(8))));
-                a2 = _mm256_add_ps(a2, _mm256_mul_ps(xv, _mm256_loadu_ps(g.add(16))));
-                a3 = _mm256_add_ps(a3, _mm256_mul_ps(xv, _mm256_loadu_ps(g.add(24))));
-            }
+            // SAFETY: panel pi spans F32_PANEL_COLS * d_in_pad floats of
+            // p.data (pi < n_panels bounds it); group offsets step by
+            // F32_LANES * F32_PANEL_COLS up to d_in_pad, staying inside
+            // the panel. x loads cover k * F32_LANES + 8 <= d_in; the
+            // tail reads the F32_LANES-wide zero-padded xt instead of x.
+            let (a0, a1, a2, a3) = unsafe {
+                let base = p.data.as_ptr().add(pi * F32_PANEL_COLS * p.d_in_pad);
+                let mut a0 = _mm256_setzero_ps();
+                let mut a1 = _mm256_setzero_ps();
+                let mut a2 = _mm256_setzero_ps();
+                let mut a3 = _mm256_setzero_ps();
+                for k in 0..full {
+                    let xv = _mm256_loadu_ps(x.as_ptr().add(k * F32_LANES));
+                    let g = base.add(k * F32_LANES * F32_PANEL_COLS);
+                    a0 = _mm256_add_ps(a0, _mm256_mul_ps(xv, _mm256_loadu_ps(g)));
+                    a1 = _mm256_add_ps(a1, _mm256_mul_ps(xv, _mm256_loadu_ps(g.add(8))));
+                    a2 = _mm256_add_ps(a2, _mm256_mul_ps(xv, _mm256_loadu_ps(g.add(16))));
+                    a3 = _mm256_add_ps(a3, _mm256_mul_ps(xv, _mm256_loadu_ps(g.add(24))));
+                }
+                if rem > 0 {
+                    let xv = _mm256_loadu_ps(xt.as_ptr());
+                    let g = base.add(full * F32_LANES * F32_PANEL_COLS);
+                    a0 = _mm256_add_ps(a0, _mm256_mul_ps(xv, _mm256_loadu_ps(g)));
+                    a1 = _mm256_add_ps(a1, _mm256_mul_ps(xv, _mm256_loadu_ps(g.add(8))));
+                    a2 = _mm256_add_ps(a2, _mm256_mul_ps(xv, _mm256_loadu_ps(g.add(16))));
+                    a3 = _mm256_add_ps(a3, _mm256_mul_ps(xv, _mm256_loadu_ps(g.add(24))));
+                }
+                (a0, a1, a2, a3)
+            };
             let j0 = pi * F32_PANEL_COLS;
             let dots = [hsum8(a0), hsum8(a1), hsum8(a2), hsum8(a3)];
             let live = F32_PANEL_COLS.min(d_out - j0);
@@ -124,7 +143,7 @@ pub unsafe fn matmul_f32_panel(
 }
 
 /// # Safety
-/// Requires AVX2 (checked once at model load).
+/// Requires AVX2 (checked once at model load); `a.len() == b.len()`.
 #[target_feature(enable = "avx2")]
 pub unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
     debug_assert_eq!(a.len(), b.len());
@@ -133,8 +152,14 @@ pub unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
     let rem = n % I8_LANES;
     let mut acc = _mm256_setzero_si256();
     for k in 0..full {
-        let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(a.as_ptr().add(k * I8_LANES) as *const __m128i));
-        let vb = _mm256_cvtepi8_epi16(_mm_loadu_si128(b.as_ptr().add(k * I8_LANES) as *const __m128i));
+        // SAFETY: (k + 1) * I8_LANES <= n and both slices hold n bytes,
+        // so each 16-byte load is in bounds.
+        let (va, vb) = unsafe {
+            let pa = a.as_ptr().add(k * I8_LANES) as *const __m128i;
+            let pb = b.as_ptr().add(k * I8_LANES) as *const __m128i;
+            (_mm_loadu_si128(pa), _mm_loadu_si128(pb))
+        };
+        let (va, vb) = (_mm256_cvtepi8_epi16(va), _mm256_cvtepi8_epi16(vb));
         acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
     }
     if rem > 0 {
@@ -142,15 +167,23 @@ pub unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
         let mut tb = [0i8; I8_LANES];
         ta[..rem].copy_from_slice(&a[full * I8_LANES..]);
         tb[..rem].copy_from_slice(&b[full * I8_LANES..]);
-        let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(ta.as_ptr() as *const __m128i));
-        let vb = _mm256_cvtepi8_epi16(_mm_loadu_si128(tb.as_ptr() as *const __m128i));
+        // SAFETY: ta/tb are exactly I8_LANES (16) bytes on the stack.
+        let (va, vb) = unsafe {
+            (
+                _mm_loadu_si128(ta.as_ptr() as *const __m128i),
+                _mm_loadu_si128(tb.as_ptr() as *const __m128i),
+            )
+        };
+        let (va, vb) = (_mm256_cvtepi8_epi16(va), _mm256_cvtepi8_epi16(vb));
         acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
     }
     hsum_i32(acc)
 }
 
 /// # Safety
-/// Requires AVX2 (checked once at model load).
+/// Requires AVX2 (checked once at model load); slice geometry per
+/// `super::matmul_i8` (qx is n×d_in, ys is n×d_out, p rows are
+/// d_in_pad-padded and zero-filled past d_in).
 #[allow(clippy::too_many_arguments)]
 #[target_feature(enable = "avx2")]
 pub unsafe fn matmul_i8_panel(
@@ -177,32 +210,40 @@ pub unsafe fn matmul_i8_panel(
         }
         let y = &mut ys[l * d_out..(l + 1) * d_out];
         for j in 0..d_out {
-            let row = p.data.as_ptr().add(j * p.d_in_pad);
-            let mut acc = _mm256_setzero_si256();
-            for k in 0..full {
-                let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(
-                    q.as_ptr().add(k * I8_LANES) as *const __m128i
-                ));
-                let vb =
-                    _mm256_cvtepi8_epi16(_mm_loadu_si128(row.add(k * I8_LANES) as *const __m128i));
-                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
-            }
-            if rem > 0 {
-                // Panel rows are zero-padded past d_in, so a full-width
-                // load of the weight tail is in-bounds and exact.
-                let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(qt.as_ptr() as *const __m128i));
-                let vb = _mm256_cvtepi8_epi16(_mm_loadu_si128(
-                    row.add(full * I8_LANES) as *const __m128i
-                ));
-                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
-            }
+            // SAFETY: row j spans d_in_pad bytes of p.data (j < d_out
+            // rows are packed back to back); k * I8_LANES + 16 <=
+            // d_in <= d_in_pad bounds the weight and activation loads.
+            // The tail loads the 16-byte zero-padded qt, and the weight
+            // row is zero-filled past d_in, so its full-width tail load
+            // is in-bounds and exact.
+            let acc = unsafe {
+                let row = p.data.as_ptr().add(j * p.d_in_pad);
+                let mut acc = _mm256_setzero_si256();
+                for k in 0..full {
+                    let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                        q.as_ptr().add(k * I8_LANES) as *const __m128i
+                    ));
+                    let vb = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                        row.add(k * I8_LANES) as *const __m128i
+                    ));
+                    acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
+                }
+                if rem > 0 {
+                    let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(qt.as_ptr() as *const __m128i));
+                    let vb = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                        row.add(full * I8_LANES) as *const __m128i
+                    ));
+                    acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
+                }
+                acc
+            };
             y[j] += s * ws[j] * hsum_i32(acc) as f32;
         }
     }
 }
 
 /// # Safety
-/// Requires AVX2 (checked once at model load).
+/// Requires AVX2 (checked once at model load); `x.len() == y.len()`.
 #[target_feature(enable = "avx2")]
 pub unsafe fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
@@ -210,9 +251,13 @@ pub unsafe fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
     let va = _mm256_set1_ps(a);
     let mut i = 0;
     while i + F32_LANES <= n {
-        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
-        let yv = _mm256_loadu_ps(y.as_ptr().add(i));
-        _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(yv, _mm256_mul_ps(va, xv)));
+        // SAFETY: i + F32_LANES <= n == x.len() == y.len() bounds both
+        // loads and the store.
+        unsafe {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(yv, _mm256_mul_ps(va, xv)));
+        }
         i += F32_LANES;
     }
     while i < n {
@@ -222,7 +267,8 @@ pub unsafe fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
 }
 
 /// # Safety
-/// Requires AVX2 (checked once at model load).
+/// Requires AVX2 (checked once at model load); `xs` is n×d, `qx` is
+/// n×d, `sx` holds n scales.
 #[target_feature(enable = "avx2")]
 pub unsafe fn quantize_lanes(n: usize, d: usize, xs: &[f32], qx: &mut [i8], sx: &mut [f32]) {
     let sign = _mm256_set1_ps(-0.0);
@@ -233,7 +279,8 @@ pub unsafe fn quantize_lanes(n: usize, d: usize, xs: &[f32], qx: &mut [i8], sx: 
         let mut vm = _mm256_setzero_ps();
         let mut i = 0;
         while i + F32_LANES <= d {
-            let v = _mm256_loadu_ps(row.as_ptr().add(i));
+            // SAFETY: i + F32_LANES <= d == row.len().
+            let v = unsafe { _mm256_loadu_ps(row.as_ptr().add(i)) };
             vm = _mm256_max_ps(vm, _mm256_andnot_ps(sign, v));
             i += F32_LANES;
         }
@@ -265,7 +312,9 @@ pub unsafe fn quantize_lanes(n: usize, d: usize, xs: &[f32], qx: &mut [i8], sx: 
         let cmax = _mm256_set1_epi32(127);
         let mut i = 0;
         while i + F32_LANES <= d {
-            let t = _mm256_mul_ps(_mm256_loadu_ps(row.as_ptr().add(i)), vinv);
+            // SAFETY: i + F32_LANES <= d == row.len().
+            let rv = unsafe { _mm256_loadu_ps(row.as_ptr().add(i)) };
+            let t = _mm256_mul_ps(rv, vinv);
             let half = _mm256_or_ps(vhalf, _mm256_and_ps(t, sign));
             let r = _mm256_cvttps_epi32(_mm256_add_ps(t, half));
             let c = _mm256_min_epi32(_mm256_max_epi32(r, cmin), cmax);

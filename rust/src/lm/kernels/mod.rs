@@ -140,6 +140,10 @@ impl KernelTier {
     /// [`FORCE_KERNEL_ENV`] override if set (an error if it names a tier
     /// this CPU cannot run), else [`KernelTier::detect`].
     pub fn resolve() -> Result<KernelTier> {
+        // The override is read once at model load and tiers are bit-identical,
+        // so this environment read can never change container bytes (the
+        // tier-equivalence tests pin this).
+        // lint: allow(L4) load-time tier override; tiers are bit-identical
         match std::env::var(FORCE_KERNEL_ENV) {
             Ok(v) if !v.is_empty() => {
                 let tier = KernelTier::parse(&v)?;
@@ -292,8 +296,10 @@ impl Panels {
 pub fn dot_f32(tier: KernelTier, a: &[f32], b: &[f32]) -> f32 {
     debug_assert!(tier.available());
     match tier {
+        // SAFETY: tier is Avx2 only after `available()` saw AVX2 at resolve.
         #[cfg(target_arch = "x86_64")]
         KernelTier::Avx2 => unsafe { avx2::dot_f32(a, b) },
+        // SAFETY: tier is Neon only after `available()` saw NEON at resolve.
         #[cfg(target_arch = "aarch64")]
         KernelTier::Neon => unsafe { neon::dot_f32(a, b) },
         _ => scalar::dot_f32(a, b),
@@ -306,8 +312,10 @@ pub fn dot_f32(tier: KernelTier, a: &[f32], b: &[f32]) -> f32 {
 pub fn dot_i8(tier: KernelTier, a: &[i8], b: &[i8]) -> i32 {
     debug_assert!(tier.available());
     match tier {
+        // SAFETY: tier is Avx2 only after `available()` saw AVX2 at resolve.
         #[cfg(target_arch = "x86_64")]
         KernelTier::Avx2 => unsafe { avx2::dot_i8(a, b) },
+        // SAFETY: tier is Neon only after `available()` saw NEON at resolve.
         #[cfg(target_arch = "aarch64")]
         KernelTier::Neon => unsafe { neon::dot_i8(a, b) },
         _ => scalar::dot_i8(a, b),
@@ -320,8 +328,10 @@ pub fn dot_i8(tier: KernelTier, a: &[i8], b: &[i8]) -> i32 {
 pub fn axpy_f32(tier: KernelTier, a: f32, x: &[f32], y: &mut [f32]) {
     debug_assert!(tier.available());
     match tier {
+        // SAFETY: tier is Avx2 only after `available()` saw AVX2 at resolve.
         #[cfg(target_arch = "x86_64")]
         KernelTier::Avx2 => unsafe { avx2::axpy_f32(a, x, y) },
+        // SAFETY: tier is Neon only after `available()` saw NEON at resolve.
         #[cfg(target_arch = "aarch64")]
         KernelTier::Neon => unsafe { neon::axpy_f32(a, x, y) },
         _ => scalar::axpy_f32(a, x, y),
@@ -338,8 +348,10 @@ pub fn axpy_f32(tier: KernelTier, a: f32, x: &[f32], y: &mut [f32]) {
 pub fn quantize_lanes(tier: KernelTier, n: usize, d: usize, xs: &[f32], qx: &mut [i8], sx: &mut [f32]) {
     debug_assert!(tier.available());
     match tier {
+        // SAFETY: tier is Avx2 only after `available()` saw AVX2 at resolve.
         #[cfg(target_arch = "x86_64")]
         KernelTier::Avx2 => unsafe { avx2::quantize_lanes(n, d, xs, qx, sx) },
+        // SAFETY: tier is Neon only after `available()` saw NEON at resolve.
         #[cfg(target_arch = "aarch64")]
         KernelTier::Neon => unsafe { neon::quantize_lanes(n, d, xs, qx, sx) },
         _ => scalar::quantize_lanes(n, d, xs, qx, sx),
@@ -370,8 +382,10 @@ pub fn matmul_f32(
     };
     debug_assert!(p.d_in == d_in && p.d_out == d_out);
     match tier {
+        // SAFETY: tier is Avx2 only after `available()` saw AVX2 at resolve.
         #[cfg(target_arch = "x86_64")]
         KernelTier::Avx2 => unsafe { avx2::matmul_f32_panel(n, d_in, d_out, xs, p, ys) },
+        // SAFETY: tier is Neon only after `available()` saw NEON at resolve.
         #[cfg(target_arch = "aarch64")]
         KernelTier::Neon => unsafe { neon::matmul_f32_panel(n, d_in, d_out, xs, p, ys) },
         _ => scalar::matmul_f32_panel(n, d_in, d_out, xs, p, ys),
@@ -406,8 +420,10 @@ pub fn matmul_i8(
     };
     debug_assert!(p.d_in == d_in && p.d_out == d_out);
     match tier {
+        // SAFETY: tier is Avx2 only after `available()` saw AVX2 at resolve.
         #[cfg(target_arch = "x86_64")]
         KernelTier::Avx2 => unsafe { avx2::matmul_i8_panel(n, d_in, d_out, p, ws, qx, sx, ys) },
+        // SAFETY: tier is Neon only after `available()` saw NEON at resolve.
         #[cfg(target_arch = "aarch64")]
         KernelTier::Neon => unsafe { neon::matmul_i8_panel(n, d_in, d_out, p, ws, qx, sx, ys) },
         _ => scalar::matmul_i8_panel(n, d_in, d_out, p, ws, qx, sx, ys),

@@ -15,14 +15,21 @@
 //! i8 dots: `vmull_s8` widens products to i16 (each ≤ 127², exact),
 //! `vpadalq_s16` pairwise-accumulates into i32 lanes, `vaddvq_s32`
 //! folds — all integer, all exact, order-free.
+//!
+//! Value-only intrinsics are safe inside these `#[target_feature]`
+//! bodies; the explicit `unsafe` blocks mark exactly the pointer
+//! loads/stores, each with the bound that keeps it in-range.
 
 use super::{PanelF32, PanelI8, F32_LANES, F32_PANEL_COLS, I8_LANES};
 use core::arch::aarch64::*;
 
-/// Canonical tree combine from the two half-accumulators.
+/// Canonical tree combine from the two half-accumulators. Value-only
+/// (no memory access), so it is a safe `#[target_feature]` fn:
+/// callable without `unsafe` from the NEON kernels, never from generic
+/// code.
 #[inline]
 #[target_feature(enable = "neon")]
-unsafe fn combine2q(lo: float32x4_t, hi: float32x4_t) -> f32 {
+fn combine2q(lo: float32x4_t, hi: float32x4_t) -> f32 {
     let s = vaddq_f32(lo, hi); // s_k = l_k + l_{k+4}
     let s0 = vgetq_lane_f32(s, 0);
     let s1 = vgetq_lane_f32(s, 1);
@@ -32,7 +39,7 @@ unsafe fn combine2q(lo: float32x4_t, hi: float32x4_t) -> f32 {
 }
 
 /// # Safety
-/// Requires NEON (checked once at model load).
+/// Requires NEON (checked once at model load); `a.len() == b.len()`.
 #[target_feature(enable = "neon")]
 pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -41,10 +48,16 @@ pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     let mut acc_hi = vdupq_n_f32(0.0);
     let mut i = 0;
     while i + F32_LANES <= n {
-        let a_lo = vld1q_f32(a.as_ptr().add(i));
-        let a_hi = vld1q_f32(a.as_ptr().add(i + 4));
-        let b_lo = vld1q_f32(b.as_ptr().add(i));
-        let b_hi = vld1q_f32(b.as_ptr().add(i + 4));
+        // SAFETY: i + F32_LANES <= n and both slices hold n elements,
+        // so the four 4-lane loads (offsets i and i + 4) are in bounds.
+        let (a_lo, a_hi, b_lo, b_hi) = unsafe {
+            (
+                vld1q_f32(a.as_ptr().add(i)),
+                vld1q_f32(a.as_ptr().add(i + 4)),
+                vld1q_f32(b.as_ptr().add(i)),
+                vld1q_f32(b.as_ptr().add(i + 4)),
+            )
+        };
         acc_lo = vaddq_f32(acc_lo, vmulq_f32(a_lo, b_lo));
         acc_hi = vaddq_f32(acc_hi, vmulq_f32(a_hi, b_hi));
         i += F32_LANES;
@@ -54,17 +67,26 @@ pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
         let mut tb = [0.0f32; F32_LANES];
         ta[..n - i].copy_from_slice(&a[i..]);
         tb[..n - i].copy_from_slice(&b[i..]);
-        acc_lo = vaddq_f32(acc_lo, vmulq_f32(vld1q_f32(ta.as_ptr()), vld1q_f32(tb.as_ptr())));
-        acc_hi = vaddq_f32(
-            acc_hi,
-            vmulq_f32(vld1q_f32(ta.as_ptr().add(4)), vld1q_f32(tb.as_ptr().add(4))),
-        );
+        // SAFETY: ta/tb are exactly F32_LANES-wide stack arrays, so
+        // loads at offsets 0 and 4 are in bounds.
+        let (ta_lo, ta_hi, tb_lo, tb_hi) = unsafe {
+            (
+                vld1q_f32(ta.as_ptr()),
+                vld1q_f32(ta.as_ptr().add(4)),
+                vld1q_f32(tb.as_ptr()),
+                vld1q_f32(tb.as_ptr().add(4)),
+            )
+        };
+        acc_lo = vaddq_f32(acc_lo, vmulq_f32(ta_lo, tb_lo));
+        acc_hi = vaddq_f32(acc_hi, vmulq_f32(ta_hi, tb_hi));
     }
     combine2q(acc_lo, acc_hi)
 }
 
 /// # Safety
-/// Requires NEON (checked once at model load).
+/// Requires NEON (checked once at model load); slice geometry per
+/// `super::matmul_f32` (xs is n×d_in, ys is n×d_out, p packs d_out
+/// columns of d_in_pad-padded weights).
 #[target_feature(enable = "neon")]
 pub unsafe fn matmul_f32_panel(
     n: usize,
@@ -85,31 +107,40 @@ pub unsafe fn matmul_f32_panel(
         }
         let y = &mut ys[l * d_out..(l + 1) * d_out];
         for pi in 0..n_panels {
-            let base = p.data.as_ptr().add(pi * F32_PANEL_COLS * p.d_in_pad);
-            // One (lo, hi) accumulator pair per interleaved output.
-            let mut acc = [vdupq_n_f32(0.0); 8];
-            for k in 0..full {
-                let x_lo = vld1q_f32(x.as_ptr().add(k * F32_LANES));
-                let x_hi = vld1q_f32(x.as_ptr().add(k * F32_LANES + 4));
-                let g = base.add(k * F32_LANES * F32_PANEL_COLS);
-                for r in 0..F32_PANEL_COLS {
-                    let w_lo = vld1q_f32(g.add(r * F32_LANES));
-                    let w_hi = vld1q_f32(g.add(r * F32_LANES + 4));
-                    acc[2 * r] = vaddq_f32(acc[2 * r], vmulq_f32(x_lo, w_lo));
-                    acc[2 * r + 1] = vaddq_f32(acc[2 * r + 1], vmulq_f32(x_hi, w_hi));
+            // SAFETY: panel pi spans F32_PANEL_COLS * d_in_pad floats of
+            // p.data (pi < n_panels bounds it); group offsets step by
+            // F32_LANES * F32_PANEL_COLS up to d_in_pad, and each column
+            // load reads F32_LANES floats inside the group. x loads
+            // cover k * F32_LANES + 8 <= d_in; the tail reads the
+            // F32_LANES-wide zero-padded xt instead of x.
+            let acc = unsafe {
+                let base = p.data.as_ptr().add(pi * F32_PANEL_COLS * p.d_in_pad);
+                // One (lo, hi) accumulator pair per interleaved output.
+                let mut acc = [vdupq_n_f32(0.0); 8];
+                for k in 0..full {
+                    let x_lo = vld1q_f32(x.as_ptr().add(k * F32_LANES));
+                    let x_hi = vld1q_f32(x.as_ptr().add(k * F32_LANES + 4));
+                    let g = base.add(k * F32_LANES * F32_PANEL_COLS);
+                    for r in 0..F32_PANEL_COLS {
+                        let w_lo = vld1q_f32(g.add(r * F32_LANES));
+                        let w_hi = vld1q_f32(g.add(r * F32_LANES + 4));
+                        acc[2 * r] = vaddq_f32(acc[2 * r], vmulq_f32(x_lo, w_lo));
+                        acc[2 * r + 1] = vaddq_f32(acc[2 * r + 1], vmulq_f32(x_hi, w_hi));
+                    }
                 }
-            }
-            if rem > 0 {
-                let x_lo = vld1q_f32(xt.as_ptr());
-                let x_hi = vld1q_f32(xt.as_ptr().add(4));
-                let g = base.add(full * F32_LANES * F32_PANEL_COLS);
-                for r in 0..F32_PANEL_COLS {
-                    let w_lo = vld1q_f32(g.add(r * F32_LANES));
-                    let w_hi = vld1q_f32(g.add(r * F32_LANES + 4));
-                    acc[2 * r] = vaddq_f32(acc[2 * r], vmulq_f32(x_lo, w_lo));
-                    acc[2 * r + 1] = vaddq_f32(acc[2 * r + 1], vmulq_f32(x_hi, w_hi));
+                if rem > 0 {
+                    let x_lo = vld1q_f32(xt.as_ptr());
+                    let x_hi = vld1q_f32(xt.as_ptr().add(4));
+                    let g = base.add(full * F32_LANES * F32_PANEL_COLS);
+                    for r in 0..F32_PANEL_COLS {
+                        let w_lo = vld1q_f32(g.add(r * F32_LANES));
+                        let w_hi = vld1q_f32(g.add(r * F32_LANES + 4));
+                        acc[2 * r] = vaddq_f32(acc[2 * r], vmulq_f32(x_lo, w_lo));
+                        acc[2 * r + 1] = vaddq_f32(acc[2 * r + 1], vmulq_f32(x_hi, w_hi));
+                    }
                 }
-            }
+                acc
+            };
             let j0 = pi * F32_PANEL_COLS;
             let live = F32_PANEL_COLS.min(d_out - j0);
             for r in 0..live {
@@ -119,17 +150,18 @@ pub unsafe fn matmul_f32_panel(
     }
 }
 
-/// Exact i8×i8 dot over one zero-padded block pair.
+/// Exact i8×i8 dot over one zero-padded block pair. Value-only, safe to
+/// call from NEON contexts (see `combine2q`).
 #[inline]
 #[target_feature(enable = "neon")]
-unsafe fn mac_i8(acc: int32x4_t, va: int8x16_t, vb: int8x16_t) -> int32x4_t {
+fn mac_i8(acc: int32x4_t, va: int8x16_t, vb: int8x16_t) -> int32x4_t {
     let lo = vmull_s8(vget_low_s8(va), vget_low_s8(vb));
     let hi = vmull_s8(vget_high_s8(va), vget_high_s8(vb));
     vpadalq_s16(vpadalq_s16(acc, lo), hi)
 }
 
 /// # Safety
-/// Requires NEON (checked once at model load).
+/// Requires NEON (checked once at model load); `a.len() == b.len()`.
 #[target_feature(enable = "neon")]
 pub unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
     debug_assert_eq!(a.len(), b.len());
@@ -138,8 +170,11 @@ pub unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
     let rem = n % I8_LANES;
     let mut acc = vdupq_n_s32(0);
     for k in 0..full {
-        let va = vld1q_s8(a.as_ptr().add(k * I8_LANES));
-        let vb = vld1q_s8(b.as_ptr().add(k * I8_LANES));
+        // SAFETY: (k + 1) * I8_LANES <= n and both slices hold n bytes,
+        // so each 16-byte load is in bounds.
+        let (va, vb) = unsafe {
+            (vld1q_s8(a.as_ptr().add(k * I8_LANES)), vld1q_s8(b.as_ptr().add(k * I8_LANES)))
+        };
         acc = mac_i8(acc, va, vb);
     }
     if rem > 0 {
@@ -147,13 +182,17 @@ pub unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
         let mut tb = [0i8; I8_LANES];
         ta[..rem].copy_from_slice(&a[full * I8_LANES..]);
         tb[..rem].copy_from_slice(&b[full * I8_LANES..]);
-        acc = mac_i8(acc, vld1q_s8(ta.as_ptr()), vld1q_s8(tb.as_ptr()));
+        // SAFETY: ta/tb are exactly I8_LANES (16) bytes on the stack.
+        let (va, vb) = unsafe { (vld1q_s8(ta.as_ptr()), vld1q_s8(tb.as_ptr())) };
+        acc = mac_i8(acc, va, vb);
     }
     vaddvq_s32(acc)
 }
 
 /// # Safety
-/// Requires NEON (checked once at model load).
+/// Requires NEON (checked once at model load); slice geometry per
+/// `super::matmul_i8` (qx is n×d_in, ys is n×d_out, p rows are
+/// d_in_pad-padded and zero-filled past d_in).
 #[allow(clippy::too_many_arguments)]
 #[target_feature(enable = "neon")]
 pub unsafe fn matmul_i8_panel(
@@ -180,27 +219,34 @@ pub unsafe fn matmul_i8_panel(
         }
         let y = &mut ys[l * d_out..(l + 1) * d_out];
         for j in 0..d_out {
-            let row = p.data.as_ptr().add(j * p.d_in_pad);
-            let mut acc = vdupq_n_s32(0);
-            for k in 0..full {
-                acc = mac_i8(
-                    acc,
-                    vld1q_s8(q.as_ptr().add(k * I8_LANES)),
-                    vld1q_s8(row.add(k * I8_LANES)),
-                );
-            }
-            if rem > 0 {
-                // Panel rows are zero-padded past d_in: full-width tail
-                // load is in-bounds and exact.
-                acc = mac_i8(acc, vld1q_s8(qt.as_ptr()), vld1q_s8(row.add(full * I8_LANES)));
-            }
+            // SAFETY: row j spans d_in_pad bytes of p.data (j < d_out
+            // rows are packed back to back); k * I8_LANES + 16 <=
+            // d_in <= d_in_pad bounds the weight and activation loads.
+            // The tail loads the 16-byte zero-padded qt, and the weight
+            // row is zero-filled past d_in, so its full-width tail load
+            // is in-bounds and exact.
+            let acc = unsafe {
+                let row = p.data.as_ptr().add(j * p.d_in_pad);
+                let mut acc = vdupq_n_s32(0);
+                for k in 0..full {
+                    acc = mac_i8(
+                        acc,
+                        vld1q_s8(q.as_ptr().add(k * I8_LANES)),
+                        vld1q_s8(row.add(k * I8_LANES)),
+                    );
+                }
+                if rem > 0 {
+                    acc = mac_i8(acc, vld1q_s8(qt.as_ptr()), vld1q_s8(row.add(full * I8_LANES)));
+                }
+                acc
+            };
             y[j] += s * ws[j] * vaddvq_s32(acc) as f32;
         }
     }
 }
 
 /// # Safety
-/// Requires NEON (checked once at model load).
+/// Requires NEON (checked once at model load); `x.len() == y.len()`.
 #[target_feature(enable = "neon")]
 pub unsafe fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
@@ -208,9 +254,13 @@ pub unsafe fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
     let va = vdupq_n_f32(a);
     let mut i = 0;
     while i + 4 <= n {
-        let xv = vld1q_f32(x.as_ptr().add(i));
-        let yv = vld1q_f32(y.as_ptr().add(i));
-        vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(yv, vmulq_f32(va, xv)));
+        // SAFETY: i + 4 <= n == x.len() == y.len() bounds both loads
+        // and the store.
+        unsafe {
+            let xv = vld1q_f32(x.as_ptr().add(i));
+            let yv = vld1q_f32(y.as_ptr().add(i));
+            vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(yv, vmulq_f32(va, xv)));
+        }
         i += 4;
     }
     while i < n {
@@ -223,12 +273,16 @@ pub unsafe fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
 /// `vcvtq_s32_f32` truncates toward zero, matching
 /// `scalar::quantize_one` (round(t) == trunc(t + copysign(0.5, t)) for
 /// the in-domain |t| ≤ 127).
+///
+/// # Safety
+/// `ptr` must be valid for reading four f32 values.
 #[inline]
 #[target_feature(enable = "neon")]
 unsafe fn quant4(ptr: *const f32, inv: f32) -> int32x4_t {
     let sign = vdupq_n_u32(0x8000_0000);
     let half_bits = vdupq_n_u32(0x3F00_0000); // +0.5f32
-    let t = vmulq_n_f32(vld1q_f32(ptr), inv);
+    // SAFETY: caller guarantees ptr is readable for four f32s.
+    let t = vmulq_n_f32(unsafe { vld1q_f32(ptr) }, inv);
     let tb = vreinterpretq_u32_f32(t);
     let half = vreinterpretq_f32_u32(vorrq_u32(vandq_u32(tb, sign), half_bits));
     let r = vcvtq_s32_f32(vaddq_f32(t, half));
@@ -236,7 +290,8 @@ unsafe fn quant4(ptr: *const f32, inv: f32) -> int32x4_t {
 }
 
 /// # Safety
-/// Requires NEON (checked once at model load).
+/// Requires NEON (checked once at model load); `xs` is n×d, `qx` is
+/// n×d, `sx` holds n scales.
 #[target_feature(enable = "neon")]
 pub unsafe fn quantize_lanes(n: usize, d: usize, xs: &[f32], qx: &mut [i8], sx: &mut [f32]) {
     for l in 0..n {
@@ -244,7 +299,9 @@ pub unsafe fn quantize_lanes(n: usize, d: usize, xs: &[f32], qx: &mut [i8], sx: 
         let mut vm = vdupq_n_f32(0.0);
         let mut i = 0;
         while i + 4 <= d {
-            vm = vmaxq_f32(vm, vabsq_f32(vld1q_f32(row.as_ptr().add(i))));
+            // SAFETY: i + 4 <= d == row.len() bounds the load.
+            let v = unsafe { vld1q_f32(row.as_ptr().add(i)) };
+            vm = vmaxq_f32(vm, vabsq_f32(v));
             i += 4;
         }
         let mut maxabs = vmaxvq_f32(vm);
@@ -264,13 +321,18 @@ pub unsafe fn quantize_lanes(n: usize, d: usize, xs: &[f32], qx: &mut [i8], sx: 
 
         let mut i = 0;
         while i + F32_LANES <= d {
-            let c_lo = quant4(row.as_ptr().add(i), inv);
-            let c_hi = quant4(row.as_ptr().add(i + 4), inv);
-            let p16 = vcombine_s16(vqmovn_s32(c_lo), vqmovn_s32(c_hi));
-            let p8 = vqmovn_s16(p16);
-            let mut out = [0i8; 8];
-            vst1_s8(out.as_mut_ptr(), p8);
-            q[i..i + F32_LANES].copy_from_slice(&out);
+            // SAFETY: i + F32_LANES <= d == row.len(), so quant4 reads
+            // rows [i, i + 4) and [i + 4, i + 8) in bounds; `out` is an
+            // 8-byte stack array for the store.
+            unsafe {
+                let c_lo = quant4(row.as_ptr().add(i), inv);
+                let c_hi = quant4(row.as_ptr().add(i + 4), inv);
+                let p16 = vcombine_s16(vqmovn_s32(c_lo), vqmovn_s32(c_hi));
+                let p8 = vqmovn_s16(p16);
+                let mut out = [0i8; 8];
+                vst1_s8(out.as_mut_ptr(), p8);
+                q[i..i + F32_LANES].copy_from_slice(&out);
+            }
             i += F32_LANES;
         }
         for (qi, &v) in q[i..].iter_mut().zip(&row[i..]) {

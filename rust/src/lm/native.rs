@@ -541,8 +541,11 @@ impl NativeModel {
 /// the pointers never outlive the borrow they were derived from and no two
 /// workers alias a span.
 struct SpanPtr<T>(*const T);
+// SAFETY: see the contract above — spans are disjoint and never outlive
+// the borrow they were derived from.
 unsafe impl<T: Send> Send for SpanPtr<T> {}
 struct SpanPtrMut<T>(*mut T);
+// SAFETY: same contract as `SpanPtr` above.
 unsafe impl<T: Send> Send for SpanPtrMut<T> {}
 
 /// One handoff to a persistent pool worker.
@@ -586,6 +589,7 @@ fn pool_worker_main(
                     // SAFETY: see `SpanPtr` — the executor keeps these
                     // buffers alive and unaliased until our reply lands.
                     let toks = unsafe { std::slice::from_raw_parts(tokens.0, n) };
+                    // SAFETY: same span contract as `toks` above.
                     let out = unsafe { std::slice::from_raw_parts_mut(out.0, n * VOCAB) };
                     model.advance_batch(&mut lanes, toks, &mut scratch, out, head_rows)
                 }
@@ -650,7 +654,9 @@ fn run_steal_task(task: StealTask, scratch: &mut Scratch) {
         // SAFETY: see `StealTask` — the owning executor keeps these
         // buffers alive and unaliased until our `complete` lands.
         let lanes = unsafe { std::slice::from_raw_parts_mut(task.lanes.0, task.n) };
+        // SAFETY: same span contract as `lanes` above.
         let toks = unsafe { std::slice::from_raw_parts(task.tokens.0, task.n) };
+        // SAFETY: same span contract as `lanes` above.
         let out = unsafe { std::slice::from_raw_parts_mut(task.out.0, task.n * VOCAB) };
         task.model.advance_batch(lanes, toks, scratch, out, task.head_rows)
     }))
@@ -1025,10 +1031,11 @@ impl NativeExecutor {
         let mut start = 0usize;
         while start < n {
             let len = per.min(n - start);
-            // SAFETY: spans are disjoint and this method does not return
-            // until the barrier drains (see `StealTask`).
             tasks.push(StealTask {
                 model: model.clone(),
+                // SAFETY: `start < n <= lanes.len()`, spans are disjoint, and
+                // this method does not return until the barrier drains (see
+                // `StealTask`).
                 lanes: SpanPtrMut(unsafe { lanes_ptr.add(start) }),
                 tokens: SpanPtr(tokens[start..].as_ptr()),
                 out: SpanPtrMut(out[start * VOCAB..].as_mut_ptr()),
